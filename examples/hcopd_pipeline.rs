@@ -1,0 +1,155 @@
+//! **End-to-end validation driver** (EXPERIMENTS.md §E2E): reproduces the
+//! paper's §VI validation on the synthetic HCOPD workload, exercising all
+//! three layers — the Pallas-kernel model compiled AOT (L1/L2) executed
+//! through PJRT by containerized training Jobs and inference replicas
+//! (L3) fed entirely through data streams.
+//!
+//! The run mirrors the paper's setup: Avro multi-input encoding, batch
+//! size 10 (220 samples → 22 steps/epoch, the paper's
+//! `steps_per_epoch=22`), Adam(1e-4), validation split, then inference
+//! behind 2 replicas. It prints the per-epoch loss curve and the latency
+//! summary recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example hcopd_pipeline [epochs]
+//! ```
+
+use kafka_ml::broker::ClientLocality;
+use kafka_ml::coordinator::{KafkaMl, KafkaMlConfig, TrainParams};
+use kafka_ml::metrics::Histogram;
+use kafka_ml::ml::hcopd_dataset;
+use kafka_ml::util::human_duration;
+use std::time::{Duration, Instant};
+
+fn avro_config() -> kafka_ml::json::Json {
+    kafka_ml::json::parse(
+        r#"{
+      "data_scheme": {"type":"record","name":"copd_data","fields":[
+        {"name":"age","type":"float"},
+        {"name":"gender","type":"float"},
+        {"name":"smoking","type":"float"},
+        {"name":"sensors","type":{"type":"array","items":"float"}}]},
+      "label_scheme": {"type":"record","name":"copd_label","fields":[
+        {"name":"diagnosis","type":"int"}]}
+    }"#,
+    )
+    .unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let epochs: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    println!("== Kafka-ML HCOPD end-to-end validation (epochs={epochs}) ==\n");
+
+    let t_boot = Instant::now();
+    let kml = KafkaMl::start(KafkaMlConfig::default())?;
+    println!(
+        "[boot] platform up in {} ({})",
+        human_duration(t_boot.elapsed()),
+        kml.backend_url()
+    );
+
+    // A/B — the COPD Keras model of Listing 2, here as AOT artifacts.
+    let model = kml.create_model("copd-mlp")?;
+    let conf = kml.create_configuration("copd", &[model])?;
+
+    // C — deploy for training.
+    let t_train = Instant::now();
+    let dep = kml.deploy_training(
+        conf,
+        &TrainParams { batch_size: 10, epochs, shuffle: true, seed: 42 },
+    )?;
+
+    // D — Avro-encoded multi-input stream: age/gender/smoking + 5 sensor
+    // channels, 220 patients, 20% validation split.
+    let ds = hcopd_dataset(220, 8, 42);
+    println!(
+        "[data] {} samples, class histogram {:?}",
+        ds.len(),
+        ds.class_histogram()
+    );
+    let msg = kml.send_stream(
+        dep.id,
+        &ds.samples,
+        "copd-train",
+        "AVRO",
+        &avro_config(),
+        0.2,
+        ClientLocality::External,
+    )?;
+    println!("[data] control message sent: {}", msg.stream.format());
+
+    // E — wait, report the loss curve.
+    let results = kml.wait_training(&dep, Duration::from_secs(1800))?;
+    let r = &results[0];
+    let train_wall = t_train.elapsed();
+    println!(
+        "\n[train] finished in {} — loss curve:",
+        human_duration(train_wall)
+    );
+    for (e, loss) in r.metrics.loss_curve.iter().enumerate() {
+        if e % (epochs / 12).max(1) == 0 || e + 1 == r.metrics.loss_curve.len() {
+            let bar = "#".repeat((loss * 40.0) as usize);
+            println!("  epoch {e:>4}  loss {loss:.4}  {bar}");
+        }
+    }
+    println!(
+        "[train] final: loss {:.4}, accuracy {:.3}, val_loss {:.4}, val_accuracy {:.3}",
+        r.metrics.loss,
+        r.metrics.accuracy,
+        r.metrics.val_loss.unwrap_or(f64::NAN),
+        r.metrics.val_accuracy.unwrap_or(f64::NAN),
+    );
+    let first = *r.metrics.loss_curve.first().unwrap();
+    let last = *r.metrics.loss_curve.last().unwrap();
+    assert!(last < first, "loss must decrease over training");
+
+    // E/F — inference behind 2 replicas (consumer-group load balancing),
+    // input format auto-configured from the control log (§IV-E).
+    let inf = kml.deploy_inference(r.id, 2, "copd-in", "copd-out")?;
+    println!(
+        "\n[infer] deployment {} up: 2 replicas, format {} (auto-configured)",
+        inf.id, inf.input_format
+    );
+    let mut client = kml.inference_client(&inf, ClientLocality::External)?;
+    let test = hcopd_dataset(100, 8, 999);
+    let hist = Histogram::new();
+    let mut correct = 0;
+    for s in &test.samples {
+        let t0 = Instant::now();
+        let p = client.request(&s.features, Duration::from_secs(10))?;
+        hist.observe(t0.elapsed());
+        if p.class as i32 == s.label.unwrap() {
+            correct += 1;
+        }
+    }
+    println!(
+        "[infer] 100 requests: accuracy {:.2}, latency mean {} p50 {} p99 {}",
+        correct as f64 / 100.0,
+        human_duration(hist.mean()),
+        human_duration(hist.quantile(0.5)),
+        human_duration(hist.quantile(0.99)),
+    );
+
+    println!("\n== summary (recorded in EXPERIMENTS.md §E2E) ==");
+    println!("  training wall-clock : {}", human_duration(train_wall));
+    println!("  epochs              : {epochs} (17 full batches/epoch after 20% split)");
+    println!("  loss                : {first:.4} -> {last:.4}");
+    println!(
+        "  validation          : loss {:.4}, accuracy {:.3}",
+        r.metrics.val_loss.unwrap_or(f64::NAN),
+        r.metrics.val_accuracy.unwrap_or(f64::NAN)
+    );
+    println!("  inference accuracy  : {:.2}", correct as f64 / 100.0);
+    println!(
+        "  inference latency   : mean {} / p99 {}",
+        human_duration(hist.mean()),
+        human_duration(hist.quantile(0.99))
+    );
+
+    kml.stop_inference(inf.id)?;
+    kml.shutdown();
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! RAW-format (image) pipeline: §III-D's other data format — "suitable
+//! for single-input data streams that may request a reshape, like
+//! images". An 8×8 synthetic image dataset is streamed as RAW **u8**
+//! tensors (quantized like camera frames), trained on a model compiled
+//! for 64 inputs, and served.
+//!
+//! Needs the second artifact set:
+//! ```sh
+//! make artifacts          # builds artifacts/ AND artifacts/mnist/
+//! cargo run --release --example mnist_raw
+//! ```
+
+use kafka_ml::broker::ClientLocality;
+use kafka_ml::coordinator::{KafkaMl, KafkaMlConfig, TrainParams};
+use kafka_ml::json::Json;
+use kafka_ml::ml::mnist_like_dataset;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let kml = KafkaMl::start(KafkaMlConfig {
+        artifact_dir: "artifacts/mnist".to_string(),
+        ..Default::default()
+    })?;
+
+    // The image model: 64 inputs (8×8), its own AOT artifact set.
+    let model = kml.create_model("mnist-mlp")?;
+    let conf = kml.create_configuration("mnist", &[model])?;
+    let dep = kml.deploy_training(
+        conf,
+        &TrainParams { batch_size: 16, epochs: 8, shuffle: true, seed: 9 },
+    )?;
+
+    // RAW u8 images: the producer library quantizes [0,1] floats to u8
+    // exactly like a camera byte stream; training jobs de-quantize.
+    let ds = mnist_like_dataset(320, 8, 7);
+    let raw_u8 = Json::obj(vec![
+        ("dtype", Json::str("u8")),
+        (
+            "shape",
+            Json::arr(vec![Json::from(8u64), Json::from(8u64)]),
+        ),
+    ]);
+    kml.send_stream(
+        dep.id,
+        &ds.samples,
+        "mnist-frames",
+        "RAW",
+        &raw_u8,
+        0.125,
+        ClientLocality::External,
+    )?;
+
+    let results = kml.wait_training(&dep, Duration::from_secs(900))?;
+    let r = &results[0];
+    println!(
+        "trained on 8x8 frames: loss {:.4} -> acc {:.3} (val acc {:.3})",
+        r.metrics.loss,
+        r.metrics.accuracy,
+        r.metrics.val_accuracy.unwrap_or(f64::NAN)
+    );
+
+    // Serve it and classify fresh frames.
+    let inf = kml.deploy_inference(r.id, 2, "frames-in", "frames-out")?;
+    let mut client = kml.inference_client(&inf, ClientLocality::External)?;
+    let test = mnist_like_dataset(50, 8, 77);
+    let mut correct = 0;
+    for s in &test.samples {
+        let p = client.request(&s.features, Duration::from_secs(10))?;
+        if p.class as i32 == s.label.unwrap() {
+            correct += 1;
+        }
+    }
+    println!("inference on 50 fresh frames: {correct}/50 correct");
+    // The quadrant task is easy — a trained model must beat chance hard.
+    assert!(correct > 25, "expected >25/50 on the quadrant task");
+
+    kml.stop_inference(inf.id)?;
+    kml.shutdown();
+    Ok(())
+}

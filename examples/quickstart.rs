@@ -1,0 +1,65 @@
+//! Quickstart: the smallest complete Kafka-ML pipeline (Fig 1, A–F).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use kafka_ml::broker::ClientLocality;
+use kafka_ml::coordinator::{KafkaMl, KafkaMlConfig, TrainParams};
+use kafka_ml::json::Json;
+use kafka_ml::ml::hcopd_dataset;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // Boot the platform: broker cluster + REST back-end + orchestrator
+    // (+ the control-logger pod).
+    let kml = KafkaMl::start(KafkaMlConfig::default())?;
+    println!("platform up — back-end at {}", kml.backend_url());
+
+    // A/B: define the model (AOT artifacts) and group it in a configuration.
+    let model = kml.create_model("quickstart-mlp")?;
+    let conf = kml.create_configuration("quickstart", &[model])?;
+
+    // C: deploy for training — a Job now blocks on the control topic.
+    let dep = kml.deploy_training(conf, &TrainParams { epochs: 5, ..Default::default() })?;
+
+    // D: stream the data (RAW format) + control message.
+    let data = hcopd_dataset(100, 8, 1);
+    let raw = Json::obj(vec![
+        ("dtype", Json::str("f32")),
+        ("shape", Json::arr(vec![Json::from(8u64)])),
+    ]);
+    kml.send_stream(
+        dep.id,
+        &data.samples,
+        "quickstart-data",
+        "RAW",
+        &raw,
+        0.1,
+        ClientLocality::External,
+    )?;
+
+    // E: wait for the trained result, then deploy it for inference.
+    let results = kml.wait_training(&dep, Duration::from_secs(300))?;
+    let result = &results[0];
+    println!(
+        "trained: loss={:.4} accuracy={:.3}",
+        result.metrics.loss, result.metrics.accuracy
+    );
+    let inf = kml.deploy_inference(result.id, 1, "qs-in", "qs-out")?;
+
+    // F: stream a value in, get the prediction out.
+    let mut client = kml.inference_client(&inf, ClientLocality::External)?;
+    let probe = &data.samples[0];
+    let pred = client.request(&probe.features, Duration::from_secs(10))?;
+    println!(
+        "prediction: class {} (probs {:?}) — true label {}",
+        pred.class,
+        pred.probs,
+        probe.label.unwrap()
+    );
+
+    kml.stop_inference(inf.id)?;
+    kml.shutdown();
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Fig 8 walkthrough: data-stream reuse over the distributed log (§V).
+//!
+//! * stream C1 ("green data") is ingested once for deployment D1, then
+//!   *reused* by D2 via a control-message re-send (tens of bytes);
+//! * stream C2 is reused by two more deployments (the paper's D3/D5);
+//! * the broker runs on a ManualClock, so we then fast-forward past the
+//!   retention window, sweep the log, and show C1 turning into Fig 8's
+//!   "expiring data stream" that can no longer be reused.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example stream_reuse
+//! ```
+
+use kafka_ml::broker::{BrokerConfig, CleanupPolicy, ClientLocality, LogConfig};
+use kafka_ml::coordinator::{KafkaMl, KafkaMlConfig, TrainParams};
+use kafka_ml::json::Json;
+use kafka_ml::ml::hcopd_dataset;
+use kafka_ml::util::clock::ManualClock;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn raw() -> Json {
+    Json::obj(vec![
+        ("dtype", Json::str("f32")),
+        ("shape", Json::arr(vec![Json::from(8u64)])),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    // Small segments + 1 h retention, on a hand-advanced clock.
+    let clock = ManualClock::new(1_700_000_000_000);
+    let kml = KafkaMl::start(KafkaMlConfig {
+        broker: BrokerConfig {
+            log: LogConfig {
+                segment_bytes: 2048,
+                retention_ms: Some(3_600_000),
+                retention_bytes: None,
+                cleanup_policy: CleanupPolicy::Delete,
+            },
+            ..Default::default()
+        },
+        clock: Some(Arc::new(clock.clone())),
+        ..Default::default()
+    })?;
+    let model = kml.create_model("reuse-mlp")?;
+    let conf = kml.create_configuration("reuse", &[model])?;
+    let quick = TrainParams { epochs: 2, ..Default::default() };
+
+    // ---- stream C1 -> D1, reused by D2 --------------------------------
+    let d1 = kml.deploy_training(conf, &quick)?;
+    let green = hcopd_dataset(120, 8, 1);
+    let c1 = kml.send_stream(
+        d1.id,
+        &green.samples,
+        "stream-1",
+        "RAW",
+        &raw(),
+        0.0,
+        ClientLocality::External,
+    )?;
+    kml.wait_training(&d1, Duration::from_secs(300))?;
+    kml.wait_control_logged(d1.id, Duration::from_secs(10))?;
+    println!("D1 trained from fresh stream C1 = {}", c1.stream.format());
+
+    let records_before = kml.cluster.offsets("stream-1", 0)?.1;
+    let d2 = kml.deploy_training(conf, &quick)?;
+    let resent = kml.reuse().resend(d1.id, d2.id, ClientLocality::External)?;
+    kml.wait_training(&d2, Duration::from_secs(300))?;
+    let records_after = kml.cluster.offsets("stream-1", 0)?.1;
+    println!(
+        "D2 trained by REUSING C1: {} re-sent as a {}-byte control message;\n\
+         data topic unchanged ({} -> {} records)",
+        resent.stream.format(),
+        resent.encode().len(),
+        records_before,
+        records_after
+    );
+    assert_eq!(records_before, records_after);
+
+    // ---- stream C2 -> D3, reused by D4 and D5 --------------------------
+    let d3 = kml.deploy_training(conf, &quick)?;
+    let blue = hcopd_dataset(100, 8, 2);
+    kml.send_stream(
+        d3.id,
+        &blue.samples,
+        "stream-2",
+        "RAW",
+        &raw(),
+        0.0,
+        ClientLocality::External,
+    )?;
+    kml.wait_training(&d3, Duration::from_secs(300))?;
+    kml.wait_control_logged(d3.id, Duration::from_secs(10))?;
+    for _ in 0..2 {
+        let dn = kml.deploy_training(conf, &quick)?;
+        kml.reuse().resend(d3.id, dn.id, ClientLocality::External)?;
+        kml.wait_training(&dn, Duration::from_secs(300))?;
+    }
+    println!("D3 trained from stream C2; D4 and D5 reused it (1 ingest, 3 trainings)");
+
+    // ---- expiry: fast-forward past retention ---------------------------
+    println!("\nfast-forwarding the broker clock 2 hours…");
+    clock.advance_ms(2 * 3_600_000);
+    // Fresh records close the old segments, then the cleaner sweeps.
+    let fmt = kafka_ml::formats::registry("RAW", &raw())?;
+    let fresh = hcopd_dataset(60, 8, 3);
+    for s in &fresh.samples {
+        kml.cluster.produce(
+            "stream-1",
+            0,
+            vec![fmt.encode(&s.features, s.label)?],
+            ClientLocality::External,
+            None,
+        )?;
+    }
+    let removed = kml.cluster.run_retention();
+    println!("retention sweep removed {removed} records");
+
+    println!("\nstream registry (the paper's Web-UI reuse list):");
+    for (e, avail) in kml.reuse().list_streams() {
+        println!(
+            "  deployment {:>2} -> [{}:{}:{}:{}] : {:?}",
+            e.deployment_id, e.topic, e.partition, e.offset, e.length, avail
+        );
+    }
+
+    // Reusing the expired C1 now fails loudly.
+    let d_late = kml.deploy_training(conf, &quick)?;
+    match kml.reuse().resend(d1.id, d_late.id, ClientLocality::External) {
+        Err(e) => println!("\nreuse of expired C1 correctly refused:\n  {e}"),
+        Ok(_) => anyhow::bail!("expired stream should not be reusable"),
+    }
+
+    kml.shutdown();
+    Ok(())
+}

@@ -1,0 +1,8 @@
+"""Build-time Python for Kafka-ML (Layer 1 + Layer 2).
+
+This package is only ever executed at ``make artifacts`` time: it authors
+the Pallas kernels (L1), composes them into the JAX model (L2), and AOT-
+lowers the train/eval/predict functions to HLO text that the Rust
+coordinator (L3) loads through PJRT. Nothing in here runs on the request
+path.
+"""

@@ -1,0 +1,208 @@
+"""AOT-lower the Kafka-ML model to HLO text artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits into ``--out-dir``:
+
+  init.hlo.txt          () -> (w1, b1, …)          fresh Glorot params
+  train_step.hlo.txt    (params, m, v, t, x, y) -> (params', m', v', loss, acc)
+  eval_step.hlo.txt     (params, x, y) -> (loss, acc)
+  predict_b{B}.hlo.txt  (params, x) -> (probs,)    batch-B inference
+  predict_b1.hlo.txt    (params, x) -> (probs,)    single-record inference
+  meta.json             shapes/order contract consumed by rust/src/runtime
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ModelSpec, init_params, predict, eval_step, train_step
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def make_init_fn(spec: ModelSpec):
+    def fn():
+        return init_params(spec)
+
+    return fn, []
+
+
+def make_train_fn(spec: ModelSpec):
+    """Flat-arg wrapper so each tensor is one HLO parameter, in order."""
+    n = 2 * spec.n_layers
+    p_specs = [_f32(shape) for _, shape in spec.param_shapes()]
+
+    def fn(*args):
+        params = args[0:n]
+        m = args[n:2 * n]
+        v = args[2 * n:3 * n]
+        t, x, y = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        return train_step(spec, params, m, v, t, x, y)
+
+    arg_specs = (
+        p_specs + p_specs + p_specs
+        + [_f32(()), _f32((spec.batch, spec.input_dim)), _i32((spec.batch,))]
+    )
+    return fn, arg_specs
+
+
+def make_eval_fn(spec: ModelSpec):
+    n = 2 * spec.n_layers
+    p_specs = [_f32(shape) for _, shape in spec.param_shapes()]
+
+    def fn(*args):
+        params = args[0:n]
+        x, y = args[n], args[n + 1]
+        return eval_step(spec, params, x, y)
+
+    return fn, p_specs + [_f32((spec.batch, spec.input_dim)), _i32((spec.batch,))]
+
+
+def make_predict_fn(spec: ModelSpec, batch: int):
+    n = 2 * spec.n_layers
+    p_specs = [_f32(shape) for _, shape in spec.param_shapes()]
+
+    def fn(*args):
+        params = args[0:n]
+        x = args[n]
+        return predict(spec, params, x)
+
+    return fn, p_specs + [_f32((batch, spec.input_dim))]
+
+
+def lower_to_file(fn, arg_specs, path: str) -> int:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def build_meta(spec: ModelSpec, files: dict) -> dict:
+    params = [
+        {"name": name, "shape": list(shape), "dtype": "f32"}
+        for name, shape in spec.param_shapes()
+    ]
+    n = len(params)
+    return {
+        "format_version": 1,
+        "spec": spec.to_json_dict(),
+        "params": params,
+        "artifacts": {
+            "init": {
+                "file": files["init"],
+                "inputs": [],
+                "outputs": ["params*"],
+            },
+            "train_step": {
+                "file": files["train_step"],
+                "batch": spec.batch,
+                "inputs": ["params*", "m*", "v*", "t", "x", "y"],
+                "outputs": ["params*", "m*", "v*", "loss", "acc"],
+                "n_params": n,
+            },
+            "eval_step": {
+                "file": files["eval_step"],
+                "batch": spec.batch,
+                "inputs": ["params*", "x", "y"],
+                "outputs": ["loss", "acc"],
+                "n_params": n,
+            },
+            "predict": {
+                "file": files["predict"],
+                "batch": spec.batch,
+                "inputs": ["params*", "x"],
+                "outputs": ["probs"],
+                "n_params": n,
+            },
+            "predict_single": {
+                "file": files["predict_single"],
+                "batch": 1,
+                "inputs": ["params*", "x"],
+                "outputs": ["probs"],
+                "n_params": n,
+            },
+        },
+    }
+
+
+def compile_artifacts(spec: ModelSpec, out_dir: str, verbose: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    files = {
+        "init": "init.hlo.txt",
+        "train_step": "train_step.hlo.txt",
+        "eval_step": "eval_step.hlo.txt",
+        "predict": f"predict_b{spec.batch}.hlo.txt",
+        "predict_single": "predict_b1.hlo.txt",
+    }
+    jobs = {
+        "init": make_init_fn(spec),
+        "train_step": make_train_fn(spec),
+        "eval_step": make_eval_fn(spec),
+        "predict": make_predict_fn(spec, spec.batch),
+        "predict_single": make_predict_fn(spec, 1),
+    }
+    for key, (fn, arg_specs) in jobs.items():
+        path = os.path.join(out_dir, files[key])
+        size = lower_to_file(fn, arg_specs, path)
+        if verbose:
+            print(f"  {files[key]}: {size} chars")
+    meta = build_meta(spec, files)
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    if verbose:
+        print(f"  meta.json: {len(meta['params'])} param tensors")
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--input-dim", type=int, default=8)
+    ap.add_argument("--hidden", type=int, nargs="*", default=[16])
+    ap.add_argument("--classes", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=1e-4)
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+    spec = ModelSpec(
+        input_dim=args.input_dim,
+        hidden=tuple(args.hidden),
+        classes=args.classes,
+        batch=args.batch,
+        lr=args.lr,
+        seed=args.seed,
+    )
+    print(f"AOT-lowering Kafka-ML model {spec} -> {args.out_dir}")
+    compile_artifacts(spec, args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

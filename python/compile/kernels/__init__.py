@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for Kafka-ML.
+
+Every kernel here is authored with ``jax.experimental.pallas`` and lowered
+with ``interpret=True`` so the resulting HLO runs on the CPU PJRT client
+used by the Rust coordinator (real-TPU lowering would emit a Mosaic
+custom-call the CPU plugin cannot execute — see DESIGN.md
+§Hardware-Adaptation).
+
+Kernels:
+  - ``dense.dense`` — fused ``x @ W + b -> activation`` with a custom
+    VJP whose backward pass is itself built from Pallas matmul kernels.
+  - ``softmax.softmax`` — row-wise, numerically-stable softmax.
+  - ``adam.adam_update`` — fused element-wise Adam parameter update.
+
+Pure-``jnp`` oracles for all of these live in ``compile.kernels.ref``
+and are enforced by ``python/tests``.
+"""
+
+from . import ref  # noqa: F401
+from .adam import adam_update  # noqa: F401
+from .dense import dense, matmul  # noqa: F401
+from .softmax import softmax  # noqa: F401

@@ -1,0 +1,76 @@
+"""Fused element-wise Adam update as a Pallas kernel.
+
+One pass over each parameter tensor updates ``(p, m, v)`` together —
+the fusion TF/Keras gets from its fused Adam op. The bias correction is
+folded into a per-step scalar step size ``lr_t`` computed outside the
+kernel (scalar math, identical result), which is broadcast into the grid
+via a tiny ``(1,)`` block.
+
+No VJP needed: the optimizer update is applied *outside* ``jax.grad``.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _adam_kernel(p_ref, g_ref, m_ref, v_ref, lrt_ref, p_out, m_out, v_out,
+                 *, beta1, beta2, eps):
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    lr_t = lrt_ref[0]
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    p_new = p - lr_t * m_new / (jnp.sqrt(v_new) + eps)
+    p_out[...] = p_new.astype(p_out.dtype)
+    m_out[...] = m_new.astype(m_out.dtype)
+    v_out[...] = v_new.astype(v_out.dtype)
+
+
+def adam_update(p, g, m, v, t, lr=1e-4, beta1=0.9, beta2=0.999, eps=1e-7,
+                block=BLOCK):
+    """One Adam step for a single tensor; returns ``(p_new, m_new, v_new)``.
+
+    ``t`` is the 1-based step count (traced scalar — it varies per call in
+    the AOT train_step). ``lr``/``beta1``/``beta2``/``eps`` are python
+    floats baked in at lowering time, exactly like Keras' compiled
+    optimizer config in the paper's Listing 2 (``Adam(lr=.0001)``).
+    """
+    shape, dtype = p.shape, p.dtype
+    n = p.size
+    import functools
+
+    t32 = jnp.asarray(t, jnp.float32)
+    lr_t = lr * jnp.sqrt(1.0 - beta2**t32) / (1.0 - beta1**t32)
+    lr_t = jnp.reshape(lr_t, (1,))
+
+    blk = min(_round_up(max(n, 1), 8), block)
+    np_ = _round_up(max(n, 1), blk)
+    pad = (0, np_ - n)
+    flat = lambda a: jnp.pad(jnp.ravel(a).astype(dtype), pad)  # noqa: E731
+
+    kernel = functools.partial(_adam_kernel, beta1=beta1, beta2=beta2, eps=eps)
+    vec = pl.BlockSpec((blk,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    p_new, m_new, v_new = pl.pallas_call(
+        kernel,
+        grid=(np_ // blk,),
+        in_specs=[vec, vec, vec, vec, scalar],
+        out_specs=(vec, vec, vec),
+        out_shape=(
+            jax.ShapeDtypeStruct((np_,), dtype),
+            jax.ShapeDtypeStruct((np_,), dtype),
+            jax.ShapeDtypeStruct((np_,), dtype),
+        ),
+        interpret=True,
+    )(flat(p), flat(g), flat(m), flat(v), lr_t)
+    unflat = lambda a: jnp.reshape(a[:n], shape)  # noqa: E731
+    return unflat(p_new), unflat(m_new), unflat(v_new)

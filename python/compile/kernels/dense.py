@@ -1,0 +1,134 @@
+"""Fused dense layer (``activation(x @ W + b)``) as a Pallas kernel.
+
+This is the FLOPs hot spot of the Kafka-ML model (every training step and
+every inference is dominated by the dense layers), so it is the kernel the
+three-layer architecture pushes down to Pallas.
+
+TPU-oriented structure (see DESIGN.md §Hardware-Adaptation):
+  * the grid tiles the output as ``(M/bm, N/bn)`` blocks; each program
+    keeps an ``(bm, K)`` x-tile and a ``(K, bn)`` w-tile resident in VMEM
+    via ``BlockSpec`` — the HBM↔VMEM schedule the paper's CPU/TF stack
+    leaves implicit;
+  * the inner contraction uses ``jnp.dot`` with
+    ``preferred_element_type=float32`` so the MXU accumulates in f32 even
+    for bf16 inputs;
+  * ragged edges are handled by zero-padding in the wrapper (cheap at
+    these sizes, and keeps the kernel branch-free).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode is the correctness path on this image and
+real-TPU performance is estimated analytically (EXPERIMENTS.md §Perf).
+
+The backward pass is *also* Pallas: ``dense`` carries a ``custom_vjp``
+whose cotangents are computed with the same matmul kernel
+(``dx = g @ W^T``, ``dW = x^T @ g``), so ``jax.grad`` through the model
+never leaves Layer 1 for its heavy lifting.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tile sizes. 128 matches the MXU lane width; tiles are
+# shrunk (to padded-to-8 sizes) for the small shapes Kafka-ML's HCOPD
+# model actually uses so interpret-mode tests stay fast.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _pick_block(dim: int, block: int) -> int:
+    """Tile size: full (padded) extent for small dims, ``block`` otherwise."""
+    return min(_round_up(dim, 8), block)
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    """One ``(bm, bn)`` output tile: f32 accumulate, bias, activation."""
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _dense_impl(x, w, b, activation, block_m=BLOCK_M, block_n=BLOCK_N):
+    if activation not in ("linear", "relu"):
+        raise ValueError(f"unknown activation {activation!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm, bn = _pick_block(m, block_m), _pick_block(n, block_n)
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, 8)
+
+    # Zero-pad ragged edges; padding contributes 0 to the contraction and
+    # is sliced off after the call.
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))
+
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, activation=activation),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def matmul(a, b):
+    """Plain ``a @ b`` through the dense kernel (zero bias, linear).
+
+    Used by the custom VJP so the backward matmuls also run in Pallas.
+    """
+    zeros = jnp.zeros((b.shape[1],), dtype=a.dtype)
+    return _dense_impl(a, b, zeros, "linear")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, activation="linear"):
+    """Fused ``activation(x @ w + b)``; differentiable via custom VJP.
+
+    Args:
+      x: ``(m, k)`` input activations.
+      w: ``(k, n)`` weights.
+      b: ``(n,)`` bias.
+      activation: ``"linear"`` or ``"relu"``.
+    """
+    return _dense_impl(x, w, b, activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    out = _dense_impl(x, w, b, activation)
+    # Residuals: x and w for the matmul cotangents, out for the relu mask.
+    return out, (x, w, out)
+
+
+def _dense_bwd(activation, res, g):
+    x, w, out = res
+    if activation == "relu":
+        # d relu = 1 where the *post*-activation output is positive.
+        g = g * (out > 0).astype(g.dtype)
+    dx = matmul(g, w.T)                       # (m, n) @ (n, k)
+    dw = matmul(x.T, g)                       # (k, m) @ (m, n)
+    db = jnp.sum(g.astype(jnp.float32), axis=0).astype(g.dtype)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

@@ -1,0 +1,45 @@
+"""Row-wise numerically-stable softmax as a Pallas kernel.
+
+Used by the inference (``predict``) artifact to turn logits into class
+probabilities. One grid step owns a ``(bm, N)`` row-block held in VMEM;
+column padding is filled with ``-inf`` so padded lanes contribute exactly
+zero probability mass.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 256
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    shifted = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(shifted)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def softmax(x, block_m=BLOCK_M):
+    """Stable softmax over the last axis of a 2-D array."""
+    m, n = x.shape
+    bm = min(_round_up(m, 8), block_m)
+    mp, np_ = _round_up(m, bm), _round_up(n, 8)
+
+    # -inf column padding => exp(pad) == 0 => padded lanes get no mass.
+    # Row padding can stay -inf too: those rows are sliced away.
+    xp = jnp.pad(x, ((0, mp - m), (0, np_ - n)), constant_values=-jnp.inf)
+
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid=(mp // bm,),
+        in_specs=[pl.BlockSpec((bm, np_), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, np_), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:m, :n]

@@ -1,0 +1,177 @@
+"""Layer-2: the Kafka-ML model as a JAX compute graph.
+
+The paper's validation model (Listing 1 / Listing 2) is a small Keras MLP
+— one hidden layer, multi-input HCOPD features in, a 4-class diagnosis
+out (COPD / HC / Asthma / Infected), compiled with
+``Adam(lr=.0001)`` + ``sparse_categorical_crossentropy`` + ``accuracy``.
+
+This module rebuilds that model in JAX on top of the Layer-1 Pallas
+kernels (:mod:`compile.kernels`):
+
+  * :func:`forward` — dense kernels with ReLU on hidden layers;
+  * :func:`predict` — forward + Pallas softmax (the inference artifact);
+  * :func:`train_step` — value_and_grad through the dense kernels' custom
+    VJP plus a fused Pallas Adam update per tensor (the training
+    artifact);
+  * :func:`eval_step` — loss + accuracy (the evaluation artifact);
+  * :func:`init_params` — Glorot-uniform init (the ``init`` artifact, so
+    the Rust side never needs an RNG for model weights).
+
+All functions take/return *flat tuples* of arrays. At AOT time each leaf
+becomes one HLO parameter/result, in exactly this order; the order is
+recorded in ``artifacts/meta.json`` and relied upon by
+``rust/src/runtime``.
+
+Everything Keras' ``model.fit`` did *around* the step function —
+iterating the stream, batching, shuffling, validation split, metric
+aggregation — is deliberately **not** here: that is Layer-3's job
+(``rust/src/coordinator/training.rs``), because in Kafka-ML the data
+arrives as a Kafka stream, not as an in-memory dataset.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adam_update, dense, softmax
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Architecture + training hyper-parameters, fixed at AOT time.
+
+    Defaults mirror the paper's HCOPD validation: multi-input features
+    (age, gender, smoking status + biosensor channels), one hidden layer,
+    4 diagnosis classes, batch size 10, Adam(lr=1e-4).
+    """
+
+    input_dim: int = 8
+    hidden: Tuple[int, ...] = (16,)
+    classes: int = 4
+    batch: int = 10
+    lr: float = 1e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-7
+    seed: int = 42
+
+    @property
+    def layer_dims(self) -> List[Tuple[int, int]]:
+        dims = [self.input_dim, *self.hidden, self.classes]
+        return list(zip(dims[:-1], dims[1:]))
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.hidden) + 1
+
+    def param_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Flat ``(name, shape)`` list in artifact order: w1, b1, w2, b2…"""
+        out = []
+        for i, (fan_in, fan_out) in enumerate(self.layer_dims, start=1):
+            out.append((f"w{i}", (fan_in, fan_out)))
+            out.append((f"b{i}", (fan_out,)))
+        return out
+
+    def to_json_dict(self) -> dict:
+        return {
+            "input_dim": self.input_dim,
+            "hidden": list(self.hidden),
+            "classes": self.classes,
+            "batch": self.batch,
+            "lr": self.lr,
+            "beta1": self.beta1,
+            "beta2": self.beta2,
+            "eps": self.eps,
+            "seed": self.seed,
+        }
+
+
+def init_params(spec: ModelSpec):
+    """Glorot-uniform weights + zero biases, in flat artifact order."""
+    key = jax.random.PRNGKey(spec.seed)
+    params = []
+    for fan_in, fan_out in spec.layer_dims:
+        key, sub = jax.random.split(key)
+        limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+        w = jax.random.uniform(
+            sub, (fan_in, fan_out), jnp.float32, -limit, limit
+        )
+        params.extend([w, jnp.zeros((fan_out,), jnp.float32)])
+    return tuple(params)
+
+
+def forward(spec: ModelSpec, params, x):
+    """Logits. Hidden layers ReLU, output layer linear — all Pallas."""
+    n = spec.n_layers
+    h = x
+    for i in range(n):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = dense(h, w, b, "relu" if i < n - 1 else "linear")
+    return h
+
+
+def predict(spec: ModelSpec, params, x):
+    """Class probabilities — the inference artifact body."""
+    return (softmax(forward(spec, params, x)),)
+
+
+def loss_and_acc(spec: ModelSpec, params, x, y):
+    """Mean sparse categorical cross-entropy + accuracy (f32 scalars)."""
+    logits = forward(spec, params, x)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def eval_step(spec: ModelSpec, params, x, y):
+    """Evaluation artifact: ``(loss, accuracy)`` on one batch."""
+    loss, acc = loss_and_acc(spec, params, x, y)
+    return (loss, acc)
+
+
+def train_step(spec: ModelSpec, params, m, v, t, x, y):
+    """One optimizer step on one streamed batch.
+
+    Args (flat artifact order):
+      params: tuple of 2L tensors (w1, b1, …).
+      m, v:   Adam first/second-moment tuples, same shapes as params.
+      t:      f32 scalar, 1-based step count (for bias correction).
+      x:      ``(batch, input_dim)`` f32 features.
+      y:      ``(batch,)`` i32 labels.
+
+    Returns ``(*new_params, *new_m, *new_v, loss, acc)``.
+    """
+
+    def scalar_loss(ps):
+        loss, _ = loss_and_acc(spec, ps, x, y)
+        return loss
+
+    (loss, acc), grads = jax.value_and_grad(
+        lambda ps: loss_and_acc(spec, ps, x, y), has_aux=True
+    )(tuple(params))
+
+    new_p, new_m, new_v = [], [], []
+    for p_i, g_i, m_i, v_i in zip(params, grads, m, v):
+        p2, m2, v2 = adam_update(
+            p_i, g_i, m_i, v_i, t,
+            lr=spec.lr, beta1=spec.beta1, beta2=spec.beta2, eps=spec.eps,
+        )
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return (*new_p, *new_m, *new_v, loss, acc)
+
+
+# ---------------------------------------------------------------------------
+# Reference-model helpers used by the python tests (not lowered).
+# ---------------------------------------------------------------------------
+
+def zeros_like_params(spec: ModelSpec):
+    """Zero moment tuples matching :func:`init_params`."""
+    return tuple(
+        jnp.zeros(shape, jnp.float32) for _, shape in spec.param_shapes()
+    )

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Make `compile` importable when pytest is run from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+# Pallas interpret mode is slow; keep sweeps meaningful but bounded.
+settings.register_profile("kafka-ml", max_examples=20, deadline=None)
+settings.load_profile("kafka-ml")

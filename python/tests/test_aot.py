@@ -1,0 +1,66 @@
+"""AOT lowering: artifacts exist, are valid HLO text, meta is consistent."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import compile_artifacts
+from compile.model import ModelSpec
+
+
+@pytest.fixture(scope="module")
+def out(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("artifacts"))
+    spec = ModelSpec(input_dim=6, hidden=(8,), classes=3, batch=4, seed=1)
+    meta = compile_artifacts(spec, d, verbose=False)
+    return d, spec, meta
+
+
+def test_all_artifacts_written(out):
+    d, spec, meta = out
+    for art in meta["artifacts"].values():
+        path = os.path.join(d, art["file"])
+        assert os.path.exists(path), art["file"]
+        assert os.path.getsize(path) > 100
+
+
+def test_hlo_text_is_parseable_module(out):
+    d, _, meta = out
+    for art in meta["artifacts"].values():
+        text = open(os.path.join(d, art["file"])).read()
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # Interchange must be text, never a serialized proto.
+        assert not text.startswith("\x08")
+
+
+def test_meta_matches_spec(out):
+    d, spec, meta = out
+    disk = json.load(open(os.path.join(d, "meta.json")))
+    assert disk == meta
+    assert disk["spec"]["input_dim"] == spec.input_dim
+    assert disk["spec"]["batch"] == spec.batch
+    n = 2 * spec.n_layers
+    assert len(disk["params"]) == n
+    assert disk["artifacts"]["train_step"]["n_params"] == n
+    assert disk["artifacts"]["predict_single"]["batch"] == 1
+
+
+def test_param_entry_counts_in_hlo(out):
+    """train_step HLO must declare 3n+3 parameters (p, m, v, t, x, y)."""
+    d, spec, meta = out
+    n = 2 * spec.n_layers
+    text = open(os.path.join(d, meta["artifacts"]["train_step"]["file"])).read()
+    entry = text[text.index("ENTRY"):]
+    body = entry[:entry.index("\n", entry.index("parameter"))]
+    count = entry.count("parameter(")
+    assert count == 3 * n + 3, f"expected {3*n+3} params, found {count}"
+
+
+def test_predict_declares_params_plus_input(out):
+    d, spec, meta = out
+    n = 2 * spec.n_layers
+    text = open(os.path.join(d, meta["artifacts"]["predict"]["file"])).read()
+    entry = text[text.index("ENTRY"):]
+    assert entry.count("parameter(") == n + 1

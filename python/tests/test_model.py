@@ -1,0 +1,121 @@
+"""Layer-2 model: shapes, loss maths, and end-to-end learning."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels.ref import mlp_forward_ref, sparse_xent_ref
+from compile.model import (
+    ModelSpec,
+    eval_step,
+    forward,
+    init_params,
+    predict,
+    train_step,
+    zeros_like_params,
+)
+
+
+def _toy_batch(spec, n, seed=0):
+    """Linearly-separable-ish synthetic HCOPD-like batch."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, spec.input_dim)).astype(np.float32)
+    # Label = argmax over 'classes' fixed random projections => learnable.
+    proj = np.random.default_rng(1234).normal(
+        size=(spec.input_dim, spec.classes)
+    )
+    y = np.argmax(x @ proj, axis=1).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return ModelSpec(input_dim=8, hidden=(16,), classes=4, batch=10)
+
+
+def test_init_param_shapes(spec):
+    params = init_params(spec)
+    assert len(params) == 2 * spec.n_layers
+    for p, (name, shape) in zip(params, spec.param_shapes()):
+        assert p.shape == shape, name
+        assert p.dtype == jnp.float32
+    # Biases start at zero, weights don't.
+    assert float(jnp.abs(params[1]).max()) == 0.0
+    assert float(jnp.abs(params[0]).max()) > 0.0
+
+
+def test_forward_matches_reference_composition(spec):
+    params = init_params(spec)
+    x, _ = _toy_batch(spec, 10)
+    got = forward(spec, params, x)
+    want = mlp_forward_ref(params, x)
+    assert got.shape == (10, spec.classes)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_eval_step_matches_reference_loss(spec):
+    params = init_params(spec)
+    x, y = _toy_batch(spec, 10)
+    loss, acc = eval_step(spec, params, x, y)
+    logits = mlp_forward_ref(params, x)
+    ref_loss, ref_acc = sparse_xent_ref(logits, y)
+    assert_allclose(float(loss), float(ref_loss), rtol=1e-5)
+    assert_allclose(float(acc), float(ref_acc), rtol=1e-6)
+
+
+def test_predict_is_probability_distribution(spec):
+    params = init_params(spec)
+    x, _ = _toy_batch(spec, 10)
+    probs = np.asarray(predict(spec, params, x)[0])
+    assert probs.shape == (10, spec.classes)
+    assert (probs >= 0).all()
+    assert_allclose(probs.sum(axis=1), np.ones(10), rtol=1e-5)
+
+
+def test_train_step_output_arity(spec):
+    n = 2 * spec.n_layers
+    params = init_params(spec)
+    m, v = zeros_like_params(spec), zeros_like_params(spec)
+    x, y = _toy_batch(spec, spec.batch)
+    out = train_step(spec, params, m, v, jnp.float32(1.0), x, y)
+    assert len(out) == 3 * n + 2
+    for got, want in zip(out[:n], params):
+        assert got.shape == want.shape
+
+
+def test_training_reduces_loss(spec):
+    """A few hundred steps on a learnable toy task must cut loss ~in half."""
+    big_spec = ModelSpec(input_dim=8, hidden=(16,), classes=4, batch=10, lr=5e-3)
+    n = 2 * big_spec.n_layers
+    params = init_params(big_spec)
+    m, v = zeros_like_params(big_spec), zeros_like_params(big_spec)
+    x_all, y_all = _toy_batch(big_spec, 200, seed=3)
+
+    losses = []
+    t = 0
+    for epoch in range(15):
+        for i in range(0, 200, big_spec.batch):
+            t += 1
+            xb = x_all[i:i + big_spec.batch]
+            yb = y_all[i:i + big_spec.batch]
+            out = train_step(
+                big_spec, params, m, v, jnp.float32(t), xb, yb
+            )
+            params = out[:n]
+            m, v = out[n:2 * n], out[2 * n:3 * n]
+            losses.append(float(out[-2]))
+
+    first = np.mean(losses[:20])
+    last = np.mean(losses[-20:])
+    assert last < 0.7 * first, f"loss did not fall: {first:.3f} -> {last:.3f}"
+
+
+def test_spec_param_shape_list_consistent():
+    spec = ModelSpec(input_dim=5, hidden=(7, 3), classes=2)
+    shapes = dict(spec.param_shapes())
+    assert shapes == {
+        "w1": (5, 7), "b1": (7,),
+        "w2": (7, 3), "b2": (3,),
+        "w3": (3, 2), "b3": (2,),
+    }

@@ -1,0 +1,54 @@
+"""Pallas softmax kernel vs oracle + invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import softmax
+from compile.kernels.ref import softmax_ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@given(
+    m=st.integers(1, 64),
+    n=st.integers(1, 40),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_matches_ref(m, n, dt, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(scale=3.0, size=(m, n)), dt)
+    got, want = softmax(x), softmax_ref(x)
+    tol = 2e-2 if dt == jnp.bfloat16 else 1e-6
+    assert got.shape == x.shape and got.dtype == dt
+    assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@given(m=st.integers(1, 32), n=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_rows_sum_to_one_and_nonnegative(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(scale=5.0, size=(m, n)), jnp.float32)
+    out = np.asarray(softmax(x))
+    assert (out >= 0).all()
+    assert_allclose(out.sum(axis=-1), np.ones(m), rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_stable_for_large_logits():
+    x = jnp.asarray([[1000.0, 1000.0, -1000.0]], jnp.float32)
+    out = np.asarray(softmax(x))
+    assert np.isfinite(out).all()
+    assert_allclose(out[0, :2], [0.5, 0.5], atol=1e-6)
+    assert out[0, 2] == 0.0
+
+
+def test_softmax_multirow_blocks():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(600, 4)), jnp.float32)  # > BLOCK_M rows
+    assert_allclose(
+        np.asarray(softmax(x)), np.asarray(softmax_ref(x)), rtol=1e-6, atol=1e-6
+    )

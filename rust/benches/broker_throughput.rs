@@ -1,0 +1,135 @@
+//! Broker ablations (§II's dispatch-rate claims): message-set batching
+//! and partition-parallel consumption.
+//!
+//! * batching — §II credits Kafka's rate to "message set abstractions:
+//!   messages are grouped together amortizing the overhead of the
+//!   network round trip". Sweep producer batch size with a calibrated
+//!   in-cluster link and watch records/s.
+//! * partitions — multi-consumer parallel fetch across 1/2/4 partitions.
+
+use kafka_ml::benchkit::{Bench, Table};
+use kafka_ml::broker::{
+    BrokerConfig, ClientLocality, Cluster, Consumer, NetProfile, Producer, ProducerConfig,
+    Record,
+};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let records = 20_000usize;
+    let payload = vec![7u8; 64];
+
+    // ---- producer batching sweep -----------------------------------------
+    let mut t = Table::new(
+        "Producer message-set batching (20k x 64B records, in-cluster 250µs/leg)",
+        &["batch size", "wall (s)", "records/s", "network round-trips"],
+    );
+    for batch in [1usize, 8, 64, 256] {
+        let c = Cluster::new(BrokerConfig {
+            net: NetProfile::calibrated(),
+            ..Default::default()
+        });
+        c.create_topic("bt", 1);
+        let mut p = Producer::new(
+            c.clone(),
+            ProducerConfig {
+                batch_size: batch,
+                locality: ClientLocality::InCluster,
+                ..Default::default()
+            },
+        );
+        let t0 = Instant::now();
+        for _ in 0..records {
+            p.send_to("bt", 0, Record::new(payload.clone()))?;
+        }
+        p.flush()?;
+        let wall = t0.elapsed();
+        t.row(&[
+            batch.to_string(),
+            format!("{:.3}", wall.as_secs_f64()),
+            format!("{:.0}", records as f64 / wall.as_secs_f64()),
+            c.metrics.counter("broker.produce.batches").get().to_string(),
+        ]);
+    }
+    t.print();
+
+    // ---- consumer parallelism across partitions ------------------------------
+    let mut t = Table::new(
+        "Partition-parallel consumption (80k x 64B records, no simulated net)",
+        &["partitions/consumers", "wall (s)", "records/s"],
+    );
+    let total = 80_000usize;
+    for parts in [1u32, 2, 4] {
+        let c = Cluster::new(BrokerConfig::default());
+        c.create_topic("pt", parts);
+        let mut p = Producer::new(
+            c.clone(),
+            ProducerConfig { batch_size: 512, ..Default::default() },
+        );
+        for i in 0..total {
+            p.send_to("pt", i as u32 % parts, Record::new(payload.clone()))?;
+        }
+        p.flush()?;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..parts)
+            .map(|pi| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    let mut cons = Consumer::new(c, ClientLocality::InCluster);
+                    cons.assign(vec![("pt".to_string(), pi)]);
+                    let mut got = 0usize;
+                    loop {
+                        let n = cons.poll(2048).unwrap().len();
+                        if n == 0 {
+                            break;
+                        }
+                        got += n;
+                    }
+                    got
+                })
+            })
+            .collect();
+        let got: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(got, total);
+        let wall = t0.elapsed();
+        t.row(&[
+            parts.to_string(),
+            format!("{:.3}", wall.as_secs_f64()),
+            format!("{:.0}", total as f64 / wall.as_secs_f64()),
+        ]);
+    }
+    t.print();
+
+    // ---- fetch size sweep (zero-copy-ish batch reads) -------------------------
+    let mut t = Table::new(
+        "Fetch size sweep (80k records, single consumer)",
+        &["max poll", "wall (s)", "records/s"],
+    );
+    let c = Cluster::new(BrokerConfig::default());
+    c.create_topic("ft", 1);
+    let mut p = Producer::new(
+        c.clone(),
+        ProducerConfig { batch_size: 512, ..Default::default() },
+    );
+    for _ in 0..total {
+        p.send_to("ft", 0, Record::new(payload.clone()))?;
+    }
+    p.flush()?;
+    let bench = Bench::new(1, 3);
+    for max_poll in [16usize, 256, 4096] {
+        let stats = bench.run(|| {
+            let mut cons = Consumer::new(c.clone(), ClientLocality::InCluster);
+            cons.assign(vec![("ft".to_string(), 0)]);
+            let mut got = 0usize;
+            while got < total {
+                got += cons.poll(max_poll).unwrap().len();
+            }
+        });
+        t.row(&[
+            max_poll.to_string(),
+            format!("{:.3}", stats.mean_secs()),
+            format!("{:.0}", total as f64 / stats.mean_secs()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

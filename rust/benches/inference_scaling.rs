@@ -1,0 +1,90 @@
+//! Inference replica scaling (§IV-D): "the Replication Controller
+//! exploits the consumer group feature of Apache Kafka by matching
+//! replicas and partitions to provide load balancing and higher data
+//! ingestion."
+//!
+//! With the calibrated network profile the broker hop dominates
+//! per-request cost, so extra replicas buy parallel consumption of the
+//! partitioned input topic. (Run the `inference_scaling` *example* for
+//! the zero-latency CPU-bound variant.)
+
+use kafka_ml::benchkit::Table;
+use kafka_ml::broker::{BrokerConfig, ClientLocality, NetProfile};
+use kafka_ml::coordinator::{KafkaMl, KafkaMlConfig, TrainParams};
+use kafka_ml::json::Json;
+use kafka_ml::ml::hcopd_dataset;
+use kafka_ml::orchestrator::OrchestratorCosts;
+use std::time::{Duration, Instant};
+
+fn raw() -> Json {
+    Json::obj(vec![
+        ("dtype", Json::str("f32")),
+        ("shape", Json::arr(vec![Json::from(8u64)])),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let kml = KafkaMl::start(KafkaMlConfig {
+        broker: BrokerConfig { net: NetProfile::calibrated(), ..Default::default() },
+        costs: OrchestratorCosts::calibrated(),
+        ..Default::default()
+    })?;
+    let model = kml.create_model("scale")?;
+    let conf = kml.create_configuration("scale", &[model])?;
+    let dep = kml.deploy_training(conf, &TrainParams { epochs: 3, ..Default::default() })?;
+    let train = hcopd_dataset(200, 8, 4);
+    kml.send_stream(
+        dep.id, &train.samples, "scale-data", "RAW", &raw(), 0.0,
+        ClientLocality::External,
+    )?;
+    let results = kml.wait_training(&dep, Duration::from_secs(600))?;
+    let result_id = results[0].id;
+
+    let requests = 200usize;
+    let test = hcopd_dataset(requests, 8, 50);
+    let mut t = Table::new(
+        "Inference scaling under calibrated network profile",
+        &["replicas", "startup (s)", "wall (s)", "req/s", "speedup"],
+    );
+    let mut base = None;
+    for (round, replicas) in [1u32, 2, 4].into_iter().enumerate() {
+        let t_start = Instant::now();
+        let inf = kml.deploy_inference(
+            result_id,
+            replicas,
+            &format!("sc-in-{round}"),
+            &format!("sc-out-{round}"),
+        )?;
+        let startup = t_start.elapsed();
+        let mut client = kml.inference_client(&inf, ClientLocality::External)?;
+
+        let t0 = Instant::now();
+        let mut keys = Vec::with_capacity(requests);
+        for s in &test.samples {
+            keys.push(client.send(&s.features)?);
+        }
+        for key in &keys {
+            client.await_key(key, Duration::from_secs(60))?;
+        }
+        let wall = t0.elapsed();
+        let rps = requests as f64 / wall.as_secs_f64();
+        let speedup = match base {
+            None => {
+                base = Some(rps);
+                1.0
+            }
+            Some(b) => rps / b,
+        };
+        t.row(&[
+            replicas.to_string(),
+            format!("{:.3}", startup.as_secs_f64()),
+            format!("{:.3}", wall.as_secs_f64()),
+            format!("{:.0}", rps),
+            format!("{:.2}x", speedup),
+        ]);
+        kml.stop_inference(inf.id)?;
+    }
+    t.print();
+    kml.shutdown();
+    Ok(())
+}

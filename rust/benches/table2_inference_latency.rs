@@ -1,0 +1,162 @@
+//! **Table II** — Inference latency response (s).
+//!
+//! Paper (single record round-trip): normal 0.079 / data streams 0.374 /
+//! data streams & containerization 0.335.
+//!
+//! The paper's inversion — containerized inference is *faster* than
+//! plain streams — is a network-topology effect ("Kafka is deployed in
+//! Kubernetes and thereby the network delay is smaller"): the
+//! containerized replica reaches the broker over the in-cluster network,
+//! while the plain-script replica pays the external link on both of its
+//! legs. The calibrated NetProfile reproduces exactly that.
+//!
+//! Modes:
+//!   * **normal** — direct `Engine::predict` per record (no broker);
+//!   * **data streams** — replica runs as a plain thread with EXTERNAL
+//!     broker locality; client external;
+//!   * **streams & containerization** — replica runs as an orchestrator
+//!     pod with IN-CLUSTER locality; client external. (Startup cost is
+//!     not part of per-request latency, matching the paper.)
+
+use kafka_ml::benchkit::{Bench, Table};
+use kafka_ml::broker::{BrokerConfig, ClientLocality, NetProfile};
+use kafka_ml::coordinator::inference::{run_inference_replica, InferenceReplicaConfig};
+use kafka_ml::coordinator::{KafkaMl, KafkaMlConfig, TrainParams};
+use kafka_ml::exec::CancelToken;
+use kafka_ml::json::Json;
+use kafka_ml::ml::hcopd_dataset;
+use kafka_ml::orchestrator::OrchestratorCosts;
+use kafka_ml::runtime::Engine;
+use std::time::Duration;
+
+fn raw() -> Json {
+    Json::obj(vec![
+        ("dtype", Json::str("f32")),
+        ("shape", Json::arr(vec![Json::from(8u64)])),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let net = NetProfile::calibrated();
+    println!("Table II reproduction — single-record inference round trips");
+    println!(
+        "calibration: external {}µs / in-cluster {}µs per leg",
+        net.external_one_way.as_micros(),
+        net.in_cluster_one_way.as_micros()
+    );
+    let requests = 100usize;
+    let test = hcopd_dataset(requests, 8, 50);
+
+    // Shared platform: train one model to serve.
+    let kml = KafkaMl::start(KafkaMlConfig {
+        broker: BrokerConfig { net, ..Default::default() },
+        costs: OrchestratorCosts::calibrated(),
+        ..Default::default()
+    })?;
+    let model = kml.create_model("t2")?;
+    let conf = kml.create_configuration("t2", &[model])?;
+    let dep = kml.deploy_training(conf, &TrainParams { epochs: 3, ..Default::default() })?;
+    let train = hcopd_dataset(200, 8, 4);
+    kml.send_stream(
+        dep.id, &train.samples, "t2-data", "RAW", &raw(), 0.0,
+        ClientLocality::External,
+    )?;
+    let results = kml.wait_training(&dep, Duration::from_secs(600))?;
+    let result_id = results[0].id;
+
+    // ---- mode 1: normal (direct engine) ---------------------------------
+    let engine = Engine::load("artifacts")?;
+    let params_host = kml.backend().download_model(result_id)?;
+    let params = engine.inference_params(&params_host)?;
+    let bench = Bench::new(10, requests);
+    let mut i = 0usize;
+    let normal = bench.run(|| {
+        let s = &test.samples[i % requests];
+        let _ = engine.predict(&params, &s.features, 1).unwrap();
+        i += 1;
+    });
+
+    // ---- mode 2: data streams (replica as plain external process) --------
+    let replica_cfg = InferenceReplicaConfig {
+        inference_id: 9001,
+        result_id,
+        artifact_dir: "artifacts".into(),
+        backend_url: kml.backend_url().to_string(),
+        input_topic: "t2-in-plain".into(),
+        output_topic: "t2-out-plain".into(),
+        input_format: "RAW".into(),
+        input_config: raw(),
+        locality: ClientLocality::External, // plain script outside the cluster
+        max_poll: 32,
+    };
+    let cancel = CancelToken::new();
+    let cluster = kml.cluster.clone();
+    let cfg2 = replica_cfg.clone();
+    let c2 = cancel.clone();
+    let handle = std::thread::spawn(move || {
+        run_inference_replica(&cluster, &cfg2, "plain-replica", &c2).ok();
+    });
+    let mut client = kml
+        .inference_client(
+            &kafka_ml::registry::InferenceDeployment {
+                id: 9001,
+                result_id,
+                replicas: 1,
+                input_topic: "t2-in-plain".into(),
+                output_topic: "t2-out-plain".into(),
+                input_format: "RAW".into(),
+                input_config: raw(),
+            },
+            ClientLocality::External,
+        )?;
+    let mut i = 0usize;
+    let streams = bench.run(|| {
+        let s = &test.samples[i % requests];
+        client.request(&s.features, Duration::from_secs(10)).unwrap();
+        i += 1;
+    });
+    cancel.cancel();
+    handle.join().ok();
+
+    // ---- mode 3: streams & containerization ------------------------------
+    let inf = kml.deploy_inference(result_id, 1, "t2-in-pod", "t2-out-pod")?;
+    let mut client = kml.inference_client(&inf, ClientLocality::External)?;
+    let mut i = 0usize;
+    let containers = bench.run(|| {
+        let s = &test.samples[i % requests];
+        client.request(&s.features, Duration::from_secs(10)).unwrap();
+        i += 1;
+    });
+    kml.stop_inference(inf.id)?;
+
+    let mut t = Table::new(
+        "TABLE II — Inference latency response (s)",
+        &["", "Normal", "Data streams", "Data streams & containerization"],
+    );
+    t.row(&[
+        "measured".into(),
+        format!("{:.5}", normal.mean_secs()),
+        format!("{:.5}", streams.mean_secs()),
+        format!("{:.5}", containers.mean_secs()),
+    ]);
+    t.row(&[
+        "paper".into(),
+        "0.079".into(),
+        "0.374".into(),
+        "0.335".into(),
+    ]);
+    t.print();
+    println!(
+        "\nshape check: streams/normal = {:.2}x (paper 4.73x), \
+         containers/streams = {:.2}x (paper 0.90x — the in-cluster inversion)",
+        streams.mean_secs() / normal.mean_secs(),
+        containers.mean_secs() / streams.mean_secs(),
+    );
+    assert!(streams.mean > normal.mean);
+    assert!(
+        containers.mean < streams.mean,
+        "containerized inference must be FASTER than plain streams (in-cluster net)"
+    );
+    kml.shutdown();
+    Ok(())
+}

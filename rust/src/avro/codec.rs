@@ -1,0 +1,363 @@
+//! Avro binary encoding/decoding (spec-faithful for the supported
+//! subset): zigzag varints, IEEE754 little-endian floats, length-prefixed
+//! strings/bytes, block-encoded arrays, field-ordered records.
+
+use super::schema::{AvroType, Schema};
+use super::AvroValue;
+use anyhow::{anyhow, bail, Result};
+
+// ---- varint / zigzag ---------------------------------------------------------
+
+fn write_varint(mut n: u64, out: &mut Vec<u8>) {
+    loop {
+        let b = (n & 0x7f) as u8;
+        n >>= 7;
+        if n == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn zigzag(n: i64) -> u64 {
+    ((n << 1) ^ (n >> 63)) as u64
+}
+
+fn unzigzag(n: u64) -> i64 {
+    ((n >> 1) as i64) ^ -((n & 1) as i64)
+}
+
+pub(crate) fn write_long(n: i64, out: &mut Vec<u8>) {
+    write_varint(zigzag(n), out);
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("truncated avro datum at byte {}", self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn varint(&mut self) -> Result<u64> {
+        let mut shift = 0u32;
+        let mut out = 0u64;
+        loop {
+            let b = self.take(1)?[0];
+            out |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(out);
+            }
+            shift += 7;
+            if shift > 63 {
+                bail!("varint overflow");
+            }
+        }
+    }
+
+    fn long(&mut self) -> Result<i64> {
+        Ok(unzigzag(self.varint()?))
+    }
+}
+
+// ---- encode ---------------------------------------------------------------------
+
+/// Encode `value` under `schema` (top-level record).
+pub fn encode(schema: &Schema, value: &AvroValue) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    encode_record(schema, value, &mut out)?;
+    Ok(out)
+}
+
+fn encode_record(schema: &Schema, value: &AvroValue, out: &mut Vec<u8>) -> Result<()> {
+    let AvroValue::Record(fields) = value else {
+        bail!("schema '{}' expects a record", schema.name);
+    };
+    if fields.len() != schema.fields.len() {
+        bail!(
+            "record '{}': {} fields given, schema has {}",
+            schema.name,
+            fields.len(),
+            schema.fields.len()
+        );
+    }
+    for ((fname, fval), fschema) in fields.iter().zip(&schema.fields) {
+        if fname != &fschema.name {
+            bail!(
+                "record '{}': field '{}' out of order (schema wants '{}')",
+                schema.name,
+                fname,
+                fschema.name
+            );
+        }
+        encode_value(&fschema.ty, fval, out)?;
+    }
+    Ok(())
+}
+
+fn encode_value(ty: &AvroType, value: &AvroValue, out: &mut Vec<u8>) -> Result<()> {
+    match (ty, value) {
+        (AvroType::Boolean, AvroValue::Boolean(b)) => out.push(u8::from(*b)),
+        (AvroType::Int, AvroValue::Int(v)) => write_long(*v as i64, out),
+        (AvroType::Long, AvroValue::Long(v)) => write_long(*v, out),
+        (AvroType::Float, AvroValue::Float(v)) => out.extend_from_slice(&v.to_le_bytes()),
+        (AvroType::Double, AvroValue::Double(v)) => out.extend_from_slice(&v.to_le_bytes()),
+        (AvroType::Str, AvroValue::Str(s)) => {
+            write_long(s.len() as i64, out);
+            out.extend_from_slice(s.as_bytes());
+        }
+        (AvroType::Bytes, AvroValue::Bytes(b)) => {
+            write_long(b.len() as i64, out);
+            out.extend_from_slice(b);
+        }
+        (AvroType::Array(item_ty), AvroValue::Array(items)) => {
+            if !items.is_empty() {
+                write_long(items.len() as i64, out);
+                for item in items {
+                    encode_value(item_ty, item, out)?;
+                }
+            }
+            out.push(0); // end of blocks
+        }
+        (AvroType::Record(schema), rec) => encode_record(schema, rec, out)?,
+        (ty, val) => bail!("type mismatch: schema {ty:?} vs value {val:?}"),
+    }
+    Ok(())
+}
+
+// ---- decode ---------------------------------------------------------------------
+
+/// Decode one datum under `schema`; errors on trailing bytes.
+pub fn decode(schema: &Schema, bytes: &[u8]) -> Result<AvroValue> {
+    let mut r = Reader { bytes, pos: 0 };
+    let v = decode_record(schema, &mut r)?;
+    if r.pos != bytes.len() {
+        bail!("trailing bytes after avro datum ({} of {})", r.pos, bytes.len());
+    }
+    Ok(v)
+}
+
+/// Decode one datum, returning the value and the bytes consumed (for
+/// concatenated datum streams).
+pub fn decode_prefix(schema: &Schema, bytes: &[u8]) -> Result<(AvroValue, usize)> {
+    let mut r = Reader { bytes, pos: 0 };
+    let v = decode_record(schema, &mut r)?;
+    Ok((v, r.pos))
+}
+
+fn decode_record(schema: &Schema, r: &mut Reader) -> Result<AvroValue> {
+    let mut fields = Vec::with_capacity(schema.fields.len());
+    for f in &schema.fields {
+        fields.push((f.name.clone(), decode_value(&f.ty, r)?));
+    }
+    Ok(AvroValue::Record(fields))
+}
+
+fn decode_value(ty: &AvroType, r: &mut Reader) -> Result<AvroValue> {
+    Ok(match ty {
+        AvroType::Boolean => AvroValue::Boolean(match r.take(1)?[0] {
+            0 => false,
+            1 => true,
+            b => bail!("invalid boolean byte {b}"),
+        }),
+        AvroType::Int => {
+            let v = r.long()?;
+            AvroValue::Int(
+                i32::try_from(v).map_err(|_| anyhow!("int out of range: {v}"))?,
+            )
+        }
+        AvroType::Long => AvroValue::Long(r.long()?),
+        AvroType::Float => {
+            let b = r.take(4)?;
+            AvroValue::Float(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        }
+        AvroType::Double => {
+            let b = r.take(8)?;
+            AvroValue::Double(f64::from_le_bytes([
+                b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+            ]))
+        }
+        AvroType::Str => {
+            let len = r.long()?;
+            if len < 0 {
+                bail!("negative string length");
+            }
+            AvroValue::Str(String::from_utf8(r.take(len as usize)?.to_vec())?)
+        }
+        AvroType::Bytes => {
+            let len = r.long()?;
+            if len < 0 {
+                bail!("negative bytes length");
+            }
+            AvroValue::Bytes(r.take(len as usize)?.to_vec())
+        }
+        AvroType::Array(item_ty) => {
+            let mut items = Vec::new();
+            loop {
+                let mut count = r.long()?;
+                if count == 0 {
+                    break;
+                }
+                if count < 0 {
+                    // Negative count: block size in bytes follows (spec).
+                    count = -count;
+                    let _block_bytes = r.long()?;
+                }
+                for _ in 0..count {
+                    items.push(decode_value(item_ty, r)?);
+                }
+            }
+            AvroValue::Array(items)
+        }
+        AvroType::Record(schema) => decode_record(schema, r)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::avro::Schema;
+
+    fn hcopd_schema() -> Schema {
+        Schema::parse_str(
+            r#"{"type":"record","name":"copd","fields":[
+                {"name":"age","type":"int"},
+                {"name":"gender","type":"int"},
+                {"name":"smoking","type":"int"},
+                {"name":"sensors","type":{"type":"array","items":"float"}}]}"#,
+        )
+        .unwrap()
+    }
+
+    fn hcopd_value() -> AvroValue {
+        AvroValue::Record(vec![
+            ("age".into(), AvroValue::Int(63)),
+            ("gender".into(), AvroValue::Int(1)),
+            ("smoking".into(), AvroValue::Int(2)),
+            (
+                "sensors".into(),
+                AvroValue::Array(vec![
+                    AvroValue::Float(0.25),
+                    AvroValue::Float(-1.5),
+                    AvroValue::Float(3.75),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn roundtrip_hcopd_record() {
+        let s = hcopd_schema();
+        let v = hcopd_value();
+        let bytes = encode(&s, &v).unwrap();
+        assert_eq!(decode(&s, &bytes).unwrap(), v);
+    }
+
+    #[test]
+    fn zigzag_known_values() {
+        // Avro spec examples: 0→0, -1→1, 1→2, -2→3, 2→4.
+        for (n, z) in [(0i64, 0u64), (-1, 1), (1, 2), (-2, 3), (2, 4)] {
+            assert_eq!(zigzag(n), z);
+            assert_eq!(unzigzag(z), n);
+        }
+    }
+
+    #[test]
+    fn int_encoding_matches_spec() {
+        // 63 zigzags to 126 = 0x7e, one byte.
+        let s = Schema::parse_str(
+            r#"{"type":"record","name":"x","fields":[{"name":"a","type":"int"}]}"#,
+        )
+        .unwrap();
+        let bytes = encode(&s, &AvroValue::Record(vec![("a".into(), AvroValue::Int(63))]))
+            .unwrap();
+        assert_eq!(bytes, vec![0x7e]);
+    }
+
+    #[test]
+    fn empty_array_is_single_zero() {
+        let s = Schema::parse_str(
+            r#"{"type":"record","name":"x","fields":[
+                {"name":"a","type":{"type":"array","items":"int"}}]}"#,
+        )
+        .unwrap();
+        let bytes =
+            encode(&s, &AvroValue::Record(vec![("a".into(), AvroValue::Array(vec![]))]))
+                .unwrap();
+        assert_eq!(bytes, vec![0]);
+        let back = decode(&s, &bytes).unwrap();
+        assert_eq!(back.field("a"), Some(&AvroValue::Array(vec![])));
+    }
+
+    #[test]
+    fn decode_handles_negative_block_counts() {
+        // Encode an array block with negative count + byte size manually.
+        let s = Schema::parse_str(
+            r#"{"type":"record","name":"x","fields":[
+                {"name":"a","type":{"type":"array","items":"int"}}]}"#,
+        )
+        .unwrap();
+        let mut bytes = Vec::new();
+        write_long(-2, &mut bytes); // 2 items, negative => size follows
+        write_long(2, &mut bytes); // block byte size
+        write_long(5, &mut bytes); // item 5
+        write_long(7, &mut bytes); // item 7
+        write_long(0, &mut bytes); // end
+        let v = decode(&s, &bytes).unwrap();
+        assert_eq!(
+            v.field("a"),
+            Some(&AvroValue::Array(vec![AvroValue::Int(5), AvroValue::Int(7)]))
+        );
+    }
+
+    #[test]
+    fn rejects_type_mismatch_and_truncation() {
+        let s = hcopd_schema();
+        let bad = AvroValue::Record(vec![("age".into(), AvroValue::Str("old".into()))]);
+        assert!(encode(&s, &bad).is_err());
+        let bytes = encode(&s, &hcopd_value()).unwrap();
+        assert!(decode(&s, &bytes[..bytes.len() - 2]).is_err());
+        let mut extra = bytes.clone();
+        extra.push(9);
+        assert!(decode(&s, &extra).is_err());
+    }
+
+    #[test]
+    fn strings_and_bytes_roundtrip() {
+        let s = Schema::parse_str(
+            r#"{"type":"record","name":"x","fields":[
+                {"name":"s","type":"string"},{"name":"b","type":"bytes"},
+                {"name":"ok","type":"boolean"},{"name":"d","type":"double"},
+                {"name":"l","type":"long"}]}"#,
+        )
+        .unwrap();
+        let v = AvroValue::Record(vec![
+            ("s".into(), AvroValue::Str("héllo".into())),
+            ("b".into(), AvroValue::Bytes(vec![0, 255, 128])),
+            ("ok".into(), AvroValue::Boolean(true)),
+            ("d".into(), AvroValue::Double(-2.75)),
+            ("l".into(), AvroValue::Long(1 << 40)),
+        ]);
+        let bytes = encode(&s, &v).unwrap();
+        assert_eq!(decode(&s, &bytes).unwrap(), v);
+    }
+
+    #[test]
+    fn decode_prefix_reports_consumed() {
+        let s = hcopd_schema();
+        let mut bytes = encode(&s, &hcopd_value()).unwrap();
+        let len1 = bytes.len();
+        bytes.extend(encode(&s, &hcopd_value()).unwrap());
+        let (v, used) = decode_prefix(&s, &bytes).unwrap();
+        assert_eq!(used, len1);
+        assert_eq!(v, hcopd_value());
+    }
+}

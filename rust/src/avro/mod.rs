@@ -1,0 +1,112 @@
+//! Apache Avro substrate: schemas (parsed from JSON) and the binary
+//! encoding, as used by Kafka-ML for "complex and multi-input datasets
+//! where a scheme specifies how the data stream is decoded" (§III-D).
+//!
+//! Implemented subset (everything the HCOPD validation needs, faithful
+//! to the Avro 1.11 spec encoding):
+//! primitives `boolean`/`int`/`long`/`float`/`double`/`string`/`bytes`,
+//! `array` of any supported type, and (nested) `record`s. Ints/longs are
+//! zigzag-varint; arrays are block-encoded with a zero terminator.
+
+mod codec;
+mod schema;
+
+pub use codec::{decode, decode_prefix, encode};
+pub use schema::{AvroType, Field, Schema};
+
+/// A decoded Avro value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AvroValue {
+    Boolean(bool),
+    Int(i32),
+    Long(i64),
+    Float(f32),
+    Double(f64),
+    Str(String),
+    Bytes(Vec<u8>),
+    Array(Vec<AvroValue>),
+    Record(Vec<(String, AvroValue)>),
+}
+
+impl AvroValue {
+    /// Numeric coercion to f32 — Kafka-ML flattens decoded records into
+    /// model feature vectors.
+    pub fn as_f32(&self) -> Option<f32> {
+        match self {
+            AvroValue::Boolean(b) => Some(if *b { 1.0 } else { 0.0 }),
+            AvroValue::Int(v) => Some(*v as f32),
+            AvroValue::Long(v) => Some(*v as f32),
+            AvroValue::Float(v) => Some(*v),
+            AvroValue::Double(v) => Some(*v as f32),
+            _ => None,
+        }
+    }
+
+    pub fn field(&self, name: &str) -> Option<&AvroValue> {
+        match self {
+            AvroValue::Record(fields) => {
+                fields.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Depth-first flatten of all numeric leaves into `out` (record
+    /// fields in schema order, arrays in element order).
+    pub fn flatten_numeric(&self, out: &mut Vec<f32>) {
+        match self {
+            AvroValue::Record(fields) => {
+                for (_, v) in fields {
+                    v.flatten_numeric(out);
+                }
+            }
+            AvroValue::Array(items) => {
+                for v in items {
+                    v.flatten_numeric(out);
+                }
+            }
+            other => {
+                if let Some(f) = other.as_f32() {
+                    out.push(f);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn as_f32_coercions() {
+        assert_eq!(AvroValue::Boolean(true).as_f32(), Some(1.0));
+        assert_eq!(AvroValue::Int(-3).as_f32(), Some(-3.0));
+        assert_eq!(AvroValue::Double(2.5).as_f32(), Some(2.5));
+        assert_eq!(AvroValue::Str("x".into()).as_f32(), None);
+    }
+
+    #[test]
+    fn flatten_recurses_in_order() {
+        let v = AvroValue::Record(vec![
+            ("age".into(), AvroValue::Int(64)),
+            (
+                "sensors".into(),
+                AvroValue::Array(vec![AvroValue::Float(0.5), AvroValue::Float(1.5)]),
+            ),
+            ("name".into(), AvroValue::Str("skip".into())),
+            ("smoker".into(), AvroValue::Boolean(false)),
+        ]);
+        let mut out = Vec::new();
+        v.flatten_numeric(&mut out);
+        assert_eq!(out, vec![64.0, 0.5, 1.5, 0.0]);
+    }
+
+    #[test]
+    fn field_lookup() {
+        let v = AvroValue::Record(vec![("a".into(), AvroValue::Int(1))]);
+        assert_eq!(v.field("a"), Some(&AvroValue::Int(1)));
+        assert_eq!(v.field("b"), None);
+        assert_eq!(AvroValue::Int(1).field("a"), None);
+    }
+}

@@ -1,0 +1,171 @@
+//! Avro schemas, parsed from their JSON representation — what a Kafka-ML
+//! control message carries in `input_config` (the "data scheme" and
+//! "label scheme" of the paper's HCOPD example).
+
+use crate::json::{parse, Json};
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum AvroType {
+    Boolean,
+    Int,
+    Long,
+    Float,
+    Double,
+    Str,
+    Bytes,
+    Array(Box<AvroType>),
+    Record(Schema),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Field {
+    pub name: String,
+    pub ty: AvroType,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schema {
+    pub name: String,
+    pub fields: Vec<Field>,
+}
+
+impl Schema {
+    /// Parse a schema from its JSON text, e.g.
+    /// `{"type":"record","name":"copd","fields":[{"name":"age","type":"int"}]}`.
+    pub fn parse_str(text: &str) -> Result<Schema> {
+        let j = parse(text).map_err(|e| anyhow!("avro schema: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Schema> {
+        match parse_type(j)? {
+            AvroType::Record(s) => Ok(s),
+            other => bail!("top-level avro schema must be a record, got {other:?}"),
+        }
+    }
+
+    /// Number of numeric leaves (the feature-vector width this schema
+    /// flattens to).
+    pub fn numeric_width(&self) -> Option<usize> {
+        let mut w = 0;
+        for f in &self.fields {
+            w += numeric_width_of(&f.ty)?;
+        }
+        Some(w)
+    }
+}
+
+fn numeric_width_of(ty: &AvroType) -> Option<usize> {
+    match ty {
+        AvroType::Boolean
+        | AvroType::Int
+        | AvroType::Long
+        | AvroType::Float
+        | AvroType::Double => Some(1),
+        AvroType::Str | AvroType::Bytes => Some(0),
+        AvroType::Array(_) => None, // variable length
+        AvroType::Record(s) => s.numeric_width(),
+    }
+}
+
+fn parse_type(j: &Json) -> Result<AvroType> {
+    match j {
+        Json::Str(s) => parse_primitive(s),
+        Json::Obj(_) => {
+            let ty = j.req_str("type")?;
+            match ty {
+                "record" => {
+                    let name = j.get("name").as_str().unwrap_or("record").to_string();
+                    let fields = j
+                        .get("fields")
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("record '{name}' missing fields[]"))?
+                        .iter()
+                        .map(|f| {
+                            Ok(Field {
+                                name: f.req_str("name")?.to_string(),
+                                ty: parse_type(f.get("type"))?,
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    if fields.is_empty() {
+                        bail!("record '{name}' has no fields");
+                    }
+                    Ok(AvroType::Record(Schema { name, fields }))
+                }
+                "array" => Ok(AvroType::Array(Box::new(parse_type(j.get("items"))?))),
+                prim => parse_primitive(prim),
+            }
+        }
+        other => bail!("invalid avro type node: {other}"),
+    }
+}
+
+fn parse_primitive(s: &str) -> Result<AvroType> {
+    Ok(match s {
+        "boolean" => AvroType::Boolean,
+        "int" => AvroType::Int,
+        "long" => AvroType::Long,
+        "float" => AvroType::Float,
+        "double" => AvroType::Double,
+        "string" => AvroType::Str,
+        "bytes" => AvroType::Bytes,
+        other => bail!("unsupported avro type '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub const HCOPD_DATA: &str = r#"{
+      "type": "record", "name": "copd_data",
+      "fields": [
+        {"name": "age", "type": "int"},
+        {"name": "gender", "type": "int"},
+        {"name": "smoking", "type": "int"},
+        {"name": "sensors", "type": {"type": "array", "items": "float"}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_hcopd_like_schema() {
+        let s = Schema::parse_str(HCOPD_DATA).unwrap();
+        assert_eq!(s.name, "copd_data");
+        assert_eq!(s.fields.len(), 4);
+        assert_eq!(s.fields[0].ty, AvroType::Int);
+        assert_eq!(s.fields[3].ty, AvroType::Array(Box::new(AvroType::Float)));
+        // Array makes width dynamic.
+        assert_eq!(s.numeric_width(), None);
+    }
+
+    #[test]
+    fn fixed_width_schema() {
+        let s = Schema::parse_str(
+            r#"{"type":"record","name":"label","fields":[{"name":"diagnosis","type":"int"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.numeric_width(), Some(1));
+    }
+
+    #[test]
+    fn nested_records() {
+        let s = Schema::parse_str(
+            r#"{"type":"record","name":"outer","fields":[
+                 {"name":"inner","type":{"type":"record","name":"i","fields":[
+                   {"name":"a","type":"float"},{"name":"b","type":"double"}]}},
+                 {"name":"tag","type":"string"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.numeric_width(), Some(2)); // strings contribute 0
+    }
+
+    #[test]
+    fn rejects_bad_schemas() {
+        assert!(Schema::parse_str("3").is_err());
+        assert!(Schema::parse_str(r#"{"type":"enum"}"#).is_err());
+        assert!(Schema::parse_str(r#"{"type":"record","name":"x","fields":[]}"#).is_err());
+        assert!(Schema::parse_str(r#""int""#).is_err()); // not a record at top
+    }
+}

@@ -1,0 +1,218 @@
+//! Bench harness (criterion is not in the offline vendor set).
+//!
+//! Provides warmup + timed iterations with mean/σ/p50/p99, and table
+//! rendering that mirrors the layout of the paper's Tables I/II so
+//! `cargo bench` output can be compared line-by-line with the paper.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let n = samples.len();
+        let sum: Duration = samples.iter().sum();
+        let mean = sum / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - mean_s;
+                x * x
+            })
+            .sum::<f64>()
+            / n as f64;
+        let q = |f: f64| samples[((n - 1) as f64 * f).round() as usize];
+        Stats {
+            iters: n,
+            mean,
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+            min: samples[0],
+            p50: q(0.5),
+            p99: q(0.99),
+            max: samples[n - 1],
+        }
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark runner: `warmup` untimed runs, then `iters` timed runs.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, iters: 10 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup, iters }
+    }
+
+    /// Time `f` (each call is one sample).
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let samples = (0..self.iters.max(1))
+            .map(|_| {
+                let t0 = Instant::now();
+                f();
+                t0.elapsed()
+            })
+            .collect();
+        Stats::from_samples(samples)
+    }
+
+    /// Time `f` with per-iteration setup excluded from the measurement.
+    pub fn run_with_setup<S, T, F: FnMut(T)>(
+        &self,
+        mut setup: S,
+        mut f: F,
+    ) -> Stats
+    where
+        S: FnMut() -> T,
+    {
+        for _ in 0..self.warmup {
+            let input = setup();
+            f(input);
+        }
+        let samples = (0..self.iters.max(1))
+            .map(|_| {
+                let input = setup();
+                let t0 = Instant::now();
+                f(input);
+                t0.elapsed()
+            })
+            .collect();
+        Stats::from_samples(samples)
+    }
+}
+
+/// Simple fixed-width results table (paper-style).
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds like the paper's tables (two decimals).
+pub fn secs(d: Duration) -> String {
+    format!("{:.3}", d.as_secs_f64())
+}
+
+pub fn millis(d: Duration) -> String {
+    format!("{:.2}", d.as_secs_f64() * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = Stats::from_samples(vec![Duration::from_millis(10); 5]);
+        assert_eq!(s.mean, Duration::from_millis(10));
+        assert_eq!(s.std_dev, Duration::ZERO);
+        assert_eq!(s.p50, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let calls = AtomicU32::new(0);
+        let b = Bench::new(3, 7);
+        let s = b.run(|| {
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 10);
+        assert_eq!(s.iters, 7);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = Table::new("Demo", &["mode", "latency (s)"]);
+        t.row(&["normal".into(), "27.37".into()]);
+        t.row(&["data streams".into(), "29.61".into()]);
+        let r = t.render();
+        assert!(r.contains("Demo"));
+        assert!(r.contains("27.37"));
+        assert!(r.contains("data streams"));
+    }
+
+    #[test]
+    fn setup_excluded_from_timing() {
+        let b = Bench::new(0, 3);
+        let s = b.run_with_setup(
+            || std::thread::sleep(Duration::from_millis(20)),
+            |_| {},
+        );
+        // Measured body is empty; must be far below the 20ms setup.
+        assert!(s.mean < Duration::from_millis(5), "{:?}", s.mean);
+    }
+}

@@ -1,0 +1,533 @@
+//! The broker cluster façade: topic management, produce/fetch, group
+//! coordination, broker failure/recovery, retention sweeps.
+//!
+//! One `Cluster` models the peer-to-peer set of Kafka brokers of §II.
+//! It is shared across threads as a [`ClusterHandle`]; every public
+//! operation locks only what it touches (topic map read-lock + one
+//! partition mutex), so producers/consumers on different partitions
+//! proceed in parallel — the property the inference-scaling bench
+//! measures.
+
+use super::group::{Assignor, GroupMembership, GroupState};
+use super::log::LogConfig;
+use super::net::{ClientLocality, NetProfile};
+use super::record::{ConsumedRecord, Record};
+use super::topic::Topic;
+use super::TopicPartition;
+use crate::metrics::Registry;
+use crate::util::clock::{system_clock, SharedClock};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+#[derive(Debug, Clone)]
+pub struct BrokerConfig {
+    pub num_brokers: usize,
+    pub replication_factor: usize,
+    pub default_partitions: u32,
+    pub log: LogConfig,
+    pub net: NetProfile,
+    /// Consumer-group session timeout (heartbeat expiry).
+    pub session_timeout_ms: u64,
+}
+
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        BrokerConfig {
+            num_brokers: 3,
+            replication_factor: 2,
+            default_partitions: 1,
+            log: LogConfig::default(),
+            net: NetProfile::zero(),
+            session_timeout_ms: 10_000,
+        }
+    }
+}
+
+pub type ClusterHandle = Arc<Cluster>;
+
+#[derive(Debug)]
+pub struct Cluster {
+    config: BrokerConfig,
+    clock: SharedClock,
+    topics: RwLock<HashMap<String, Arc<Topic>>>,
+    groups: Mutex<HashMap<String, GroupState>>,
+    broker_up: Vec<std::sync::atomic::AtomicBool>,
+    next_producer_id: AtomicU64,
+    pub metrics: Registry,
+}
+
+impl Cluster {
+    pub fn new(config: BrokerConfig) -> ClusterHandle {
+        Self::with_clock(config, system_clock())
+    }
+
+    pub fn with_clock(config: BrokerConfig, clock: SharedClock) -> ClusterHandle {
+        let broker_up = (0..config.num_brokers.max(1))
+            .map(|_| std::sync::atomic::AtomicBool::new(true))
+            .collect();
+        Arc::new(Cluster {
+            config,
+            clock,
+            topics: RwLock::new(HashMap::new()),
+            groups: Mutex::new(HashMap::new()),
+            broker_up,
+            next_producer_id: AtomicU64::new(1),
+            metrics: Registry::new(),
+        })
+    }
+
+    pub fn config(&self) -> &BrokerConfig {
+        &self.config
+    }
+
+    pub fn clock(&self) -> &SharedClock {
+        &self.clock
+    }
+
+    pub fn net(&self) -> &NetProfile {
+        &self.config.net
+    }
+
+    // ---- topic management -------------------------------------------------
+
+    /// Create a topic (idempotent; existing topics are left untouched).
+    pub fn create_topic(&self, name: &str, partitions: u32) -> Arc<Topic> {
+        self.create_topic_with(name, partitions, self.config.log.clone())
+    }
+
+    /// Create a topic with a per-topic log config (retention overrides).
+    pub fn create_topic_with(
+        &self,
+        name: &str,
+        partitions: u32,
+        log: LogConfig,
+    ) -> Arc<Topic> {
+        let mut topics = self.topics.write().unwrap();
+        topics
+            .entry(name.to_string())
+            .or_insert_with(|| {
+                Arc::new(Topic::new(
+                    name,
+                    partitions.max(1),
+                    self.config.num_brokers,
+                    self.config.replication_factor,
+                    &log,
+                    &self.clock,
+                ))
+            })
+            .clone()
+    }
+
+    pub fn topic(&self, name: &str) -> Option<Arc<Topic>> {
+        self.topics.read().unwrap().get(name).cloned()
+    }
+
+    /// Get-or-create with default partition count (Kafka auto-create).
+    pub fn topic_or_create(&self, name: &str) -> Arc<Topic> {
+        if let Some(t) = self.topic(name) {
+            return t;
+        }
+        self.create_topic(name, self.config.default_partitions)
+    }
+
+    pub fn topic_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.topics.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    // ---- produce / fetch ----------------------------------------------------
+
+    /// Append a batch of records to one partition (one network traversal
+    /// for the whole message set — the paper's batching amortization).
+    /// Returns the base offset of the batch.
+    pub fn produce(
+        &self,
+        topic: &str,
+        partition: u32,
+        records: Vec<Record>,
+        locality: ClientLocality,
+        producer_seq: Option<(u64, u64)>,
+    ) -> Result<u64> {
+        if records.is_empty() {
+            bail!("empty batch");
+        }
+        let t = self.topic_or_create(topic);
+        let pm = t
+            .partition(partition)
+            .ok_or_else(|| anyhow!("unknown partition {topic}:{partition}"))?;
+        self.config.net.traverse(locality); // request leg
+        let mut p = pm.lock().unwrap();
+        let leader = p.leader;
+        if !self.is_broker_up(leader) && p.handle_broker_down(leader).is_none() {
+            bail!("partition {topic}:{partition} offline (no ISR)");
+        }
+        let n = records.len() as u64;
+        let mut base = None;
+        for (i, r) in records.into_iter().enumerate() {
+            let seq = producer_seq.map(|(pid, s)| (pid, s + i as u64));
+            let (off, dup) = p.append(r, seq);
+            if base.is_none() && !dup {
+                base = Some(off);
+            }
+        }
+        drop(p);
+        self.config.net.traverse(locality); // ack leg
+        self.metrics.counter("broker.produce.records").add(n);
+        self.metrics.counter("broker.produce.batches").inc();
+        base.ok_or_else(|| anyhow!("duplicate batch (idempotent replay)"))
+    }
+
+    /// Read up to `max` records from one partition starting at `from`.
+    pub fn fetch(
+        &self,
+        topic: &str,
+        partition: u32,
+        from: u64,
+        max: usize,
+        locality: ClientLocality,
+    ) -> Result<Vec<ConsumedRecord>> {
+        let t = self
+            .topic(topic)
+            .ok_or_else(|| anyhow!("unknown topic {topic}"))?;
+        let pm = t
+            .partition(partition)
+            .ok_or_else(|| anyhow!("unknown partition {topic}:{partition}"))?;
+        self.config.net.traverse(locality);
+        let p = pm.lock().unwrap();
+        let recs = p.read(from, max);
+        drop(p);
+        self.config.net.traverse(locality);
+        self.metrics
+            .counter("broker.fetch.records")
+            .add(recs.len() as u64);
+        Ok(recs
+            .into_iter()
+            .map(|(offset, record)| ConsumedRecord {
+                topic: topic.to_string(),
+                partition,
+                offset,
+                record,
+            })
+            .collect())
+    }
+
+    /// `(earliest, latest)` offsets of a partition.
+    pub fn offsets(&self, topic: &str, partition: u32) -> Result<(u64, u64)> {
+        let t = self
+            .topic(topic)
+            .ok_or_else(|| anyhow!("unknown topic {topic}"))?;
+        let pm = t
+            .partition(partition)
+            .ok_or_else(|| anyhow!("unknown partition {topic}:{partition}"))?;
+        let p = pm.lock().unwrap();
+        Ok((p.earliest_offset(), p.latest_offset()))
+    }
+
+    pub fn alloc_producer_id(&self) -> u64 {
+        self.next_producer_id.fetch_add(1, Ordering::SeqCst)
+    }
+
+    // ---- retention ---------------------------------------------------------
+
+    /// One retention sweep over every partition (Kafka's log cleaner
+    /// runs this periodically). Returns records removed.
+    pub fn run_retention(&self) -> u64 {
+        let topics: Vec<Arc<Topic>> = self.topics.read().unwrap().values().cloned().collect();
+        let mut removed = 0;
+        for t in topics {
+            for pi in 0..t.num_partitions() {
+                removed += t.partition(pi).unwrap().lock().unwrap().enforce_retention();
+            }
+        }
+        self.metrics.counter("broker.retention.removed").add(removed);
+        removed
+    }
+
+    // ---- broker failure / recovery ------------------------------------------
+
+    pub fn is_broker_up(&self, broker: usize) -> bool {
+        self.broker_up
+            .get(broker)
+            .map(|b| b.load(Ordering::SeqCst))
+            .unwrap_or(false)
+    }
+
+    /// Kill a broker: every partition it led fails over to its next ISR.
+    pub fn kill_broker(&self, broker: usize) {
+        if let Some(b) = self.broker_up.get(broker) {
+            b.store(false, Ordering::SeqCst);
+        }
+        let topics: Vec<Arc<Topic>> = self.topics.read().unwrap().values().cloned().collect();
+        for t in topics {
+            for pi in 0..t.num_partitions() {
+                t.partition(pi).unwrap().lock().unwrap().handle_broker_down(broker);
+            }
+        }
+        self.metrics.counter("broker.failures").inc();
+    }
+
+    pub fn restart_broker(&self, broker: usize) {
+        if let Some(b) = self.broker_up.get(broker) {
+            b.store(true, Ordering::SeqCst);
+        }
+        let topics: Vec<Arc<Topic>> = self.topics.read().unwrap().values().cloned().collect();
+        for t in topics {
+            for pi in 0..t.num_partitions() {
+                t.partition(pi).unwrap().lock().unwrap().handle_broker_up(broker);
+            }
+        }
+    }
+
+    // ---- consumer groups -----------------------------------------------------
+
+    /// Join (or create) a group; triggers a rebalance and returns this
+    /// member's assignment.
+    pub fn join_group(
+        &self,
+        group_id: &str,
+        member_id: &str,
+        topics: &[String],
+        assignor: Assignor,
+    ) -> GroupMembership {
+        let mut groups = self.groups.lock().unwrap();
+        let g = groups
+            .entry(group_id.to_string())
+            .or_insert_with(|| GroupState::new(assignor));
+        g.join(member_id, topics, self.clock.now_ms());
+        let partitions = self.group_partitions(g);
+        g.rebalance(&partitions);
+        GroupMembership {
+            generation: g.generation,
+            assigned: g.assignment(member_id),
+        }
+    }
+
+    pub fn leave_group(&self, group_id: &str, member_id: &str) {
+        let mut groups = self.groups.lock().unwrap();
+        if let Some(g) = groups.get_mut(group_id) {
+            if g.leave(member_id) {
+                let partitions = self.group_partitions(g);
+                g.rebalance(&partitions);
+            }
+        }
+    }
+
+    /// Heartbeat; returns the member's current membership (a changed
+    /// generation tells the member to re-fetch its assignment), or None
+    /// if it was evicted.
+    pub fn heartbeat(&self, group_id: &str, member_id: &str) -> Option<GroupMembership> {
+        let mut groups = self.groups.lock().unwrap();
+        let g = groups.get_mut(group_id)?;
+        let now = self.clock.now_ms();
+        if !g.heartbeat(member_id, now) {
+            return None;
+        }
+        let dead = g.expire(now, self.config.session_timeout_ms);
+        if !dead.is_empty() {
+            let partitions = self.group_partitions(g);
+            g.rebalance(&partitions);
+        }
+        Some(GroupMembership {
+            generation: g.generation,
+            assigned: g.assignment(member_id),
+        })
+    }
+
+    /// Expire stale members of every group (coordinator housekeeping).
+    pub fn expire_group_members(&self) -> Vec<(String, String)> {
+        let mut groups = self.groups.lock().unwrap();
+        let now = self.clock.now_ms();
+        let mut evicted = Vec::new();
+        for (gid, g) in groups.iter_mut() {
+            for m in g.expire(now, self.config.session_timeout_ms) {
+                evicted.push((gid.clone(), m));
+            }
+            let partitions = self.group_partitions(g);
+            g.rebalance(&partitions);
+        }
+        evicted
+    }
+
+    pub fn commit_offset(&self, group_id: &str, tp: TopicPartition, offset: u64) {
+        let mut groups = self.groups.lock().unwrap();
+        if let Some(g) = groups.get_mut(group_id) {
+            g.commit(tp, offset);
+        }
+    }
+
+    pub fn committed_offset(&self, group_id: &str, tp: &TopicPartition) -> Option<u64> {
+        let groups = self.groups.lock().unwrap();
+        groups.get(group_id).and_then(|g| g.committed(tp))
+    }
+
+    pub fn group_members(&self, group_id: &str) -> Vec<String> {
+        let groups = self.groups.lock().unwrap();
+        groups
+            .get(group_id)
+            .map(|g| g.member_ids())
+            .unwrap_or_default()
+    }
+
+    fn group_partitions(&self, g: &GroupState) -> Vec<TopicPartition> {
+        let mut out = Vec::new();
+        for t in &g.topics {
+            if let Some(topic) = self.topic(t) {
+                for p in 0..topic.num_partitions() {
+                    out.push((t.clone(), p));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::ManualClock;
+
+    fn cluster() -> ClusterHandle {
+        Cluster::new(BrokerConfig::default())
+    }
+
+    #[test]
+    fn produce_fetch_roundtrip() {
+        let c = cluster();
+        c.create_topic("t", 2);
+        let base = c
+            .produce(
+                "t",
+                0,
+                vec![Record::new(vec![1]), Record::new(vec![2])],
+                ClientLocality::InCluster,
+                None,
+            )
+            .unwrap();
+        assert_eq!(base, 0);
+        let recs = c.fetch("t", 0, 0, 10, ClientLocality::InCluster).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].offset, 1);
+        assert_eq!(recs[1].record.value, vec![2]);
+        // Partition 1 untouched.
+        assert!(c.fetch("t", 1, 0, 10, ClientLocality::InCluster).unwrap().is_empty());
+    }
+
+    #[test]
+    fn auto_create_on_produce() {
+        let c = cluster();
+        c.produce("fresh", 0, vec![Record::new(vec![])], ClientLocality::External, None)
+            .unwrap();
+        assert!(c.topic("fresh").is_some());
+    }
+
+    #[test]
+    fn fetch_unknown_topic_errors() {
+        let c = cluster();
+        assert!(c.fetch("nope", 0, 0, 1, ClientLocality::InCluster).is_err());
+    }
+
+    #[test]
+    fn offsets_reflect_appends() {
+        let c = cluster();
+        c.create_topic("t", 1);
+        assert_eq!(c.offsets("t", 0).unwrap(), (0, 0));
+        for _ in 0..5 {
+            c.produce("t", 0, vec![Record::new(vec![])], ClientLocality::InCluster, None)
+                .unwrap();
+        }
+        assert_eq!(c.offsets("t", 0).unwrap(), (0, 5));
+    }
+
+    #[test]
+    fn leader_failover_keeps_partition_available() {
+        let c = cluster();
+        c.create_topic("t", 1);
+        let leader = {
+            let t = c.topic("t").unwrap();
+            let p = t.partition(0).unwrap().lock().unwrap();
+            p.leader
+        };
+        c.kill_broker(leader);
+        // Still writable through the promoted replica.
+        c.produce("t", 0, vec![Record::new(vec![9])], ClientLocality::InCluster, None)
+            .unwrap();
+        let t = c.topic("t").unwrap();
+        let p = t.partition(0).unwrap().lock().unwrap();
+        assert_ne!(p.leader, leader);
+    }
+
+    #[test]
+    fn group_rebalances_across_members() {
+        let c = cluster();
+        c.create_topic("in", 4);
+        let m1 = c.join_group("g", "m1", &["in".into()], Assignor::RoundRobin);
+        assert_eq!(m1.assigned.len(), 4);
+        let m2 = c.join_group("g", "m2", &["in".into()], Assignor::RoundRobin);
+        assert_eq!(m2.assigned.len(), 2);
+        // m1's assignment changed — visible via heartbeat.
+        let hb = c.heartbeat("g", "m1").unwrap();
+        assert_eq!(hb.assigned.len(), 2);
+        assert!(hb.generation > m1.generation);
+    }
+
+    #[test]
+    fn eviction_on_session_timeout() {
+        let clock = ManualClock::new(0);
+        let c = Cluster::with_clock(
+            BrokerConfig { session_timeout_ms: 1000, ..Default::default() },
+            Arc::new(clock.clone()),
+        );
+        c.create_topic("in", 2);
+        c.join_group("g", "a", &["in".into()], Assignor::Range);
+        c.join_group("g", "b", &["in".into()], Assignor::Range);
+        clock.advance_ms(2000);
+        let evicted = c.expire_group_members();
+        assert_eq!(evicted.len(), 2);
+        assert!(c.group_members("g").is_empty());
+    }
+
+    #[test]
+    fn survivor_inherits_all_partitions_after_eviction() {
+        let clock = ManualClock::new(0);
+        let c = Cluster::with_clock(
+            BrokerConfig { session_timeout_ms: 1000, ..Default::default() },
+            Arc::new(clock.clone()),
+        );
+        c.create_topic("in", 4);
+        c.join_group("g", "a", &["in".into()], Assignor::Range);
+        c.join_group("g", "b", &["in".into()], Assignor::Range);
+        clock.advance_ms(2000);
+        // a heartbeats in time (refreshes), b does not.
+        let hb = c.heartbeat("g", "a").unwrap();
+        assert_eq!(hb.assigned.len(), 4);
+        assert_eq!(c.group_members("g"), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn committed_offsets_roundtrip() {
+        let c = cluster();
+        c.create_topic("in", 1);
+        c.join_group("g", "a", &["in".into()], Assignor::Range);
+        c.commit_offset("g", ("in".into(), 0), 17);
+        assert_eq!(c.committed_offset("g", &("in".into(), 0)), Some(17));
+        assert_eq!(c.committed_offset("g", &("in".into(), 1)), None);
+    }
+
+    #[test]
+    fn exactly_once_dedup_through_cluster() {
+        let c = cluster();
+        c.create_topic("t", 1);
+        let pid = c.alloc_producer_id();
+        c.produce("t", 0, vec![Record::new(vec![1])], ClientLocality::InCluster, Some((pid, 1)))
+            .unwrap();
+        // Retry of the same batch: deduplicated.
+        let err = c
+            .produce("t", 0, vec![Record::new(vec![1])], ClientLocality::InCluster, Some((pid, 1)))
+            .unwrap_err();
+        assert!(err.to_string().contains("duplicate"));
+        assert_eq!(c.offsets("t", 0).unwrap().1, 1);
+    }
+}

@@ -1,0 +1,288 @@
+//! Consumer: manual-assign or group-managed, with seek/poll/commit.
+//!
+//! Two usage modes, matching how Kafka-ML's components consume:
+//!
+//! * **manual assignment + seek** — training jobs read an exact
+//!   `[topic:partition:offset:length]` window named by a control message
+//!   (§V), so they `assign` + `seek` and poll a bounded range;
+//! * **consumer group** — inference replicas `subscribe` to the input
+//!   topic in a shared group; the broker's coordinator spreads
+//!   partitions across replicas and rebalances on failure (§IV-D).
+
+use super::cluster::ClusterHandle;
+use super::group::Assignor;
+use super::net::ClientLocality;
+use super::record::ConsumedRecord;
+use super::TopicPartition;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+pub struct Consumer {
+    cluster: ClusterHandle,
+    locality: ClientLocality,
+    group: Option<(String, String)>, // (group_id, member_id)
+    generation: u64,
+    assigned: Vec<TopicPartition>,
+    positions: HashMap<TopicPartition, u64>,
+    next_assigned_idx: usize,
+}
+
+impl Consumer {
+    pub fn new(cluster: ClusterHandle, locality: ClientLocality) -> Consumer {
+        Consumer {
+            cluster,
+            locality,
+            group: None,
+            generation: 0,
+            assigned: Vec::new(),
+            positions: HashMap::new(),
+            next_assigned_idx: 0,
+        }
+    }
+
+    // ---- manual assignment -------------------------------------------------
+
+    /// Manually assign partitions (no group management).
+    pub fn assign(&mut self, tps: Vec<TopicPartition>) {
+        self.assigned = tps;
+        for tp in &self.assigned {
+            self.positions.entry(tp.clone()).or_insert(0);
+        }
+    }
+
+    /// Position the cursor of one partition.
+    pub fn seek(&mut self, tp: TopicPartition, offset: u64) {
+        self.positions.insert(tp, offset);
+    }
+
+    pub fn position(&self, tp: &TopicPartition) -> u64 {
+        self.positions.get(tp).copied().unwrap_or(0)
+    }
+
+    pub fn assigned(&self) -> &[TopicPartition] {
+        &self.assigned
+    }
+
+    // ---- group management -----------------------------------------------------
+
+    /// Join `group_id` subscribed to `topics`; positions resume from the
+    /// group's committed offsets (or earliest).
+    pub fn subscribe(
+        &mut self,
+        group_id: &str,
+        member_id: &str,
+        topics: &[String],
+        assignor: Assignor,
+    ) {
+        let membership =
+            self.cluster
+                .join_group(group_id, member_id, topics, assignor);
+        self.group = Some((group_id.to_string(), member_id.to_string()));
+        self.generation = membership.generation;
+        self.apply_assignment(membership.assigned);
+    }
+
+    /// Heartbeat; on a generation change the assignment is refreshed.
+    /// Returns false if this member was evicted from the group.
+    pub fn poll_heartbeat(&mut self) -> bool {
+        let Some((gid, mid)) = self.group.clone() else {
+            return true;
+        };
+        match self.cluster.heartbeat(&gid, &mid) {
+            Some(m) => {
+                if m.generation != self.generation {
+                    self.generation = m.generation;
+                    self.apply_assignment(m.assigned);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn apply_assignment(&mut self, assigned: Vec<TopicPartition>) {
+        self.assigned = assigned;
+        self.next_assigned_idx = 0;
+        let gid = self.group.as_ref().map(|(g, _)| g.clone());
+        for tp in &self.assigned {
+            let start = gid
+                .as_ref()
+                .and_then(|g| self.cluster.committed_offset(g, tp))
+                .unwrap_or(0);
+            // Keep an existing local position if it is ahead (we may have
+            // polled past the last commit).
+            let e = self.positions.entry(tp.clone()).or_insert(start);
+            *e = (*e).max(start);
+        }
+    }
+
+    pub fn leave(&mut self) {
+        if let Some((gid, mid)) = self.group.take() {
+            self.cluster.leave_group(&gid, &mid);
+        }
+        self.assigned.clear();
+    }
+
+    // ---- polling ---------------------------------------------------------------
+
+    /// Poll up to `max` records across assigned partitions (round-robin
+    /// fairness between them), advancing local positions.
+    pub fn poll(&mut self, max: usize) -> Result<Vec<ConsumedRecord>> {
+        let mut out = Vec::new();
+        if self.assigned.is_empty() {
+            return Ok(out);
+        }
+        let n = self.assigned.len();
+        for i in 0..n {
+            if out.len() >= max {
+                break;
+            }
+            let tp = self.assigned[(self.next_assigned_idx + i) % n].clone();
+            let pos = self.position(&tp);
+            let recs =
+                self.cluster
+                    .fetch(&tp.0, tp.1, pos, max - out.len(), self.locality)?;
+            if let Some(last) = recs.last() {
+                self.positions.insert(tp.clone(), last.offset + 1);
+            }
+            out.extend(recs);
+        }
+        self.next_assigned_idx = (self.next_assigned_idx + 1) % n;
+        Ok(out)
+    }
+
+    /// Poll, waiting up to `timeout` for at least one record.
+    pub fn poll_wait(&mut self, max: usize, timeout: Duration) -> Result<Vec<ConsumedRecord>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let recs = self.poll(max)?;
+            if !recs.is_empty() || Instant::now() >= deadline {
+                return Ok(recs);
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Commit current positions to the group coordinator.
+    pub fn commit(&self) {
+        if let Some((gid, _)) = &self.group {
+            for (tp, pos) in &self.positions {
+                self.cluster.commit_offset(gid, tp.clone(), *pos);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::{BrokerConfig, Cluster, Record};
+
+    fn cluster_with(topic: &str, parts: u32, records_per_part: u8) -> ClusterHandle {
+        let c = Cluster::new(BrokerConfig::default());
+        c.create_topic(topic, parts);
+        for p in 0..parts {
+            for i in 0..records_per_part {
+                c.produce(
+                    topic,
+                    p,
+                    vec![Record::new(vec![p as u8, i])],
+                    ClientLocality::InCluster,
+                    None,
+                )
+                .unwrap();
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn manual_assign_seek_poll() {
+        let c = cluster_with("t", 1, 10);
+        let mut cons = Consumer::new(c, ClientLocality::InCluster);
+        cons.assign(vec![("t".into(), 0)]);
+        cons.seek(("t".into(), 0), 4);
+        let recs = cons.poll(3).unwrap();
+        assert_eq!(recs.iter().map(|r| r.offset).collect::<Vec<_>>(), vec![4, 5, 6]);
+        // Position advanced.
+        let more = cons.poll(100).unwrap();
+        assert_eq!(more.first().unwrap().offset, 7);
+        assert_eq!(more.len(), 3);
+    }
+
+    #[test]
+    fn poll_round_robins_partitions() {
+        let c = cluster_with("t", 2, 5);
+        let mut cons = Consumer::new(c, ClientLocality::InCluster);
+        cons.assign(vec![("t".into(), 0), ("t".into(), 1)]);
+        let recs = cons.poll(100).unwrap();
+        assert_eq!(recs.len(), 10);
+        let from_p0 = recs.iter().filter(|r| r.partition == 0).count();
+        assert_eq!(from_p0, 5);
+    }
+
+    #[test]
+    fn group_members_split_partitions_without_overlap() {
+        let c = cluster_with("t", 4, 5);
+        let mut a = Consumer::new(c.clone(), ClientLocality::InCluster);
+        let mut b = Consumer::new(c.clone(), ClientLocality::InCluster);
+        a.subscribe("g", "a", &["t".into()], Assignor::RoundRobin);
+        b.subscribe("g", "b", &["t".into()], Assignor::RoundRobin);
+        a.poll_heartbeat();
+        let pa: Vec<_> = a.assigned().to_vec();
+        let pb: Vec<_> = b.assigned().to_vec();
+        assert_eq!(pa.len() + pb.len(), 4);
+        for tp in &pa {
+            assert!(!pb.contains(tp));
+        }
+        // Together they consume everything exactly once.
+        let mut all: Vec<Vec<u8>> = Vec::new();
+        all.extend(a.poll(100).unwrap().into_iter().map(|r| r.record.value));
+        all.extend(b.poll(100).unwrap().into_iter().map(|r| r.record.value));
+        assert_eq!(all.len(), 20);
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 20);
+    }
+
+    #[test]
+    fn committed_offsets_resume_replacement_member() {
+        let c = cluster_with("t", 1, 10);
+        let mut a = Consumer::new(c.clone(), ClientLocality::InCluster);
+        a.subscribe("g", "a", &["t".into()], Assignor::Range);
+        let got = a.poll(4).unwrap();
+        assert_eq!(got.len(), 4);
+        a.commit();
+        a.leave();
+        // Replacement resumes at the committed offset.
+        let mut b = Consumer::new(c, ClientLocality::InCluster);
+        b.subscribe("g", "b", &["t".into()], Assignor::Range);
+        let recs = b.poll(100).unwrap();
+        assert_eq!(recs.first().unwrap().offset, 4);
+        assert_eq!(recs.len(), 6);
+    }
+
+    #[test]
+    fn poll_wait_times_out_empty() {
+        let c = Cluster::new(BrokerConfig::default());
+        c.create_topic("t", 1);
+        let mut cons = Consumer::new(c, ClientLocality::InCluster);
+        cons.assign(vec![("t".into(), 0)]);
+        let t0 = Instant::now();
+        let recs = cons.poll_wait(10, Duration::from_millis(30)).unwrap();
+        assert!(recs.is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn poll_wait_returns_early_with_data() {
+        let c = cluster_with("t", 1, 1);
+        let mut cons = Consumer::new(c, ClientLocality::InCluster);
+        cons.assign(vec![("t".into(), 0)]);
+        let t0 = Instant::now();
+        let recs = cons.poll_wait(10, Duration::from_secs(5)).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+}

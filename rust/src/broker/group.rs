@@ -1,0 +1,274 @@
+//! Consumer groups: the Kafka feature §IV-D's inference replicas exploit
+//! for load balancing and fault tolerance ("matching replicas and
+//! partitions").
+//!
+//! The group coordinator tracks members and their heartbeats, bumps a
+//! generation id on every membership change, and computes partition
+//! assignments with a pluggable assignor (range / round-robin — the two
+//! Kafka ships). Committed offsets are stored per group so a replacement
+//! replica resumes where the dead one stopped.
+
+use super::TopicPartition;
+use crate::util::clock::TimestampMs;
+use std::collections::{BTreeMap, HashMap};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Assignor {
+    /// Contiguous ranges of partitions per member (Kafka default).
+    Range,
+    /// Partitions dealt one-by-one across members.
+    RoundRobin,
+}
+
+/// What a member learns from (re)joining: its generation and partitions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupMembership {
+    pub generation: u64,
+    pub assigned: Vec<TopicPartition>,
+}
+
+#[derive(Debug)]
+struct Member {
+    last_heartbeat: TimestampMs,
+}
+
+#[derive(Debug)]
+pub(crate) struct GroupState {
+    pub assignor: Assignor,
+    pub generation: u64,
+    members: BTreeMap<String, Member>, // BTreeMap => deterministic order
+    assignments: HashMap<String, Vec<TopicPartition>>,
+    pub committed: HashMap<TopicPartition, u64>,
+    /// Topics this group subscribes to (set by the first joiner; later
+    /// joins extend it).
+    pub topics: Vec<String>,
+}
+
+impl GroupState {
+    pub fn new(assignor: Assignor) -> GroupState {
+        GroupState {
+            assignor,
+            generation: 0,
+            members: BTreeMap::new(),
+            assignments: HashMap::new(),
+            committed: HashMap::new(),
+            topics: Vec::new(),
+        }
+    }
+
+    pub fn member_ids(&self) -> Vec<String> {
+        self.members.keys().cloned().collect()
+    }
+
+    pub fn join(&mut self, member_id: &str, topics: &[String], now: TimestampMs) {
+        for t in topics {
+            if !self.topics.contains(t) {
+                self.topics.push(t.clone());
+            }
+        }
+        self.members
+            .insert(member_id.to_string(), Member { last_heartbeat: now });
+        self.generation += 1;
+    }
+
+    pub fn leave(&mut self, member_id: &str) -> bool {
+        if self.members.remove(member_id).is_some() {
+            self.generation += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn heartbeat(&mut self, member_id: &str, now: TimestampMs) -> bool {
+        match self.members.get_mut(member_id) {
+            Some(m) => {
+                m.last_heartbeat = now;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Evict members whose heartbeat is older than `session_ms`;
+    /// returns evicted ids (each eviction bumps the generation).
+    pub fn expire(&mut self, now: TimestampMs, session_ms: u64) -> Vec<String> {
+        let dead: Vec<String> = self
+            .members
+            .iter()
+            .filter(|(_, m)| now.saturating_sub(m.last_heartbeat) > session_ms)
+            .map(|(id, _)| id.clone())
+            .collect();
+        for id in &dead {
+            self.members.remove(id);
+            self.generation += 1;
+        }
+        dead
+    }
+
+    /// Recompute assignments over `partitions` (all partitions of all
+    /// subscribed topics, in topic order).
+    pub fn rebalance(&mut self, partitions: &[TopicPartition]) {
+        self.assignments.clear();
+        let members = self.member_ids();
+        if members.is_empty() {
+            return;
+        }
+        match self.assignor {
+            Assignor::RoundRobin => {
+                for (i, tp) in partitions.iter().enumerate() {
+                    let m = &members[i % members.len()];
+                    self.assignments
+                        .entry(m.clone())
+                        .or_default()
+                        .push(tp.clone());
+                }
+            }
+            Assignor::Range => {
+                // Per topic: contiguous ranges, earlier members get the
+                // remainder — Kafka's RangeAssignor semantics.
+                let mut by_topic: BTreeMap<&str, Vec<&TopicPartition>> = BTreeMap::new();
+                for tp in partitions {
+                    by_topic.entry(tp.0.as_str()).or_default().push(tp);
+                }
+                for (_, tps) in by_topic {
+                    let n = tps.len();
+                    let m = members.len();
+                    let per = n / m;
+                    let extra = n % m;
+                    let mut idx = 0usize;
+                    for (mi, member) in members.iter().enumerate() {
+                        let take = per + usize::from(mi < extra);
+                        for tp in tps.iter().skip(idx).take(take) {
+                            self.assignments
+                                .entry(member.clone())
+                                .or_default()
+                                .push((*tp).clone());
+                        }
+                        idx += take;
+                    }
+                }
+            }
+        }
+        for m in &members {
+            self.assignments.entry(m.clone()).or_default();
+        }
+    }
+
+    pub fn assignment(&self, member_id: &str) -> Vec<TopicPartition> {
+        self.assignments.get(member_id).cloned().unwrap_or_default()
+    }
+
+    pub fn commit(&mut self, tp: TopicPartition, offset: u64) {
+        self.committed.insert(tp, offset);
+    }
+
+    pub fn committed(&self, tp: &TopicPartition) -> Option<u64> {
+        self.committed.get(tp).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tps(topic: &str, n: u32) -> Vec<TopicPartition> {
+        (0..n).map(|p| (topic.to_string(), p)).collect()
+    }
+
+    #[test]
+    fn join_bumps_generation_and_assigns_all() {
+        let mut g = GroupState::new(Assignor::Range);
+        g.join("a", &["t".into()], 0);
+        g.rebalance(&tps("t", 4));
+        assert_eq!(g.generation, 1);
+        assert_eq!(g.assignment("a").len(), 4);
+    }
+
+    #[test]
+    fn range_assignor_contiguous_with_remainder_first() {
+        let mut g = GroupState::new(Assignor::Range);
+        g.join("a", &["t".into()], 0);
+        g.join("b", &["t".into()], 0);
+        g.rebalance(&tps("t", 5));
+        let a = g.assignment("a");
+        let b = g.assignment("b");
+        assert_eq!(a.len(), 3); // gets the remainder
+        assert_eq!(b.len(), 2);
+        // Contiguity.
+        assert_eq!(a.iter().map(|tp| tp.1).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.iter().map(|tp| tp.1).collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    fn round_robin_interleaves() {
+        let mut g = GroupState::new(Assignor::RoundRobin);
+        g.join("a", &["t".into()], 0);
+        g.join("b", &["t".into()], 0);
+        g.rebalance(&tps("t", 4));
+        assert_eq!(
+            g.assignment("a").iter().map(|tp| tp.1).collect::<Vec<_>>(),
+            vec![0, 2]
+        );
+        assert_eq!(
+            g.assignment("b").iter().map(|tp| tp.1).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+    }
+
+    #[test]
+    fn assignment_partitions_the_partition_set() {
+        // Property: every partition to exactly one member, none dropped.
+        for assignor in [Assignor::Range, Assignor::RoundRobin] {
+            for members in 1..6 {
+                for parts in 0..12 {
+                    let mut g = GroupState::new(assignor);
+                    for m in 0..members {
+                        g.join(&format!("m{m}"), &["t".into()], 0);
+                    }
+                    let all = tps("t", parts);
+                    g.rebalance(&all);
+                    let mut seen: Vec<TopicPartition> = g
+                        .member_ids()
+                        .iter()
+                        .flat_map(|m| g.assignment(m))
+                        .collect();
+                    seen.sort();
+                    let mut want = all.clone();
+                    want.sort();
+                    assert_eq!(seen, want, "{assignor:?} m={members} p={parts}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expiry_evicts_stale_members() {
+        let mut g = GroupState::new(Assignor::Range);
+        g.join("a", &["t".into()], 0);
+        g.join("b", &["t".into()], 0);
+        g.heartbeat("a", 10_000);
+        let dead = g.expire(10_001, 5_000);
+        assert_eq!(dead, vec!["b".to_string()]);
+        assert_eq!(g.member_ids(), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn leave_unknown_member_is_noop() {
+        let mut g = GroupState::new(Assignor::Range);
+        let gen0 = g.generation;
+        assert!(!g.leave("ghost"));
+        assert_eq!(g.generation, gen0);
+    }
+
+    #[test]
+    fn commits_survive_rebalance() {
+        let mut g = GroupState::new(Assignor::Range);
+        g.join("a", &["t".into()], 0);
+        g.rebalance(&tps("t", 2));
+        g.commit(("t".into(), 0), 42);
+        g.join("b", &["t".into()], 0);
+        g.rebalance(&tps("t", 2));
+        assert_eq!(g.committed(&("t".into(), 0)), Some(42));
+    }
+}

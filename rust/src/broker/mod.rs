@@ -1,0 +1,44 @@
+//! The Apache Kafka substrate: a from-scratch distributed messaging
+//! system (publish/subscribe over a *distributed log*) providing the
+//! exact feature set §II of the paper depends on:
+//!
+//! * **topics / partitions / replicas** with a peer-to-peer set of
+//!   brokers, per-partition leaders and in-sync-replica (ISR) tracking;
+//! * **the distributed log**: records are retained after consumption
+//!   under a configurable retention policy (`retention.bytes`,
+//!   `retention.ms`, delete *and* compact cleanup policies) so consumers
+//!   can seek anywhere in the log — the property Kafka-ML's stream-reuse
+//!   contribution (§V) is built on;
+//! * **message-set batching** in the producer (linger + batch size) — the
+//!   paper's "high rate of message dispatching" feature;
+//! * **consumer groups** with heartbeats, generations and pluggable
+//!   range/round-robin assignors — what inference replicas use for load
+//!   balancing (§IV-D);
+//! * **delivery semantics**: at-most-once, at-least-once and
+//!   exactly-once (idempotent producer de-duplication);
+//! * a **simulated network profile** (external vs in-cluster link
+//!   latency) so the Tables I/II latency columns can be reproduced on a
+//!   single machine — see DESIGN.md §Table I/II latency model.
+
+mod cluster;
+mod consumer;
+mod group;
+mod log;
+mod net;
+mod partition;
+mod producer;
+mod record;
+mod topic;
+
+pub use cluster::{BrokerConfig, Cluster, ClusterHandle};
+pub use consumer::Consumer;
+pub use group::{Assignor, GroupMembership};
+pub use log::{CleanupPolicy, LogConfig, SegmentedLog};
+pub use net::{ClientLocality, NetProfile};
+pub use partition::Partition;
+pub use producer::{Acks, Producer, ProducerConfig};
+pub use record::{ConsumedRecord, Record};
+pub use topic::Topic;
+
+/// `(topic, partition)` pair used throughout the broker.
+pub type TopicPartition = (String, u32);

@@ -1,0 +1,106 @@
+//! Simulated network profile.
+//!
+//! The paper's Tables I/II compare "data streams" against "data streams &
+//! containerization" and explain the inference inversion by network
+//! topology: *"For inference [latency] is lower since Kafka is deployed
+//! in Kubernetes and thereby the network delay is smaller."* To reproduce
+//! that effect on one machine we model two link classes:
+//!
+//! * **External** — a client outside the cluster (the IoT device/gateway
+//!   of §III-D) talking to the broker service;
+//! * **InCluster** — a pod talking to the broker over the cluster
+//!   network (services resolved in-cluster).
+//!
+//! Each produce/fetch round-trip sleeps the one-way latency of its link
+//! class. Constants are explicit and printed by every bench (DESIGN.md
+//! §Table I/II latency model); with `NetProfile::zero()` the broker adds
+//! no artificial delay (the default for unit tests).
+
+use std::time::Duration;
+
+/// Where a client sits relative to the (simulated) Kubernetes cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientLocality {
+    External,
+    InCluster,
+}
+
+/// One-way link latencies applied per request (produce or fetch batch).
+#[derive(Debug, Clone, Copy)]
+pub struct NetProfile {
+    pub external_one_way: Duration,
+    pub in_cluster_one_way: Duration,
+}
+
+impl NetProfile {
+    /// No artificial latency (unit tests, "normal" mode).
+    pub fn zero() -> NetProfile {
+        NetProfile {
+            external_one_way: Duration::ZERO,
+            in_cluster_one_way: Duration::ZERO,
+        }
+    }
+
+    /// Calibrated defaults for the Tables I/II reproduction: an external
+    /// hop is ~6× an in-cluster hop (LAN client → laptop cluster vs
+    /// veth pair inside it).
+    pub fn calibrated() -> NetProfile {
+        NetProfile {
+            external_one_way: Duration::from_micros(1500),
+            in_cluster_one_way: Duration::from_micros(250),
+        }
+    }
+
+    pub fn one_way(&self, locality: ClientLocality) -> Duration {
+        match locality {
+            ClientLocality::External => self.external_one_way,
+            ClientLocality::InCluster => self.in_cluster_one_way,
+        }
+    }
+
+    /// Block for one link traversal (no-op when zero).
+    pub fn traverse(&self, locality: ClientLocality) {
+        let d = self.one_way(locality);
+        if d > Duration::ZERO {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+impl Default for NetProfile {
+    fn default() -> Self {
+        NetProfile::zero()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_profile_is_free() {
+        let p = NetProfile::zero();
+        let t0 = std::time::Instant::now();
+        for _ in 0..1000 {
+            p.traverse(ClientLocality::External);
+        }
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn calibrated_external_slower_than_in_cluster() {
+        let p = NetProfile::calibrated();
+        assert!(p.one_way(ClientLocality::External) > p.one_way(ClientLocality::InCluster));
+    }
+
+    #[test]
+    fn traverse_sleeps_roughly_one_way() {
+        let p = NetProfile {
+            external_one_way: Duration::from_millis(10),
+            in_cluster_one_way: Duration::ZERO,
+        };
+        let t0 = std::time::Instant::now();
+        p.traverse(ClientLocality::External);
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+    }
+}

@@ -1,0 +1,196 @@
+//! A partition: one segmented log plus replication bookkeeping (leader
+//! broker, replica set, in-sync replicas). Replication is simulated at
+//! metadata level — §IV-F of the paper runs one Kafka broker per pod and
+//! relies on partition replicas for fault tolerance; what matters for
+//! Kafka-ML's behaviour is leader failover, which [`super::Cluster`]
+//! exercises via `kill_broker`.
+
+use super::log::{LogConfig, SegmentedLog};
+use super::record::Record;
+use crate::util::clock::SharedClock;
+use std::collections::HashMap;
+
+/// Idempotent-producer state: highest sequence number seen per producer.
+#[derive(Debug, Default)]
+struct ProducerSeqs {
+    seqs: HashMap<u64, u64>,
+}
+
+#[derive(Debug)]
+pub struct Partition {
+    pub topic: String,
+    pub index: u32,
+    pub leader: usize,
+    pub replicas: Vec<usize>,
+    pub isr: Vec<usize>,
+    log: SegmentedLog,
+    producer_seqs: ProducerSeqs,
+}
+
+impl Partition {
+    pub fn new(
+        topic: &str,
+        index: u32,
+        leader: usize,
+        replicas: Vec<usize>,
+        config: LogConfig,
+        clock: SharedClock,
+    ) -> Partition {
+        let isr = replicas.clone();
+        Partition {
+            topic: topic.to_string(),
+            index,
+            leader,
+            replicas,
+            isr,
+            log: SegmentedLog::new(config, clock),
+            producer_seqs: ProducerSeqs::default(),
+        }
+    }
+
+    /// Append, de-duplicating on `(producer_id, seq)` when provided —
+    /// the exactly-once path. Returns `(offset, was_duplicate)`.
+    pub fn append(
+        &mut self,
+        record: Record,
+        producer_seq: Option<(u64, u64)>,
+    ) -> (u64, bool) {
+        if let Some((pid, seq)) = producer_seq {
+            let last = self.producer_seqs.seqs.get(&pid).copied();
+            if let Some(last_seq) = last {
+                if seq <= last_seq {
+                    // Duplicate of an already-appended batch member.
+                    return (self.log.latest_offset().saturating_sub(1), true);
+                }
+            }
+            self.producer_seqs.seqs.insert(pid, seq);
+        }
+        (self.log.append(record), false)
+    }
+
+    pub fn read(&self, from: u64, max: usize) -> Vec<(u64, Record)> {
+        self.log.read(from, max)
+    }
+
+    pub fn earliest_offset(&self) -> u64 {
+        self.log.earliest_offset()
+    }
+
+    pub fn latest_offset(&self) -> u64 {
+        self.log.latest_offset()
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        self.log.size_bytes()
+    }
+
+    pub fn len(&self) -> u64 {
+        self.log.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.log.is_empty()
+    }
+
+    pub fn enforce_retention(&mut self) -> u64 {
+        self.log.enforce_retention()
+    }
+
+    /// Leader failover: remove `broker` from ISR; if it led, promote the
+    /// next in-sync replica. Returns the new leader (None = offline).
+    pub fn handle_broker_down(&mut self, broker: usize) -> Option<usize> {
+        self.isr.retain(|&b| b != broker);
+        if self.leader == broker {
+            match self.isr.first() {
+                Some(&next) => {
+                    self.leader = next;
+                    Some(next)
+                }
+                None => None,
+            }
+        } else {
+            Some(self.leader)
+        }
+    }
+
+    /// A recovered broker rejoins the ISR.
+    pub fn handle_broker_up(&mut self, broker: usize) {
+        if self.replicas.contains(&broker) && !self.isr.contains(&broker) {
+            self.isr.push(broker);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::system_clock;
+
+    fn part() -> Partition {
+        Partition::new("t", 0, 0, vec![0, 1, 2], LogConfig::default(), system_clock())
+    }
+
+    #[test]
+    fn append_and_read() {
+        let mut p = part();
+        let (o0, dup0) = p.append(Record::new(vec![1]), None);
+        let (o1, _) = p.append(Record::new(vec![2]), None);
+        assert_eq!((o0, o1), (0, 1));
+        assert!(!dup0);
+        assert_eq!(p.read(0, 10).len(), 2);
+    }
+
+    #[test]
+    fn idempotent_dedup() {
+        let mut p = part();
+        let (_, d1) = p.append(Record::new(vec![1]), Some((7, 1)));
+        let (_, d2) = p.append(Record::new(vec![1]), Some((7, 1))); // retry
+        let (_, d3) = p.append(Record::new(vec![2]), Some((7, 2)));
+        assert!(!d1 && d2 && !d3);
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn distinct_producers_do_not_collide() {
+        let mut p = part();
+        p.append(Record::new(vec![1]), Some((1, 1)));
+        let (_, dup) = p.append(Record::new(vec![2]), Some((2, 1)));
+        assert!(!dup);
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn failover_promotes_next_isr() {
+        let mut p = part();
+        assert_eq!(p.leader, 0);
+        assert_eq!(p.handle_broker_down(0), Some(1));
+        assert_eq!(p.leader, 1);
+        assert!(!p.isr.contains(&0));
+    }
+
+    #[test]
+    fn failover_of_non_leader_keeps_leader() {
+        let mut p = part();
+        assert_eq!(p.handle_broker_down(2), Some(0));
+        assert_eq!(p.leader, 0);
+    }
+
+    #[test]
+    fn all_replicas_down_is_offline() {
+        let mut p = part();
+        p.handle_broker_down(1);
+        p.handle_broker_down(2);
+        assert_eq!(p.handle_broker_down(0), None);
+    }
+
+    #[test]
+    fn recovered_broker_rejoins_isr() {
+        let mut p = part();
+        p.handle_broker_down(2);
+        assert_eq!(p.isr, vec![0, 1]);
+        p.handle_broker_up(2);
+        assert_eq!(p.isr, vec![0, 1, 2]);
+        p.handle_broker_up(9); // not a replica: ignored
+        assert_eq!(p.isr, vec![0, 1, 2]);
+    }
+}

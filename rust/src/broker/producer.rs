@@ -1,0 +1,280 @@
+//! Producer with message-set batching and delivery semantics.
+//!
+//! §II of the paper credits Kafka's dispatch rate to *message set
+//! abstractions* (batching amortizes the network round trip) and the
+//! broker's QoS policies ("at most once", "at least once", "exactly
+//! one"). This producer implements all of it:
+//!
+//! * records accumulate per partition until `batch_size` (or an explicit
+//!   `flush`), then travel as one batch → one simulated network
+//!   traversal;
+//! * `Acks::AtMostOnce` fires and forgets (send errors are swallowed);
+//! * `Acks::AtLeastOnce` retries the whole batch on failure (duplicates
+//!   possible);
+//! * `Acks::ExactlyOnce` retries with an idempotent `(producer_id, seq)`
+//!   so broker-side dedup keeps the log duplicate-free.
+
+use super::cluster::ClusterHandle;
+use super::net::ClientLocality;
+use super::record::Record;
+use anyhow::Result;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Acks {
+    AtMostOnce,
+    AtLeastOnce,
+    ExactlyOnce,
+}
+
+#[derive(Debug, Clone)]
+pub struct ProducerConfig {
+    /// Flush a partition's buffer at this many records.
+    pub batch_size: usize,
+    pub acks: Acks,
+    pub locality: ClientLocality,
+    /// Retries for (at-least/exactly)-once on send failure.
+    pub max_retries: usize,
+}
+
+impl Default for ProducerConfig {
+    fn default() -> Self {
+        ProducerConfig {
+            batch_size: 64,
+            acks: Acks::AtLeastOnce,
+            locality: ClientLocality::External,
+            max_retries: 3,
+        }
+    }
+}
+
+pub struct Producer {
+    cluster: ClusterHandle,
+    config: ProducerConfig,
+    producer_id: u64,
+    /// Per-partition sequence counter for idempotence.
+    seqs: HashMap<(String, u32), u64>,
+    buffers: HashMap<(String, u32), Vec<Record>>,
+    round_robin: u64,
+}
+
+impl Producer {
+    pub fn new(cluster: ClusterHandle, config: ProducerConfig) -> Producer {
+        let producer_id = cluster.alloc_producer_id();
+        Producer {
+            cluster,
+            config,
+            producer_id,
+            seqs: HashMap::new(),
+            buffers: HashMap::new(),
+            round_robin: 0,
+        }
+    }
+
+    pub fn with_defaults(cluster: ClusterHandle) -> Producer {
+        Producer::new(cluster, ProducerConfig::default())
+    }
+
+    pub fn id(&self) -> u64 {
+        self.producer_id
+    }
+
+    /// Buffer a record; flushes its partition when the batch fills.
+    /// Returns the partition it was routed to.
+    pub fn send(&mut self, topic: &str, record: Record) -> Result<u32> {
+        let t = self.cluster.topic_or_create(topic);
+        let partition = t.route(&record, self.round_robin);
+        self.round_robin += 1;
+        let key = (topic.to_string(), partition);
+        let buf = self.buffers.entry(key.clone()).or_default();
+        buf.push(record);
+        if buf.len() >= self.config.batch_size {
+            self.flush_partition(&key)?;
+        }
+        Ok(partition)
+    }
+
+    /// Send straight to a specific partition (bypasses routing).
+    pub fn send_to(&mut self, topic: &str, partition: u32, record: Record) -> Result<()> {
+        self.cluster.topic_or_create(topic);
+        let key = (topic.to_string(), partition);
+        let buf = self.buffers.entry(key.clone()).or_default();
+        buf.push(record);
+        if buf.len() >= self.config.batch_size {
+            self.flush_partition(&key)?;
+        }
+        Ok(())
+    }
+
+    /// Flush all buffered partitions.
+    pub fn flush(&mut self) -> Result<()> {
+        let keys: Vec<(String, u32)> = self
+            .buffers
+            .iter()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in keys {
+            self.flush_partition(&k)?;
+        }
+        Ok(())
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.buffers.values().map(|v| v.len()).sum()
+    }
+
+    fn flush_partition(&mut self, key: &(String, u32)) -> Result<()> {
+        let batch = match self.buffers.get_mut(key) {
+            Some(b) if !b.is_empty() => std::mem::take(b),
+            _ => return Ok(()),
+        };
+        let n = batch.len() as u64;
+        let seq = match self.config.acks {
+            Acks::ExactlyOnce => {
+                let s = self.seqs.entry(key.clone()).or_insert(0);
+                let base = *s + 1;
+                *s += n;
+                Some((self.producer_id, base))
+            }
+            _ => None,
+        };
+        let mut attempt = 0;
+        loop {
+            let res = self.cluster.produce(
+                &key.0,
+                key.1,
+                batch.clone(),
+                self.config.locality,
+                seq,
+            );
+            match res {
+                Ok(_) => return Ok(()),
+                Err(e) if e.to_string().contains("duplicate") => {
+                    // Exactly-once retry hit broker-side dedup: success.
+                    return Ok(());
+                }
+                Err(e) => {
+                    attempt += 1;
+                    match self.config.acks {
+                        Acks::AtMostOnce => return Ok(()), // fire and forget
+                        _ if attempt > self.config.max_retries => return Err(e),
+                        _ => continue,
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Producer {
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::{BrokerConfig, Cluster};
+
+    fn cluster() -> ClusterHandle {
+        Cluster::new(BrokerConfig { default_partitions: 2, ..Default::default() })
+    }
+
+    #[test]
+    fn batches_flush_at_batch_size() {
+        let c = cluster();
+        c.create_topic("t", 1);
+        let mut p = Producer::new(
+            c.clone(),
+            ProducerConfig { batch_size: 4, ..Default::default() },
+        );
+        for i in 0..3u8 {
+            p.send_to("t", 0, Record::new(vec![i])).unwrap();
+        }
+        assert_eq!(p.buffered(), 3);
+        assert_eq!(c.offsets("t", 0).unwrap().1, 0); // nothing sent yet
+        p.send_to("t", 0, Record::new(vec![3])).unwrap();
+        assert_eq!(p.buffered(), 0);
+        assert_eq!(c.offsets("t", 0).unwrap().1, 4);
+        // One batch => one produce call.
+        assert_eq!(c.metrics.counter("broker.produce.batches").get(), 1);
+    }
+
+    #[test]
+    fn explicit_flush_drains() {
+        let c = cluster();
+        let mut p = Producer::with_defaults(c.clone());
+        p.send("t", Record::new(vec![1])).unwrap();
+        p.flush().unwrap();
+        assert_eq!(p.buffered(), 0);
+        let t = c.topic("t").unwrap();
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn drop_flushes() {
+        let c = cluster();
+        {
+            let mut p = Producer::with_defaults(c.clone());
+            p.send("t", Record::new(vec![1])).unwrap();
+        }
+        assert_eq!(c.topic("t").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn keyed_records_land_in_one_partition() {
+        let c = cluster();
+        c.create_topic("t", 4);
+        let mut p = Producer::with_defaults(c.clone());
+        for i in 0..20u8 {
+            p.send("t", Record::with_key(b"device-7".to_vec(), vec![i])).unwrap();
+        }
+        p.flush().unwrap();
+        let t = c.topic("t").unwrap();
+        let nonempty: Vec<u32> = (0..4)
+            .filter(|&pi| !t.partition(pi).unwrap().lock().unwrap().is_empty())
+            .collect();
+        assert_eq!(nonempty.len(), 1);
+    }
+
+    #[test]
+    fn unkeyed_records_spread_round_robin() {
+        let c = cluster();
+        c.create_topic("t", 4);
+        let mut p = Producer::with_defaults(c.clone());
+        for i in 0..16u8 {
+            p.send("t", Record::new(vec![i])).unwrap();
+        }
+        p.flush().unwrap();
+        let t = c.topic("t").unwrap();
+        for pi in 0..4 {
+            assert_eq!(t.partition(pi).unwrap().lock().unwrap().len(), 4);
+        }
+    }
+
+    #[test]
+    fn exactly_once_retry_does_not_duplicate() {
+        let c = cluster();
+        c.create_topic("t", 1);
+        let mut p = Producer::new(
+            c.clone(),
+            ProducerConfig {
+                batch_size: 100,
+                acks: Acks::ExactlyOnce,
+                ..Default::default()
+            },
+        );
+        for i in 0..5u8 {
+            p.send_to("t", 0, Record::new(vec![i])).unwrap();
+        }
+        p.flush().unwrap();
+        // Simulate a client-side retry of an already-acked batch by
+        // replaying the same seq range through the cluster directly.
+        let replay: Vec<Record> = (0..5u8).map(|i| Record::new(vec![i])).collect();
+        let err = c.produce("t", 0, replay, ClientLocality::External, Some((p.id(), 1)));
+        assert!(err.is_err());
+        assert_eq!(c.offsets("t", 0).unwrap().1, 5);
+    }
+}

@@ -1,0 +1,141 @@
+//! A topic: an ordered set of partitions, each an independent log.
+
+use super::log::LogConfig;
+use super::partition::Partition;
+use super::record::Record;
+use crate::util::clock::SharedClock;
+use std::sync::Mutex;
+
+#[derive(Debug)]
+pub struct Topic {
+    pub name: String,
+    partitions: Vec<Mutex<Partition>>,
+}
+
+impl Topic {
+    /// Partition p is led by broker `(hash(name) + p) % num_brokers`,
+    /// replicated on the following `replication_factor - 1` brokers —
+    /// Kafka's round-robin replica placement.
+    pub fn new(
+        name: &str,
+        num_partitions: u32,
+        num_brokers: usize,
+        replication_factor: usize,
+        config: &LogConfig,
+        clock: &SharedClock,
+    ) -> Topic {
+        let base = fxhash(name.as_bytes()) as usize;
+        let rf = replication_factor.clamp(1, num_brokers.max(1));
+        let partitions = (0..num_partitions)
+            .map(|p| {
+                let leader = (base + p as usize) % num_brokers.max(1);
+                let replicas: Vec<usize> =
+                    (0..rf).map(|r| (leader + r) % num_brokers.max(1)).collect();
+                Mutex::new(Partition::new(
+                    name,
+                    p,
+                    leader,
+                    replicas,
+                    config.clone(),
+                    clock.clone(),
+                ))
+            })
+            .collect();
+        Topic { name: name.to_string(), partitions }
+    }
+
+    pub fn num_partitions(&self) -> u32 {
+        self.partitions.len() as u32
+    }
+
+    pub fn partition(&self, p: u32) -> Option<&Mutex<Partition>> {
+        self.partitions.get(p as usize)
+    }
+
+    /// Total records across partitions.
+    pub fn len(&self) -> u64 {
+        self.partitions
+            .iter()
+            .map(|p| p.lock().unwrap().len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Route a record to a partition: key-hash when keyed, else the
+    /// provided round-robin counter.
+    pub fn route(&self, record: &Record, round_robin: u64) -> u32 {
+        match &record.key {
+            Some(k) => (fxhash(k) % self.num_partitions() as u64) as u32,
+            None => (round_robin % self.num_partitions() as u64) as u32,
+        }
+    }
+}
+
+/// FxHash-style mixing — stable across runs (HashMap's RandomState isn't),
+/// which keeps key→partition routing deterministic for tests and reuse.
+pub(crate) fn fxhash(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::system_clock;
+
+    fn topic(parts: u32) -> Topic {
+        Topic::new("t", parts, 3, 2, &LogConfig::default(), &system_clock())
+    }
+
+    #[test]
+    fn partitions_created_with_leaders_spread() {
+        let t = topic(6);
+        assert_eq!(t.num_partitions(), 6);
+        let leaders: Vec<usize> = (0..6)
+            .map(|p| t.partition(p).unwrap().lock().unwrap().leader)
+            .collect();
+        // Round-robin placement => all 3 brokers lead something.
+        for b in 0..3 {
+            assert!(leaders.contains(&b), "broker {b} leads nothing: {leaders:?}");
+        }
+    }
+
+    #[test]
+    fn replication_factor_respected() {
+        let t = topic(4);
+        for p in 0..4 {
+            let part = t.partition(p).unwrap().lock().unwrap();
+            assert_eq!(part.replicas.len(), 2);
+            assert_eq!(part.replicas[0], part.leader);
+        }
+    }
+
+    #[test]
+    fn keyed_routing_is_deterministic() {
+        let t = topic(4);
+        let r = Record::with_key(b"sensor-1".to_vec(), vec![]);
+        let p1 = t.route(&r, 0);
+        let p2 = t.route(&r, 99);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn unkeyed_routing_round_robins() {
+        let t = topic(4);
+        let r = Record::new(vec![]);
+        let ps: Vec<u32> = (0..8).map(|i| t.route(&r, i)).collect();
+        assert_eq!(ps, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn out_of_range_partition_is_none() {
+        let t = topic(2);
+        assert!(t.partition(2).is_none());
+    }
+}

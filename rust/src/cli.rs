@@ -1,0 +1,239 @@
+//! Command-line interface for the `kafka-ml` leader binary.
+//!
+//! Hand-rolled argument parsing (no clap in the offline vendor set).
+//!
+//! ```text
+//! kafka-ml pipeline [--samples N] [--epochs E] [--replicas R] [--artifacts DIR]
+//! kafka-ml serve    [--port P] [--artifacts DIR]
+//! kafka-ml info     [--artifacts DIR]
+//! ```
+
+use crate::broker::ClientLocality;
+use crate::coordinator::{KafkaMl, KafkaMlConfig, TrainParams};
+use crate::json::Json;
+use crate::ml::hcopd_dataset;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Parse `--key value` style flags after the subcommand.
+pub fn parse_flags(args: &[String]) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let Some(key) = args[i].strip_prefix("--") else {
+            bail!("unexpected argument '{}'", args[i]);
+        };
+        let value = args
+            .get(i + 1)
+            .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+        out.insert(key.to_string(), value.clone());
+        i += 2;
+    }
+    Ok(out)
+}
+
+fn flag_u64(flags: &BTreeMap<String, String>, key: &str, default: u64) -> Result<u64> {
+    match flags.get(key) {
+        Some(v) => v
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{key} must be an integer: {e}")),
+        None => Ok(default),
+    }
+}
+
+const USAGE: &str = "\
+kafka-ml — ML/AI pipelines through data streams (paper reproduction)
+
+USAGE:
+  kafka-ml pipeline [--samples N] [--epochs E] [--replicas R] [--artifacts DIR]
+      Run the full Fig-1 pipeline (A-F) on the synthetic HCOPD workload.
+  kafka-ml serve [--port P] [--artifacts DIR] [--state FILE.json]
+      Boot the platform (broker + back-end + orchestrator) and serve the
+      RESTful back-end until Ctrl-C; --state snapshots the registry.
+  kafka-ml info [--artifacts DIR]
+      Print the compiled model's artifact metadata.
+";
+
+pub fn main_entry() {
+    crate::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+pub fn run(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("pipeline") => cmd_pipeline(&parse_flags(&args[1..])?),
+        Some("serve") => cmd_serve(&parse_flags(&args[1..])?),
+        Some("info") => cmd_info(&parse_flags(&args[1..])?),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn artifacts_dir(flags: &BTreeMap<String, String>) -> String {
+    flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string())
+}
+
+fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
+    let meta = crate::runtime::ArtifactMeta::load(artifacts_dir(flags))?;
+    println!("Kafka-ML model artifacts ({})", meta.dir.display());
+    println!("  input_dim : {}", meta.input_dim);
+    println!("  hidden    : {:?}", meta.hidden);
+    println!("  classes   : {}", meta.classes);
+    println!("  batch     : {}", meta.batch);
+    println!("  lr        : {}", meta.lr);
+    println!("  weights   : {}", meta.total_weights());
+    for (name, info) in &meta.artifacts {
+        println!("  artifact  : {name} <- {}", info.file);
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
+    let port = flag_u64(flags, "port", 8080)? as u16;
+    let kml = KafkaMl::start(KafkaMlConfig {
+        rest_port: port,
+        artifact_dir: artifacts_dir(flags),
+        ..Default::default()
+    })?;
+    // Optional durability: restore + periodically snapshot the back-end
+    // state (--state path.json), like the paper's database-backed Django.
+    let state_path = flags.get("state").cloned();
+    if let Some(path) = &state_path {
+        if std::path::Path::new(path).exists() {
+            let restore = std::fs::read_to_string(path)
+                .map_err(anyhow::Error::from)
+                .and_then(|text| {
+                    crate::json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))
+                })
+                .and_then(|j| kml.store.restore_from_json(&j));
+            match restore {
+                Ok(()) => println!("restored back-end state from {path}"),
+                Err(e) => log::warn!("could not restore {path}: {e}"),
+            }
+        }
+    }
+    println!("kafka-ml back-end serving at {}", kml.backend_url());
+    println!("(Ctrl-C to stop)");
+    loop {
+        std::thread::sleep(Duration::from_secs(60));
+        if let Some(path) = &state_path {
+            if let Err(e) = kml.store.save(path) {
+                log::warn!("state snapshot failed: {e}");
+            }
+        }
+    }
+}
+
+fn cmd_pipeline(flags: &BTreeMap<String, String>) -> Result<()> {
+    let samples = flag_u64(flags, "samples", 220)? as usize;
+    let epochs = flag_u64(flags, "epochs", 10)? as usize;
+    let replicas = flag_u64(flags, "replicas", 2)? as u32;
+    let dir = artifacts_dir(flags);
+
+    println!("== Kafka-ML pipeline (Fig 1, steps A-F) ==");
+    let kml = KafkaMl::start(KafkaMlConfig {
+        artifact_dir: dir,
+        ..Default::default()
+    })?;
+    println!("platform up: back-end {}", kml.backend_url());
+
+    let model = kml.create_model("hcopd-mlp")?;
+    let conf = kml.create_configuration("hcopd", &[model])?;
+    println!("A/B: model {model}, configuration {conf}");
+
+    let dep = kml.deploy_training(conf, &TrainParams { epochs, ..Default::default() })?;
+    println!("C: deployment {} (jobs waiting on control topic)", dep.id);
+
+    let ds = hcopd_dataset(samples, 8, 42);
+    let raw = Json::obj(vec![
+        ("dtype", Json::str("f32")),
+        ("shape", Json::arr(vec![Json::from(8u64)])),
+    ]);
+    let msg = kml.send_stream(
+        dep.id,
+        &ds.samples,
+        "hcopd-data",
+        "RAW",
+        &raw,
+        0.2,
+        ClientLocality::External,
+    )?;
+    println!("D: streamed {} samples, control {}", samples, msg.stream.format());
+
+    let results = kml.wait_training(&dep, Duration::from_secs(600))?;
+    let r = &results[0];
+    println!(
+        "E: trained — loss {:.4} acc {:.3} val_loss {:?} val_acc {:?}",
+        r.metrics.loss, r.metrics.accuracy, r.metrics.val_loss, r.metrics.val_accuracy
+    );
+
+    let inf = kml.deploy_inference(r.id, replicas, "hcopd-in", "hcopd-out")?;
+    println!("E: inference {} up with {replicas} replicas", inf.id);
+
+    let mut client = kml.inference_client(&inf, ClientLocality::External)?;
+    let test = hcopd_dataset(20, 8, 77);
+    let mut correct = 0;
+    let t0 = std::time::Instant::now();
+    for s in &test.samples {
+        let p = client.request(&s.features, Duration::from_secs(10))?;
+        if p.class as i32 == s.label.unwrap() {
+            correct += 1;
+        }
+    }
+    println!(
+        "F: 20 predictions in {} ({} correct)",
+        crate::util::human_duration(t0.elapsed()),
+        correct
+    );
+    kml.stop_inference(inf.id)?;
+    kml.shutdown();
+    println!("done.");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags() {
+        let f = parse_flags(&s(&["--epochs", "5", "--replicas", "3"])).unwrap();
+        assert_eq!(f.get("epochs").unwrap(), "5");
+        assert_eq!(flag_u64(&f, "replicas", 1).unwrap(), 3);
+        assert_eq!(flag_u64(&f, "missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_flags() {
+        assert!(parse_flags(&s(&["epochs"])).is_err());
+        assert!(parse_flags(&s(&["--epochs"])).is_err());
+        let f = parse_flags(&s(&["--epochs", "x"])).unwrap();
+        assert!(flag_u64(&f, "epochs", 1).is_err());
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert!(run(&s(&["help"])).is_ok());
+        assert!(run(&[]).is_ok());
+        assert!(run(&s(&["frobnicate"])).is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Ingestion backpressure: IoT gateways (§III-D) can emit faster than
+//! training/inference consumes. The [`IngestController`] sits between a
+//! data source and a broker producer, bounding in-flight records with a
+//! blocking queue and draining it on a pacing thread — so a burst from
+//! the source turns into sustainable pressure on the broker instead of
+//! unbounded memory growth.
+
+use crate::broker::{ClusterHandle, Producer, ProducerConfig, Record};
+use crate::exec::{bounded, CancelToken, Sender};
+use crate::metrics::Registry;
+use anyhow::Result;
+use std::thread::JoinHandle;
+
+pub struct IngestController {
+    tx: Option<Sender<(String, Record)>>,
+    drain: Option<JoinHandle<u64>>,
+    cancel: CancelToken,
+    pub metrics: Registry,
+}
+
+impl IngestController {
+    /// `capacity`: max queued records before `offer` blocks.
+    pub fn start(
+        cluster: ClusterHandle,
+        producer_config: ProducerConfig,
+        capacity: usize,
+    ) -> IngestController {
+        let (tx, rx) = bounded::<(String, Record)>(capacity);
+        let cancel = CancelToken::new();
+        let metrics = Registry::new();
+        let m = metrics.clone();
+        let drain = std::thread::Builder::new()
+            .name("ingest-drain".to_string())
+            .spawn(move || {
+                let mut producer = Producer::new(cluster, producer_config);
+                let mut sent = 0u64;
+                while let Ok((topic, rec)) = rx.recv() {
+                    if producer.send(&topic, rec).is_ok() {
+                        sent += 1;
+                        m.counter("ingest.sent").inc();
+                    } else {
+                        m.counter("ingest.errors").inc();
+                    }
+                }
+                producer.flush().ok();
+                sent
+            })
+            .expect("spawn ingest drain");
+        IngestController { tx: Some(tx), drain: Some(drain), cancel, metrics }
+    }
+
+    /// Enqueue a record; **blocks** when the queue is full — that is the
+    /// backpressure the source observes.
+    pub fn offer(&self, topic: &str, record: Record) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("controller closed")
+            .send((topic.to_string(), record))
+            .map_err(|_| anyhow::anyhow!("ingest drain has shut down"))
+    }
+
+    /// Non-blocking variant: returns false when the queue is full (the
+    /// caller may drop or retry — at-most-once sources).
+    pub fn try_offer(&self, topic: &str, record: Record) -> bool {
+        match self
+            .tx
+            .as_ref()
+            .expect("controller closed")
+            .try_send((topic.to_string(), record))
+        {
+            Ok(()) => true,
+            Err(_) => {
+                self.metrics.counter("ingest.rejected").inc();
+                false
+            }
+        }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.tx.as_ref().map(|t| t.len()).unwrap_or(0)
+    }
+
+    /// Close the intake, drain the queue, and return how many records
+    /// were produced.
+    pub fn finish(mut self) -> u64 {
+        self.tx.take(); // closes the channel
+        let sent = self.drain.take().map(|h| h.join().unwrap_or(0)).unwrap_or(0);
+        self.cancel.cancel();
+        sent
+    }
+}
+
+impl Drop for IngestController {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.drain.take() {
+            h.join().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::{BrokerConfig, Cluster};
+    use std::sync::Arc;
+
+    fn cluster() -> ClusterHandle {
+        Cluster::new(BrokerConfig::default())
+    }
+
+    #[test]
+    fn drains_everything_offered() {
+        let c = cluster();
+        c.create_topic("t", 1);
+        let ctl = IngestController::start(c.clone(), ProducerConfig::default(), 64);
+        for i in 0..500u32 {
+            ctl.offer("t", Record::new(i.to_le_bytes().to_vec())).unwrap();
+        }
+        let sent = ctl.finish();
+        assert_eq!(sent, 500);
+        assert_eq!(c.topic("t").unwrap().len(), 500);
+    }
+
+    #[test]
+    fn try_offer_rejects_when_full() {
+        let c = cluster();
+        c.create_topic("t", 1);
+        // Slow drain: the producer's network profile is zero, but we can
+        // saturate a size-1 queue faster than the OS schedules the drain.
+        let ctl = IngestController::start(c, ProducerConfig::default(), 1);
+        let mut rejected = 0;
+        for i in 0..10_000u32 {
+            if !ctl.try_offer("t", Record::new(i.to_le_bytes().to_vec())) {
+                rejected += 1;
+            }
+        }
+        // With a queue of 1 and 10k offers, some must bounce.
+        assert!(rejected > 0);
+        assert_eq!(ctl.metrics.counter("ingest.rejected").get(), rejected);
+        ctl.finish();
+    }
+
+    #[test]
+    fn offer_blocks_until_capacity_frees() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::time::Duration;
+        let c = cluster();
+        c.create_topic("t", 1);
+        let ctl = Arc::new(IngestController::start(
+            c,
+            ProducerConfig::default(),
+            2,
+        ));
+        let done = Arc::new(AtomicBool::new(false));
+        let d = done.clone();
+        let ctl2 = ctl.clone();
+        let h = std::thread::spawn(move || {
+            for i in 0..1000u32 {
+                ctl2.offer("t", Record::new(i.to_le_bytes().to_vec())).unwrap();
+            }
+            d.store(true, Ordering::SeqCst);
+        });
+        h.join().unwrap();
+        assert!(done.load(Ordering::SeqCst));
+        // Give the drain a moment, then confirm queue drained.
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(ctl.queued(), 0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Control messages (§III-D) and stream references (§V).
+//!
+//! A deployed training job blocks until a control message for its
+//! `deployment_id` arrives on the control topic. The message tells it
+//! *where the data stream lives in the distributed log* —
+//! `[topic:partition:offset:length]`, the KafkaDataset connector format
+//! the paper adopts — plus how to decode it (`input_format`,
+//! `input_config`), the validation split and the message count. Because
+//! the position is explicit, the same tens-of-bytes control message can
+//! be re-sent to other deployments to *reuse* the stream (§V) without
+//! re-streaming the data.
+
+use crate::json::{parse, Json};
+use anyhow::{anyhow, bail, Result};
+
+/// The well-known control topic.
+pub const CONTROL_TOPIC: &str = "kafka-ml-control";
+
+/// A window of the distributed log: `[topic:partition:offset:length]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamRef {
+    pub topic: String,
+    pub partition: u32,
+    pub offset: u64,
+    pub length: u64,
+}
+
+impl StreamRef {
+    pub fn new(topic: &str, partition: u32, offset: u64, length: u64) -> StreamRef {
+        StreamRef { topic: topic.to_string(), partition, offset, length }
+    }
+
+    /// Render in the paper's `[kafka-ml:0:0:70000]` format.
+    pub fn format(&self) -> String {
+        format!(
+            "[{}:{}:{}:{}]",
+            self.topic, self.partition, self.offset, self.length
+        )
+    }
+
+    pub fn parse(s: &str) -> Result<StreamRef> {
+        let inner = s
+            .strip_prefix('[')
+            .and_then(|s| s.strip_suffix(']'))
+            .ok_or_else(|| anyhow!("stream ref must be [topic:partition:offset:length]: {s}"))?;
+        let parts: Vec<&str> = inner.split(':').collect();
+        if parts.len() != 4 {
+            bail!("stream ref needs 4 fields: {s}");
+        }
+        Ok(StreamRef {
+            topic: parts[0].to_string(),
+            partition: parts[1].parse().map_err(|e| anyhow!("partition: {e}"))?,
+            offset: parts[2].parse().map_err(|e| anyhow!("offset: {e}"))?,
+            length: parts[3].parse().map_err(|e| anyhow!("length: {e}"))?,
+        })
+    }
+
+    /// Exclusive end offset.
+    pub fn end_offset(&self) -> u64 {
+        self.offset + self.length
+    }
+}
+
+/// A control message (§III-D's field list).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlMessage {
+    pub deployment_id: u64,
+    pub stream: StreamRef,
+    pub input_format: String,
+    pub input_config: Json,
+    pub validation_rate: f64,
+    pub total_msg: u64,
+}
+
+impl ControlMessage {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("deployment_id", Json::from(self.deployment_id)),
+            ("topic", Json::str(&self.stream.topic)),
+            ("stream_ref", Json::str(self.stream.format())),
+            ("input_format", Json::str(&self.input_format)),
+            ("input_config", self.input_config.clone()),
+            ("validation_rate", Json::num(self.validation_rate)),
+            ("total_msg", Json::from(self.total_msg)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ControlMessage> {
+        let stream = StreamRef::parse(j.req_str("stream_ref")?)?;
+        Ok(ControlMessage {
+            deployment_id: j.req_u64("deployment_id")?,
+            stream,
+            input_format: j.req_str("input_format")?.to_string(),
+            input_config: j.get("input_config").clone(),
+            validation_rate: j.get("validation_rate").as_f64().unwrap_or(0.0),
+            total_msg: j.get("total_msg").as_u64().unwrap_or(0),
+        })
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        crate::json::to_string(&self.to_json()).into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<ControlMessage> {
+        let s = std::str::from_utf8(bytes)?;
+        let j = parse(s).map_err(|e| anyhow!("control message: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_ref_matches_paper_example() {
+        let r = StreamRef::new("kafka-ml", 0, 0, 70000);
+        assert_eq!(r.format(), "[kafka-ml:0:0:70000]");
+        assert_eq!(StreamRef::parse("[kafka-ml:0:0:70000]").unwrap(), r);
+        assert_eq!(r.end_offset(), 70000);
+    }
+
+    #[test]
+    fn stream_ref_rejects_malformed() {
+        for bad in ["kafka-ml:0:0:70000", "[a:b]", "[t:0:0:x]", "[t:0:0:1:2]", ""] {
+            assert!(StreamRef::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn control_message_roundtrip() {
+        let m = ControlMessage {
+            deployment_id: 7,
+            stream: StreamRef::new("data", 2, 100, 220),
+            input_format: "AVRO".into(),
+            input_config: Json::obj(vec![("x", Json::num(1.0))]),
+            validation_rate: 0.2,
+            total_msg: 220,
+        };
+        let back = ControlMessage::decode(&m.encode()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn control_message_is_tens_of_bytes() {
+        // §V's selling point: a re-send costs tens of bytes, not the
+        // whole stream.
+        let m = ControlMessage {
+            deployment_id: 3,
+            stream: StreamRef::new("kafka-ml", 0, 0, 70000),
+            input_format: "RAW".into(),
+            input_config: Json::Null,
+            validation_rate: 0.0,
+            total_msg: 70000,
+        };
+        assert!(m.encode().len() < 250, "{}", m.encode().len());
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(ControlMessage::decode(b"not json").is_err());
+        assert!(ControlMessage::decode(b"{}").is_err());
+    }
+}

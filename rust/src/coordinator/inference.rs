@@ -1,0 +1,335 @@
+//! The inference replica — Algorithm 2 of the paper (§IV-D) — and the
+//! request/response client that feeds it (§III-F).
+//!
+//! ```text
+//! model <- downloadTrainedModelFromBackend(model_url)
+//! deserializer <- getDeserializer(input_configuration)
+//! while True:
+//!   stream <- readStreams(input_topic)
+//!   data <- decode(deserializer, stream)
+//!   predictions <- predict(model, data)
+//!   sendToKafka(predictions, output_topic)
+//! ```
+//!
+//! Replicas join one consumer group per inference deployment, so the
+//! broker's group coordinator spreads input partitions across them —
+//! load balancing + fault tolerance exactly as §IV-D describes.
+//! Request/response correlation rides on a record *header*
+//! (`kafka-ml-request-id`) — the record key stays reserved for the
+//! formats' label-in-key convention; the replica copies the header onto
+//! the prediction it produces.
+
+use crate::broker::{Assignor, ClientLocality, ClusterHandle, Consumer, Producer, ProducerConfig, Record};
+use crate::exec::CancelToken;
+use crate::formats::registry;
+use crate::json::Json;
+use crate::registry::BackendClient;
+use crate::runtime::Engine;
+use anyhow::{anyhow, Result};
+use std::time::{Duration, Instant};
+
+/// Header carrying the request correlation id end-to-end.
+pub const REQUEST_ID_HEADER: &str = "kafka-ml-request-id";
+
+#[derive(Debug, Clone)]
+pub struct InferenceReplicaConfig {
+    pub inference_id: u64,
+    pub result_id: u64,
+    pub artifact_dir: String,
+    pub backend_url: String,
+    pub input_topic: String,
+    pub output_topic: String,
+    pub input_format: String,
+    pub input_config: Json,
+    pub locality: ClientLocality,
+    /// Max records pulled per poll (micro-batching across requests).
+    pub max_poll: usize,
+}
+
+impl InferenceReplicaConfig {
+    pub fn group_id(&self) -> String {
+        format!("inference-{}", self.inference_id)
+    }
+}
+
+/// Run one inference replica until cancelled (Algorithm 2). `member_id`
+/// distinguishes replicas inside the consumer group.
+pub fn run_inference_replica(
+    cluster: &ClusterHandle,
+    config: &InferenceReplicaConfig,
+    member_id: &str,
+    cancel: &CancelToken,
+) -> Result<()> {
+    // downloadTrainedModelFromBackend
+    let backend = BackendClient::new(&config.backend_url);
+    let params_host = backend.download_model(config.result_id)?;
+    let engine = Engine::load(&config.artifact_dir)?;
+    let params = engine.inference_params(&params_host)?;
+    // getDeserializer(input_configuration)
+    let format = registry(&config.input_format, &config.input_config)?;
+
+    cluster.topic_or_create(&config.input_topic);
+    cluster.topic_or_create(&config.output_topic);
+    let mut consumer = Consumer::new(cluster.clone(), config.locality);
+    consumer.subscribe(
+        &config.group_id(),
+        member_id,
+        &[config.input_topic.clone()],
+        Assignor::RoundRobin,
+    );
+    let mut producer = Producer::new(
+        cluster.clone(),
+        ProducerConfig {
+            batch_size: 1, // predictions leave immediately (latency path)
+            locality: config.locality,
+            ..Default::default()
+        },
+    );
+
+    let classes = engine.meta().classes;
+    let features = engine.meta().input_dim;
+    let mut x_buf: Vec<f32> = Vec::new();
+    while !cancel.is_cancelled() {
+        if !consumer.poll_heartbeat() {
+            // Evicted (e.g. after a pause); rejoin.
+            consumer.subscribe(
+                &config.group_id(),
+                member_id,
+                &[config.input_topic.clone()],
+                Assignor::RoundRobin,
+            );
+        }
+        let recs = consumer.poll(config.max_poll)?;
+        if recs.is_empty() {
+            std::thread::sleep(Duration::from_micros(200));
+            continue;
+        }
+        // Micro-batch all pending requests through one predict call.
+        x_buf.clear();
+        let mut keys = Vec::with_capacity(recs.len());
+        for rec in &recs {
+            let sample = format.decode(&rec.record)?;
+            if sample.features.len() != features {
+                log::warn!(
+                    "inference request with {} features (model wants {features}); dropping",
+                    sample.features.len()
+                );
+                continue;
+            }
+            x_buf.extend_from_slice(&sample.features);
+            keys.push(rec.record.get_header(REQUEST_ID_HEADER).map(|v| v.to_vec()));
+        }
+        if keys.is_empty() {
+            continue;
+        }
+        let rows = keys.len();
+        let probs = engine.predict(&params, &x_buf, rows)?;
+        let labels = engine.classify(&probs);
+        for (i, key) in keys.into_iter().enumerate() {
+            let row = &probs[i * classes..(i + 1) * classes];
+            let payload = Json::obj(vec![
+                (
+                    "probs",
+                    Json::arr(row.iter().map(|&p| Json::num(p as f64)).collect()),
+                ),
+                ("class", Json::from(labels[i])),
+            ]);
+            let mut rec = Record::new(crate::json::to_string(&payload).into_bytes());
+            if let Some(k) = key {
+                rec = rec.header(REQUEST_ID_HEADER, &k);
+            }
+            producer.send_to(&config.output_topic, 0, rec)?;
+        }
+        consumer.commit();
+        cluster
+            .metrics
+            .counter("kafka_ml.inference.predictions")
+            .add(rows as u64);
+    }
+    consumer.leave();
+    Ok(())
+}
+
+/// A prediction as returned to clients.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    pub probs: Vec<f32>,
+    pub class: usize,
+}
+
+impl Prediction {
+    pub fn decode(bytes: &[u8]) -> Result<Prediction> {
+        let j = crate::json::parse(std::str::from_utf8(bytes)?)
+            .map_err(|e| anyhow!("prediction payload: {e}"))?;
+        Ok(Prediction {
+            probs: j
+                .get("probs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_f64().map(|f| f as f32))
+                .collect(),
+            class: j.req_u64("class")? as usize,
+        })
+    }
+}
+
+/// Client-side request/response over the input/output topics (§III-F:
+/// "send encoded data streams to the input topic, and inference results
+/// will be immediately sent to the output topic").
+pub struct InferenceClient {
+    cluster: ClusterHandle,
+    input_topic: String,
+    output_topic: String,
+    format: Box<dyn crate::formats::DataFormat>,
+    producer: Producer,
+    consumer: Consumer,
+    next_request: u64,
+    /// Client id namespaces request keys across concurrent clients.
+    client_id: u64,
+    /// Predictions read while awaiting a different key (out-of-order
+    /// arrivals across replicas) — held until their key is awaited.
+    pending: std::collections::HashMap<Vec<u8>, Prediction>,
+}
+
+impl InferenceClient {
+    pub fn new(
+        cluster: ClusterHandle,
+        input_topic: &str,
+        output_topic: &str,
+        input_format: &str,
+        input_config: &Json,
+        locality: ClientLocality,
+    ) -> Result<InferenceClient> {
+        let format = registry(input_format, input_config)?;
+        cluster.topic_or_create(input_topic);
+        cluster.topic_or_create(output_topic);
+        let producer = Producer::new(
+            cluster.clone(),
+            ProducerConfig { batch_size: 1, locality, ..Default::default() },
+        );
+        let mut consumer = Consumer::new(cluster.clone(), locality);
+        consumer.assign(vec![(output_topic.to_string(), 0)]);
+        // Start reading at the current end: old predictions are not ours.
+        let (_, latest) = cluster.offsets(output_topic, 0)?;
+        consumer.seek((output_topic.to_string(), 0), latest);
+        let client_id = cluster.alloc_producer_id();
+        Ok(InferenceClient {
+            cluster,
+            input_topic: input_topic.to_string(),
+            output_topic: output_topic.to_string(),
+            format,
+            producer,
+            consumer,
+            next_request: 0,
+            client_id,
+            pending: std::collections::HashMap::new(),
+        })
+    }
+
+    fn fresh_key(&mut self) -> Vec<u8> {
+        self.next_request += 1;
+        format!("req-{}-{}", self.client_id, self.next_request).into_bytes()
+    }
+
+    /// Fire one request without waiting (throughput path).
+    pub fn send(&mut self, features: &[f32]) -> Result<Vec<u8>> {
+        let key = self.fresh_key();
+        let rec = self
+            .format
+            .encode(features, None)?
+            .header(REQUEST_ID_HEADER, &key);
+        self.producer.send(&self.input_topic, rec)?;
+        Ok(key)
+    }
+
+    /// Request + block for the correlated prediction (latency path —
+    /// what Table II times).
+    pub fn request(&mut self, features: &[f32], timeout: Duration) -> Result<Prediction> {
+        let key = self.send(features)?;
+        self.await_key(&key, timeout)
+    }
+
+    /// Wait for the prediction correlated with `key`. Predictions for
+    /// *other* outstanding keys seen along the way are buffered, so any
+    /// await order works (replicas may answer out of order).
+    pub fn await_key(&mut self, key: &[u8], timeout: Duration) -> Result<Prediction> {
+        if let Some(p) = self.pending.remove(key) {
+            return Ok(p);
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            // Buffer the WHOLE poll batch before answering: the consumer
+            // position has already advanced past every returned record,
+            // so anything not kept here would be lost.
+            for rec in self.consumer.poll(64)? {
+                let Some(rec_key) = rec.record.get_header(REQUEST_ID_HEADER) else {
+                    continue;
+                };
+                if let Ok(p) = Prediction::decode(&rec.record.value) {
+                    self.pending.insert(rec_key.to_vec(), p);
+                }
+            }
+            if let Some(p) = self.pending.remove(key) {
+                return Ok(p);
+            }
+            if Instant::now() >= deadline {
+                return Err(anyhow!(
+                    "timed out waiting for prediction on {}",
+                    self.output_topic
+                ));
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    pub fn cluster(&self) -> &ClusterHandle {
+        &self.cluster
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prediction_payload_roundtrip() {
+        let j = Json::obj(vec![
+            (
+                "probs",
+                Json::arr(vec![Json::num(0.1), Json::num(0.7), Json::num(0.2)]),
+            ),
+            ("class", Json::from(1u64)),
+        ]);
+        let p = Prediction::decode(crate::json::to_string(&j).as_bytes()).unwrap();
+        assert_eq!(p.class, 1);
+        assert_eq!(p.probs.len(), 3);
+        assert!((p.probs[1] - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prediction_rejects_garbage() {
+        assert!(Prediction::decode(b"junk").is_err());
+        assert!(Prediction::decode(b"{}").is_err());
+    }
+
+    #[test]
+    fn group_id_is_per_deployment() {
+        let cfg = InferenceReplicaConfig {
+            inference_id: 12,
+            result_id: 1,
+            artifact_dir: String::new(),
+            backend_url: String::new(),
+            input_topic: "in".into(),
+            output_topic: "out".into(),
+            input_format: "RAW".into(),
+            input_config: Json::Null,
+            locality: ClientLocality::InCluster,
+            max_poll: 16,
+        };
+        assert_eq!(cfg.group_id(), "inference-12");
+    }
+
+    // Full replica tests (with a real Engine) are in
+    // rust/tests/pipeline_integration.rs.
+}

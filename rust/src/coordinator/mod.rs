@@ -1,0 +1,31 @@
+//! The Kafka-ML coordinator — the paper's contribution (§III–§V).
+//!
+//! Everything under this module is *Kafka-ML proper*; the sibling
+//! modules ([`crate::broker`], [`crate::orchestrator`],
+//! [`crate::registry`], [`crate::runtime`]) are the substrates it runs
+//! on:
+//!
+//! * [`control`] — control messages + `[topic:partition:offset:length]`
+//!   stream references (§III-D, §V);
+//! * [`training`] — the training Job, Algorithm 1 (§IV-C);
+//! * [`inference`] — the inference replica, Algorithm 2 (§IV-D), plus a
+//!   request/response client;
+//! * [`logger`] — the control logger (§IV-E);
+//! * [`reuse`] — distributed-log stream reuse (§V, Fig 8);
+//! * [`backpressure`] — bounded ingestion for producers feeding the
+//!   broker faster than training/inference consumes;
+//! * [`pipeline`] — the [`pipeline::KafkaMl`] facade tying the whole
+//!   pipeline (Fig 1, steps A–F) together.
+
+pub mod backpressure;
+pub mod control;
+pub mod inference;
+pub mod logger;
+pub mod pipeline;
+pub mod reuse;
+pub mod training;
+
+pub use control::{ControlMessage, StreamRef, CONTROL_TOPIC};
+pub use inference::{InferenceClient, InferenceReplicaConfig};
+pub use pipeline::{KafkaMl, KafkaMlConfig, TrainParams};
+pub use training::TrainingJobConfig;

@@ -1,0 +1,477 @@
+//! The Kafka-ML facade: the whole pipeline of Fig 1, steps A–F, over the
+//! real substrates (broker + orchestrator + REST back-end + PJRT
+//! runtime).
+//!
+//! ```text
+//! A  create_model            — define the ML model (AOT artifacts)
+//! B  create_configuration    — group models to share one data stream
+//! C  deploy_training         — one orchestrator Job per model
+//! D  send_stream             — produce data + control message
+//! E  wait_training / deploy_inference — results + RC with N replicas
+//! F  inference_client        — stream requests in, predictions out
+//! ```
+//!
+//! Every containerized component (training Jobs, inference replicas,
+//! the control logger) runs as an orchestrator pod whose entrypoint is
+//! registered here; the pods talk to the back-end over real HTTP and to
+//! the broker with in-cluster locality — the same topology §IV deploys
+//! on Kubernetes.
+
+use super::control::{ControlMessage, StreamRef, CONTROL_TOPIC};
+use super::inference::{InferenceClient, InferenceReplicaConfig};
+use super::logger::run_control_logger;
+use super::reuse::ReuseManager;
+use super::training::{run_training_job, TrainingJobConfig};
+use crate::broker::{BrokerConfig, ClientLocality, Cluster, ClusterHandle, Producer, ProducerConfig};
+use crate::formats::{registry as format_registry, Sample};
+use crate::json::Json;
+use crate::orchestrator::{
+    ContainerSpec, JobSpec, Orchestrator, OrchestratorCosts, RcSpec, Scheduler,
+};
+use crate::registry::{api, BackendClient, Deployment, InferenceDeployment, Store, TrainingResult};
+use crate::rest::Server;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct KafkaMlConfig {
+    pub broker: BrokerConfig,
+    pub costs: OrchestratorCosts,
+    /// Default artifact directory for models created via [`KafkaMl::create_model`].
+    pub artifact_dir: String,
+    /// REST back-end port (0 = ephemeral).
+    pub rest_port: u16,
+    /// Deploy the §IV-E control logger pod.
+    pub control_logger: bool,
+    /// Background reconciler interval.
+    pub reconcile_every: Duration,
+    /// Broker clock override (ManualClock makes retention/expiry
+    /// demonstrations deterministic).
+    pub clock: Option<crate::util::clock::SharedClock>,
+}
+
+impl Default for KafkaMlConfig {
+    fn default() -> Self {
+        KafkaMlConfig {
+            broker: BrokerConfig::default(),
+            costs: OrchestratorCosts::zero(),
+            artifact_dir: "artifacts".to_string(),
+            rest_port: 0,
+            control_logger: true,
+            reconcile_every: Duration::from_millis(10),
+            clock: None,
+        }
+    }
+}
+
+/// Training parameters for a deployment (§III-C's Web-UI form: batch
+/// size, epochs, shuffle — the batch size itself is fixed at AOT time by
+/// the artifacts; the value here is recorded for fidelity and validated
+/// against the artifacts at job start).
+#[derive(Debug, Clone)]
+pub struct TrainParams {
+    pub batch_size: usize,
+    pub epochs: usize,
+    pub shuffle: bool,
+    pub seed: u64,
+}
+
+impl Default for TrainParams {
+    fn default() -> Self {
+        TrainParams { batch_size: 10, epochs: 10, shuffle: true, seed: 42 }
+    }
+}
+
+pub struct KafkaMl {
+    pub cluster: ClusterHandle,
+    pub store: Arc<Store>,
+    pub orch: Arc<Orchestrator>,
+    server: Option<Server>,
+    backend_url: String,
+    artifact_dir: String,
+}
+
+impl KafkaMl {
+    /// Boot the platform: broker cluster, REST back-end, orchestrator
+    /// (+ control logger pod), container entrypoints registered.
+    pub fn start(config: KafkaMlConfig) -> Result<KafkaMl> {
+        let cluster = match &config.clock {
+            Some(clock) => Cluster::with_clock(config.broker.clone(), clock.clone()),
+            None => Cluster::new(config.broker.clone()),
+        };
+        let store = Arc::new(Store::new());
+        let server = Server::start(config.rest_port, 8, api::router(store.clone()))
+            .context("starting back-end server")?;
+        let backend_url = server.base_url();
+        let orch = Orchestrator::new(Scheduler::single_node(), config.costs);
+
+        Self::register_entrypoints(&orch, &cluster, &backend_url);
+
+        if config.control_logger {
+            orch.create_rc(RcSpec::new(
+                "control-logger",
+                1,
+                ContainerSpec::new("kafka-ml/control-logger:v1", "control-logger"),
+            ))?;
+        }
+        orch.start_reconciler(config.reconcile_every);
+
+        cluster.create_topic(CONTROL_TOPIC, 1);
+        Ok(KafkaMl {
+            cluster,
+            store,
+            orch,
+            server: Some(server),
+            backend_url,
+            artifact_dir: config.artifact_dir,
+        })
+    }
+
+    fn register_entrypoints(orch: &Arc<Orchestrator>, cluster: &ClusterHandle, backend_url: &str) {
+        // training Job (§IV-C, Algorithm 1)
+        {
+            let cluster = cluster.clone();
+            let url = backend_url.to_string();
+            orch.register_entrypoint("training-job", move |ctx| {
+                let backend = BackendClient::new(&url);
+                let model_id = ctx.env_u64("MODEL_ID")?;
+                let artifact_dir = backend.model_artifact_dir(model_id)?;
+                let config = TrainingJobConfig {
+                    deployment_id: ctx.env_u64("DEPLOYMENT_ID")?,
+                    result_id: ctx.env_u64("RESULT_ID")?,
+                    artifact_dir,
+                    backend_url: url.clone(),
+                    epochs: ctx.env_u64("EPOCHS")? as usize,
+                    shuffle: ctx.env_or("SHUFFLE", "true") == "true",
+                    seed: ctx.env_u64("SEED").unwrap_or(42),
+                    control_timeout: Duration::from_secs(
+                        ctx.env_u64("CONTROL_TIMEOUT_S").unwrap_or(120),
+                    ),
+                    locality: ClientLocality::InCluster,
+                };
+                let result_id = config.result_id;
+                match run_training_job(&cluster, &config, &ctx.cancel) {
+                    Ok(_) => Ok(()),
+                    Err(e) => {
+                        BackendClient::new(&url)
+                            .set_result_status(result_id, "failed")
+                            .ok();
+                        Err(e)
+                    }
+                }
+            });
+        }
+        // inference replica (§IV-D, Algorithm 2)
+        {
+            let cluster = cluster.clone();
+            let url = backend_url.to_string();
+            orch.register_entrypoint("inference-replica", move |ctx| {
+                let backend = BackendClient::new(&url);
+                let inference_id = ctx.env_u64("INFERENCE_ID")?;
+                let info = backend.inference_info(inference_id)?;
+                let result_id = info.req_u64("result_id")?;
+                let result = backend.result_info(result_id)?;
+                let model_id = result.req_u64("model_id")?;
+                let artifact_dir = backend.model_artifact_dir(model_id)?;
+                let config = InferenceReplicaConfig {
+                    inference_id,
+                    result_id,
+                    artifact_dir,
+                    backend_url: url.clone(),
+                    input_topic: info.req_str("input_topic")?.to_string(),
+                    output_topic: info.req_str("output_topic")?.to_string(),
+                    input_format: info.req_str("input_format")?.to_string(),
+                    input_config: info.get("input_config").clone(),
+                    locality: ClientLocality::InCluster,
+                    max_poll: 32,
+                };
+                super::inference::run_inference_replica(
+                    &cluster,
+                    &config,
+                    &ctx.pod_name,
+                    &ctx.cancel,
+                )
+            });
+        }
+        // control logger (§IV-E)
+        {
+            let cluster = cluster.clone();
+            let url = backend_url.to_string();
+            orch.register_entrypoint("control-logger", move |ctx| {
+                run_control_logger(&cluster, &url, ClientLocality::InCluster, &ctx.cancel)
+            });
+        }
+    }
+
+    pub fn backend_url(&self) -> &str {
+        &self.backend_url
+    }
+
+    pub fn backend(&self) -> BackendClient {
+        BackendClient::new(&self.backend_url)
+    }
+
+    // ---- step A: define the model --------------------------------------------
+
+    pub fn create_model(&self, name: &str) -> Result<u64> {
+        self.store
+            .create_model(name, &self.artifact_dir, "AOT-compiled Kafka-ML model")
+    }
+
+    pub fn create_model_from(&self, name: &str, artifact_dir: &str) -> Result<u64> {
+        self.store.create_model(name, artifact_dir, "")
+    }
+
+    // ---- step B: configuration -------------------------------------------------
+
+    pub fn create_configuration(&self, name: &str, model_ids: &[u64]) -> Result<u64> {
+        self.store.create_configuration(name, model_ids)
+    }
+
+    // ---- step C: deploy for training ----------------------------------------------
+
+    /// Deploy a configuration for training: one orchestrator Job per
+    /// model, each blocking on the control topic (§III-C: "jobs can
+    /// resume until a data stream ... is received").
+    pub fn deploy_training(&self, configuration_id: u64, params: &TrainParams) -> Result<Deployment> {
+        let dep = self.store.create_deployment(
+            configuration_id,
+            params.batch_size,
+            params.epochs,
+            params.shuffle,
+        )?;
+        let conf = self.store.configuration(configuration_id)?;
+        for (model_id, result_id) in conf.model_ids.iter().zip(&dep.result_ids) {
+            let container = ContainerSpec::new("kafka-ml/training:v1", "training-job")
+                .env("DEPLOYMENT_ID", dep.id.to_string())
+                .env("MODEL_ID", model_id.to_string())
+                .env("RESULT_ID", result_id.to_string())
+                .env("EPOCHS", params.epochs.to_string())
+                .env("SHUFFLE", if params.shuffle { "true" } else { "false" })
+                .env("SEED", params.seed.to_string())
+                .resources(1000, 512);
+            self.orch
+                .create_job(JobSpec::new(&format!("train-r{result_id}"), container))?;
+        }
+        Ok(dep)
+    }
+
+    // ---- step D: ingest the data stream ----------------------------------------------
+
+    /// The producer-side "library" (§III-D): encode `samples` to `topic`,
+    /// then send the control message that wakes the deployment's jobs.
+    /// Returns the control message (whose stream ref identifies the
+    /// window for later reuse).
+    pub fn send_stream(
+        &self,
+        deployment_id: u64,
+        samples: &[Sample],
+        topic: &str,
+        input_format: &str,
+        input_config: &Json,
+        validation_rate: f64,
+        locality: ClientLocality,
+    ) -> Result<ControlMessage> {
+        if samples.is_empty() {
+            bail!("empty data stream");
+        }
+        let format = format_registry(input_format, input_config)?;
+        self.cluster.create_topic(topic, 1);
+        let (_, start) = self.cluster.offsets(topic, 0)?;
+        let mut producer = Producer::new(
+            self.cluster.clone(),
+            ProducerConfig { batch_size: 64, locality, ..Default::default() },
+        );
+        for s in samples {
+            producer.send_to(topic, 0, format.encode(&s.features, s.label)?)?;
+        }
+        producer.flush()?;
+        let (_, end) = self.cluster.offsets(topic, 0)?;
+        let msg = ControlMessage {
+            deployment_id,
+            stream: StreamRef::new(topic, 0, start, end - start),
+            input_format: input_format.to_string(),
+            input_config: input_config.clone(),
+            validation_rate,
+            total_msg: end - start,
+        };
+        self.cluster.produce(
+            CONTROL_TOPIC,
+            0,
+            vec![crate::broker::Record::new(msg.encode())],
+            locality,
+            None,
+        )?;
+        Ok(msg)
+    }
+
+    /// Wait for every training Job of a deployment to finish; returns
+    /// the result rows (status + metrics + model blob ids).
+    pub fn wait_training(&self, dep: &Deployment, timeout: Duration) -> Result<Vec<TrainingResult>> {
+        for rid in &dep.result_ids {
+            let status = self
+                .orch
+                .wait_job(&format!("train-r{rid}"), timeout)
+                .with_context(|| format!("waiting for training job of result {rid}"))?;
+            if status != crate::orchestrator::JobStatus::Succeeded {
+                bail!("training job for result {rid} ended {status:?}");
+            }
+        }
+        Ok(self.store.results_of_deployment(dep.id))
+    }
+
+    // ---- step E: deploy for inference -----------------------------------------------------
+
+    /// Deploy a trained result for inference with `replicas` replicas
+    /// (§III-E) and wait until they are Running.
+    pub fn deploy_inference(
+        &self,
+        result_id: u64,
+        replicas: u32,
+        input_topic: &str,
+        output_topic: &str,
+    ) -> Result<InferenceDeployment> {
+        // Partition the input topic so the consumer group can spread it.
+        self.cluster.create_topic(input_topic, replicas.max(1));
+        self.cluster.create_topic(output_topic, 1);
+        let dep = self
+            .store
+            .create_inference(result_id, replicas, input_topic, output_topic, None)?;
+        self.orch.create_rc(RcSpec::new(
+            &format!("inference-{}", dep.id),
+            replicas,
+            ContainerSpec::new("kafka-ml/inference:v1", "inference-replica")
+                .env("INFERENCE_ID", dep.id.to_string())
+                .resources(250, 256),
+        ))?;
+        self.orch
+            .wait_rc_ready(&format!("inference-{}", dep.id), Duration::from_secs(30))?;
+        Ok(dep)
+    }
+
+    pub fn scale_inference(&self, inference_id: u64, replicas: u32) -> Result<()> {
+        self.orch
+            .scale_rc(&format!("inference-{inference_id}"), replicas)
+    }
+
+    pub fn stop_inference(&self, inference_id: u64) -> Result<()> {
+        self.orch.delete_rc(&format!("inference-{inference_id}"))
+    }
+
+    // ---- step F: stream requests -------------------------------------------------------------
+
+    /// A request/response client bound to an inference deployment.
+    pub fn inference_client(&self, dep: &InferenceDeployment, locality: ClientLocality) -> Result<InferenceClient> {
+        InferenceClient::new(
+            self.cluster.clone(),
+            &dep.input_topic,
+            &dep.output_topic,
+            &dep.input_format,
+            &dep.input_config,
+            locality,
+        )
+    }
+
+    // ---- §V: stream reuse -------------------------------------------------------------------
+
+    pub fn reuse(&self) -> ReuseManager {
+        ReuseManager::new(self.cluster.clone(), self.store.clone())
+    }
+
+    /// Wait until the control logger has recorded a stream for
+    /// `deployment_id` (it consumes asynchronously).
+    pub fn wait_control_logged(&self, deployment_id: u64, timeout: Duration) -> Result<()> {
+        let deadline = std::time::Instant::now() + timeout;
+        while self.store.last_control_for(deployment_id).is_none() {
+            if std::time::Instant::now() >= deadline {
+                bail!("control logger never recorded deployment {deployment_id}");
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        Ok(())
+    }
+
+    pub fn shutdown(mut self) {
+        self.orch.stop_reconciler();
+        self.orch.delete_rc("control-logger").ok();
+        if let Some(s) = self.server.take() {
+            s.shutdown();
+        }
+    }
+}
+
+impl Drop for KafkaMl {
+    fn drop(&mut self) {
+        self.orch.stop_reconciler();
+    }
+}
+
+// Full-pipeline tests live in rust/tests/pipeline_integration.rs (they
+// need real artifacts from `make artifacts`).
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let c = KafkaMlConfig::default();
+        assert!(c.control_logger);
+        assert_eq!(c.rest_port, 0);
+        assert_eq!(c.artifact_dir, "artifacts");
+        let t = TrainParams::default();
+        assert_eq!(t.batch_size, 10); // the paper's training batch size
+        assert!(t.shuffle);
+    }
+
+    #[test]
+    fn platform_boots_and_shuts_down_without_artifacts() {
+        // No models are created, so no artifact dir is touched.
+        let kml = KafkaMl::start(KafkaMlConfig {
+            control_logger: false,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(kml.backend_url().starts_with("http://127.0.0.1:"));
+        // REST back-end is actually serving.
+        let models = kml.backend();
+        assert!(models.model_artifact_dir(1).is_err()); // 404 -> err
+        kml.shutdown();
+    }
+
+    #[test]
+    fn control_logger_pod_runs_and_logs() {
+        let kml = KafkaMl::start(KafkaMlConfig::default()).unwrap();
+        kml.orch
+            .wait_rc_ready("control-logger", Duration::from_secs(5))
+            .unwrap();
+        // Produce a control message directly; the logger must forward it
+        // to the back-end store.
+        let msg = ControlMessage {
+            deployment_id: 77,
+            stream: StreamRef::new("data", 0, 0, 10),
+            input_format: "RAW".into(),
+            input_config: Json::obj(vec![
+                ("dtype", Json::str("f32")),
+                ("shape", Json::arr(vec![Json::from(2u64)])),
+            ]),
+            validation_rate: 0.5,
+            total_msg: 10,
+        };
+        kml.cluster
+            .produce(
+                CONTROL_TOPIC,
+                0,
+                vec![crate::broker::Record::new(msg.encode())],
+                ClientLocality::External,
+                None,
+            )
+            .unwrap();
+        kml.wait_control_logged(77, Duration::from_secs(5)).unwrap();
+        let e = kml.store.last_control_for(77).unwrap();
+        assert_eq!(e.length, 10);
+        assert_eq!(e.validation_rate, 0.5);
+        kml.shutdown();
+    }
+}

@@ -1,0 +1,241 @@
+//! Data-stream reuse over the distributed log (§V, Fig 8).
+//!
+//! Because the broker retains records independently of consumption, a
+//! data stream that was ingested once for deployment D1 can be handed to
+//! D2, D3, … by re-sending only its *control message* (tens of bytes)
+//! with the new `deployment_id` — as long as the window is still within
+//! the retention horizon. This module implements that bookkeeping:
+//! listing reusable streams, checking expiry against the live log, and
+//! performing the re-send.
+
+use super::control::{ControlMessage, StreamRef, CONTROL_TOPIC};
+use crate::broker::{ClientLocality, ClusterHandle, Record};
+use crate::registry::{ControlLogEntry, Store};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Why a logged stream can(not) be reused right now.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamAvailability {
+    /// Fully within the log: reusable.
+    Available,
+    /// The log's start has moved past (part of) the window — Fig 8's
+    /// "expiring/expired" stream.
+    Expired { log_start: u64 },
+    /// The topic/partition vanished entirely.
+    Gone,
+}
+
+pub struct ReuseManager {
+    cluster: ClusterHandle,
+    store: Arc<Store>,
+}
+
+impl ReuseManager {
+    pub fn new(cluster: ClusterHandle, store: Arc<Store>) -> ReuseManager {
+        ReuseManager { cluster, store }
+    }
+
+    /// All logged streams with their live availability (the Web-UI list
+    /// the paper describes: "users can see the list of the data streams
+    /// sent to Kafka-ML and send again the data stream to other
+    /// configurations").
+    pub fn list_streams(&self) -> Vec<(ControlLogEntry, StreamAvailability)> {
+        self.store
+            .control_log()
+            .into_iter()
+            .map(|e| {
+                let avail = self.availability(&e);
+                (e, avail)
+            })
+            .collect()
+    }
+
+    pub fn availability(&self, entry: &ControlLogEntry) -> StreamAvailability {
+        match self.cluster.offsets(&entry.topic, entry.partition) {
+            Err(_) => StreamAvailability::Gone,
+            Ok((earliest, _)) => {
+                if entry.offset < earliest {
+                    StreamAvailability::Expired { log_start: earliest }
+                } else {
+                    StreamAvailability::Available
+                }
+            }
+        }
+    }
+
+    /// Re-send the latest stream of `from_deployment` to `to_deployment`
+    /// (Fig 8: C1 re-sent so D2 consumes the same green data). Returns
+    /// the control message sent. Costs one control record — the data
+    /// stream itself is NOT re-transmitted.
+    pub fn resend(
+        &self,
+        from_deployment: u64,
+        to_deployment: u64,
+        locality: ClientLocality,
+    ) -> Result<ControlMessage> {
+        let entry = self
+            .store
+            .last_control_for(from_deployment)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no logged stream for deployment {from_deployment}")
+            })?;
+        match self.availability(&entry) {
+            StreamAvailability::Available => {}
+            StreamAvailability::Expired { log_start } => bail!(
+                "stream {} of deployment {from_deployment} has expired \
+                 (log now starts at {log_start}); the data must be re-sent",
+                StreamRef::new(&entry.topic, entry.partition, entry.offset, entry.length)
+                    .format()
+            ),
+            StreamAvailability::Gone => {
+                bail!("topic {} no longer exists", entry.topic)
+            }
+        }
+        let msg = ControlMessage {
+            deployment_id: to_deployment,
+            stream: StreamRef::new(&entry.topic, entry.partition, entry.offset, entry.length),
+            input_format: entry.input_format.clone(),
+            input_config: entry.input_config.clone(),
+            validation_rate: entry.validation_rate,
+            total_msg: entry.total_msg,
+        };
+        self.cluster.topic_or_create(CONTROL_TOPIC);
+        self.cluster.produce(
+            CONTROL_TOPIC,
+            0,
+            vec![Record::new(msg.encode())],
+            locality,
+            None,
+        )?;
+        self.cluster
+            .metrics
+            .counter("kafka_ml.streams.reused")
+            .inc();
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::{BrokerConfig, CleanupPolicy, Cluster, LogConfig};
+    use crate::json::Json;
+    use crate::util::clock::ManualClock;
+
+    fn entry(dep: u64, topic: &str, offset: u64, length: u64) -> ControlLogEntry {
+        ControlLogEntry {
+            deployment_id: dep,
+            topic: topic.to_string(),
+            partition: 0,
+            offset,
+            length,
+            input_format: "RAW".into(),
+            input_config: Json::obj(vec![
+                ("dtype", Json::str("f32")),
+                ("shape", Json::arr(vec![Json::from(2u64)])),
+            ]),
+            validation_rate: 0.1,
+            total_msg: length,
+            logged_ms: 0,
+        }
+    }
+
+    fn fill(c: &ClusterHandle, topic: &str, n: usize) {
+        c.create_topic(topic, 1);
+        for i in 0..n {
+            c.produce(
+                topic,
+                0,
+                vec![Record::new(vec![i as u8; 8])],
+                ClientLocality::InCluster,
+                None,
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn resend_copies_stream_with_new_deployment() {
+        let c = Cluster::new(BrokerConfig::default());
+        fill(&c, "data", 100);
+        let store = Arc::new(Store::new());
+        store.log_control(entry(1, "data", 0, 100));
+        let rm = ReuseManager::new(c.clone(), store);
+        let msg = rm.resend(1, 2, ClientLocality::InCluster).unwrap();
+        assert_eq!(msg.deployment_id, 2);
+        assert_eq!(msg.stream.format(), "[data:0:0:100]");
+        assert_eq!(msg.input_format, "RAW");
+        // The control topic received exactly one new message.
+        let (_, latest) = c.offsets(CONTROL_TOPIC, 0).unwrap();
+        assert_eq!(latest, 1);
+        // And it decodes to the re-targeted message.
+        let recs = c.fetch(CONTROL_TOPIC, 0, 0, 10, ClientLocality::InCluster).unwrap();
+        let decoded = ControlMessage::decode(&recs[0].record.value).unwrap();
+        assert_eq!(decoded.deployment_id, 2);
+    }
+
+    #[test]
+    fn expired_stream_cannot_be_reused() {
+        let clock = ManualClock::new(1_000);
+        let c = Cluster::with_clock(
+            BrokerConfig {
+                log: LogConfig {
+                    segment_bytes: 128,
+                    retention_ms: Some(500),
+                    retention_bytes: None,
+                    cleanup_policy: CleanupPolicy::Delete,
+                },
+                ..Default::default()
+            },
+            std::sync::Arc::new(clock.clone()),
+        );
+        fill(&c, "data", 50);
+        let store = Arc::new(Store::new());
+        store.log_control(entry(1, "data", 0, 50));
+        let rm = ReuseManager::new(c.clone(), store);
+        assert_eq!(
+            rm.availability(&entry(1, "data", 0, 50)),
+            StreamAvailability::Available
+        );
+        // Let it expire.
+        clock.advance_ms(60_000);
+        fill(&c, "data", 5); // fresh segment so old ones can drop
+        c.run_retention();
+        match rm.availability(&entry(1, "data", 0, 50)) {
+            StreamAvailability::Expired { log_start } => assert!(log_start > 0),
+            other => panic!("expected Expired, got {other:?}"),
+        }
+        let err = rm.resend(1, 2, ClientLocality::InCluster).unwrap_err();
+        assert!(err.to_string().contains("expired"), "{err}");
+    }
+
+    #[test]
+    fn unknown_topic_is_gone() {
+        let c = Cluster::new(BrokerConfig::default());
+        let store = Arc::new(Store::new());
+        let rm = ReuseManager::new(c, store);
+        assert_eq!(rm.availability(&entry(1, "ghost", 0, 5)), StreamAvailability::Gone);
+    }
+
+    #[test]
+    fn resend_without_log_entry_errors() {
+        let c = Cluster::new(BrokerConfig::default());
+        let rm = ReuseManager::new(c, Arc::new(Store::new()));
+        assert!(rm.resend(1, 2, ClientLocality::InCluster).is_err());
+    }
+
+    #[test]
+    fn list_streams_reports_mixed_availability() {
+        let c = Cluster::new(BrokerConfig::default());
+        fill(&c, "live", 10);
+        let store = Arc::new(Store::new());
+        store.log_control(entry(1, "live", 0, 10));
+        store.log_control(entry(2, "ghost", 0, 10));
+        let rm = ReuseManager::new(c, store);
+        let list = rm.list_streams();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0].1, StreamAvailability::Available);
+        assert_eq!(list[1].1, StreamAvailability::Gone);
+    }
+}

@@ -1,0 +1,417 @@
+//! The training Job — Algorithm 1 of the paper (§IV-C).
+//!
+//! ```text
+//! model <- downloadModelFromBackend(model_url)
+//! while not trained:
+//!   msg <- readControlStreams()
+//!   if deployment_id == msg.deployment_id:
+//!     training_stream <- readStream(msg.topic)
+//!     if msg.validation_rate > 0: take/split
+//!     training_res <- trainModel(...)
+//!     if msg.validation_rate > 0: evaluation_res <- evaluateModel(...)
+//!     uploadTrainedModelAndMetrics(...)
+//! ```
+//!
+//! `run_training_job` is the algorithm itself, callable inline (the
+//! Tables I/II "data streams" column trains without containers) or
+//! wrapped as an orchestrator entrypoint by
+//! [`crate::coordinator::pipeline`] (the "& containerization" column).
+//! Each invocation loads its own PJRT [`Engine`] — exactly as each of
+//! the paper's containers loads its own TensorFlow model (and required
+//! here because PJRT handles are not `Send`).
+
+use super::control::{ControlMessage, CONTROL_TOPIC};
+use crate::broker::{ClientLocality, ClusterHandle, Consumer};
+use crate::exec::CancelToken;
+use crate::formats::{registry, Sample};
+use crate::ml::{epoch_batches, split_validation, MetricAverager};
+use crate::registry::{BackendClient, TrainingMetrics};
+use crate::runtime::Engine;
+use crate::util::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::time::{Duration, Instant};
+
+/// Everything a training job needs (the paper passes these as container
+/// env vars; the entrypoint wrapper in `pipeline.rs` does the same).
+#[derive(Debug, Clone)]
+pub struct TrainingJobConfig {
+    pub deployment_id: u64,
+    pub result_id: u64,
+    pub artifact_dir: String,
+    pub backend_url: String,
+    pub epochs: usize,
+    pub shuffle: bool,
+    /// Seed for shuffling (deterministic runs).
+    pub seed: u64,
+    /// How long to wait for the control message.
+    pub control_timeout: Duration,
+    /// Where this job's broker clients sit (InCluster when containerized).
+    pub locality: ClientLocality,
+}
+
+impl TrainingJobConfig {
+    pub fn new(deployment_id: u64, result_id: u64, artifact_dir: &str, backend_url: &str) -> Self {
+        TrainingJobConfig {
+            deployment_id,
+            result_id,
+            artifact_dir: artifact_dir.to_string(),
+            backend_url: backend_url.to_string(),
+            epochs: 1,
+            shuffle: true,
+            seed: 42,
+            control_timeout: Duration::from_secs(60),
+            locality: ClientLocality::InCluster,
+        }
+    }
+}
+
+/// Outcome of a training job (also uploaded to the back-end).
+#[derive(Debug, Clone)]
+pub struct TrainingOutcome {
+    pub metrics: TrainingMetrics,
+    pub steps: u64,
+    pub samples_train: usize,
+    pub samples_val: usize,
+}
+
+/// Block until the control message for `deployment_id` arrives
+/// (Algorithm 1's `readControlStreams` loop). Ignores messages for other
+/// deployments — several jobs share the control topic.
+pub fn await_control_message(
+    cluster: &ClusterHandle,
+    deployment_id: u64,
+    locality: ClientLocality,
+    timeout: Duration,
+    cancel: &CancelToken,
+) -> Result<ControlMessage> {
+    cluster.topic_or_create(CONTROL_TOPIC);
+    let mut consumer = Consumer::new(cluster.clone(), locality);
+    consumer.assign(vec![(CONTROL_TOPIC.to_string(), 0)]);
+    let deadline = Instant::now() + timeout;
+    loop {
+        if cancel.is_cancelled() {
+            bail!("cancelled while waiting for control message");
+        }
+        for rec in consumer.poll(64)? {
+            match ControlMessage::decode(&rec.record.value) {
+                Ok(msg) if msg.deployment_id == deployment_id => return Ok(msg),
+                Ok(_) => {} // someone else's stream
+                Err(e) => log::warn!("skipping bad control message: {e}"),
+            }
+        }
+        if Instant::now() >= deadline {
+            bail!("timed out waiting for control message for deployment {deployment_id}");
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Read the exact log window a control message names and decode it.
+pub fn read_stream_window(
+    cluster: &ClusterHandle,
+    msg: &ControlMessage,
+    locality: ClientLocality,
+) -> Result<Vec<Sample>> {
+    let format = registry(&msg.input_format, &msg.input_config)?;
+    let mut consumer = Consumer::new(cluster.clone(), locality);
+    let tp = (msg.stream.topic.clone(), msg.stream.partition);
+    // The window must still be in the log (retention!) — §V.
+    let (earliest, latest) = cluster.offsets(&msg.stream.topic, msg.stream.partition)?;
+    if msg.stream.offset < earliest {
+        bail!(
+            "stream {} expired: starts at {} but log begins at {earliest}",
+            msg.stream.format(),
+            msg.stream.offset
+        );
+    }
+    if msg.stream.end_offset() > latest {
+        bail!(
+            "stream {} incomplete: ends at {} but log has only {latest}",
+            msg.stream.format(),
+            msg.stream.end_offset()
+        );
+    }
+    consumer.assign(vec![tp.clone()]);
+    consumer.seek(tp, msg.stream.offset);
+    let mut samples = Vec::with_capacity(msg.stream.length as usize);
+    while (samples.len() as u64) < msg.stream.length {
+        let max = (msg.stream.length as usize - samples.len()).min(512);
+        let recs = consumer.poll(max)?;
+        if recs.is_empty() {
+            bail!("stream window drained early at {} records", samples.len());
+        }
+        for rec in recs {
+            if rec.offset >= msg.stream.end_offset() {
+                break;
+            }
+            samples.push(format.decode(&rec.record)?);
+        }
+    }
+    Ok(samples)
+}
+
+/// Algorithm 1, minus the control-message wait (already done by the
+/// caller): train on the window, optionally evaluate, return metrics.
+pub fn train_on_samples(
+    engine: &Engine,
+    samples: Vec<Sample>,
+    validation_rate: f64,
+    epochs: usize,
+    shuffle: bool,
+    seed: u64,
+    cancel: &CancelToken,
+) -> Result<(crate::runtime::ModelParams, TrainingOutcome)> {
+    let meta = engine.meta();
+    let (train, val) = split_validation(samples, validation_rate);
+    if train.len() < meta.batch {
+        bail!(
+            "not enough training samples ({}) for one batch of {}",
+            train.len(),
+            meta.batch
+        );
+    }
+    let init = engine.init_params()?;
+    let mut state = engine.train_state(&init)?;
+    let mut rng = Rng::new(seed);
+    let mut loss_curve = Vec::with_capacity(epochs);
+    let mut last_epoch = MetricAverager::new();
+    let mut steps = 0u64;
+    for _epoch in 0..epochs {
+        if cancel.is_cancelled() {
+            bail!("training cancelled");
+        }
+        let batches = epoch_batches(
+            &train,
+            meta.batch,
+            meta.input_dim,
+            if shuffle { Some(&mut rng) } else { None },
+        )?;
+        let mut epoch_avg = MetricAverager::new();
+        for (x, y) in &batches {
+            let (loss, acc) = engine.train_step(&mut state, x, y)?;
+            epoch_avg.push(loss, acc);
+            steps += 1;
+        }
+        loss_curve.push(epoch_avg.loss());
+        last_epoch = epoch_avg;
+    }
+
+    // Evaluation (if validation_rate > 0) on full batches of the tail.
+    let (val_loss, val_acc) = if !val.is_empty() && val.len() >= meta.batch {
+        let mut avg = MetricAverager::new();
+        for (x, y) in epoch_batches(&val, meta.batch, meta.input_dim, None)? {
+            let (l, a) = engine.eval_step(&state.params, &x, &y)?;
+            avg.push(l, a);
+        }
+        (Some(avg.loss()), Some(avg.accuracy()))
+    } else {
+        (None, None)
+    };
+
+    let params = engine.params_of(&state)?;
+    let outcome = TrainingOutcome {
+        metrics: TrainingMetrics {
+            loss: last_epoch.loss(),
+            accuracy: last_epoch.accuracy(),
+            val_loss,
+            val_accuracy: val_acc,
+            loss_curve,
+        },
+        steps,
+        samples_train: train.len(),
+        samples_val: val.len(),
+    };
+    Ok((params, outcome))
+}
+
+/// The full training Job (Algorithm 1). Returns the outcome after
+/// uploading model + metrics to the back-end.
+pub fn run_training_job(
+    cluster: &ClusterHandle,
+    config: &TrainingJobConfig,
+    cancel: &CancelToken,
+) -> Result<TrainingOutcome> {
+    let backend = BackendClient::new(&config.backend_url);
+    backend
+        .set_result_status(config.result_id, "training")
+        .ok(); // best-effort status update
+
+    // "downloadModelFromBackend": load + compile the model artifacts.
+    let engine = Engine::load(&config.artifact_dir)
+        .map_err(|e| anyhow!("loading model artifacts: {e}"))?;
+
+    let msg = await_control_message(
+        cluster,
+        config.deployment_id,
+        config.locality,
+        config.control_timeout,
+        cancel,
+    )?;
+    let samples = read_stream_window(cluster, &msg, config.locality)?;
+    let (params, outcome) = train_on_samples(
+        &engine,
+        samples,
+        msg.validation_rate,
+        config.epochs,
+        config.shuffle,
+        config.seed,
+        cancel,
+    )?;
+    backend.upload_trained_model(config.result_id, &params, &outcome.metrics)?;
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::{BrokerConfig, Cluster, Producer, ProducerConfig, Record};
+    use crate::json::Json;
+
+    fn cluster() -> ClusterHandle {
+        Cluster::new(BrokerConfig::default())
+    }
+
+    fn raw_config() -> Json {
+        crate::json::parse(r#"{"dtype": "f32", "shape": [2]}"#).unwrap()
+    }
+
+    fn produce_samples(c: &ClusterHandle, topic: &str, n: usize) -> ControlMessage {
+        let fmt = registry("RAW", &raw_config()).unwrap();
+        let mut p = Producer::new(
+            c.clone(),
+            ProducerConfig { batch_size: 32, ..Default::default() },
+        );
+        c.create_topic(topic, 1);
+        let (_, base) = c.offsets(topic, 0).unwrap();
+        for i in 0..n {
+            let rec = fmt
+                .encode(&[i as f32, -(i as f32)], Some((i % 4) as i32))
+                .unwrap();
+            p.send_to(topic, 0, rec).unwrap();
+        }
+        p.flush().unwrap();
+        ControlMessage {
+            deployment_id: 1,
+            stream: super::super::control::StreamRef::new(topic, 0, base, n as u64),
+            input_format: "RAW".into(),
+            input_config: raw_config(),
+            validation_rate: 0.0,
+            total_msg: n as u64,
+        }
+    }
+
+    #[test]
+    fn await_matches_only_own_deployment() {
+        let c = cluster();
+        c.create_topic(CONTROL_TOPIC, 1);
+        let other = ControlMessage {
+            deployment_id: 99,
+            stream: super::super::control::StreamRef::new("t", 0, 0, 1),
+            input_format: "RAW".into(),
+            input_config: raw_config(),
+            validation_rate: 0.0,
+            total_msg: 1,
+        };
+        let mine = ControlMessage { deployment_id: 1, ..other.clone() };
+        c.produce(
+            CONTROL_TOPIC,
+            0,
+            vec![Record::new(other.encode()), Record::new(mine.encode())],
+            ClientLocality::InCluster,
+            None,
+        )
+        .unwrap();
+        let got = await_control_message(
+            &c,
+            1,
+            ClientLocality::InCluster,
+            Duration::from_secs(2),
+            &CancelToken::new(),
+        )
+        .unwrap();
+        assert_eq!(got.deployment_id, 1);
+    }
+
+    #[test]
+    fn await_times_out_without_message() {
+        let c = cluster();
+        let err = await_control_message(
+            &c,
+            1,
+            ClientLocality::InCluster,
+            Duration::from_millis(50),
+            &CancelToken::new(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("timed out"));
+    }
+
+    #[test]
+    fn await_respects_cancel() {
+        let c = cluster();
+        let cancel = CancelToken::new();
+        cancel.cancel();
+        let err = await_control_message(
+            &c,
+            1,
+            ClientLocality::InCluster,
+            Duration::from_secs(5),
+            &cancel,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("cancelled"));
+    }
+
+    #[test]
+    fn read_window_exact_range() {
+        let c = cluster();
+        let mut msg = produce_samples(&c, "data", 50);
+        // Restrict to a sub-window [10, 30).
+        msg.stream.offset = 10;
+        msg.stream.length = 20;
+        let samples = read_stream_window(&c, &msg, ClientLocality::InCluster).unwrap();
+        assert_eq!(samples.len(), 20);
+        assert_eq!(samples[0].features[0], 10.0);
+        assert_eq!(samples[19].features[0], 29.0);
+        assert_eq!(samples[0].label, Some(2));
+    }
+
+    #[test]
+    fn read_window_detects_expired_stream() {
+        use crate::broker::{CleanupPolicy, LogConfig};
+        use crate::util::clock::ManualClock;
+        use std::sync::Arc;
+        let clock = ManualClock::new(1_000);
+        let c = Cluster::with_clock(
+            BrokerConfig {
+                log: LogConfig {
+                    segment_bytes: 256,
+                    retention_ms: Some(500),
+                    retention_bytes: None,
+                    cleanup_policy: CleanupPolicy::Delete,
+                },
+                ..Default::default()
+            },
+            Arc::new(clock.clone()),
+        );
+        let msg = produce_samples(&c, "data", 100);
+        clock.advance_ms(10_000);
+        // Append fresh data so old segments can be deleted.
+        produce_samples(&c, "data", 10);
+        c.run_retention();
+        let err = read_stream_window(&c, &msg, ClientLocality::InCluster).unwrap_err();
+        assert!(err.to_string().contains("expired"), "{err}");
+    }
+
+    #[test]
+    fn read_window_detects_incomplete_stream() {
+        let c = cluster();
+        let mut msg = produce_samples(&c, "data", 10);
+        msg.stream.length = 50; // claims more than the log has
+        let err = read_stream_window(&c, &msg, ClientLocality::InCluster).unwrap_err();
+        assert!(err.to_string().contains("incomplete"), "{err}");
+    }
+
+    // Engine-backed tests (real artifacts) live in
+    // rust/tests/pipeline_integration.rs.
+}

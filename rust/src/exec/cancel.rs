@@ -1,0 +1,80 @@
+//! Cooperative cancellation: clone a token into each worker; `cancel()`
+//! flips all clones. Used to stop inference replicas, reconcilers and
+//! the REST accept loop.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    /// Sleep in small slices so cancellation is observed promptly.
+    /// Returns `true` if the full duration elapsed, `false` if cancelled.
+    pub fn sleep(&self, d: Duration) -> bool {
+        let slice = Duration::from_millis(5);
+        let mut left = d;
+        while left > Duration::ZERO {
+            if self.is_cancelled() {
+                return false;
+            }
+            let step = left.min(slice);
+            std::thread::sleep(step);
+            left = left.saturating_sub(step);
+        }
+        !self.is_cancelled()
+    }
+
+    /// A child token that is cancelled when either it or the parent is.
+    /// (Implemented by sharing the same flag — sufficient for our tree-of
+    /// -workers usage where children never outlive a cancelled parent.)
+    pub fn child(&self) -> CancelToken {
+        self.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancels_across_clones() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t2.is_cancelled());
+        t.cancel();
+        assert!(t2.is_cancelled());
+    }
+
+    #[test]
+    fn sleep_interrupted_by_cancel() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || t2.sleep(Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(20));
+        t.cancel();
+        let completed = h.join().unwrap();
+        assert!(!completed);
+    }
+
+    #[test]
+    fn sleep_completes_when_not_cancelled() {
+        let t = CancelToken::new();
+        assert!(t.sleep(Duration::from_millis(10)));
+    }
+}

@@ -1,0 +1,14 @@
+//! Execution substrate: thread pool, bounded channels with backpressure,
+//! and cancellation tokens.
+//!
+//! The offline vendor set has no tokio, so the event loops Kafka-ML needs
+//! (broker request handling, orchestrator reconciliation, training jobs,
+//! inference replicas, the REST server) run on this std-only substrate.
+
+mod cancel;
+mod channel;
+mod pool;
+
+pub use cancel::CancelToken;
+pub use channel::{bounded, unbounded, Receiver, RecvError, SendError, Sender, TryRecvError};
+pub use pool::ThreadPool;

@@ -1,0 +1,133 @@
+//! Fixed-size thread pool with graceful shutdown; used by the REST server
+//! and the orchestrator's container runtime.
+
+use super::channel::{unbounded, Receiver, Sender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<Sender<Task>>,
+    workers: Vec<JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize, name: &str) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = unbounded::<Task>();
+        let active = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx: Receiver<Task> = rx.clone();
+                let active = active.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || {
+                        while let Ok(task) = rx.recv() {
+                            active.fetch_add(1, Ordering::SeqCst);
+                            task();
+                            active.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, active }
+    }
+
+    /// Enqueue a task. Panics if called after shutdown (programmer error).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .ok();
+    }
+
+    /// Tasks currently running (not queued).
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Queued-but-not-started tasks.
+    pub fn queued(&self) -> usize {
+        self.tx.as_ref().map(|t| t.len()).unwrap_or(0)
+    }
+
+    /// Drain the queue and join all workers.
+    pub fn shutdown(mut self) {
+        self.join_inner();
+    }
+
+    fn join_inner(&mut self) {
+        self.tx.take(); // closes the channel => workers exit after drain
+        for h in self.workers.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.join_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+    use std::sync::Arc;
+
+    #[test]
+    fn runs_all_tasks() {
+        let pool = ThreadPool::new(4, "t");
+        let counter = Arc::new(AtomicU32::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallelism_actually_happens() {
+        use std::time::{Duration, Instant};
+        let pool = ThreadPool::new(8, "p");
+        let start = Instant::now();
+        let done = Arc::new(AtomicU32::new(0));
+        for _ in 0..8 {
+            let d = done.clone();
+            pool.execute(move || {
+                std::thread::sleep(Duration::from_millis(50));
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::SeqCst), 8);
+        // 8 × 50ms serially = 400ms; parallel should be well under half.
+        assert!(start.elapsed() < Duration::from_millis(300));
+    }
+
+    #[test]
+    fn drop_joins_outstanding_work() {
+        let counter = Arc::new(AtomicU32::new(0));
+        {
+            let pool = ThreadPool::new(2, "d");
+            for _ in 0..10 {
+                let c = counter.clone();
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

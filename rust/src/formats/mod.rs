@@ -1,0 +1,260 @@
+//! Data-stream formats: how Kafka records map to model samples.
+//!
+//! §III-D: Kafka-ML supports **RAW** ("suitable for single-input data
+//! streams that may request a reshape, like images") and **Apache Avro**
+//! ("suitable for complex and multi-input datasets where a scheme
+//! specifies how the data stream is decoded"), and "is opened for the
+//! support of new data formats" — hence the [`DataFormat`] trait and the
+//! [`registry`] keyed by the control message's `input_format` string.
+//!
+//! Sample layout on the wire mirrors TensorFlow/IO's KafkaDataset
+//! convention the paper builds on: the record **value** carries the
+//! feature datum, the record **key** carries the label datum (absent for
+//! inference requests).
+
+mod raw;
+
+pub use raw::{RawConfig, RawDType};
+
+use crate::avro::{self, AvroValue, Schema};
+use crate::broker::Record;
+use crate::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// One decoded training/inference sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub features: Vec<f32>,
+    /// Class label; `None` for inference-path records.
+    pub label: Option<i32>,
+}
+
+/// A pluggable stream format (the paper's `input_format`).
+pub trait DataFormat: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Decode one Kafka record into a sample.
+    fn decode(&self, record: &Record) -> Result<Sample>;
+    /// Encode a sample into a Kafka record (the producer-side "library"
+    /// the paper provides for dispatching data streams).
+    fn encode(&self, features: &[f32], label: Option<i32>) -> Result<Record>;
+}
+
+/// Construct the format named by a control message (`input_format` +
+/// `input_config`).
+pub fn registry(input_format: &str, input_config: &Json) -> Result<Box<dyn DataFormat>> {
+    match input_format.to_ascii_uppercase().as_str() {
+        "RAW" => Ok(Box::new(RawConfig::from_json(input_config)?)),
+        "AVRO" => Ok(Box::new(AvroFormat::from_json(input_config)?)),
+        other => bail!("unknown input_format '{other}' (supported: RAW, AVRO)"),
+    }
+}
+
+// ---- Avro format -----------------------------------------------------------------
+
+/// Avro-encoded samples: value = data record, key = label record.
+pub struct AvroFormat {
+    pub data_schema: Schema,
+    pub label_schema: Schema,
+}
+
+impl AvroFormat {
+    /// `input_config`: `{"data_scheme": {...}, "label_scheme": {...}}` —
+    /// field names follow the paper's control-message description.
+    pub fn from_json(config: &Json) -> Result<AvroFormat> {
+        let data = config.get("data_scheme");
+        let label = config.get("label_scheme");
+        if data.is_null() || label.is_null() {
+            bail!("AVRO input_config needs data_scheme and label_scheme");
+        }
+        Ok(AvroFormat {
+            data_schema: Schema::from_json(data)?,
+            label_schema: Schema::from_json(label)?,
+        })
+    }
+
+    /// Encode a full AvroValue pair (for callers building rich records).
+    pub fn encode_values(&self, data: &AvroValue, label: Option<&AvroValue>) -> Result<Record> {
+        let value = avro::encode(&self.data_schema, data)?;
+        let key = label
+            .map(|l| avro::encode(&self.label_schema, l))
+            .transpose()?;
+        Ok(Record { key, value, timestamp_ms: 0, headers: Vec::new() })
+    }
+}
+
+impl DataFormat for AvroFormat {
+    fn name(&self) -> &'static str {
+        "AVRO"
+    }
+
+    fn decode(&self, record: &Record) -> Result<Sample> {
+        let data = avro::decode(&self.data_schema, &record.value)?;
+        let mut features = Vec::new();
+        data.flatten_numeric(&mut features);
+        let label = match &record.key {
+            Some(k) if !k.is_empty() => {
+                let l = avro::decode(&self.label_schema, k)?;
+                let mut ls = Vec::new();
+                l.flatten_numeric(&mut ls);
+                Some(
+                    ls.first()
+                        .copied()
+                        .ok_or_else(|| anyhow!("label record has no numeric field"))?
+                        as i32,
+                )
+            }
+            _ => None,
+        };
+        Ok(Sample { features, label })
+    }
+
+    fn encode(&self, features: &[f32], label: Option<i32>) -> Result<Record> {
+        // Generic encode: map the flat feature vector onto the schema's
+        // numeric leaves in order. Only fixed-width schemas support this;
+        // array fields consume all remaining features.
+        let data = build_value_from_features(&self.data_schema, features)?;
+        let label_v = label
+            .map(|l| build_label_value(&self.label_schema, l))
+            .transpose()?;
+        self.encode_values(&data, label_v.as_ref())
+    }
+}
+
+fn build_value_from_features(schema: &Schema, features: &[f32]) -> Result<AvroValue> {
+    let mut idx = 0usize;
+    let v = build_record(schema, features, &mut idx)?;
+    if idx != features.len() {
+        bail!(
+            "feature vector length {} does not fit schema '{}' (consumed {idx})",
+            features.len(),
+            schema.name
+        );
+    }
+    Ok(v)
+}
+
+fn build_record(schema: &Schema, features: &[f32], idx: &mut usize) -> Result<AvroValue> {
+    use crate::avro::AvroType::*;
+    let mut fields = Vec::with_capacity(schema.fields.len());
+    let n_fields = schema.fields.len();
+    for (fi, f) in schema.fields.iter().enumerate() {
+        let take = |idx: &mut usize| -> Result<f32> {
+            let v = features
+                .get(*idx)
+                .copied()
+                .ok_or_else(|| anyhow!("feature vector too short for schema"))?;
+            *idx += 1;
+            Ok(v)
+        };
+        let val = match &f.ty {
+            Boolean => AvroValue::Boolean(take(idx)? != 0.0),
+            Int => AvroValue::Int(take(idx)? as i32),
+            Long => AvroValue::Long(take(idx)? as i64),
+            Float => AvroValue::Float(take(idx)?),
+            Double => AvroValue::Double(take(idx)? as f64),
+            Str => AvroValue::Str(String::new()),
+            Bytes => AvroValue::Bytes(Vec::new()),
+            Array(item_ty) => {
+                // Last field armed with an array absorbs the remainder.
+                if fi != n_fields - 1 {
+                    bail!("array field '{}' must be last for flat encoding", f.name);
+                }
+                let mut items = Vec::new();
+                while *idx < features.len() {
+                    let x = take(idx)?;
+                    items.push(match **item_ty {
+                        Float => AvroValue::Float(x),
+                        Double => AvroValue::Double(x as f64),
+                        Int => AvroValue::Int(x as i32),
+                        Long => AvroValue::Long(x as i64),
+                        _ => bail!("unsupported array item type for flat encoding"),
+                    });
+                }
+                AvroValue::Array(items)
+            }
+            Record(inner) => build_record(inner, features, idx)?,
+        };
+        fields.push((f.name.clone(), val));
+    }
+    Ok(AvroValue::Record(fields))
+}
+
+fn build_label_value(schema: &Schema, label: i32) -> Result<AvroValue> {
+    use crate::avro::AvroType::*;
+    if schema.fields.len() != 1 {
+        bail!("label scheme must have exactly one field");
+    }
+    let f = &schema.fields[0];
+    let v = match &f.ty {
+        Int => AvroValue::Int(label),
+        Long => AvroValue::Long(label as i64),
+        Float => AvroValue::Float(label as f32),
+        Double => AvroValue::Double(label as f64),
+        other => bail!("label field type {other:?} not numeric"),
+    };
+    Ok(AvroValue::Record(vec![(f.name.clone(), v)]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    fn avro_config() -> Json {
+        parse(
+            r#"{
+          "data_scheme": {"type":"record","name":"copd","fields":[
+            {"name":"age","type":"int"},
+            {"name":"gender","type":"int"},
+            {"name":"smoking","type":"int"},
+            {"name":"sensors","type":{"type":"array","items":"float"}}]},
+          "label_scheme": {"type":"record","name":"label","fields":[
+            {"name":"diagnosis","type":"int"}]}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn registry_dispatches() {
+        let f = registry("avro", &avro_config()).unwrap();
+        assert_eq!(f.name(), "AVRO");
+        let raw_cfg = parse(r#"{"dtype":"f32","shape":[4]}"#).unwrap();
+        assert_eq!(registry("RAW", &raw_cfg).unwrap().name(), "RAW");
+        assert!(registry("protobuf", &Json::Null).is_err());
+    }
+
+    #[test]
+    fn avro_roundtrip_with_label() {
+        let f = registry("AVRO", &avro_config()).unwrap();
+        let features = vec![63.0, 1.0, 2.0, 0.5, -1.5, 3.0, 4.5, 9.0];
+        let rec = f.encode(&features, Some(3)).unwrap();
+        assert!(rec.key.is_some());
+        let s = f.decode(&rec).unwrap();
+        assert_eq!(s.features, features);
+        assert_eq!(s.label, Some(3));
+    }
+
+    #[test]
+    fn avro_roundtrip_inference_no_label() {
+        let f = registry("AVRO", &avro_config()).unwrap();
+        let features = vec![40.0, 0.0, 1.0, 1.25];
+        let rec = f.encode(&features, None).unwrap();
+        assert!(rec.key.is_none());
+        let s = f.decode(&rec).unwrap();
+        assert_eq!(s.label, None);
+        assert_eq!(s.features, features);
+    }
+
+    #[test]
+    fn avro_config_requires_both_schemes() {
+        let cfg = parse(r#"{"data_scheme": {"type":"record","name":"x","fields":[{"name":"a","type":"int"}]}}"#).unwrap();
+        assert!(AvroFormat::from_json(&cfg).is_err());
+    }
+
+    #[test]
+    fn feature_vector_too_short_errors() {
+        let f = registry("AVRO", &avro_config()).unwrap();
+        assert!(f.encode(&[1.0, 2.0], Some(0)).is_err());
+    }
+}

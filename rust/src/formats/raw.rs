@@ -1,0 +1,214 @@
+//! RAW format: the record value is a flat tensor of a fixed dtype/shape
+//! (§III-D — "single-input data streams that may request a reshape, like
+//! images"); the record key, when present, is a little-endian i32 label.
+
+use super::{DataFormat, Sample};
+use crate::broker::Record;
+use crate::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RawDType {
+    F32,
+    U8,
+}
+
+impl RawDType {
+    pub fn size(self) -> usize {
+        match self {
+            RawDType::F32 => 4,
+            RawDType::U8 => 1,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RawDType> {
+        match s {
+            "f32" | "float32" => Ok(RawDType::F32),
+            "u8" | "uint8" => Ok(RawDType::U8),
+            other => bail!("unsupported RAW dtype '{other}'"),
+        }
+    }
+}
+
+/// RAW `input_config`: `{"dtype": "f32"|"u8", "shape": [d0, d1, ...]}`.
+/// u8 data is normalized to `[0,1]` on decode (the usual image path).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RawConfig {
+    pub dtype: RawDType,
+    pub shape: Vec<usize>,
+}
+
+impl RawConfig {
+    pub fn new(dtype: RawDType, shape: Vec<usize>) -> RawConfig {
+        RawConfig { dtype, shape }
+    }
+
+    pub fn from_json(config: &Json) -> Result<RawConfig> {
+        let dtype = RawDType::parse(config.get("dtype").as_str().unwrap_or("f32"))?;
+        let shape = config
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("RAW input_config needs shape[]"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+            .collect::<Result<Vec<_>>>()?;
+        if shape.is_empty() || shape.iter().any(|&d| d == 0) {
+            bail!("RAW shape must be non-empty and positive: {shape:?}");
+        }
+        Ok(RawConfig { dtype, shape })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "dtype",
+                Json::str(match self.dtype {
+                    RawDType::F32 => "f32",
+                    RawDType::U8 => "u8",
+                }),
+            ),
+            (
+                "shape",
+                Json::arr(self.shape.iter().map(|&d| Json::from(d)).collect()),
+            ),
+        ])
+    }
+}
+
+impl DataFormat for RawConfig {
+    fn name(&self) -> &'static str {
+        "RAW"
+    }
+
+    fn decode(&self, record: &Record) -> Result<Sample> {
+        let want = self.numel() * self.dtype.size();
+        if record.value.len() != want {
+            bail!(
+                "RAW record is {} bytes, shape {:?} ({:?}) wants {want}",
+                record.value.len(),
+                self.shape,
+                self.dtype
+            );
+        }
+        let features = match self.dtype {
+            RawDType::F32 => record
+                .value
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+            RawDType::U8 => record.value.iter().map(|&b| b as f32 / 255.0).collect(),
+        };
+        let label = match &record.key {
+            Some(k) if k.len() == 4 => {
+                Some(i32::from_le_bytes([k[0], k[1], k[2], k[3]]))
+            }
+            Some(k) if !k.is_empty() => bail!("RAW label key must be 4 bytes, got {}", k.len()),
+            _ => None,
+        };
+        Ok(Sample { features, label })
+    }
+
+    fn encode(&self, features: &[f32], label: Option<i32>) -> Result<Record> {
+        if features.len() != self.numel() {
+            bail!(
+                "feature count {} != shape {:?} numel {}",
+                features.len(),
+                self.shape,
+                self.numel()
+            );
+        }
+        let value = match self.dtype {
+            RawDType::F32 => features.iter().flat_map(|f| f.to_le_bytes()).collect(),
+            RawDType::U8 => features
+                .iter()
+                .map(|&f| (f.clamp(0.0, 1.0) * 255.0).round() as u8)
+                .collect(),
+        };
+        Ok(Record {
+            key: label.map(|l| l.to_le_bytes().to_vec()),
+            value,
+            timestamp_ms: 0,
+            headers: Vec::new(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    #[test]
+    fn f32_roundtrip_with_label() {
+        let c = RawConfig::new(RawDType::F32, vec![2, 2]);
+        let feats = vec![1.0, -2.5, 0.0, 9.75];
+        let rec = c.encode(&feats, Some(7)).unwrap();
+        assert_eq!(rec.value.len(), 16);
+        let s = c.decode(&rec).unwrap();
+        assert_eq!(s.features, feats);
+        assert_eq!(s.label, Some(7));
+    }
+
+    #[test]
+    fn u8_normalizes() {
+        let c = RawConfig::new(RawDType::U8, vec![4]);
+        let rec = Record::new(vec![0, 51, 204, 255]);
+        let s = c.decode(&rec).unwrap();
+        assert_eq!(s.features[0], 0.0);
+        assert_eq!(s.features[3], 1.0);
+        assert!((s.features[1] - 0.2).abs() < 1e-6);
+        assert_eq!(s.label, None);
+    }
+
+    #[test]
+    fn u8_encode_quantizes() {
+        let c = RawConfig::new(RawDType::U8, vec![3]);
+        let rec = c.encode(&[0.0, 0.5, 1.0], None).unwrap();
+        assert_eq!(rec.value, vec![0, 128, 255]);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let c = RawConfig::new(RawDType::F32, vec![3]);
+        assert!(c.decode(&Record::new(vec![0u8; 11])).is_err());
+        assert!(c.encode(&[1.0, 2.0], None).is_err());
+    }
+
+    #[test]
+    fn bad_label_key_rejected() {
+        let c = RawConfig::new(RawDType::F32, vec![1]);
+        let rec = Record {
+            key: Some(vec![1, 2]),
+            value: 1f32.to_le_bytes().to_vec(),
+            timestamp_ms: 0,
+            headers: vec![],
+        };
+        assert!(c.decode(&rec).is_err());
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let j = parse(r#"{"dtype": "u8", "shape": [28, 28]}"#).unwrap();
+        let c = RawConfig::from_json(&j).unwrap();
+        assert_eq!(c.dtype, RawDType::U8);
+        assert_eq!(c.numel(), 784);
+        let c2 = RawConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        for bad in [
+            r#"{"dtype": "f64", "shape": [1]}"#,
+            r#"{"dtype": "f32"}"#,
+            r#"{"dtype": "f32", "shape": []}"#,
+            r#"{"dtype": "f32", "shape": [0]}"#,
+        ] {
+            assert!(RawConfig::from_json(&parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Minimal-but-complete JSON substrate (RFC 8259).
+//!
+//! Used by the REST back-end, the registry's persisted state, Avro
+//! schemas, artifact metadata (`artifacts/meta.json`) and control-message
+//! encoding. Built from scratch — no serde in the offline vendor set.
+
+mod parse;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use write::{to_string, to_string_pretty};
+
+use std::collections::BTreeMap;
+
+/// A JSON value. Object keys are ordered (BTreeMap) so serialization is
+/// deterministic — handy for tests and content hashing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr(items: Vec<Json>) -> Json {
+        Json::Arr(items)
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn num(n: impl Into<f64>) -> Json {
+        Json::Num(n.into())
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|n| {
+            if n >= 0.0 && n.fract() == 0.0 && n <= u64::MAX as f64 {
+                Some(n as u64)
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().and_then(|n| {
+            if n.fract() == 0.0 && (i64::MIN as f64..=i64::MAX as f64).contains(&n) {
+                Some(n as i64)
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|n| n as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// `obj["key"]` lookup; `Json::Null` when missing or not an object.
+    pub fn get(&self, key: &str) -> &Json {
+        const NULL: &Json = &Json::Null;
+        match self {
+            Json::Obj(o) => o.get(key).unwrap_or(NULL),
+            _ => NULL,
+        }
+    }
+
+    /// Path lookup: `j.at(&["a", "b", "c"])`.
+    pub fn at(&self, path: &[&str]) -> &Json {
+        let mut cur = self;
+        for p in path {
+            cur = cur.get(p);
+        }
+        cur
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    // ---- typed convenience getters (error-reporting) ---------------------
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid string field '{key}'"))
+    }
+
+    pub fn req_u64(&self, key: &str) -> anyhow::Result<u64> {
+        self.get(key)
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid u64 field '{key}'"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid number field '{key}'"))
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+
+impl From<f64> for Json {
+    fn from(n: f64) -> Json {
+        Json::Num(n)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(n: u64) -> Json {
+        Json::Num(n as f64)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(n: usize) -> Json {
+        Json::Num(n as f64)
+    }
+}
+
+impl From<i64> for Json {
+    fn from(n: i64) -> Json {
+        Json::Num(n as f64)
+    }
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&to_string(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_object() {
+        let j = Json::obj(vec![
+            ("name", Json::str("kafka-ml")),
+            ("replicas", Json::num(3u64 as f64)),
+            ("tags", Json::arr(vec![Json::str("ml"), Json::str("stream")])),
+            ("nested", Json::obj(vec![("ok", Json::Bool(true))])),
+            ("none", Json::Null),
+        ]);
+        let s = to_string(&j);
+        let back = parse(&s).unwrap();
+        assert_eq!(j, back);
+    }
+
+    #[test]
+    fn accessors() {
+        let j = parse(r#"{"a": {"b": [1, 2, 3]}, "s": "x", "f": 1.5}"#).unwrap();
+        assert_eq!(j.at(&["a", "b"]).as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("s").as_str(), Some("x"));
+        assert_eq!(j.get("f").as_f64(), Some(1.5));
+        assert_eq!(j.get("f").as_u64(), None);
+        assert!(j.get("missing").is_null());
+    }
+
+    #[test]
+    fn req_getters_report_field() {
+        let j = parse(r#"{"a": 1}"#).unwrap();
+        assert_eq!(j.req_u64("a").unwrap(), 1);
+        let err = j.req_str("b").unwrap_err().to_string();
+        assert!(err.contains("'b'"), "{err}");
+    }
+
+    #[test]
+    fn from_impls() {
+        assert_eq!(Json::from(3u64), Json::Num(3.0));
+        assert_eq!(Json::from(true), Json::Bool(true));
+        assert_eq!(Json::from("hi"), Json::Str("hi".into()));
+    }
+}

@@ -1,0 +1,143 @@
+//! JSON serialization (compact + pretty), deterministic key order.
+
+use super::Json;
+
+pub fn to_string(j: &Json) -> String {
+    let mut out = String::new();
+    write_value(j, &mut out, None, 0);
+    out
+}
+
+pub fn to_string_pretty(j: &Json) -> String {
+    let mut out = String::new();
+    write_value(j, &mut out, Some(2), 0);
+    out
+}
+
+fn write_value(j: &Json, out: &mut String, indent: Option<usize>, depth: usize) {
+    match j {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(n) => write_number(*n, out),
+        Json::Str(s) => write_string(s, out),
+        Json::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, depth + 1);
+                write_value(item, out, indent, depth + 1);
+            }
+            newline_indent(out, indent, depth);
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, v)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                newline_indent(out, indent, depth + 1);
+                write_string(k, out);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(v, out, indent, depth + 1);
+            }
+            newline_indent(out, indent, depth);
+            out.push('}');
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_number(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        // JSON has no NaN/Inf; null is the least-bad representation.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn compact_output() {
+        let j = Json::obj(vec![("b", Json::num(1.0)), ("a", Json::arr(vec![]))]);
+        // BTreeMap => keys sorted.
+        assert_eq!(to_string(&j), r#"{"a":[],"b":1}"#);
+    }
+
+    #[test]
+    fn integers_render_without_point() {
+        assert_eq!(to_string(&Json::Num(3.0)), "3");
+        assert_eq!(to_string(&Json::Num(3.5)), "3.5");
+        assert_eq!(to_string(&Json::Num(-0.25)), "-0.25");
+    }
+
+    #[test]
+    fn escapes_roundtrip() {
+        let s = "line1\nline2\t\"quoted\" \\ \u{0007}";
+        let j = Json::Str(s.to_string());
+        assert_eq!(parse(&to_string(&j)).unwrap(), j);
+    }
+
+    #[test]
+    fn pretty_is_parseable_and_indented() {
+        let mut m = BTreeMap::new();
+        m.insert("k".to_string(), Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)]));
+        let j = Json::Obj(m);
+        let p = to_string_pretty(&j);
+        assert!(p.contains("\n  \"k\""));
+        assert_eq!(parse(&p).unwrap(), j);
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        assert_eq!(to_string(&Json::Num(f64::NAN)), "null");
+    }
+}

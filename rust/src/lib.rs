@@ -1,0 +1,52 @@
+//! # Kafka-ML — managing ML/AI pipelines through data streams
+//!
+//! A production-grade reproduction of *"Kafka-ML: connecting the data
+//! stream with ML/AI frameworks"* (Martín et al., 2020) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the Kafka-ML system itself *plus every
+//!   substrate the paper depends on*, built from scratch: an Apache
+//!   Kafka-like distributed log ([`broker`]), a Kubernetes-like
+//!   orchestrator ([`orchestrator`]), the REST back-end and model
+//!   registry ([`rest`], [`registry`]), data formats ([`avro`],
+//!   [`formats`]) and the pipeline coordinator that is the paper's
+//!   contribution ([`coordinator`]).
+//! * **Layer 2 (JAX, build-time)** — the model's forward/backward pass,
+//!   AOT-lowered to HLO text in `python/compile/` and executed from Rust
+//!   via PJRT ([`runtime`]).
+//! * **Layer 1 (Pallas, build-time)** — the dense / softmax / Adam
+//!   kernels the model is built from (`python/compile/kernels/`).
+//!
+//! Python runs **once**, at `make artifacts`. The serving and training
+//! hot paths are pure Rust + PJRT.
+//!
+//! ## Quick map (paper § → module)
+//!
+//! | Paper | Module |
+//! |---|---|
+//! | §II Apache Kafka background | [`broker`] |
+//! | §III pipeline A–F | [`coordinator::pipeline`] |
+//! | §IV-A/B front-end + back-end | [`rest`], [`registry`] |
+//! | §IV-C training Job (Alg. 1) | [`coordinator::training`] |
+//! | §IV-D inference (Alg. 2) | [`coordinator::inference`] |
+//! | §IV-E control logger | [`coordinator::control`] |
+//! | §IV-F Kafka+ZooKeeper on K8s | [`broker`], [`orchestrator`] |
+//! | §V distributed-log stream reuse | [`coordinator::reuse`] |
+//! | §VI validation (Tables I/II) | `rust/benches/`, `examples/` |
+
+pub mod avro;
+pub mod benchkit;
+pub mod broker;
+pub mod cli;
+pub mod coordinator;
+pub mod exec;
+pub mod formats;
+pub mod json;
+pub mod metrics;
+pub mod ml;
+pub mod orchestrator;
+pub mod prop;
+pub mod registry;
+pub mod rest;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,5 @@
+//! `kafka-ml` — leader binary. See [`kafka_ml::cli`] for usage.
+
+fn main() {
+    kafka_ml::cli::main_entry();
+}

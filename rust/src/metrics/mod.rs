@@ -1,0 +1,272 @@
+//! Metrics substrate: counters, gauges, histograms and a latency
+//! recorder, exported as plain text (Prometheus-ish exposition).
+//!
+//! Every Kafka-ML component (broker, orchestrator, training jobs,
+//! inference replicas, REST server) reports here; the benches read the
+//! same numbers the paper reports in its Tables.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge that can move both ways.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency/size histogram with fixed log-spaced buckets (µs domain for
+/// durations) plus exact count/sum and streaming min/max.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Bucket upper bounds in µs (last = +inf).
+    bounds: Vec<u64>,
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    min_us: AtomicU64,
+    max_us: AtomicU64,
+    /// Reservoir of raw samples for exact quantiles in benches.
+    samples: Mutex<Vec<u64>>,
+    max_samples: usize,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 1µs .. ~17min, ×2 per bucket.
+        let bounds: Vec<u64> = (0..30).map(|i| 1u64 << i).collect();
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            bounds,
+            counts,
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            min_us: AtomicU64::new(u64::MAX),
+            max_us: AtomicU64::new(0),
+            samples: Mutex::new(Vec::new()),
+            max_samples: 100_000,
+        }
+    }
+
+    pub fn observe(&self, d: Duration) {
+        self.observe_us(d.as_micros() as u64)
+    }
+
+    pub fn observe_us(&self, us: u64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.min_us.fetch_min(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+        let mut s = self.samples.lock().unwrap();
+        if s.len() < self.max_samples {
+            s.push(us);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> Duration {
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed))
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn min(&self) -> Duration {
+        let v = self.min_us.load(Ordering::Relaxed);
+        Duration::from_micros(if v == u64::MAX { 0 } else { v })
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Exact quantile over the retained sample reservoir (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let mut s = self.samples.lock().unwrap().clone();
+        if s.is_empty() {
+            return Duration::ZERO;
+        }
+        s.sort_unstable();
+        let idx = ((s.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        Duration::from_micros(s[idx])
+    }
+}
+
+/// A named registry of metrics, shareable across components.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    inner: Arc<RegistryInner>,
+}
+
+#[derive(Debug, Default)]
+struct RegistryInner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.inner
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.inner
+            .gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.inner
+            .histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    /// Plain-text exposition of everything (stable order).
+    pub fn expose(&self) -> String {
+        let mut out = String::new();
+        for (k, c) in self.inner.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} {}\n", c.get()));
+        }
+        for (k, g) in self.inner.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge {k} {}\n", g.get()));
+        }
+        for (k, h) in self.inner.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "histogram {k} count={} mean_us={} p50_us={} p99_us={} max_us={}\n",
+                h.count(),
+                h.mean().as_micros(),
+                h.quantile(0.5).as_micros(),
+                h.quantile(0.99).as_micros(),
+                h.max().as_micros(),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::new();
+        r.counter("msgs").add(5);
+        r.counter("msgs").inc();
+        assert_eq!(r.counter("msgs").get(), 6);
+        r.gauge("depth").set(4);
+        r.gauge("depth").add(-1);
+        assert_eq!(r.gauge("depth").get(), 3);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = Histogram::new();
+        for us in [100u64, 200, 300, 400, 500] {
+            h.observe_us(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.mean(), Duration::from_micros(300));
+        assert_eq!(h.min(), Duration::from_micros(100));
+        assert_eq!(h.max(), Duration::from_micros(500));
+        assert_eq!(h.quantile(0.5), Duration::from_micros(300));
+        assert_eq!(h.quantile(1.0), Duration::from_micros(500));
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn expose_contains_everything() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.gauge("b").set(2);
+        r.histogram("c").observe_us(10);
+        let text = r.expose();
+        assert!(text.contains("counter a 1"));
+        assert!(text.contains("gauge b 2"));
+        assert!(text.contains("histogram c count=1"));
+    }
+
+    #[test]
+    fn registry_clones_share_metrics() {
+        let r = Registry::new();
+        let r2 = r.clone();
+        r.counter("x").inc();
+        assert_eq!(r2.counter("x").get(), 1);
+    }
+}

@@ -1,0 +1,221 @@
+//! Batch assembly + validation split + metric averaging — the pieces of
+//! Keras' `model.fit(...)` that live on the Rust side of the AOT split
+//! (the compute itself is the `train_step` artifact).
+
+use crate::formats::Sample;
+use crate::util::Rng;
+use anyhow::{bail, Result};
+
+/// Split a sample list into (train, validation) by `validation_rate`
+/// (Algorithm 1's take/split: the *tail* `rate` fraction becomes the
+/// evaluation stream).
+pub fn split_validation(samples: Vec<Sample>, rate: f64) -> (Vec<Sample>, Vec<Sample>) {
+    let rate = rate.clamp(0.0, 1.0);
+    let n_val = (samples.len() as f64 * rate).round() as usize;
+    let n_train = samples.len() - n_val;
+    let mut train = samples;
+    let val = train.split_off(n_train);
+    (train, val)
+}
+
+/// Assembles fixed-size `(x, y)` batches from samples, reusing its
+/// buffers across batches (hot-path allocation hygiene).
+pub struct Batcher {
+    batch: usize,
+    features: usize,
+    x: Vec<f32>,
+    y: Vec<i32>,
+    filled: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, features: usize) -> Batcher {
+        Batcher {
+            batch,
+            features,
+            x: vec![0.0; batch * features],
+            y: vec![0; batch],
+            filled: 0,
+        }
+    }
+
+    /// Add one sample; returns `true` when the batch is full (read it
+    /// with [`Batcher::batch_ref`], then [`Batcher::reset`]).
+    pub fn push(&mut self, s: &Sample) -> Result<bool> {
+        if s.features.len() != self.features {
+            bail!(
+                "sample has {} features, model wants {}",
+                s.features.len(),
+                self.features
+            );
+        }
+        let Some(label) = s.label else {
+            bail!("training sample is missing its label");
+        };
+        let row = self.filled;
+        self.x[row * self.features..(row + 1) * self.features]
+            .copy_from_slice(&s.features);
+        self.y[row] = label;
+        self.filled += 1;
+        Ok(self.filled == self.batch)
+    }
+
+    pub fn batch_ref(&self) -> (&[f32], &[i32]) {
+        (&self.x, &self.y)
+    }
+
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.filled == self.batch
+    }
+
+    pub fn reset(&mut self) {
+        self.filled = 0;
+    }
+}
+
+/// Iterate `samples` as full batches (dropping the remainder, like
+/// `steps_per_epoch` does in the paper's training config), optionally
+/// shuffling the order each call.
+pub fn epoch_batches<'a>(
+    samples: &'a [Sample],
+    batch: usize,
+    features: usize,
+    shuffle: Option<&mut Rng>,
+) -> Result<Vec<(Vec<f32>, Vec<i32>)>> {
+    let mut order: Vec<usize> = (0..samples.len()).collect();
+    if let Some(rng) = shuffle {
+        rng.shuffle(&mut order);
+    }
+    let mut out = Vec::with_capacity(samples.len() / batch);
+    let mut b = Batcher::new(batch, features);
+    for &i in &order {
+        if b.push(&samples[i])? {
+            let (x, y) = b.batch_ref();
+            out.push((x.to_vec(), y.to_vec()));
+            b.reset();
+        }
+    }
+    Ok(out)
+}
+
+/// Streaming average of (loss, accuracy) pairs across batches.
+#[derive(Debug, Default, Clone)]
+pub struct MetricAverager {
+    sum_loss: f64,
+    sum_acc: f64,
+    n: u64,
+}
+
+impl MetricAverager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, loss: f32, acc: f32) {
+        self.sum_loss += loss as f64;
+        self.sum_acc += acc as f64;
+        self.n += 1;
+    }
+
+    pub fn loss(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_loss / self.n as f64
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_acc / self.n as f64
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(v: f32, label: i32) -> Sample {
+        Sample { features: vec![v, v + 1.0], label: Some(label) }
+    }
+
+    #[test]
+    fn split_takes_tail_for_validation() {
+        let samples: Vec<Sample> = (0..10).map(|i| sample(i as f32, i)).collect();
+        let (train, val) = split_validation(samples, 0.3);
+        assert_eq!(train.len(), 7);
+        assert_eq!(val.len(), 3);
+        assert_eq!(val[0].label, Some(7));
+    }
+
+    #[test]
+    fn split_rate_edges() {
+        let samples: Vec<Sample> = (0..4).map(|i| sample(i as f32, i)).collect();
+        let (t, v) = split_validation(samples.clone(), 0.0);
+        assert_eq!((t.len(), v.len()), (4, 0));
+        let (t, v) = split_validation(samples, 1.0);
+        assert_eq!((t.len(), v.len()), (0, 4));
+    }
+
+    #[test]
+    fn batcher_fills_and_resets() {
+        let mut b = Batcher::new(2, 2);
+        assert!(!b.push(&sample(1.0, 3)).unwrap());
+        assert!(b.push(&sample(2.0, 4)).unwrap());
+        let (x, y) = b.batch_ref();
+        assert_eq!(x, &[1.0, 2.0, 2.0, 3.0]);
+        assert_eq!(y, &[3, 4]);
+        b.reset();
+        assert_eq!(b.filled(), 0);
+    }
+
+    #[test]
+    fn batcher_rejects_bad_samples() {
+        let mut b = Batcher::new(2, 3);
+        assert!(b.push(&sample(1.0, 0)).is_err()); // wrong width
+        let unlabeled = Sample { features: vec![0.0; 3], label: None };
+        assert!(b.push(&unlabeled).is_err());
+    }
+
+    #[test]
+    fn epoch_batches_drops_remainder() {
+        let samples: Vec<Sample> = (0..7).map(|i| sample(i as f32, i)).collect();
+        let batches = epoch_batches(&samples, 3, 2, None).unwrap();
+        assert_eq!(batches.len(), 2);
+        // Unshuffled: first batch is samples 0..3 in order.
+        assert_eq!(batches[0].1, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn epoch_batches_shuffle_permutes() {
+        let samples: Vec<Sample> = (0..30).map(|i| sample(i as f32, i)).collect();
+        let mut rng = Rng::new(9);
+        let batches = epoch_batches(&samples, 10, 2, Some(&mut rng)).unwrap();
+        let mut labels: Vec<i32> = batches.iter().flat_map(|(_, y)| y.clone()).collect();
+        assert_ne!(labels, (0..30).collect::<Vec<_>>()); // shuffled
+        labels.sort();
+        assert_eq!(labels, (0..30).collect::<Vec<_>>()); // same multiset
+    }
+
+    #[test]
+    fn metric_averager() {
+        let mut m = MetricAverager::new();
+        assert_eq!(m.loss(), 0.0);
+        m.push(1.0, 0.5);
+        m.push(3.0, 1.0);
+        assert!((m.loss() - 2.0).abs() < 1e-9);
+        assert!((m.accuracy() - 0.75).abs() < 1e-9);
+        assert_eq!(m.count(), 2);
+    }
+}

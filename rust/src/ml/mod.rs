@@ -1,0 +1,11 @@
+//! ML data plumbing on the Rust side: batch assembly from decoded stream
+//! samples, train/validation splitting (`validation_rate`), metric
+//! aggregation, and the synthetic datasets used by examples/tests/benches
+//! (the HCOPD generator substitutes the paper's non-redistributable
+//! dataset — see DESIGN.md §Substitutions).
+
+mod batch;
+mod data;
+
+pub use batch::{epoch_batches, split_validation, Batcher, MetricAverager};
+pub use data::{hcopd_dataset, mnist_like_dataset, Dataset};

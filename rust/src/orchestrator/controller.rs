@@ -1,0 +1,805 @@
+//! The control plane: pod lifecycle + Job / ReplicationController
+//! reconciliation.
+//!
+//! `reconcile()` is one pass of the Kubernetes control loop: it creates
+//! missing pods, schedules pending ones, starts scheduled ones (paying
+//! the [`OrchestratorCosts`] startup model), replaces dead RC replicas,
+//! retries failed Job pods within the backoff limit, and scales RCs. A
+//! background reconciler thread (`start_reconciler`) runs it on an
+//! interval, which is what gives Kafka-ML its fault-tolerance / HA
+//! properties (§IV).
+
+use super::pod::{ContainerCtx, EntrypointFn, PodPhase};
+use super::resources::{JobSpec, PodSpec, RcSpec};
+use super::scheduler::Scheduler;
+use crate::exec::CancelToken;
+use crate::metrics::Registry;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Startup-cost model for a containerized pod — the measured gap between
+/// the paper's "data streams" and "& containerization" columns.
+/// `zero()` for unit tests; `calibrated()` for the Tables I/II benches.
+#[derive(Debug, Clone, Copy)]
+pub struct OrchestratorCosts {
+    /// Image pull (amortized: paid once per image per node, like a node
+    /// image cache).
+    pub image_pull: Duration,
+    /// Scheduler + API-server latency per pod.
+    pub schedule_delay: Duration,
+    /// Container runtime start (create + start + readiness).
+    pub container_start: Duration,
+}
+
+impl OrchestratorCosts {
+    pub fn zero() -> Self {
+        OrchestratorCosts {
+            image_pull: Duration::ZERO,
+            schedule_delay: Duration::ZERO,
+            container_start: Duration::ZERO,
+        }
+    }
+
+    /// Calibrated to a warm single-node cluster (images mostly cached):
+    /// dominated by container start + API round-trips.
+    pub fn calibrated() -> Self {
+        OrchestratorCosts {
+            image_pull: Duration::from_millis(350),
+            schedule_delay: Duration::from_millis(50),
+            container_start: Duration::from_millis(200),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Running,
+    Succeeded,
+    Failed,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RcStatus {
+    pub desired: u32,
+    pub running: u32,
+    pub starting: u32,
+}
+
+struct Pod {
+    spec: PodSpec,
+    phase: PodPhase,
+    cancel: CancelToken,
+    /// Owner: ("job"|"rc", name).
+    owner: Option<(String, String)>,
+    node: Option<String>,
+}
+
+struct JobState {
+    spec: JobSpec,
+    restarts: u32,
+    status: JobStatus,
+    current_pod: Option<String>,
+}
+
+struct RcState {
+    spec: RcSpec,
+    pods: Vec<String>,
+}
+
+struct Inner {
+    pods: HashMap<String, Pod>,
+    jobs: HashMap<String, JobState>,
+    rcs: HashMap<String, RcState>,
+    scheduler: Scheduler,
+    /// images already pulled (image-pull paid once per image).
+    pulled_images: std::collections::HashSet<String>,
+}
+
+pub struct Orchestrator {
+    inner: Mutex<Inner>,
+    entrypoints: Mutex<HashMap<String, EntrypointFn>>,
+    costs: OrchestratorCosts,
+    next_pod_id: AtomicU64,
+    pub metrics: Registry,
+    reconciler_cancel: Mutex<Option<CancelToken>>,
+}
+
+impl Orchestrator {
+    pub fn new(scheduler: Scheduler, costs: OrchestratorCosts) -> Arc<Orchestrator> {
+        Arc::new(Orchestrator {
+            inner: Mutex::new(Inner {
+                pods: HashMap::new(),
+                jobs: HashMap::new(),
+                rcs: HashMap::new(),
+                scheduler,
+                pulled_images: std::collections::HashSet::new(),
+            }),
+            entrypoints: Mutex::new(HashMap::new()),
+            costs,
+            next_pod_id: AtomicU64::new(1),
+            metrics: Registry::new(),
+            reconciler_cancel: Mutex::new(None),
+        })
+    }
+
+    pub fn single_node() -> Arc<Orchestrator> {
+        Orchestrator::new(Scheduler::single_node(), OrchestratorCosts::zero())
+    }
+
+    pub fn costs(&self) -> OrchestratorCosts {
+        self.costs
+    }
+
+    /// Register a container entrypoint ("push the image").
+    pub fn register_entrypoint<F>(&self, name: &str, f: F)
+    where
+        F: Fn(ContainerCtx) -> Result<()> + Send + Sync + 'static,
+    {
+        self.entrypoints
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::new(f));
+    }
+
+    // ---- workload API ---------------------------------------------------------
+
+    pub fn create_job(self: &Arc<Self>, spec: JobSpec) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.jobs.contains_key(&spec.name) {
+            bail!("job {} already exists", spec.name);
+        }
+        inner.jobs.insert(
+            spec.name.clone(),
+            JobState { spec, restarts: 0, status: JobStatus::Running, current_pod: None },
+        );
+        drop(inner);
+        self.reconcile();
+        Ok(())
+    }
+
+    pub fn create_rc(self: &Arc<Self>, spec: RcSpec) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.rcs.contains_key(&spec.name) {
+            bail!("rc {} already exists", spec.name);
+        }
+        inner
+            .rcs
+            .insert(spec.name.clone(), RcState { spec, pods: Vec::new() });
+        drop(inner);
+        self.reconcile();
+        Ok(())
+    }
+
+    pub fn scale_rc(self: &Arc<Self>, name: &str, replicas: u32) -> Result<()> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let rc = inner
+                .rcs
+                .get_mut(name)
+                .ok_or_else(|| anyhow!("unknown rc {name}"))?;
+            rc.spec.replicas = replicas;
+        }
+        self.reconcile();
+        Ok(())
+    }
+
+    pub fn delete_rc(self: &Arc<Self>, name: &str) -> Result<()> {
+        let pods = {
+            let mut inner = self.inner.lock().unwrap();
+            let rc = inner
+                .rcs
+                .remove(name)
+                .ok_or_else(|| anyhow!("unknown rc {name}"))?;
+            rc.pods
+        };
+        for p in pods {
+            self.kill_pod(&p);
+        }
+        Ok(())
+    }
+
+    pub fn delete_job(self: &Arc<Self>, name: &str) -> Result<()> {
+        let pod = {
+            let mut inner = self.inner.lock().unwrap();
+            let j = inner
+                .jobs
+                .remove(name)
+                .ok_or_else(|| anyhow!("unknown job {name}"))?;
+            j.current_pod
+        };
+        if let Some(p) = pod {
+            self.kill_pod(&p);
+        }
+        Ok(())
+    }
+
+    pub fn job_status(&self, name: &str) -> Option<JobStatus> {
+        self.inner.lock().unwrap().jobs.get(name).map(|j| j.status)
+    }
+
+    pub fn rc_status(&self, name: &str) -> Option<RcStatus> {
+        let inner = self.inner.lock().unwrap();
+        let rc = inner.rcs.get(name)?;
+        let mut running = 0;
+        let mut starting = 0;
+        for p in &rc.pods {
+            match inner.pods.get(p).map(|p| p.phase) {
+                Some(PodPhase::Running) => running += 1,
+                Some(ph) if ph.is_active() => starting += 1,
+                _ => {}
+            }
+        }
+        Some(RcStatus { desired: rc.spec.replicas, running, starting })
+    }
+
+    pub fn pod_phase(&self, name: &str) -> Option<PodPhase> {
+        self.inner.lock().unwrap().pods.get(name).map(|p| p.phase)
+    }
+
+    pub fn pods_of_rc(&self, name: &str) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .rcs
+            .get(name)
+            .map(|rc| rc.pods.clone())
+            .unwrap_or_default()
+    }
+
+    /// Kill a pod (failure injection / scale-down / SIGTERM).
+    pub fn kill_pod(&self, name: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(p) = inner.pods.get_mut(name) {
+            p.cancel.cancel();
+            if p.phase.is_active() {
+                p.phase = PodPhase::Killed;
+                let (cpu, mem) = (p.spec.container.cpu_milli, p.spec.container.memory_mb);
+                inner.scheduler.release(name, cpu, mem);
+                self.metrics.counter("orch.pods.killed").inc();
+            }
+        }
+    }
+
+    /// Block until the Job reaches a terminal status.
+    pub fn wait_job(self: &Arc<Self>, name: &str, timeout: Duration) -> Result<JobStatus> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.reconcile();
+            match self.job_status(name) {
+                Some(JobStatus::Running) => {}
+                Some(s) => return Ok(s),
+                None => bail!("unknown job {name}"),
+            }
+            if Instant::now() >= deadline {
+                bail!("timeout waiting for job {name}");
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Block until an RC has all desired replicas Running.
+    pub fn wait_rc_ready(self: &Arc<Self>, name: &str, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.reconcile();
+            let st = self
+                .rc_status(name)
+                .ok_or_else(|| anyhow!("unknown rc {name}"))?;
+            if st.running >= st.desired {
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                bail!("timeout waiting for rc {name}: {st:?}");
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    // ---- the control loop -------------------------------------------------------
+
+    /// One reconciliation pass. Idempotent; callable from any thread.
+    pub fn reconcile(self: &Arc<Self>) {
+        self.reconcile_jobs();
+        self.reconcile_rcs();
+        self.schedule_and_start();
+    }
+
+    fn reconcile_jobs(self: &Arc<Self>) {
+        let mut to_create: Vec<(String, PodSpec, String)> = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let job_names: Vec<String> = inner.jobs.keys().cloned().collect();
+            for jn in job_names {
+                let (status, pod_phase, restarts, backoff, template) = {
+                    let j = inner.jobs.get(&jn).unwrap();
+                    let ph = j
+                        .current_pod
+                        .as_ref()
+                        .and_then(|p| inner.pods.get(p))
+                        .map(|p| p.phase);
+                    (j.status, ph, j.restarts, j.spec.backoff_limit, j.spec.template.clone())
+                };
+                if status != JobStatus::Running {
+                    continue;
+                }
+                match pod_phase {
+                    None => {
+                        // No pod yet: create one.
+                        let pod_name = self.fresh_pod_name(&jn);
+                        inner.jobs.get_mut(&jn).unwrap().current_pod = Some(pod_name.clone());
+                        to_create.push((pod_name, template, jn));
+                    }
+                    Some(PodPhase::Succeeded) => {
+                        inner.jobs.get_mut(&jn).unwrap().status = JobStatus::Succeeded;
+                        self.metrics.counter("orch.jobs.succeeded").inc();
+                    }
+                    Some(PodPhase::Failed) | Some(PodPhase::Killed) => {
+                        if restarts < backoff {
+                            let j = inner.jobs.get_mut(&jn).unwrap();
+                            j.restarts += 1;
+                            let pod_name = self.fresh_pod_name(&jn);
+                            j.current_pod = Some(pod_name.clone());
+                            to_create.push((pod_name, template, jn));
+                            self.metrics.counter("orch.jobs.restarts").inc();
+                        } else {
+                            inner.jobs.get_mut(&jn).unwrap().status = JobStatus::Failed;
+                            self.metrics.counter("orch.jobs.failed").inc();
+                        }
+                    }
+                    Some(_) => {} // still active
+                }
+            }
+            for (pod_name, spec, owner) in &to_create {
+                inner.pods.insert(
+                    pod_name.clone(),
+                    Pod {
+                        spec: spec.clone(),
+                        phase: PodPhase::Pending,
+                        cancel: CancelToken::new(),
+                        owner: Some(("job".to_string(), owner.clone())),
+                        node: None,
+                    },
+                );
+            }
+        }
+    }
+
+    fn reconcile_rcs(self: &Arc<Self>) {
+        let mut inner = self.inner.lock().unwrap();
+        let rc_names: Vec<String> = inner.rcs.keys().cloned().collect();
+        for rn in rc_names {
+            // Prune dead pods from the RC's list.
+            let (mut live, template, desired) = {
+                let rc = inner.rcs.get(&rn).unwrap();
+                let live: Vec<String> = rc
+                    .pods
+                    .iter()
+                    .filter(|p| {
+                        inner
+                            .pods
+                            .get(*p)
+                            .map(|p| p.phase.is_active())
+                            .unwrap_or(false)
+                    })
+                    .cloned()
+                    .collect();
+                (live, rc.spec.template.clone(), rc.spec.replicas)
+            };
+            // Scale up.
+            while (live.len() as u32) < desired {
+                let pod_name = self.fresh_pod_name(&rn);
+                inner.pods.insert(
+                    pod_name.clone(),
+                    Pod {
+                        spec: template.clone(),
+                        phase: PodPhase::Pending,
+                        cancel: CancelToken::new(),
+                        owner: Some(("rc".to_string(), rn.clone())),
+                        node: None,
+                    },
+                );
+                live.push(pod_name);
+                self.metrics.counter("orch.rc.scale_ups").inc();
+            }
+            // Scale down (newest first).
+            while (live.len() as u32) > desired {
+                let victim = live.pop().unwrap();
+                if let Some(p) = inner.pods.get_mut(&victim) {
+                    p.cancel.cancel();
+                    if p.phase.is_active() {
+                        p.phase = PodPhase::Killed;
+                        let (cpu, mem) =
+                            (p.spec.container.cpu_milli, p.spec.container.memory_mb);
+                        inner.scheduler.release(&victim, cpu, mem);
+                    }
+                }
+            }
+            inner.rcs.get_mut(&rn).unwrap().pods = live;
+        }
+    }
+
+    /// Schedule Pending pods and launch Scheduled ones.
+    fn schedule_and_start(self: &Arc<Self>) {
+        let mut to_start: Vec<(String, PodSpec, CancelToken, bool)> = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let pending: Vec<String> = inner
+                .pods
+                .iter()
+                .filter(|(_, p)| p.phase == PodPhase::Pending)
+                .map(|(n, _)| n.clone())
+                .collect();
+            for name in pending {
+                let (cpu, mem, image) = {
+                    let p = inner.pods.get(&name).unwrap();
+                    (
+                        p.spec.container.cpu_milli,
+                        p.spec.container.memory_mb,
+                        p.spec.container.image.clone(),
+                    )
+                };
+                if let Some(node) = inner.scheduler.schedule(&name, cpu, mem) {
+                    let first_pull = inner.pulled_images.insert(image);
+                    let p = inner.pods.get_mut(&name).unwrap();
+                    p.phase = PodPhase::Scheduled;
+                    p.node = Some(node);
+                    to_start.push((name, p.spec.clone(), p.cancel.clone(), first_pull));
+                }
+                // else: stays Pending until capacity frees up.
+            }
+        }
+        for (name, spec, cancel, first_pull) in to_start {
+            self.launch_pod(name, spec, cancel, first_pull);
+        }
+    }
+
+    fn launch_pod(
+        self: &Arc<Self>,
+        name: String,
+        spec: PodSpec,
+        cancel: CancelToken,
+        first_pull: bool,
+    ) {
+        let entry = self
+            .entrypoints
+            .lock()
+            .unwrap()
+            .get(&spec.container.entrypoint)
+            .cloned();
+        let this = Arc::clone(self);
+        let costs = self.costs;
+        std::thread::Builder::new()
+            .name(format!("pod-{name}"))
+            .spawn(move || {
+                this.set_phase(&name, PodPhase::Starting);
+                // Startup cost model: pull (first time per image) +
+                // schedule + container start.
+                if first_pull {
+                    cancel.sleep(costs.image_pull);
+                }
+                cancel.sleep(costs.schedule_delay);
+                cancel.sleep(costs.container_start);
+                if cancel.is_cancelled() {
+                    this.finish_pod(&name, PodPhase::Killed);
+                    return;
+                }
+                let Some(entry) = entry else {
+                    log::error!(
+                        "pod {name}: no entrypoint '{}' registered",
+                        spec.container.entrypoint
+                    );
+                    this.finish_pod(&name, PodPhase::Failed);
+                    return;
+                };
+                this.set_phase(&name, PodPhase::Running);
+                this.metrics.counter("orch.pods.started").inc();
+                let ctx = ContainerCtx {
+                    pod_name: name.clone(),
+                    env: spec.container.env.clone(),
+                    cancel: cancel.clone(),
+                };
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    entry(ctx)
+                }));
+                let phase = match result {
+                    Ok(Ok(())) => PodPhase::Succeeded,
+                    Ok(Err(e)) => {
+                        log::warn!("pod {name} exited with error: {e:#}");
+                        PodPhase::Failed
+                    }
+                    Err(_) => {
+                        log::warn!("pod {name} panicked");
+                        PodPhase::Failed
+                    }
+                };
+                // A cancelled pod reports Killed regardless of exit value.
+                let phase = if cancel.is_cancelled() { PodPhase::Killed } else { phase };
+                this.finish_pod(&name, phase);
+            })
+            .expect("spawn pod thread");
+    }
+
+    fn set_phase(&self, name: &str, phase: PodPhase) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(p) = inner.pods.get_mut(name) {
+            // Never resurrect a terminal pod (e.g. killed during startup).
+            if p.phase.is_active() {
+                p.phase = phase;
+            }
+        }
+    }
+
+    fn finish_pod(&self, name: &str, phase: PodPhase) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(p) = inner.pods.get_mut(name) {
+            if p.phase.is_active() {
+                p.phase = phase;
+                let (cpu, mem) = (p.spec.container.cpu_milli, p.spec.container.memory_mb);
+                inner.scheduler.release(name, cpu, mem);
+            }
+        }
+    }
+
+    fn fresh_pod_name(&self, owner: &str) -> String {
+        format!("{owner}-{}", self.next_pod_id.fetch_add(1, Ordering::SeqCst))
+    }
+
+    // ---- background reconciler ---------------------------------------------------
+
+    /// Run `reconcile()` every `interval` until `stop_reconciler`.
+    pub fn start_reconciler(self: &Arc<Self>, interval: Duration) {
+        let token = CancelToken::new();
+        *self.reconciler_cancel.lock().unwrap() = Some(token.clone());
+        let this = Arc::clone(self);
+        std::thread::Builder::new()
+            .name("reconciler".to_string())
+            .spawn(move || {
+                while token.sleep(interval) {
+                    this.reconcile();
+                }
+            })
+            .expect("spawn reconciler");
+    }
+
+    pub fn stop_reconciler(&self) {
+        if let Some(t) = self.reconciler_cancel.lock().unwrap().take() {
+            t.cancel();
+        }
+    }
+
+    /// Env snapshot helper for tests/examples.
+    pub fn pod_env(&self, name: &str) -> Option<BTreeMap<String, String>> {
+        self.inner
+            .lock()
+            .unwrap()
+            .pods
+            .get(name)
+            .map(|p| p.spec.container.env.clone())
+    }
+
+    pub fn pod_owner(&self, name: &str) -> Option<(String, String)> {
+        self.inner.lock().unwrap().pods.get(name).and_then(|p| p.owner.clone())
+    }
+}
+
+impl Drop for Orchestrator {
+    fn drop(&mut self) {
+        if let Some(t) = self.reconciler_cancel.lock().unwrap().take() {
+            t.cancel();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestrator::resources::ContainerSpec;
+    use std::sync::atomic::AtomicU32;
+
+    fn orch() -> Arc<Orchestrator> {
+        Orchestrator::single_node()
+    }
+
+    #[test]
+    fn job_runs_to_completion() {
+        let o = orch();
+        let ran = Arc::new(AtomicU32::new(0));
+        let r = ran.clone();
+        o.register_entrypoint("ok", move |ctx| {
+            assert_eq!(ctx.env_str("X").unwrap(), "1");
+            r.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        });
+        o.create_job(JobSpec::new("j", ContainerSpec::new("img", "ok").env("X", "1")))
+            .unwrap();
+        let st = o.wait_job("j", Duration::from_secs(5)).unwrap();
+        assert_eq!(st, JobStatus::Succeeded);
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn failing_job_retries_then_fails() {
+        let o = orch();
+        let attempts = Arc::new(AtomicU32::new(0));
+        let a = attempts.clone();
+        o.register_entrypoint("bad", move |_| {
+            a.fetch_add(1, Ordering::SeqCst);
+            anyhow::bail!("boom")
+        });
+        let mut spec = JobSpec::new("j", ContainerSpec::new("img", "bad"));
+        spec.backoff_limit = 2;
+        o.create_job(spec).unwrap();
+        let st = o.wait_job("j", Duration::from_secs(5)).unwrap();
+        assert_eq!(st, JobStatus::Failed);
+        assert_eq!(attempts.load(Ordering::SeqCst), 3); // 1 + 2 retries
+        assert_eq!(o.metrics.counter("orch.jobs.restarts").get(), 2);
+    }
+
+    #[test]
+    fn job_recovers_after_transient_failure() {
+        let o = orch();
+        let attempts = Arc::new(AtomicU32::new(0));
+        let a = attempts.clone();
+        o.register_entrypoint("flaky", move |_| {
+            if a.fetch_add(1, Ordering::SeqCst) == 0 {
+                anyhow::bail!("first attempt dies")
+            }
+            Ok(())
+        });
+        o.create_job(JobSpec::new("j", ContainerSpec::new("img", "flaky")))
+            .unwrap();
+        assert_eq!(
+            o.wait_job("j", Duration::from_secs(5)).unwrap(),
+            JobStatus::Succeeded
+        );
+        assert_eq!(attempts.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn panicking_entrypoint_is_a_failure_not_a_crash() {
+        let o = orch();
+        o.register_entrypoint("panics", |_| panic!("kaboom"));
+        let mut spec = JobSpec::new("j", ContainerSpec::new("img", "panics"));
+        spec.backoff_limit = 0;
+        o.create_job(spec).unwrap();
+        assert_eq!(
+            o.wait_job("j", Duration::from_secs(5)).unwrap(),
+            JobStatus::Failed
+        );
+    }
+
+    #[test]
+    fn missing_entrypoint_fails_pod() {
+        let o = orch();
+        let mut spec = JobSpec::new("j", ContainerSpec::new("img", "ghost"));
+        spec.backoff_limit = 0;
+        o.create_job(spec).unwrap();
+        assert_eq!(
+            o.wait_job("j", Duration::from_secs(5)).unwrap(),
+            JobStatus::Failed
+        );
+    }
+
+    #[test]
+    fn rc_maintains_replicas_and_replaces_killed() {
+        let o = orch();
+        o.register_entrypoint("serve", |ctx| {
+            while !ctx.cancel.is_cancelled() {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Ok(())
+        });
+        o.create_rc(RcSpec::new("infer", 3, ContainerSpec::new("img", "serve")))
+            .unwrap();
+        o.wait_rc_ready("infer", Duration::from_secs(5)).unwrap();
+        let pods = o.pods_of_rc("infer");
+        assert_eq!(pods.len(), 3);
+        // Kill one; the reconciler must replace it.
+        o.kill_pod(&pods[0]);
+        o.wait_rc_ready("infer", Duration::from_secs(5)).unwrap();
+        let st = o.rc_status("infer").unwrap();
+        assert_eq!(st.running, 3);
+        assert_eq!(o.metrics.counter("orch.pods.killed").get(), 1);
+        o.delete_rc("infer").unwrap();
+    }
+
+    #[test]
+    fn rc_scales_up_and_down() {
+        let o = orch();
+        o.register_entrypoint("serve", |ctx| {
+            while !ctx.cancel.is_cancelled() {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Ok(())
+        });
+        o.create_rc(RcSpec::new("infer", 1, ContainerSpec::new("img", "serve")))
+            .unwrap();
+        o.wait_rc_ready("infer", Duration::from_secs(5)).unwrap();
+        o.scale_rc("infer", 4).unwrap();
+        o.wait_rc_ready("infer", Duration::from_secs(5)).unwrap();
+        assert_eq!(o.rc_status("infer").unwrap().running, 4);
+        o.scale_rc("infer", 2).unwrap();
+        // Wait for terminations to settle.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            o.reconcile();
+            let st = o.rc_status("infer").unwrap();
+            if st.running == 2 && st.starting == 0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "never settled: {st:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        o.delete_rc("infer").unwrap();
+    }
+
+    #[test]
+    fn pods_queue_pending_when_cluster_full() {
+        let o = Orchestrator::new(
+            Scheduler::new(vec![NodeSpec::new("tiny", 100, 100)]),
+            OrchestratorCosts::zero(),
+        );
+        o.register_entrypoint("serve", |ctx| {
+            while !ctx.cancel.is_cancelled() {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Ok(())
+        });
+        // Each replica wants the whole node; only 1 of 3 can run.
+        o.create_rc(RcSpec::new(
+            "big",
+            3,
+            ContainerSpec::new("img", "serve").resources(100, 100),
+        ))
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        o.reconcile();
+        let st = o.rc_status("big").unwrap();
+        assert_eq!(st.running + st.starting, 3); // 1 running + 2 pending
+        assert_eq!(st.running, 1);
+        o.delete_rc("big").unwrap();
+    }
+
+    use crate::orchestrator::resources::NodeSpec;
+
+    #[test]
+    fn duplicate_job_rejected() {
+        let o = orch();
+        o.register_entrypoint("ok", |_| Ok(()));
+        o.create_job(JobSpec::new("j", ContainerSpec::new("i", "ok"))).unwrap();
+        assert!(o.create_job(JobSpec::new("j", ContainerSpec::new("i", "ok"))).is_err());
+    }
+
+    #[test]
+    fn background_reconciler_replaces_pods() {
+        let o = orch();
+        o.register_entrypoint("serve", |ctx| {
+            while !ctx.cancel.is_cancelled() {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Ok(())
+        });
+        o.create_rc(RcSpec::new("infer", 2, ContainerSpec::new("img", "serve")))
+            .unwrap();
+        o.wait_rc_ready("infer", Duration::from_secs(5)).unwrap();
+        o.start_reconciler(Duration::from_millis(10));
+        let pods = o.pods_of_rc("infer");
+        o.kill_pod(&pods[0]);
+        o.kill_pod(&pods[1]);
+        // No manual reconcile: the background loop must restore both.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let st = o.rc_status("infer").unwrap();
+            if st.running == 2 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "reconciler never recovered");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        o.stop_reconciler();
+        o.delete_rc("infer").unwrap();
+    }
+}

@@ -1,0 +1,33 @@
+//! The Kubernetes substrate: container orchestration for Kafka-ML.
+//!
+//! §IV of the paper containerizes every component (Docker) and lets
+//! Kubernetes manage their lifecycle: training runs as **Jobs** (run to
+//! completion, restart on failure), inference as **Replication
+//! Controllers** (keep N replicas alive), and the platform claims
+//! fault-tolerance and high availability from the reconciliation loop.
+//! This module implements that control plane:
+//!
+//! * a **node pool** with cpu/memory capacities and a first-fit
+//!   bin-packing scheduler;
+//! * **pods** whose "containers" are managed threads running registered
+//!   entrypoints with an env map (how the paper's containers get their
+//!   `deployment_id`, topics, etc.);
+//! * **Job** and **ReplicationController** reconcilers: the control loop
+//!   continuously drives actual state to desired state — restarting
+//!   failed pods (with a backoff limit for Jobs) and scaling RCs;
+//! * **failure injection** (`kill_pod`) to exercise the fault-tolerance
+//!   claims in tests and benches;
+//! * a **startup-cost model** ([`OrchestratorCosts`]) that accounts for
+//!   image pull + scheduling + container boot, the measured difference
+//!   between the paper's "data streams" and "data streams &
+//!   containerization" columns (Tables I/II).
+
+mod controller;
+mod pod;
+mod resources;
+mod scheduler;
+
+pub use controller::{JobStatus, Orchestrator, OrchestratorCosts, RcStatus};
+pub use pod::{ContainerCtx, EntrypointFn, PodPhase};
+pub use resources::{ContainerSpec, JobSpec, NodeSpec, PodSpec, RcSpec, RestartPolicy};
+pub use scheduler::Scheduler;

@@ -1,0 +1,102 @@
+//! Pods: the unit of execution. A pod's "container" is a managed thread
+//! running a registered entrypoint with an env map and a cancellation
+//! token — the same contract the paper's Docker containers get from
+//! Kubernetes (env-var parameterization + SIGTERM).
+
+use crate::exec::CancelToken;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Lifecycle phases (Kubernetes pod phases plus `Scheduled`/`Starting`
+/// to make the cost model observable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PodPhase {
+    Pending,
+    Scheduled,
+    Starting,
+    Running,
+    Succeeded,
+    Failed,
+    Killed,
+}
+
+impl PodPhase {
+    pub fn is_terminal(self) -> bool {
+        matches!(self, PodPhase::Succeeded | PodPhase::Failed | PodPhase::Killed)
+    }
+
+    pub fn is_active(self) -> bool {
+        !self.is_terminal()
+    }
+}
+
+/// What an entrypoint receives: its env plus a cancel token honoured on
+/// pod kill / RC scale-down (SIGTERM equivalent).
+#[derive(Debug, Clone)]
+pub struct ContainerCtx {
+    pub pod_name: String,
+    pub env: BTreeMap<String, String>,
+    pub cancel: CancelToken,
+}
+
+impl ContainerCtx {
+    pub fn env_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.env
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("missing env var {key}"))
+    }
+
+    pub fn env_u64(&self, key: &str) -> anyhow::Result<u64> {
+        self.env_str(key)?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("env var {key} not a u64: {e}"))
+    }
+
+    pub fn env_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.env_str(key)?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("env var {key} not an f64: {e}"))
+    }
+
+    pub fn env_or(&self, key: &str, default: &str) -> String {
+        self.env
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+/// Entry point: the container "image"'s main(). Returning `Err` marks the
+/// pod `Failed` (exit code != 0); `Ok` marks it `Succeeded`.
+pub type EntrypointFn = Arc<dyn Fn(ContainerCtx) -> anyhow::Result<()> + Send + Sync>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_terminality() {
+        assert!(PodPhase::Succeeded.is_terminal());
+        assert!(PodPhase::Failed.is_terminal());
+        assert!(PodPhase::Killed.is_terminal());
+        assert!(PodPhase::Running.is_active());
+        assert!(PodPhase::Pending.is_active());
+    }
+
+    #[test]
+    fn ctx_env_accessors() {
+        let mut env = BTreeMap::new();
+        env.insert("A".to_string(), "42".to_string());
+        env.insert("F".to_string(), "1.5".to_string());
+        let ctx = ContainerCtx {
+            pod_name: "p".into(),
+            env,
+            cancel: CancelToken::new(),
+        };
+        assert_eq!(ctx.env_u64("A").unwrap(), 42);
+        assert_eq!(ctx.env_f64("F").unwrap(), 1.5);
+        assert!(ctx.env_str("missing").is_err());
+        assert_eq!(ctx.env_or("missing", "d"), "d");
+    }
+}

@@ -1,0 +1,139 @@
+//! Resource specs: the subset of the Kubernetes object model Kafka-ML
+//! deploys (§IV): container/pod templates, Jobs, ReplicationControllers,
+//! and nodes.
+
+use std::collections::BTreeMap;
+
+/// What a pod's single container runs: a registered entrypoint plus an
+/// env map (the paper's containers are parameterized the same way — the
+/// back-end sets `DEPLOYMENT_ID`, Kafka topics, etc. as env vars).
+#[derive(Debug, Clone)]
+pub struct ContainerSpec {
+    /// Image name — only used for the simulated image-pull cost and
+    /// observability; the code actually run is `entrypoint`.
+    pub image: String,
+    /// Name of an entrypoint registered with the orchestrator.
+    pub entrypoint: String,
+    pub env: BTreeMap<String, String>,
+    /// Requested cpu in millicores (for bin-packing).
+    pub cpu_milli: u32,
+    /// Requested memory in MiB (for bin-packing).
+    pub memory_mb: u32,
+}
+
+impl ContainerSpec {
+    pub fn new(image: &str, entrypoint: &str) -> ContainerSpec {
+        ContainerSpec {
+            image: image.to_string(),
+            entrypoint: entrypoint.to_string(),
+            env: BTreeMap::new(),
+            cpu_milli: 100,
+            memory_mb: 128,
+        }
+    }
+
+    pub fn env(mut self, k: &str, v: impl Into<String>) -> ContainerSpec {
+        self.env.insert(k.to_string(), v.into());
+        self
+    }
+
+    pub fn resources(mut self, cpu_milli: u32, memory_mb: u32) -> ContainerSpec {
+        self.cpu_milli = cpu_milli;
+        self.memory_mb = memory_mb;
+        self
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RestartPolicy {
+    Never,
+    OnFailure,
+    Always,
+}
+
+#[derive(Debug, Clone)]
+pub struct PodSpec {
+    pub container: ContainerSpec,
+    pub restart_policy: RestartPolicy,
+}
+
+/// Run-to-completion workload (one training task per Kafka-ML model).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub template: PodSpec,
+    /// Pod restarts tolerated before the Job is marked failed.
+    pub backoff_limit: u32,
+}
+
+impl JobSpec {
+    pub fn new(name: &str, container: ContainerSpec) -> JobSpec {
+        JobSpec {
+            name: name.to_string(),
+            template: PodSpec { container, restart_policy: RestartPolicy::OnFailure },
+            backoff_limit: 3,
+        }
+    }
+}
+
+/// Keep-N-replicas workload (inference deployments, §IV-D).
+#[derive(Debug, Clone)]
+pub struct RcSpec {
+    pub name: String,
+    pub replicas: u32,
+    pub template: PodSpec,
+}
+
+impl RcSpec {
+    pub fn new(name: &str, replicas: u32, container: ContainerSpec) -> RcSpec {
+        RcSpec {
+            name: name.to_string(),
+            replicas,
+            template: PodSpec { container, restart_policy: RestartPolicy::Always },
+        }
+    }
+}
+
+/// A schedulable node with finite capacity.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    pub cpu_milli: u32,
+    pub memory_mb: u32,
+}
+
+impl NodeSpec {
+    pub fn new(name: &str, cpu_milli: u32, memory_mb: u32) -> NodeSpec {
+        NodeSpec { name: name.to_string(), cpu_milli, memory_mb }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let c = ContainerSpec::new("kafka-ml/train:v1", "training-job")
+            .env("DEPLOYMENT_ID", "7")
+            .env("KAFKA_TOPIC", "data")
+            .resources(500, 256);
+        assert_eq!(c.env.get("DEPLOYMENT_ID").unwrap(), "7");
+        assert_eq!(c.cpu_milli, 500);
+        assert_eq!(c.image, "kafka-ml/train:v1");
+    }
+
+    #[test]
+    fn job_defaults() {
+        let j = JobSpec::new("train-model-1", ContainerSpec::new("i", "e"));
+        assert_eq!(j.backoff_limit, 3);
+        assert_eq!(j.template.restart_policy, RestartPolicy::OnFailure);
+    }
+
+    #[test]
+    fn rc_defaults_always_restart() {
+        let rc = RcSpec::new("infer", 4, ContainerSpec::new("i", "e"));
+        assert_eq!(rc.replicas, 4);
+        assert_eq!(rc.template.restart_policy, RestartPolicy::Always);
+    }
+}

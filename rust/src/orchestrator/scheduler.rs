@@ -1,0 +1,132 @@
+//! First-fit bin-packing scheduler over the node pool.
+//!
+//! Kubernetes' scheduler is vastly richer; Kafka-ML only needs requests/
+//! capacity accounting so that (a) pods queue as `Pending` when the
+//! cluster is full — observable backpressure — and (b) the bench can
+//! model a laptop-sized cluster (the paper's testbed is a single
+//! MacBook Pro).
+
+use super::resources::NodeSpec;
+use std::collections::HashMap;
+
+#[derive(Debug)]
+struct NodeState {
+    spec: NodeSpec,
+    used_cpu: u32,
+    used_mem: u32,
+}
+
+#[derive(Debug, Default)]
+pub struct Scheduler {
+    nodes: Vec<NodeState>,
+    /// pod name -> node index (for release on pod exit).
+    placements: HashMap<String, usize>,
+}
+
+impl Scheduler {
+    pub fn new(nodes: Vec<NodeSpec>) -> Scheduler {
+        Scheduler {
+            nodes: nodes
+                .into_iter()
+                .map(|spec| NodeState { spec, used_cpu: 0, used_mem: 0 })
+                .collect(),
+            placements: HashMap::new(),
+        }
+    }
+
+    /// Single generous node — the paper's laptop testbed.
+    pub fn single_node() -> Scheduler {
+        Scheduler::new(vec![NodeSpec::new("node-0", 16_000, 16_384)])
+    }
+
+    /// Try to place a pod; returns the node name on success.
+    pub fn schedule(&mut self, pod_name: &str, cpu_milli: u32, memory_mb: u32) -> Option<String> {
+        for (i, n) in self.nodes.iter_mut().enumerate() {
+            let cpu_ok = n.used_cpu + cpu_milli <= n.spec.cpu_milli;
+            let mem_ok = n.used_mem + memory_mb <= n.spec.memory_mb;
+            if cpu_ok && mem_ok {
+                n.used_cpu += cpu_milli;
+                n.used_mem += memory_mb;
+                self.placements.insert(pod_name.to_string(), i);
+                return Some(n.spec.name.clone());
+            }
+        }
+        None
+    }
+
+    /// Release a pod's resources (pod reached a terminal phase).
+    pub fn release(&mut self, pod_name: &str, cpu_milli: u32, memory_mb: u32) {
+        if let Some(i) = self.placements.remove(pod_name) {
+            let n = &mut self.nodes[i];
+            n.used_cpu = n.used_cpu.saturating_sub(cpu_milli);
+            n.used_mem = n.used_mem.saturating_sub(memory_mb);
+        }
+    }
+
+    pub fn node_of(&self, pod_name: &str) -> Option<&str> {
+        self.placements
+            .get(pod_name)
+            .map(|&i| self.nodes[i].spec.name.as_str())
+    }
+
+    /// (used_cpu, capacity_cpu) across all nodes.
+    pub fn cpu_utilization(&self) -> (u32, u32) {
+        let used = self.nodes.iter().map(|n| n.used_cpu).sum();
+        let cap = self.nodes.iter().map(|n| n.spec.cpu_milli).sum();
+        (used, cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_small_nodes() -> Scheduler {
+        Scheduler::new(vec![
+            NodeSpec::new("n0", 1000, 1024),
+            NodeSpec::new("n1", 1000, 1024),
+        ])
+    }
+
+    #[test]
+    fn first_fit_fills_then_overflows() {
+        let mut s = two_small_nodes();
+        assert_eq!(s.schedule("a", 600, 512).unwrap(), "n0");
+        assert_eq!(s.schedule("b", 600, 512).unwrap(), "n1"); // n0 full on cpu
+        assert_eq!(s.schedule("c", 600, 512), None); // cluster full
+    }
+
+    #[test]
+    fn memory_constrains_too() {
+        let mut s = two_small_nodes();
+        assert!(s.schedule("a", 100, 1024).is_some());
+        assert_eq!(s.schedule("b", 100, 1024).unwrap(), "n1");
+        assert_eq!(s.schedule("c", 100, 1), None);
+    }
+
+    #[test]
+    fn release_frees_capacity() {
+        let mut s = two_small_nodes();
+        s.schedule("a", 1000, 1024).unwrap();
+        s.schedule("b", 1000, 1024).unwrap();
+        assert!(s.schedule("c", 500, 100).is_none());
+        s.release("a", 1000, 1024);
+        assert_eq!(s.schedule("c", 500, 100).unwrap(), "n0");
+    }
+
+    #[test]
+    fn node_of_tracks_placements() {
+        let mut s = two_small_nodes();
+        s.schedule("a", 100, 100).unwrap();
+        assert_eq!(s.node_of("a"), Some("n0"));
+        assert_eq!(s.node_of("zzz"), None);
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut s = two_small_nodes();
+        s.schedule("a", 300, 100).unwrap();
+        s.schedule("b", 700, 100).unwrap();
+        assert_eq!(s.cpu_utilization(), (1000, 2000));
+    }
+}

@@ -1,0 +1,217 @@
+//! Minimal property-based testing framework (generate + shrink).
+//!
+//! proptest is not in the offline vendor set, so this module provides the
+//! 20% that covers our needs: seeded generators, a `forall` runner that
+//! reports the failing case, and greedy shrinking for integers/vectors.
+//!
+//! Used by the broker/coordinator test suites for invariants like
+//! "offsets are dense and monotonic", "consumer-group assignment is a
+//! partition of the partitions", "retention never removes unexpired data".
+
+use crate::util::Rng;
+
+/// A generator of `T` given an RNG (size hint bounds collection sizes).
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Rng, size: usize) -> T;
+    /// Candidate smaller versions of a failing value, most-shrunk first.
+    fn shrink(&self, value: &T) -> Vec<T> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run `check` against `n` random cases; on failure, shrink and panic
+/// with the smallest counterexample found.
+pub fn forall<T: std::fmt::Debug + Clone, G: Gen<T>>(
+    seed: u64,
+    n: usize,
+    gen: &G,
+    check: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let size = 2 + i % 50;
+        let value = gen.generate(&mut rng, size);
+        if !check(&value) {
+            let minimal = shrink_loop(gen, value, &check);
+            panic!(
+                "property failed (seed {seed}, case {i}); minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Clone, G: Gen<T>>(gen: &G, mut value: T, check: &impl Fn(&T) -> bool) -> T {
+    // Greedy descent: keep taking the first failing shrink candidate.
+    'outer: for _ in 0..1000 {
+        for cand in gen.shrink(&value) {
+            if !check(&cand) {
+                value = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    value
+}
+
+/// Uniform integer in `[lo, hi]`.
+pub struct IntGen {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Gen<i64> for IntGen {
+    fn generate(&self, rng: &mut Rng, _size: usize) -> i64 {
+        let span = (self.hi - self.lo) as u64 + 1;
+        self.lo + rng.below(span) as i64
+    }
+
+    fn shrink(&self, value: &i64) -> Vec<i64> {
+        let mut out = Vec::new();
+        if *value != self.lo.max(0.min(self.hi)) {
+            let target = if (self.lo..=self.hi).contains(&0) { 0 } else { self.lo };
+            out.push(target);
+            out.push(target + (value - target) / 2);
+        }
+        if *value > self.lo {
+            out.push(value - 1);
+        }
+        out.retain(|v| (self.lo..=self.hi).contains(v) && v != value);
+        out.dedup();
+        out
+    }
+}
+
+/// Vector of values from an element generator; shrinks by halving length,
+/// removing single elements, and shrinking individual elements.
+pub struct VecGen<G> {
+    pub elem: G,
+    pub max_len: usize,
+}
+
+impl<T: Clone, G: Gen<T>> Gen<Vec<T>> for VecGen<G> {
+    fn generate(&self, rng: &mut Rng, size: usize) -> Vec<T> {
+        let len = rng.below(size.min(self.max_len) as u64 + 1) as usize;
+        (0..len).map(|_| self.elem.generate(rng, size)).collect()
+    }
+
+    fn shrink(&self, value: &Vec<T>) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if value.is_empty() {
+            return out;
+        }
+        out.push(Vec::new());
+        out.push(value[..value.len() / 2].to_vec());
+        for i in 0..value.len().min(8) {
+            let mut v = value.clone();
+            v.remove(i);
+            out.push(v);
+        }
+        // Shrink first element.
+        if let Some(first) = value.first() {
+            for cand in self.elem.shrink(first) {
+                let mut v = value.clone();
+                v[0] = cand;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// ASCII string generator (for topic names, keys, payloads).
+pub struct StringGen {
+    pub max_len: usize,
+}
+
+impl Gen<String> for StringGen {
+    fn generate(&self, rng: &mut Rng, size: usize) -> String {
+        let len = rng.below(size.min(self.max_len) as u64 + 1) as usize;
+        (0..len)
+            .map(|_| {
+                let c = rng.below(26 + 26 + 10) as u8;
+                (match c {
+                    0..=25 => b'a' + c,
+                    26..=51 => b'A' + (c - 26),
+                    _ => b'0' + (c - 52),
+                }) as char
+            })
+            .collect()
+    }
+
+    fn shrink(&self, value: &String) -> Vec<String> {
+        let mut out = Vec::new();
+        if !value.is_empty() {
+            out.push(String::new());
+            out.push(value[..value.len() / 2].to_string());
+        }
+        out
+    }
+}
+
+/// Bytes payload generator.
+pub struct BytesGen {
+    pub max_len: usize,
+}
+
+impl Gen<Vec<u8>> for BytesGen {
+    fn generate(&self, rng: &mut Rng, size: usize) -> Vec<u8> {
+        let len = rng.below(size.min(self.max_len) as u64 + 1) as usize;
+        (0..len).map(|_| rng.below(256) as u8).collect()
+    }
+
+    fn shrink(&self, value: &Vec<u8>) -> Vec<Vec<u8>> {
+        if value.is_empty() {
+            Vec::new()
+        } else {
+            vec![Vec::new(), value[..value.len() / 2].to_vec()]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 200, &IntGen { lo: 0, hi: 100 }, |v| *v <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_panics_with_counterexample() {
+        forall(2, 500, &IntGen { lo: 0, hi: 1000 }, |v| *v < 500);
+    }
+
+    #[test]
+    fn shrinking_finds_small_failing_int() {
+        // Capture the panic message and assert the counterexample shrank
+        // all the way down to the boundary (500).
+        let result = std::panic::catch_unwind(|| {
+            forall(3, 500, &IntGen { lo: 0, hi: 1000 }, |v| *v < 500);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("500"), "{msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_max_len() {
+        let g = VecGen { elem: IntGen { lo: 0, hi: 9 }, max_len: 5 };
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            assert!(g.generate(&mut rng, 50).len() <= 5);
+        }
+    }
+
+    #[test]
+    fn string_gen_is_alnum() {
+        let g = StringGen { max_len: 20 };
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let s = g.generate(&mut rng, 20);
+            assert!(s.chars().all(|c| c.is_ascii_alphanumeric()));
+        }
+    }
+}

@@ -1,0 +1,536 @@
+//! The RESTful API over [`Store`] — the paper's §IV-B back-end surface.
+//!
+//! | Endpoint | § |
+//! |---|---|
+//! | `POST /models`, `GET /models`, `GET /models/:id` | III-A |
+//! | `POST /configurations`, `GET /configurations/:id` | III-B |
+//! | `POST /deployments`, `GET /deployments/:id` | III-C |
+//! | `GET /results/:id`, `POST /results/:id/finish`, `GET/POST .../model` | III-E |
+//! | `POST /inferences`, `GET /inferences/:id` | III-E/F |
+//! | `POST /control`, `GET /control` | IV-E (control logger) |
+
+use super::store::{ControlLogEntry, Store, TrainingMetrics, TrainingStatus};
+use crate::json::Json;
+use crate::rest::{Method, Request, Response, Router, Status};
+use std::sync::Arc;
+
+fn ok(j: Json) -> Response {
+    Response::json(Status::Ok, &j)
+}
+
+fn created(j: Json) -> Response {
+    Response::json(Status::Created, &j)
+}
+
+fn bad(e: impl std::fmt::Display) -> Response {
+    Response::error(Status::BadRequest, &format!("{e}"))
+}
+
+fn parse_body(req: &Request) -> Result<Json, Response> {
+    req.body_str()
+        .ok()
+        .and_then(|s| crate::json::parse(s).ok())
+        .ok_or_else(|| bad("invalid JSON body"))
+}
+
+fn id_param(req: &Request) -> Result<u64, Response> {
+    req.param("id")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad("invalid :id"))
+}
+
+pub fn metrics_to_json(m: &TrainingMetrics) -> Json {
+    Json::obj(vec![
+        ("loss", Json::num(m.loss)),
+        ("accuracy", Json::num(m.accuracy)),
+        ("val_loss", m.val_loss.map(Json::num).unwrap_or(Json::Null)),
+        (
+            "val_accuracy",
+            m.val_accuracy.map(Json::num).unwrap_or(Json::Null),
+        ),
+        (
+            "loss_curve",
+            Json::arr(m.loss_curve.iter().map(|&l| Json::num(l)).collect()),
+        ),
+    ])
+}
+
+pub fn metrics_from_json(j: &Json) -> TrainingMetrics {
+    TrainingMetrics {
+        loss: j.get("loss").as_f64().unwrap_or(0.0),
+        accuracy: j.get("accuracy").as_f64().unwrap_or(0.0),
+        val_loss: j.get("val_loss").as_f64(),
+        val_accuracy: j.get("val_accuracy").as_f64(),
+        loss_curve: j
+            .get("loss_curve")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .collect(),
+    }
+}
+
+pub fn control_to_json(e: &ControlLogEntry) -> Json {
+    Json::obj(vec![
+        ("deployment_id", Json::from(e.deployment_id)),
+        ("topic", Json::str(&e.topic)),
+        ("partition", Json::from(e.partition as u64)),
+        ("offset", Json::from(e.offset)),
+        ("length", Json::from(e.length)),
+        ("input_format", Json::str(&e.input_format)),
+        ("input_config", e.input_config.clone()),
+        ("validation_rate", Json::num(e.validation_rate)),
+        ("total_msg", Json::from(e.total_msg)),
+        ("logged_ms", Json::from(e.logged_ms)),
+    ])
+}
+
+pub fn control_from_json(j: &Json) -> anyhow::Result<ControlLogEntry> {
+    Ok(ControlLogEntry {
+        deployment_id: j.req_u64("deployment_id")?,
+        topic: j.req_str("topic")?.to_string(),
+        partition: j.req_u64("partition")? as u32,
+        offset: j.req_u64("offset")?,
+        length: j.req_u64("length")?,
+        input_format: j.req_str("input_format")?.to_string(),
+        input_config: j.get("input_config").clone(),
+        validation_rate: j.get("validation_rate").as_f64().unwrap_or(0.0),
+        total_msg: j.get("total_msg").as_u64().unwrap_or(0),
+        logged_ms: j.get("logged_ms").as_u64().unwrap_or(0),
+    })
+}
+
+/// Build the back-end router over a shared store.
+pub fn router(store: Arc<Store>) -> Router {
+    let s = store;
+    Router::new()
+        // ---- models (§III-A) --------------------------------------------
+        .route(Method::Post, "/models", {
+            let s = s.clone();
+            move |req| {
+                let body = match parse_body(&req) {
+                    Ok(b) => b,
+                    Err(r) => return r,
+                };
+                let name = body.get("name").as_str().unwrap_or("model");
+                let dir = match body.req_str("artifact_dir") {
+                    Ok(d) => d,
+                    Err(e) => return bad(e),
+                };
+                let desc = body.get("description").as_str().unwrap_or("");
+                match s.create_model(name, dir, desc) {
+                    Ok(id) => created(Json::obj(vec![("id", Json::from(id))])),
+                    Err(e) => bad(e),
+                }
+            }
+        })
+        .route(Method::Get, "/models", {
+            let s = s.clone();
+            move |_| {
+                ok(Json::arr(
+                    s.models()
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("id", Json::from(m.id)),
+                                ("name", Json::str(&m.name)),
+                                ("artifact_dir", Json::str(&m.artifact_dir)),
+                            ])
+                        })
+                        .collect(),
+                ))
+            }
+        })
+        .route(Method::Get, "/models/:id", {
+            let s = s.clone();
+            move |req| {
+                let id = match id_param(&req) {
+                    Ok(id) => id,
+                    Err(r) => return r,
+                };
+                match s.model(id) {
+                    Ok(m) => ok(Json::obj(vec![
+                        ("id", Json::from(m.id)),
+                        ("name", Json::str(&m.name)),
+                        ("artifact_dir", Json::str(&m.artifact_dir)),
+                        ("description", Json::str(&m.description)),
+                    ])),
+                    Err(e) => Response::error(Status::NotFound, &format!("{e}")),
+                }
+            }
+        })
+        // ---- configurations (§III-B) -------------------------------------
+        .route(Method::Post, "/configurations", {
+            let s = s.clone();
+            move |req| {
+                let body = match parse_body(&req) {
+                    Ok(b) => b,
+                    Err(r) => return r,
+                };
+                let name = body.get("name").as_str().unwrap_or("configuration");
+                let ids: Vec<u64> = body
+                    .get("model_ids")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_u64())
+                    .collect();
+                match s.create_configuration(name, &ids) {
+                    Ok(id) => created(Json::obj(vec![("id", Json::from(id))])),
+                    Err(e) => bad(e),
+                }
+            }
+        })
+        .route(Method::Get, "/configurations/:id", {
+            let s = s.clone();
+            move |req| {
+                let id = match id_param(&req) {
+                    Ok(id) => id,
+                    Err(r) => return r,
+                };
+                match s.configuration(id) {
+                    Ok(c) => ok(Json::obj(vec![
+                        ("id", Json::from(c.id)),
+                        ("name", Json::str(&c.name)),
+                        (
+                            "model_ids",
+                            Json::arr(c.model_ids.iter().map(|&m| Json::from(m)).collect()),
+                        ),
+                    ])),
+                    Err(e) => Response::error(Status::NotFound, &format!("{e}")),
+                }
+            }
+        })
+        // ---- training deployments (§III-C) ----------------------------------
+        .route(Method::Post, "/deployments", {
+            let s = s.clone();
+            move |req| {
+                let body = match parse_body(&req) {
+                    Ok(b) => b,
+                    Err(r) => return r,
+                };
+                let conf = match body.req_u64("configuration_id") {
+                    Ok(c) => c,
+                    Err(e) => return bad(e),
+                };
+                let batch = body.get("batch_size").as_usize().unwrap_or(10);
+                let epochs = body.get("epochs").as_usize().unwrap_or(1);
+                let shuffle = body.get("shuffle").as_bool().unwrap_or(true);
+                match s.create_deployment(conf, batch, epochs, shuffle) {
+                    Ok(d) => created(Json::obj(vec![
+                        ("id", Json::from(d.id)),
+                        (
+                            "result_ids",
+                            Json::arr(d.result_ids.iter().map(|&r| Json::from(r)).collect()),
+                        ),
+                    ])),
+                    Err(e) => bad(e),
+                }
+            }
+        })
+        .route(Method::Get, "/deployments/:id", {
+            let s = s.clone();
+            move |req| {
+                let id = match id_param(&req) {
+                    Ok(id) => id,
+                    Err(r) => return r,
+                };
+                match s.deployment(id) {
+                    Ok(d) => ok(Json::obj(vec![
+                        ("id", Json::from(d.id)),
+                        ("configuration_id", Json::from(d.configuration_id)),
+                        ("batch_size", Json::from(d.batch_size)),
+                        ("epochs", Json::from(d.epochs)),
+                        ("shuffle", Json::from(d.shuffle)),
+                        (
+                            "result_ids",
+                            Json::arr(d.result_ids.iter().map(|&r| Json::from(r)).collect()),
+                        ),
+                    ])),
+                    Err(e) => Response::error(Status::NotFound, &format!("{e}")),
+                }
+            }
+        })
+        // ---- results (§III-E) ----------------------------------------------
+        .route(Method::Get, "/results/:id", {
+            let s = s.clone();
+            move |req| {
+                let id = match id_param(&req) {
+                    Ok(id) => id,
+                    Err(r) => return r,
+                };
+                match s.result(id) {
+                    Ok(r) => ok(Json::obj(vec![
+                        ("id", Json::from(r.id)),
+                        ("deployment_id", Json::from(r.deployment_id)),
+                        ("model_id", Json::from(r.model_id)),
+                        ("status", Json::str(r.status.as_str())),
+                        ("metrics", metrics_to_json(&r.metrics)),
+                    ])),
+                    Err(e) => Response::error(Status::NotFound, &format!("{e}")),
+                }
+            }
+        })
+        .route(Method::Post, "/results/:id/status", {
+            let s = s.clone();
+            move |req| {
+                let id = match id_param(&req) {
+                    Ok(id) => id,
+                    Err(r) => return r,
+                };
+                let body = match parse_body(&req) {
+                    Ok(b) => b,
+                    Err(r) => return r,
+                };
+                let status = match body
+                    .req_str("status")
+                    .and_then(|st| TrainingStatus::parse(st))
+                {
+                    Ok(st) => st,
+                    Err(e) => return bad(e),
+                };
+                match s.set_result_status(id, status) {
+                    Ok(()) => ok(Json::Bool(true)),
+                    Err(e) => Response::error(Status::NotFound, &format!("{e}")),
+                }
+            }
+        })
+        .route(Method::Post, "/results/:id/model", {
+            // Binary upload: body is the ModelParams blob; metrics travel
+            // in the x-kafka-ml-metrics header (JSON) to keep one call.
+            let s = s.clone();
+            move |req| {
+                let id = match id_param(&req) {
+                    Ok(id) => id,
+                    Err(r) => return r,
+                };
+                let metrics = req
+                    .headers
+                    .get("x-kafka-ml-metrics")
+                    .and_then(|h| crate::json::parse(h).ok())
+                    .map(|j| metrics_from_json(&j))
+                    .unwrap_or_default();
+                match s.finish_result(id, metrics, req.body) {
+                    Ok(()) => ok(Json::Bool(true)),
+                    Err(e) => bad(e),
+                }
+            }
+        })
+        .route(Method::Get, "/results/:id/model", {
+            let s = s.clone();
+            move |req| {
+                let id = match id_param(&req) {
+                    Ok(id) => id,
+                    Err(r) => return r,
+                };
+                match s.download_model_blob(id) {
+                    Ok(blob) => Response::binary(Status::Ok, blob),
+                    Err(e) => Response::error(Status::NotFound, &format!("{e}")),
+                }
+            }
+        })
+        // ---- inference deployments (§III-E/F) ---------------------------------
+        .route(Method::Post, "/inferences", {
+            let s = s.clone();
+            move |req| {
+                let body = match parse_body(&req) {
+                    Ok(b) => b,
+                    Err(r) => return r,
+                };
+                let result_id = match body.req_u64("result_id") {
+                    Ok(r) => r,
+                    Err(e) => return bad(e),
+                };
+                let replicas = body.get("replicas").as_u64().unwrap_or(1) as u32;
+                let input = body.get("input_topic").as_str().unwrap_or("inference-in");
+                let output = body.get("output_topic").as_str().unwrap_or("inference-out");
+                let fmt = body.get("input_format").as_str().map(|f| {
+                    (f.to_string(), body.get("input_config").clone())
+                });
+                match s.create_inference(result_id, replicas, input, output, fmt) {
+                    Ok(d) => created(Json::obj(vec![("id", Json::from(d.id))])),
+                    Err(e) => bad(e),
+                }
+            }
+        })
+        .route(Method::Get, "/inferences/:id", {
+            let s = s.clone();
+            move |req| {
+                let id = match id_param(&req) {
+                    Ok(id) => id,
+                    Err(r) => return r,
+                };
+                match s.inference(id) {
+                    Ok(d) => ok(Json::obj(vec![
+                        ("id", Json::from(d.id)),
+                        ("result_id", Json::from(d.result_id)),
+                        ("replicas", Json::from(d.replicas as u64)),
+                        ("input_topic", Json::str(&d.input_topic)),
+                        ("output_topic", Json::str(&d.output_topic)),
+                        ("input_format", Json::str(&d.input_format)),
+                        ("input_config", d.input_config.clone()),
+                    ])),
+                    Err(e) => Response::error(Status::NotFound, &format!("{e}")),
+                }
+            }
+        })
+        // ---- control logger (§IV-E) --------------------------------------------
+        .route(Method::Post, "/control", {
+            let s = s.clone();
+            move |req| {
+                let body = match parse_body(&req) {
+                    Ok(b) => b,
+                    Err(r) => return r,
+                };
+                match control_from_json(&body) {
+                    Ok(e) => {
+                        s.log_control(e);
+                        created(Json::Bool(true))
+                    }
+                    Err(e) => bad(e),
+                }
+            }
+        })
+        .route(Method::Get, "/control", {
+            let s = s.clone();
+            move |_| ok(Json::arr(s.control_log().iter().map(control_to_json).collect()))
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> String {
+        let dir = std::env::temp_dir().join("kafka-ml-test-artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"spec": {"input_dim": 2, "hidden": [3], "classes": 2, "batch": 4,
+                 "lr": 0.001, "seed": 1},
+                "params": [{"name": "w1", "shape": [2, 3], "dtype": "f32"}],
+                "artifacts": {}}"#,
+        )
+        .unwrap();
+        dir.to_string_lossy().to_string()
+    }
+
+    fn dispatch(r: &Router, method: Method, path: &str, body: Option<&str>) -> Response {
+        let mut req = Request::new(method, path);
+        if let Some(b) = body {
+            req = req.with_body(b.as_bytes().to_vec(), "application/json");
+        }
+        r.dispatch(req)
+    }
+
+    #[test]
+    fn full_api_pipeline() {
+        let store = Arc::new(Store::new());
+        let r = router(store.clone());
+
+        // Create model.
+        let body = format!(r#"{{"name": "copd", "artifact_dir": "{}"}}"#, artifact_dir());
+        let resp = dispatch(&r, Method::Post, "/models", Some(&body));
+        assert_eq!(resp.status, Status::Created);
+        let mid = resp.body_json().unwrap().req_u64("id").unwrap();
+
+        // Configuration.
+        let resp = dispatch(
+            &r,
+            Method::Post,
+            "/configurations",
+            Some(&format!(r#"{{"name": "c", "model_ids": [{mid}]}}"#)),
+        );
+        let cid = resp.body_json().unwrap().req_u64("id").unwrap();
+
+        // Deployment.
+        let resp = dispatch(
+            &r,
+            Method::Post,
+            "/deployments",
+            Some(&format!(
+                r#"{{"configuration_id": {cid}, "batch_size": 10, "epochs": 3}}"#
+            )),
+        );
+        assert_eq!(resp.status, Status::Created);
+        let j = resp.body_json().unwrap();
+        let rid = j.get("result_ids").as_arr().unwrap()[0].as_u64().unwrap();
+
+        // Result starts deployed.
+        let resp = dispatch(&r, Method::Get, &format!("/results/{rid}"), None);
+        assert_eq!(
+            resp.body_json().unwrap().get("status").as_str(),
+            Some("deployed")
+        );
+
+        // Upload trained model (binary + metrics header).
+        let blob = crate::runtime::ModelParams {
+            tensors: vec![crate::runtime::ParamTensor {
+                name: "w1".into(),
+                shape: vec![2, 3],
+                data: vec![0.5; 6],
+            }],
+        }
+        .to_bytes();
+        let mut req = Request::new(Method::Post, &format!("/results/{rid}/model"))
+            .with_body(blob.clone(), "application/octet-stream");
+        req.headers.insert(
+            "x-kafka-ml-metrics".into(),
+            r#"{"loss": 0.4, "accuracy": 0.9}"#.into(),
+        );
+        let resp = r.dispatch(req);
+        assert_eq!(resp.status, Status::Ok, "{:?}", String::from_utf8_lossy(&resp.body));
+
+        // Download.
+        let resp = dispatch(&r, Method::Get, &format!("/results/{rid}/model"), None);
+        assert_eq!(resp.body, blob);
+
+        // Control log + inference auto-config.
+        let dep_id = store.deployments()[0].id;
+        let ctrl = format!(
+            r#"{{"deployment_id": {dep_id}, "topic": "data", "partition": 0,
+                 "offset": 0, "length": 220, "input_format": "RAW",
+                 "input_config": {{"dtype": "f32", "shape": [8]}},
+                 "validation_rate": 0.2, "total_msg": 220}}"#
+        );
+        assert_eq!(
+            dispatch(&r, Method::Post, "/control", Some(&ctrl)).status,
+            Status::Created
+        );
+        let resp = dispatch(
+            &r,
+            Method::Post,
+            "/inferences",
+            Some(&format!(r#"{{"result_id": {rid}, "replicas": 2}}"#)),
+        );
+        assert_eq!(resp.status, Status::Created);
+        let iid = resp.body_json().unwrap().req_u64("id").unwrap();
+        let resp = dispatch(&r, Method::Get, &format!("/inferences/{iid}"), None);
+        let j = resp.body_json().unwrap();
+        assert_eq!(j.get("input_format").as_str(), Some("RAW"));
+        assert_eq!(j.at(&["input_config", "dtype"]).as_str(), Some("f32"));
+    }
+
+    #[test]
+    fn errors_are_4xx() {
+        let r = router(Arc::new(Store::new()));
+        assert_eq!(
+            dispatch(&r, Method::Get, "/models/99", None).status,
+            Status::NotFound
+        );
+        assert_eq!(
+            dispatch(&r, Method::Post, "/models", Some("not json")).status,
+            Status::BadRequest
+        );
+        assert_eq!(
+            dispatch(&r, Method::Post, "/models", Some(r#"{"name": "x"}"#)).status,
+            Status::BadRequest
+        );
+        assert_eq!(
+            dispatch(&r, Method::Get, "/results/abc", None).status,
+            Status::BadRequest
+        );
+    }
+}

@@ -1,0 +1,207 @@
+//! Typed HTTP client for the back-end API — what training Jobs and
+//! inference replicas link against (the paper's
+//! `downloadModelFromBackend` / `uploadTrainedModelAndMetrics`).
+
+use super::api::{control_to_json, metrics_to_json};
+use super::store::{ControlLogEntry, TrainingMetrics};
+use crate::json::Json;
+use crate::rest::HttpClient;
+use crate::runtime::ModelParams;
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone)]
+pub struct BackendClient {
+    http: HttpClient,
+}
+
+impl BackendClient {
+    pub fn new(base_url: &str) -> BackendClient {
+        BackendClient { http: HttpClient::new(base_url) }
+    }
+
+    pub fn create_model(&self, name: &str, artifact_dir: &str) -> Result<u64> {
+        let resp = self.http.post_json(
+            "/models",
+            &Json::obj(vec![
+                ("name", Json::str(name)),
+                ("artifact_dir", Json::str(artifact_dir)),
+            ]),
+        )?;
+        if !resp.status.is_success() {
+            return Err(anyhow!(
+                "create_model: {}",
+                String::from_utf8_lossy(&resp.body)
+            ));
+        }
+        resp.body_json()?.req_u64("id")
+    }
+
+    pub fn model_artifact_dir(&self, model_id: u64) -> Result<String> {
+        Ok(self
+            .http
+            .get_json(&format!("/models/{model_id}"))?
+            .req_str("artifact_dir")?
+            .to_string())
+    }
+
+    pub fn create_configuration(&self, name: &str, model_ids: &[u64]) -> Result<u64> {
+        let resp = self.http.post_json(
+            "/configurations",
+            &Json::obj(vec![
+                ("name", Json::str(name)),
+                (
+                    "model_ids",
+                    Json::arr(model_ids.iter().map(|&m| Json::from(m)).collect()),
+                ),
+            ]),
+        )?;
+        if !resp.status.is_success() {
+            return Err(anyhow!(
+                "create_configuration: {}",
+                String::from_utf8_lossy(&resp.body)
+            ));
+        }
+        resp.body_json()?.req_u64("id")
+    }
+
+    pub fn create_deployment(
+        &self,
+        configuration_id: u64,
+        batch_size: usize,
+        epochs: usize,
+    ) -> Result<(u64, Vec<u64>)> {
+        let resp = self.http.post_json(
+            "/deployments",
+            &Json::obj(vec![
+                ("configuration_id", Json::from(configuration_id)),
+                ("batch_size", Json::from(batch_size)),
+                ("epochs", Json::from(epochs)),
+            ]),
+        )?;
+        if !resp.status.is_success() {
+            return Err(anyhow!(
+                "create_deployment: {}",
+                String::from_utf8_lossy(&resp.body)
+            ));
+        }
+        let j = resp.body_json()?;
+        let id = j.req_u64("id")?;
+        let rids = j
+            .get("result_ids")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_u64())
+            .collect();
+        Ok((id, rids))
+    }
+
+    /// Download a *trained* model blob.
+    pub fn download_model(&self, result_id: u64) -> Result<ModelParams> {
+        let resp = self.http.get(&format!("/results/{result_id}/model"))?;
+        if !resp.status.is_success() {
+            return Err(anyhow!(
+                "download_model({result_id}): {}",
+                String::from_utf8_lossy(&resp.body)
+            ));
+        }
+        ModelParams::from_bytes(&resp.body)
+    }
+
+    /// Upload trained model + metrics (end of Algorithm 1).
+    pub fn upload_trained_model(
+        &self,
+        result_id: u64,
+        params: &ModelParams,
+        metrics: &TrainingMetrics,
+    ) -> Result<()> {
+        let mut req = crate::rest::Request::new(
+            crate::rest::Method::Post,
+            &format!("/results/{result_id}/model"),
+        )
+        .with_body(params.to_bytes(), "application/octet-stream");
+        req.headers.insert(
+            "x-kafka-ml-metrics".to_string(),
+            crate::json::to_string(&metrics_to_json(metrics)),
+        );
+        // Reuse HttpClient internals via a one-off send.
+        let resp = self.http.send_request(req)?;
+        if !resp.status.is_success() {
+            return Err(anyhow!(
+                "upload_trained_model: {}",
+                String::from_utf8_lossy(&resp.body)
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn set_result_status(&self, result_id: u64, status: &str) -> Result<()> {
+        let resp = self.http.post_json(
+            &format!("/results/{result_id}/status"),
+            &Json::obj(vec![("status", Json::str(status))]),
+        )?;
+        if !resp.status.is_success() {
+            return Err(anyhow!("set_result_status: {}", resp.status.code()));
+        }
+        Ok(())
+    }
+
+    pub fn result_status(&self, result_id: u64) -> Result<String> {
+        Ok(self
+            .http
+            .get_json(&format!("/results/{result_id}"))?
+            .req_str("status")?
+            .to_string())
+    }
+
+    pub fn result_metrics(&self, result_id: u64) -> Result<Json> {
+        Ok(self
+            .http
+            .get_json(&format!("/results/{result_id}"))?
+            .get("metrics")
+            .clone())
+    }
+
+    /// Full result row as JSON.
+    pub fn result_info(&self, result_id: u64) -> Result<Json> {
+        self.http.get_json(&format!("/results/{result_id}"))
+    }
+
+    /// Full inference-deployment row as JSON.
+    pub fn inference_info(&self, inference_id: u64) -> Result<Json> {
+        self.http.get_json(&format!("/inferences/{inference_id}"))
+    }
+
+    pub fn log_control(&self, entry: &ControlLogEntry) -> Result<()> {
+        let resp = self.http.post_json("/control", &control_to_json(entry))?;
+        if !resp.status.is_success() {
+            return Err(anyhow!("log_control: {}", resp.status.code()));
+        }
+        Ok(())
+    }
+
+    pub fn create_inference(
+        &self,
+        result_id: u64,
+        replicas: u32,
+        input_topic: &str,
+        output_topic: &str,
+    ) -> Result<u64> {
+        let resp = self.http.post_json(
+            "/inferences",
+            &Json::obj(vec![
+                ("result_id", Json::from(result_id)),
+                ("replicas", Json::from(replicas as u64)),
+                ("input_topic", Json::str(input_topic)),
+                ("output_topic", Json::str(output_topic)),
+            ]),
+        )?;
+        if !resp.status.is_success() {
+            return Err(anyhow!(
+                "create_inference: {}",
+                String::from_utf8_lossy(&resp.body)
+            ));
+        }
+        resp.body_json()?.req_u64("id")
+    }
+}

@@ -1,0 +1,19 @@
+//! The back-end (§IV-B): the single source of truth for ML models,
+//! configurations, training deployments, trained-model results and the
+//! control-message log, served over a RESTful API.
+//!
+//! * [`Store`] — the state + invariants (in-memory, JSON-persistable);
+//! * [`api`] — the REST surface (the paper's Django endpoints);
+//! * [`BackendClient`] — typed HTTP client used by training Jobs and
+//!   inference replicas ("download the ML model from the back-end",
+//!   "submit the trained model and metrics").
+
+pub mod api;
+mod client;
+mod store;
+
+pub use client::BackendClient;
+pub use store::{
+    Configuration, ControlLogEntry, Deployment, InferenceDeployment, MlModel, Store,
+    TrainingMetrics, TrainingResult, TrainingStatus,
+};

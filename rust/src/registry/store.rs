@@ -1,0 +1,924 @@
+//! Back-end state: models, configurations, deployments, results,
+//! inference deployments and the control log.
+//!
+//! The object model mirrors §III's pipeline:
+//!   model (A) → configuration (B) → deployment (C) → per-model
+//!   training result (D/E) → inference deployment (E/F),
+//! plus the control-message log the control logger (§IV-E) maintains so
+//! data streams can be *reused* (§V) and inference input formats
+//! auto-configured.
+
+use crate::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// An ML model definition. In the paper this is Keras source pasted into
+/// the Web UI; in the three-layer build it names an AOT artifact
+/// directory (the model was authored+lowered at build time) — the
+/// `source` field carries that reference and is validated on creation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlModel {
+    pub id: u64,
+    pub name: String,
+    /// Artifact directory (the compiled model), e.g. "artifacts/".
+    pub artifact_dir: String,
+    /// Free-form description (the paper's `imports`/source echo).
+    pub description: String,
+}
+
+/// A logical group of models trained from the *same* data stream (§III-B).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Configuration {
+    pub id: u64,
+    pub name: String,
+    pub model_ids: Vec<u64>,
+}
+
+/// A training deployment of a configuration (§III-C).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Deployment {
+    pub id: u64,
+    pub configuration_id: u64,
+    pub batch_size: usize,
+    pub epochs: usize,
+    pub shuffle: bool,
+    /// One result row per model in the configuration.
+    pub result_ids: Vec<u64>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainingStatus {
+    Deployed,
+    Training,
+    Finished,
+    Failed,
+}
+
+impl TrainingStatus {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TrainingStatus::Deployed => "deployed",
+            TrainingStatus::Training => "training",
+            TrainingStatus::Finished => "finished",
+            TrainingStatus::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<TrainingStatus> {
+        Ok(match s {
+            "deployed" => TrainingStatus::Deployed,
+            "training" => TrainingStatus::Training,
+            "finished" => TrainingStatus::Finished,
+            "failed" => TrainingStatus::Failed,
+            other => bail!("unknown status {other}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TrainingMetrics {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub val_loss: Option<f64>,
+    pub val_accuracy: Option<f64>,
+    /// Per-epoch training loss (the loss curve of EXPERIMENTS.md).
+    pub loss_curve: Vec<f64>,
+}
+
+/// Result of training one model of a deployment (§III-E).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainingResult {
+    pub id: u64,
+    pub deployment_id: u64,
+    pub model_id: u64,
+    pub status: TrainingStatus,
+    pub metrics: TrainingMetrics,
+    /// Trained model blob (ModelParams wire format). Held separately so
+    /// listing results doesn't copy weights.
+    pub model_blob: Vec<u8>,
+}
+
+/// An inference deployment of a trained result (§III-E/F).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferenceDeployment {
+    pub id: u64,
+    pub result_id: u64,
+    pub replicas: u32,
+    pub input_topic: String,
+    pub output_topic: String,
+    /// Auto-configured from the control log (§IV-E) unless overridden.
+    pub input_format: String,
+    pub input_config: Json,
+}
+
+/// A control message as logged by the control logger (§IV-E), enabling
+/// §V's re-send without re-streaming.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlLogEntry {
+    pub deployment_id: u64,
+    pub topic: String,
+    pub partition: u32,
+    pub offset: u64,
+    pub length: u64,
+    pub input_format: String,
+    pub input_config: Json,
+    pub validation_rate: f64,
+    pub total_msg: u64,
+    pub logged_ms: u64,
+}
+
+#[derive(Default)]
+struct State {
+    models: BTreeMap<u64, MlModel>,
+    configurations: BTreeMap<u64, Configuration>,
+    deployments: BTreeMap<u64, Deployment>,
+    results: BTreeMap<u64, TrainingResult>,
+    inferences: BTreeMap<u64, InferenceDeployment>,
+    control_log: Vec<ControlLogEntry>,
+}
+
+/// Thread-safe back-end store.
+#[derive(Default)]
+pub struct Store {
+    state: Mutex<State>,
+    next_id: AtomicU64,
+}
+
+impl Store {
+    pub fn new() -> Store {
+        Store { state: Mutex::new(State::default()), next_id: AtomicU64::new(1) }
+    }
+
+    fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::SeqCst)
+    }
+
+    // ---- models -----------------------------------------------------------
+
+    pub fn create_model(&self, name: &str, artifact_dir: &str, description: &str) -> Result<u64> {
+        // "the source code will be checked as a valid TensorFlow model"
+        // (§III-A) — our equivalent: the artifact dir must carry a
+        // loadable meta.json.
+        crate::runtime::ArtifactMeta::load(artifact_dir)
+            .map_err(|e| anyhow!("invalid model artifact dir '{artifact_dir}': {e}"))?;
+        let id = self.fresh_id();
+        self.state.lock().unwrap().models.insert(
+            id,
+            MlModel {
+                id,
+                name: name.to_string(),
+                artifact_dir: artifact_dir.to_string(),
+                description: description.to_string(),
+            },
+        );
+        Ok(id)
+    }
+
+    pub fn model(&self, id: u64) -> Result<MlModel> {
+        self.state
+            .lock()
+            .unwrap()
+            .models
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown model {id}"))
+    }
+
+    pub fn models(&self) -> Vec<MlModel> {
+        self.state.lock().unwrap().models.values().cloned().collect()
+    }
+
+    // ---- configurations ------------------------------------------------------
+
+    pub fn create_configuration(&self, name: &str, model_ids: &[u64]) -> Result<u64> {
+        if model_ids.is_empty() {
+            bail!("a configuration needs at least one model");
+        }
+        let st = self.state.lock().unwrap();
+        for mid in model_ids {
+            if !st.models.contains_key(mid) {
+                bail!("configuration references unknown model {mid}");
+            }
+        }
+        drop(st);
+        let id = self.fresh_id();
+        self.state.lock().unwrap().configurations.insert(
+            id,
+            Configuration { id, name: name.to_string(), model_ids: model_ids.to_vec() },
+        );
+        Ok(id)
+    }
+
+    pub fn configuration(&self, id: u64) -> Result<Configuration> {
+        self.state
+            .lock()
+            .unwrap()
+            .configurations
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown configuration {id}"))
+    }
+
+    // ---- training deployments ---------------------------------------------------
+
+    /// Deploy a configuration for training (§III-C): one result row (and
+    /// later one Job) per model.
+    pub fn create_deployment(
+        &self,
+        configuration_id: u64,
+        batch_size: usize,
+        epochs: usize,
+        shuffle: bool,
+    ) -> Result<Deployment> {
+        let conf = self.configuration(configuration_id)?;
+        if batch_size == 0 || epochs == 0 {
+            bail!("batch_size and epochs must be positive");
+        }
+        let id = self.fresh_id();
+        let mut result_ids = Vec::new();
+        {
+            let mut st = self.state.lock().unwrap();
+            for mid in &conf.model_ids {
+                let rid = self.fresh_id();
+                st.results.insert(
+                    rid,
+                    TrainingResult {
+                        id: rid,
+                        deployment_id: id,
+                        model_id: *mid,
+                        status: TrainingStatus::Deployed,
+                        metrics: TrainingMetrics::default(),
+                        model_blob: Vec::new(),
+                    },
+                );
+                result_ids.push(rid);
+            }
+            st.deployments.insert(
+                id,
+                Deployment {
+                    id,
+                    configuration_id,
+                    batch_size,
+                    epochs,
+                    shuffle,
+                    result_ids: result_ids.clone(),
+                },
+            );
+        }
+        self.deployment(id)
+    }
+
+    pub fn deployment(&self, id: u64) -> Result<Deployment> {
+        self.state
+            .lock()
+            .unwrap()
+            .deployments
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown deployment {id}"))
+    }
+
+    pub fn deployments(&self) -> Vec<Deployment> {
+        self.state.lock().unwrap().deployments.values().cloned().collect()
+    }
+
+    // ---- results ---------------------------------------------------------------
+
+    pub fn result(&self, id: u64) -> Result<TrainingResult> {
+        self.state
+            .lock()
+            .unwrap()
+            .results
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown result {id}"))
+    }
+
+    pub fn set_result_status(&self, id: u64, status: TrainingStatus) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let r = st
+            .results
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("unknown result {id}"))?;
+        r.status = status;
+        Ok(())
+    }
+
+    /// Upload trained model + metrics (the end of Algorithm 1).
+    pub fn finish_result(
+        &self,
+        id: u64,
+        metrics: TrainingMetrics,
+        model_blob: Vec<u8>,
+    ) -> Result<()> {
+        // Validate the blob parses before accepting it.
+        crate::runtime::ModelParams::from_bytes(&model_blob)
+            .map_err(|e| anyhow!("result {id}: rejected model blob: {e}"))?;
+        let mut st = self.state.lock().unwrap();
+        let r = st
+            .results
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("unknown result {id}"))?;
+        r.metrics = metrics;
+        r.model_blob = model_blob;
+        r.status = TrainingStatus::Finished;
+        Ok(())
+    }
+
+    pub fn download_model_blob(&self, result_id: u64) -> Result<Vec<u8>> {
+        let st = self.state.lock().unwrap();
+        let r = st
+            .results
+            .get(&result_id)
+            .ok_or_else(|| anyhow!("unknown result {result_id}"))?;
+        if r.status != TrainingStatus::Finished {
+            bail!("result {result_id} is {}, not finished", r.status.as_str());
+        }
+        Ok(r.model_blob.clone())
+    }
+
+    pub fn results_of_deployment(&self, deployment_id: u64) -> Vec<TrainingResult> {
+        self.state
+            .lock()
+            .unwrap()
+            .results
+            .values()
+            .filter(|r| r.deployment_id == deployment_id)
+            .cloned()
+            .collect()
+    }
+
+    // ---- inference deployments -----------------------------------------------------
+
+    /// Deploy a finished result for inference (§III-E). `input_format` /
+    /// `input_config` default to what the control logger recorded for
+    /// the training deployment — the §IV-E auto-configuration.
+    pub fn create_inference(
+        &self,
+        result_id: u64,
+        replicas: u32,
+        input_topic: &str,
+        output_topic: &str,
+        format_override: Option<(String, Json)>,
+    ) -> Result<InferenceDeployment> {
+        let result = self.result(result_id)?;
+        if result.status != TrainingStatus::Finished {
+            bail!("result {result_id} not finished (is {})", result.status.as_str());
+        }
+        if replicas == 0 {
+            bail!("replicas must be >= 1");
+        }
+        let (input_format, input_config) = match format_override {
+            Some(fc) => fc,
+            None => {
+                let st = self.state.lock().unwrap();
+                let entry = st
+                    .control_log
+                    .iter()
+                    .rev()
+                    .find(|e| e.deployment_id == result.deployment_id)
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "no control log entry for deployment {} — pass an explicit format",
+                            result.deployment_id
+                        )
+                    })?;
+                (entry.input_format.clone(), entry.input_config.clone())
+            }
+        };
+        let id = self.fresh_id();
+        let dep = InferenceDeployment {
+            id,
+            result_id,
+            replicas,
+            input_topic: input_topic.to_string(),
+            output_topic: output_topic.to_string(),
+            input_format,
+            input_config,
+        };
+        self.state.lock().unwrap().inferences.insert(id, dep.clone());
+        Ok(dep)
+    }
+
+    pub fn inference(&self, id: u64) -> Result<InferenceDeployment> {
+        self.state
+            .lock()
+            .unwrap()
+            .inferences
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown inference deployment {id}"))
+    }
+
+    // ---- control log ------------------------------------------------------------------
+
+    pub fn log_control(&self, entry: ControlLogEntry) {
+        self.state.lock().unwrap().control_log.push(entry);
+    }
+
+    pub fn control_log(&self) -> Vec<ControlLogEntry> {
+        self.state.lock().unwrap().control_log.clone()
+    }
+
+    /// Latest control entry for a deployment (used for §V re-sends).
+    pub fn last_control_for(&self, deployment_id: u64) -> Option<ControlLogEntry> {
+        self.state
+            .lock()
+            .unwrap()
+            .control_log
+            .iter()
+            .rev()
+            .find(|e| e.deployment_id == deployment_id)
+            .cloned()
+    }
+
+    // ---- persistence ------------------------------------------------------------
+    //
+    // The paper's Django back-end persists to a database; here the store
+    // snapshots to a JSON file (model blobs hex-encoded) so a restarted
+    // back-end pod recovers models, results and the control log.
+
+    /// Serialize the whole store (including model blobs) to JSON.
+    pub fn to_json(&self) -> Json {
+        let st = self.state.lock().unwrap();
+        let hex = |b: &[u8]| -> String {
+            b.iter().map(|x| format!("{x:02x}")).collect()
+        };
+        Json::obj(vec![
+            (
+                "next_id",
+                Json::from(self.next_id.load(Ordering::SeqCst)),
+            ),
+            (
+                "models",
+                Json::arr(
+                    st.models
+                        .values()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("id", Json::from(m.id)),
+                                ("name", Json::str(&m.name)),
+                                ("artifact_dir", Json::str(&m.artifact_dir)),
+                                ("description", Json::str(&m.description)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "configurations",
+                Json::arr(
+                    st.configurations
+                        .values()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("id", Json::from(c.id)),
+                                ("name", Json::str(&c.name)),
+                                (
+                                    "model_ids",
+                                    Json::arr(
+                                        c.model_ids.iter().map(|&m| Json::from(m)).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "deployments",
+                Json::arr(
+                    st.deployments
+                        .values()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("id", Json::from(d.id)),
+                                ("configuration_id", Json::from(d.configuration_id)),
+                                ("batch_size", Json::from(d.batch_size)),
+                                ("epochs", Json::from(d.epochs)),
+                                ("shuffle", Json::from(d.shuffle)),
+                                (
+                                    "result_ids",
+                                    Json::arr(
+                                        d.result_ids.iter().map(|&r| Json::from(r)).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "results",
+                Json::arr(
+                    st.results
+                        .values()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::from(r.id)),
+                                ("deployment_id", Json::from(r.deployment_id)),
+                                ("model_id", Json::from(r.model_id)),
+                                ("status", Json::str(r.status.as_str())),
+                                (
+                                    "metrics",
+                                    crate::registry::api::metrics_to_json(&r.metrics),
+                                ),
+                                ("model_blob_hex", Json::str(hex(&r.model_blob))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "inferences",
+                Json::arr(
+                    st.inferences
+                        .values()
+                        .map(|i| {
+                            Json::obj(vec![
+                                ("id", Json::from(i.id)),
+                                ("result_id", Json::from(i.result_id)),
+                                ("replicas", Json::from(i.replicas as u64)),
+                                ("input_topic", Json::str(&i.input_topic)),
+                                ("output_topic", Json::str(&i.output_topic)),
+                                ("input_format", Json::str(&i.input_format)),
+                                ("input_config", i.input_config.clone()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "control_log",
+                Json::arr(
+                    st.control_log
+                        .iter()
+                        .map(crate::registry::api::control_to_json)
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild a store from a [`Store::to_json`] snapshot.
+    pub fn from_json(j: &Json) -> Result<Store> {
+        let store = Store::new();
+        store.restore_from_json(j)?;
+        Ok(store)
+    }
+
+    /// Load a snapshot into this (live) store, replacing its contents —
+    /// used by `kafka-ml serve --state` to recover after a restart.
+    pub fn restore_from_json(&self, j: &Json) -> Result<()> {
+        let unhex = |s: &str| -> Result<Vec<u8>> {
+            if s.len() % 2 != 0 {
+                bail!("odd hex length");
+            }
+            (0..s.len())
+                .step_by(2)
+                .map(|i| {
+                    u8::from_str_radix(&s[i..i + 2], 16)
+                        .map_err(|e| anyhow!("bad hex: {e}"))
+                })
+                .collect()
+        };
+        {
+            let mut st = self.state.lock().unwrap();
+            st.models.clear();
+            st.configurations.clear();
+            st.deployments.clear();
+            st.results.clear();
+            st.inferences.clear();
+            st.control_log.clear();
+            for m in j.get("models").as_arr().unwrap_or(&[]) {
+                let id = m.req_u64("id")?;
+                st.models.insert(
+                    id,
+                    MlModel {
+                        id,
+                        name: m.req_str("name")?.to_string(),
+                        artifact_dir: m.req_str("artifact_dir")?.to_string(),
+                        description: m.get("description").as_str().unwrap_or("").to_string(),
+                    },
+                );
+            }
+            for c in j.get("configurations").as_arr().unwrap_or(&[]) {
+                let id = c.req_u64("id")?;
+                st.configurations.insert(
+                    id,
+                    Configuration {
+                        id,
+                        name: c.req_str("name")?.to_string(),
+                        model_ids: c
+                            .get("model_ids")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|v| v.as_u64())
+                            .collect(),
+                    },
+                );
+            }
+            for d in j.get("deployments").as_arr().unwrap_or(&[]) {
+                let id = d.req_u64("id")?;
+                st.deployments.insert(
+                    id,
+                    Deployment {
+                        id,
+                        configuration_id: d.req_u64("configuration_id")?,
+                        batch_size: d.get("batch_size").as_usize().unwrap_or(10),
+                        epochs: d.get("epochs").as_usize().unwrap_or(1),
+                        shuffle: d.get("shuffle").as_bool().unwrap_or(true),
+                        result_ids: d
+                            .get("result_ids")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|v| v.as_u64())
+                            .collect(),
+                    },
+                );
+            }
+            for r in j.get("results").as_arr().unwrap_or(&[]) {
+                let id = r.req_u64("id")?;
+                st.results.insert(
+                    id,
+                    TrainingResult {
+                        id,
+                        deployment_id: r.req_u64("deployment_id")?,
+                        model_id: r.req_u64("model_id")?,
+                        status: TrainingStatus::parse(r.req_str("status")?)?,
+                        metrics: crate::registry::api::metrics_from_json(r.get("metrics")),
+                        model_blob: unhex(r.get("model_blob_hex").as_str().unwrap_or(""))?,
+                    },
+                );
+            }
+            for i in j.get("inferences").as_arr().unwrap_or(&[]) {
+                let id = i.req_u64("id")?;
+                st.inferences.insert(
+                    id,
+                    InferenceDeployment {
+                        id,
+                        result_id: i.req_u64("result_id")?,
+                        replicas: i.get("replicas").as_u64().unwrap_or(1) as u32,
+                        input_topic: i.req_str("input_topic")?.to_string(),
+                        output_topic: i.req_str("output_topic")?.to_string(),
+                        input_format: i.req_str("input_format")?.to_string(),
+                        input_config: i.get("input_config").clone(),
+                    },
+                );
+            }
+            for e in j.get("control_log").as_arr().unwrap_or(&[]) {
+                st.control_log
+                    .push(crate::registry::api::control_from_json(e)?);
+            }
+        }
+        self.next_id
+            .store(j.get("next_id").as_u64().unwrap_or(1), Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Persist to a file (atomic-ish: write then rename).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, crate::json::to_string_pretty(&self.to_json()))?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Store> {
+        let text = std::fs::read_to_string(path)?;
+        let j = crate::json::parse(&text).map_err(|e| anyhow!("store snapshot: {e}"))?;
+        Store::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ModelParams, ParamTensor};
+
+    // A store whose model validation can pass: we create a real minimal
+    // artifact dir once per test binary.
+    fn artifact_dir() -> String {
+        let dir = std::env::temp_dir().join("kafka-ml-test-artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let meta = r#"{
+          "spec": {"input_dim": 2, "hidden": [3], "classes": 2, "batch": 4,
+                   "lr": 0.001, "seed": 1},
+          "params": [{"name": "w1", "shape": [2, 3], "dtype": "f32"}],
+          "artifacts": {}
+        }"#;
+        std::fs::write(dir.join("meta.json"), meta).unwrap();
+        dir.to_string_lossy().to_string()
+    }
+
+    fn blob() -> Vec<u8> {
+        ModelParams {
+            tensors: vec![ParamTensor {
+                name: "w1".into(),
+                shape: vec![2, 3],
+                data: vec![0.0; 6],
+            }],
+        }
+        .to_bytes()
+    }
+
+    fn store_with_model() -> (Store, u64) {
+        let s = Store::new();
+        let mid = s.create_model("copd", &artifact_dir(), "HCOPD MLP").unwrap();
+        (s, mid)
+    }
+
+    #[test]
+    fn model_creation_validates_artifacts() {
+        let s = Store::new();
+        assert!(s.create_model("bad", "/nonexistent", "").is_err());
+        let (_, mid) = store_with_model();
+        assert!(mid > 0);
+    }
+
+    #[test]
+    fn pipeline_objects_chain() {
+        let (s, mid) = store_with_model();
+        let cid = s.create_configuration("grid", &[mid]).unwrap();
+        let dep = s.create_deployment(cid, 10, 5, true).unwrap();
+        assert_eq!(dep.result_ids.len(), 1);
+        let r = s.result(dep.result_ids[0]).unwrap();
+        assert_eq!(r.status, TrainingStatus::Deployed);
+        assert_eq!(r.model_id, mid);
+    }
+
+    #[test]
+    fn configuration_with_n_models_spawns_n_results() {
+        let (s, m1) = store_with_model();
+        let m2 = s.create_model("copd-2", &artifact_dir(), "").unwrap();
+        let cid = s.create_configuration("pair", &[m1, m2]).unwrap();
+        let dep = s.create_deployment(cid, 10, 1, false).unwrap();
+        assert_eq!(dep.result_ids.len(), 2);
+    }
+
+    #[test]
+    fn configuration_requires_known_models() {
+        let (s, mid) = store_with_model();
+        assert!(s.create_configuration("x", &[]).is_err());
+        assert!(s.create_configuration("x", &[mid, 999]).is_err());
+    }
+
+    #[test]
+    fn finish_result_and_download() {
+        let (s, mid) = store_with_model();
+        let cid = s.create_configuration("c", &[mid]).unwrap();
+        let dep = s.create_deployment(cid, 10, 1, false).unwrap();
+        let rid = dep.result_ids[0];
+        // Not downloadable while unfinished.
+        assert!(s.download_model_blob(rid).is_err());
+        let metrics = TrainingMetrics {
+            loss: 0.5,
+            accuracy: 0.8,
+            val_loss: Some(0.6),
+            val_accuracy: Some(0.75),
+            loss_curve: vec![1.0, 0.7, 0.5],
+        };
+        s.finish_result(rid, metrics.clone(), blob()).unwrap();
+        let r = s.result(rid).unwrap();
+        assert_eq!(r.status, TrainingStatus::Finished);
+        assert_eq!(r.metrics, metrics);
+        assert_eq!(s.download_model_blob(rid).unwrap(), blob());
+    }
+
+    #[test]
+    fn finish_rejects_garbage_blob() {
+        let (s, mid) = store_with_model();
+        let cid = s.create_configuration("c", &[mid]).unwrap();
+        let dep = s.create_deployment(cid, 10, 1, false).unwrap();
+        assert!(s
+            .finish_result(dep.result_ids[0], TrainingMetrics::default(), vec![1, 2, 3])
+            .is_err());
+    }
+
+    #[test]
+    fn inference_requires_finished_result() {
+        let (s, mid) = store_with_model();
+        let cid = s.create_configuration("c", &[mid]).unwrap();
+        let dep = s.create_deployment(cid, 10, 1, false).unwrap();
+        let rid = dep.result_ids[0];
+        assert!(s.create_inference(rid, 2, "in", "out", None).is_err());
+        s.finish_result(rid, TrainingMetrics::default(), blob()).unwrap();
+        // No control log + no override => error.
+        assert!(s.create_inference(rid, 2, "in", "out", None).is_err());
+        // With override it works.
+        let inf = s
+            .create_inference(rid, 2, "in", "out", Some(("RAW".into(), Json::Null)))
+            .unwrap();
+        assert_eq!(inf.replicas, 2);
+    }
+
+    #[test]
+    fn inference_autoconfigures_from_control_log() {
+        let (s, mid) = store_with_model();
+        let cid = s.create_configuration("c", &[mid]).unwrap();
+        let dep = s.create_deployment(cid, 10, 1, false).unwrap();
+        let rid = dep.result_ids[0];
+        s.finish_result(rid, TrainingMetrics::default(), blob()).unwrap();
+        s.log_control(ControlLogEntry {
+            deployment_id: dep.id,
+            topic: "data".into(),
+            partition: 0,
+            offset: 0,
+            length: 100,
+            input_format: "AVRO".into(),
+            input_config: Json::obj(vec![("x", Json::num(1.0))]),
+            validation_rate: 0.2,
+            total_msg: 100,
+            logged_ms: 1,
+        });
+        let inf = s.create_inference(rid, 1, "in", "out", None).unwrap();
+        assert_eq!(inf.input_format, "AVRO");
+        assert_eq!(inf.input_config.get("x").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let (s, mid) = store_with_model();
+        let cid = s.create_configuration("c", &[mid]).unwrap();
+        let dep = s.create_deployment(cid, 10, 3, true).unwrap();
+        let rid = dep.result_ids[0];
+        s.finish_result(
+            rid,
+            TrainingMetrics {
+                loss: 0.3,
+                accuracy: 0.9,
+                val_loss: Some(0.4),
+                val_accuracy: Some(0.85),
+                loss_curve: vec![1.0, 0.5, 0.3],
+            },
+            blob(),
+        )
+        .unwrap();
+        s.log_control(ControlLogEntry {
+            deployment_id: dep.id,
+            topic: "data".into(),
+            partition: 0,
+            offset: 0,
+            length: 50,
+            input_format: "RAW".into(),
+            input_config: Json::obj(vec![("dtype", Json::str("f32"))]),
+            validation_rate: 0.2,
+            total_msg: 50,
+            logged_ms: 123,
+        });
+        let inf = s
+            .create_inference(rid, 2, "in", "out", None)
+            .unwrap();
+
+        let path = std::env::temp_dir().join("kafka-ml-store-test.json");
+        s.save(&path).unwrap();
+        let back = Store::load(&path).unwrap();
+
+        assert_eq!(back.model(mid).unwrap(), s.model(mid).unwrap());
+        assert_eq!(back.configuration(cid).unwrap(), s.configuration(cid).unwrap());
+        assert_eq!(back.deployment(dep.id).unwrap(), s.deployment(dep.id).unwrap());
+        assert_eq!(back.result(rid).unwrap(), s.result(rid).unwrap());
+        assert_eq!(back.inference(inf.id).unwrap(), inf);
+        assert_eq!(back.control_log(), s.control_log());
+        assert_eq!(back.download_model_blob(rid).unwrap(), blob());
+        // Fresh ids continue past the snapshot (no collisions).
+        let m2 = back.create_model("again", &artifact_dir(), "").unwrap();
+        assert!(m2 > inf.id);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("kafka-ml-store-garbage.json");
+        std::fs::write(&path, "{ not json").unwrap();
+        assert!(Store::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn control_log_latest_wins() {
+        let (s, _) = store_with_model();
+        for i in 0..3u64 {
+            s.log_control(ControlLogEntry {
+                deployment_id: 7,
+                topic: format!("t{i}"),
+                partition: 0,
+                offset: i,
+                length: 10,
+                input_format: "RAW".into(),
+                input_config: Json::Null,
+                validation_rate: 0.0,
+                total_msg: 10,
+                logged_ms: i,
+            });
+        }
+        assert_eq!(s.last_control_for(7).unwrap().topic, "t2");
+        assert!(s.last_control_for(8).is_none());
+        assert_eq!(s.control_log().len(), 3);
+    }
+}

@@ -1,0 +1,87 @@
+//! Minimal HTTP client (connection-per-request, like the paper's
+//! components calling the Django back-end).
+
+use super::http::{Method, Request, Response};
+use crate::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::net::TcpStream;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct HttpClient {
+    host: String,
+    timeout: Duration,
+}
+
+impl HttpClient {
+    /// `base_url` like `http://127.0.0.1:8080`.
+    pub fn new(base_url: &str) -> HttpClient {
+        let host = base_url
+            .trim_start_matches("http://")
+            .trim_end_matches('/')
+            .to_string();
+        HttpClient { host, timeout: Duration::from_secs(30) }
+    }
+
+    pub fn with_timeout(mut self, t: Duration) -> HttpClient {
+        self.timeout = t;
+        self
+    }
+
+    /// Send a pre-built request (custom headers, etc.).
+    pub fn send_request(&self, req: Request) -> Result<Response> {
+        self.send(req)
+    }
+
+    fn send(&self, req: Request) -> Result<Response> {
+        let mut stream = TcpStream::connect(&self.host)
+            .with_context(|| format!("connecting to {}", self.host))?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        req.write_to(&mut stream)?;
+        Response::read_from(&mut stream)
+    }
+
+    pub fn get(&self, path: &str) -> Result<Response> {
+        self.send(Request::new(Method::Get, path))
+    }
+
+    pub fn delete(&self, path: &str) -> Result<Response> {
+        self.send(Request::new(Method::Delete, path))
+    }
+
+    pub fn post_json(&self, path: &str, body: &Json) -> Result<Response> {
+        self.send(
+            Request::new(Method::Post, path).with_body(
+                crate::json::to_string(body).into_bytes(),
+                "application/json",
+            ),
+        )
+    }
+
+    pub fn put_json(&self, path: &str, body: &Json) -> Result<Response> {
+        self.send(Request::new(Method::Put, path).with_body(
+            crate::json::to_string(body).into_bytes(),
+            "application/json",
+        ))
+    }
+
+    pub fn post_binary(&self, path: &str, body: Vec<u8>) -> Result<Response> {
+        self.send(
+            Request::new(Method::Post, path).with_body(body, "application/octet-stream"),
+        )
+    }
+
+    /// GET expecting a success status + JSON body.
+    pub fn get_json(&self, path: &str) -> Result<Json> {
+        let resp = self.get(path)?;
+        if !resp.status.is_success() {
+            return Err(anyhow!(
+                "GET {path}: {} {}",
+                resp.status.code(),
+                String::from_utf8_lossy(&resp.body)
+            ));
+        }
+        resp.body_json()
+    }
+}

@@ -1,0 +1,313 @@
+//! HTTP/1.1 message types + wire parsing/serialization.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Get,
+    Post,
+    Put,
+    Delete,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "GET" => Method::Get,
+            "POST" => Method::Post,
+            "PUT" => Method::Put,
+            "DELETE" => Method::Delete,
+            other => bail!("unsupported method {other}"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Method::Get => "GET",
+            Method::Post => "POST",
+            Method::Put => "PUT",
+            Method::Delete => "DELETE",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Ok,
+    Created,
+    NoContent,
+    BadRequest,
+    NotFound,
+    Conflict,
+    ServerError,
+}
+
+impl Status {
+    pub fn code(self) -> u16 {
+        match self {
+            Status::Ok => 200,
+            Status::Created => 201,
+            Status::NoContent => 204,
+            Status::BadRequest => 400,
+            Status::NotFound => 404,
+            Status::Conflict => 409,
+            Status::ServerError => 500,
+        }
+    }
+
+    pub fn reason(self) -> &'static str {
+        match self {
+            Status::Ok => "OK",
+            Status::Created => "Created",
+            Status::NoContent => "No Content",
+            Status::BadRequest => "Bad Request",
+            Status::NotFound => "Not Found",
+            Status::Conflict => "Conflict",
+            Status::ServerError => "Internal Server Error",
+        }
+    }
+
+    pub fn from_code(code: u16) -> Status {
+        match code {
+            200 => Status::Ok,
+            201 => Status::Created,
+            204 => Status::NoContent,
+            400 => Status::BadRequest,
+            404 => Status::NotFound,
+            409 => Status::Conflict,
+            _ => Status::ServerError,
+        }
+    }
+
+    pub fn is_success(self) -> bool {
+        self.code() < 300
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: Method,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+    /// Filled by the router from `:param` segments.
+    pub params: BTreeMap<String, String>,
+}
+
+impl Request {
+    pub fn new(method: Method, path: &str) -> Request {
+        Request {
+            method,
+            path: path.to_string(),
+            headers: BTreeMap::new(),
+            body: Vec::new(),
+            params: BTreeMap::new(),
+        }
+    }
+
+    pub fn with_body(mut self, body: Vec<u8>, content_type: &str) -> Request {
+        self.headers
+            .insert("content-type".to_string(), content_type.to_string());
+        self.body = body;
+        self
+    }
+
+    pub fn param(&self, name: &str) -> Result<&str> {
+        self.params
+            .get(name)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing path param :{name}"))
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|e| anyhow!("body not utf-8: {e}"))
+    }
+
+    /// Read one request from a stream.
+    pub fn read_from(stream: &mut impl Read) -> Result<Request> {
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let mut parts = line.trim_end().split(' ');
+        let method = Method::parse(parts.next().unwrap_or(""))?;
+        let path = parts
+            .next()
+            .ok_or_else(|| anyhow!("malformed request line"))?
+            .to_string();
+        let mut headers = BTreeMap::new();
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            }
+        }
+        let len: usize = headers
+            .get("content-length")
+            .map(|v| v.parse())
+            .transpose()
+            .map_err(|e| anyhow!("bad content-length: {e}"))?
+            .unwrap_or(0);
+        if len > 256 * 1024 * 1024 {
+            bail!("body too large: {len}");
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body)?;
+        Ok(Request { method, path, headers, body, params: BTreeMap::new() })
+    }
+
+    pub fn write_to(&self, stream: &mut impl Write) -> Result<()> {
+        write!(stream, "{} {} HTTP/1.1\r\n", self.method.as_str(), self.path)?;
+        for (k, v) in &self.headers {
+            write!(stream, "{k}: {v}\r\n")?;
+        }
+        write!(stream, "content-length: {}\r\n", self.body.len())?;
+        write!(stream, "connection: close\r\n\r\n")?;
+        stream.write_all(&self.body)?;
+        stream.flush()?;
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: Status,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn status(status: Status) -> Response {
+        Response { status, headers: BTreeMap::new(), body: Vec::new() }
+    }
+
+    pub fn json(status: Status, j: &crate::json::Json) -> Response {
+        let mut r = Response::status(status);
+        r.headers
+            .insert("content-type".to_string(), "application/json".to_string());
+        r.body = crate::json::to_string(j).into_bytes();
+        r
+    }
+
+    pub fn binary(status: Status, body: Vec<u8>) -> Response {
+        let mut r = Response::status(status);
+        r.headers.insert(
+            "content-type".to_string(),
+            "application/octet-stream".to_string(),
+        );
+        r.body = body;
+        r
+    }
+
+    pub fn error(status: Status, msg: &str) -> Response {
+        Response::json(status, &crate::json::Json::obj(vec![("error", msg.into())]))
+    }
+
+    pub fn body_json(&self) -> Result<crate::json::Json> {
+        let s = std::str::from_utf8(&self.body)?;
+        crate::json::parse(s).map_err(|e| anyhow!("response json: {e}"))
+    }
+
+    pub fn read_from(stream: &mut impl Read) -> Result<Response> {
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let code: u16 = line
+            .split(' ')
+            .nth(1)
+            .ok_or_else(|| anyhow!("malformed status line: {line:?}"))?
+            .parse()?;
+        let mut headers = BTreeMap::new();
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            }
+        }
+        let len: usize = headers
+            .get("content-length")
+            .map(|v| v.parse())
+            .transpose()?
+            .unwrap_or(0);
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body)?;
+        Ok(Response { status: Status::from_code(code), headers, body })
+    }
+
+    pub fn write_to(&self, stream: &mut impl Write) -> Result<()> {
+        write!(
+            stream,
+            "HTTP/1.1 {} {}\r\n",
+            self.status.code(),
+            self.status.reason()
+        )?;
+        for (k, v) in &self.headers {
+            write!(stream, "{k}: {v}\r\n")?;
+        }
+        write!(stream, "content-length: {}\r\n", self.body.len())?;
+        write!(stream, "connection: close\r\n\r\n")?;
+        stream.write_all(&self.body)?;
+        stream.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_wire_roundtrip() {
+        let req = Request::new(Method::Post, "/models")
+            .with_body(b"{\"a\":1}".to_vec(), "application/json");
+        let mut wire = Vec::new();
+        req.write_to(&mut wire).unwrap();
+        let back = Request::read_from(&mut wire.as_slice()).unwrap();
+        assert_eq!(back.method, Method::Post);
+        assert_eq!(back.path, "/models");
+        assert_eq!(back.body, req.body);
+        assert_eq!(back.headers.get("content-type").unwrap(), "application/json");
+    }
+
+    #[test]
+    fn response_wire_roundtrip() {
+        let resp = Response::binary(Status::Created, vec![1, 2, 3, 255]);
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire).unwrap();
+        let back = Response::read_from(&mut wire.as_slice()).unwrap();
+        assert_eq!(back.status, Status::Created);
+        assert_eq!(back.body, vec![1, 2, 3, 255]);
+    }
+
+    #[test]
+    fn empty_body_ok() {
+        let mut wire = Vec::new();
+        Request::new(Method::Get, "/x").write_to(&mut wire).unwrap();
+        let back = Request::read_from(&mut wire.as_slice()).unwrap();
+        assert!(back.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Request::read_from(&mut &b"NOT HTTP\r\n\r\n"[..]).is_err());
+    }
+
+    #[test]
+    fn status_codes() {
+        assert_eq!(Status::Ok.code(), 200);
+        assert_eq!(Status::from_code(404), Status::NotFound);
+        assert!(Status::Created.is_success());
+        assert!(!Status::ServerError.is_success());
+    }
+}

@@ -1,0 +1,19 @@
+//! HTTP/1.1 substrate: the transport under the back-end's RESTful API
+//! (§IV-B — Django in the paper, hand-rolled over `std::net` here) plus
+//! the client used by training Jobs and inference replicas to fetch
+//! models and upload results (§IV-C/D).
+//!
+//! Supports exactly what the Kafka-ML API needs: GET/POST/PUT/DELETE,
+//! `Content-Length` bodies (JSON and binary blobs), path-parameter
+//! routing (`/models/:id`), keep-alive-free request/response cycles, and
+//! a thread-pool accept loop with graceful shutdown.
+
+mod client;
+mod http;
+mod router;
+mod server;
+
+pub use client::HttpClient;
+pub use http::{Method, Request, Response, Status};
+pub use router::Router;
+pub use server::Server;

@@ -1,0 +1,148 @@
+//! Path router with `:param` segments.
+
+use super::http::{Method, Request, Response, Status};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+type Handler = Arc<dyn Fn(Request) -> Response + Send + Sync>;
+
+struct Route {
+    method: Method,
+    segments: Vec<Segment>,
+    handler: Handler,
+}
+
+enum Segment {
+    Literal(String),
+    Param(String),
+}
+
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<Route>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    pub fn route<F>(mut self, method: Method, pattern: &str, f: F) -> Router
+    where
+        F: Fn(Request) -> Response + Send + Sync + 'static,
+    {
+        let segments = pattern
+            .trim_matches('/')
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                if let Some(name) = s.strip_prefix(':') {
+                    Segment::Param(name.to_string())
+                } else {
+                    Segment::Literal(s.to_string())
+                }
+            })
+            .collect();
+        self.routes.push(Route { method, segments, handler: Arc::new(f) });
+        self
+    }
+
+    pub fn dispatch(&self, mut req: Request) -> Response {
+        let path: Vec<&str> = req
+            .path
+            .split('?')
+            .next()
+            .unwrap_or("")
+            .trim_matches('/')
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .collect();
+        for route in &self.routes {
+            if route.method != req.method || route.segments.len() != path.len() {
+                continue;
+            }
+            let mut params = BTreeMap::new();
+            let matched = route.segments.iter().zip(&path).all(|(seg, part)| match seg {
+                Segment::Literal(l) => l == part,
+                Segment::Param(name) => {
+                    params.insert(name.clone(), (*part).to_string());
+                    true
+                }
+            });
+            if matched {
+                req.params = params;
+                return (route.handler)(req);
+            }
+        }
+        Response::error(Status::NotFound, &format!("no route for {}", req.path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        Router::new()
+            .route(Method::Get, "/models", |_| {
+                Response::json(Status::Ok, &crate::json::Json::str("list"))
+            })
+            .route(Method::Get, "/models/:id", |req| {
+                Response::json(
+                    Status::Ok,
+                    &crate::json::Json::str(format!("model {}", req.param("id").unwrap())),
+                )
+            })
+            .route(Method::Post, "/models", |_| Response::status(Status::Created))
+            .route(Method::Get, "/models/:id/download", |req| {
+                Response::binary(Status::Ok, req.param("id").unwrap().as_bytes().to_vec())
+            })
+    }
+
+    #[test]
+    fn literal_and_param_routes() {
+        let r = router();
+        let resp = r.dispatch(Request::new(Method::Get, "/models"));
+        assert_eq!(resp.status, Status::Ok);
+        let resp = r.dispatch(Request::new(Method::Get, "/models/42"));
+        assert!(String::from_utf8_lossy(&resp.body).contains("model 42"));
+        let resp = r.dispatch(Request::new(Method::Get, "/models/42/download"));
+        assert_eq!(resp.body, b"42");
+    }
+
+    #[test]
+    fn method_mismatch_is_404() {
+        let r = router();
+        let resp = r.dispatch(Request::new(Method::Delete, "/models"));
+        assert_eq!(resp.status, Status::NotFound);
+    }
+
+    #[test]
+    fn unknown_path_is_404() {
+        let r = router();
+        assert_eq!(
+            r.dispatch(Request::new(Method::Get, "/nope")).status,
+            Status::NotFound
+        );
+        assert_eq!(
+            r.dispatch(Request::new(Method::Get, "/models/1/2/3")).status,
+            Status::NotFound
+        );
+    }
+
+    #[test]
+    fn query_string_ignored_for_matching() {
+        let r = router();
+        let resp = r.dispatch(Request::new(Method::Get, "/models?limit=10"));
+        assert_eq!(resp.status, Status::Ok);
+    }
+
+    #[test]
+    fn trailing_slash_tolerated() {
+        let r = router();
+        assert_eq!(
+            r.dispatch(Request::new(Method::Get, "/models/")).status,
+            Status::Ok
+        );
+    }
+}

@@ -1,0 +1,153 @@
+//! TCP accept loop + thread-pool request handling with graceful shutdown.
+
+use super::http::{Request, Response, Status};
+use super::router::Router;
+use crate::exec::{CancelToken, ThreadPool};
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct Server {
+    addr: SocketAddr,
+    cancel: CancelToken,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind to `127.0.0.1:port` (0 = ephemeral) and serve `router` on a
+    /// pool of `workers` threads until `shutdown`.
+    pub fn start(port: u16, workers: usize, router: Router) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port)).context("binding server")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let cancel = CancelToken::new();
+        let token = cancel.clone();
+        let router = Arc::new(router);
+        let accept_thread = std::thread::Builder::new()
+            .name("rest-accept".to_string())
+            .spawn(move || {
+                let pool = ThreadPool::new(workers, "rest-worker");
+                while !token.is_cancelled() {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let router = router.clone();
+                            pool.execute(move || handle(stream, &router));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(e) => {
+                            log::warn!("accept error: {e}");
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                    }
+                }
+                pool.shutdown();
+            })?;
+        Ok(Server { addr, cancel, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn base_url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.cancel.cancel();
+        if let Some(h) = self.accept_thread.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle(mut stream: TcpStream, router: &Router) {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .ok();
+    let response = match Request::read_from(&mut stream) {
+        Ok(req) => router.dispatch(req),
+        Err(e) => Response::error(Status::BadRequest, &format!("{e}")),
+    };
+    if let Err(e) = response.write_to(&mut stream) {
+        log::debug!("write response: {e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Json;
+    use crate::rest::{HttpClient, Method};
+
+    fn test_server() -> Server {
+        let router = Router::new()
+            .route(Method::Get, "/ping", |_| {
+                Response::json(Status::Ok, &Json::str("pong"))
+            })
+            .route(Method::Post, "/echo", |req| {
+                Response::binary(Status::Ok, req.body)
+            });
+        Server::start(0, 4, router).unwrap()
+    }
+
+    #[test]
+    fn serves_requests() {
+        let s = test_server();
+        let client = HttpClient::new(&s.base_url());
+        let resp = client.get("/ping").unwrap();
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(resp.body_json().unwrap(), Json::str("pong"));
+    }
+
+    #[test]
+    fn echoes_binary_bodies() {
+        let s = test_server();
+        let client = HttpClient::new(&s.base_url());
+        let blob: Vec<u8> = (0..=255).collect();
+        let resp = client.post_binary("/echo", blob.clone()).unwrap();
+        assert_eq!(resp.body, blob);
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let s = test_server();
+        let url = s.base_url();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let url = url.clone();
+                std::thread::spawn(move || {
+                    let client = HttpClient::new(&url);
+                    for _ in 0..10 {
+                        assert_eq!(client.get("/ping").unwrap().status, Status::Ok);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn shutdown_stops_serving() {
+        let s = test_server();
+        let url = s.base_url();
+        s.shutdown();
+        let client = HttpClient::new(&url);
+        assert!(client.get("/ping").is_err());
+    }
+}

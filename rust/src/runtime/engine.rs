@@ -1,0 +1,308 @@
+//! The PJRT execution engine.
+//!
+//! Compiles every HLO-text artifact once at load time; the training loop
+//! and the inference hot path then call `execute` on the pre-compiled
+//! executables with `Literal` inputs. The interchange is HLO **text**
+//! (see `python/compile/aot.py` for why — xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos).
+
+use super::meta::ArtifactMeta;
+use super::params::{ModelParams, ParamTensor};
+use anyhow::{anyhow, bail, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Mutable training state: parameters + Adam moments + step count, kept
+/// as XLA literals between steps so the hot loop does no re-marshalling
+/// of the model.
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    /// 1-based step count (Adam bias correction).
+    pub t: u64,
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    meta: ArtifactMeta,
+    /// Lazily-compiled executables (§Perf: eager compilation of all five
+    /// artifacts cost ~1 s of pod startup; a training Job never touches
+    /// the predict artifacts and an inference replica never touches
+    /// train_step, so each is compiled on first use and cached).
+    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Load the artifact metadata and create the PJRT client. HLO
+    /// compilation happens lazily, per artifact, on first use.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let meta = ArtifactMeta::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Engine { client, meta, execs: RefCell::new(HashMap::new()) })
+    }
+
+    /// Force-compile every artifact now (benches that must exclude
+    /// compile time from the measured region call this first).
+    pub fn warmup_all(&self) -> Result<()> {
+        let names: Vec<String> = self.meta.artifacts.keys().cloned().collect();
+        for name in names {
+            self.exec(&name)?;
+        }
+        Ok(())
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn exec(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.execs.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self.meta.artifact(name)?;
+        let path = self.meta.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?,
+        );
+        self.execs
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Run an artifact and decompose its (return_tuple=True) result.
+    fn run(&self, name: &str, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exec(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("{name}: not a tuple: {e:?}"))
+    }
+
+    // ---- init ------------------------------------------------------------------
+
+    /// Fresh Glorot-initialized parameters (runs the `init` artifact; the
+    /// seed was fixed at AOT time, mirroring the paper's "model defined
+    /// once in the Web UI").
+    pub fn init_params(&self) -> Result<ModelParams> {
+        let outs = self.run("init", &[])?;
+        if outs.len() != self.meta.n_params() {
+            bail!(
+                "init returned {} tensors, meta expects {}",
+                outs.len(),
+                self.meta.n_params()
+            );
+        }
+        let tensors = outs
+            .iter()
+            .zip(&self.meta.params)
+            .map(|(lit, pm)| {
+                Ok(ParamTensor {
+                    name: pm.name.clone(),
+                    shape: pm.shape.clone(),
+                    data: lit
+                        .to_vec::<f32>()
+                        .map_err(|e| anyhow!("init tensor {}: {e:?}", pm.name))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelParams { tensors })
+    }
+
+    // ---- state <-> params ----------------------------------------------------------
+
+    fn tensor_literal(&self, t: &ParamTensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&t.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshaping {}: {e:?}", t.name))
+    }
+
+    fn zeros_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let numel: usize = shape.iter().product();
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&vec![0f32; numel])
+            .reshape(&dims)
+            .map_err(|e| anyhow!("zeros: {e:?}"))
+    }
+
+    /// Start training from `params` with zeroed Adam moments.
+    pub fn train_state(&self, params: &ModelParams) -> Result<TrainState> {
+        params.check_against(&self.meta.params)?;
+        let p = params
+            .tensors
+            .iter()
+            .map(|t| self.tensor_literal(t))
+            .collect::<Result<Vec<_>>>()?;
+        let m = params
+            .tensors
+            .iter()
+            .map(|t| self.zeros_literal(&t.shape))
+            .collect::<Result<Vec<_>>>()?;
+        let v = params
+            .tensors
+            .iter()
+            .map(|t| self.zeros_literal(&t.shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TrainState { params: p, m, v, t: 0 })
+    }
+
+    /// Extract host-side parameters from a training state (for upload).
+    pub fn params_of(&self, state: &TrainState) -> Result<ModelParams> {
+        let tensors = state
+            .params
+            .iter()
+            .zip(&self.meta.params)
+            .map(|(lit, pm)| {
+                Ok(ParamTensor {
+                    name: pm.name.clone(),
+                    shape: pm.shape.clone(),
+                    data: lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelParams { tensors })
+    }
+
+    /// Parameter literals for inference (no optimizer state).
+    pub fn inference_params(&self, params: &ModelParams) -> Result<Vec<xla::Literal>> {
+        params.check_against(&self.meta.params)?;
+        params
+            .tensors
+            .iter()
+            .map(|t| self.tensor_literal(t))
+            .collect()
+    }
+
+    // ---- training ---------------------------------------------------------------------
+
+    /// One optimizer step on one batch. `x` is `batch × input_dim`
+    /// row-major, `y` is `batch` labels. Returns `(loss, accuracy)`.
+    pub fn train_step(&self, state: &mut TrainState, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let n = self.meta.n_params();
+        let b = self.meta.batch;
+        if x.len() != b * self.meta.input_dim || y.len() != b {
+            bail!(
+                "train_step batch mismatch: x {} (want {}), y {} (want {})",
+                x.len(),
+                b * self.meta.input_dim,
+                y.len(),
+                b
+            );
+        }
+        state.t += 1;
+        let xl = xla::Literal::vec1(x)
+            .reshape(&[b as i64, self.meta.input_dim as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let yl = xla::Literal::vec1(y);
+        let tl = xla::Literal::scalar(state.t as f32);
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 3);
+        args.extend(state.params.iter());
+        args.extend(state.m.iter());
+        args.extend(state.v.iter());
+        args.push(&tl);
+        args.push(&xl);
+        args.push(&yl);
+
+        let mut outs = self.run("train_step", &args)?;
+        if outs.len() != 3 * n + 2 {
+            bail!("train_step returned {} outputs, want {}", outs.len(), 3 * n + 2);
+        }
+        let acc = scalar_f32(&outs.pop().unwrap())?;
+        let loss = scalar_f32(&outs.pop().unwrap())?;
+        state.v = outs.split_off(2 * n);
+        state.m = outs.split_off(n);
+        state.params = outs;
+        Ok((loss, acc))
+    }
+
+    /// Loss + accuracy on one batch without updating parameters.
+    pub fn eval_step(&self, params: &[xla::Literal], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let b = self.meta.batch;
+        if x.len() != b * self.meta.input_dim || y.len() != b {
+            bail!("eval_step batch mismatch");
+        }
+        let xl = xla::Literal::vec1(x)
+            .reshape(&[b as i64, self.meta.input_dim as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let yl = xla::Literal::vec1(y);
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&xl);
+        args.push(&yl);
+        let outs = self.run("eval_step", &args)?;
+        Ok((scalar_f32(&outs[0])?, scalar_f32(&outs[1])?))
+    }
+
+    // ---- inference -----------------------------------------------------------------------
+
+    /// Class probabilities for `rows` samples (`rows × input_dim` f32).
+    /// Uses the batch artifact for full batches and the single-record
+    /// artifact for remainders, so any row count works.
+    pub fn predict(&self, params: &[xla::Literal], x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let f = self.meta.input_dim;
+        if x.len() != rows * f {
+            bail!("predict shape mismatch: {} vs {rows}×{f}", x.len());
+        }
+        let bs = self.meta.artifact("predict")?.batch.unwrap_or(self.meta.batch);
+        let mut probs = Vec::with_capacity(rows * self.meta.classes);
+        let mut row = 0;
+        while row < rows {
+            let (art, take) = if rows - row >= bs {
+                ("predict", bs)
+            } else {
+                ("predict_single", 1)
+            };
+            let xl = xla::Literal::vec1(&x[row * f..(row + take) * f])
+                .reshape(&[take as i64, f as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let mut args: Vec<&xla::Literal> = params.iter().collect();
+            args.push(&xl);
+            let outs = self.run(art, &args)?;
+            probs.extend(outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?);
+            row += take;
+        }
+        Ok(probs)
+    }
+
+    /// Argmax class per row of `predict` output.
+    pub fn classify(&self, probs: &[f32]) -> Vec<usize> {
+        probs
+            .chunks(self.meta.classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow!("{e:?}"))?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty scalar"))
+}
+
+// Engine tests live in rust/tests/runtime_integration.rs because they
+// need the real artifacts (built by `make artifacts`).

@@ -1,0 +1,173 @@
+//! `artifacts/meta.json` — the contract between the Python AOT path and
+//! the Rust runtime: parameter tensor order/shapes and the input/output
+//! arity of each artifact.
+
+use crate::json::{parse, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub batch: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub dir: PathBuf,
+    pub input_dim: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub hidden: Vec<usize>,
+    pub params: Vec<ParamMeta>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl ArtifactMeta {
+    /// Parse `<dir>/meta.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactMeta> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: PathBuf) -> Result<ArtifactMeta> {
+        let spec = j.get("spec");
+        let params = j
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("meta.json: missing params[]"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamMeta {
+                    name: p.req_str("name")?.to_string(),
+                    shape: p
+                        .get("shape")
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("param shape missing"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = j
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("meta.json: missing artifacts{{}}"))?
+            .iter()
+            .map(|(k, v)| {
+                Ok((
+                    k.clone(),
+                    ArtifactInfo {
+                        file: v.req_str("file")?.to_string(),
+                        batch: v.get("batch").as_usize(),
+                    },
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(ArtifactMeta {
+            dir,
+            input_dim: spec.req_u64("input_dim")? as usize,
+            classes: spec.req_u64("classes")? as usize,
+            batch: spec.req_u64("batch")? as usize,
+            lr: spec.req_f64("lr")?,
+            seed: spec.get("seed").as_u64().unwrap_or(0),
+            hidden: spec
+                .get("hidden")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|h| h.as_usize())
+                .collect(),
+            params,
+            artifacts,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("meta.json has no artifact '{name}'"))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Total parameter count of the model.
+    pub fn total_weights(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format_version": 1,
+      "spec": {"input_dim": 8, "hidden": [16], "classes": 4, "batch": 10,
+               "lr": 0.0001, "beta1": 0.9, "beta2": 0.999, "eps": 1e-07, "seed": 42},
+      "params": [
+        {"name": "w1", "shape": [8, 16], "dtype": "f32"},
+        {"name": "b1", "shape": [16], "dtype": "f32"},
+        {"name": "w2", "shape": [16, 4], "dtype": "f32"},
+        {"name": "b2", "shape": [4], "dtype": "f32"}
+      ],
+      "artifacts": {
+        "init": {"file": "init.hlo.txt", "inputs": [], "outputs": ["params*"]},
+        "train_step": {"file": "train_step.hlo.txt", "batch": 10, "n_params": 4,
+                       "inputs": [], "outputs": []},
+        "predict": {"file": "predict_b10.hlo.txt", "batch": 10, "n_params": 4,
+                    "inputs": [], "outputs": []}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = parse(SAMPLE).unwrap();
+        let m = ArtifactMeta::from_json(&j, PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(m.input_dim, 8);
+        assert_eq!(m.batch, 10);
+        assert_eq!(m.hidden, vec![16]);
+        assert_eq!(m.n_params(), 4);
+        assert_eq!(m.params[0].shape, vec![8, 16]);
+        assert_eq!(m.params[0].numel(), 128);
+        assert_eq!(m.total_weights(), 128 + 16 + 64 + 4);
+        assert_eq!(m.artifact("predict").unwrap().batch, Some(10));
+        assert!(m.artifact("nope").is_err());
+        assert_eq!(
+            m.artifact_path("init").unwrap(),
+            PathBuf::from("/tmp/x/init.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_fields_error_cleanly() {
+        let j = parse(r#"{"spec": {}}"#).unwrap();
+        assert!(ArtifactMeta::from_json(&j, PathBuf::new()).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! The PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text + `meta.json`) and executes them on
+//! the request path — the piece that replaces TensorFlow in the paper's
+//! training Jobs and inference replicas. Python is never involved here.
+//!
+//! * [`ArtifactMeta`] — the shapes/order contract parsed from
+//!   `artifacts/meta.json`;
+//! * [`Engine`] — compiles each `*.hlo.txt` once via the PJRT CPU client
+//!   and exposes typed `init` / `train_step` / `eval_step` / `predict`;
+//! * [`ModelParams`] — host-side parameter tensors with a stable binary
+//!   wire format, so trained models can be uploaded to / downloaded from
+//!   the back-end registry exactly like the paper's trained-model blobs.
+
+mod engine;
+mod meta;
+mod params;
+
+pub use engine::{Engine, TrainState};
+pub use meta::{ArtifactInfo, ArtifactMeta, ParamMeta};
+pub use params::{ModelParams, ParamTensor};

@@ -1,0 +1,213 @@
+//! Host-side model parameters + the binary wire format used to move
+//! trained models between training Jobs and the back-end registry
+//! (the paper's "submit the trained model to the back-end" /
+//! "download the trained model" steps).
+//!
+//! Wire format (little-endian):
+//! ```text
+//! magic "KMLP" | u32 version | u32 n_tensors
+//! per tensor: u16 name_len | name | u8 ndim | u32 dims[ndim] | f32 data[numel]
+//! ```
+
+use super::meta::ParamMeta;
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl ParamTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ModelParams {
+    pub tensors: Vec<ParamTensor>,
+}
+
+const MAGIC: &[u8; 4] = b"KMLP";
+const VERSION: u32 = 1;
+
+impl ModelParams {
+    pub fn total_weights(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Validate against the artifact contract (names, order, shapes).
+    pub fn check_against(&self, metas: &[ParamMeta]) -> Result<()> {
+        if self.tensors.len() != metas.len() {
+            bail!(
+                "param count mismatch: {} vs meta {}",
+                self.tensors.len(),
+                metas.len()
+            );
+        }
+        for (t, m) in self.tensors.iter().zip(metas) {
+            if t.name != m.name || t.shape != m.shape {
+                bail!(
+                    "param mismatch: got {}{:?}, meta says {}{:?}",
+                    t.name,
+                    t.shape,
+                    m.name,
+                    m.shape
+                );
+            }
+            if t.data.len() != t.numel() {
+                bail!("tensor {}: data len {} != numel {}", t.name, t.data.len(), t.numel());
+            }
+        }
+        Ok(())
+    }
+
+    // ---- wire format ---------------------------------------------------------
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.total_weights() * 4);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for t in &self.tensors {
+            out.extend_from_slice(&(t.name.len() as u16).to_le_bytes());
+            out.extend_from_slice(t.name.as_bytes());
+            out.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<ModelParams> {
+        let mut r = Reader { bytes, pos: 0 };
+        if r.take(4)? != MAGIC {
+            bail!("bad magic (not a KMLP model blob)");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported model blob version {version}");
+        }
+        let n = r.u32()? as usize;
+        if n > 10_000 {
+            bail!("implausible tensor count {n}");
+        }
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = r.u16()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+            let ndim = r.take(1)?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u32()? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            if numel > 100_000_000 {
+                bail!("implausible tensor size {numel}");
+            }
+            let raw = r.take(numel * 4)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push(ParamTensor { name, shape, data });
+        }
+        if r.pos != bytes.len() {
+            bail!("trailing bytes in model blob");
+        }
+        Ok(ModelParams { tensors })
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("truncated model blob at byte {}", self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ModelParams {
+        ModelParams {
+            tensors: vec![
+                ParamTensor {
+                    name: "w1".into(),
+                    shape: vec![2, 3],
+                    data: vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.25],
+                },
+                ParamTensor { name: "b1".into(), shape: vec![3], data: vec![0.1, 0.2, 0.3] },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = sample();
+        let bytes = p.to_bytes();
+        let back = ModelParams::from_bytes(&bytes).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let p = sample();
+        let mut bytes = p.to_bytes();
+        bytes[0] = b'X'; // magic
+        assert!(ModelParams::from_bytes(&bytes).is_err());
+        let mut short = p.to_bytes();
+        short.truncate(short.len() - 3);
+        assert!(ModelParams::from_bytes(&short).is_err());
+        let mut long = p.to_bytes();
+        long.push(0);
+        assert!(ModelParams::from_bytes(&long).is_err());
+    }
+
+    #[test]
+    fn check_against_meta() {
+        let p = sample();
+        let metas = vec![
+            ParamMeta { name: "w1".into(), shape: vec![2, 3] },
+            ParamMeta { name: "b1".into(), shape: vec![3] },
+        ];
+        p.check_against(&metas).unwrap();
+        let wrong = vec![
+            ParamMeta { name: "w1".into(), shape: vec![3, 2] },
+            ParamMeta { name: "b1".into(), shape: vec![3] },
+        ];
+        assert!(p.check_against(&wrong).is_err());
+        assert!(p.check_against(&metas[..1]).is_err());
+    }
+
+    #[test]
+    fn total_weights() {
+        assert_eq!(sample().total_weights(), 9);
+    }
+}

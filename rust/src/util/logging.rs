@@ -1,0 +1,60 @@
+//! Minimal `log` backend (env_logger is not in the offline vendor set).
+//!
+//! Level via `KML_LOG` (error|warn|info|debug|trace, default warn).
+//! Installed by the CLI and examples so pod warnings (bad control
+//! messages, failed uploads, dropped inference requests) are visible.
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let thread = std::thread::current();
+            eprintln!(
+                "[{:<5} {}] {}",
+                record.level(),
+                thread.name().unwrap_or("?"),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent — later calls are no-ops).
+pub fn init() {
+    let level = match std::env::var("KML_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("info") => Level::Info,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Warn,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(match level {
+        Level::Error => LevelFilter::Error,
+        Level::Warn => LevelFilter::Warn,
+        Level::Info => LevelFilter::Info,
+        Level::Debug => LevelFilter::Debug,
+        Level::Trace => LevelFilter::Trace,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init(); // second call must not panic
+        log::warn!("logging smoke test");
+    }
+}

@@ -1,0 +1,74 @@
+//! Small shared substrates: deterministic PRNG, clocks, byte helpers.
+//!
+//! Nothing here depends on the rest of the crate; everything else may
+//! depend on this.
+
+pub mod clock;
+pub mod logging;
+pub mod rng;
+
+pub use clock::{Clock, ManualClock, SystemClock};
+pub use rng::Rng;
+
+/// Round `x` up to the next multiple of `mult` (mult > 0).
+pub fn round_up(x: usize, mult: usize) -> usize {
+    debug_assert!(mult > 0);
+    x.div_ceil(mult) * mult
+}
+
+/// Human-readable byte size (`1.5 KiB`, `3.2 MiB`, …).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+/// Human-readable duration with µs/ms/s autoscaling.
+pub fn human_duration(d: std::time::Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1000.0)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(17, 5), 20);
+    }
+
+    #[test]
+    fn human_bytes_scales() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn human_duration_scales() {
+        use std::time::Duration;
+        assert_eq!(human_duration(Duration::from_micros(500)), "500.0µs");
+        assert_eq!(human_duration(Duration::from_millis(12)), "12.00ms");
+        assert_eq!(human_duration(Duration::from_secs(2)), "2.000s");
+    }
+}

@@ -1,0 +1,255 @@
+//! Property-based tests on broker + coordinator invariants, using the
+//! in-crate `prop` mini-framework (proptest is not available offline).
+
+use kafka_ml::broker::{
+    Assignor, BrokerConfig, CleanupPolicy, ClientLocality, Cluster, Consumer, LogConfig,
+    Producer, ProducerConfig, Record,
+};
+use kafka_ml::coordinator::StreamRef;
+use kafka_ml::prop::{forall, BytesGen, Gen, IntGen, StringGen, VecGen};
+use kafka_ml::util::clock::ManualClock;
+use kafka_ml::util::Rng;
+use std::sync::Arc;
+
+#[test]
+fn prop_log_offsets_dense_and_reads_consistent() {
+    // For any payload sequence: offsets are 0..n, and any [from, from+k)
+    // read returns exactly the records appended there.
+    let gen = VecGen { elem: BytesGen { max_len: 64 }, max_len: 200 };
+    forall(11, 60, &gen, |payloads: &Vec<Vec<u8>>| {
+        let clock = ManualClock::new(1000);
+        let mut log = kafka_ml::broker::SegmentedLog::new(
+            LogConfig { segment_bytes: 256, ..LogConfig::default() },
+            Arc::new(clock),
+        );
+        for (i, p) in payloads.iter().enumerate() {
+            if log.append(Record::new(p.clone())) != i as u64 {
+                return false;
+            }
+        }
+        if log.latest_offset() != payloads.len() as u64 {
+            return false;
+        }
+        // Random window checks.
+        let mut rng = Rng::new(payloads.len() as u64);
+        for _ in 0..5 {
+            if payloads.is_empty() {
+                break;
+            }
+            let from = rng.below(payloads.len() as u64);
+            let k = rng.below(payloads.len() as u64 - from + 1) as usize;
+            let got = log.read(from, k);
+            if got.len() != k {
+                return false;
+            }
+            for (j, (off, rec)) in got.iter().enumerate() {
+                if *off != from + j as u64 || rec.value != payloads[(from as usize) + j] {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_retention_preserves_suffix_contiguity() {
+    // After any delete-retention sweep, the retained records are a
+    // contiguous suffix of what was appended (no holes in the middle).
+    let gen = IntGen { lo: 1, hi: 300 };
+    forall(13, 40, &gen, |&n: &i64| {
+        let clock = ManualClock::new(1000);
+        let mut log = kafka_ml::broker::SegmentedLog::new(
+            LogConfig {
+                segment_bytes: 128,
+                retention_bytes: Some(512),
+                retention_ms: None,
+                cleanup_policy: CleanupPolicy::Delete,
+            },
+            Arc::new(clock),
+        );
+        for i in 0..n {
+            log.append(Record::new(vec![(i % 251) as u8; 16]));
+            log.enforce_retention();
+        }
+        let earliest = log.earliest_offset();
+        let recs = log.read(0, n as usize + 1);
+        // Dense suffix [earliest, n).
+        recs.len() as u64 == n as u64 - earliest
+            && recs
+                .iter()
+                .enumerate()
+                .all(|(j, (off, _))| *off == earliest + j as u64)
+    });
+}
+
+#[test]
+fn prop_group_assignment_partitions_partition_set() {
+    // For any member count and partition count under both assignors:
+    // every partition is owned by exactly one member.
+    #[derive(Clone, Debug)]
+    struct Case {
+        members: usize,
+        partitions: u32,
+        round_robin: bool,
+    }
+    struct CaseGen;
+    impl Gen<Case> for CaseGen {
+        fn generate(&self, rng: &mut Rng, _size: usize) -> Case {
+            Case {
+                members: 1 + rng.below(8) as usize,
+                partitions: rng.below(20) as u32,
+                round_robin: rng.chance(0.5),
+            }
+        }
+    }
+    forall(17, 120, &CaseGen, |case: &Case| {
+        let c = Cluster::new(BrokerConfig::default());
+        c.create_topic("t", case.partitions.max(1));
+        let assignor = if case.round_robin { Assignor::RoundRobin } else { Assignor::Range };
+        let mut members = Vec::new();
+        for m in 0..case.members {
+            members.push(c.join_group("g", &format!("m{m}"), &["t".into()], assignor));
+        }
+        // Read final assignments via heartbeat (post-rebalance).
+        let mut seen = std::collections::HashSet::new();
+        let mut total = 0;
+        for m in 0..case.members {
+            let hb = c.heartbeat("g", &format!("m{m}")).unwrap();
+            for tp in hb.assigned {
+                total += 1;
+                if !seen.insert(tp) {
+                    return false; // duplicate ownership
+                }
+            }
+        }
+        total == case.partitions.max(1)
+    });
+}
+
+#[test]
+fn prop_produce_consume_preserves_per_partition_order_and_content() {
+    // Any keyed record set: per key, consumption order == production
+    // order, and nothing is lost or duplicated.
+    let gen = VecGen {
+        elem: StringGen { max_len: 6 },
+        max_len: 120,
+    };
+    forall(19, 40, &gen, |keys: &Vec<String>| {
+        let c = Cluster::new(BrokerConfig { default_partitions: 4, ..Default::default() });
+        c.create_topic("t", 4);
+        let mut p = Producer::new(
+            c.clone(),
+            ProducerConfig { batch_size: 7, ..Default::default() },
+        );
+        for (i, k) in keys.iter().enumerate() {
+            let rec = Record::with_key(k.as_bytes().to_vec(), (i as u32).to_le_bytes().to_vec());
+            p.send("t", rec).unwrap();
+        }
+        p.flush().unwrap();
+        let mut cons = Consumer::new(c, ClientLocality::InCluster);
+        cons.assign((0..4).map(|i| ("t".to_string(), i)).collect());
+        let mut got = Vec::new();
+        loop {
+            let recs = cons.poll(64).unwrap();
+            if recs.is_empty() {
+                break;
+            }
+            got.extend(recs);
+        }
+        if got.len() != keys.len() {
+            return false;
+        }
+        // Per-key order preserved.
+        let mut last_seq: std::collections::HashMap<Vec<u8>, u32> = Default::default();
+        let mut per_partition_last: std::collections::HashMap<u32, u64> = Default::default();
+        for rec in &got {
+            // Offsets strictly increase within a partition poll stream.
+            if let Some(&prev) = per_partition_last.get(&rec.partition) {
+                if rec.offset <= prev {
+                    return false;
+                }
+            }
+            per_partition_last.insert(rec.partition, rec.offset);
+        }
+        // Group by key and check sequence numbers are increasing.
+        let mut by_key: std::collections::HashMap<Vec<u8>, Vec<(u32, u64)>> = Default::default();
+        for rec in &got {
+            let seq = u32::from_le_bytes(rec.record.value[..4].try_into().unwrap());
+            by_key
+                .entry(rec.record.key.clone().unwrap())
+                .or_default()
+                .push((seq, rec.offset));
+        }
+        for (_k, seqs) in by_key {
+            let mut sorted_by_offset = seqs.clone();
+            sorted_by_offset.sort_by_key(|&(_, off)| off);
+            let seq_order: Vec<u32> = sorted_by_offset.iter().map(|&(s, _)| s).collect();
+            let mut expected = seq_order.clone();
+            expected.sort();
+            if seq_order != expected {
+                return false;
+            }
+        }
+        let _ = last_seq.insert(vec![], 0);
+        true
+    });
+}
+
+#[test]
+fn prop_stream_ref_format_parse_roundtrip() {
+    #[derive(Clone, Debug)]
+    struct RefCase(String, u32, u64, u64);
+    struct RefGen;
+    impl Gen<RefCase> for RefGen {
+        fn generate(&self, rng: &mut Rng, _size: usize) -> RefCase {
+            let name_len = 1 + rng.below(12) as usize;
+            let topic: String = (0..name_len)
+                .map(|_| (b'a' + rng.below(26) as u8) as char)
+                .collect();
+            RefCase(
+                topic,
+                rng.below(64) as u32,
+                rng.below(1 << 40),
+                rng.below(1 << 20),
+            )
+        }
+    }
+    forall(23, 300, &RefGen, |c: &RefCase| {
+        let r = StreamRef::new(&c.0, c.1, c.2, c.3);
+        match StreamRef::parse(&r.format()) {
+            Ok(back) => back == r,
+            Err(_) => false,
+        }
+    });
+}
+
+#[test]
+fn prop_avro_roundtrip_random_records() {
+    // Random fixed-width feature vectors encode+decode losslessly
+    // through the AVRO format used by the HCOPD pipeline.
+    let gen = VecGen {
+        elem: IntGen { lo: -1000, hi: 1000 },
+        max_len: 16,
+    };
+    let config = kafka_ml::json::parse(
+        r#"{
+      "data_scheme": {"type":"record","name":"d","fields":[
+        {"name":"vals","type":{"type":"array","items":"float"}}]},
+      "label_scheme": {"type":"record","name":"l","fields":[
+        {"name":"y","type":"int"}]}
+    }"#,
+    )
+    .unwrap();
+    let format = kafka_ml::formats::registry("AVRO", &config).unwrap();
+    forall(29, 150, &gen, |vals: &Vec<i64>| {
+        let feats: Vec<f32> = vals.iter().map(|&v| v as f32 * 0.5).collect();
+        if feats.is_empty() {
+            return true; // empty arrays are legal but produce no features
+        }
+        let label = (vals.len() % 4) as i32;
+        let rec = format.encode(&feats, Some(label)).unwrap();
+        let sample = format.decode(&rec).unwrap();
+        sample.features == feats && sample.label == Some(label)
+    });
+}

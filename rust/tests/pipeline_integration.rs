@@ -1,0 +1,303 @@
+//! End-to-end pipeline tests: the full Fig-1 flow (A–F) over the real
+//! broker, orchestrator, REST back-end and PJRT runtime, with the real
+//! AOT artifacts. Requires `make artifacts`.
+
+use kafka_ml::broker::ClientLocality;
+use kafka_ml::coordinator::{KafkaMl, KafkaMlConfig, TrainParams};
+use kafka_ml::json::Json;
+use kafka_ml::ml::hcopd_dataset;
+use kafka_ml::registry::TrainingStatus;
+use std::time::Duration;
+
+fn avro_config() -> Json {
+    kafka_ml::json::parse(
+        r#"{
+      "data_scheme": {"type":"record","name":"copd","fields":[
+        {"name":"age","type":"float"},
+        {"name":"gender","type":"float"},
+        {"name":"smoking","type":"float"},
+        {"name":"sensors","type":{"type":"array","items":"float"}}]},
+      "label_scheme": {"type":"record","name":"label","fields":[
+        {"name":"diagnosis","type":"int"}]}
+    }"#,
+    )
+    .unwrap()
+}
+
+fn raw_config() -> Json {
+    kafka_ml::json::parse(r#"{"dtype": "f32", "shape": [8]}"#).unwrap()
+}
+
+fn platform() -> KafkaMl {
+    KafkaMl::start(KafkaMlConfig::default()).expect("platform boot")
+}
+
+/// Steps A–D: define, configure, deploy, ingest, wait for training.
+fn train_one(kml: &KafkaMl, format: &str, config: &Json, validation_rate: f64) -> u64 {
+    let model = kml.create_model("hcopd-mlp").unwrap();
+    let conf = kml.create_configuration("hcopd", &[model]).unwrap();
+    let dep = kml
+        .deploy_training(conf, &TrainParams { epochs: 3, ..Default::default() })
+        .unwrap();
+    let ds = hcopd_dataset(220, 8, 42);
+    kml.send_stream(
+        dep.id,
+        &ds.samples,
+        "hcopd-data",
+        format,
+        config,
+        validation_rate,
+        ClientLocality::External,
+    )
+    .unwrap();
+    let results = kml.wait_training(&dep, Duration::from_secs(120)).unwrap();
+    assert_eq!(results.len(), 1);
+    let r = &results[0];
+    assert_eq!(r.status, TrainingStatus::Finished);
+    assert!(r.metrics.loss > 0.0 && r.metrics.loss.is_finite());
+    assert_eq!(r.metrics.loss_curve.len(), 3);
+    r.id
+}
+
+#[test]
+fn full_pipeline_avro_training_and_inference() {
+    let kml = platform();
+    let result_id = train_one(&kml, "AVRO", &avro_config(), 0.2);
+
+    // Validation metrics exist because validation_rate > 0.
+    let r = kml.store.result(result_id).unwrap();
+    assert!(r.metrics.val_loss.is_some());
+    assert!(r.metrics.val_accuracy.is_some());
+
+    // §IV-E auto-configuration: the inference deployment inherits the
+    // AVRO format from the control log without us specifying it.
+    let inf = kml
+        .deploy_inference(result_id, 2, "infer-in", "infer-out")
+        .unwrap();
+    assert_eq!(inf.input_format, "AVRO");
+
+    // Step F: stream requests, get predictions.
+    let mut client = kml
+        .inference_client(&inf, ClientLocality::External)
+        .unwrap();
+    let ds = hcopd_dataset(20, 8, 77);
+    let mut correct = 0;
+    for s in &ds.samples {
+        let p = client
+            .request(&s.features, Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(p.probs.len(), 4);
+        let sum: f32 = p.probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3);
+        if p.class as i32 == s.label.unwrap() {
+            correct += 1;
+        }
+    }
+    // 3 epochs at lr=1e-4 won't be great, but predictions must flow.
+    assert!(correct <= 20);
+    kml.stop_inference(inf.id).unwrap();
+    kml.shutdown();
+}
+
+#[test]
+fn raw_format_pipeline_works_too() {
+    let kml = platform();
+    let result_id = train_one(&kml, "RAW", &raw_config(), 0.0);
+    let r = kml.store.result(result_id).unwrap();
+    assert!(r.metrics.val_loss.is_none()); // no validation stream
+    kml.shutdown();
+}
+
+#[test]
+fn configuration_with_two_models_trains_both_from_one_stream() {
+    // §III-B's selling point: n models, ONE data stream.
+    let kml = platform();
+    let m1 = kml.create_model("mlp-a").unwrap();
+    let m2 = kml.create_model("mlp-b").unwrap();
+    let conf = kml.create_configuration("pair", &[m1, m2]).unwrap();
+    let dep = kml
+        .deploy_training(
+            conf,
+            &TrainParams { epochs: 2, seed: 1, ..Default::default() },
+        )
+        .unwrap();
+    assert_eq!(dep.result_ids.len(), 2);
+    let ds = hcopd_dataset(100, 8, 5);
+    kml.send_stream(
+        dep.id,
+        &ds.samples,
+        "pair-data",
+        "RAW",
+        &raw_config(),
+        0.0,
+        ClientLocality::External,
+    )
+    .unwrap();
+    let results = kml.wait_training(&dep, Duration::from_secs(120)).unwrap();
+    assert_eq!(results.len(), 2);
+    for r in &results {
+        assert_eq!(r.status, TrainingStatus::Finished);
+    }
+    // The data stream was produced exactly once (100 records + the
+    // control message) — not once per model.
+    let (_, latest) = kml.cluster.offsets("pair-data", 0).unwrap();
+    assert_eq!(latest, 100);
+    kml.shutdown();
+}
+
+#[test]
+fn stream_reuse_trains_second_deployment_without_resend() {
+    // §V / Fig 8: D1 trains from the stream; D2 reuses it via a
+    // control-message re-send.
+    let kml = platform();
+    let model = kml.create_model("reuse-model").unwrap();
+    let conf = kml.create_configuration("reuse", &[model]).unwrap();
+
+    // D1: full ingest.
+    let dep1 = kml
+        .deploy_training(conf, &TrainParams { epochs: 1, ..Default::default() })
+        .unwrap();
+    let ds = hcopd_dataset(120, 8, 8);
+    kml.send_stream(
+        dep1.id,
+        &ds.samples,
+        "reuse-data",
+        "RAW",
+        &raw_config(),
+        0.0,
+        ClientLocality::External,
+    )
+    .unwrap();
+    kml.wait_training(&dep1, Duration::from_secs(120)).unwrap();
+    kml.wait_control_logged(dep1.id, Duration::from_secs(10)).unwrap();
+    let (_, data_end) = kml.cluster.offsets("reuse-data", 0).unwrap();
+    assert_eq!(data_end, 120);
+
+    // D2: deploy, then *reuse* D1's stream — no data re-send.
+    let dep2 = kml
+        .deploy_training(conf, &TrainParams { epochs: 1, ..Default::default() })
+        .unwrap();
+    let msg = kml
+        .reuse()
+        .resend(dep1.id, dep2.id, ClientLocality::External)
+        .unwrap();
+    assert_eq!(msg.stream.format(), "[reuse-data:0:0:120]");
+    let results = kml.wait_training(&dep2, Duration::from_secs(120)).unwrap();
+    assert_eq!(results[0].status, TrainingStatus::Finished);
+
+    // The data topic did NOT grow — the whole point of §V.
+    let (_, data_end_after) = kml.cluster.offsets("reuse-data", 0).unwrap();
+    assert_eq!(data_end_after, 120);
+    kml.shutdown();
+}
+
+#[test]
+fn inference_replicas_load_balance_and_survive_kill() {
+    let kml = platform();
+    let result_id = train_one(&kml, "RAW", &raw_config(), 0.0);
+    let inf = kml
+        .deploy_inference(result_id, 3, "lb-in", "lb-out")
+        .unwrap();
+
+    let mut client = kml
+        .inference_client(&inf, ClientLocality::External)
+        .unwrap();
+    let ds = hcopd_dataset(30, 8, 13);
+    for s in ds.samples.iter().take(10) {
+        client.request(&s.features, Duration::from_secs(10)).unwrap();
+    }
+
+    // Kill one replica; the RC reconciler must replace it and service
+    // must continue (§IV-D fault tolerance).
+    let pods = kml.orch.pods_of_rc(&format!("inference-{}", inf.id));
+    assert_eq!(pods.len(), 3);
+    kml.orch.kill_pod(&pods[0]);
+    for s in ds.samples.iter().skip(10) {
+        client.request(&s.features, Duration::from_secs(15)).unwrap();
+    }
+    kml.orch
+        .wait_rc_ready(&format!("inference-{}", inf.id), Duration::from_secs(30))
+        .unwrap();
+    // At-least-once: the killed replica may not have committed its last
+    // poll, so the replacement can re-predict a few requests — the count
+    // must cover every request, duplicates allowed.
+    assert!(
+        kml.cluster
+            .metrics
+            .counter("kafka_ml.inference.predictions")
+            .get()
+            >= 30
+    );
+    kml.stop_inference(inf.id).unwrap();
+    kml.shutdown();
+}
+
+#[test]
+fn pipeline_survives_broker_failover() {
+    // §II/§IV-F fault tolerance: kill the leader broker of the data
+    // topic mid-pipeline; partition replicas take over and training +
+    // inference still complete.
+    let kml = platform();
+    let model = kml.create_model("failover").unwrap();
+    let conf = kml.create_configuration("failover", &[model]).unwrap();
+    let dep = kml
+        .deploy_training(conf, &TrainParams { epochs: 2, ..Default::default() })
+        .unwrap();
+    let ds = hcopd_dataset(100, 8, 21);
+    kml.cluster.create_topic("fo-data", 1);
+    // Kill the leader of fo-data:0 BEFORE the stream is sent.
+    let leader = {
+        let t = kml.cluster.topic("fo-data").unwrap();
+        let p = t.partition(0).unwrap().lock().unwrap();
+        p.leader
+    };
+    kml.cluster.kill_broker(leader);
+    kml.send_stream(
+        dep.id,
+        &ds.samples,
+        "fo-data",
+        "RAW",
+        &raw_config(),
+        0.0,
+        ClientLocality::External,
+    )
+    .unwrap();
+    let results = kml.wait_training(&dep, Duration::from_secs(120)).unwrap();
+    assert_eq!(results[0].status, TrainingStatus::Finished);
+    // The partition failed over to a replica.
+    let t = kml.cluster.topic("fo-data").unwrap();
+    let p = t.partition(0).unwrap().lock().unwrap();
+    assert_ne!(p.leader, leader);
+    drop(p);
+    kml.cluster.restart_broker(leader);
+    kml.shutdown();
+}
+
+#[test]
+fn training_job_fails_cleanly_without_stream() {
+    // A deployed job whose control message never arrives times out and
+    // the back-end records the failure.
+    let kml = platform();
+    let model = kml.create_model("starved").unwrap();
+    let conf = kml.create_configuration("starved", &[model]).unwrap();
+    // Short control timeout via direct TrainingJobConfig (inline run,
+    // no orchestrator — keeps the test fast and covers the inline path).
+    let dep = kml.store.create_deployment(conf, 10, 1, true).unwrap();
+    let config = kafka_ml::coordinator::TrainingJobConfig {
+        control_timeout: Duration::from_millis(100),
+        ..kafka_ml::coordinator::TrainingJobConfig::new(
+            dep.id,
+            dep.result_ids[0],
+            "artifacts",
+            kml.backend_url(),
+        )
+    };
+    let err = kafka_ml::coordinator::training::run_training_job(
+        &kml.cluster,
+        &config,
+        &kafka_ml::exec::CancelToken::new(),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("timed out"), "{err}");
+    kml.shutdown();
+}

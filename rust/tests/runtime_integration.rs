@@ -1,0 +1,194 @@
+//! Integration tests for the PJRT runtime against the real AOT artifacts
+//! (`make artifacts` must have run; the Makefile orders this for
+//! `make test`).
+
+use kafka_ml::runtime::{Engine, ModelParams};
+
+fn engine() -> Engine {
+    Engine::load("artifacts").expect(
+        "artifacts/ missing or stale — run `make artifacts` before cargo test",
+    )
+}
+
+fn toy_batch(engine: &Engine, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let meta = engine.meta();
+    let ds = kafka_ml::ml::hcopd_dataset(meta.batch, meta.input_dim, seed);
+    let mut x = Vec::with_capacity(meta.batch * meta.input_dim);
+    let mut y = Vec::with_capacity(meta.batch);
+    for s in &ds.samples {
+        x.extend_from_slice(&s.features);
+        y.push(s.label.unwrap());
+    }
+    (x, y)
+}
+
+#[test]
+fn engine_loads_and_reports_meta() {
+    let e = engine();
+    let m = e.meta();
+    assert_eq!(m.input_dim, 8);
+    assert_eq!(m.classes, 4);
+    assert_eq!(m.batch, 10);
+    assert_eq!(m.n_params(), 4); // one hidden layer: w1,b1,w2,b2
+    assert!(m.total_weights() > 100);
+    assert_eq!(e.platform().to_lowercase().contains("cpu"), true);
+}
+
+#[test]
+fn init_params_match_meta_shapes() {
+    let e = engine();
+    let p = e.init_params().unwrap();
+    p.check_against(&e.meta().params).unwrap();
+    // Glorot weights are non-zero, biases zero.
+    assert!(p.tensors[0].data.iter().any(|&v| v != 0.0));
+    assert!(p.tensors[1].data.iter().all(|&v| v == 0.0));
+    // Init is deterministic (seed fixed at AOT time).
+    let p2 = e.init_params().unwrap();
+    assert_eq!(p, p2);
+}
+
+#[test]
+fn train_step_returns_finite_metrics_and_updates_params() {
+    let e = engine();
+    let init = e.init_params().unwrap();
+    let mut state = e.train_state(&init).unwrap();
+    let (x, y) = toy_batch(&e, 1);
+    let (loss, acc) = e.train_step(&mut state, &x, &y).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    assert!((0.0..=1.0).contains(&acc), "acc {acc}");
+    assert_eq!(state.t, 1);
+    // Params moved.
+    let after = e.params_of(&state).unwrap();
+    assert_ne!(init.tensors[0].data, after.tensors[0].data);
+}
+
+#[test]
+fn training_reduces_loss_on_learnable_data() {
+    let e = engine();
+    let meta = e.meta();
+    let ds = kafka_ml::ml::hcopd_dataset(200, meta.input_dim, 3);
+    let init = e.init_params().unwrap();
+    let mut state = e.train_state(&init).unwrap();
+    let mut first = 0.0f64;
+    let mut last = 0.0f64;
+    let epochs = 30;
+    for epoch in 0..epochs {
+        let mut sum = 0.0f64;
+        let mut n = 0;
+        for chunk in ds.samples.chunks(meta.batch) {
+            if chunk.len() < meta.batch {
+                break;
+            }
+            let mut x = Vec::new();
+            let mut y = Vec::new();
+            for s in chunk {
+                x.extend_from_slice(&s.features);
+                y.push(s.label.unwrap());
+            }
+            let (loss, _) = e.train_step(&mut state, &x, &y).unwrap();
+            sum += loss as f64;
+            n += 1;
+        }
+        let avg = sum / n as f64;
+        if epoch == 0 {
+            first = avg;
+        }
+        last = avg;
+    }
+    assert!(
+        last < first * 0.98,
+        "loss did not decrease: {first:.4} -> {last:.4} (lr=1e-4 is slow but must move)"
+    );
+}
+
+#[test]
+fn eval_step_consistent_with_train_metrics() {
+    let e = engine();
+    let init = e.init_params().unwrap();
+    let state = e.train_state(&init).unwrap();
+    let (x, y) = toy_batch(&e, 5);
+    let (loss, acc) = e.eval_step(&state.params, &x, &y).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+    // Evaluation is pure: same inputs, same outputs.
+    let (loss2, acc2) = e.eval_step(&state.params, &x, &y).unwrap();
+    assert_eq!(loss, loss2);
+    assert_eq!(acc, acc2);
+}
+
+#[test]
+fn predict_outputs_probability_rows() {
+    let e = engine();
+    let meta = e.meta();
+    let init = e.init_params().unwrap();
+    let params = e.inference_params(&init).unwrap();
+    // Full batch, single record, and a ragged count (batch + remainder).
+    for rows in [meta.batch, 1, meta.batch + 3] {
+        let ds = kafka_ml::ml::hcopd_dataset(rows, meta.input_dim, 7);
+        let mut x = Vec::new();
+        for s in &ds.samples {
+            x.extend_from_slice(&s.features);
+        }
+        let probs = e.predict(&params, &x, rows).unwrap();
+        assert_eq!(probs.len(), rows * meta.classes);
+        for row in probs.chunks(meta.classes) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "row sums to {sum}");
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+        let classes = e.classify(&probs);
+        assert_eq!(classes.len(), rows);
+        assert!(classes.iter().all(|&c| c < meta.classes));
+    }
+}
+
+#[test]
+fn predict_batched_equals_single() {
+    let e = engine();
+    let meta = e.meta();
+    let init = e.init_params().unwrap();
+    let params = e.inference_params(&init).unwrap();
+    let ds = kafka_ml::ml::hcopd_dataset(meta.batch, meta.input_dim, 9);
+    let mut x = Vec::new();
+    for s in &ds.samples {
+        x.extend_from_slice(&s.features);
+    }
+    let batched = e.predict(&params, &x, meta.batch).unwrap();
+    for (i, s) in ds.samples.iter().enumerate() {
+        let single = e.predict(&params, &s.features, 1).unwrap();
+        for c in 0..meta.classes {
+            let a = batched[i * meta.classes + c];
+            let b = single[c];
+            assert!((a - b).abs() < 1e-5, "row {i} class {c}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn params_roundtrip_through_wire_format() {
+    let e = engine();
+    let init = e.init_params().unwrap();
+    let mut state = e.train_state(&init).unwrap();
+    let (x, y) = toy_batch(&e, 11);
+    e.train_step(&mut state, &x, &y).unwrap();
+    let trained = e.params_of(&state).unwrap();
+    let blob = trained.to_bytes();
+    let back = ModelParams::from_bytes(&blob).unwrap();
+    assert_eq!(trained, back);
+    // And the deserialized params drive identical predictions.
+    let p1 = e.inference_params(&trained).unwrap();
+    let p2 = e.inference_params(&back).unwrap();
+    let probs1 = e.predict(&p1, &x, e.meta().batch).unwrap();
+    let probs2 = e.predict(&p2, &x, e.meta().batch).unwrap();
+    assert_eq!(probs1, probs2);
+}
+
+#[test]
+fn train_step_rejects_wrong_batch() {
+    let e = engine();
+    let init = e.init_params().unwrap();
+    let mut state = e.train_state(&init).unwrap();
+    let (x, y) = toy_batch(&e, 1);
+    assert!(e.train_step(&mut state, &x[..8], &y).is_err());
+    assert!(e.train_step(&mut state, &x, &y[..3]).is_err());
+}
