@@ -108,7 +108,7 @@ fn main() -> anyhow::Result<()> {
         kml.cluster.produce(
             "stream-1",
             0,
-            vec![fmt.encode(&s.features, s.label)?],
+            &[fmt.encode(&s.features, s.label)?],
             ClientLocality::External,
             None,
         )?;

@@ -1,22 +1,38 @@
-//! Broker ablations (§II's dispatch-rate claims): message-set batching
-//! and partition-parallel consumption.
+//! Broker ablations (§II's dispatch-rate claims): message-set batching,
+//! partition-parallel consumption, fetch sizing and the zero-copy
+//! consume path.
 //!
 //! * batching — §II credits Kafka's rate to "message set abstractions:
 //!   messages are grouped together amortizing the overhead of the
 //!   network round trip". Sweep producer batch size with a calibrated
 //!   in-cluster link and watch records/s.
 //! * partitions — multi-consumer parallel fetch across 1/2/4 partitions.
+//! * fetch size — single-consumer poll batching.
+//! * payload size — consume throughput at 64 B / 1 KiB / 16 KiB
+//!   payloads. This is the zero-copy dividend: since records travel as
+//!   shared `Bytes`, consume cost is near-independent of payload size.
+//!
+//! Results are also written machine-readably to
+//! `BENCH_broker_throughput.json` (repo root) via `benchkit::Report` so
+//! successive PRs can diff the perf trajectory.
 
-use kafka_ml::benchkit::{Bench, Table};
+use kafka_ml::benchkit::{Bench, Report, Table};
 use kafka_ml::broker::{
     BrokerConfig, ClientLocality, Cluster, Consumer, NetProfile, Producer, ProducerConfig,
     Record,
 };
+use kafka_ml::util::Bytes;
 use std::time::Instant;
 
+const REPORT_PATH: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/../BENCH_broker_throughput.json"
+);
+
 fn main() -> anyhow::Result<()> {
+    let mut report = Report::new("broker_throughput");
     let records = 20_000usize;
-    let payload = vec![7u8; 64];
+    let payload = Bytes::from_vec(vec![7u8; 64]);
 
     // ---- producer batching sweep -----------------------------------------
     let mut t = Table::new(
@@ -43,12 +59,18 @@ fn main() -> anyhow::Result<()> {
         }
         p.flush()?;
         let wall = t0.elapsed();
+        let rps = records as f64 / wall.as_secs_f64();
         t.row(&[
             batch.to_string(),
             format!("{:.3}", wall.as_secs_f64()),
-            format!("{:.0}", records as f64 / wall.as_secs_f64()),
+            format!("{rps:.0}"),
             c.metrics.counter("broker.produce.batches").get().to_string(),
         ]);
+        report.entry(
+            "producer_batching",
+            &[("batch_size", batch as f64), ("payload_bytes", 64.0)],
+            &[("records_per_s", rps), ("wall_s", wall.as_secs_f64())],
+        );
     }
     t.print();
 
@@ -91,15 +113,21 @@ fn main() -> anyhow::Result<()> {
         let got: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(got, total);
         let wall = t0.elapsed();
+        let rps = total as f64 / wall.as_secs_f64();
         t.row(&[
             parts.to_string(),
             format!("{:.3}", wall.as_secs_f64()),
-            format!("{:.0}", total as f64 / wall.as_secs_f64()),
+            format!("{rps:.0}"),
         ]);
+        report.entry(
+            "partition_parallelism",
+            &[("partitions", parts as f64), ("payload_bytes", 64.0)],
+            &[("records_per_s", rps), ("wall_s", wall.as_secs_f64())],
+        );
     }
     t.print();
 
-    // ---- fetch size sweep (zero-copy-ish batch reads) -------------------------
+    // ---- fetch size sweep (batched zero-copy reads) ---------------------------
     let mut t = Table::new(
         "Fetch size sweep (80k records, single consumer)",
         &["max poll", "wall (s)", "records/s"],
@@ -124,12 +152,70 @@ fn main() -> anyhow::Result<()> {
                 got += cons.poll(max_poll).unwrap().len();
             }
         });
+        let rps = total as f64 / stats.mean_secs();
         t.row(&[
             max_poll.to_string(),
             format!("{:.3}", stats.mean_secs()),
-            format!("{:.0}", total as f64 / stats.mean_secs()),
+            format!("{rps:.0}"),
         ]);
+        report.entry(
+            "fetch_size",
+            &[("max_poll", max_poll as f64), ("payload_bytes", 64.0)],
+            &[("records_per_s", rps), ("wall_s", stats.mean_secs())],
+        );
     }
     t.print();
+
+    // ---- payload size sweep (the zero-copy dividend) --------------------------
+    // Shared-`Bytes` payloads mean the consume path never copies record
+    // bodies; throughput in records/s should stay near-flat from 64 B
+    // to 16 KiB, and MiB/s should scale with payload size.
+    let mut t = Table::new(
+        "Payload size sweep (20k records, single consumer, max_poll 1024)",
+        &["payload", "wall (s)", "records/s", "MiB/s"],
+    );
+    for size in [64usize, 1024, 16 * 1024] {
+        let n = 20_000usize;
+        let c = Cluster::new(BrokerConfig::default());
+        c.create_topic("ps", 1);
+        let mut p = Producer::new(
+            c.clone(),
+            ProducerConfig { batch_size: 512, ..Default::default() },
+        );
+        let body = Bytes::from_vec(vec![42u8; size]);
+        for _ in 0..n {
+            p.send_to("ps", 0, Record::new(body.clone()))?;
+        }
+        p.flush()?;
+        let stats = bench.run(|| {
+            let mut cons = Consumer::new(c.clone(), ClientLocality::InCluster);
+            cons.assign(vec![("ps".to_string(), 0)]);
+            let mut got = 0usize;
+            while got < n {
+                got += cons.poll(1024).unwrap().len();
+            }
+        });
+        let rps = n as f64 / stats.mean_secs();
+        let mibs = rps * size as f64 / (1024.0 * 1024.0);
+        t.row(&[
+            kafka_ml::util::human_bytes(size as u64),
+            format!("{:.3}", stats.mean_secs()),
+            format!("{rps:.0}"),
+            format!("{mibs:.1}"),
+        ]);
+        report.entry(
+            "payload_size",
+            &[("payload_bytes", size as f64), ("max_poll", 1024.0)],
+            &[
+                ("records_per_s", rps),
+                ("mib_per_s", mibs),
+                ("wall_s", stats.mean_secs()),
+            ],
+        );
+    }
+    t.print();
+
+    report.save(REPORT_PATH)?;
+    println!("\nwrote {REPORT_PATH} ({} entries)", report.len());
     Ok(())
 }

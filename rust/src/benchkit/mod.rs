@@ -1,9 +1,12 @@
 //! Bench harness (criterion is not in the offline vendor set).
 //!
-//! Provides warmup + timed iterations with mean/σ/p50/p99, and table
+//! Provides warmup + timed iterations with mean/σ/p50/p99, table
 //! rendering that mirrors the layout of the paper's Tables I/II so
-//! `cargo bench` output can be compared line-by-line with the paper.
+//! `cargo bench` output can be compared line-by-line with the paper,
+//! and a machine-readable [`Report`] writer (`BENCH_*.json`) so later
+//! PRs have a perf trajectory to compare against.
 
+use crate::json::Json;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -161,6 +164,57 @@ impl Table {
     }
 }
 
+/// Machine-readable benchmark results. Each entry is one measured
+/// configuration (`group` + parameter map + metrics); [`Report::save`]
+/// writes the whole run as pretty JSON (e.g. `BENCH_broker_throughput.json`)
+/// so successive PRs can diff perf numbers mechanically.
+pub struct Report {
+    name: String,
+    entries: Vec<Json>,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Report {
+        Report { name: name.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one measured configuration. `params` describe the swept
+    /// knobs (batch size, payload bytes, …), `metrics` the results
+    /// (records/s, wall seconds, …).
+    pub fn entry(&mut self, group: &str, params: &[(&str, f64)], metrics: &[(&str, f64)]) {
+        let mut fields = vec![("group", Json::str(group))];
+        fields.push((
+            "params",
+            Json::obj(params.iter().map(|(k, v)| (*k, Json::num(*v))).collect()),
+        ));
+        fields.push((
+            "metrics",
+            Json::obj(metrics.iter().map(|(k, v)| (*k, Json::num(*v))).collect()),
+        ));
+        self.entries.push(Json::obj(fields));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str(&self.name)),
+            ("entries", Json::Arr(self.entries.clone())),
+        ])
+    }
+
+    /// Write the report as pretty JSON to `path`.
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, crate::json::to_string_pretty(&self.to_json()))
+    }
+}
+
 /// Format seconds like the paper's tables (two decimals).
 pub fn secs(d: Duration) -> String {
     format!("{:.3}", d.as_secs_f64())
@@ -203,6 +257,21 @@ mod tests {
         assert!(r.contains("Demo"));
         assert!(r.contains("27.37"));
         assert!(r.contains("data streams"));
+    }
+
+    #[test]
+    fn report_serializes_entries() {
+        let mut r = Report::new("demo");
+        r.entry("batching", &[("batch", 64.0)], &[("records_per_s", 123.5)]);
+        r.entry("batching", &[("batch", 256.0)], &[("records_per_s", 987.0)]);
+        assert_eq!(r.len(), 2);
+        let s = crate::json::to_string(&r.to_json());
+        assert!(s.contains("\"bench\":\"demo\""), "{s}");
+        assert!(s.contains("\"batch\":64"), "{s}");
+        assert!(s.contains("records_per_s"), "{s}");
+        // And it parses back as JSON.
+        let parsed = crate::json::parse(&s).unwrap();
+        assert_eq!(parsed.get("entries").as_arr().unwrap().len(), 2);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use super::group::{Assignor, GroupMembership, GroupState};
 use super::log::LogConfig;
 use super::net::{ClientLocality, NetProfile};
-use super::record::{ConsumedRecord, Record};
+use super::record::{ConsumedRecord, Record, RecordBatch};
 use super::topic::Topic;
 use super::TopicPartition;
 use crate::metrics::Registry;
@@ -143,11 +143,15 @@ impl Cluster {
     /// Append a batch of records to one partition (one network traversal
     /// for the whole message set — the paper's batching amortization).
     /// Returns the base offset of the batch.
+    ///
+    /// Takes the batch by reference: the producer's retry path re-sends
+    /// the same slice, and each append shares the record payloads
+    /// (`Record::clone` bumps refcounts, it never copies bytes).
     pub fn produce(
         &self,
         topic: &str,
         partition: u32,
-        records: Vec<Record>,
+        records: &[Record],
         locality: ClientLocality,
         producer_seq: Option<(u64, u64)>,
     ) -> Result<u64> {
@@ -166,9 +170,9 @@ impl Cluster {
         }
         let n = records.len() as u64;
         let mut base = None;
-        for (i, r) in records.into_iter().enumerate() {
+        for (i, r) in records.iter().enumerate() {
             let seq = producer_seq.map(|(pid, s)| (pid, s + i as u64));
-            let (off, dup) = p.append(r, seq);
+            let (off, dup) = p.append(r.clone(), seq);
             if base.is_none() && !dup {
                 base = Some(off);
             }
@@ -180,6 +184,39 @@ impl Cluster {
         base.ok_or_else(|| anyhow!("duplicate batch (idempotent replay)"))
     }
 
+    /// Read up to `max` records from one partition starting at `from` as
+    /// one [`RecordBatch`]: a single partition-lock acquisition and zero
+    /// payload copies — the batch shares the log's stored buffers. This
+    /// is the hot fetch path; [`Cluster::fetch`] flattens it for callers
+    /// that want per-record handles.
+    pub fn fetch_batch(
+        &self,
+        topic: &str,
+        partition: u32,
+        from: u64,
+        max: usize,
+        locality: ClientLocality,
+    ) -> Result<RecordBatch> {
+        let t = self
+            .topic(topic)
+            .ok_or_else(|| anyhow!("unknown topic {topic}"))?;
+        // Validate the partition before simulating the request leg, so
+        // the error path carries no phantom link latency (matches the
+        // pre-batch fetch semantics).
+        if t.partition(partition).is_none() {
+            bail!("unknown partition {topic}:{partition}");
+        }
+        self.config.net.traverse(locality);
+        let batch = t
+            .fetch_batch(partition, from, max)
+            .ok_or_else(|| anyhow!("unknown partition {topic}:{partition}"))?;
+        self.config.net.traverse(locality);
+        self.metrics
+            .counter("broker.fetch.records")
+            .add(batch.len() as u64);
+        Ok(batch)
+    }
+
     /// Read up to `max` records from one partition starting at `from`.
     pub fn fetch(
         &self,
@@ -189,29 +226,9 @@ impl Cluster {
         max: usize,
         locality: ClientLocality,
     ) -> Result<Vec<ConsumedRecord>> {
-        let t = self
-            .topic(topic)
-            .ok_or_else(|| anyhow!("unknown topic {topic}"))?;
-        let pm = t
-            .partition(partition)
-            .ok_or_else(|| anyhow!("unknown partition {topic}:{partition}"))?;
-        self.config.net.traverse(locality);
-        let p = pm.lock().unwrap();
-        let recs = p.read(from, max);
-        drop(p);
-        self.config.net.traverse(locality);
-        self.metrics
-            .counter("broker.fetch.records")
-            .add(recs.len() as u64);
-        Ok(recs
-            .into_iter()
-            .map(|(offset, record)| ConsumedRecord {
-                topic: topic.to_string(),
-                partition,
-                offset,
-                record,
-            })
-            .collect())
+        Ok(self
+            .fetch_batch(topic, partition, from, max, locality)?
+            .into_consumed())
     }
 
     /// `(earliest, latest)` offsets of a partition.
@@ -401,7 +418,7 @@ mod tests {
             .produce(
                 "t",
                 0,
-                vec![Record::new(vec![1]), Record::new(vec![2])],
+                &[Record::new(vec![1]), Record::new(vec![2])],
                 ClientLocality::InCluster,
                 None,
             )
@@ -418,7 +435,7 @@ mod tests {
     #[test]
     fn auto_create_on_produce() {
         let c = cluster();
-        c.produce("fresh", 0, vec![Record::new(vec![])], ClientLocality::External, None)
+        c.produce("fresh", 0, &[Record::new(Vec::<u8>::new())], ClientLocality::External, None)
             .unwrap();
         assert!(c.topic("fresh").is_some());
     }
@@ -435,7 +452,7 @@ mod tests {
         c.create_topic("t", 1);
         assert_eq!(c.offsets("t", 0).unwrap(), (0, 0));
         for _ in 0..5 {
-            c.produce("t", 0, vec![Record::new(vec![])], ClientLocality::InCluster, None)
+            c.produce("t", 0, &[Record::new(Vec::<u8>::new())], ClientLocality::InCluster, None)
                 .unwrap();
         }
         assert_eq!(c.offsets("t", 0).unwrap(), (0, 5));
@@ -452,7 +469,7 @@ mod tests {
         };
         c.kill_broker(leader);
         // Still writable through the promoted replica.
-        c.produce("t", 0, vec![Record::new(vec![9])], ClientLocality::InCluster, None)
+        c.produce("t", 0, &[Record::new(vec![9])], ClientLocality::InCluster, None)
             .unwrap();
         let t = c.topic("t").unwrap();
         let p = t.partition(0).unwrap().lock().unwrap();
@@ -521,11 +538,11 @@ mod tests {
         let c = cluster();
         c.create_topic("t", 1);
         let pid = c.alloc_producer_id();
-        c.produce("t", 0, vec![Record::new(vec![1])], ClientLocality::InCluster, Some((pid, 1)))
+        c.produce("t", 0, &[Record::new(vec![1])], ClientLocality::InCluster, Some((pid, 1)))
             .unwrap();
         // Retry of the same batch: deduplicated.
         let err = c
-            .produce("t", 0, vec![Record::new(vec![1])], ClientLocality::InCluster, Some((pid, 1)))
+            .produce("t", 0, &[Record::new(vec![1])], ClientLocality::InCluster, Some((pid, 1)))
             .unwrap_err();
         assert!(err.to_string().contains("duplicate"));
         assert_eq!(c.offsets("t", 0).unwrap().1, 1);

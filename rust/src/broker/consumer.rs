@@ -12,7 +12,7 @@
 use super::cluster::ClusterHandle;
 use super::group::Assignor;
 use super::net::ClientLocality;
-use super::record::ConsumedRecord;
+use super::record::{ConsumedRecord, RecordBatch};
 use super::TopicPartition;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -126,29 +126,51 @@ impl Consumer {
 
     // ---- polling ---------------------------------------------------------------
 
-    /// Poll up to `max` records across assigned partitions (round-robin
-    /// fairness between them), advancing local positions.
-    pub fn poll(&mut self, max: usize) -> Result<Vec<ConsumedRecord>> {
+    /// Poll up to `max` records across assigned partitions as shared
+    /// [`RecordBatch`]es (round-robin fairness between partitions),
+    /// advancing local positions. This is the zero-copy poll path: one
+    /// partition-lock round trip per *batch* and no per-record
+    /// allocation — the coordinator decodes straight from the batches'
+    /// `&[u8]` views. Empty batches are omitted.
+    pub fn poll_batches(&mut self, max: usize) -> Result<Vec<RecordBatch>> {
         let mut out = Vec::new();
         if self.assigned.is_empty() {
             return Ok(out);
         }
         let n = self.assigned.len();
+        let mut got = 0usize;
         for i in 0..n {
-            if out.len() >= max {
+            if got >= max {
                 break;
             }
             let tp = self.assigned[(self.next_assigned_idx + i) % n].clone();
             let pos = self.position(&tp);
-            let recs =
+            let batch =
                 self.cluster
-                    .fetch(&tp.0, tp.1, pos, max - out.len(), self.locality)?;
-            if let Some(last) = recs.last() {
-                self.positions.insert(tp.clone(), last.offset + 1);
+                    .fetch_batch(&tp.0, tp.1, pos, max - got, self.locality)?;
+            if let Some(next) = batch.next_offset() {
+                self.positions.insert(tp.clone(), next);
             }
-            out.extend(recs);
+            if !batch.is_empty() {
+                got += batch.len();
+                out.push(batch);
+            }
         }
         self.next_assigned_idx = (self.next_assigned_idx + 1) % n;
+        Ok(out)
+    }
+
+    /// Poll up to `max` records across assigned partitions (round-robin
+    /// fairness between them), advancing local positions. Flattens
+    /// [`Consumer::poll_batches`]; the per-record handles still share
+    /// the log's payload allocations.
+    pub fn poll(&mut self, max: usize) -> Result<Vec<ConsumedRecord>> {
+        let batches = self.poll_batches(max)?;
+        let total = batches.iter().map(|b| b.len()).sum();
+        let mut out = Vec::with_capacity(total);
+        for batch in batches {
+            out.extend(batch.into_consumed());
+        }
         Ok(out)
     }
 
@@ -187,7 +209,7 @@ mod tests {
                 c.produce(
                     topic,
                     p,
-                    vec![Record::new(vec![p as u8, i])],
+                    &[Record::new(vec![p as u8, i])],
                     ClientLocality::InCluster,
                     None,
                 )
@@ -223,6 +245,27 @@ mod tests {
     }
 
     #[test]
+    fn poll_batches_one_per_partition_sharing_log_payloads() {
+        let c = cluster_with("t", 2, 3);
+        let mut cons = Consumer::new(c.clone(), ClientLocality::InCluster);
+        cons.assign(vec![("t".into(), 0), ("t".into(), 1)]);
+        let batches = cons.poll_batches(100).unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches.iter().map(|b| b.len()).sum::<usize>(), 6);
+        let t = c.topic("t").unwrap();
+        for b in &batches {
+            let stored = t.partition(b.partition).unwrap().lock().unwrap().read(0, 10);
+            for ((off, rec), (soff, srec)) in b.records.iter().zip(&stored) {
+                assert_eq!(off, soff);
+                // Zero-copy: consumed payloads share the log's buffers.
+                assert!(crate::util::Bytes::ptr_eq(&rec.value, &srec.value));
+            }
+        }
+        // Positions advanced past everything.
+        assert!(cons.poll_batches(100).unwrap().is_empty());
+    }
+
+    #[test]
     fn group_members_split_partitions_without_overlap() {
         let c = cluster_with("t", 4, 5);
         let mut a = Consumer::new(c.clone(), ClientLocality::InCluster);
@@ -237,7 +280,7 @@ mod tests {
             assert!(!pb.contains(tp));
         }
         // Together they consume everything exactly once.
-        let mut all: Vec<Vec<u8>> = Vec::new();
+        let mut all: Vec<crate::util::Bytes> = Vec::new();
         all.extend(a.poll(100).unwrap().into_iter().map(|r| r.record.value));
         all.extend(b.poll(100).unwrap().into_iter().map(|r| r.record.value));
         assert_eq!(all.len(), 20);

@@ -16,6 +16,12 @@
 //!   balancing (§IV-D);
 //! * **delivery semantics**: at-most-once, at-least-once and
 //!   exactly-once (idempotent producer de-duplication);
+//! * a **zero-copy record path**: payloads are [`crate::util::Bytes`]
+//!   (Arc-backed shared buffers), copied exactly once when the producer
+//!   encodes them; log storage, segment reads, batched fetches
+//!   ([`RecordBatch`]), consumer polls and retry buffers all share that
+//!   allocation — the paper's "data chunks transferred without
+//!   modifications";
 //! * a **simulated network profile** (external vs in-cluster link
 //!   latency) so the Tables I/II latency columns can be reproduced on a
 //!   single machine — see DESIGN.md §Table I/II latency model.
@@ -37,7 +43,7 @@ pub use log::{CleanupPolicy, LogConfig, SegmentedLog};
 pub use net::{ClientLocality, NetProfile};
 pub use partition::Partition;
 pub use producer::{Acks, Producer, ProducerConfig};
-pub use record::{ConsumedRecord, Record};
+pub use record::{ConsumedRecord, Record, RecordBatch};
 pub use topic::Topic;
 
 /// `(topic, partition)` pair used throughout the broker.

@@ -2,29 +2,49 @@
 //! "binary message format: data chunks can be transferred without
 //! modifications"), optional keys (partitioning + compaction), headers
 //! and timestamps.
+//!
+//! Payloads are [`Bytes`] — Arc-backed shared buffers — so a record is
+//! copied **once**, when the producer encodes it. Every later hop (log
+//! storage, segment reads, batched fetches, consumer polls, retry
+//! buffers, format decoding) clones the handle, not the bytes. The
+//! batched read path hands records around as a [`RecordBatch`]: one
+//! lock acquisition, one shared topic name, N shared payloads.
 
+use crate::util::bytes::Bytes;
 use crate::util::clock::TimestampMs;
+use std::sync::Arc;
 
-/// A record as produced to / stored in a partition log.
+/// A record as produced to / stored in a partition log. `Clone` is O(1)
+/// in payload size: key/value/header payloads are refcounted views.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Record {
-    pub key: Option<Vec<u8>>,
-    pub value: Vec<u8>,
+    pub key: Option<Bytes>,
+    pub value: Bytes,
     pub timestamp_ms: TimestampMs,
-    pub headers: Vec<(String, Vec<u8>)>,
+    pub headers: Vec<(String, Bytes)>,
 }
 
 impl Record {
-    pub fn new(value: Vec<u8>) -> Record {
-        Record { key: None, value, timestamp_ms: 0, headers: Vec::new() }
+    pub fn new(value: impl Into<Bytes>) -> Record {
+        Record {
+            key: None,
+            value: value.into(),
+            timestamp_ms: 0,
+            headers: Vec::new(),
+        }
     }
 
-    pub fn with_key(key: Vec<u8>, value: Vec<u8>) -> Record {
-        Record { key: Some(key), value, timestamp_ms: 0, headers: Vec::new() }
+    pub fn with_key(key: impl Into<Bytes>, value: impl Into<Bytes>) -> Record {
+        Record {
+            key: Some(key.into()),
+            value: value.into(),
+            timestamp_ms: 0,
+            headers: Vec::new(),
+        }
     }
 
-    pub fn header(mut self, k: &str, v: &[u8]) -> Record {
-        self.headers.push((k.to_string(), v.to_vec()));
+    pub fn header(mut self, k: &str, v: impl Into<Bytes>) -> Record {
+        self.headers.push((k.to_string(), v.into()));
         self
     }
 
@@ -46,15 +66,73 @@ impl Record {
             .find(|(k, _)| k == key)
             .map(|(_, v)| v.as_slice())
     }
+
+    /// Like [`Record::get_header`], but returns a shared handle on the
+    /// header payload instead of a borrowed view.
+    pub fn get_header_bytes(&self, key: &str) -> Option<Bytes> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.clone())
+    }
 }
 
-/// A record as returned by a consumer: log position + payload.
+/// A record as returned by a consumer: log position + payload. The
+/// topic name is shared (`Arc<str>`), so flattening a batch into
+/// per-record handles allocates nothing per record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ConsumedRecord {
-    pub topic: String,
+    pub topic: Arc<str>,
     pub partition: u32,
     pub offset: u64,
     pub record: Record,
+}
+
+/// A batch of shared records read from one partition under a single
+/// lock acquisition — the unit the fetch path moves between the log and
+/// the coordinator. Payloads inside share their allocations with the
+/// log's stored records (zero-copy).
+#[derive(Debug, Clone)]
+pub struct RecordBatch {
+    pub topic: Arc<str>,
+    pub partition: u32,
+    /// `(offset, record)` pairs, offset-ascending.
+    pub records: Vec<(u64, Record)>,
+}
+
+impl RecordBatch {
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Offset of the first record in the batch.
+    pub fn base_offset(&self) -> Option<u64> {
+        self.records.first().map(|(o, _)| *o)
+    }
+
+    /// The position a consumer should advance to after this batch.
+    pub fn next_offset(&self) -> Option<u64> {
+        self.records.last().map(|(o, _)| o + 1)
+    }
+
+    /// Flatten into per-record handles (cheap: shares topic + payloads).
+    pub fn into_consumed(self) -> Vec<ConsumedRecord> {
+        let topic = self.topic;
+        let partition = self.partition;
+        self.records
+            .into_iter()
+            .map(|(offset, record)| ConsumedRecord {
+                topic: topic.clone(),
+                partition,
+                offset,
+                record,
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -69,8 +147,52 @@ mod tests {
 
     #[test]
     fn header_lookup() {
-        let r = Record::new(vec![]).header("fmt", b"avro").header("x", b"1");
+        let r = Record::new(Bytes::new())
+            .header("fmt", b"avro")
+            .header("x", b"1");
         assert_eq!(r.get_header("fmt"), Some(b"avro".as_slice()));
         assert_eq!(r.get_header("missing"), None);
+        let shared = r.get_header_bytes("fmt").unwrap();
+        assert!(Bytes::ptr_eq(&shared, &r.headers[0].1));
+    }
+
+    #[test]
+    fn clone_shares_payloads() {
+        let r = Record::with_key(vec![1; 64], vec![2; 1024]).header("h", &[3; 16]);
+        let c = r.clone();
+        assert!(Bytes::ptr_eq(&r.value, &c.value));
+        assert!(Bytes::ptr_eq(r.key.as_ref().unwrap(), c.key.as_ref().unwrap()));
+        assert!(Bytes::ptr_eq(&r.headers[0].1, &c.headers[0].1));
+    }
+
+    #[test]
+    fn batch_flattens_sharing_topic_and_payloads() {
+        let topic: Arc<str> = Arc::from("t");
+        let rec = Record::new(vec![7u8; 128]);
+        let batch = RecordBatch {
+            topic: topic.clone(),
+            partition: 3,
+            records: vec![(10, rec.clone()), (11, rec.clone())],
+        };
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.base_offset(), Some(10));
+        assert_eq!(batch.next_offset(), Some(12));
+        let consumed = batch.into_consumed();
+        assert_eq!(consumed[1].offset, 11);
+        assert_eq!(consumed[0].partition, 3);
+        assert!(Arc::ptr_eq(&consumed[0].topic, &topic));
+        assert!(Bytes::ptr_eq(&consumed[0].record.value, &rec.value));
+    }
+
+    #[test]
+    fn empty_batch_has_no_offsets() {
+        let batch = RecordBatch {
+            topic: Arc::from("t"),
+            partition: 0,
+            records: Vec::new(),
+        };
+        assert!(batch.is_empty());
+        assert_eq!(batch.base_offset(), None);
+        assert_eq!(batch.next_offset(), None);
     }
 }

@@ -2,13 +2,15 @@
 
 use super::log::LogConfig;
 use super::partition::Partition;
-use super::record::Record;
+use super::record::{Record, RecordBatch};
 use crate::util::clock::SharedClock;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 #[derive(Debug)]
 pub struct Topic {
-    pub name: String,
+    /// Shared (`Arc<str>`) so every [`RecordBatch`] hands out the same
+    /// allocation instead of re-allocating the topic string per fetch.
+    pub name: Arc<str>,
     partitions: Vec<Mutex<Partition>>,
 }
 
@@ -41,7 +43,10 @@ impl Topic {
                 ))
             })
             .collect();
-        Topic { name: name.to_string(), partitions }
+        Topic {
+            name: Arc::from(name),
+            partitions,
+        }
     }
 
     pub fn num_partitions(&self) -> u32 {
@@ -50,6 +55,19 @@ impl Topic {
 
     pub fn partition(&self, p: u32) -> Option<&Mutex<Partition>> {
         self.partitions.get(p as usize)
+    }
+
+    /// Read up to `max` records of partition `p` starting at `from` as
+    /// one [`RecordBatch`]: a single lock acquisition, payloads shared
+    /// with the log (zero-copy). `None` when the partition is unknown.
+    pub fn fetch_batch(&self, p: u32, from: u64, max: usize) -> Option<RecordBatch> {
+        let pm = self.partitions.get(p as usize)?;
+        let records = pm.lock().unwrap().read(from, max);
+        Some(RecordBatch {
+            topic: self.name.clone(),
+            partition: p,
+            records,
+        })
     }
 
     /// Total records across partitions.
@@ -119,7 +137,7 @@ mod tests {
     #[test]
     fn keyed_routing_is_deterministic() {
         let t = topic(4);
-        let r = Record::with_key(b"sensor-1".to_vec(), vec![]);
+        let r = Record::with_key(b"sensor-1".to_vec(), Vec::<u8>::new());
         let p1 = t.route(&r, 0);
         let p2 = t.route(&r, 99);
         assert_eq!(p1, p2);
@@ -128,7 +146,7 @@ mod tests {
     #[test]
     fn unkeyed_routing_round_robins() {
         let t = topic(4);
-        let r = Record::new(vec![]);
+        let r = Record::new(Vec::<u8>::new());
         let ps: Vec<u32> = (0..8).map(|i| t.route(&r, i)).collect();
         assert_eq!(ps, vec![0, 1, 2, 3, 0, 1, 2, 3]);
     }
@@ -137,5 +155,20 @@ mod tests {
     fn out_of_range_partition_is_none() {
         let t = topic(2);
         assert!(t.partition(2).is_none());
+        assert!(t.fetch_batch(2, 0, 10).is_none());
+    }
+
+    #[test]
+    fn fetch_batch_shares_name_and_payloads() {
+        use crate::util::Bytes;
+        let t = topic(1);
+        let stored = Record::new(vec![5u8; 256]);
+        t.partition(0).unwrap().lock().unwrap().append(stored.clone(), None);
+        let batch = t.fetch_batch(0, 0, 10).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.partition, 0);
+        assert_eq!(&*batch.topic, "t");
+        // The fetched record shares the producer-side allocation.
+        assert!(Bytes::ptr_eq(&batch.records[0].1.value, &stored.value));
     }
 }

@@ -99,16 +99,18 @@ pub fn run_inference_replica(
                 Assignor::RoundRobin,
             );
         }
-        let recs = consumer.poll(config.max_poll)?;
-        if recs.is_empty() {
+        // Batched fetch (zero-copy): requests arrive as shared-payload
+        // batches; decoding reads `&[u8]` views of the log's buffers.
+        let batches = consumer.poll_batches(config.max_poll)?;
+        if batches.is_empty() {
             std::thread::sleep(Duration::from_micros(200));
             continue;
         }
         // Micro-batch all pending requests through one predict call.
         x_buf.clear();
-        let mut keys = Vec::with_capacity(recs.len());
-        for rec in &recs {
-            let sample = format.decode(&rec.record)?;
+        let mut keys = Vec::with_capacity(batches.iter().map(|b| b.len()).sum());
+        for (_, record) in batches.iter().flat_map(|b| &b.records) {
+            let sample = format.decode(record)?;
             if sample.features.len() != features {
                 log::warn!(
                     "inference request with {} features (model wants {features}); dropping",
@@ -117,7 +119,7 @@ pub fn run_inference_replica(
                 continue;
             }
             x_buf.extend_from_slice(&sample.features);
-            keys.push(rec.record.get_header(REQUEST_ID_HEADER).map(|v| v.to_vec()));
+            keys.push(record.get_header_bytes(REQUEST_ID_HEADER));
         }
         if keys.is_empty() {
             continue;
@@ -136,7 +138,8 @@ pub fn run_inference_replica(
             ]);
             let mut rec = Record::new(crate::json::to_string(&payload).into_bytes());
             if let Some(k) = key {
-                rec = rec.header(REQUEST_ID_HEADER, &k);
+                // Shares the request-id allocation with the request.
+                rec = rec.header(REQUEST_ID_HEADER, k);
             }
             producer.send_to(&config.output_topic, 0, rec)?;
         }

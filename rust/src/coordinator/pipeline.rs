@@ -299,7 +299,7 @@ impl KafkaMl {
         self.cluster.produce(
             CONTROL_TOPIC,
             0,
-            vec![crate::broker::Record::new(msg.encode())],
+            &[crate::broker::Record::new(msg.encode())],
             locality,
             None,
         )?;
@@ -463,7 +463,7 @@ mod tests {
             .produce(
                 CONTROL_TOPIC,
                 0,
-                vec![crate::broker::Record::new(msg.encode())],
+                &[crate::broker::Record::new(msg.encode())],
                 ClientLocality::External,
                 None,
             )

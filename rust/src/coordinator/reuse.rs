@@ -104,7 +104,7 @@ impl ReuseManager {
         self.cluster.produce(
             CONTROL_TOPIC,
             0,
-            vec![Record::new(msg.encode())],
+            &[Record::new(msg.encode())],
             locality,
             None,
         )?;
@@ -147,7 +147,7 @@ mod tests {
             c.produce(
                 topic,
                 0,
-                vec![Record::new(vec![i as u8; 8])],
+                &[Record::new(vec![i as u8; 8])],
                 ClientLocality::InCluster,
                 None,
             )

@@ -136,15 +136,24 @@ pub fn read_stream_window(
     let mut samples = Vec::with_capacity(msg.stream.length as usize);
     while (samples.len() as u64) < msg.stream.length {
         let max = (msg.stream.length as usize - samples.len()).min(512);
-        let recs = consumer.poll(max)?;
-        if recs.is_empty() {
+        // Batched fetch: one lock round trip per batch, and decoding
+        // reads `&[u8]` views of the log's shared buffers — the window
+        // is never deep-copied between the log and the samples.
+        // (poll_batches omits empty batches, so empty == drained.)
+        let batches = consumer.poll_batches(max)?;
+        if batches.is_empty() {
             bail!("stream window drained early at {} records", samples.len());
         }
-        for rec in recs {
-            if rec.offset >= msg.stream.end_offset() {
-                break;
+        for batch in &batches {
+            // The consumer is assigned exactly the window's partition,
+            // so offsets are monotonic across the whole poll; records
+            // at/after the window end are filtered, not decoded.
+            for (offset, record) in &batch.records {
+                if *offset >= msg.stream.end_offset() {
+                    continue;
+                }
+                samples.push(format.decode(record)?);
             }
-            samples.push(format.decode(&rec.record)?);
         }
     }
     Ok(samples)
@@ -316,7 +325,7 @@ mod tests {
         c.produce(
             CONTROL_TOPIC,
             0,
-            vec![Record::new(other.encode()), Record::new(mine.encode())],
+            &[Record::new(other.encode()), Record::new(mine.encode())],
             ClientLocality::InCluster,
             None,
         )

@@ -32,7 +32,9 @@ pub struct Sample {
 /// A pluggable stream format (the paper's `input_format`).
 pub trait DataFormat: Send + Sync {
     fn name(&self) -> &'static str;
-    /// Decode one Kafka record into a sample.
+    /// Decode one Kafka record into a sample. Implementations read the
+    /// record's key/value as `&[u8]` views of the broker's shared
+    /// buffers — decoding allocates the sample, never a payload copy.
     fn decode(&self, record: &Record) -> Result<Sample>;
     /// Encode a sample into a Kafka record (the producer-side "library"
     /// the paper provides for dispatching data streams).
@@ -75,10 +77,14 @@ impl AvroFormat {
     /// Encode a full AvroValue pair (for callers building rich records).
     pub fn encode_values(&self, data: &AvroValue, label: Option<&AvroValue>) -> Result<Record> {
         let value = avro::encode(&self.data_schema, data)?;
-        let key = label
-            .map(|l| avro::encode(&self.label_schema, l))
-            .transpose()?;
-        Ok(Record { key, value, timestamp_ms: 0, headers: Vec::new() })
+        let record = Record::new(value);
+        match label {
+            Some(l) => {
+                let key = avro::encode(&self.label_schema, l)?;
+                Ok(Record { key: Some(key.into()), ..record })
+            }
+            None => Ok(record),
+        }
     }
 }
 

@@ -121,18 +121,16 @@ impl DataFormat for RawConfig {
                 self.numel()
             );
         }
-        let value = match self.dtype {
+        let value: Vec<u8> = match self.dtype {
             RawDType::F32 => features.iter().flat_map(|f| f.to_le_bytes()).collect(),
             RawDType::U8 => features
                 .iter()
                 .map(|&f| (f.clamp(0.0, 1.0) * 255.0).round() as u8)
                 .collect(),
         };
-        Ok(Record {
-            key: label.map(|l| l.to_le_bytes().to_vec()),
-            value,
-            timestamp_ms: 0,
-            headers: Vec::new(),
+        Ok(match label {
+            Some(l) => Record::with_key(l.to_le_bytes().to_vec(), value),
+            None => Record::new(value),
         })
     }
 }
@@ -181,12 +179,7 @@ mod tests {
     #[test]
     fn bad_label_key_rejected() {
         let c = RawConfig::new(RawDType::F32, vec![1]);
-        let rec = Record {
-            key: Some(vec![1, 2]),
-            value: 1f32.to_le_bytes().to_vec(),
-            timestamp_ms: 0,
-            headers: vec![],
-        };
+        let rec = Record::with_key(vec![1, 2], 1f32.to_le_bytes().to_vec());
         assert!(c.decode(&rec).is_err());
     }
 

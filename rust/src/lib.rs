@@ -20,6 +20,19 @@
 //! Python runs **once**, at `make artifacts`. The serving and training
 //! hot paths are pure Rust + PJRT.
 //!
+//! ## Zero-copy record path
+//!
+//! Record payloads are [`util::Bytes`] — Arc-backed, immutable, O(1) to
+//! clone and slice. A payload is copied exactly once (producer encode);
+//! from there the segmented log stores it, [`broker::RecordBatch`]
+//! fetches return it under a single partition-lock acquisition
+//! ([`broker::Cluster::fetch_batch`], `Consumer::poll_batches`), the
+//! producer's at-least-once retry buffer re-sends it, and the
+//! [`formats`]/[`avro`] decoders read it as `&[u8]` views — all sharing
+//! the same allocation. This is the paper's §II claim ("data chunks can
+//! be transferred without modifications") made literal, and the main
+//! lever on `broker_throughput`.
+//!
 //! ## Quick map (paper § → module)
 //!
 //! | Paper | Module |

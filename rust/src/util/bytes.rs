@@ -1,0 +1,351 @@
+//! `Bytes`: an immutable, Arc-backed byte buffer that clones and slices
+//! in O(1) — the substrate of the broker's zero-copy record path.
+//!
+//! Kafka's efficiency story (paper §II: "data chunks can be transferred
+//! without modifications") hinges on payloads being handed between the
+//! log, the network layer and consumers without re-copying. This type
+//! gives the reproduction the same property with no external
+//! dependencies: one heap allocation when a payload enters the system
+//! (producer encode), then every later hop — log storage, segment
+//! reads, batch fetches, consumer polls, at-least-once retries, format
+//! decoding — shares that allocation through an `Arc`.
+//!
+//! Semantics:
+//!  * `Clone` bumps a refcount; it never copies payload bytes.
+//!  * `slice(a..b)` returns a view into the same allocation.
+//!  * `Deref<Target = [u8]>` makes a `Bytes` usable anywhere a `&[u8]`
+//!    is expected (codecs decode straight from the shared buffer).
+//!  * Equality/ordering/hashing are by content, interoperable with
+//!    `[u8]`/`Vec<u8>`, so `Bytes` works as a map key (compaction) and
+//!    in assertions against plain vectors.
+//!  * [`Bytes::ptr_eq`] observes sharing — the property the zero-copy
+//!    tests assert.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::ops::{Bound, Deref, RangeBounds};
+use std::sync::Arc;
+
+/// A cheaply cloneable, sliceable, immutable byte buffer.
+///
+/// Internally `Arc<Vec<u8>>` (not `Arc<[u8]>`): `Arc::from(vec)` would
+/// memcpy the payload into a fresh allocation, while `Arc::new(vec)`
+/// moves the vector — so taking ownership of an encoded payload really
+/// is free, at the cost of one extra pointer hop on reads.
+#[derive(Clone)]
+pub struct Bytes {
+    buf: Arc<Vec<u8>>,
+    start: usize,
+    len: usize,
+}
+
+impl Bytes {
+    /// The empty buffer.
+    pub fn new() -> Bytes {
+        Bytes {
+            buf: Arc::new(Vec::new()),
+            start: 0,
+            len: 0,
+        }
+    }
+
+    /// Take ownership of a vector without copying it (the one copy a
+    /// payload ever pays is the encode that produced this vector).
+    pub fn from_vec(v: Vec<u8>) -> Bytes {
+        let len = v.len();
+        Bytes {
+            buf: Arc::new(v),
+            start: 0,
+            len,
+        }
+    }
+
+    /// Copy a slice into a fresh shared buffer.
+    pub fn copy_from_slice(s: &[u8]) -> Bytes {
+        Bytes::from_vec(s.to_vec())
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// View the underlying bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.start..self.start + self.len]
+    }
+
+    /// O(1) sub-view sharing the same allocation. Panics when the range
+    /// is out of bounds (mirrors slice indexing).
+    pub fn slice(&self, range: impl RangeBounds<usize>) -> Bytes {
+        let start = match range.start_bound() {
+            Bound::Included(&n) => n,
+            Bound::Excluded(&n) => n + 1,
+            Bound::Unbounded => 0,
+        };
+        let end = match range.end_bound() {
+            Bound::Included(&n) => n + 1,
+            Bound::Excluded(&n) => n,
+            Bound::Unbounded => self.len,
+        };
+        assert!(
+            start <= end && end <= self.len,
+            "Bytes::slice: range {start}..{end} out of bounds (len {})",
+            self.len
+        );
+        Bytes {
+            buf: self.buf.clone(),
+            start: self.start + start,
+            len: end - start,
+        }
+    }
+
+    /// Copy the content out into an owned vector.
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+
+    /// True when both handles share one allocation (regardless of the
+    /// window each views). This is what "zero-copy" means operationally:
+    /// a consumed record is `ptr_eq` with the log's stored record.
+    pub fn ptr_eq(a: &Bytes, b: &Bytes) -> bool {
+        Arc::ptr_eq(&a.buf, &b.buf)
+    }
+
+    /// Number of live handles on the underlying allocation.
+    pub fn ref_count(&self) -> usize {
+        Arc::strong_count(&self.buf)
+    }
+}
+
+impl Default for Bytes {
+    fn default() -> Bytes {
+        Bytes::new()
+    }
+}
+
+impl Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl Borrow<[u8]> for Bytes {
+    fn borrow(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Bytes {
+        Bytes::from_vec(v)
+    }
+}
+
+impl From<&[u8]> for Bytes {
+    fn from(s: &[u8]) -> Bytes {
+        Bytes::copy_from_slice(s)
+    }
+}
+
+impl From<&Vec<u8>> for Bytes {
+    fn from(v: &Vec<u8>) -> Bytes {
+        Bytes::copy_from_slice(v)
+    }
+}
+
+impl<const N: usize> From<[u8; N]> for Bytes {
+    fn from(a: [u8; N]) -> Bytes {
+        Bytes::copy_from_slice(&a)
+    }
+}
+
+impl<const N: usize> From<&[u8; N]> for Bytes {
+    fn from(a: &[u8; N]) -> Bytes {
+        Bytes::copy_from_slice(a)
+    }
+}
+
+impl From<String> for Bytes {
+    fn from(s: String) -> Bytes {
+        Bytes::from_vec(s.into_bytes())
+    }
+}
+
+impl From<&str> for Bytes {
+    fn from(s: &str) -> Bytes {
+        Bytes::copy_from_slice(s.as_bytes())
+    }
+}
+
+// Content equality/order/hash — consistent with `[u8]` so `Bytes` keys
+// can be looked up by slice (`Borrow<[u8]>`).
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+impl PartialOrd for Bytes {
+    fn partial_cmp(&self, other: &Bytes) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Bytes {
+    fn cmp(&self, other: &Bytes) -> std::cmp::Ordering {
+        self.as_slice().cmp(other.as_slice())
+    }
+}
+
+impl Hash for Bytes {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.as_slice().hash(state)
+    }
+}
+
+impl PartialEq<[u8]> for Bytes {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[u8]> for Bytes {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Bytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<const N: usize> PartialEq<[u8; N]> for Bytes {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<Bytes> for [u8] {
+    fn eq(&self, other: &Bytes) -> bool {
+        self == other.as_slice()
+    }
+}
+
+impl PartialEq<Bytes> for Vec<u8> {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Truncated dump: a failed assertion on a 16 KiB payload should
+        // not flood the log with 16384 list entries.
+        const SHOWN: usize = 16;
+        write!(f, "Bytes({} B)", self.len)?;
+        let shown = &self.as_slice()[..self.len.min(SHOWN)];
+        f.debug_list().entries(shown.iter()).finish()?;
+        if self.len > SHOWN {
+            write!(f, "…")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_shares_allocation() {
+        let a = Bytes::from_vec(vec![1, 2, 3, 4]);
+        let b = a.clone();
+        assert!(Bytes::ptr_eq(&a, &b));
+        assert_eq!(a, b);
+        assert_eq!(a.ref_count(), 2);
+    }
+
+    #[test]
+    fn slice_is_a_shared_view() {
+        let a = Bytes::from_vec((0u8..10).collect());
+        let s = a.slice(2..5);
+        assert_eq!(s, vec![2u8, 3, 4]);
+        assert!(Bytes::ptr_eq(&a, &s));
+        let ss = s.slice(1..);
+        assert_eq!(ss, vec![3u8, 4]);
+        assert!(Bytes::ptr_eq(&a, &ss));
+        assert_eq!(a.slice(..).len(), 10);
+        assert_eq!(a.slice(10..10).len(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn slice_out_of_bounds_panics() {
+        Bytes::from_vec(vec![1, 2, 3]).slice(1..5);
+    }
+
+    #[test]
+    fn content_equality_with_plain_types() {
+        let b = Bytes::from(&[9u8, 8, 7][..]);
+        assert_eq!(b, vec![9u8, 8, 7]);
+        assert_eq!(b, [9u8, 8, 7]);
+        assert_eq!(vec![9u8, 8, 7], b);
+        assert_ne!(b, vec![9u8, 8]);
+        assert!(!Bytes::ptr_eq(&b, &Bytes::from(&[9u8, 8, 7][..])));
+    }
+
+    #[test]
+    fn works_as_map_key_looked_up_by_slice() {
+        use std::collections::HashMap;
+        let mut m: HashMap<Bytes, u32> = HashMap::new();
+        m.insert(Bytes::from_vec(vec![1, 2]), 7);
+        assert_eq!(m.get(&[1u8, 2][..]), Some(&7));
+        assert_eq!(m.get(&[1u8, 3][..]), None);
+    }
+
+    #[test]
+    fn ordering_matches_slices() {
+        let mut v = vec![
+            Bytes::from_vec(vec![2]),
+            Bytes::from_vec(vec![1, 9]),
+            Bytes::from_vec(vec![1]),
+        ];
+        v.sort();
+        assert_eq!(v[0], vec![1u8]);
+        assert_eq!(v[1], vec![1u8, 9]);
+        assert_eq!(v[2], vec![2u8]);
+    }
+
+    #[test]
+    fn deref_gives_slice_methods() {
+        let b = Bytes::from_vec(vec![1, 2, 3, 4]);
+        assert_eq!(b.chunks_exact(2).count(), 2);
+        assert_eq!(b.iter().sum::<u8>(), 10);
+        let s: &[u8] = &b;
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn empty_and_default() {
+        assert!(Bytes::new().is_empty());
+        assert_eq!(Bytes::default().len(), 0);
+        assert_eq!(Bytes::new(), Vec::<u8>::new());
+    }
+}

@@ -3,10 +3,12 @@
 //! Nothing here depends on the rest of the crate; everything else may
 //! depend on this.
 
+pub mod bytes;
 pub mod clock;
 pub mod logging;
 pub mod rng;
 
+pub use bytes::Bytes;
 pub use clock::{Clock, ManualClock, SystemClock};
 pub use rng::Rng;
 

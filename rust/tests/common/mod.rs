@@ -1,0 +1,32 @@
+//! Helpers shared by the integration suites (pulled in via `mod common;`,
+//! the directory form so cargo does not treat this as a test target).
+
+use kafka_ml::runtime::Engine;
+
+/// Load the PJRT engine from `artifacts/`, or return `None` to skip —
+/// but ONLY for the two expected clean-checkout conditions:
+///
+/// * `artifacts/meta.json` unreadable (`make artifacts` never ran) —
+///   the io error is contexted as "reading …meta.json";
+/// * the hermetic stub `xla` crate is linked ("PJRT backend
+///   unavailable").
+///
+/// Anything else (corrupt/stale artifacts, a real backend failing)
+/// panics: artifacts exist, so going green with zero end-to-end
+/// coverage would hide a regression.
+pub fn engine_for_tests() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let missing_artifacts = msg.contains("reading") && msg.contains("meta.json");
+            let stub_backend = msg.contains("PJRT backend unavailable");
+            if missing_artifacts || stub_backend {
+                eprintln!("skipping PJRT-dependent test: {msg}");
+                None
+            } else {
+                panic!("artifacts present but engine failed to load: {msg}");
+            }
+        }
+    }
+}

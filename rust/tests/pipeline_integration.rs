@@ -32,6 +32,18 @@ fn platform() -> KafkaMl {
     KafkaMl::start(KafkaMlConfig::default()).expect("platform boot")
 }
 
+mod common;
+
+/// True when `make artifacts` has run AND a real PJRT backend is
+/// linked. A clean checkout (no artifacts, hermetic stub `xla` crate)
+/// skips these end-to-end tests — the broker/coordinator layers are
+/// covered by the non-PJRT suites. Any OTHER load error panics inside
+/// [`common::engine_for_tests`] so the suite cannot silently go green
+/// without coverage.
+fn pjrt_available() -> bool {
+    common::engine_for_tests().is_some()
+}
+
 /// Steps A–D: define, configure, deploy, ingest, wait for training.
 fn train_one(kml: &KafkaMl, format: &str, config: &Json, validation_rate: f64) -> u64 {
     let model = kml.create_model("hcopd-mlp").unwrap();
@@ -61,6 +73,9 @@ fn train_one(kml: &KafkaMl, format: &str, config: &Json, validation_rate: f64) -
 
 #[test]
 fn full_pipeline_avro_training_and_inference() {
+    if !pjrt_available() {
+        return;
+    }
     let kml = platform();
     let result_id = train_one(&kml, "AVRO", &avro_config(), 0.2);
 
@@ -101,6 +116,9 @@ fn full_pipeline_avro_training_and_inference() {
 
 #[test]
 fn raw_format_pipeline_works_too() {
+    if !pjrt_available() {
+        return;
+    }
     let kml = platform();
     let result_id = train_one(&kml, "RAW", &raw_config(), 0.0);
     let r = kml.store.result(result_id).unwrap();
@@ -110,6 +128,9 @@ fn raw_format_pipeline_works_too() {
 
 #[test]
 fn configuration_with_two_models_trains_both_from_one_stream() {
+    if !pjrt_available() {
+        return;
+    }
     // §III-B's selling point: n models, ONE data stream.
     let kml = platform();
     let m1 = kml.create_model("mlp-a").unwrap();
@@ -147,6 +168,9 @@ fn configuration_with_two_models_trains_both_from_one_stream() {
 
 #[test]
 fn stream_reuse_trains_second_deployment_without_resend() {
+    if !pjrt_available() {
+        return;
+    }
     // §V / Fig 8: D1 trains from the stream; D2 reuses it via a
     // control-message re-send.
     let kml = platform();
@@ -193,6 +217,9 @@ fn stream_reuse_trains_second_deployment_without_resend() {
 
 #[test]
 fn inference_replicas_load_balance_and_survive_kill() {
+    if !pjrt_available() {
+        return;
+    }
     let kml = platform();
     let result_id = train_one(&kml, "RAW", &raw_config(), 0.0);
     let inf = kml
@@ -234,6 +261,9 @@ fn inference_replicas_load_balance_and_survive_kill() {
 
 #[test]
 fn pipeline_survives_broker_failover() {
+    if !pjrt_available() {
+        return;
+    }
     // §II/§IV-F fault tolerance: kill the leader broker of the data
     // topic mid-pipeline; partition replicas take over and training +
     // inference still complete.
@@ -275,6 +305,9 @@ fn pipeline_survives_broker_failover() {
 
 #[test]
 fn training_job_fails_cleanly_without_stream() {
+    if !pjrt_available() {
+        return;
+    }
     // A deployed job whose control message never arrives times out and
     // the back-end records the failure.
     let kml = platform();

@@ -4,10 +4,13 @@
 
 use kafka_ml::runtime::{Engine, ModelParams};
 
-fn engine() -> Engine {
-    Engine::load("artifacts").expect(
-        "artifacts/ missing or stale — run `make artifacts` before cargo test",
-    )
+mod common;
+
+/// See [`common::engine_for_tests`]: `Some` when artifacts + a real
+/// PJRT backend are available, `None` (skip) on a clean checkout,
+/// panic when artifacts exist but are broken.
+fn engine_opt() -> Option<Engine> {
+    common::engine_for_tests()
 }
 
 fn toy_batch(engine: &Engine, seed: u64) -> (Vec<f32>, Vec<i32>) {
@@ -24,7 +27,7 @@ fn toy_batch(engine: &Engine, seed: u64) -> (Vec<f32>, Vec<i32>) {
 
 #[test]
 fn engine_loads_and_reports_meta() {
-    let e = engine();
+    let Some(e) = engine_opt() else { return };
     let m = e.meta();
     assert_eq!(m.input_dim, 8);
     assert_eq!(m.classes, 4);
@@ -36,7 +39,7 @@ fn engine_loads_and_reports_meta() {
 
 #[test]
 fn init_params_match_meta_shapes() {
-    let e = engine();
+    let Some(e) = engine_opt() else { return };
     let p = e.init_params().unwrap();
     p.check_against(&e.meta().params).unwrap();
     // Glorot weights are non-zero, biases zero.
@@ -49,7 +52,7 @@ fn init_params_match_meta_shapes() {
 
 #[test]
 fn train_step_returns_finite_metrics_and_updates_params() {
-    let e = engine();
+    let Some(e) = engine_opt() else { return };
     let init = e.init_params().unwrap();
     let mut state = e.train_state(&init).unwrap();
     let (x, y) = toy_batch(&e, 1);
@@ -64,7 +67,7 @@ fn train_step_returns_finite_metrics_and_updates_params() {
 
 #[test]
 fn training_reduces_loss_on_learnable_data() {
-    let e = engine();
+    let Some(e) = engine_opt() else { return };
     let meta = e.meta();
     let ds = kafka_ml::ml::hcopd_dataset(200, meta.input_dim, 3);
     let init = e.init_params().unwrap();
@@ -103,7 +106,7 @@ fn training_reduces_loss_on_learnable_data() {
 
 #[test]
 fn eval_step_consistent_with_train_metrics() {
-    let e = engine();
+    let Some(e) = engine_opt() else { return };
     let init = e.init_params().unwrap();
     let state = e.train_state(&init).unwrap();
     let (x, y) = toy_batch(&e, 5);
@@ -118,7 +121,7 @@ fn eval_step_consistent_with_train_metrics() {
 
 #[test]
 fn predict_outputs_probability_rows() {
-    let e = engine();
+    let Some(e) = engine_opt() else { return };
     let meta = e.meta();
     let init = e.init_params().unwrap();
     let params = e.inference_params(&init).unwrap();
@@ -144,7 +147,7 @@ fn predict_outputs_probability_rows() {
 
 #[test]
 fn predict_batched_equals_single() {
-    let e = engine();
+    let Some(e) = engine_opt() else { return };
     let meta = e.meta();
     let init = e.init_params().unwrap();
     let params = e.inference_params(&init).unwrap();
@@ -166,7 +169,7 @@ fn predict_batched_equals_single() {
 
 #[test]
 fn params_roundtrip_through_wire_format() {
-    let e = engine();
+    let Some(e) = engine_opt() else { return };
     let init = e.init_params().unwrap();
     let mut state = e.train_state(&init).unwrap();
     let (x, y) = toy_batch(&e, 11);
@@ -185,7 +188,7 @@ fn params_roundtrip_through_wire_format() {
 
 #[test]
 fn train_step_rejects_wrong_batch() {
-    let e = engine();
+    let Some(e) = engine_opt() else { return };
     let init = e.init_params().unwrap();
     let mut state = e.train_state(&init).unwrap();
     let (x, y) = toy_batch(&e, 1);
