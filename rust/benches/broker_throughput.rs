@@ -11,6 +11,10 @@
 //! * payload size — consume throughput at 64 B / 1 KiB / 16 KiB
 //!   payloads. This is the zero-copy dividend: since records travel as
 //!   shared `Bytes`, consume cost is near-independent of payload size.
+//! * consumer wakeup latency — produce→deliver latency to a **parked**
+//!   consumer on the event-driven `poll_wait` path vs the 1 ms
+//!   sleep-poll loop it replaced, plus the fetch-request rate an *idle*
+//!   consumer burns under each discipline.
 //!
 //! Results are also written machine-readably to
 //! `BENCH_broker_throughput.json` (repo root) via `benchkit::Report` so
@@ -18,11 +22,11 @@
 
 use kafka_ml::benchkit::{Bench, Report, Table};
 use kafka_ml::broker::{
-    BrokerConfig, ClientLocality, Cluster, Consumer, NetProfile, Producer, ProducerConfig,
-    Record,
+    BrokerConfig, ClientLocality, Cluster, ClusterHandle, Consumer, NetProfile, Producer,
+    ProducerConfig, Record,
 };
 use kafka_ml::util::Bytes;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 const REPORT_PATH: &str = concat!(
     env!("CARGO_MANIFEST_DIR"),
@@ -215,7 +219,118 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
+    // ---- parked-consumer wakeup latency ---------------------------------------
+    // What the notify subsystem buys: a parked consumer reacts to a
+    // produce in condvar time, while the old loop paid up to a full
+    // sleep quantum per delivery — and kept issuing fetch requests the
+    // whole time it was idle.
+    let mut t = Table::new(
+        "Parked-consumer wakeup (200 one-record deliveries + 400ms idle window)",
+        &["consume loop", "mean (µs)", "p50 (µs)", "p99 (µs)", "idle fetches/s"],
+    );
+    for event_driven in [true, false] {
+        let c = Cluster::new(BrokerConfig::default());
+        c.create_topic("wl", 1);
+        let lats = wakeup_latencies(&c, "wl", 200, event_driven);
+        let idle_rate = idle_fetch_rate(event_driven);
+        let us = |d: Duration| d.as_secs_f64() * 1e6;
+        let mean = us(lats.iter().sum::<Duration>() / lats.len() as u32);
+        let p50 = us(lats[lats.len() / 2]);
+        let p99 = us(lats[lats.len() * 99 / 100]);
+        t.row(&[
+            if event_driven { "event (poll_wait)" } else { "sleep-poll 1ms" }.to_string(),
+            format!("{mean:.1}"),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+            format!("{idle_rate:.1}"),
+        ]);
+        report.entry(
+            "consumer_wakeup_latency",
+            &[("event_driven", if event_driven { 1.0 } else { 0.0 })],
+            &[
+                ("mean_us", mean),
+                ("p50_us", p50),
+                ("p99_us", p99),
+                ("idle_fetches_per_s", idle_rate),
+            ],
+        );
+    }
+    t.print();
+
     report.save(REPORT_PATH)?;
     println!("\nwrote {REPORT_PATH} ({} entries)", report.len());
     Ok(())
+}
+
+/// Produce→deliver latency to a parked consumer, sorted ascending.
+/// `event_driven` parks in `poll_wait`; the comparison arm replays the
+/// pre-notify discipline (poll, sleep 1 ms, repeat).
+fn wakeup_latencies(
+    c: &ClusterHandle,
+    topic: &str,
+    iters: usize,
+    event_driven: bool,
+) -> Vec<Duration> {
+    let (tx, rx) = kafka_ml::exec::unbounded::<Instant>();
+    let c2 = c.clone();
+    let topic2 = topic.to_string();
+    let h = std::thread::spawn(move || {
+        let mut cons = Consumer::new(c2, ClientLocality::InCluster);
+        cons.assign(vec![(topic2, 0)]);
+        for _ in 0..iters {
+            loop {
+                let recs = if event_driven {
+                    cons.poll_wait(16, Duration::from_secs(10)).unwrap()
+                } else {
+                    let recs = cons.poll(16).unwrap();
+                    if recs.is_empty() {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    recs
+                };
+                if !recs.is_empty() {
+                    break;
+                }
+            }
+            tx.send(Instant::now()).unwrap();
+        }
+    });
+    let mut lats = Vec::with_capacity(iters);
+    for i in 0..iters {
+        // Let the consumer reach its park/sleep before producing.
+        std::thread::sleep(Duration::from_millis(2));
+        let t0 = Instant::now();
+        c.produce(
+            topic,
+            0,
+            &[Record::new(vec![i as u8])],
+            ClientLocality::InCluster,
+            None,
+        )
+        .unwrap();
+        lats.push(rx.recv().unwrap().duration_since(t0));
+    }
+    h.join().unwrap();
+    lats.sort();
+    lats
+}
+
+/// Fetch requests per second an *idle* consumer issues to the broker.
+fn idle_fetch_rate(event_driven: bool) -> f64 {
+    let window = Duration::from_millis(400);
+    let c = Cluster::new(BrokerConfig::default());
+    c.create_topic("idle", 1);
+    let mut cons = Consumer::new(c.clone(), ClientLocality::InCluster);
+    cons.assign(vec![("idle".into(), 0)]);
+    let t0 = Instant::now();
+    if event_driven {
+        cons.poll_wait(16, window).unwrap();
+    } else {
+        while t0.elapsed() < window {
+            if cons.poll(16).unwrap().is_empty() {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+    c.metrics.counter("broker.fetch.requests").get() as f64 / t0.elapsed().as_secs_f64()
 }

@@ -11,6 +11,7 @@
 use super::group::{Assignor, GroupMembership, GroupState};
 use super::log::LogConfig;
 use super::net::{ClientLocality, NetProfile};
+use super::notify::WaitSet;
 use super::record::{ConsumedRecord, Record, RecordBatch};
 use super::topic::Topic;
 use super::TopicPartition;
@@ -20,6 +21,7 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
 pub struct BrokerConfig {
@@ -169,14 +171,10 @@ impl Cluster {
             bail!("partition {topic}:{partition} offline (no ISR)");
         }
         let n = records.len() as u64;
-        let mut base = None;
-        for (i, r) in records.iter().enumerate() {
-            let seq = producer_seq.map(|(pid, s)| (pid, s + i as u64));
-            let (off, dup) = p.append(r.clone(), seq);
-            if base.is_none() && !dup {
-                base = Some(off);
-            }
-        }
+        // One lock hold for the whole message set; parked consumers are
+        // woken once per batch (not once per record) by the partition's
+        // wait-set.
+        let base = p.append_batch(records, producer_seq);
         drop(p);
         self.config.net.traverse(locality); // ack leg
         self.metrics.counter("broker.produce.records").add(n);
@@ -211,6 +209,7 @@ impl Cluster {
             .fetch_batch(partition, from, max)
             .ok_or_else(|| anyhow!("unknown partition {topic}:{partition}"))?;
         self.config.net.traverse(locality);
+        self.metrics.counter("broker.fetch.requests").inc();
         self.metrics
             .counter("broker.fetch.records")
             .add(batch.len() as u64);
@@ -245,6 +244,87 @@ impl Cluster {
 
     pub fn alloc_producer_id(&self) -> u64 {
         self.next_producer_id.fetch_add(1, Ordering::SeqCst)
+    }
+
+    // ---- wakeups ------------------------------------------------------------
+
+    /// Does any `(topic, partition)` cursor in `assignments` have a
+    /// record at or behind it?
+    pub fn any_data_ready(&self, assignments: &[(TopicPartition, u64)]) -> bool {
+        assignments.iter().any(|((topic, p), pos)| {
+            self.topic(topic).map(|t| t.has_data(*p, *pos)).unwrap_or(false)
+        })
+    }
+
+    /// Park the calling thread across every assigned partition — and, for
+    /// group members, the group's rebalance wait-set — under **one**
+    /// waiter until something changes or `deadline` passes. `group`
+    /// carries the member's last-seen group generation so a rebalance
+    /// that raced the registration is detected, exactly like the data
+    /// check below detects a raced produce.
+    ///
+    /// Single-shot: returns on the *first* wakeup (data append or group
+    /// rebalance) so the caller can re-poll / refresh its assignment and
+    /// re-arm; spurious returns are safe by construction. Returns `true`
+    /// when woken or something is already waiting, `false` on a quiet
+    /// timeout.
+    pub fn wait_for_data(
+        &self,
+        assignments: &[(TopicPartition, u64)],
+        group: Option<(&str, u64)>,
+        deadline: Instant,
+    ) -> bool {
+        // Own the Arc clones so the borrowed set slice stays valid for
+        // the whole wait.
+        let mut owned: Vec<Arc<WaitSet>> = Vec::with_capacity(assignments.len() + 1);
+        let mut unregistered = false;
+        for ((topic, p), _) in assignments {
+            match self.topic(topic).and_then(|t| t.wait_set(*p).cloned()) {
+                Some(ws) => owned.push(ws),
+                // Assigned ahead of topic creation (Kafka auto-create):
+                // nothing to park on yet.
+                None => unregistered = true,
+            }
+        }
+        if let Some((gid, _)) = group {
+            if let Some(ws) = self.group_wait_set(gid) {
+                owned.push(ws);
+            }
+        }
+        // With an assignment we could not register for, an append there
+        // could never wake us — cap this round so the caller re-checks
+        // (bounded retry only in that edge; fully event-driven otherwise).
+        let deadline = if unregistered {
+            deadline.min(Instant::now() + Duration::from_millis(10))
+        } else {
+            deadline
+        };
+        let sets: Vec<&WaitSet> = owned.iter().map(|ws| &**ws).collect();
+        // `wait_any` closes the lost-wakeup race for both event kinds: a
+        // produce bumps `any_data_ready`, a rebalance bumps the group
+        // generation, and either one landing mid-registration has
+        // already woken the waiter.
+        super::notify::wait_any(
+            &sets,
+            || {
+                self.any_data_ready(assignments)
+                    || group.is_some_and(|(gid, gen)| self.group_generation(gid) != Some(gen))
+            },
+            deadline,
+        )
+    }
+
+    /// The wait-set signalled on every rebalance of `group_id`.
+    pub fn group_wait_set(&self, group_id: &str) -> Option<Arc<WaitSet>> {
+        let groups = self.groups.lock().unwrap();
+        groups.get(group_id).map(|g| g.wait_set.clone())
+    }
+
+    /// Current generation of `group_id` (bumped on every membership
+    /// change).
+    pub fn group_generation(&self, group_id: &str) -> Option<u64> {
+        let groups = self.groups.lock().unwrap();
+        groups.get(group_id).map(|g| g.generation)
     }
 
     // ---- retention ---------------------------------------------------------
@@ -474,6 +554,53 @@ mod tests {
         let t = c.topic("t").unwrap();
         let p = t.partition(0).unwrap().lock().unwrap();
         assert_ne!(p.leader, leader);
+    }
+
+    #[test]
+    fn wait_for_data_woken_by_concurrent_produce() {
+        let c = cluster();
+        c.create_topic("t", 2);
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            super::super::notify::pause(std::time::Duration::from_millis(20));
+            c2.produce("t", 1, &[Record::new(vec![1])], ClientLocality::InCluster, None)
+                .unwrap();
+        });
+        let t0 = Instant::now();
+        let assignments = vec![(("t".to_string(), 0), 0), (("t".to_string(), 1), 0)];
+        assert!(c.wait_for_data(&assignments, None, t0 + std::time::Duration::from_secs(5)));
+        assert!(t0.elapsed() < std::time::Duration::from_secs(1));
+        h.join().unwrap();
+        // All registrations cleaned up.
+        let t = c.topic("t").unwrap();
+        assert!(t.wait_set(0).unwrap().is_empty());
+        assert!(t.wait_set(1).unwrap().is_empty());
+    }
+
+    #[test]
+    fn wait_for_data_woken_by_group_rebalance() {
+        let c = cluster();
+        c.create_topic("in", 2);
+        let m = c.join_group("g", "a", &["in".into()], Assignor::Range);
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            super::super::notify::pause(std::time::Duration::from_millis(20));
+            c2.join_group("g", "b", &["in".into()], Assignor::Range);
+        });
+        let t0 = Instant::now();
+        // No data anywhere: only the rebalance can end this wait early.
+        let deadline = t0 + std::time::Duration::from_secs(5);
+        assert!(c.wait_for_data(&[], Some(("g", m.generation)), deadline));
+        assert!(t0.elapsed() < std::time::Duration::from_secs(1));
+        h.join().unwrap();
+        assert!(c.group_wait_set("g").unwrap().is_empty());
+
+        // A generation observed as stale returns immediately (the
+        // raced-rebalance guard).
+        let t0 = Instant::now();
+        let far = t0 + std::time::Duration::from_secs(5);
+        assert!(c.wait_for_data(&[], Some(("g", m.generation)), far));
+        assert!(t0.elapsed() < std::time::Duration::from_millis(100));
     }
 
     #[test]

@@ -22,6 +22,10 @@ pub struct Consumer {
     cluster: ClusterHandle,
     locality: ClientLocality,
     group: Option<(String, String)>, // (group_id, member_id)
+    /// What `subscribe` was called with, so a member evicted while
+    /// parked in a blocking poll can rejoin (Kafka clients re-run the
+    /// join protocol on session expiry).
+    subscription: Option<(Vec<String>, Assignor)>,
     generation: u64,
     assigned: Vec<TopicPartition>,
     positions: HashMap<TopicPartition, u64>,
@@ -34,6 +38,7 @@ impl Consumer {
             cluster,
             locality,
             group: None,
+            subscription: None,
             generation: 0,
             assigned: Vec::new(),
             positions: HashMap::new(),
@@ -79,6 +84,7 @@ impl Consumer {
             self.cluster
                 .join_group(group_id, member_id, topics, assignor);
         self.group = Some((group_id.to_string(), member_id.to_string()));
+        self.subscription = Some((topics.to_vec(), assignor));
         self.generation = membership.generation;
         self.apply_assignment(membership.assigned);
     }
@@ -121,6 +127,7 @@ impl Consumer {
         if let Some((gid, mid)) = self.group.take() {
             self.cluster.leave_group(&gid, &mid);
         }
+        self.subscription = None;
         self.assigned.clear();
     }
 
@@ -165,25 +172,70 @@ impl Consumer {
     /// [`Consumer::poll_batches`]; the per-record handles still share
     /// the log's payload allocations.
     pub fn poll(&mut self, max: usize) -> Result<Vec<ConsumedRecord>> {
-        let batches = self.poll_batches(max)?;
-        let total = batches.iter().map(|b| b.len()).sum();
-        let mut out = Vec::with_capacity(total);
-        for batch in batches {
-            out.extend(batch.into_consumed());
-        }
-        Ok(out)
+        Ok(flatten(self.poll_batches(max)?))
     }
 
-    /// Poll, waiting up to `timeout` for at least one record.
-    pub fn poll_wait(&mut self, max: usize, timeout: Duration) -> Result<Vec<ConsumedRecord>> {
+    /// Blocking long-poll: like [`Consumer::poll_batches`], but when
+    /// nothing is ready the calling thread **parks** on one waiter
+    /// registered across every assigned partition (and the group's
+    /// rebalance wait-set) until a produce or rebalance wakes it, or
+    /// `timeout` passes. No sleep-poll loop: an idle consumer costs
+    /// zero CPU and reacts to a produce in condvar-wakeup time rather
+    /// than a sleep quantum.
+    ///
+    /// A group member woken by a rebalance refreshes its membership
+    /// (like [`Consumer::poll_heartbeat`]) and re-arms on its new
+    /// assignment, so wakeups survive generation changes.
+    pub fn poll_batches_wait(
+        &mut self,
+        max: usize,
+        timeout: Duration,
+    ) -> Result<Vec<RecordBatch>> {
         let deadline = Instant::now() + timeout;
         loop {
-            let recs = self.poll(max)?;
-            if !recs.is_empty() || Instant::now() >= deadline {
-                return Ok(recs);
+            let batches = self.poll_batches(max)?;
+            if !batches.is_empty() {
+                return Ok(batches);
             }
-            std::thread::sleep(Duration::from_millis(1));
+            if Instant::now() >= deadline {
+                return Ok(batches);
+            }
+            let assignments: Vec<(TopicPartition, u64)> = self
+                .assigned
+                .iter()
+                .map(|tp| (tp.clone(), self.position(tp)))
+                .collect();
+            let group = self.group.clone();
+            // A false return is a quiet timeout of this wait *round*
+            // (the cluster may cap a round when part of the assignment
+            // is not registrable yet); the loop re-polls and the
+            // deadline check above ends the long-poll — that final poll
+            // also closes the race with a produce landing exactly at
+            // the deadline.
+            let woken = self.cluster.wait_for_data(
+                &assignments,
+                group.as_ref().map(|(gid, _)| (gid.as_str(), self.generation)),
+                deadline,
+            );
+            if woken && self.group.is_some() && !self.poll_heartbeat() {
+                // Evicted while parked (session expiry): rejoin with the
+                // original subscription, as Kafka clients do — this also
+                // resyncs our generation so the next wait parks instead
+                // of treating the eviction rebalance as a fresh wakeup
+                // forever.
+                if let (Some((gid, mid)), Some((topics, assignor))) =
+                    (self.group.clone(), self.subscription.clone())
+                {
+                    self.subscribe(&gid, &mid, &topics, assignor);
+                }
+            }
         }
+    }
+
+    /// Poll, waiting up to `timeout` for at least one record — the
+    /// blocking flattened variant of [`Consumer::poll_batches_wait`].
+    pub fn poll_wait(&mut self, max: usize, timeout: Duration) -> Result<Vec<ConsumedRecord>> {
+        Ok(flatten(self.poll_batches_wait(max, timeout)?))
     }
 
     /// Commit current positions to the group coordinator.
@@ -194,6 +246,15 @@ impl Consumer {
             }
         }
     }
+}
+
+fn flatten(batches: Vec<RecordBatch>) -> Vec<ConsumedRecord> {
+    let total = batches.iter().map(|b| b.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for batch in batches {
+        out.extend(batch.into_consumed());
+    }
+    out
 }
 
 #[cfg(test)]
@@ -316,6 +377,25 @@ mod tests {
         let recs = cons.poll_wait(10, Duration::from_millis(30)).unwrap();
         assert!(recs.is_empty());
         assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn poll_batches_wait_parks_until_concurrent_produce() {
+        let c = Cluster::new(BrokerConfig::default());
+        c.create_topic("t", 1);
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            crate::broker::notify::pause(Duration::from_millis(20));
+            c2.produce("t", 0, &[Record::new(vec![7])], ClientLocality::InCluster, None)
+                .unwrap();
+        });
+        let mut cons = Consumer::new(c, ClientLocality::InCluster);
+        cons.assign(vec![("t".into(), 0)]);
+        let t0 = Instant::now();
+        let batches = cons.poll_batches_wait(10, Duration::from_secs(5)).unwrap();
+        assert_eq!(batches.iter().map(|b| b.len()).sum::<usize>(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        h.join().unwrap();
     }
 
     #[test]

@@ -8,9 +8,11 @@
 //! Kafka ships). Committed offsets are stored per group so a replacement
 //! replica resumes where the dead one stopped.
 
+use super::notify::WaitSet;
 use super::TopicPartition;
 use crate::util::clock::TimestampMs;
 use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Assignor {
@@ -42,6 +44,10 @@ pub(crate) struct GroupState {
     /// Topics this group subscribes to (set by the first joiner; later
     /// joins extend it).
     pub topics: Vec<String>,
+    /// Members parked in a blocking poll; membership changes signal it
+    /// so they refresh their assignment immediately instead of on the
+    /// next heartbeat interval.
+    pub wait_set: Arc<WaitSet>,
 }
 
 impl GroupState {
@@ -53,6 +59,7 @@ impl GroupState {
             assignments: HashMap::new(),
             committed: HashMap::new(),
             topics: Vec::new(),
+            wait_set: Arc::new(WaitSet::new()),
         }
     }
 
@@ -107,8 +114,10 @@ impl GroupState {
     }
 
     /// Recompute assignments over `partitions` (all partitions of all
-    /// subscribed topics, in topic order).
+    /// subscribed topics, in topic order) and wake parked members so
+    /// they pick up the new generation at once.
     pub fn rebalance(&mut self, partitions: &[TopicPartition]) {
+        self.wait_set.notify_all();
         self.assignments.clear();
         let members = self.member_ids();
         if members.is_empty() {

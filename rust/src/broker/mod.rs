@@ -22,15 +22,49 @@
 //!   ([`RecordBatch`]), consumer polls and retry buffers all share that
 //!   allocation — the paper's "data chunks transferred without
 //!   modifications";
+//! * an **event-driven consume path**: nothing on the broker sleeps or
+//!   spin-polls. Idle consumers park on condvar waiters ([`notify`]) and
+//!   are pushed awake by the events they care about;
 //! * a **simulated network profile** (external vs in-cluster link
 //!   latency) so the Tables I/II latency columns can be reproduced on a
 //!   single machine — see DESIGN.md §Table I/II latency model.
+//!
+//! # Data-flow scheduling: the notify/wakeup architecture
+//!
+//! ```text
+//!  Producer::flush_partition          Consumer::poll_wait / poll_batches_wait
+//!        │                                       │
+//!        ▼                                       ▼ (empty poll)
+//!  Cluster::produce ──► Partition::append_batch  Cluster::wait_for_data
+//!        │                      │                        │
+//!        │              (one signal/batch)       one Waiter registered in
+//!        │                      ▼                every assigned partition's
+//!        │             partition WaitSet ◄────── WaitSet (+ the group's)
+//!        │                      │                        │
+//!        │                      └── notify_all ──► Waiter::wake ─► re-poll,
+//!        │                                                         deliver
+//!  Cluster::join/leave/heartbeat/expire
+//!        └── GroupState::rebalance ─► group WaitSet ─► parked members
+//!                                       refresh assignment immediately
+//! ```
+//!
+//! Protocol, in order: **register** the waiter with every relevant
+//! [`notify::WaitSet`], **snapshot** the waiter generation, **check**
+//! for data, then **park** ([`notify::Waiter::wait_until`]). An append
+//! or rebalance landing between the check and the park has already
+//! bumped the generation, so the park returns immediately — there is no
+//! lost-wakeup window and therefore no need for the 1 ms sleep-poll
+//! loops this design replaced. Idle consumers cost zero CPU; wakeup
+//! latency is condvar latency (microseconds, measured by the
+//! `consumer_wakeup_latency` bench case), and a source with no parked
+//! consumers pays one atomic load per event.
 
 mod cluster;
 mod consumer;
 mod group;
 mod log;
 mod net;
+pub mod notify;
 mod partition;
 mod producer;
 mod record;
@@ -41,6 +75,7 @@ pub use consumer::Consumer;
 pub use group::{Assignor, GroupMembership};
 pub use log::{CleanupPolicy, LogConfig, SegmentedLog};
 pub use net::{ClientLocality, NetProfile};
+pub use notify::{WaitSet, Waiter};
 pub use partition::Partition;
 pub use producer::{Acks, Producer, ProducerConfig};
 pub use record::{ConsumedRecord, Record, RecordBatch};

@@ -1,0 +1,278 @@
+//! The wakeup subsystem: event-driven waits replacing every sleep-poll
+//! loop on the consume path.
+//!
+//! Built from two pieces, both plain `std::sync` (no async runtime — the
+//! vendored build is hermetic):
+//!
+//! * [`Waiter`] — one parked thread. A `Mutex<u64>` generation counter
+//!   plus a `Condvar`. The counter closes the lost-wakeup race: a
+//!   consumer snapshots the generation *before* checking for data, so a
+//!   produce that lands between the check and the park has already
+//!   bumped the generation and [`Waiter::wait_until`] returns
+//!   immediately instead of sleeping through the notification.
+//! * [`WaitSet`] — one event source (a partition's appends, a consumer
+//!   group's rebalances, the back-end control log). Waiters register,
+//!   the source calls [`WaitSet::notify_all`] when its state changes,
+//!   every registered waiter is woken. A single waiter can be registered
+//!   with many wait-sets at once — that is how a consumer parks across
+//!   *all* of its assigned partitions under one condvar.
+//!
+//! The notify fast path is an atomic waiter-count check, so sources pay
+//! ~one atomic load per event while nobody is parked — appends on a
+//! busy partition with no idle consumers stay as cheap as before the
+//! wakeup system existed.
+//!
+//! The condvar discipline itself (absolute-deadline timed wait,
+//! spurious-wakeup safe) is the crate-wide [`wait_deadline`] primitive
+//! in [`crate::util::sync`], shared with [`crate::exec`]'s channels
+//! (`recv_deadline`/`recv_timeout`) and re-exported here.
+
+pub use crate::util::sync::wait_deadline;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// The one-shot wait protocol every blocking consume path uses:
+/// **register** one fresh waiter with every `set`, **snapshot** its
+/// generation, **check** `changed`, then **park** until woken or
+/// `deadline`. An event landing between the check and the park has
+/// already bumped the generation, so the park returns immediately —
+/// no lost wakeup. Returns `true` when `changed` held or a wakeup
+/// arrived, `false` on a quiet timeout; registrations are always
+/// removed before returning.
+pub fn wait_any(sets: &[&WaitSet], changed: impl Fn() -> bool, deadline: Instant) -> bool {
+    let waiter = Waiter::new();
+    for s in sets {
+        s.register(&waiter);
+    }
+    let seen = waiter.generation();
+    let ready = changed() || waiter.wait_until(seen, deadline) || changed();
+    for s in sets {
+        s.deregister(&waiter);
+    }
+    ready
+}
+
+#[derive(Debug, Default)]
+struct WaiterInner {
+    generation: Mutex<u64>,
+    cv: Condvar,
+}
+
+/// One parkable thread. Clones share the same generation/condvar, so a
+/// waiter can be handed to any number of [`WaitSet`]s.
+#[derive(Debug, Clone, Default)]
+pub struct Waiter {
+    inner: Arc<WaiterInner>,
+}
+
+impl Waiter {
+    pub fn new() -> Waiter {
+        Waiter::default()
+    }
+
+    /// Snapshot the generation. Take it *before* checking whatever
+    /// condition you are about to park on.
+    pub fn generation(&self) -> u64 {
+        *self.inner.generation.lock().unwrap()
+    }
+
+    /// Wake the parked thread (bumps the generation so an about-to-park
+    /// thread does not sleep through this wakeup).
+    pub fn wake(&self) {
+        let mut g = self.inner.generation.lock().unwrap();
+        *g = g.wrapping_add(1);
+        drop(g);
+        self.inner.cv.notify_all();
+    }
+
+    /// Park until the generation moves past `seen` or `deadline` passes.
+    /// Returns `true` when woken by [`Waiter::wake`], `false` on timeout.
+    pub fn wait_until(&self, seen: u64, deadline: Instant) -> bool {
+        let mut g = self.inner.generation.lock().unwrap();
+        while *g == seen {
+            let (guard, timed_out) = wait_deadline(&self.inner.cv, g, deadline);
+            g = guard;
+            if timed_out {
+                return *g != seen;
+            }
+        }
+        true
+    }
+
+    /// Two handles to the same underlying waiter?
+    pub fn ptr_eq(a: &Waiter, b: &Waiter) -> bool {
+        Arc::ptr_eq(&a.inner, &b.inner)
+    }
+}
+
+/// A set of registered [`Waiter`]s attached to one event source.
+#[derive(Debug, Default)]
+pub struct WaitSet {
+    waiters: Mutex<Vec<Waiter>>,
+    /// Mirror of `waiters.len()` so `notify_all` can skip the mutex
+    /// entirely when nobody is parked (the common case on a hot path).
+    count: AtomicUsize,
+}
+
+impl WaitSet {
+    pub fn new() -> WaitSet {
+        WaitSet::default()
+    }
+
+    /// Register a waiter for future notifications. Register *before*
+    /// checking the condition you intend to park on.
+    pub fn register(&self, waiter: &Waiter) {
+        let mut ws = self.waiters.lock().unwrap();
+        ws.push(waiter.clone());
+        self.count.store(ws.len(), Ordering::SeqCst);
+    }
+
+    /// Remove every registration of `waiter` (by identity).
+    pub fn deregister(&self, waiter: &Waiter) {
+        let mut ws = self.waiters.lock().unwrap();
+        ws.retain(|w| !Waiter::ptr_eq(w, waiter));
+        self.count.store(ws.len(), Ordering::SeqCst);
+    }
+
+    /// Wake every registered waiter. Near-free when none are parked.
+    pub fn notify_all(&self) {
+        if self.count.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let ws = self.waiters.lock().unwrap();
+        for w in ws.iter() {
+            w.wake();
+        }
+    }
+
+    /// Number of currently registered waiters.
+    pub fn len(&self) -> usize {
+        self.count.load(Ordering::SeqCst)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Test-only delay built on the waiter itself (a fresh waiter nobody
+/// wakes parks until its deadline): broker/coordinator code — tests
+/// included — never blocks on anything but these waiters.
+#[cfg(test)]
+pub(crate) fn pause(d: std::time::Duration) {
+    let w = Waiter::new();
+    let seen = w.generation();
+    w.wait_until(seen, Instant::now() + d);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn wake_before_wait_returns_immediately() {
+        // The lost-wakeup guard: a wake that lands after the generation
+        // snapshot but before the park must not be slept through.
+        let w = Waiter::new();
+        let seen = w.generation();
+        w.wake();
+        let t0 = Instant::now();
+        assert!(w.wait_until(seen, Instant::now() + Duration::from_secs(5)));
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn wait_times_out_without_wake() {
+        let w = Waiter::new();
+        let seen = w.generation();
+        let t0 = Instant::now();
+        assert!(!w.wait_until(seen, Instant::now() + Duration::from_millis(20)));
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn cross_thread_wake_is_fast() {
+        let w = Waiter::new();
+        let w2 = w.clone();
+        let seen = w.generation();
+        let h = std::thread::spawn(move || {
+            pause(Duration::from_millis(20));
+            w2.wake();
+        });
+        let t0 = Instant::now();
+        assert!(w.wait_until(seen, Instant::now() + Duration::from_secs(5)));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn waitset_notifies_all_registered() {
+        let set = WaitSet::new();
+        let a = Waiter::new();
+        let b = Waiter::new();
+        set.register(&a);
+        set.register(&b);
+        assert_eq!(set.len(), 2);
+        let (ga, gb) = (a.generation(), b.generation());
+        set.notify_all();
+        assert!(a.wait_until(ga, Instant::now()));
+        assert!(b.wait_until(gb, Instant::now()));
+    }
+
+    #[test]
+    fn deregistered_waiter_not_notified() {
+        let set = WaitSet::new();
+        let a = Waiter::new();
+        set.register(&a);
+        set.deregister(&a);
+        assert!(set.is_empty());
+        let seen = a.generation();
+        set.notify_all();
+        assert_eq!(a.generation(), seen);
+    }
+
+    #[test]
+    fn one_waiter_across_many_sets() {
+        let sets: Vec<WaitSet> = (0..4).map(|_| WaitSet::new()).collect();
+        let w = Waiter::new();
+        for s in &sets {
+            s.register(&w);
+        }
+        let seen = w.generation();
+        sets[3].notify_all(); // any one source wakes the waiter
+        assert!(w.wait_until(seen, Instant::now()));
+        for s in &sets {
+            s.deregister(&w);
+            assert!(s.is_empty());
+        }
+    }
+
+    #[test]
+    fn wait_any_observes_event_raced_with_registration() {
+        // `changed` already true at park time: no wait happens at all.
+        let set = WaitSet::new();
+        let t0 = Instant::now();
+        assert!(wait_any(&[&set], || true, t0 + Duration::from_secs(5)));
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        assert!(set.is_empty());
+    }
+
+    #[test]
+    fn wait_any_wakes_on_notify_and_times_out_quiet() {
+        let set = Arc::new(WaitSet::new());
+        let s2 = set.clone();
+        let h = std::thread::spawn(move || {
+            pause(Duration::from_millis(20));
+            s2.notify_all();
+        });
+        let t0 = Instant::now();
+        assert!(wait_any(&[&set], || false, t0 + Duration::from_secs(5)));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        h.join().unwrap();
+        let t0 = Instant::now();
+        assert!(!wait_any(&[&set], || false, t0 + Duration::from_millis(20)));
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+}

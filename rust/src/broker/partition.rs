@@ -6,9 +6,11 @@
 //! exercises via `kill_broker`.
 
 use super::log::{LogConfig, SegmentedLog};
+use super::notify::WaitSet;
 use super::record::Record;
 use crate::util::clock::SharedClock;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Idempotent-producer state: highest sequence number seen per producer.
 #[derive(Debug, Default)]
@@ -25,6 +27,10 @@ pub struct Partition {
     pub isr: Vec<usize>,
     log: SegmentedLog,
     producer_seqs: ProducerSeqs,
+    /// Consumers parked on this partition; appends signal it. Shared
+    /// (`Arc`) so [`super::Topic`] can hand out registration handles
+    /// without taking the partition mutex.
+    wait_set: Arc<WaitSet>,
 }
 
 impl Partition {
@@ -45,12 +51,53 @@ impl Partition {
             isr,
             log: SegmentedLog::new(config, clock),
             producer_seqs: ProducerSeqs::default(),
+            wait_set: Arc::new(WaitSet::new()),
         }
     }
 
+    /// The wait-set consumers park on to be woken by appends.
+    pub fn wait_set(&self) -> &Arc<WaitSet> {
+        &self.wait_set
+    }
+
     /// Append, de-duplicating on `(producer_id, seq)` when provided —
-    /// the exactly-once path. Returns `(offset, was_duplicate)`.
+    /// the exactly-once path. Returns `(offset, was_duplicate)` and
+    /// wakes any consumer parked on this partition.
     pub fn append(
+        &mut self,
+        record: Record,
+        producer_seq: Option<(u64, u64)>,
+    ) -> (u64, bool) {
+        let res = self.append_quiet(record, producer_seq);
+        self.wait_set.notify_all();
+        res
+    }
+
+    /// Append a whole message set under the one lock hold the caller
+    /// already has, signalling parked consumers **once** for the batch
+    /// instead of once per record. Returns the base offset of the first
+    /// non-duplicate append (`None` = the entire batch was an idempotent
+    /// replay).
+    pub fn append_batch(
+        &mut self,
+        records: &[Record],
+        producer_seq: Option<(u64, u64)>,
+    ) -> Option<u64> {
+        let mut base = None;
+        for (i, r) in records.iter().enumerate() {
+            let seq = producer_seq.map(|(pid, s)| (pid, s + i as u64));
+            let (off, dup) = self.append_quiet(r.clone(), seq);
+            if base.is_none() && !dup {
+                base = Some(off);
+            }
+        }
+        if !records.is_empty() {
+            self.wait_set.notify_all();
+        }
+        base
+    }
+
+    fn append_quiet(
         &mut self,
         record: Record,
         producer_seq: Option<(u64, u64)>,
@@ -138,6 +185,37 @@ mod tests {
         assert_eq!((o0, o1), (0, 1));
         assert!(!dup0);
         assert_eq!(p.read(0, 10).len(), 2);
+    }
+
+    #[test]
+    fn append_signals_parked_waiter() {
+        use crate::broker::notify::Waiter;
+        let mut p = part();
+        let waiter = Waiter::new();
+        p.wait_set().register(&waiter);
+        let seen = waiter.generation();
+        p.append(Record::new(vec![1]), None);
+        // Generation advanced => a parked consumer would have woken.
+        assert!(waiter.wait_until(seen, std::time::Instant::now()));
+    }
+
+    #[test]
+    fn append_batch_appends_all_and_signals() {
+        use crate::broker::notify::Waiter;
+        let mut p = part();
+        let waiter = Waiter::new();
+        p.wait_set().register(&waiter);
+        let seen = waiter.generation();
+        let batch: Vec<Record> = (0..4u8).map(|i| Record::new(vec![i])).collect();
+        let base = p.append_batch(&batch, None);
+        assert_eq!(base, Some(0));
+        assert_eq!(p.len(), 4);
+        assert!(waiter.wait_until(seen, std::time::Instant::now()));
+        // Idempotent replay of the same seq range: no base, no growth.
+        let (_, d) = p.append(Record::new(vec![9]), Some((3, 1)));
+        assert!(!d);
+        assert_eq!(p.append_batch(&batch[..1], Some((3, 1))), None);
+        assert_eq!(p.len(), 5);
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! A topic: an ordered set of partitions, each an independent log.
 
 use super::log::LogConfig;
+use super::notify::WaitSet;
 use super::partition::Partition;
 use super::record::{Record, RecordBatch};
 use crate::util::clock::SharedClock;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 #[derive(Debug)]
 pub struct Topic {
@@ -12,6 +14,9 @@ pub struct Topic {
     /// allocation instead of re-allocating the topic string per fetch.
     pub name: Arc<str>,
     partitions: Vec<Mutex<Partition>>,
+    /// Per-partition wait-set handles (clones of each partition's own),
+    /// so consumers register without touching the partition mutex.
+    wait_sets: Vec<Arc<WaitSet>>,
 }
 
 impl Topic {
@@ -28,7 +33,7 @@ impl Topic {
     ) -> Topic {
         let base = fxhash(name.as_bytes()) as usize;
         let rf = replication_factor.clamp(1, num_brokers.max(1));
-        let partitions = (0..num_partitions)
+        let partitions: Vec<Mutex<Partition>> = (0..num_partitions)
             .map(|p| {
                 let leader = (base + p as usize) % num_brokers.max(1);
                 let replicas: Vec<usize> =
@@ -43,9 +48,14 @@ impl Topic {
                 ))
             })
             .collect();
+        let wait_sets = partitions
+            .iter()
+            .map(|p| p.lock().unwrap().wait_set().clone())
+            .collect();
         Topic {
             name: Arc::from(name),
             partitions,
+            wait_sets,
         }
     }
 
@@ -55,6 +65,37 @@ impl Topic {
 
     pub fn partition(&self, p: u32) -> Option<&Mutex<Partition>> {
         self.partitions.get(p as usize)
+    }
+
+    /// The wait-set appends to partition `p` signal. Registration does
+    /// not take the partition mutex.
+    pub fn wait_set(&self, p: u32) -> Option<&Arc<WaitSet>> {
+        self.wait_sets.get(p as usize)
+    }
+
+    /// Is there a record at or past `position` in partition `p`?
+    pub fn has_data(&self, p: u32, position: u64) -> bool {
+        match self.partitions.get(p as usize) {
+            Some(pm) => pm.lock().unwrap().latest_offset() > position,
+            None => false,
+        }
+    }
+
+    /// Park until any listed `(partition, position)` cursor has data
+    /// behind it or `deadline` passes, under **one** waiter across all
+    /// the partitions ([`super::notify::wait_any`]'s register → snapshot
+    /// → check → park protocol). Returns `true` when data is (or may
+    /// be) available, `false` on timeout with nothing to read.
+    pub fn wait_for_data(&self, positions: &[(u32, u64)], deadline: Instant) -> bool {
+        let sets: Vec<&WaitSet> = positions
+            .iter()
+            .filter_map(|&(p, _)| self.wait_set(p).map(|ws| &**ws))
+            .collect();
+        super::notify::wait_any(
+            &sets,
+            || positions.iter().any(|&(p, pos)| self.has_data(p, pos)),
+            deadline,
+        )
     }
 
     /// Read up to `max` records of partition `p` starting at `from` as
@@ -156,6 +197,42 @@ mod tests {
         let t = topic(2);
         assert!(t.partition(2).is_none());
         assert!(t.fetch_batch(2, 0, 10).is_none());
+    }
+
+    #[test]
+    fn wait_for_data_wakes_on_append_to_any_partition() {
+        let t = Arc::new(topic(2));
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || {
+            super::super::notify::pause(std::time::Duration::from_millis(20));
+            t2.partition(1).unwrap().lock().unwrap().append(Record::new(vec![1]), None);
+        });
+        let t0 = Instant::now();
+        assert!(t.wait_for_data(&[(0, 0), (1, 0)], t0 + std::time::Duration::from_secs(5)));
+        assert!(t0.elapsed() < std::time::Duration::from_secs(1));
+        h.join().unwrap();
+        // Registrations are cleaned up.
+        assert!(t.wait_set(0).unwrap().is_empty());
+        assert!(t.wait_set(1).unwrap().is_empty());
+    }
+
+    #[test]
+    fn wait_for_data_times_out_without_appends() {
+        let t = topic(1);
+        let t0 = Instant::now();
+        assert!(!t.wait_for_data(&[(0, 0)], t0 + std::time::Duration::from_millis(20)));
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(20));
+    }
+
+    #[test]
+    fn wait_for_data_returns_immediately_when_behind() {
+        let t = topic(1);
+        t.partition(0).unwrap().lock().unwrap().append(Record::new(vec![1]), None);
+        let t0 = Instant::now();
+        assert!(t.wait_for_data(&[(0, 0)], t0 + std::time::Duration::from_secs(5)));
+        assert!(t0.elapsed() < std::time::Duration::from_millis(100));
+        // Cursor at the end => nothing behind it.
+        assert!(!t.has_data(0, 1));
     }
 
     #[test]

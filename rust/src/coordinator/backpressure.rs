@@ -6,10 +6,16 @@
 //! unbounded memory growth.
 
 use crate::broker::{ClusterHandle, Producer, ProducerConfig, Record};
-use crate::exec::{bounded, CancelToken, Sender};
+use crate::exec::{bounded, CancelToken, RecvError, Sender};
 use crate::metrics::Registry;
 use anyhow::Result;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long the drain lets records accumulate in the producer's batch
+/// buffer before forcing a flush when the intake goes quiet. Bounds the
+/// broker-visible latency a buffered record can suffer mid-stream.
+const DRAIN_LINGER: Duration = Duration::from_millis(5);
 
 pub struct IngestController {
     tx: Option<Sender<(String, Record)>>,
@@ -34,13 +40,30 @@ impl IngestController {
             .spawn(move || {
                 let mut producer = Producer::new(cluster, producer_config);
                 let mut sent = 0u64;
-                while let Ok((topic, rec)) = rx.recv() {
+                let mut send = |producer: &mut Producer, topic: String, rec: Record| {
                     if producer.send(&topic, rec).is_ok() {
                         sent += 1;
                         m.counter("ingest.sent").inc();
                     } else {
                         m.counter("ingest.errors").inc();
                     }
+                };
+                // Park for the first record of a window, then drain with
+                // an absolute linger deadline (computed ONCE per window,
+                // not per spin — `recv_deadline`). On a quiet linger the
+                // producer's batch buffer is flushed so no record sits
+                // unsent behind an unfilled batch.
+                'windows: while let Ok((topic, rec)) = rx.recv() {
+                    send(&mut producer, topic, rec);
+                    let deadline = Instant::now() + DRAIN_LINGER;
+                    loop {
+                        match rx.recv_deadline(deadline) {
+                            Ok((topic, rec)) => send(&mut producer, topic, rec),
+                            Err(RecvError::Timeout) => break,
+                            Err(RecvError::Disconnected) => break 'windows,
+                        }
+                    }
+                    producer.flush().ok();
                 }
                 producer.flush().ok();
                 sent
@@ -144,14 +167,10 @@ mod tests {
     #[test]
     fn offer_blocks_until_capacity_frees() {
         use std::sync::atomic::{AtomicBool, Ordering};
-        use std::time::Duration;
         let c = cluster();
         c.create_topic("t", 1);
-        let ctl = Arc::new(IngestController::start(
-            c,
-            ProducerConfig::default(),
-            2,
-        ));
+        let ctl = IngestController::start(c.clone(), ProducerConfig::default(), 2);
+        let ctl = Arc::new(ctl);
         let done = Arc::new(AtomicBool::new(false));
         let d = done.clone();
         let ctl2 = ctl.clone();
@@ -163,8 +182,34 @@ mod tests {
         });
         h.join().unwrap();
         assert!(done.load(Ordering::SeqCst));
-        // Give the drain a moment, then confirm queue drained.
-        std::thread::sleep(Duration::from_millis(50));
-        assert_eq!(ctl.queued(), 0);
+        // finish() joins the drain: everything offered must be produced.
+        let ctl = Arc::into_inner(ctl).expect("sole handle");
+        assert_eq!(ctl.finish(), 1000);
+        assert_eq!(c.topic("t").unwrap().len(), 1000);
+    }
+
+    #[test]
+    fn idle_linger_flushes_partial_batches() {
+        // With batch_size 64 and only 3 records offered, the old drain
+        // left them parked in the producer buffer until shutdown; the
+        // linger deadline must flush them to the broker while the
+        // controller stays alive.
+        let c = cluster();
+        c.create_topic("t", 1);
+        let ctl = IngestController::start(
+            c.clone(),
+            ProducerConfig { batch_size: 64, ..Default::default() },
+            16,
+        );
+        for i in 0..3u32 {
+            ctl.offer("t", Record::new(i.to_le_bytes().to_vec())).unwrap();
+        }
+        // Wait (bounded) for the linger flush — no fixed sleep.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while c.topic("t").unwrap().len() < 3 {
+            assert!(Instant::now() < deadline, "linger flush never happened");
+            std::thread::yield_now();
+        }
+        assert_eq!(ctl.finish(), 3);
     }
 }

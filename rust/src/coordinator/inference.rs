@@ -101,9 +101,12 @@ pub fn run_inference_replica(
         }
         // Batched fetch (zero-copy): requests arrive as shared-payload
         // batches; decoding reads `&[u8]` views of the log's buffers.
-        let batches = consumer.poll_batches(config.max_poll)?;
+        // When idle the replica parks across its assigned partitions and
+        // is pushed awake by the next request (or a group rebalance);
+        // the slice bounds cancellation/heartbeat latency, not wakeup
+        // latency.
+        let batches = consumer.poll_batches_wait(config.max_poll, Duration::from_millis(25))?;
         if batches.is_empty() {
-            std::thread::sleep(Duration::from_micros(200));
             continue;
         }
         // Micro-batch all pending requests through one predict call.
@@ -262,10 +265,13 @@ impl InferenceClient {
         }
         let deadline = Instant::now() + timeout;
         loop {
-            // Buffer the WHOLE poll batch before answering: the consumer
-            // position has already advanced past every returned record,
-            // so anything not kept here would be lost.
-            for rec in self.consumer.poll(64)? {
+            // Park until the output topic has records (any prediction
+            // wakes us — replicas may answer out of order). Buffer the
+            // WHOLE poll batch before answering: the consumer position
+            // has already advanced past every returned record, so
+            // anything not kept here would be lost.
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            for rec in self.consumer.poll_wait(64, remaining)? {
                 let Some(rec_key) = rec.record.get_header(REQUEST_ID_HEADER) else {
                     continue;
                 };
@@ -282,7 +288,6 @@ impl InferenceClient {
                     self.output_topic
                 ));
             }
-            std::thread::sleep(Duration::from_micros(200));
         }
     }
 

@@ -44,9 +44,11 @@ pub fn run_control_logger(
         crate::broker::Assignor::Range,
     );
     while !cancel.is_cancelled() {
-        let recs = consumer.poll(64)?;
+        // Blocking long-poll: the logger parks on the control partition
+        // and is woken the instant a control message is produced. The
+        // short slice only bounds how long cancellation can go unseen.
+        let recs = consumer.poll_wait(64, Duration::from_millis(25))?;
         if recs.is_empty() {
-            std::thread::sleep(Duration::from_millis(1));
             continue;
         }
         for rec in recs {

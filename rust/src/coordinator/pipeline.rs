@@ -380,14 +380,12 @@ impl KafkaMl {
     }
 
     /// Wait until the control logger has recorded a stream for
-    /// `deployment_id` (it consumes asynchronously).
+    /// `deployment_id` (it consumes asynchronously). Parks on the
+    /// store's control-log wait-set — the logger's `log_control` call
+    /// wakes us; there is no poll interval.
     pub fn wait_control_logged(&self, deployment_id: u64, timeout: Duration) -> Result<()> {
-        let deadline = std::time::Instant::now() + timeout;
-        while self.store.last_control_for(deployment_id).is_none() {
-            if std::time::Instant::now() >= deadline {
-                bail!("control logger never recorded deployment {deployment_id}");
-            }
-            std::thread::sleep(Duration::from_millis(2));
+        if !self.store.wait_control_logged(deployment_id, timeout) {
+            bail!("control logger never recorded deployment {deployment_id}");
         }
         Ok(())
     }

@@ -77,6 +77,10 @@ pub struct TrainingOutcome {
 /// Block until the control message for `deployment_id` arrives
 /// (Algorithm 1's `readControlStreams` loop). Ignores messages for other
 /// deployments — several jobs share the control topic.
+///
+/// The job **parks** on the control partition's wait-set between polls
+/// (no sleep-poll loop); waits run in short slices so cancellation is
+/// still observed promptly while idle.
 pub fn await_control_message(
     cluster: &ClusterHandle,
     deployment_id: u64,
@@ -84,6 +88,7 @@ pub fn await_control_message(
     timeout: Duration,
     cancel: &CancelToken,
 ) -> Result<ControlMessage> {
+    const CANCEL_SLICE: Duration = Duration::from_millis(25);
     cluster.topic_or_create(CONTROL_TOPIC);
     let mut consumer = Consumer::new(cluster.clone(), locality);
     consumer.assign(vec![(CONTROL_TOPIC.to_string(), 0)]);
@@ -92,7 +97,8 @@ pub fn await_control_message(
         if cancel.is_cancelled() {
             bail!("cancelled while waiting for control message");
         }
-        for rec in consumer.poll(64)? {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        for rec in consumer.poll_wait(64, remaining.min(CANCEL_SLICE))? {
             match ControlMessage::decode(&rec.record.value) {
                 Ok(msg) if msg.deployment_id == deployment_id => return Ok(msg),
                 Ok(_) => {} // someone else's stream
@@ -102,7 +108,6 @@ pub fn await_control_message(
         if Instant::now() >= deadline {
             bail!("timed out waiting for control message for deployment {deployment_id}");
         }
-        std::thread::sleep(Duration::from_millis(1));
     }
 }
 

@@ -5,8 +5,10 @@
 //! path needs *backpressure* (a bounded queue whose `send` blocks when
 //! the downstream is slower — §coordinator::backpressure builds on this).
 
+use crate::util::sync::wait_deadline;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 #[derive(Debug, PartialEq, Eq)]
 pub struct SendError<T>(pub T);
@@ -130,10 +132,19 @@ impl<T> Receiver<T> {
         }
     }
 
-    /// Blocking receive with timeout.
+    /// Blocking receive with a relative timeout.
     pub fn recv_timeout(&self, timeout: std::time::Duration) -> Result<T, RecvError> {
-        let deadline = std::time::Instant::now() + timeout;
+        self.recv_deadline(Instant::now() + timeout)
+    }
+
+    /// Blocking receive with an **absolute** deadline. Callers that
+    /// drain in a loop (e.g. the ingestion backpressure drain) compute
+    /// the deadline once per flush window instead of re-deriving a
+    /// relative timeout on every spin; the condvar discipline is the
+    /// crate-wide [`wait_deadline`] helper the broker's waiters share.
+    pub fn recv_deadline(&self, deadline: Instant) -> Result<T, RecvError> {
         let mut st = self.shared.queue.lock().unwrap();
+        let mut timed_out = false;
         loop {
             if let Some(item) = st.items.pop_front() {
                 drop(st);
@@ -143,16 +154,10 @@ impl<T> Receiver<T> {
             if st.senders == 0 {
                 return Err(RecvError::Disconnected);
             }
-            let now = std::time::Instant::now();
-            if now >= deadline {
+            if timed_out {
                 return Err(RecvError::Timeout);
             }
-            let (guard, _res) = self
-                .shared
-                .not_empty
-                .wait_timeout(st, deadline - now)
-                .unwrap();
-            st = guard;
+            (st, timed_out) = wait_deadline(&self.shared.not_empty, st, deadline);
         }
     }
 
@@ -295,6 +300,40 @@ mod tests {
         assert_eq!(
             rx.recv_timeout(Duration::from_millis(10)),
             Err(RecvError::Timeout)
+        );
+    }
+
+    #[test]
+    fn recv_deadline_times_out_at_deadline() {
+        let (_tx, rx) = unbounded::<u32>();
+        let t0 = Instant::now();
+        let deadline = t0 + Duration::from_millis(20);
+        assert_eq!(rx.recv_deadline(deadline), Err(RecvError::Timeout));
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        // An already-passed deadline fails fast (no park).
+        assert_eq!(rx.recv_deadline(Instant::now()), Err(RecvError::Timeout));
+    }
+
+    #[test]
+    fn recv_deadline_returns_item_sent_before_deadline() {
+        let (tx, rx) = unbounded::<u32>();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            tx.send(42).unwrap();
+        });
+        let t0 = Instant::now();
+        assert_eq!(rx.recv_deadline(t0 + Duration::from_secs(5)), Ok(42));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn recv_deadline_disconnect_beats_timeout() {
+        let (tx, rx) = unbounded::<u32>();
+        drop(tx);
+        assert_eq!(
+            rx.recv_deadline(Instant::now() + Duration::from_secs(5)),
+            Err(RecvError::Disconnected)
         );
     }
 }

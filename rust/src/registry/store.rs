@@ -8,11 +8,13 @@
 //! data streams can be *reused* (§V) and inference input formats
 //! auto-configured.
 
+use crate::broker::notify::{wait_any, WaitSet};
 use crate::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// An ML model definition. In the paper this is Keras source pasted into
 /// the Web UI; in the three-layer build it names an AOT artifact
@@ -144,11 +146,19 @@ struct State {
 pub struct Store {
     state: Mutex<State>,
     next_id: AtomicU64,
+    /// Signalled on every control-log append so pipeline callers can
+    /// park in [`Store::wait_control_logged`] instead of sleep-polling
+    /// the asynchronous control logger.
+    control_wait: WaitSet,
 }
 
 impl Store {
     pub fn new() -> Store {
-        Store { state: Mutex::new(State::default()), next_id: AtomicU64::new(1) }
+        Store {
+            state: Mutex::new(State::default()),
+            next_id: AtomicU64::new(1),
+            control_wait: WaitSet::new(),
+        }
     }
 
     fn fresh_id(&self) -> u64 {
@@ -416,6 +426,28 @@ impl Store {
 
     pub fn log_control(&self, entry: ControlLogEntry) {
         self.state.lock().unwrap().control_log.push(entry);
+        self.control_wait.notify_all();
+    }
+
+    /// Park until a control entry for `deployment_id` has been logged
+    /// (the §IV-E logger consumes asynchronously) or `timeout` passes.
+    /// Returns whether the entry is there. Loops around [`wait_any`]
+    /// because an append for a *different* deployment also wakes us.
+    pub fn wait_control_logged(&self, deployment_id: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.last_control_for(deployment_id).is_some() {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            wait_any(
+                &[&self.control_wait],
+                || self.last_control_for(deployment_id).is_some(),
+                deadline,
+            );
+        }
     }
 
     pub fn control_log(&self) -> Vec<ControlLogEntry> {
@@ -815,6 +847,40 @@ mod tests {
             .create_inference(rid, 2, "in", "out", Some(("RAW".into(), Json::Null)))
             .unwrap();
         assert_eq!(inf.replicas, 2);
+    }
+
+    #[test]
+    fn wait_control_logged_wakes_on_async_append() {
+        use std::sync::Arc;
+        let s = Arc::new(Store::new());
+        // Nothing logged: the wait times out empty-handed.
+        let t0 = Instant::now();
+        assert!(!s.wait_control_logged(7, Duration::from_millis(10)));
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            s2.log_control(ControlLogEntry {
+                deployment_id: 7,
+                topic: "data".into(),
+                partition: 0,
+                offset: 0,
+                length: 1,
+                input_format: "RAW".into(),
+                input_config: Json::Null,
+                validation_rate: 0.0,
+                total_msg: 1,
+                logged_ms: 1,
+            });
+        });
+        let t0 = Instant::now();
+        assert!(s.wait_control_logged(7, Duration::from_secs(5)));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        h.join().unwrap();
+        // Fast path: an already-logged entry returns without parking.
+        let t0 = Instant::now();
+        assert!(s.wait_control_logged(7, Duration::from_secs(5)));
+        assert!(t0.elapsed() < Duration::from_millis(100));
     }
 
     #[test]

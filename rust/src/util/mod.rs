@@ -7,6 +7,7 @@ pub mod bytes;
 pub mod clock;
 pub mod logging;
 pub mod rng;
+pub mod sync;
 
 pub use bytes::Bytes;
 pub use clock::{Clock, ManualClock, SystemClock};

@@ -1,0 +1,63 @@
+//! Shared condvar discipline for every timed wait in the codebase.
+//!
+//! [`wait_deadline`] is the one place the `Condvar::wait_timeout`
+//! remaining-time arithmetic lives. [`crate::broker::notify`]'s waiters
+//! and [`crate::exec`]'s channels (`recv_deadline`/`recv_timeout`) both
+//! build on it; callers loop on their own predicate (a spurious wakeup
+//! hands back `timed_out == false` with the predicate unchanged).
+
+use std::sync::{Condvar, MutexGuard};
+use std::time::Instant;
+
+/// Wait on `cv` until notified or `deadline` passes. Returns the
+/// re-acquired guard and whether the deadline elapsed. An
+/// already-passed deadline returns immediately without parking.
+pub fn wait_deadline<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    deadline: Instant,
+) -> (MutexGuard<'a, T>, bool) {
+    let now = Instant::now();
+    if now >= deadline {
+        return (guard, true);
+    }
+    let (guard, res) = cv
+        .wait_timeout(guard, deadline - now)
+        .expect("waiter mutex poisoned");
+    (guard, res.timed_out())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    #[test]
+    fn elapsed_deadline_returns_immediately() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = m.lock().unwrap();
+        let (_g, timed_out) = wait_deadline(&cv, g, Instant::now());
+        assert!(timed_out);
+    }
+
+    #[test]
+    fn notify_ends_wait_before_deadline() {
+        use std::sync::Arc;
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = pair.clone();
+        let h = std::thread::spawn(move || {
+            *p2.0.lock().unwrap() = true;
+            p2.1.notify_all();
+        });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut g = pair.0.lock().unwrap();
+        let mut timed_out = false;
+        while !*g && !timed_out {
+            (g, timed_out) = wait_deadline(&pair.1, g, deadline);
+        }
+        assert!(*g);
+        h.join().unwrap();
+    }
+}
