@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
                 retention_ms: Some(3_600_000),
                 retention_bytes: None,
                 cleanup_policy: CleanupPolicy::Delete,
+                ..LogConfig::default()
             },
             ..Default::default()
         },

@@ -22,8 +22,8 @@
 
 use kafka_ml::benchkit::{Bench, Report, Table};
 use kafka_ml::broker::{
-    BrokerConfig, ClientLocality, Cluster, ClusterHandle, Consumer, NetProfile, Producer,
-    ProducerConfig, Record,
+    BrokerConfig, ClientLocality, Cluster, ClusterHandle, Consumer, LogConfig, NetProfile,
+    Producer, ProducerConfig, Record, StorageMode,
 };
 use kafka_ml::util::Bytes;
 use std::time::{Duration, Instant};
@@ -253,6 +253,104 @@ fn main() -> anyhow::Result<()> {
                 ("p99_us", p99),
                 ("idle_fetches_per_s", idle_rate),
             ],
+        );
+    }
+    t.print();
+
+    // ---- tiered storage: sealed (cold/warm) vs in-memory fetch ---------------
+    // The disk-tier dividend check: a cold fetch pays one file read per
+    // sealed segment, a warm fetch decodes from the resident LRU
+    // buffers, and both must stay within sight of the pure in-memory
+    // path because record payloads are never copied — only sliced.
+    let mut t = Table::new(
+        "Tiered segment storage (20k x 1KiB, 256KiB segments): fetch source",
+        &["source", "wall (s)", "records/s", "MiB/s"],
+    );
+    let n = 20_000usize;
+    let body = Bytes::from_vec(vec![7u8; 1024]);
+    let data_dir = std::env::temp_dir().join(format!("kafka-ml-tiered-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&data_dir);
+    let tiered = BrokerConfig {
+        log: LogConfig {
+            segment_bytes: 256 * 1024,
+            retention_ms: None,
+            storage: StorageMode::Tiered {
+                data_dir: data_dir.clone(),
+            },
+            ..LogConfig::default()
+        },
+        ..Default::default()
+    };
+    let in_memory = BrokerConfig {
+        log: LogConfig {
+            segment_bytes: 256 * 1024,
+            retention_ms: None,
+            ..LogConfig::default()
+        },
+        ..Default::default()
+    };
+
+    let fill = |c: &ClusterHandle| -> anyhow::Result<()> {
+        let mut p = Producer::new(
+            c.clone(),
+            ProducerConfig {
+                batch_size: 512,
+                ..Default::default()
+            },
+        );
+        for _ in 0..n {
+            p.send_to("ts", 0, Record::new(body.clone()))?;
+        }
+        p.flush()
+    };
+    let consume_once = |c: &ClusterHandle| -> Duration {
+        let mut cons = Consumer::new(c.clone(), ClientLocality::InCluster);
+        cons.assign(vec![("ts".to_string(), 0)]);
+        let t0 = Instant::now();
+        let mut got = 0usize;
+        while got < n {
+            got += cons.poll(2048).unwrap().len();
+        }
+        t0.elapsed()
+    };
+
+    // In-memory baseline.
+    let c = Cluster::new(in_memory);
+    c.create_topic("ts", 1);
+    fill(&c)?;
+    let mem_wall = consume_once(&c);
+    drop(c);
+    // Tiered: produce, seal everything, restart, then read cold + warm.
+    {
+        let c = Cluster::new(tiered.clone());
+        c.create_topic("ts", 1);
+        fill(&c)?;
+        c.flush_storage()?;
+    }
+    let c = Cluster::new(tiered);
+    let cold_wall = consume_once(&c); // loads every sealed file
+    let warm_wall = consume_once(&c); // served from resident buffers
+    drop(c);
+    let _ = std::fs::remove_dir_all(&data_dir);
+
+    for (source, mode, wall) in [
+        ("in-memory", 0.0, mem_wall),
+        ("sealed cold (post-restart)", 1.0, cold_wall),
+        ("sealed warm (resident)", 2.0, warm_wall),
+    ] {
+        let rps = n as f64 / wall.as_secs_f64();
+        let mibs = rps * 1024.0 / (1024.0 * 1024.0);
+        t.row(&[
+            source.to_string(),
+            format!("{:.3}", wall.as_secs_f64()),
+            format!("{rps:.0}"),
+            format!("{mibs:.1}"),
+        ]);
+        report.entry(
+            "tiered_fetch",
+            // mode: 0 = in-memory, 1 = sealed cold, 2 = sealed warm
+            &[("mode", mode), ("payload_bytes", 1024.0)],
+            &[("records_per_s", rps), ("wall_s", wall.as_secs_f64())],
         );
     }
     t.print();

@@ -9,7 +9,7 @@
 //! measures.
 
 use super::group::{Assignor, GroupMembership, GroupState};
-use super::log::LogConfig;
+use super::log::{LogConfig, StorageMode};
 use super::net::{ClientLocality, NetProfile};
 use super::notify::WaitSet;
 use super::record::{ConsumedRecord, Record, RecordBatch};
@@ -69,7 +69,7 @@ impl Cluster {
         let broker_up = (0..config.num_brokers.max(1))
             .map(|_| std::sync::atomic::AtomicBool::new(true))
             .collect();
-        Arc::new(Cluster {
+        let cluster = Arc::new(Cluster {
             config,
             clock,
             topics: RwLock::new(HashMap::new()),
@@ -77,7 +77,54 @@ impl Cluster {
             broker_up,
             next_producer_id: AtomicU64::new(1),
             metrics: Registry::new(),
-        })
+        });
+        // Tiered storage: re-create every topic found under data_dir so
+        // their partitions recover sealed segments from disk. This is
+        // what makes `ReuseManager`'s availability answers survive a
+        // broker restart.
+        if let StorageMode::Tiered { data_dir } = &cluster.config.log.storage {
+            cluster.recover_topics(data_dir);
+        }
+        cluster
+    }
+
+    /// Scan `data_dir` for topic directories left by a previous run and
+    /// re-create them (with the default log config; per-topic overrides
+    /// passed to `create_topic_with` are not persisted). Missing or
+    /// fresh data dirs are simply empty — nothing to recover.
+    fn recover_topics(&self, data_dir: &std::path::Path) {
+        let Ok(entries) = std::fs::read_dir(data_dir) else {
+            return;
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if !path.is_dir() {
+                continue;
+            }
+            let mut max_partition: Option<u32> = None;
+            if let Ok(subs) = std::fs::read_dir(&path) {
+                for sub in subs.flatten() {
+                    let idx = sub.file_name().to_str().and_then(|n| n.parse::<u32>().ok());
+                    if let Some(idx) = idx {
+                        if sub.path().is_dir() {
+                            max_partition = Some(max_partition.map_or(idx, |m| m.max(idx)));
+                        }
+                    }
+                }
+            }
+            let Some(max_partition) = max_partition else {
+                continue; // no partition dirs: not a topic dir
+            };
+            let name = std::fs::read_to_string(path.join("topic.meta"))
+                .map(|s| s.trim().to_string())
+                .unwrap_or_else(|_| entry.file_name().to_string_lossy().to_string());
+            self.create_topic(&name, max_partition + 1);
+            log::info!(
+                "recovered topic '{name}' ({} partitions) from {}",
+                max_partition + 1,
+                path.display()
+            );
+        }
     }
 
     pub fn config(&self) -> &BrokerConfig {
@@ -327,6 +374,20 @@ impl Cluster {
         groups.get(group_id).map(|g| g.generation)
     }
 
+    // ---- storage -----------------------------------------------------------
+
+    /// Seal every partition's active segment to disk (tiered storage;
+    /// no-op in memory mode). Called on drop, so a clean shutdown
+    /// persists the whole log; call it explicitly for a deterministic
+    /// sync point (e.g. before simulating a restart in tests).
+    pub fn flush_storage(&self) -> Result<()> {
+        let topics: Vec<Arc<Topic>> = self.topics.read().unwrap().values().cloned().collect();
+        for t in topics {
+            t.flush_storage()?;
+        }
+        Ok(())
+    }
+
     // ---- retention ---------------------------------------------------------
 
     /// One retention sweep over every partition (Kafka's log cleaner
@@ -478,6 +539,16 @@ impl Cluster {
             }
         }
         out
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        if let StorageMode::Tiered { .. } = self.config.log.storage {
+            if let Err(e) = self.flush_storage() {
+                log::warn!("flushing tiered storage on shutdown: {e:#}");
+            }
+        }
     }
 }
 

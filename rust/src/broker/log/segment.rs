@@ -1,0 +1,380 @@
+//! Segment representations: the in-memory [`MemSegment`] (the active
+//! tier, plus every closed segment in `StorageMode::InMemory`) and the
+//! file-backed [`SealedSegment`] (closed segments in
+//! `StorageMode::Tiered`).
+//!
+//! A sealed segment keeps only its *index* in memory — offsets and
+//! frame positions, a few bytes per record — while the payload bytes
+//! live in the segment file. Reads go through a resident buffer: the
+//! whole file is loaded once into a single shared [`Bytes`] allocation
+//! and every record decoded from it is an O(1) slice view, so the
+//! zero-copy discipline of the hot path survives the disk tier. The
+//! owning [`super::SegmentedLog`] decides when buffers are loaded and
+//! evicted (LRU, bounded by `LogConfig::max_resident_bytes`).
+//!
+//! File writes are atomic (tmp + rename, the `registry/store.rs`
+//! discipline) and synced before the rename, so a crash leaves either
+//! the old file or the new file — never a half-renamed one. A torn
+//! *tail* (crash while the file data was still in flight) is caught by
+//! the per-frame checksum on recovery and truncated away.
+
+use super::format::{self, FrameError};
+use crate::broker::record::Record;
+use crate::util::bytes::Bytes;
+use crate::util::clock::TimestampMs;
+use anyhow::{Context, Result};
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// An in-memory segment: records stored as shared-payload handles.
+#[derive(Debug)]
+pub(super) struct MemSegment {
+    /// Offsets parallel to `records` — after compaction offsets are no
+    /// longer dense, so they are stored explicitly.
+    pub offsets: Vec<u64>,
+    pub records: Vec<Record>,
+    pub size_bytes: usize,
+    pub max_timestamp: TimestampMs,
+}
+
+impl MemSegment {
+    pub fn new() -> MemSegment {
+        MemSegment {
+            offsets: Vec::new(),
+            records: Vec::new(),
+            size_bytes: 0,
+            max_timestamp: 0,
+        }
+    }
+
+    pub fn first_offset(&self) -> Option<u64> {
+        self.offsets.first().copied()
+    }
+
+    pub fn last_offset(&self) -> Option<u64> {
+        self.offsets.last().copied()
+    }
+
+    pub fn push(&mut self, offset: u64, record: Record) {
+        self.size_bytes += record.size_bytes();
+        self.max_timestamp = self.max_timestamp.max(record.timestamp_ms);
+        self.offsets.push(offset);
+        self.records.push(record);
+    }
+
+    /// Append records at/past `from` to `out`, up to `max` total.
+    pub fn read_into(&self, from: u64, max: usize, out: &mut Vec<(u64, Record)>) {
+        let start = self.offsets.partition_point(|&o| o < from);
+        for i in start..self.offsets.len() {
+            if out.len() >= max {
+                return;
+            }
+            out.push((self.offsets[i], self.records[i].clone()));
+        }
+    }
+}
+
+/// A closed segment whose frames live in a file. Holds the per-record
+/// index; payloads are served from a lazily loaded resident buffer.
+#[derive(Debug)]
+pub(super) struct SealedSegment {
+    /// Base offset baked into the file name. Stable across compaction
+    /// (survivor offsets may start later; the name keeps its identity).
+    pub base: u64,
+    pub path: PathBuf,
+    pub offsets: Vec<u64>,
+    /// Byte position of each frame within the (validated) file.
+    frame_pos: Vec<u32>,
+    /// Length of the validated frame prefix of the file.
+    file_len: u64,
+    /// Retention accounting, same metric as the in-memory tier
+    /// (`Record::size_bytes` summed).
+    pub size_bytes: usize,
+    pub max_timestamp: TimestampMs,
+    /// File contents when resident. Loaded/evicted by the owning log.
+    pub resident: Option<Bytes>,
+}
+
+/// Result of scanning one segment file on open. The scan buffer is
+/// dropped after validation — recovery is a one-pass integrity check,
+/// not a read; buffers become resident lazily, on first read, so boot
+/// memory stays flat however much retention sits on disk.
+pub(super) struct RecoveredSegment {
+    pub segment: SealedSegment,
+    /// True when a torn/corrupt tail was truncated away.
+    pub torn: bool,
+}
+
+impl SealedSegment {
+    pub fn first_offset(&self) -> Option<u64> {
+        self.offsets.first().copied()
+    }
+
+    pub fn last_offset(&self) -> Option<u64> {
+        self.offsets.last().copied()
+    }
+
+    pub fn record_count(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn file_len(&self) -> u64 {
+        self.file_len
+    }
+
+    /// Encode `records` and atomically write them as the segment file
+    /// for `base` under `dir`. Returns the segment plus its encoded
+    /// buffer so the caller can admit it to the residency LRU without
+    /// re-reading the file.
+    pub fn write(
+        dir: &Path,
+        base: u64,
+        records: &[(u64, Record)],
+    ) -> Result<(SealedSegment, Bytes)> {
+        let mut buf = Vec::new();
+        let mut offsets = Vec::with_capacity(records.len());
+        let mut frame_pos = Vec::with_capacity(records.len());
+        let mut size_bytes = 0usize;
+        let mut max_timestamp: TimestampMs = 0;
+        for (off, rec) in records {
+            offsets.push(*off);
+            frame_pos.push(buf.len() as u32);
+            size_bytes += rec.size_bytes();
+            max_timestamp = max_timestamp.max(rec.timestamp_ms);
+            format::encode_frame(&mut buf, *off, rec);
+        }
+        let path = dir.join(format::segment_file_name(base));
+        write_atomic(&path, &buf)?;
+        let bytes = Bytes::from_vec(buf);
+        let segment = SealedSegment {
+            base,
+            path,
+            offsets,
+            frame_pos,
+            file_len: bytes.len() as u64,
+            size_bytes,
+            max_timestamp,
+            resident: None,
+        };
+        Ok((segment, bytes))
+    }
+
+    /// Scan one segment file, rebuilding the index from its frames. The
+    /// scan stops at the first frame that fails its length or checksum
+    /// test — a torn tail — and truncates the file to the valid prefix.
+    /// Returns `None` when not a single frame is decodable (the caller
+    /// should remove the file).
+    ///
+    /// IO errors (unreadable file) propagate; corruption does not — it
+    /// is the very condition recovery exists to repair.
+    pub fn recover(path: &Path, base: u64) -> Result<Option<RecoveredSegment>> {
+        let data = fs::read(path)
+            .with_context(|| format!("reading segment file {}", path.display()))?;
+        let total = data.len();
+        let buf = Bytes::from_vec(data);
+        let mut offsets = Vec::new();
+        let mut frame_pos = Vec::new();
+        let mut size_bytes = 0usize;
+        let mut max_timestamp: TimestampMs = 0;
+        let mut pos = 0usize;
+        let mut tear: Option<FrameError> = None;
+        while pos < total {
+            match format::decode_frame(&buf, pos) {
+                Ok(f) => {
+                    offsets.push(f.offset);
+                    frame_pos.push(pos as u32);
+                    size_bytes += f.record.size_bytes();
+                    max_timestamp = max_timestamp.max(f.record.timestamp_ms);
+                    pos = f.end;
+                }
+                Err(e) => {
+                    tear = Some(e);
+                    break;
+                }
+            }
+        }
+        let torn = pos < total;
+        if torn {
+            log::warn!(
+                "segment {}: torn tail at byte {pos}/{total} ({tear:?}); truncating",
+                path.display()
+            );
+            if let Err(e) = truncate_file(path, pos as u64) {
+                // Non-fatal: the validated prefix is still served; the
+                // junk tail will be re-detected on the next open.
+                log::warn!("could not truncate {}: {e:#}", path.display());
+            }
+        }
+        if offsets.is_empty() {
+            return Ok(None);
+        }
+        let segment = SealedSegment {
+            base,
+            path: path.to_path_buf(),
+            offsets,
+            frame_pos,
+            file_len: pos as u64,
+            size_bytes,
+            max_timestamp,
+            resident: None,
+        };
+        Ok(Some(RecoveredSegment { segment, torn }))
+    }
+
+    /// Append records at/past `from` to `out`, up to `max` total,
+    /// decoding from the resident buffer `buf`. Each record is a slice
+    /// view of `buf` — zero copies.
+    pub fn read_into(&self, buf: &Bytes, from: u64, max: usize, out: &mut Vec<(u64, Record)>) {
+        let start = self.offsets.partition_point(|&o| o < from);
+        for i in start..self.offsets.len() {
+            if out.len() >= max {
+                return;
+            }
+            match format::decode_frame(buf, self.frame_pos[i] as usize) {
+                Ok(f) => out.push((f.offset, f.record)),
+                Err(e) => {
+                    // Index and buffer disagree — should be impossible
+                    // for a buffer that passed recovery/seal. Serve what
+                    // we decoded rather than panicking the broker.
+                    log::error!(
+                        "segment {}: frame {i} undecodable ({e:?}); read stops early",
+                        self.path.display()
+                    );
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Decode every record (the compaction path).
+    pub fn decode_all(&self, buf: &Bytes) -> Result<Vec<(u64, Record)>> {
+        let mut out = Vec::with_capacity(self.offsets.len());
+        for (i, &pos) in self.frame_pos.iter().enumerate() {
+            let f = format::decode_frame(buf, pos as usize).map_err(|e| {
+                anyhow::anyhow!("segment {}: frame {i} undecodable: {e:?}", self.path.display())
+            })?;
+            out.push((f.offset, f.record));
+        }
+        Ok(out)
+    }
+}
+
+/// Write `data` to `path` atomically: write + sync a sibling tmp file,
+/// then rename over the target.
+pub(super) fn write_atomic(path: &Path, data: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = fs::File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(data).with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    fs::rename(&tmp, path).with_context(|| format!("renaming {}", path.display()))?;
+    // The rename is only crash-durable once the parent directory entry
+    // is flushed too. Best-effort: not every platform lets a directory
+    // be opened/synced, and a failure here still leaves the data pages
+    // synced — recovery would just see the pre-rename state.
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = fs::File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+fn truncate_file(path: &Path, len: u64) -> Result<()> {
+    let f = fs::OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("opening {} for truncation", path.display()))?;
+    f.set_len(len).context("set_len")?;
+    f.sync_all().context("sync")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("kafka-ml-segment-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn recs(n: u64) -> Vec<(u64, Record)> {
+        (0..n).map(|i| (i, Record::new(vec![i as u8; 32]))).collect()
+    }
+
+    #[test]
+    fn write_then_recover_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let records = recs(10);
+        let (seg, buf) = SealedSegment::write(&dir, 0, &records).unwrap();
+        assert_eq!(seg.record_count(), 10);
+        assert_eq!(seg.first_offset(), Some(0));
+        assert_eq!(seg.last_offset(), Some(9));
+        // No stray tmp file.
+        assert!(!dir.join("00000000000000000000.tmp").exists());
+
+        let back = SealedSegment::recover(&seg.path, 0).unwrap().unwrap();
+        assert!(!back.torn);
+        assert_eq!(back.segment.offsets, seg.offsets);
+        assert_eq!(back.segment.size_bytes, seg.size_bytes);
+        // The file round-trips the encoded buffer byte for byte.
+        let loaded = Bytes::from_vec(fs::read(&seg.path).unwrap());
+        assert_eq!(loaded, buf);
+
+        let mut out = Vec::new();
+        back.segment.read_into(&loaded, 3, 100, &mut out);
+        assert_eq!(out.len(), 7);
+        assert_eq!(out[0].0, 3);
+        assert_eq!(out[0].1.value, vec![3u8; 32]);
+        // Zero-copy: every decoded record slices the one resident buffer.
+        for (_, r) in &out {
+            assert!(Bytes::ptr_eq(&r.value, &loaded));
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_truncates_torn_tail() {
+        let dir = tmp_dir("torn");
+        let (seg, _) = SealedSegment::write(&dir, 0, &recs(5)).unwrap();
+        let full = fs::read(&seg.path).unwrap();
+        fs::write(&seg.path, &full[..full.len() - 3]).unwrap();
+
+        let back = SealedSegment::recover(&seg.path, 0).unwrap().unwrap();
+        assert!(back.torn);
+        assert_eq!(back.segment.record_count(), 4);
+        assert_eq!(back.segment.last_offset(), Some(3));
+        // The file itself was truncated to the valid prefix.
+        let after = fs::read(&seg.path).unwrap();
+        assert_eq!(after.len() as u64, back.segment.file_len());
+        assert!(after.len() < full.len());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_of_pure_garbage_is_none() {
+        let dir = tmp_dir("garbage");
+        let path = dir.join(format::segment_file_name(7));
+        fs::write(&path, [0xDEu8; 40]).unwrap();
+        assert!(SealedSegment::recover(&path, 7).unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mem_segment_read_window() {
+        let mut m = MemSegment::new();
+        for i in 0..10u64 {
+            m.push(i, Record::new(vec![i as u8]));
+        }
+        let mut out = Vec::new();
+        m.read_into(4, 3, &mut out);
+        assert_eq!(out.iter().map(|(o, _)| *o).collect::<Vec<_>>(), vec![4, 5, 6]);
+        assert_eq!(m.first_offset(), Some(0));
+        assert_eq!(m.last_offset(), Some(9));
+    }
+}

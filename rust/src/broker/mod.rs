@@ -9,6 +9,16 @@
 //!   `retention.ms`, delete *and* compact cleanup policies) so consumers
 //!   can seek anywhere in the log — the property Kafka-ML's stream-reuse
 //!   contribution (§V) is built on;
+//! * **tiered, durable segment storage** ([`log`]): the active segment
+//!   stays in memory while rolled segments seal to checksummed frame
+//!   files under a per-partition data dir (`StorageMode::Tiered`).
+//!   A restarted cluster recovers every topic from `data_dir` —
+//!   rescanning segment files, truncating torn tail frames — so a
+//!   `[topic:partition:offset:length]` stream reference stays
+//!   re-consumable across restarts, bounded by retention rather than
+//!   process lifetime. Sealed reads stay zero-copy: a segment file
+//!   loads once into a shared buffer (LRU-bounded residency) and every
+//!   record is a slice view of it;
 //! * **message-set batching** in the producer (linger + batch size) — the
 //!   paper's "high rate of message dispatching" feature;
 //! * **consumer groups** with heartbeats, generations and pluggable
@@ -62,7 +72,7 @@
 mod cluster;
 mod consumer;
 mod group;
-mod log;
+pub mod log;
 mod net;
 pub mod notify;
 mod partition;
@@ -73,7 +83,7 @@ mod topic;
 pub use cluster::{BrokerConfig, Cluster, ClusterHandle};
 pub use consumer::Consumer;
 pub use group::{Assignor, GroupMembership};
-pub use log::{CleanupPolicy, LogConfig, SegmentedLog};
+pub use log::{CleanupPolicy, LogConfig, SegmentedLog, StorageMode};
 pub use net::{ClientLocality, NetProfile};
 pub use notify::{WaitSet, Waiter};
 pub use partition::Partition;

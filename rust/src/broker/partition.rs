@@ -43,13 +43,19 @@ impl Partition {
         clock: SharedClock,
     ) -> Partition {
         let isr = replicas.clone();
+        // In tiered mode `open` recovers sealed segments from the
+        // partition's data dir; an unusable data dir is a fatal
+        // misconfiguration, surfaced loudly rather than degraded
+        // silently to in-memory (which would break durability).
+        let log = SegmentedLog::open(config, clock, topic, index)
+            .unwrap_or_else(|e| panic!("opening log for {topic}:{index}: {e:#}"));
         Partition {
             topic: topic.to_string(),
             index,
             leader,
             replicas,
             isr,
-            log: SegmentedLog::new(config, clock),
+            log,
             producer_seqs: ProducerSeqs::default(),
             wait_set: Arc::new(WaitSet::new()),
         }
@@ -115,8 +121,22 @@ impl Partition {
         (self.log.append(record), false)
     }
 
-    pub fn read(&self, from: u64, max: usize) -> Vec<(u64, Record)> {
+    /// Read takes `&mut self` because sealed-segment reads may load a
+    /// file into the residency LRU; callers already hold the partition
+    /// mutex, so this costs nothing extra.
+    pub fn read(&mut self, from: u64, max: usize) -> Vec<(u64, Record)> {
         self.log.read(from, max)
+    }
+
+    /// Seal the active segment to disk (tiered storage; no-op in
+    /// memory mode) so a subsequent reopen recovers every record.
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.log.flush()
+    }
+
+    /// Bytes of sealed-segment buffers currently resident in memory.
+    pub fn resident_bytes(&self) -> usize {
+        self.log.resident_bytes()
     }
 
     pub fn earliest_offset(&self) -> u64 {

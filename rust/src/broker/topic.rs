@@ -31,6 +31,22 @@ impl Topic {
         config: &LogConfig,
         clock: &SharedClock,
     ) -> Topic {
+        // Tiered storage: record the raw topic name next to the
+        // partition dirs so a restarted cluster can re-create the topic
+        // even when the directory name had to be sanitized.
+        if let Some(tdir) = config.storage.topic_dir(name) {
+            let write_meta = std::fs::create_dir_all(&tdir).and_then(|_| {
+                let meta = tdir.join("topic.meta");
+                if meta.exists() {
+                    Ok(())
+                } else {
+                    std::fs::write(meta, name)
+                }
+            });
+            if let Err(e) = write_meta {
+                log::warn!("could not write topic metadata for '{name}': {e}");
+            }
+        }
         let base = fxhash(name.as_bytes()) as usize;
         let rf = replication_factor.clamp(1, num_brokers.max(1));
         let partitions: Vec<Mutex<Partition>> = (0..num_partitions)
@@ -73,10 +89,20 @@ impl Topic {
         self.wait_sets.get(p as usize)
     }
 
-    /// Is there a record at or past `position` in partition `p`?
+    /// Is there an *actual record* at or past `position` in partition
+    /// `p`? Emptiness matters: once the whole log is retained away
+    /// (possible on the disk tier, where `flush` leaves an empty active
+    /// segment), a lagging cursor has nothing to fetch, and reporting
+    /// "ready" would turn the blocking poll into a busy spin. While any
+    /// record exists, the newest one has offset `latest_offset() - 1`
+    /// (retention deletes from the front), so `latest > position` then
+    /// guarantees a non-empty fetch.
     pub fn has_data(&self, p: u32, position: u64) -> bool {
         match self.partitions.get(p as usize) {
-            Some(pm) => pm.lock().unwrap().latest_offset() > position,
+            Some(pm) => {
+                let part = pm.lock().unwrap();
+                !part.is_empty() && part.latest_offset() > position
+            }
             None => false,
         }
     }
@@ -109,6 +135,15 @@ impl Topic {
             partition: p,
             records,
         })
+    }
+
+    /// Seal every partition's active segment to disk (tiered storage;
+    /// no-op in memory mode).
+    pub fn flush_storage(&self) -> anyhow::Result<()> {
+        for pm in &self.partitions {
+            pm.lock().unwrap().flush()?;
+        }
+        Ok(())
     }
 
     /// Total records across partitions.

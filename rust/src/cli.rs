@@ -8,7 +8,7 @@
 //! kafka-ml info     [--artifacts DIR]
 //! ```
 
-use crate::broker::ClientLocality;
+use crate::broker::{BrokerConfig, ClientLocality, LogConfig, StorageMode};
 use crate::coordinator::{KafkaMl, KafkaMlConfig, TrainParams};
 use crate::json::Json;
 use crate::ml::hcopd_dataset;
@@ -47,12 +47,18 @@ kafka-ml — ML/AI pipelines through data streams (paper reproduction)
 
 USAGE:
   kafka-ml pipeline [--samples N] [--epochs E] [--replicas R] [--artifacts DIR]
+                    [--data-dir DIR]
       Run the full Fig-1 pipeline (A-F) on the synthetic HCOPD workload.
   kafka-ml serve [--port P] [--artifacts DIR] [--state FILE.json]
+                 [--data-dir DIR]
       Boot the platform (broker + back-end + orchestrator) and serve the
       RESTful back-end until Ctrl-C; --state snapshots the registry.
   kafka-ml info [--artifacts DIR]
       Print the compiled model's artifact metadata.
+
+  --data-dir enables tiered segment storage: rolled log segments are
+  sealed to checksummed files under DIR and recovered on the next boot,
+  so retained data streams stay reusable across restarts.
 ";
 
 pub fn main_entry() {
@@ -88,6 +94,22 @@ fn artifacts_dir(flags: &BTreeMap<String, String>) -> String {
         .unwrap_or_else(|| "artifacts".to_string())
 }
 
+/// Broker config honouring `--data-dir` (tiered, durable segment
+/// storage) when given; in-memory otherwise.
+fn broker_config(flags: &BTreeMap<String, String>) -> BrokerConfig {
+    let storage = match flags.get("data-dir") {
+        Some(dir) => StorageMode::tiered(dir),
+        None => StorageMode::InMemory,
+    };
+    BrokerConfig {
+        log: LogConfig {
+            storage,
+            ..LogConfig::default()
+        },
+        ..Default::default()
+    }
+}
+
 fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
     let meta = crate::runtime::ArtifactMeta::load(artifacts_dir(flags))?;
     println!("Kafka-ML model artifacts ({})", meta.dir.display());
@@ -108,6 +130,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     let kml = KafkaMl::start(KafkaMlConfig {
         rest_port: port,
         artifact_dir: artifacts_dir(flags),
+        broker: broker_config(flags),
         ..Default::default()
     })?;
     // Optional durability: restore + periodically snapshot the back-end
@@ -148,6 +171,7 @@ fn cmd_pipeline(flags: &BTreeMap<String, String>) -> Result<()> {
     println!("== Kafka-ML pipeline (Fig 1, steps A-F) ==");
     let kml = KafkaMl::start(KafkaMlConfig {
         artifact_dir: dir,
+        broker: broker_config(flags),
         ..Default::default()
     })?;
     println!("platform up: back-end {}", kml.backend_url());
@@ -228,6 +252,18 @@ mod tests {
         assert!(parse_flags(&s(&["--epochs"])).is_err());
         let f = parse_flags(&s(&["--epochs", "x"])).unwrap();
         assert!(flag_u64(&f, "epochs", 1).is_err());
+    }
+
+    #[test]
+    fn data_dir_flag_enables_tiered_storage() {
+        let f = parse_flags(&s(&["--data-dir", "/tmp/kafka-ml-data"])).unwrap();
+        match broker_config(&f).log.storage {
+            StorageMode::Tiered { data_dir } => {
+                assert_eq!(data_dir, std::path::PathBuf::from("/tmp/kafka-ml-data"));
+            }
+            other => panic!("expected tiered storage, got {other:?}"),
+        }
+        assert_eq!(broker_config(&BTreeMap::new()).log.storage, StorageMode::InMemory);
     }
 
     #[test]

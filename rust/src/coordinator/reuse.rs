@@ -185,6 +185,7 @@ mod tests {
                     retention_ms: Some(500),
                     retention_bytes: None,
                     cleanup_policy: CleanupPolicy::Delete,
+                    ..LogConfig::default()
                 },
                 ..Default::default()
             },
@@ -208,6 +209,65 @@ mod tests {
         }
         let err = rm.resend(1, 2, ClientLocality::InCluster).unwrap_err();
         assert!(err.to_string().contains("expired"), "{err}");
+    }
+
+    #[test]
+    fn availability_survives_cluster_restart() {
+        use crate::broker::StorageMode;
+        // With tiered storage the Expired-vs-Available verdict must be
+        // answerable after a full cluster restart, from the log start
+        // recovered off the segment files on disk.
+        let data_dir = std::env::temp_dir().join(format!("kafka-ml-reuse-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&data_dir);
+        let clock = ManualClock::new(1_000);
+        let config = BrokerConfig {
+            log: LogConfig {
+                segment_bytes: 128,
+                retention_ms: Some(500),
+                retention_bytes: None,
+                cleanup_policy: CleanupPolicy::Delete,
+                storage: StorageMode::Tiered {
+                    data_dir: data_dir.clone(),
+                },
+                ..LogConfig::default()
+            },
+            ..Default::default()
+        };
+        let store = Arc::new(Store::new());
+        store.log_control(entry(1, "old-data", 0, 50));
+        store.log_control(entry(2, "live-data", 0, 10));
+        {
+            let c = Cluster::with_clock(config.clone(), Arc::new(clock.clone()));
+            fill(&c, "old-data", 50);
+            clock.advance_ms(60_000);
+            fill(&c, "old-data", 5); // fresh tail so old segments can drop
+            c.run_retention(); // deletes the expired segment *files*
+            fill(&c, "live-data", 10);
+            let rm = ReuseManager::new(c.clone(), store.clone());
+            // Pre-restart verdicts, for comparison below.
+            let old = rm.availability(&entry(1, "old-data", 0, 50));
+            assert!(matches!(old, StreamAvailability::Expired { .. }));
+            let live = rm.availability(&entry(2, "live-data", 0, 10));
+            assert_eq!(live, StreamAvailability::Available);
+            c.flush_storage().unwrap();
+        } // cluster dropped: the "restart"
+
+        let c = Cluster::with_clock(config, Arc::new(clock.clone()));
+        let rm = ReuseManager::new(c.clone(), store);
+        match rm.availability(&entry(1, "old-data", 0, 50)) {
+            StreamAvailability::Expired { log_start } => {
+                assert!(log_start > 0, "recovered log start must reflect retention");
+            }
+            other => panic!("expected Expired after restart, got {other:?}"),
+        }
+        let live = rm.availability(&entry(2, "live-data", 0, 10));
+        assert_eq!(live, StreamAvailability::Available);
+        // And the still-available stream is actually re-sendable.
+        let msg = rm.resend(2, 3, ClientLocality::InCluster).unwrap();
+        assert_eq!(msg.stream.format(), "[live-data:0:0:10]");
+        drop(rm);
+        drop(c);
+        let _ = std::fs::remove_dir_all(&data_dir);
     }
 
     #[test]

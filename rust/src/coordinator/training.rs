@@ -403,6 +403,7 @@ mod tests {
                     retention_ms: Some(500),
                     retention_bytes: None,
                     cleanup_policy: CleanupPolicy::Delete,
+                    ..LogConfig::default()
                 },
                 ..Default::default()
             },

@@ -65,6 +65,7 @@ fn prop_retention_preserves_suffix_contiguity() {
                 retention_bytes: Some(512),
                 retention_ms: None,
                 cleanup_policy: CleanupPolicy::Delete,
+                ..LogConfig::default()
             },
             Arc::new(clock),
         );
@@ -251,6 +252,7 @@ fn prop_roundtrip_survives_retention_as_contiguous_suffix() {
                 retention_bytes: Some(600),
                 retention_ms: None,
                 cleanup_policy: CleanupPolicy::Delete,
+                ..LogConfig::default()
             },
             ..Default::default()
         });
