@@ -355,6 +355,56 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
+    // ---- native training-step latency -----------------------------------------
+    // The pure-Rust backend is the engine every artifact-less training
+    // Job runs on, so its per-step latency is a platform number worth
+    // tracking: one dense forward + softmax-CE backward + Adam update
+    // on the default spec (8 → 16 → 4 MLP, batch 10).
+    let mut t = Table::new(
+        "Native backend train_step (8→16→4 MLP, batch 10, 2000 steps)",
+        &["backend", "steps/s", "µs/step", "final loss"],
+    );
+    {
+        use kafka_ml::runtime::{BackendSelect, Engine};
+        let engine = Engine::load_with("artifacts", BackendSelect::Native)?;
+        let meta = engine.meta();
+        let ds = kafka_ml::ml::separable_dataset(meta.batch, meta.input_dim, meta.classes, 12);
+        let mut x = Vec::with_capacity(meta.batch * meta.input_dim);
+        let mut y = Vec::with_capacity(meta.batch);
+        for s in &ds.samples {
+            x.extend_from_slice(&s.features);
+            y.push(s.label.unwrap());
+        }
+        let mut state = engine.train_state(&engine.init_params()?)?;
+        for _ in 0..100 {
+            engine.train_step(&mut state, &x, &y)?; // warmup (page-in, branch warm)
+        }
+        let steps = 2000usize;
+        let t0 = Instant::now();
+        let mut loss = 0f32;
+        for _ in 0..steps {
+            loss = engine.train_step(&mut state, &x, &y)?.0;
+        }
+        let wall = t0.elapsed();
+        let sps = steps as f64 / wall.as_secs_f64();
+        let us = wall.as_secs_f64() * 1e6 / steps as f64;
+        t.row(&[
+            engine.backend_name().to_string(),
+            format!("{sps:.0}"),
+            format!("{us:.2}"),
+            format!("{loss:.5}"),
+        ]);
+        report.entry(
+            "native_train_step",
+            &[
+                ("batch", meta.batch as f64),
+                ("weights", meta.total_weights() as f64),
+            ],
+            &[("steps_per_s", sps), ("us_per_step", us)],
+        );
+    }
+    t.print();
+
     report.save(REPORT_PATH)?;
     println!("\nwrote {REPORT_PATH} ({} entries)", report.len());
     Ok(())

@@ -88,6 +88,7 @@ fn main() -> anyhow::Result<()> {
         input_config: raw(),
         locality: ClientLocality::External, // plain script outside the cluster
         max_poll: 32,
+        backend: kafka_ml::runtime::BackendSelect::Auto,
     };
     let cancel = CancelToken::new();
     let cluster = kml.cluster.clone();

@@ -12,6 +12,7 @@ use crate::broker::{BrokerConfig, ClientLocality, LogConfig, StorageMode};
 use crate::coordinator::{KafkaMl, KafkaMlConfig, TrainParams};
 use crate::json::Json;
 use crate::ml::hcopd_dataset;
+use crate::runtime::BackendSelect;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -47,18 +48,24 @@ kafka-ml — ML/AI pipelines through data streams (paper reproduction)
 
 USAGE:
   kafka-ml pipeline [--samples N] [--epochs E] [--replicas R] [--artifacts DIR]
-                    [--data-dir DIR]
+                    [--data-dir DIR] [--backend auto|pjrt|native]
       Run the full Fig-1 pipeline (A-F) on the synthetic HCOPD workload.
   kafka-ml serve [--port P] [--artifacts DIR] [--state FILE.json]
-                 [--data-dir DIR]
+                 [--data-dir DIR] [--backend auto|pjrt|native]
       Boot the platform (broker + back-end + orchestrator) and serve the
       RESTful back-end until Ctrl-C; --state snapshots the registry.
-  kafka-ml info [--artifacts DIR]
-      Print the compiled model's artifact metadata.
+  kafka-ml info [--artifacts DIR] [--backend auto|pjrt|native]
+      Print the model's metadata and which execution backend loads.
 
   --data-dir enables tiered segment storage: rolled log segments are
   sealed to checksummed files under DIR and recovered on the next boot,
   so retained data streams stay reusable across restarts.
+
+  --backend picks the model execution engine: 'pjrt' compiles the AOT
+  HLO artifacts (needs `make artifacts` + a real xla-rs link), 'native'
+  is the pure-Rust MLP engine that needs no artifacts at all, and
+  'auto' (default) prefers PJRT when available and falls back to
+  native.
 ";
 
 pub fn main_entry() {
@@ -94,6 +101,14 @@ fn artifacts_dir(flags: &BTreeMap<String, String>) -> String {
         .unwrap_or_else(|| "artifacts".to_string())
 }
 
+/// The `--backend` knob (`auto` when absent).
+fn backend_flag(flags: &BTreeMap<String, String>) -> Result<BackendSelect> {
+    match flags.get("backend") {
+        Some(v) => v.parse(),
+        None => Ok(BackendSelect::Auto),
+    }
+}
+
 /// Broker config honouring `--data-dir` (tiered, durable segment
 /// storage) when given; in-memory otherwise.
 fn broker_config(flags: &BTreeMap<String, String>) -> BrokerConfig {
@@ -111,14 +126,19 @@ fn broker_config(flags: &BTreeMap<String, String>) -> BrokerConfig {
 }
 
 fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
-    let meta = crate::runtime::ArtifactMeta::load(artifacts_dir(flags))?;
-    println!("Kafka-ML model artifacts ({})", meta.dir.display());
+    let engine = crate::runtime::Engine::load_with(artifacts_dir(flags), backend_flag(flags)?)?;
+    let meta = engine.meta();
+    println!("Kafka-ML model ({})", meta.dir.display());
+    println!("  backend   : {} ({})", engine.backend_name(), engine.platform());
     println!("  input_dim : {}", meta.input_dim);
     println!("  hidden    : {:?}", meta.hidden);
     println!("  classes   : {}", meta.classes);
     println!("  batch     : {}", meta.batch);
     println!("  lr        : {}", meta.lr);
     println!("  weights   : {}", meta.total_weights());
+    if meta.artifacts.is_empty() {
+        println!("  artifact  : (none — artifact-less native model)");
+    }
     for (name, info) in &meta.artifacts {
         println!("  artifact  : {name} <- {}", info.file);
     }
@@ -131,6 +151,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
         rest_port: port,
         artifact_dir: artifacts_dir(flags),
         broker: broker_config(flags),
+        backend: backend_flag(flags)?,
         ..Default::default()
     })?;
     // Optional durability: restore + periodically snapshot the back-end
@@ -172,6 +193,7 @@ fn cmd_pipeline(flags: &BTreeMap<String, String>) -> Result<()> {
     let kml = KafkaMl::start(KafkaMlConfig {
         artifact_dir: dir,
         broker: broker_config(flags),
+        backend: backend_flag(flags)?,
         ..Default::default()
     })?;
     println!("platform up: back-end {}", kml.backend_url());
@@ -264,6 +286,17 @@ mod tests {
             other => panic!("expected tiered storage, got {other:?}"),
         }
         assert_eq!(broker_config(&BTreeMap::new()).log.storage, StorageMode::InMemory);
+    }
+
+    #[test]
+    fn backend_flag_parses_and_rejects() {
+        assert_eq!(backend_flag(&BTreeMap::new()).unwrap(), BackendSelect::Auto);
+        let f = parse_flags(&s(&["--backend", "native"])).unwrap();
+        assert_eq!(backend_flag(&f).unwrap(), BackendSelect::Native);
+        let f = parse_flags(&s(&["--backend", "pjrt"])).unwrap();
+        assert_eq!(backend_flag(&f).unwrap(), BackendSelect::Pjrt);
+        let f = parse_flags(&s(&["--backend", "tensorflow"])).unwrap();
+        assert!(backend_flag(&f).is_err());
     }
 
     #[test]

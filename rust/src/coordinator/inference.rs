@@ -24,7 +24,7 @@ use crate::exec::CancelToken;
 use crate::formats::registry;
 use crate::json::Json;
 use crate::registry::BackendClient;
-use crate::runtime::Engine;
+use crate::runtime::{BackendSelect, Engine};
 use anyhow::{anyhow, Result};
 use std::time::{Duration, Instant};
 
@@ -44,6 +44,8 @@ pub struct InferenceReplicaConfig {
     pub locality: ClientLocality,
     /// Max records pulled per poll (micro-batching across requests).
     pub max_poll: usize,
+    /// Execution backend for the model (`--backend` knob).
+    pub backend: BackendSelect,
 }
 
 impl InferenceReplicaConfig {
@@ -63,7 +65,8 @@ pub fn run_inference_replica(
     // downloadTrainedModelFromBackend
     let backend = BackendClient::new(&config.backend_url);
     let params_host = backend.download_model(config.result_id)?;
-    let engine = Engine::load(&config.artifact_dir)?;
+    let engine = Engine::load_with(&config.artifact_dir, config.backend)?;
+    log::info!("inference replica {member_id} running on the '{}' backend", engine.backend_name());
     let params = engine.inference_params(&params_host)?;
     // getDeserializer(input_configuration)
     let format = registry(&config.input_format, &config.input_config)?;
@@ -334,6 +337,7 @@ mod tests {
             input_config: Json::Null,
             locality: ClientLocality::InCluster,
             max_poll: 16,
+            backend: BackendSelect::Auto,
         };
         assert_eq!(cfg.group_id(), "inference-12");
     }

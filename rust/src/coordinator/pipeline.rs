@@ -30,6 +30,7 @@ use crate::orchestrator::{
 };
 use crate::registry::{api, BackendClient, Deployment, InferenceDeployment, Store, TrainingResult};
 use crate::rest::Server;
+use crate::runtime::BackendSelect;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 use std::time::Duration;
@@ -49,6 +50,10 @@ pub struct KafkaMlConfig {
     /// Broker clock override (ManualClock makes retention/expiry
     /// demonstrations deterministic).
     pub clock: Option<crate::util::clock::SharedClock>,
+    /// Execution backend every training Job / inference replica uses
+    /// (`--backend {auto,pjrt,native}`; `Auto` prefers PJRT artifacts
+    /// and falls back to the pure-Rust native engine).
+    pub backend: BackendSelect,
 }
 
 impl Default for KafkaMlConfig {
@@ -61,6 +66,7 @@ impl Default for KafkaMlConfig {
             control_logger: true,
             reconcile_every: Duration::from_millis(10),
             clock: None,
+            backend: BackendSelect::Auto,
         }
     }
 }
@@ -90,6 +96,7 @@ pub struct KafkaMl {
     server: Option<Server>,
     backend_url: String,
     artifact_dir: String,
+    backend: BackendSelect,
 }
 
 impl KafkaMl {
@@ -125,6 +132,7 @@ impl KafkaMl {
             server: Some(server),
             backend_url,
             artifact_dir: config.artifact_dir,
+            backend: config.backend,
         })
     }
 
@@ -149,6 +157,7 @@ impl KafkaMl {
                         ctx.env_u64("CONTROL_TIMEOUT_S").unwrap_or(120),
                     ),
                     locality: ClientLocality::InCluster,
+                    backend: ctx.env_or("BACKEND", "auto").parse()?,
                 };
                 let result_id = config.result_id;
                 match run_training_job(&cluster, &config, &ctx.cancel) {
@@ -185,6 +194,7 @@ impl KafkaMl {
                     input_config: info.get("input_config").clone(),
                     locality: ClientLocality::InCluster,
                     max_poll: 32,
+                    backend: ctx.env_or("BACKEND", "auto").parse()?,
                 };
                 super::inference::run_inference_replica(
                     &cluster,
@@ -250,6 +260,7 @@ impl KafkaMl {
                 .env("EPOCHS", params.epochs.to_string())
                 .env("SHUFFLE", if params.shuffle { "true" } else { "false" })
                 .env("SEED", params.seed.to_string())
+                .env("BACKEND", self.backend.as_str())
                 .resources(1000, 512);
             self.orch
                 .create_job(JobSpec::new(&format!("train-r{result_id}"), container))?;
@@ -343,6 +354,7 @@ impl KafkaMl {
             replicas,
             ContainerSpec::new("kafka-ml/inference:v1", "inference-replica")
                 .env("INFERENCE_ID", dep.id.to_string())
+                .env("BACKEND", self.backend.as_str())
                 .resources(250, 256),
         ))?;
         self.orch
@@ -418,6 +430,7 @@ mod tests {
         assert!(c.control_logger);
         assert_eq!(c.rest_port, 0);
         assert_eq!(c.artifact_dir, "artifacts");
+        assert_eq!(c.backend, BackendSelect::Auto);
         let t = TrainParams::default();
         assert_eq!(t.batch_size, 10); // the paper's training batch size
         assert!(t.shuffle);

@@ -16,9 +16,11 @@
 //! Tables I/II "data streams" column trains without containers) or
 //! wrapped as an orchestrator entrypoint by
 //! [`crate::coordinator::pipeline`] (the "& containerization" column).
-//! Each invocation loads its own PJRT [`Engine`] — exactly as each of
-//! the paper's containers loads its own TensorFlow model (and required
-//! here because PJRT handles are not `Send`).
+//! Each invocation loads its own [`Engine`] — exactly as each of the
+//! paper's containers loads its own TensorFlow model (and required
+//! here because PJRT handles are not `Send`). Which execution backend
+//! the engine uses (PJRT artifacts vs the pure-Rust native MLP) is the
+//! job's `backend` knob, `Auto` by default.
 
 use super::control::{ControlMessage, CONTROL_TOPIC};
 use crate::broker::{ClientLocality, ClusterHandle, Consumer};
@@ -26,7 +28,7 @@ use crate::exec::CancelToken;
 use crate::formats::{registry, Sample};
 use crate::ml::{epoch_batches, split_validation, MetricAverager};
 use crate::registry::{BackendClient, TrainingMetrics};
-use crate::runtime::Engine;
+use crate::runtime::{BackendSelect, Engine};
 use crate::util::Rng;
 use anyhow::{anyhow, bail, Result};
 use std::time::{Duration, Instant};
@@ -47,6 +49,8 @@ pub struct TrainingJobConfig {
     pub control_timeout: Duration,
     /// Where this job's broker clients sit (InCluster when containerized).
     pub locality: ClientLocality,
+    /// Execution backend for the model (`--backend` knob).
+    pub backend: BackendSelect,
 }
 
 impl TrainingJobConfig {
@@ -61,6 +65,7 @@ impl TrainingJobConfig {
             seed: 42,
             control_timeout: Duration::from_secs(60),
             locality: ClientLocality::InCluster,
+            backend: BackendSelect::Auto,
         }
     }
 }
@@ -250,9 +255,15 @@ pub fn run_training_job(
         .set_result_status(config.result_id, "training")
         .ok(); // best-effort status update
 
-    // "downloadModelFromBackend": load + compile the model artifacts.
-    let engine = Engine::load(&config.artifact_dir)
+    // "downloadModelFromBackend": load the model (compiled PJRT
+    // artifacts or the artifact-less native engine, per the knob).
+    let engine = Engine::load_with(&config.artifact_dir, config.backend)
         .map_err(|e| anyhow!("loading model artifacts: {e}"))?;
+    log::info!(
+        "training job {} running on the '{}' backend",
+        config.result_id,
+        engine.backend_name()
+    );
 
     let msg = await_control_message(
         cluster,

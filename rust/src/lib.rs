@@ -13,7 +13,10 @@
 //!   contribution ([`coordinator`]).
 //! * **Layer 2 (JAX, build-time)** — the model's forward/backward pass,
 //!   AOT-lowered to HLO text in `python/compile/` and executed from Rust
-//!   via PJRT ([`runtime`]).
+//!   via PJRT ([`runtime`]). When those artifacts (or a real PJRT link)
+//!   are absent, [`runtime::native`] — a pure-Rust twin of the same
+//!   model — executes instead, so every pipeline runs on a clean
+//!   checkout (`--backend {auto,pjrt,native}`).
 //! * **Layer 1 (Pallas, build-time)** — the dense / softmax / Adam
 //!   kernels the model is built from (`python/compile/kernels/`).
 //!

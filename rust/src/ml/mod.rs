@@ -8,4 +8,4 @@ mod batch;
 mod data;
 
 pub use batch::{epoch_batches, split_validation, Batcher, MetricAverager};
-pub use data::{hcopd_dataset, mnist_like_dataset, Dataset};
+pub use data::{hcopd_dataset, mnist_like_dataset, separable_dataset, Dataset};

@@ -169,9 +169,11 @@ impl Store {
 
     pub fn create_model(&self, name: &str, artifact_dir: &str, description: &str) -> Result<u64> {
         // "the source code will be checked as a valid TensorFlow model"
-        // (§III-A) — our equivalent: the artifact dir must carry a
-        // loadable meta.json.
-        crate::runtime::ArtifactMeta::load(artifact_dir)
+        // (§III-A) — our equivalent: the artifact dir must resolve to a
+        // runnable model spec. A dir without meta.json is fine (the
+        // native backend runs the built-in spec with zero artifacts); a
+        // meta.json that exists but does not parse is rejected.
+        crate::runtime::ArtifactMeta::load_or_native(artifact_dir)
             .map_err(|e| anyhow!("invalid model artifact dir '{artifact_dir}': {e}"))?;
         let id = self.fresh_id();
         self.state.lock().unwrap().models.insert(
@@ -768,7 +770,18 @@ mod tests {
     #[test]
     fn model_creation_validates_artifacts() {
         let s = Store::new();
-        assert!(s.create_model("bad", "/nonexistent", "").is_err());
+        // A dir with a *corrupt* meta.json is rejected…
+        let bad_dir = std::env::temp_dir()
+            .join(format!("kafka-ml-test-bad-artifacts-{}", std::process::id()));
+        std::fs::create_dir_all(&bad_dir).unwrap();
+        std::fs::write(bad_dir.join("meta.json"), "{definitely not json").unwrap();
+        assert!(s
+            .create_model("bad", &bad_dir.to_string_lossy(), "")
+            .is_err());
+        let _ = std::fs::remove_dir_all(&bad_dir);
+        // …but a dir with no meta.json at all is a valid *native* model
+        // (the pure-Rust backend needs zero artifacts).
+        assert!(s.create_model("native", "/nonexistent", "").is_ok());
         let (_, mid) = store_with_model();
         assert!(mid > 0);
     }

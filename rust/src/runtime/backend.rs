@@ -1,0 +1,166 @@
+//! The execution-backend abstraction behind [`crate::runtime::Engine`].
+//!
+//! Kafka-ML's training Jobs and inference replicas don't care *how* the
+//! model's step functions execute — only that `init` / `train_step` /
+//! `eval_step` / `predict` honor the [`ArtifactMeta`] contract. Two
+//! implementations exist:
+//!
+//! * [`crate::runtime::pjrt::PjrtBackend`] — compiles the AOT HLO-text
+//!   artifacts via the PJRT CPU client (the original path; needs `make
+//!   artifacts` plus a real `xla-rs` crate linked);
+//! * [`crate::runtime::native::NativeBackend`] — a pure-Rust MLP engine
+//!   with zero external dependencies, so the full end-to-end pipeline
+//!   runs on every clean checkout.
+//!
+//! All state crossing the trait is host-side (`ModelParams` / flat `f32`
+//! buffers); each backend marshals into its own device representation.
+
+use super::meta::ArtifactMeta;
+use super::params::ModelParams;
+use anyhow::Result;
+
+/// Mutable training state: parameters + Adam moments + step count.
+/// Host-side and backend-agnostic — `m`/`v` parallel `params.tensors`
+/// (same flat lengths), `t` is the 1-based step count Adam's bias
+/// correction runs on.
+pub struct TrainState {
+    pub params: ModelParams,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub t: u64,
+}
+
+impl TrainState {
+    /// Fresh state: `params` with zeroed moments, step count 0.
+    pub fn new(params: ModelParams) -> TrainState {
+        let m = params.tensors.iter().map(|t| vec![0f32; t.numel()]).collect();
+        let v = params.tensors.iter().map(|t| vec![0f32; t.numel()]).collect();
+        TrainState { params, m, v, t: 0 }
+    }
+}
+
+/// One model-execution backend. Implementations hold their own copy of
+/// the meta; shape validation happens in `Engine` before delegation, so
+/// backends may assume well-formed inputs.
+pub trait Backend {
+    /// Stable identifier: `"pjrt"` or `"native"`.
+    fn name(&self) -> &'static str;
+
+    /// Device/platform string (e.g. `"Host CPU"` / `"native-cpu"`).
+    fn platform(&self) -> String;
+
+    /// Fresh deterministic Glorot-initialized parameters.
+    fn init_params(&self) -> Result<ModelParams>;
+
+    /// One optimizer step on one `meta.batch`-sized batch; `state.t`
+    /// has already been incremented (1-based). Returns `(loss, acc)`.
+    fn train_step(&self, state: &mut TrainState, x: &[f32], y: &[i32]) -> Result<(f32, f32)>;
+
+    /// Loss + accuracy on one batch, no parameter update.
+    fn eval_step(&self, params: &ModelParams, x: &[f32], y: &[i32]) -> Result<(f32, f32)>;
+
+    /// Class probabilities for `rows` samples (`rows × input_dim` f32,
+    /// row-major); output is `rows × classes`.
+    fn predict(&self, params: &ModelParams, x: &[f32], rows: usize) -> Result<Vec<f32>>;
+
+    /// Pre-compile / pre-allocate everything (benches exclude this from
+    /// the measured region). No-op by default.
+    fn warmup(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Which backend [`crate::runtime::Engine::load_with`] should use — the
+/// `--backend {auto,pjrt,native}` CLI/config knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendSelect {
+    /// PJRT when HLO artifacts exist *and* a real PJRT client links;
+    /// the native engine otherwise. The right default everywhere.
+    #[default]
+    Auto,
+    /// PJRT or error — never silently fall back (perf benches that must
+    /// measure the compiled path).
+    Pjrt,
+    /// The pure-Rust engine, even when artifacts exist.
+    Native,
+}
+
+impl BackendSelect {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendSelect::Auto => "auto",
+            BackendSelect::Pjrt => "pjrt",
+            BackendSelect::Native => "native",
+        }
+    }
+}
+
+impl std::fmt::Display for BackendSelect {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for BackendSelect {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<BackendSelect> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(BackendSelect::Auto),
+            "pjrt" => Ok(BackendSelect::Pjrt),
+            "native" => Ok(BackendSelect::Native),
+            other => anyhow::bail!("unknown backend '{other}' (expected auto|pjrt|native)"),
+        }
+    }
+}
+
+/// Validate `(x, y)` against one `meta.batch`-sized training batch.
+pub(crate) fn check_batch(meta: &ArtifactMeta, what: &str, x: &[f32], y: &[i32]) -> Result<()> {
+    let b = meta.batch;
+    if x.len() != b * meta.input_dim || y.len() != b {
+        anyhow::bail!(
+            "{what} batch mismatch: x {} (want {}), y {} (want {})",
+            x.len(),
+            b * meta.input_dim,
+            y.len(),
+            b
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_select_parses_and_prints() {
+        for (s, v) in [
+            ("auto", BackendSelect::Auto),
+            ("pjrt", BackendSelect::Pjrt),
+            ("native", BackendSelect::Native),
+            ("NATIVE", BackendSelect::Native),
+        ] {
+            assert_eq!(s.parse::<BackendSelect>().unwrap(), v);
+        }
+        assert!("tensorflow".parse::<BackendSelect>().is_err());
+        assert_eq!(BackendSelect::Native.to_string(), "native");
+        assert_eq!(BackendSelect::default(), BackendSelect::Auto);
+    }
+
+    #[test]
+    fn train_state_zeroes_moments() {
+        let params = ModelParams {
+            tensors: vec![crate::runtime::ParamTensor {
+                name: "w1".into(),
+                shape: vec![2, 2],
+                data: vec![1.0, 2.0, 3.0, 4.0],
+            }],
+        };
+        let s = TrainState::new(params);
+        assert_eq!(s.t, 0);
+        assert_eq!(s.m[0], vec![0.0; 4]);
+        assert_eq!(s.v[0], vec![0.0; 4]);
+        assert_eq!(s.params.tensors[0].data[3], 4.0);
+    }
+}

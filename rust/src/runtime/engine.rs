@@ -1,193 +1,144 @@
-//! The PJRT execution engine.
+//! The model-execution engine: a thin, validating facade over one
+//! [`Backend`] — PJRT-compiled artifacts or the pure-Rust native MLP.
 //!
-//! Compiles every HLO-text artifact once at load time; the training loop
-//! and the inference hot path then call `execute` on the pre-compiled
-//! executables with `Literal` inputs. The interchange is HLO **text**
-//! (see `python/compile/aot.py` for why — xla_extension 0.5.1 rejects
-//! jax ≥ 0.5 serialized protos).
+//! `Engine::load` keeps the historical behavior callers rely on
+//! ("point me at an artifact dir, give me a runnable model") but never
+//! dead-ends anymore: when the AOT artifacts or a real PJRT client are
+//! missing, the [`crate::runtime::native`] backend loads from the meta
+//! spec alone (or the built-in default spec when even `meta.json` is
+//! absent), so training Jobs, inference replicas and the integration
+//! suites run on a clean checkout with zero external artifacts.
 
+use super::backend::{check_batch, Backend, BackendSelect, TrainState};
 use super::meta::ArtifactMeta;
-use super::params::{ModelParams, ParamTensor};
+use super::native::{NativeBackend, NativeModel, NativeSpec};
+use super::params::ModelParams;
+use super::pjrt::PjrtBackend;
 use anyhow::{anyhow, bail, Result};
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
-
-/// Mutable training state: parameters + Adam moments + step count, kept
-/// as XLA literals between steps so the hot loop does no re-marshalling
-/// of the model.
-pub struct TrainState {
-    pub params: Vec<xla::Literal>,
-    pub m: Vec<xla::Literal>,
-    pub v: Vec<xla::Literal>,
-    /// 1-based step count (Adam bias correction).
-    pub t: u64,
-}
 
 pub struct Engine {
-    client: xla::PjRtClient,
     meta: ArtifactMeta,
-    /// Lazily-compiled executables (§Perf: eager compilation of all five
-    /// artifacts cost ~1 s of pod startup; a training Job never touches
-    /// the predict artifacts and an inference replica never touches
-    /// train_step, so each is compiled on first use and cached).
-    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    backend: Box<dyn Backend>,
 }
 
 impl Engine {
-    /// Load the artifact metadata and create the PJRT client. HLO
-    /// compilation happens lazily, per artifact, on first use.
+    /// Load from an artifact dir with automatic backend selection
+    /// ([`BackendSelect::Auto`]).
     pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
-        let meta = ArtifactMeta::load(&dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
-        Ok(Engine { client, meta, execs: RefCell::new(HashMap::new()) })
+        Self::load_with(dir, BackendSelect::Auto)
     }
 
-    /// Force-compile every artifact now (benches that must exclude
-    /// compile time from the measured region call this first).
-    pub fn warmup_all(&self) -> Result<()> {
-        let names: Vec<String> = self.meta.artifacts.keys().cloned().collect();
-        for name in names {
-            self.exec(&name)?;
+    /// Load with an explicit backend choice (the `--backend` knob).
+    ///
+    /// * `Auto` — PJRT when `meta.json` lists HLO artifacts *and* the
+    ///   PJRT client comes up; the native engine otherwise (including
+    ///   when no `meta.json` exists at all).
+    /// * `Pjrt` — PJRT or error; never falls back.
+    /// * `Native` — the pure-Rust engine, honoring `meta.json`'s spec
+    ///   when present.
+    pub fn load_with(dir: impl AsRef<Path>, select: BackendSelect) -> Result<Engine> {
+        let dir = dir.as_ref();
+        match select {
+            BackendSelect::Pjrt => {
+                let meta = ArtifactMeta::load(dir)?;
+                let backend = PjrtBackend::new(meta.clone())
+                    .map_err(|e| anyhow!("PJRT backend requested but unavailable: {e}"))?;
+                Ok(Engine { meta, backend: Box::new(backend) })
+            }
+            BackendSelect::Native => {
+                let meta = ArtifactMeta::load_or_native(dir)?;
+                let backend = NativeBackend::new(&meta)?;
+                Ok(Engine { meta, backend: Box::new(backend) })
+            }
+            BackendSelect::Auto => {
+                let meta = ArtifactMeta::load_or_native(dir)?;
+                if meta.hlo_files_present() {
+                    match PjrtBackend::new(meta.clone()) {
+                        Ok(backend) => {
+                            return Ok(Engine { meta, backend: Box::new(backend) })
+                        }
+                        Err(e) => log::info!(
+                            "PJRT backend unavailable ({e:#}); falling back to the native engine"
+                        ),
+                    }
+                }
+                let backend = NativeBackend::new(&meta)?;
+                Ok(Engine { meta, backend: Box::new(backend) })
+            }
         }
-        Ok(())
+    }
+
+    /// Restore a runnable engine + trained parameters from one `.kmln`
+    /// native checkpoint — no artifact dir involved.
+    pub fn from_native_checkpoint(path: impl AsRef<Path>) -> Result<(Engine, ModelParams)> {
+        let path = path.as_ref();
+        let model = NativeModel::load(path)?;
+        let dir = path.parent().unwrap_or_else(|| Path::new(".")).to_path_buf();
+        let meta = model.spec.to_meta(dir);
+        let backend = NativeBackend::new(&meta)?;
+        Ok((Engine { meta, backend: Box::new(backend) }, model.params))
+    }
+
+    /// Bundle `params` with this engine's spec into a self-describing
+    /// native checkpoint file.
+    pub fn save_native_checkpoint(
+        &self,
+        path: impl AsRef<Path>,
+        params: &ModelParams,
+    ) -> Result<()> {
+        params.check_against(&self.meta.params)?;
+        let model = NativeModel { spec: NativeSpec::from(&self.meta), params: params.clone() };
+        model.save(path)
+    }
+
+    /// Force-compile / pre-allocate every artifact now (benches that
+    /// must exclude setup from the measured region call this first).
+    pub fn warmup_all(&self) -> Result<()> {
+        self.backend.warmup()
     }
 
     pub fn meta(&self) -> &ArtifactMeta {
         &self.meta
     }
 
+    /// Which backend is executing: `"pjrt"` or `"native"`.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn exec(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.execs.borrow().get(name) {
-            return Ok(exe.clone());
-        }
-        let info = self.meta.artifact(name)?;
-        let path = self.meta.dir.join(&info.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?,
-        );
-        self.execs
-            .borrow_mut()
-            .insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Run an artifact and decompose its (return_tuple=True) result.
-    fn run(&self, name: &str, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.exec(name)?;
-        let result = exe
-            .execute::<&xla::Literal>(args)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("{name}: not a tuple: {e:?}"))
+        self.backend.platform()
     }
 
     // ---- init ------------------------------------------------------------------
 
-    /// Fresh Glorot-initialized parameters (runs the `init` artifact; the
-    /// seed was fixed at AOT time, mirroring the paper's "model defined
-    /// once in the Web UI").
+    /// Fresh Glorot-initialized parameters, deterministic per spec seed
+    /// (mirroring the paper's "model defined once in the Web UI").
     pub fn init_params(&self) -> Result<ModelParams> {
-        let outs = self.run("init", &[])?;
-        if outs.len() != self.meta.n_params() {
-            bail!(
-                "init returned {} tensors, meta expects {}",
-                outs.len(),
-                self.meta.n_params()
-            );
-        }
-        let tensors = outs
-            .iter()
-            .zip(&self.meta.params)
-            .map(|(lit, pm)| {
-                Ok(ParamTensor {
-                    name: pm.name.clone(),
-                    shape: pm.shape.clone(),
-                    data: lit
-                        .to_vec::<f32>()
-                        .map_err(|e| anyhow!("init tensor {}: {e:?}", pm.name))?,
-                })
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(ModelParams { tensors })
+        let params = self.backend.init_params()?;
+        params.check_against(&self.meta.params)?;
+        Ok(params)
     }
 
     // ---- state <-> params ----------------------------------------------------------
 
-    fn tensor_literal(&self, t: &ParamTensor) -> Result<xla::Literal> {
-        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-        xla::Literal::vec1(&t.data)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshaping {}: {e:?}", t.name))
-    }
-
-    fn zeros_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
-        let numel: usize = shape.iter().product();
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        xla::Literal::vec1(&vec![0f32; numel])
-            .reshape(&dims)
-            .map_err(|e| anyhow!("zeros: {e:?}"))
-    }
-
     /// Start training from `params` with zeroed Adam moments.
     pub fn train_state(&self, params: &ModelParams) -> Result<TrainState> {
         params.check_against(&self.meta.params)?;
-        let p = params
-            .tensors
-            .iter()
-            .map(|t| self.tensor_literal(t))
-            .collect::<Result<Vec<_>>>()?;
-        let m = params
-            .tensors
-            .iter()
-            .map(|t| self.zeros_literal(&t.shape))
-            .collect::<Result<Vec<_>>>()?;
-        let v = params
-            .tensors
-            .iter()
-            .map(|t| self.zeros_literal(&t.shape))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(TrainState { params: p, m, v, t: 0 })
+        Ok(TrainState::new(params.clone()))
     }
 
-    /// Extract host-side parameters from a training state (for upload).
+    /// Host-side parameters of a training state (for upload).
     pub fn params_of(&self, state: &TrainState) -> Result<ModelParams> {
-        let tensors = state
-            .params
-            .iter()
-            .zip(&self.meta.params)
-            .map(|(lit, pm)| {
-                Ok(ParamTensor {
-                    name: pm.name.clone(),
-                    shape: pm.shape.clone(),
-                    data: lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-                })
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(ModelParams { tensors })
+        state.params.check_against(&self.meta.params)?;
+        Ok(state.params.clone())
     }
 
-    /// Parameter literals for inference (no optimizer state).
-    pub fn inference_params(&self, params: &ModelParams) -> Result<Vec<xla::Literal>> {
+    /// Validated parameters for inference (no optimizer state).
+    pub fn inference_params(&self, params: &ModelParams) -> Result<ModelParams> {
         params.check_against(&self.meta.params)?;
-        params
-            .tensors
-            .iter()
-            .map(|t| self.tensor_literal(t))
-            .collect()
+        Ok(params.clone())
     }
 
     // ---- training ---------------------------------------------------------------------
@@ -195,90 +146,33 @@ impl Engine {
     /// One optimizer step on one batch. `x` is `batch × input_dim`
     /// row-major, `y` is `batch` labels. Returns `(loss, accuracy)`.
     pub fn train_step(&self, state: &mut TrainState, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
-        let n = self.meta.n_params();
-        let b = self.meta.batch;
-        if x.len() != b * self.meta.input_dim || y.len() != b {
-            bail!(
-                "train_step batch mismatch: x {} (want {}), y {} (want {})",
-                x.len(),
-                b * self.meta.input_dim,
-                y.len(),
-                b
-            );
-        }
+        check_batch(&self.meta, "train_step", x, y)?;
+        self.check_labels(y)?;
         state.t += 1;
-        let xl = xla::Literal::vec1(x)
-            .reshape(&[b as i64, self.meta.input_dim as i64])
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let yl = xla::Literal::vec1(y);
-        let tl = xla::Literal::scalar(state.t as f32);
-
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 3);
-        args.extend(state.params.iter());
-        args.extend(state.m.iter());
-        args.extend(state.v.iter());
-        args.push(&tl);
-        args.push(&xl);
-        args.push(&yl);
-
-        let mut outs = self.run("train_step", &args)?;
-        if outs.len() != 3 * n + 2 {
-            bail!("train_step returned {} outputs, want {}", outs.len(), 3 * n + 2);
-        }
-        let acc = scalar_f32(&outs.pop().unwrap())?;
-        let loss = scalar_f32(&outs.pop().unwrap())?;
-        state.v = outs.split_off(2 * n);
-        state.m = outs.split_off(n);
-        state.params = outs;
-        Ok((loss, acc))
+        self.backend.train_step(state, x, y)
     }
 
     /// Loss + accuracy on one batch without updating parameters.
-    pub fn eval_step(&self, params: &[xla::Literal], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
-        let b = self.meta.batch;
-        if x.len() != b * self.meta.input_dim || y.len() != b {
-            bail!("eval_step batch mismatch");
-        }
-        let xl = xla::Literal::vec1(x)
-            .reshape(&[b as i64, self.meta.input_dim as i64])
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let yl = xla::Literal::vec1(y);
-        let mut args: Vec<&xla::Literal> = params.iter().collect();
-        args.push(&xl);
-        args.push(&yl);
-        let outs = self.run("eval_step", &args)?;
-        Ok((scalar_f32(&outs[0])?, scalar_f32(&outs[1])?))
+    pub fn eval_step(&self, params: &ModelParams, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        check_batch(&self.meta, "eval_step", x, y)?;
+        self.check_labels(y)?;
+        params.check_against(&self.meta.params)?;
+        self.backend.eval_step(params, x, y)
     }
 
     // ---- inference -----------------------------------------------------------------------
 
     /// Class probabilities for `rows` samples (`rows × input_dim` f32).
-    /// Uses the batch artifact for full batches and the single-record
-    /// artifact for remainders, so any row count works.
-    pub fn predict(&self, params: &[xla::Literal], x: &[f32], rows: usize) -> Result<Vec<f32>> {
-        let f = self.meta.input_dim;
-        if x.len() != rows * f {
-            bail!("predict shape mismatch: {} vs {rows}×{f}", x.len());
+    pub fn predict(&self, params: &ModelParams, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        if x.len() != rows * self.meta.input_dim {
+            bail!(
+                "predict shape mismatch: {} vs {rows}×{}",
+                x.len(),
+                self.meta.input_dim
+            );
         }
-        let bs = self.meta.artifact("predict")?.batch.unwrap_or(self.meta.batch);
-        let mut probs = Vec::with_capacity(rows * self.meta.classes);
-        let mut row = 0;
-        while row < rows {
-            let (art, take) = if rows - row >= bs {
-                ("predict", bs)
-            } else {
-                ("predict_single", 1)
-            };
-            let xl = xla::Literal::vec1(&x[row * f..(row + take) * f])
-                .reshape(&[take as i64, f as i64])
-                .map_err(|e| anyhow!("{e:?}"))?;
-            let mut args: Vec<&xla::Literal> = params.iter().collect();
-            args.push(&xl);
-            let outs = self.run(art, &args)?;
-            probs.extend(outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?);
-            row += take;
-        }
-        Ok(probs)
+        params.check_against(&self.meta.params)?;
+        self.backend.predict(params, x, rows)
     }
 
     /// Argmax class per row of `predict` output.
@@ -294,15 +188,125 @@ impl Engine {
             })
             .collect()
     }
+
+    fn check_labels(&self, y: &[i32]) -> Result<()> {
+        if let Some(&bad) = y
+            .iter()
+            .find(|&&l| l < 0 || l as usize >= self.meta.classes)
+        {
+            bail!("label {bad} out of range for {} classes", self.meta.classes);
+        }
+        Ok(())
+    }
 }
 
-fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
-    lit.to_vec::<f32>()
-        .map_err(|e| anyhow!("{e:?}"))?
-        .first()
-        .copied()
-        .ok_or_else(|| anyhow!("empty scalar"))
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
 
-// Engine tests live in rust/tests/runtime_integration.rs because they
-// need the real artifacts (built by `make artifacts`).
+    /// A clean checkout has no artifacts/ at all — Auto must come up
+    /// natively on the default spec.
+    #[test]
+    fn auto_loads_native_without_artifacts() {
+        let dir = std::env::temp_dir()
+            .join(format!("kafka-ml-engine-no-artifacts-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let e = Engine::load(&dir).unwrap();
+        assert_eq!(e.backend_name(), "native");
+        assert!(e.platform().contains("native"));
+        assert_eq!(e.meta().input_dim, 8);
+        assert_eq!(e.meta().n_params(), 4);
+    }
+
+    const STUB_META: &str = r#"{
+      "spec": {"input_dim": 8, "hidden": [16], "classes": 4, "batch": 10,
+               "lr": 0.01, "seed": 42},
+      "params": [
+        {"name": "w1", "shape": [8, 16]}, {"name": "b1", "shape": [16]},
+        {"name": "w2", "shape": [16, 4]}, {"name": "b2", "shape": [4]}
+      ],
+      "artifacts": {"init": {"file": "init.hlo.txt"}}
+    }"#;
+
+    fn temp_artifact_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("kafka-ml-engine-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// A stale meta.json whose listed HLO files are gone must never be
+    /// handed to PJRT by Auto (compilation is lazy — it would die at
+    /// the first step call, not at load). True whatever xla is linked.
+    #[test]
+    fn auto_skips_pjrt_when_hlo_files_are_missing() {
+        let dir = temp_artifact_dir("stale-artifacts");
+        std::fs::write(dir.join("meta.json"), STUB_META).unwrap();
+        let e = Engine::load(&dir).unwrap();
+        assert_eq!(e.backend_name(), "native");
+        assert_eq!(e.meta().lr, 0.01); // meta.json spec honored natively
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// With HLO files present, Auto picks PJRT exactly when a real
+    /// client comes up; the hermetic stub fails client creation, so
+    /// there it must fall back to native. Explicit Pjrt never falls
+    /// back.
+    #[test]
+    fn auto_follows_pjrt_client_availability() {
+        let dir = temp_artifact_dir("stub-artifacts");
+        std::fs::write(dir.join("meta.json"), STUB_META).unwrap();
+        std::fs::write(dir.join("init.hlo.txt"), "HloModule init").unwrap();
+        let pjrt_up = xla::PjRtClient::cpu().is_ok();
+        let e = Engine::load(&dir).unwrap();
+        assert_eq!(e.backend_name(), if pjrt_up { "pjrt" } else { "native" });
+        if !pjrt_up {
+            let err = Engine::load_with(&dir, BackendSelect::Pjrt).unwrap_err();
+            assert!(format!("{err:#}").contains("PJRT backend"), "{err:#}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn native_select_works_end_to_end_in_memory() {
+        let e = Engine::load_with(
+            std::env::temp_dir().join("kafka-ml-engine-native-select"),
+            BackendSelect::Native,
+        )
+        .unwrap();
+        let init = e.init_params().unwrap();
+        let mut state = e.train_state(&init).unwrap();
+        let b = e.meta().batch;
+        let x = vec![0.25f32; b * e.meta().input_dim];
+        let y: Vec<i32> = (0..b as i32).map(|i| i % e.meta().classes as i32).collect();
+        let (loss, acc) = e.train_step(&mut state, &x, &y).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
+        assert_eq!(state.t, 1);
+        // Out-of-range labels are rejected before the backend sees them.
+        let mut bad = y.clone();
+        bad[0] = e.meta().classes as i32;
+        assert!(e.train_step(&mut state, &x, &bad).is_err());
+        assert!(e.eval_step(&state.params, &x, &bad).is_err());
+    }
+
+    #[test]
+    fn checkpoint_restores_identical_predictions() {
+        let e = Engine::load_with(PathBuf::from("definitely-not-a-dir"), BackendSelect::Native)
+            .unwrap();
+        let params = e.init_params().unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("kafka-ml-engine-ckpt-{}.kmln", std::process::id()));
+        e.save_native_checkpoint(&path, &params).unwrap();
+        let (e2, restored) = Engine::from_native_checkpoint(&path).unwrap();
+        assert_eq!(params, restored);
+        let x = vec![0.5f32; 3 * e.meta().input_dim];
+        assert_eq!(
+            e.predict(&params, &x, 3).unwrap(),
+            e2.predict(&restored, &x, 3).unwrap()
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -32,6 +32,12 @@ pub struct ArtifactMeta {
     pub classes: usize,
     pub batch: usize,
     pub lr: f64,
+    /// Adam first-moment decay (β₁).
+    pub beta1: f64,
+    /// Adam second-moment decay (β₂).
+    pub beta2: f64,
+    /// Adam denominator fuzz (ε).
+    pub eps: f64,
     pub seed: u64,
     pub hidden: Vec<usize>,
     pub params: Vec<ParamMeta>,
@@ -47,6 +53,89 @@ impl ArtifactMeta {
             .with_context(|| format!("reading {}", path.display()))?;
         let j = parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
         Self::from_json(&j, dir)
+    }
+
+    /// `meta.json` when present, the built-in native spec otherwise.
+    ///
+    /// A clean checkout has no `artifacts/` directory at all (`make
+    /// artifacts` builds it); the pure-Rust native backend needs no AOT
+    /// outputs, so a *missing* meta.json falls back to
+    /// [`ArtifactMeta::native_default`]. A meta.json that exists but
+    /// does not parse is still an error — going quiet on a corrupt
+    /// artifact dir would hide real breakage.
+    pub fn load_or_native(dir: impl AsRef<Path>) -> Result<ArtifactMeta> {
+        let dir = dir.as_ref().to_path_buf();
+        if dir.join("meta.json").exists() {
+            Self::load(&dir)
+        } else {
+            Ok(Self::native_default(dir))
+        }
+    }
+
+    /// The spec the native backend uses when no `meta.json` exists:
+    /// the paper's HCOPD validation model (8 multi-input features, one
+    /// hidden layer, 4 diagnosis classes, batch 10), with a learning
+    /// rate tuned so CI-scale training converges in a few epochs
+    /// (the AOT artifacts keep the paper's Adam(lr=1e-4)).
+    pub fn native_default(dir: PathBuf) -> ArtifactMeta {
+        Self::synthesize(dir, 8, &[16], 4, 10, 1e-2, 42)
+    }
+
+    /// Build a meta (params in `w1, b1, w2, b2, …` artifact order) from
+    /// an architecture alone — no files involved. `artifacts` stays
+    /// empty, which is what marks the model as native-only.
+    pub fn synthesize(
+        dir: PathBuf,
+        input_dim: usize,
+        hidden: &[usize],
+        classes: usize,
+        batch: usize,
+        lr: f64,
+        seed: u64,
+    ) -> ArtifactMeta {
+        let mut params = Vec::with_capacity(2 * (hidden.len() + 1));
+        let mut fan_in = input_dim;
+        for (i, &fan_out) in hidden.iter().chain(std::iter::once(&classes)).enumerate() {
+            params.push(ParamMeta {
+                name: format!("w{}", i + 1),
+                shape: vec![fan_in, fan_out],
+            });
+            params.push(ParamMeta { name: format!("b{}", i + 1), shape: vec![fan_out] });
+            fan_in = fan_out;
+        }
+        ArtifactMeta {
+            dir,
+            input_dim,
+            classes,
+            batch,
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-7,
+            seed,
+            hidden: hidden.to_vec(),
+            params,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    /// True when HLO artifacts are listed — i.e. the PJRT path has
+    /// something to compile. Synthesized/native metas have none.
+    pub fn has_hlo_artifacts(&self) -> bool {
+        !self.artifacts.is_empty()
+    }
+
+    /// True when every listed HLO artifact file is actually present on
+    /// disk. `Auto` backend selection requires this before picking
+    /// PJRT: compilation is lazy, so a stale meta.json over deleted
+    /// `.hlo.txt` files would otherwise load "successfully" and die at
+    /// the first train/predict call instead of falling back to native.
+    pub fn hlo_files_present(&self) -> bool {
+        self.has_hlo_artifacts()
+            && self
+                .artifacts
+                .values()
+                .all(|info| self.dir.join(&info.file).is_file())
     }
 
     pub fn from_json(j: &Json, dir: PathBuf) -> Result<ArtifactMeta> {
@@ -90,6 +179,9 @@ impl ArtifactMeta {
             classes: spec.req_u64("classes")? as usize,
             batch: spec.req_u64("batch")? as usize,
             lr: spec.req_f64("lr")?,
+            beta1: spec.get("beta1").as_f64().unwrap_or(0.9),
+            beta2: spec.get("beta2").as_f64().unwrap_or(0.999),
+            eps: spec.get("eps").as_f64().unwrap_or(1e-7),
             seed: spec.get("seed").as_u64().unwrap_or(0),
             hidden: spec
                 .get("hidden")
@@ -169,5 +261,64 @@ mod tests {
     fn missing_fields_error_cleanly() {
         let j = parse(r#"{"spec": {}}"#).unwrap();
         assert!(ArtifactMeta::from_json(&j, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn parses_adam_hyperparameters_with_defaults() {
+        let j = parse(SAMPLE).unwrap();
+        let m = ArtifactMeta::from_json(&j, PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(m.beta1, 0.9);
+        assert_eq!(m.beta2, 0.999);
+        assert!((m.eps - 1e-7).abs() < 1e-12);
+        // Absent keys take the Keras Adam defaults.
+        let bare = parse(
+            r#"{"spec": {"input_dim": 2, "classes": 2, "batch": 1, "lr": 0.1},
+                "params": [], "artifacts": {}}"#,
+        )
+        .unwrap();
+        let m = ArtifactMeta::from_json(&bare, PathBuf::new()).unwrap();
+        assert_eq!((m.beta1, m.beta2), (0.9, 0.999));
+    }
+
+    #[test]
+    fn synthesize_builds_artifact_order_params() {
+        let m = ArtifactMeta::synthesize(PathBuf::from("/x"), 8, &[16, 12], 4, 10, 0.01, 7);
+        let names: Vec<&str> = m.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["w1", "b1", "w2", "b2", "w3", "b3"]);
+        assert_eq!(m.params[0].shape, vec![8, 16]);
+        assert_eq!(m.params[2].shape, vec![16, 12]);
+        assert_eq!(m.params[4].shape, vec![12, 4]);
+        assert_eq!(m.params[5].shape, vec![4]);
+        assert_eq!(m.total_weights(), 8 * 16 + 16 + 16 * 12 + 12 + 12 * 4 + 4);
+        assert!(!m.has_hlo_artifacts());
+    }
+
+    #[test]
+    fn native_default_matches_paper_architecture() {
+        let m = ArtifactMeta::native_default(PathBuf::from("artifacts"));
+        assert_eq!(m.input_dim, 8);
+        assert_eq!(m.hidden, vec![16]);
+        assert_eq!(m.classes, 4);
+        assert_eq!(m.batch, 10);
+        assert_eq!(m.n_params(), 4);
+    }
+
+    #[test]
+    fn load_or_native_falls_back_only_when_meta_is_absent() {
+        let dir = std::env::temp_dir()
+            .join(format!("kafka-ml-meta-fallback-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // No meta.json: native default, never an error.
+        let m = ArtifactMeta::load_or_native(&dir).unwrap();
+        assert!(!m.has_hlo_artifacts());
+        assert_eq!(m.input_dim, 8);
+        // Nonexistent dir behaves the same (clean checkout).
+        let m = ArtifactMeta::load_or_native(dir.join("missing")).unwrap();
+        assert_eq!(m.classes, 4);
+        // Corrupt meta.json is still loud.
+        std::fs::write(dir.join("meta.json"), "{not json").unwrap();
+        assert!(ArtifactMeta::load_or_native(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,20 +1,33 @@
-//! The PJRT runtime: loads the AOT artifacts produced by
-//! `python/compile/aot.py` (HLO text + `meta.json`) and executes them on
-//! the request path — the piece that replaces TensorFlow in the paper's
-//! training Jobs and inference replicas. Python is never involved here.
+//! The model runtime: a backend-abstracted execution engine for the
+//! piece that replaces TensorFlow in the paper's training Jobs and
+//! inference replicas.
 //!
-//! * [`ArtifactMeta`] — the shapes/order contract parsed from
-//!   `artifacts/meta.json`;
-//! * [`Engine`] — compiles each `*.hlo.txt` once via the PJRT CPU client
-//!   and exposes typed `init` / `train_step` / `eval_step` / `predict`;
+//! * [`ArtifactMeta`] — the shapes/order contract (parsed from
+//!   `artifacts/meta.json`, or synthesized for artifact-less native
+//!   models);
+//! * [`Backend`] / [`BackendSelect`] — the execution abstraction and
+//!   the `--backend {auto,pjrt,native}` knob;
+//! * [`pjrt`] — compiles each AOT `*.hlo.txt` once via the PJRT CPU
+//!   client (needs `make artifacts` + a real `xla-rs` link);
+//! * [`native`] — the pure-Rust MLP engine (dense forward, softmax-CE
+//!   backward, Adam with bias correction) that runs with zero external
+//!   artifacts, plus the self-describing `.kmln` checkpoint format;
+//! * [`Engine`] — the validating facade exposing typed `init` /
+//!   `train_step` / `eval_step` / `predict` over whichever backend
+//!   loaded;
 //! * [`ModelParams`] — host-side parameter tensors with a stable binary
-//!   wire format, so trained models can be uploaded to / downloaded from
-//!   the back-end registry exactly like the paper's trained-model blobs.
+//!   wire format (`KMLP`), the blob uploaded to / downloaded from the
+//!   back-end registry exactly like the paper's trained-model blobs.
 
+mod backend;
 mod engine;
 mod meta;
+pub mod native;
 mod params;
+mod pjrt;
 
-pub use engine::{Engine, TrainState};
+pub use backend::{Backend, BackendSelect, TrainState};
+pub use engine::Engine;
 pub use meta::{ArtifactInfo, ArtifactMeta, ParamMeta};
+pub use native::{NativeModel, NativeSpec};
 pub use params::{ModelParams, ParamTensor};

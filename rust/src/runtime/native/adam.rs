@@ -1,0 +1,96 @@
+//! Adam with bias correction — the pure-Rust twin of the fused Pallas
+//! kernel in `python/compile/kernels/adam.py`.
+//!
+//! Exactly like that kernel, the bias correction is folded into a
+//! per-step scalar step size
+//! `lr_t = lr · √(1 − β₂ᵗ) / (1 − β₁ᵗ)` (scalar math, identical result
+//! to the `m̂`/`v̂` formulation), then one pass over each tensor updates
+//! `(p, m, v)` together:
+//!
+//! ```text
+//! m ← β₁·m + (1−β₁)·g
+//! v ← β₂·v + (1−β₂)·g²
+//! p ← p − lr_t · m / (√v + ε)
+//! ```
+
+/// Adam hyper-parameters, fixed per model (meta.json `spec`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdamHyper {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+impl Default for AdamHyper {
+    /// Keras `Adam()` defaults (the paper's Listing 2 overrides only lr).
+    fn default() -> Self {
+        AdamHyper { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-7 }
+    }
+}
+
+impl AdamHyper {
+    /// The bias-corrected step size for 1-based step `t`.
+    pub fn lr_t(&self, t: u64) -> f32 {
+        let t = t as i32;
+        (self.lr * (1.0 - self.beta2.powi(t)).sqrt() / (1.0 - self.beta1.powi(t))) as f32
+    }
+}
+
+/// One Adam step for a single flat tensor. `t` is the 1-based step
+/// count; all four buffers must share a length.
+pub fn adam_step(h: &AdamHyper, t: u64, p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32]) {
+    debug_assert!(t >= 1, "Adam step count is 1-based");
+    debug_assert_eq!(p.len(), g.len());
+    debug_assert_eq!(p.len(), m.len());
+    debug_assert_eq!(p.len(), v.len());
+    let lr_t = h.lr_t(t);
+    let (b1, b2, eps) = (h.beta1 as f32, h.beta2 as f32, h.eps as f32);
+    for i in 0..p.len() {
+        let gi = g[i];
+        let mi = b1 * m[i] + (1.0 - b1) * gi;
+        let vi = b2 * v[i] + (1.0 - b2) * gi * gi;
+        m[i] = mi;
+        v[i] = vi;
+        p[i] -= lr_t * mi / (vi.sqrt() + eps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_moves_against_gradient() {
+        let h = AdamHyper { lr: 0.1, ..Default::default() };
+        let mut p = vec![1.0f32, -1.0];
+        let g = vec![2.0f32, -3.0];
+        let mut m = vec![0.0f32; 2];
+        let mut v = vec![0.0f32; 2];
+        adam_step(&h, 1, &mut p, &g, &mut m, &mut v);
+        // At t=1 the bias-corrected update is ≈ lr·sign(g) regardless of
+        // gradient magnitude (m̂/√v̂ = g/|g| when moments start at zero).
+        assert!((p[0] - (1.0 - 0.1)).abs() < 1e-3, "p0 {}", p[0]);
+        assert!((p[1] - (-1.0 + 0.1)).abs() < 1e-3, "p1 {}", p[1]);
+        assert!((m[0] - 0.2).abs() < 1e-6);
+        assert!((v[0] - 0.004).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_gradient_is_a_fixed_point_from_rest() {
+        let h = AdamHyper::default();
+        let mut p = vec![0.5f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        adam_step(&h, 1, &mut p, &[0.0], &mut m, &mut v);
+        assert_eq!(p[0], 0.5);
+    }
+
+    #[test]
+    fn lr_t_decays_toward_lr() {
+        let h = AdamHyper { lr: 1e-2, ..Default::default() };
+        // Early steps get a larger corrected rate; by t→∞ it settles at lr.
+        assert!(h.lr_t(1) > h.lr_t(1000));
+        assert!((h.lr_t(100_000) as f64 - h.lr).abs() < 1e-6);
+    }
+}

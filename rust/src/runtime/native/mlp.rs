@@ -1,0 +1,357 @@
+//! The MLP compute core: dense forward pass, softmax-cross-entropy
+//! backward pass, Glorot init — the pure-Rust twin of
+//! `python/compile/model.py` (ReLU hidden layers, linear output,
+//! mean sparse-categorical-cross-entropy, accuracy).
+//!
+//! Everything operates on flat row-major `f32` buffers (`rows × dim`),
+//! the same layout [`crate::runtime::ModelParams`] stores and the same
+//! `&[f32]` views the zero-copy record decoders hand the coordinator —
+//! no tensor type, no reshapes, no copies beyond the activations
+//! themselves.
+
+use crate::runtime::meta::ArtifactMeta;
+use crate::runtime::params::{ModelParams, ParamTensor};
+use crate::util::Rng;
+use anyhow::{bail, Result};
+
+/// Architecture view the math runs over: `(fan_in, fan_out)` per layer,
+/// hidden layers ReLU, output layer linear.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NativeMlp {
+    pub input_dim: usize,
+    pub classes: usize,
+    pub layers: Vec<(usize, usize)>,
+    pub seed: u64,
+}
+
+impl NativeMlp {
+    /// Derive the layer chain from the meta spec and cross-check it
+    /// against the declared parameter list (the artifact contract).
+    pub fn from_meta(meta: &ArtifactMeta) -> Result<NativeMlp> {
+        if meta.input_dim == 0 || meta.classes == 0 {
+            bail!("native MLP needs input_dim > 0 and classes > 0");
+        }
+        let dims: Vec<usize> = std::iter::once(meta.input_dim)
+            .chain(meta.hidden.iter().copied())
+            .chain(std::iter::once(meta.classes))
+            .collect();
+        let layers: Vec<(usize, usize)> = dims.windows(2).map(|w| (w[0], w[1])).collect();
+        let mlp = NativeMlp {
+            input_dim: meta.input_dim,
+            classes: meta.classes,
+            layers,
+            seed: meta.seed,
+        };
+        if meta.params.len() != 2 * mlp.layers.len() {
+            bail!(
+                "meta declares {} param tensors, architecture {:?} needs {}",
+                meta.params.len(),
+                dims,
+                2 * mlp.layers.len()
+            );
+        }
+        for (i, &(fan_in, fan_out)) in mlp.layers.iter().enumerate() {
+            let (w, b) = (&meta.params[2 * i], &meta.params[2 * i + 1]);
+            if w.shape != [fan_in, fan_out] || b.shape != [fan_out] {
+                bail!(
+                    "layer {} shape mismatch: meta has {}{:?}/{}{:?}, architecture wants [{fan_in},{fan_out}]/[{fan_out}]",
+                    i + 1,
+                    w.name,
+                    w.shape,
+                    b.name,
+                    b.shape
+                );
+            }
+        }
+        Ok(mlp)
+    }
+
+    /// Glorot-uniform weights + zero biases, deterministic per seed —
+    /// the native `init` artifact (same scheme as `model.py`'s
+    /// `init_params`, seeded via [`crate::util::Rng`]).
+    pub fn init(&self) -> ModelParams {
+        let mut rng = Rng::new(self.seed);
+        let mut tensors = Vec::with_capacity(2 * self.layers.len());
+        for (i, &(fan_in, fan_out)) in self.layers.iter().enumerate() {
+            let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
+            let w = (0..fan_in * fan_out)
+                .map(|_| rng.range_f64(-limit, limit) as f32)
+                .collect();
+            tensors.push(ParamTensor {
+                name: format!("w{}", i + 1),
+                shape: vec![fan_in, fan_out],
+                data: w,
+            });
+            tensors.push(ParamTensor {
+                name: format!("b{}", i + 1),
+                shape: vec![fan_out],
+                data: vec![0.0; fan_out],
+            });
+        }
+        ModelParams { tensors }
+    }
+
+    /// Forward pass keeping every post-activation (needed by backward):
+    /// returns `[a_0 = x, a_1, …, a_{L-1}, logits]` — `L+1` buffers.
+    fn forward_all(&self, params: &ModelParams, x: &[f32], rows: usize) -> Vec<Vec<f32>> {
+        let n_layers = self.layers.len();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers + 1);
+        acts.push(x.to_vec());
+        for (li, &(fan_in, fan_out)) in self.layers.iter().enumerate() {
+            let w = &params.tensors[2 * li].data;
+            let b = &params.tensors[2 * li + 1].data;
+            let a = &acts[li];
+            let mut z = vec![0f32; rows * fan_out];
+            for r in 0..rows {
+                let zr = &mut z[r * fan_out..(r + 1) * fan_out];
+                zr.copy_from_slice(b);
+                let ar = &a[r * fan_in..(r + 1) * fan_in];
+                for (k, &av) in ar.iter().enumerate() {
+                    if av != 0.0 {
+                        let wk = &w[k * fan_out..(k + 1) * fan_out];
+                        for (zv, &wv) in zr.iter_mut().zip(wk) {
+                            *zv += av * wv;
+                        }
+                    }
+                }
+            }
+            if li < n_layers - 1 {
+                for zv in z.iter_mut() {
+                    if *zv < 0.0 {
+                        *zv = 0.0;
+                    }
+                }
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// Logits for `rows` samples (`rows × classes`, row-major).
+    pub fn logits(&self, params: &ModelParams, x: &[f32], rows: usize) -> Vec<f32> {
+        self.forward_all(params, x, rows).pop().unwrap()
+    }
+
+    /// Class probabilities (numerically stable row-wise softmax).
+    pub fn probs(&self, params: &ModelParams, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut logits = self.logits(params, x, rows);
+        for row in logits.chunks_mut(self.classes) {
+            softmax_row(row);
+        }
+        logits
+    }
+
+    /// Mean NLL + accuracy over one batch of `rows` labeled samples.
+    pub fn loss_acc(&self, params: &ModelParams, x: &[f32], y: &[i32], rows: usize) -> (f32, f32) {
+        let logits = self.logits(params, x, rows);
+        loss_acc_of_logits(&logits, y, rows, self.classes)
+    }
+
+    /// Loss, accuracy and the full parameter gradient (softmax-CE
+    /// backward pass). Gradients come back flat, in artifact order
+    /// `[dw1, db1, dw2, db2, …]`, shapes matching `params`.
+    pub fn loss_grad(
+        &self,
+        params: &ModelParams,
+        x: &[f32],
+        y: &[i32],
+        rows: usize,
+    ) -> (f32, f32, Vec<Vec<f32>>) {
+        let n_layers = self.layers.len();
+        let acts = self.forward_all(params, x, rows);
+        let logits = &acts[n_layers];
+        let (loss, acc) = loss_acc_of_logits(logits, y, rows, self.classes);
+
+        // dz for the output layer: (softmax(logits) − onehot(y)) / rows.
+        let mut dz = logits.clone();
+        for (r, row) in dz.chunks_mut(self.classes).enumerate() {
+            softmax_row(row);
+            row[y[r] as usize] -= 1.0;
+            for v in row.iter_mut() {
+                *v /= rows as f32;
+            }
+        }
+
+        let mut grads: Vec<Vec<f32>> =
+            params.tensors.iter().map(|t| vec![0f32; t.numel()]).collect();
+        for li in (0..n_layers).rev() {
+            let (fan_in, fan_out) = self.layers[li];
+            let a = &acts[li]; // input to this layer, rows × fan_in
+            {
+                let dw = &mut grads[2 * li];
+                for r in 0..rows {
+                    let dzr = &dz[r * fan_out..(r + 1) * fan_out];
+                    let ar = &a[r * fan_in..(r + 1) * fan_in];
+                    for (k, &av) in ar.iter().enumerate() {
+                        if av != 0.0 {
+                            let dwk = &mut dw[k * fan_out..(k + 1) * fan_out];
+                            for (dwv, &dzv) in dwk.iter_mut().zip(dzr) {
+                                *dwv += av * dzv;
+                            }
+                        }
+                    }
+                }
+            }
+            {
+                let db = &mut grads[2 * li + 1];
+                for r in 0..rows {
+                    let dzr = &dz[r * fan_out..(r + 1) * fan_out];
+                    for (dbv, &dzv) in db.iter_mut().zip(dzr) {
+                        *dbv += dzv;
+                    }
+                }
+            }
+            if li > 0 {
+                // da_{li-1} = dz · Wᵀ, then gate through the ReLU mask
+                // (a_{li-1} > 0 ⟺ z_{li-1} > 0 since a = relu(z)).
+                let w = &params.tensors[2 * li].data;
+                let mut da = vec![0f32; rows * fan_in];
+                for r in 0..rows {
+                    let dzr = &dz[r * fan_out..(r + 1) * fan_out];
+                    let dar = &mut da[r * fan_in..(r + 1) * fan_in];
+                    for (k, dav) in dar.iter_mut().enumerate() {
+                        let wk = &w[k * fan_out..(k + 1) * fan_out];
+                        let mut s = 0f32;
+                        for (&wv, &dzv) in wk.iter().zip(dzr) {
+                            s += wv * dzv;
+                        }
+                        *dav = s;
+                    }
+                }
+                for (dav, &av) in da.iter_mut().zip(&acts[li]) {
+                    if av <= 0.0 {
+                        *dav = 0.0;
+                    }
+                }
+                dz = da;
+            }
+        }
+        (loss, acc, grads)
+    }
+}
+
+/// In-place stable softmax over one row.
+fn softmax_row(row: &mut [f32]) {
+    let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for v in row.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Mean sparse-categorical cross-entropy + accuracy from raw logits.
+/// Loss accumulates in f64 (the finite-difference gradient check in
+/// `rust/tests/native_engine.rs` leans on that headroom).
+fn loss_acc_of_logits(logits: &[f32], y: &[i32], rows: usize, classes: usize) -> (f32, f32) {
+    let mut nll_sum = 0f64;
+    let mut correct = 0usize;
+    for (r, row) in logits.chunks(classes).enumerate() {
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f64 = mx as f64
+            + row
+                .iter()
+                .map(|&v| ((v - mx) as f64).exp())
+                .sum::<f64>()
+                .ln();
+        let label = y[r] as usize;
+        nll_sum += lse - row[label] as f64;
+        // First-max argmax, like jnp.argmax.
+        let mut arg = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > row[arg] {
+                arg = c;
+            }
+        }
+        if arg == label {
+            correct += 1;
+        }
+    }
+    ((nll_sum / rows as f64) as f32, correct as f32 / rows as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tiny() -> (NativeMlp, ModelParams) {
+        let meta = ArtifactMeta::synthesize(PathBuf::new(), 3, &[4], 2, 4, 0.01, 9);
+        let mlp = NativeMlp::from_meta(&meta).unwrap();
+        let params = mlp.init();
+        (mlp, params)
+    }
+
+    #[test]
+    fn from_meta_checks_param_contract() {
+        let mut meta = ArtifactMeta::synthesize(PathBuf::new(), 3, &[4], 2, 4, 0.01, 9);
+        assert!(NativeMlp::from_meta(&meta).is_ok());
+        meta.params[0].shape = vec![3, 5]; // contradicts hidden=[4]
+        assert!(NativeMlp::from_meta(&meta).is_err());
+        meta.params.pop();
+        assert!(NativeMlp::from_meta(&meta).is_err());
+    }
+
+    #[test]
+    fn init_is_deterministic_glorot() {
+        let (mlp, p1) = tiny();
+        let p2 = mlp.init();
+        assert_eq!(p1, p2);
+        let limit = (6.0f64 / (3 + 4) as f64).sqrt() as f32;
+        assert!(p1.tensors[0].data.iter().all(|v| v.abs() <= limit));
+        assert!(p1.tensors[0].data.iter().any(|&v| v != 0.0));
+        assert!(p1.tensors[1].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn probs_are_a_distribution_and_match_single_row() {
+        let (mlp, params) = tiny();
+        let x: Vec<f32> = (0..4 * 3).map(|i| (i as f32 * 0.37).sin()).collect();
+        let probs = mlp.probs(&params, &x, 4);
+        assert_eq!(probs.len(), 4 * 2);
+        for row in probs.chunks(2) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+        // Row-wise compute ⟹ batched == single, bit for bit.
+        for r in 0..4 {
+            let single = mlp.probs(&params, &x[r * 3..(r + 1) * 3], 1);
+            assert_eq!(&probs[r * 2..(r + 1) * 2], &single[..]);
+        }
+    }
+
+    #[test]
+    fn loss_of_uniform_logits_is_ln_classes() {
+        let meta = ArtifactMeta::synthesize(PathBuf::new(), 2, &[], 4, 2, 0.01, 1);
+        let mlp = NativeMlp::from_meta(&meta).unwrap();
+        // Zero weights + zero biases → uniform logits → loss = ln(4).
+        let mut params = mlp.init();
+        for t in &mut params.tensors {
+            t.data.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let (loss, _) = mlp.loss_acc(&params, &[1.0, 2.0, -1.0, 0.5], &[0, 3], 2);
+        assert!((loss - (4f32).ln()).abs() < 1e-6, "loss {loss}");
+    }
+
+    #[test]
+    fn grads_match_shapes_and_bias_grad_sums_dz() {
+        let (mlp, params) = tiny();
+        let x: Vec<f32> = (0..4 * 3).map(|i| (i as f32 * 0.11).cos()).collect();
+        let y = [0i32, 1, 1, 0];
+        let (loss, acc, grads) = mlp.loss_grad(&params, &x, &y, 4);
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
+        assert_eq!(grads.len(), params.tensors.len());
+        for (g, t) in grads.iter().zip(&params.tensors) {
+            assert_eq!(g.len(), t.numel());
+        }
+        // Output-layer dz rows sum to 0 (softmax − onehot), so the
+        // output bias gradient must sum to ~0 as well.
+        let db_out: f32 = grads[3].iter().sum();
+        assert!(db_out.abs() < 1e-5, "db_out {db_out}");
+    }
+}

@@ -1,0 +1,226 @@
+//! The self-describing native model format (`.kmln`).
+//!
+//! The PJRT path ships a trained model as a bare [`ModelParams`] blob
+//! (`KMLP`, `runtime/params.rs`) because the artifact dir carries the
+//! architecture. The native backend has no artifact dir to lean on, so
+//! its checkpoint bundles the **spec** (layer shapes + Adam hyper-
+//! parameters + seed) with the parameter blob — a single file restores
+//! a runnable engine with zero external artifacts:
+//!
+//! ```text
+//! magic "KMLN" | u32 version
+//! u32 input_dim | u32 classes | u32 batch
+//! f64 lr | f64 beta1 | f64 beta2 | f64 eps | u64 seed
+//! u8 n_hidden | u32 hidden[n_hidden]
+//! u32 params_len | KMLP blob (ModelParams::to_bytes)
+//! ```
+//!
+//! Everything is little-endian; the embedded params blob keeps its own
+//! magic/version so both layers of the format are independently
+//! checkable.
+
+use crate::runtime::meta::ArtifactMeta;
+use crate::runtime::params::{ModelParams, Reader};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 4] = b"KMLN";
+const VERSION: u32 = 1;
+
+/// Architecture + training hyper-parameters — the native twin of
+/// `python/compile/model.py::ModelSpec`, and exactly what
+/// [`ArtifactMeta::synthesize`] needs to rebuild a meta.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NativeSpec {
+    pub input_dim: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub seed: u64,
+}
+
+impl From<&ArtifactMeta> for NativeSpec {
+    fn from(m: &ArtifactMeta) -> NativeSpec {
+        NativeSpec {
+            input_dim: m.input_dim,
+            hidden: m.hidden.clone(),
+            classes: m.classes,
+            batch: m.batch,
+            lr: m.lr,
+            beta1: m.beta1,
+            beta2: m.beta2,
+            eps: m.eps,
+            seed: m.seed,
+        }
+    }
+}
+
+impl NativeSpec {
+    /// Rebuild a full artifact meta (params in `w1, b1, …` order, no
+    /// HLO artifacts) rooted at `dir`.
+    pub fn to_meta(&self, dir: PathBuf) -> ArtifactMeta {
+        let mut meta = ArtifactMeta::synthesize(
+            dir,
+            self.input_dim,
+            &self.hidden,
+            self.classes,
+            self.batch,
+            self.lr,
+            self.seed,
+        );
+        meta.beta1 = self.beta1;
+        meta.beta2 = self.beta2;
+        meta.eps = self.eps;
+        meta
+    }
+}
+
+/// A checkpoint: spec + trained parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NativeModel {
+    pub spec: NativeSpec,
+    pub params: ModelParams,
+}
+
+impl NativeModel {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let params = self.params.to_bytes();
+        let s = &self.spec;
+        let mut out = Vec::with_capacity(64 + 4 * s.hidden.len() + params.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(s.input_dim as u32).to_le_bytes());
+        out.extend_from_slice(&(s.classes as u32).to_le_bytes());
+        out.extend_from_slice(&(s.batch as u32).to_le_bytes());
+        out.extend_from_slice(&s.lr.to_le_bytes());
+        out.extend_from_slice(&s.beta1.to_le_bytes());
+        out.extend_from_slice(&s.beta2.to_le_bytes());
+        out.extend_from_slice(&s.eps.to_le_bytes());
+        out.extend_from_slice(&s.seed.to_le_bytes());
+        out.push(s.hidden.len() as u8);
+        for &h in &s.hidden {
+            out.extend_from_slice(&(h as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&(params.len() as u32).to_le_bytes());
+        out.extend_from_slice(&params);
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<NativeModel> {
+        let mut r = Reader::new(bytes);
+        if r.take(4)? != MAGIC {
+            bail!("bad magic (not a KMLN native model checkpoint)");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported native checkpoint version {version}");
+        }
+        let input_dim = r.u32()? as usize;
+        let classes = r.u32()? as usize;
+        let batch = r.u32()? as usize;
+        let lr = r.f64()?;
+        let beta1 = r.f64()?;
+        let beta2 = r.f64()?;
+        let eps = r.f64()?;
+        let seed = r.u64()?;
+        let n_hidden = r.take(1)?[0] as usize;
+        let mut hidden = Vec::with_capacity(n_hidden);
+        for _ in 0..n_hidden {
+            hidden.push(r.u32()? as usize);
+        }
+        let params_len = r.u32()? as usize;
+        let params = ModelParams::from_bytes(r.take(params_len)?)
+            .context("embedded params blob")?;
+        if r.pos != r.len() {
+            bail!("trailing bytes in native checkpoint");
+        }
+        let spec = NativeSpec { input_dim, hidden, classes, batch, lr, beta1, beta2, eps, seed };
+        let model = NativeModel { spec, params };
+        model.check()?;
+        Ok(model)
+    }
+
+    /// Cross-check the embedded params against the embedded spec.
+    pub fn check(&self) -> Result<()> {
+        let meta = self.spec.to_meta(PathBuf::new());
+        self.params
+            .check_against(&meta.params)
+            .context("native checkpoint: params contradict spec")
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<NativeModel> {
+        let path = path.as_ref();
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeMlp;
+
+    fn sample() -> NativeModel {
+        let meta = ArtifactMeta::synthesize(PathBuf::new(), 3, &[5], 2, 4, 0.02, 11);
+        let params = NativeMlp::from_meta(&meta).unwrap().init();
+        NativeModel { spec: NativeSpec::from(&meta), params }
+    }
+
+    #[test]
+    fn roundtrip_is_byte_identical() {
+        let m = sample();
+        let bytes = m.to_bytes();
+        let back = NativeModel::from_bytes(&bytes).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(bytes, back.to_bytes());
+    }
+
+    #[test]
+    fn spec_to_meta_round_trips() {
+        let m = sample();
+        let meta = m.spec.to_meta(PathBuf::from("/x"));
+        assert_eq!(NativeSpec::from(&meta), m.spec);
+        assert!(!meta.has_hlo_artifacts());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let m = sample();
+        let good = m.to_bytes();
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(NativeModel::from_bytes(&bad_magic).is_err());
+        let mut short = good.clone();
+        short.truncate(short.len() - 5);
+        assert!(NativeModel::from_bytes(&short).is_err());
+        let mut long = good.clone();
+        long.push(0);
+        assert!(NativeModel::from_bytes(&long).is_err());
+        // Spec/params contradiction: claim a different input width.
+        let mut mismatched = m.clone();
+        mismatched.spec.input_dim = 7;
+        assert!(NativeModel::from_bytes(&mismatched.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn save_load_through_a_file() {
+        let m = sample();
+        let path = std::env::temp_dir()
+            .join(format!("kafka-ml-kmln-unit-test-{}.kmln", std::process::id()));
+        m.save(&path).unwrap();
+        let back = NativeModel::load(&path).unwrap();
+        assert_eq!(m, back);
+        let _ = std::fs::remove_file(&path);
+    }
+}

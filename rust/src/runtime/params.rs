@@ -86,7 +86,7 @@ impl ModelParams {
     }
 
     pub fn from_bytes(bytes: &[u8]) -> Result<ModelParams> {
-        let mut r = Reader { bytes, pos: 0 };
+        let mut r = Reader::new(bytes);
         if r.take(4)? != MAGIC {
             bail!("bad magic (not a KMLP model blob)");
         }
@@ -125,29 +125,50 @@ impl ModelParams {
     }
 }
 
-struct Reader<'a> {
+/// Bounds-checked little-endian byte cursor, shared by the `KMLP`
+/// params decoder above and the `KMLN` native-checkpoint decoder
+/// (`runtime/native/model.rs`).
+pub(crate) struct Reader<'a> {
     bytes: &'a [u8],
-    pos: usize,
+    pub(crate) pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn new(bytes: &'a [u8]) -> Reader<'a> {
+        Reader { bytes, pos: 0 }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.bytes.len() {
-            bail!("truncated model blob at byte {}", self.pos);
+            bail!("truncated blob at byte {}", self.pos);
         }
         let s = &self.bytes[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
-    fn u16(&mut self) -> Result<u16> {
+    pub(crate) fn u16(&mut self) -> Result<u16> {
         let b = self.take(2)?;
         Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes(b.try_into().unwrap()))
     }
 }
 

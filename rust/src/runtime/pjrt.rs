@@ -1,0 +1,257 @@
+//! The PJRT execution backend.
+//!
+//! Compiles every HLO-text artifact once, lazily, and runs the step
+//! functions on the PJRT CPU client. The interchange is HLO **text**
+//! (see `python/compile/aot.py` for why — xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos).
+//!
+//! Since the [`super::Backend`] trait moves host-side tensors across the
+//! boundary, this backend re-marshals `ModelParams` into [`xla::Literal`]s
+//! per call; the inference hot path amortizes that with a small
+//! last-params literal cache (replicas predict many times with the same
+//! downloaded model).
+
+use super::backend::{Backend, TrainState};
+use super::meta::ArtifactMeta;
+use super::params::{ModelParams, ParamTensor};
+use anyhow::{anyhow, bail, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    meta: ArtifactMeta,
+    /// Lazily-compiled executables (§Perf: eager compilation of all five
+    /// artifacts cost ~1 s of pod startup; a training Job never touches
+    /// the predict artifacts and an inference replica never touches
+    /// train_step, so each is compiled on first use and cached).
+    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Literal form of the most recently seen inference params.
+    literal_cache: RefCell<Option<(ModelParams, Rc<Vec<xla::Literal>>)>>,
+}
+
+impl PjrtBackend {
+    /// Create the PJRT client. HLO compilation happens lazily, per
+    /// artifact, on first use.
+    pub fn new(meta: ArtifactMeta) -> Result<PjrtBackend> {
+        if !meta.has_hlo_artifacts() {
+            bail!("artifact dir {} lists no HLO artifacts to compile", meta.dir.display());
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(PjrtBackend {
+            client,
+            meta,
+            execs: RefCell::new(HashMap::new()),
+            literal_cache: RefCell::new(None),
+        })
+    }
+
+    fn exec(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.execs.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self.meta.artifact(name)?;
+        let path = self.meta.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?,
+        );
+        self.execs
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Run an artifact and decompose its (return_tuple=True) result.
+    fn run(&self, name: &str, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exec(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("{name}: not a tuple: {e:?}"))
+    }
+
+    fn tensor_literal(name: &str, shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshaping {name}: {e:?}"))
+    }
+
+    fn param_literals(&self, params: &ModelParams) -> Result<Vec<xla::Literal>> {
+        params
+            .tensors
+            .iter()
+            .map(|t| Self::tensor_literal(&t.name, &t.shape, &t.data))
+            .collect()
+    }
+
+    /// `param_literals` through the last-params cache.
+    fn cached_param_literals(&self, params: &ModelParams) -> Result<Rc<Vec<xla::Literal>>> {
+        if let Some((cached, lits)) = &*self.literal_cache.borrow() {
+            if cached == params {
+                return Ok(lits.clone());
+            }
+        }
+        let lits = Rc::new(self.param_literals(params)?);
+        *self.literal_cache.borrow_mut() = Some((params.clone(), lits.clone()));
+        Ok(lits)
+    }
+
+    fn unmarshal(&self, lits: &[xla::Literal]) -> Result<Vec<ParamTensor>> {
+        lits.iter()
+            .zip(&self.meta.params)
+            .map(|(lit, pm)| {
+                Ok(ParamTensor {
+                    name: pm.name.clone(),
+                    shape: pm.shape.clone(),
+                    data: lit
+                        .to_vec::<f32>()
+                        .map_err(|e| anyhow!("tensor {}: {e:?}", pm.name))?,
+                })
+            })
+            .collect()
+    }
+
+    fn batch_literals(
+        &self,
+        x: &[f32],
+        y: &[i32],
+        rows: usize,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let xl = xla::Literal::vec1(x)
+            .reshape(&[rows as i64, self.meta.input_dim as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        Ok((xl, xla::Literal::vec1(y)))
+    }
+}
+
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow!("{e:?}"))?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty scalar"))
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn warmup(&self) -> Result<()> {
+        let names: Vec<String> = self.meta.artifacts.keys().cloned().collect();
+        for name in names {
+            self.exec(&name)?;
+        }
+        Ok(())
+    }
+
+    /// Runs the `init` artifact (the seed was fixed at AOT time,
+    /// mirroring the paper's "model defined once in the Web UI").
+    fn init_params(&self) -> Result<ModelParams> {
+        let outs = self.run("init", &[])?;
+        if outs.len() != self.meta.n_params() {
+            bail!(
+                "init returned {} tensors, meta expects {}",
+                outs.len(),
+                self.meta.n_params()
+            );
+        }
+        Ok(ModelParams { tensors: self.unmarshal(&outs)? })
+    }
+
+    fn train_step(&self, state: &mut TrainState, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let n = self.meta.n_params();
+        let params = self.param_literals(&state.params)?;
+        let moments = |buf: &[Vec<f32>]| -> Result<Vec<xla::Literal>> {
+            buf.iter()
+                .zip(&state.params.tensors)
+                .map(|(m, t)| Self::tensor_literal(&t.name, &t.shape, m))
+                .collect()
+        };
+        let (m, v) = (moments(&state.m)?, moments(&state.v)?);
+        let (xl, yl) = self.batch_literals(x, y, self.meta.batch)?;
+        let tl = xla::Literal::scalar(state.t as f32);
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 3);
+        args.extend(params.iter());
+        args.extend(m.iter());
+        args.extend(v.iter());
+        args.push(&tl);
+        args.push(&xl);
+        args.push(&yl);
+
+        let mut outs = self.run("train_step", &args)?;
+        if outs.len() != 3 * n + 2 {
+            bail!("train_step returned {} outputs, want {}", outs.len(), 3 * n + 2);
+        }
+        let acc = scalar_f32(&outs.pop().unwrap())?;
+        let loss = scalar_f32(&outs.pop().unwrap())?;
+        let new_v = outs.split_off(2 * n);
+        let new_m = outs.split_off(n);
+        state.params = ModelParams { tensors: self.unmarshal(&outs)? };
+        let flat = |lits: Vec<xla::Literal>| -> Result<Vec<Vec<f32>>> {
+            lits.iter()
+                .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}")))
+                .collect()
+        };
+        state.m = flat(new_m)?;
+        state.v = flat(new_v)?;
+        Ok((loss, acc))
+    }
+
+    fn eval_step(&self, params: &ModelParams, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let lits = self.cached_param_literals(params)?;
+        let (xl, yl) = self.batch_literals(x, y, self.meta.batch)?;
+        let mut args: Vec<&xla::Literal> = lits.iter().collect();
+        args.push(&xl);
+        args.push(&yl);
+        let outs = self.run("eval_step", &args)?;
+        Ok((scalar_f32(&outs[0])?, scalar_f32(&outs[1])?))
+    }
+
+    /// Uses the batch artifact for full batches and the single-record
+    /// artifact for remainders, so any row count works.
+    fn predict(&self, params: &ModelParams, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let f = self.meta.input_dim;
+        let lits = self.cached_param_literals(params)?;
+        let bs = self.meta.artifact("predict")?.batch.unwrap_or(self.meta.batch);
+        let mut probs = Vec::with_capacity(rows * self.meta.classes);
+        let mut row = 0;
+        while row < rows {
+            let (art, take) = if rows - row >= bs {
+                ("predict", bs)
+            } else {
+                ("predict_single", 1)
+            };
+            let xl = xla::Literal::vec1(&x[row * f..(row + take) * f])
+                .reshape(&[take as i64, f as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let mut args: Vec<&xla::Literal> = lits.iter().collect();
+            args.push(&xl);
+            let outs = self.run(art, &args)?;
+            probs.extend(outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?);
+            row += take;
+        }
+        Ok(probs)
+    }
+}
+
+// PjrtBackend cannot be constructed against the hermetic xla stub
+// (PjRtClient::cpu errors), so its behavioral tests require real
+// artifacts + a real xla-rs link; Engine::load's fallback path is
+// covered in rust/tests/runtime_integration.rs either way.

@@ -3,30 +3,27 @@
 
 use kafka_ml::runtime::Engine;
 
-/// Load the PJRT engine from `artifacts/`, or return `None` to skip —
-/// but ONLY for the two expected clean-checkout conditions:
+/// Load the runtime engine for the integration suites. There is **no
+/// skip path**: the pure-Rust native backend loads with zero external
+/// artifacts, so the end-to-end surface runs on every clean checkout.
 ///
-/// * `artifacts/meta.json` unreadable (`make artifacts` never ran) —
-///   the io error is contexted as "reading …meta.json";
-/// * the hermetic stub `xla` crate is linked ("PJRT backend
-///   unavailable").
-///
-/// Anything else (corrupt/stale artifacts, a real backend failing)
-/// panics: artifacts exist, so going green with zero end-to-end
-/// coverage would hide a regression.
-pub fn engine_for_tests() -> Option<Engine> {
+/// Backend selection is [`kafka_ml::runtime::BackendSelect::Auto`]:
+/// when `make artifacts` has produced HLO files *and* a real PJRT
+/// client is linked, the suites exercise PJRT; otherwise they run on
+/// the native engine. If no backend loads at all, that is a bug in the
+/// runtime — fail loudly, never go green without coverage.
+pub fn engine_for_tests() -> Engine {
     match Engine::load("artifacts") {
-        Ok(e) => Some(e),
-        Err(e) => {
-            let msg = format!("{e:#}");
-            let missing_artifacts = msg.contains("reading") && msg.contains("meta.json");
-            let stub_backend = msg.contains("PJRT backend unavailable");
-            if missing_artifacts || stub_backend {
-                eprintln!("skipping PJRT-dependent test: {msg}");
-                None
-            } else {
-                panic!("artifacts present but engine failed to load: {msg}");
-            }
+        Ok(e) => {
+            eprintln!(
+                "integration suite backend: {} ({})",
+                e.backend_name(),
+                e.platform()
+            );
+            e
         }
+        Err(e) => panic!(
+            "no runtime backend loaded — the native backend must always be available: {e:#}"
+        ),
     }
 }

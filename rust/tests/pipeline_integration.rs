@@ -1,12 +1,16 @@
 //! End-to-end pipeline tests: the full Fig-1 flow (A–F) over the real
-//! broker, orchestrator, REST back-end and PJRT runtime, with the real
-//! AOT artifacts. Requires `make artifacts`.
+//! broker, orchestrator, REST back-end and model runtime. These run on
+//! **every** checkout — training Jobs and inference replicas load the
+//! PJRT backend when real AOT artifacts exist and the pure-Rust native
+//! backend otherwise (see `common::engine_for_tests`); nothing here
+//! skips.
 
 use kafka_ml::broker::ClientLocality;
 use kafka_ml::coordinator::{KafkaMl, KafkaMlConfig, TrainParams};
 use kafka_ml::json::Json;
-use kafka_ml::ml::hcopd_dataset;
+use kafka_ml::ml::{hcopd_dataset, separable_dataset};
 use kafka_ml::registry::TrainingStatus;
+use kafka_ml::runtime::BackendSelect;
 use std::time::Duration;
 
 fn avro_config() -> Json {
@@ -34,14 +38,14 @@ fn platform() -> KafkaMl {
 
 mod common;
 
-/// True when `make artifacts` has run AND a real PJRT backend is
-/// linked. A clean checkout (no artifacts, hermetic stub `xla` crate)
-/// skips these end-to-end tests — the broker/coordinator layers are
-/// covered by the non-PJRT suites. Any OTHER load error panics inside
-/// [`common::engine_for_tests`] so the suite cannot silently go green
-/// without coverage.
-fn pjrt_available() -> bool {
-    common::engine_for_tests().is_some()
+/// The suite-level guarantee the old `pjrt_available()` skip gate has
+/// been replaced with: a runtime backend ALWAYS loads (panics inside
+/// the helper otherwise), so every test below runs unconditionally.
+#[test]
+fn runtime_backend_is_available_for_the_pipeline() {
+    let e = common::engine_for_tests();
+    assert!(matches!(e.backend_name(), "pjrt" | "native"));
+    assert_eq!(e.meta().input_dim, 8);
 }
 
 /// Steps A–D: define, configure, deploy, ingest, wait for training.
@@ -71,11 +75,109 @@ fn train_one(kml: &KafkaMl, format: &str, config: &Json, validation_rate: f64) -
     r.id
 }
 
+/// The ISSUE-4 acceptance pipeline: a **deterministic** end-to-end run
+/// — produce a training stream of the seeded separable dataset, train
+/// to a falling loss curve, deploy for inference, stream requests over
+/// the broker, and assert ≥90% accuracy on fresh draws from the same
+/// rule. The model spec is written by the test itself (meta.json with
+/// no HLO artifacts + `--backend native`), so the outcome is identical
+/// on a clean checkout and on a checkout with real AOT artifacts.
+#[test]
+fn full_pipeline_end_to_end_native_deterministic() {
+    let dir = std::env::temp_dir().join(format!("kafka-ml-e2e-native-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("meta.json"),
+        r#"{
+          "format_version": 1,
+          "spec": {"input_dim": 8, "hidden": [16], "classes": 4, "batch": 10,
+                   "lr": 0.01, "beta1": 0.9, "beta2": 0.999, "eps": 1e-07, "seed": 7},
+          "params": [
+            {"name": "w1", "shape": [8, 16], "dtype": "f32"},
+            {"name": "b1", "shape": [16], "dtype": "f32"},
+            {"name": "w2", "shape": [16, 4], "dtype": "f32"},
+            {"name": "b2", "shape": [4], "dtype": "f32"}
+          ],
+          "artifacts": {}
+        }"#,
+    )
+    .unwrap();
+
+    let kml = KafkaMl::start(KafkaMlConfig {
+        backend: BackendSelect::Native,
+        ..Default::default()
+    })
+    .unwrap();
+    let model = kml
+        .create_model_from("separable-mlp", &dir.to_string_lossy())
+        .unwrap();
+    let conf = kml.create_configuration("separable", &[model]).unwrap();
+    let dep = kml
+        .deploy_training(conf, &TrainParams { epochs: 30, seed: 7, ..Default::default() })
+        .unwrap();
+
+    // D: produce the training stream (held-out tail becomes validation).
+    let train = separable_dataset(260, 8, 4, 1);
+    kml.send_stream(
+        dep.id,
+        &train.samples,
+        "sep-data",
+        "RAW",
+        &raw_config(),
+        0.2,
+        ClientLocality::External,
+    )
+    .unwrap();
+    let results = kml.wait_training(&dep, Duration::from_secs(120)).unwrap();
+    let r = &results[0];
+    assert_eq!(r.status, TrainingStatus::Finished);
+
+    // Train to loss decrease: the curve must fall hard, not wiggle.
+    assert_eq!(r.metrics.loss_curve.len(), 30);
+    let (first, last) = (r.metrics.loss_curve[0], *r.metrics.loss_curve.last().unwrap());
+    assert!(
+        last < first * 0.5,
+        "loss curve did not fall: {first:.4} -> {last:.4}"
+    );
+    // The held-out validation stream must already classify well.
+    let val_acc = r.metrics.val_accuracy.expect("validation_rate > 0");
+    assert!(val_acc >= 0.9, "validation accuracy only {val_acc:.3}");
+
+    // E/F: deploy replicas, stream fresh requests over the broker.
+    // (§IV-E auto-configuration reads the control log for the input
+    // format — wait for the logger before deploying.)
+    kml.wait_control_logged(dep.id, Duration::from_secs(10)).unwrap();
+    let inf = kml
+        .deploy_inference(r.id, 2, "sep-in", "sep-out")
+        .unwrap();
+    let mut client = kml
+        .inference_client(&inf, ClientLocality::External)
+        .unwrap();
+    let test = separable_dataset(40, 8, 4, 2);
+    let mut correct = 0usize;
+    for s in &test.samples {
+        let p = client
+            .request(&s.features, Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(p.probs.len(), 4);
+        let sum: f32 = p.probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3);
+        if p.class as i32 == s.label.unwrap() {
+            correct += 1;
+        }
+    }
+    assert!(
+        correct >= 36,
+        "end-to-end accuracy {correct}/40 below the 90% bar"
+    );
+    kml.stop_inference(inf.id).unwrap();
+    kml.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn full_pipeline_avro_training_and_inference() {
-    if !pjrt_available() {
-        return;
-    }
     let kml = platform();
     let result_id = train_one(&kml, "AVRO", &avro_config(), 0.2);
 
@@ -96,7 +198,6 @@ fn full_pipeline_avro_training_and_inference() {
         .inference_client(&inf, ClientLocality::External)
         .unwrap();
     let ds = hcopd_dataset(20, 8, 77);
-    let mut correct = 0;
     for s in &ds.samples {
         let p = client
             .request(&s.features, Duration::from_secs(10))
@@ -104,21 +205,24 @@ fn full_pipeline_avro_training_and_inference() {
         assert_eq!(p.probs.len(), 4);
         let sum: f32 = p.probs.iter().sum();
         assert!((sum - 1.0).abs() < 1e-3);
-        if p.class as i32 == s.label.unwrap() {
-            correct += 1;
-        }
+        assert!(p.class < 4);
     }
-    // 3 epochs at lr=1e-4 won't be great, but predictions must flow.
-    assert!(correct <= 20);
+    // 3 epochs won't classify the noisy HCOPD rule well (accuracy is
+    // asserted by the deterministic separable pipeline test); here the
+    // contract is that every request flowed through a replica.
+    assert!(
+        kml.cluster
+            .metrics
+            .counter("kafka_ml.inference.predictions")
+            .get()
+            >= 20
+    );
     kml.stop_inference(inf.id).unwrap();
     kml.shutdown();
 }
 
 #[test]
 fn raw_format_pipeline_works_too() {
-    if !pjrt_available() {
-        return;
-    }
     let kml = platform();
     let result_id = train_one(&kml, "RAW", &raw_config(), 0.0);
     let r = kml.store.result(result_id).unwrap();
@@ -128,9 +232,6 @@ fn raw_format_pipeline_works_too() {
 
 #[test]
 fn configuration_with_two_models_trains_both_from_one_stream() {
-    if !pjrt_available() {
-        return;
-    }
     // §III-B's selling point: n models, ONE data stream.
     let kml = platform();
     let m1 = kml.create_model("mlp-a").unwrap();
@@ -168,9 +269,6 @@ fn configuration_with_two_models_trains_both_from_one_stream() {
 
 #[test]
 fn stream_reuse_trains_second_deployment_without_resend() {
-    if !pjrt_available() {
-        return;
-    }
     // §V / Fig 8: D1 trains from the stream; D2 reuses it via a
     // control-message re-send.
     let kml = platform();
@@ -217,9 +315,6 @@ fn stream_reuse_trains_second_deployment_without_resend() {
 
 #[test]
 fn inference_replicas_load_balance_and_survive_kill() {
-    if !pjrt_available() {
-        return;
-    }
     let kml = platform();
     let result_id = train_one(&kml, "RAW", &raw_config(), 0.0);
     let inf = kml
@@ -261,9 +356,6 @@ fn inference_replicas_load_balance_and_survive_kill() {
 
 #[test]
 fn pipeline_survives_broker_failover() {
-    if !pjrt_available() {
-        return;
-    }
     // §II/§IV-F fault tolerance: kill the leader broker of the data
     // topic mid-pipeline; partition replicas take over and training +
     // inference still complete.
@@ -305,9 +397,6 @@ fn pipeline_survives_broker_failover() {
 
 #[test]
 fn training_job_fails_cleanly_without_stream() {
-    if !pjrt_available() {
-        return;
-    }
     // A deployed job whose control message never arrives times out and
     // the back-end records the failure.
     let kml = platform();

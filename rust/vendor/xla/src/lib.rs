@@ -106,14 +106,24 @@ impl Literal {
         }
     }
 
-    /// Reinterpret with new dims (element count must match).
+    /// Reinterpret with new dims (element count must match). Edge cases
+    /// follow the real binding: an empty `dims` is a rank-0 scalar (one
+    /// element), a 0-sized dim is an empty tensor, negative dims are
+    /// rejected (xla-rs has no `-1` wildcard), and the dim product is
+    /// computed checked so absurd shapes error instead of overflowing.
     pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
-        let numel: i64 = dims.iter().product();
+        if let Some(&bad) = dims.iter().find(|&&d| d < 0) {
+            return Err(XlaError(format!("reshape: negative dim {bad} in {dims:?}")));
+        }
+        let numel = dims
+            .iter()
+            .try_fold(1u64, |acc, &d| acc.checked_mul(d as u64))
+            .ok_or_else(|| XlaError(format!("reshape: dim product overflows in {dims:?}")))?;
         let have = match &self.data {
             Elements::F32(v) => v.len(),
             Elements::I32(v) => v.len(),
         };
-        if numel as usize != have {
+        if numel != have as u64 {
             return Err(XlaError(format!(
                 "reshape: {have} elements into dims {dims:?}"
             )));
@@ -242,5 +252,51 @@ mod tests {
     fn client_reports_unavailable() {
         let err = PjRtClient::cpu().unwrap_err();
         assert!(format!("{err:?}").contains("PJRT backend unavailable"));
+    }
+
+    // ---- edge-case regressions (empty tensors, rank-0 scalars) ------------
+
+    #[test]
+    fn empty_tensor_roundtrips() {
+        let l = Literal::vec1::<f32>(&[]);
+        assert_eq!(l.dims(), &[0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), Vec::<f32>::new());
+        // 0-sized reshapes are legal as long as the product stays 0.
+        let r = l.reshape(&[0, 5]).unwrap();
+        assert_eq!(r.dims(), &[0, 5]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), Vec::<f32>::new());
+        // …but an empty tensor cannot become a scalar (product 1 ≠ 0).
+        assert!(l.reshape(&[]).is_err());
+    }
+
+    #[test]
+    fn rank0_scalar_reshapes_both_ways() {
+        let s = Literal::scalar(2.5f32);
+        assert_eq!(s.dims(), &[] as &[i64]);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![2.5]);
+        // scalar -> [1] -> [1,1] -> back to rank 0.
+        let r1 = s.reshape(&[1]).unwrap();
+        let r2 = r1.reshape(&[1, 1]).unwrap();
+        let back = r2.reshape(&[]).unwrap();
+        assert_eq!(back.dims(), &[] as &[i64]);
+        assert_eq!(back.to_vec::<f32>().unwrap(), vec![2.5]);
+        // A rank-1 vec of length 1 is also scalar-compatible.
+        assert!(Literal::vec1(&[7i32]).reshape(&[]).is_ok());
+        assert!(Literal::vec1(&[7i32, 8]).reshape(&[]).is_err());
+    }
+
+    #[test]
+    fn reshape_rejects_negative_dims() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        // (-2)·(-2) = 4 used to slip through the product check.
+        let err = l.reshape(&[-2, -2]).unwrap_err();
+        assert!(format!("{err}").contains("negative dim"), "{err}");
+        assert!(l.reshape(&[-1, 4]).is_err());
+    }
+
+    #[test]
+    fn reshape_rejects_overflowing_dim_products() {
+        let l = Literal::vec1(&[1.0f32]);
+        assert!(l.reshape(&[i64::MAX, i64::MAX]).is_err());
     }
 }
