@@ -22,8 +22,9 @@
 
 use kafka_ml::benchkit::{Bench, Report, Table};
 use kafka_ml::broker::{
-    BrokerConfig, ClientLocality, Cluster, ClusterHandle, Consumer, LogConfig, NetProfile,
-    Producer, ProducerConfig, Record, StorageMode,
+    BrokerConfig, BrokerHandle, BrokerServer, BrokerTransport, ClientLocality, Cluster,
+    ClusterHandle, Consumer, LogConfig, NetProfile, Producer, ProducerConfig, Record, RemoteBroker,
+    StorageMode,
 };
 use kafka_ml::util::Bytes;
 use std::time::{Duration, Instant};
@@ -352,6 +353,67 @@ fn main() -> anyhow::Result<()> {
             &[("mode", mode), ("payload_bytes", 1024.0)],
             &[("records_per_s", rps), ("wall_s", wall.as_secs_f64())],
         );
+    }
+    t.print();
+
+    // ---- remote vs in-process transport ---------------------------------------
+    // The cost of the real wire: one single-record produce + one fetch
+    // through the same BrokerTransport API, in-process (direct calls)
+    // vs over a loopback TCP socket (frame encode + CRC + syscalls).
+    // This is the number the ROADMAP's reactor follow-on will move.
+    let mut t = Table::new(
+        "Transport round trip (1k x [produce 64B + fetch], loopback TCP vs in-process)",
+        &["transport", "p50 (µs)", "p99 (µs)", "round trips/s"],
+    );
+    let rt_iters = 1000usize;
+    for remote in [false, true] {
+        let c = Cluster::new(BrokerConfig::default());
+        c.create_topic("rt", 1);
+        let mut server = None;
+        let handle: BrokerHandle = if remote {
+            let s = BrokerServer::start("127.0.0.1:0", c.clone())?;
+            let h: BrokerHandle = RemoteBroker::connect(&s.addr().to_string())?;
+            server = Some(s);
+            h
+        } else {
+            c.clone()
+        };
+        let body = Bytes::from_vec(vec![5u8; 64]);
+        // Warmup (connection pool, allocator, branch predictors).
+        for i in 0..50 {
+            handle.produce("rt", 0, &[Record::new(body.clone())], ClientLocality::Remote, None)?;
+            handle.fetch_batch("rt", 0, i as u64, 1, ClientLocality::Remote)?;
+        }
+        let mut lats = Vec::with_capacity(rt_iters);
+        let t0 = Instant::now();
+        for i in 0..rt_iters {
+            let it0 = Instant::now();
+            handle.produce("rt", 0, &[Record::new(body.clone())], ClientLocality::Remote, None)?;
+            let got =
+                handle.fetch_batch("rt", 0, (50 + i) as u64, 1, ClientLocality::Remote)?;
+            assert_eq!(got.len(), 1);
+            lats.push(it0.elapsed());
+        }
+        let wall = t0.elapsed();
+        lats.sort();
+        let us = |d: Duration| d.as_secs_f64() * 1e6;
+        let p50 = us(lats[lats.len() / 2]);
+        let p99 = us(lats[lats.len() * 99 / 100]);
+        let ops = rt_iters as f64 / wall.as_secs_f64();
+        t.row(&[
+            if remote { "remote (loopback TCP)" } else { "in-process" }.to_string(),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+            format!("{ops:.0}"),
+        ]);
+        report.entry(
+            "remote_vs_inprocess",
+            &[("remote", if remote { 1.0 } else { 0.0 }), ("payload_bytes", 64.0)],
+            &[("p50_us", p50), ("p99_us", p99), ("round_trips_per_s", ops)],
+        );
+        if let Some(s) = server {
+            s.shutdown();
+        }
     }
     t.print();
 

@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
         let mut cfg =
             TrainingJobConfig::new(dep_id, result_id, "artifacts", kml.backend_url());
         cfg.epochs = epochs;
-        run_training_job(&kml.cluster, &cfg, &CancelToken::new()).unwrap();
+        run_training_job(&kml.broker(), &cfg, &CancelToken::new()).unwrap();
     };
 
     // ---- fresh ingest (D1) ---------------------------------------------

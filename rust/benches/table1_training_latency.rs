@@ -110,7 +110,7 @@ fn main() -> anyhow::Result<()> {
         );
         cfg.epochs = epochs;
         cfg.locality = ClientLocality::External; // plain script next to Kafka
-        run_training_job(&kml.cluster, &cfg, &CancelToken::new()).unwrap();
+        run_training_job(&kml.broker(), &cfg, &CancelToken::new()).unwrap();
     });
     kml.shutdown();
 

@@ -91,7 +91,7 @@ fn main() -> anyhow::Result<()> {
         backend: kafka_ml::runtime::BackendSelect::Auto,
     };
     let cancel = CancelToken::new();
-    let cluster = kml.cluster.clone();
+    let cluster: kafka_ml::broker::BrokerHandle = kml.cluster.clone();
     let cfg2 = replica_cfg.clone();
     let c2 = cancel.clone();
     let handle = std::thread::spawn(move || {

@@ -321,9 +321,26 @@ impl Cluster {
         group: Option<(&str, u64)>,
         deadline: Instant,
     ) -> bool {
+        self.wait_for_data_cancellable(assignments, group, deadline, None, || false)
+    }
+
+    /// [`Cluster::wait_for_data`] with an extra wakeup source: the wait
+    /// also ends when `cancel_set` is notified or `cancelled` already
+    /// holds. This is what lets the wire server park a connection
+    /// thread for the client's **full** long-poll deadline (no server-
+    /// side poll slicing) and still shut down promptly — its shutdown
+    /// path notifies the set and every parked handler returns at once.
+    pub fn wait_for_data_cancellable(
+        &self,
+        assignments: &[(TopicPartition, u64)],
+        group: Option<(&str, u64)>,
+        deadline: Instant,
+        cancel_set: Option<&Arc<WaitSet>>,
+        cancelled: impl Fn() -> bool,
+    ) -> bool {
         // Own the Arc clones so the borrowed set slice stays valid for
         // the whole wait.
-        let mut owned: Vec<Arc<WaitSet>> = Vec::with_capacity(assignments.len() + 1);
+        let mut owned: Vec<Arc<WaitSet>> = Vec::with_capacity(assignments.len() + 2);
         let mut unregistered = false;
         for ((topic, p), _) in assignments {
             match self.topic(topic).and_then(|t| t.wait_set(*p).cloned()) {
@@ -338,14 +355,29 @@ impl Cluster {
                 owned.push(ws);
             }
         }
+        if let Some(ws) = cancel_set {
+            owned.push(ws.clone());
+        }
         // With an assignment we could not register for, an append there
         // could never wake us — cap this round so the caller re-checks
         // (bounded retry only in that edge; fully event-driven otherwise).
-        let deadline = if unregistered {
+        let mut deadline = if unregistered {
             deadline.min(Instant::now() + Duration::from_millis(10))
         } else {
             deadline
         };
+        // Group members must keep proving liveness while parked: a park
+        // longer than the session timeout would get a perfectly healthy
+        // member expired (it heartbeats on *wakeups*, and an idle topic
+        // produces none). Cap each wait round well under the session
+        // timeout so the caller heartbeats between rounds — the broker
+        // owns the session configuration, so the cap lives here and
+        // covers the remote wire path (whose server parks on this very
+        // method) for free.
+        if group.is_some() {
+            let slice = Duration::from_millis((self.config.session_timeout_ms / 3).max(1));
+            deadline = deadline.min(Instant::now() + slice);
+        }
         let sets: Vec<&WaitSet> = owned.iter().map(|ws| &**ws).collect();
         // `wait_any` closes the lost-wakeup race for both event kinds: a
         // produce bumps `any_data_ready`, a rebalance bumps the group
@@ -354,7 +386,8 @@ impl Cluster {
         super::notify::wait_any(
             &sets,
             || {
-                self.any_data_ready(assignments)
+                cancelled()
+                    || self.any_data_ready(assignments)
                     || group.is_some_and(|(gid, gen)| self.group_generation(gid) != Some(gen))
             },
             deadline,
@@ -441,8 +474,11 @@ impl Cluster {
 
     // ---- consumer groups -----------------------------------------------------
 
-    /// Join (or create) a group; triggers a rebalance and returns this
-    /// member's assignment.
+    /// Join (or create) a group; a *membership change* triggers a
+    /// rebalance and wakes parked members. An existing member re-joining
+    /// with identical topics (a remote client reconnecting) is
+    /// generation-stable: it gets its current assignment back and the
+    /// rest of the group is not disturbed.
     pub fn join_group(
         &self,
         group_id: &str,
@@ -454,9 +490,21 @@ impl Cluster {
         let g = groups
             .entry(group_id.to_string())
             .or_insert_with(|| GroupState::new(assignor));
-        g.join(member_id, topics, self.clock.now_ms());
+        let changed = g.join(member_id, topics, self.clock.now_ms());
         let partitions = self.group_partitions(g);
-        g.rebalance(&partitions);
+        // A membership change rebalances, as does a *topology* change
+        // under a stable membership: a subscribed topic created after
+        // the last rebalance resolves to new partitions that no event
+        // would otherwise hand out (topic creation does not touch
+        // groups), so the re-join is the recovery point. The topology
+        // bump keeps identical re-joins on an unchanged topology
+        // generation-stable — no reconnect wakeup storms.
+        if changed {
+            g.rebalance(&partitions);
+        } else if partitions != g.rebalanced_partitions {
+            g.generation += 1;
+            g.rebalance(&partitions);
+        }
         GroupMembership {
             generation: g.generation,
             assigned: g.assignment(member_id),
@@ -495,16 +543,22 @@ impl Cluster {
     }
 
     /// Expire stale members of every group (coordinator housekeeping).
+    /// Groups whose membership did not change are left untouched — no
+    /// rebalance, no wakeup of their parked members.
     pub fn expire_group_members(&self) -> Vec<(String, String)> {
         let mut groups = self.groups.lock().unwrap();
         let now = self.clock.now_ms();
         let mut evicted = Vec::new();
         for (gid, g) in groups.iter_mut() {
-            for m in g.expire(now, self.config.session_timeout_ms) {
-                evicted.push((gid.clone(), m));
+            let dead = g.expire(now, self.config.session_timeout_ms);
+            if dead.is_empty() {
+                continue;
             }
             let partitions = self.group_partitions(g);
             g.rebalance(&partitions);
+            for m in dead {
+                evicted.push((gid.clone(), m));
+            }
         }
         evicted
     }
@@ -719,6 +773,96 @@ mod tests {
         let hb = c.heartbeat("g", "a").unwrap();
         assert_eq!(hb.assigned.len(), 4);
         assert_eq!(c.group_members("g"), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn eviction_wakes_parked_survivor() {
+        // Regression (ISSUE 5): a co-member expiring is a membership
+        // change; a survivor parked in a blocking poll must observe it
+        // immediately, not at its own deadline.
+        let clock = ManualClock::new(0);
+        let c = Cluster::with_clock(
+            BrokerConfig { session_timeout_ms: 1000, ..Default::default() },
+            Arc::new(clock.clone()),
+        );
+        c.create_topic("in", 2);
+        c.join_group("g", "a", &["in".into()], Assignor::Range);
+        c.join_group("g", "b", &["in".into()], Assignor::Range);
+        let gen = c.group_generation("g").unwrap();
+        let c2 = c.clone();
+        let clock2 = clock.clone();
+        let h = std::thread::spawn(move || {
+            super::super::notify::pause(std::time::Duration::from_millis(20));
+            clock2.advance_ms(2000);
+            // a heartbeats in time; b is expired by the sweep the
+            // heartbeat runs — which must wake the parked thread below.
+            c2.heartbeat("g", "a").unwrap();
+        });
+        // Loop like a real consumer: group waits are capped at
+        // session/3 per round, so one round alone would give a loaded
+        // CI box only ~333 ms of scheduling slack.
+        let t0 = Instant::now();
+        let deadline = t0 + std::time::Duration::from_secs(5);
+        let mut woken = false;
+        while Instant::now() < deadline {
+            if c.wait_for_data(&[], Some(("g", gen)), deadline) {
+                woken = true;
+                break;
+            }
+        }
+        assert!(woken, "eviction never woke the parked survivor");
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+        h.join().unwrap();
+        assert_eq!(c.group_members("g"), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn identical_rejoin_does_not_wake_parked_members() {
+        // Regression (ISSUE 5): a remote client reconnecting re-joins
+        // with identical topics; that must not storm the group with
+        // rebalance wakeups.
+        let c = cluster();
+        c.create_topic("in", 2);
+        c.join_group("g", "a", &["in".into()], Assignor::Range);
+        c.join_group("g", "b", &["in".into()], Assignor::Range);
+        let gen = c.group_generation("g").unwrap();
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            super::super::notify::pause(std::time::Duration::from_millis(20));
+            // b reconnects: same member id, same topics.
+            let m = c2.join_group("g", "b", &["in".into()], Assignor::Range);
+            m.generation
+        });
+        let t0 = Instant::now();
+        // Quiet timeout: the re-join must NOT end this wait early.
+        let woken = c.wait_for_data(
+            &[],
+            Some(("g", gen)),
+            t0 + std::time::Duration::from_millis(200),
+        );
+        assert!(!woken, "identical re-join woke a parked group member");
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(200));
+        let rejoin_gen = h.join().unwrap();
+        assert_eq!(rejoin_gen, gen, "identical re-join bumped the generation");
+    }
+
+    #[test]
+    fn rejoin_after_late_topic_creation_picks_up_partitions() {
+        // A member that subscribed before its topic existed holds an
+        // empty assignment; topic creation alone never rebalances, so
+        // the re-join must detect the topology change (while staying
+        // generation-stable when nothing changed).
+        let c = cluster();
+        let m = c.join_group("g", "a", &["later".into()], Assignor::Range);
+        assert!(m.assigned.is_empty());
+        c.create_topic("later", 2);
+        let m2 = c.join_group("g", "a", &["later".into()], Assignor::Range);
+        assert_eq!(m2.assigned.len(), 2);
+        assert!(m2.generation > m.generation);
+        // Unchanged topology: the next identical re-join is stable.
+        let m3 = c.join_group("g", "a", &["later".into()], Assignor::Range);
+        assert_eq!(m3.generation, m2.generation);
+        assert_eq!(m3.assigned.len(), 2);
     }
 
     #[test]

@@ -8,18 +8,30 @@
 //! * **consumer group** — inference replicas `subscribe` to the input
 //!   topic in a shared group; the broker's coordinator spreads
 //!   partitions across replicas and rebalances on failure (§IV-D).
+//!
+//! The consumer talks to the broker through a [`BrokerTransport`]
+//! handle, so the same code runs in-process (`Arc<Cluster>` coerces)
+//! and against a remote broker over the TCP wire protocol.
 
-use super::cluster::ClusterHandle;
 use super::group::Assignor;
 use super::net::ClientLocality;
 use super::record::{ConsumedRecord, RecordBatch};
+use super::transport::BrokerTransport;
 use super::TopicPartition;
 use anyhow::Result;
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// How often a *saturated* blocking poll (one that keeps finding data
+/// and therefore never parks) still heartbeats. Idle polls heartbeat
+/// after every wait round instead — the broker caps those rounds below
+/// the session timeout. Group session timeouts are expected to be well
+/// above this (Kafka's defaults: 3 s heartbeat / 45 s session).
+const BUSY_HEARTBEAT_EVERY: Duration = Duration::from_millis(500);
+
 pub struct Consumer {
-    cluster: ClusterHandle,
+    broker: Arc<dyn BrokerTransport>,
     locality: ClientLocality,
     group: Option<(String, String)>, // (group_id, member_id)
     /// What `subscribe` was called with, so a member evicted while
@@ -30,12 +42,15 @@ pub struct Consumer {
     assigned: Vec<TopicPartition>,
     positions: HashMap<TopicPartition, u64>,
     next_assigned_idx: usize,
+    /// When this member last proved liveness (join or heartbeat) —
+    /// drives the saturated-poll heartbeat throttle.
+    last_heartbeat: Instant,
 }
 
 impl Consumer {
-    pub fn new(cluster: ClusterHandle, locality: ClientLocality) -> Consumer {
+    pub fn new(broker: Arc<dyn BrokerTransport>, locality: ClientLocality) -> Consumer {
         Consumer {
-            cluster,
+            broker,
             locality,
             group: None,
             subscription: None,
@@ -43,6 +58,7 @@ impl Consumer {
             assigned: Vec::new(),
             positions: HashMap::new(),
             next_assigned_idx: 0,
+            last_heartbeat: Instant::now(),
         }
     }
 
@@ -72,60 +88,68 @@ impl Consumer {
     // ---- group management -----------------------------------------------------
 
     /// Join `group_id` subscribed to `topics`; positions resume from the
-    /// group's committed offsets (or earliest).
+    /// group's committed offsets (or earliest). Fallible: on the remote
+    /// transport the join is a network round trip.
     pub fn subscribe(
         &mut self,
         group_id: &str,
         member_id: &str,
         topics: &[String],
         assignor: Assignor,
-    ) {
-        let membership =
-            self.cluster
-                .join_group(group_id, member_id, topics, assignor);
+    ) -> Result<()> {
+        let membership = self
+            .broker
+            .join_group(group_id, member_id, topics, assignor)?;
         self.group = Some((group_id.to_string(), member_id.to_string()));
         self.subscription = Some((topics.to_vec(), assignor));
         self.generation = membership.generation;
-        self.apply_assignment(membership.assigned);
+        self.last_heartbeat = Instant::now();
+        self.apply_assignment(membership.assigned)
     }
 
     /// Heartbeat; on a generation change the assignment is refreshed.
-    /// Returns false if this member was evicted from the group.
-    pub fn poll_heartbeat(&mut self) -> bool {
+    /// Returns `Ok(false)` if this member was evicted from the group.
+    pub fn poll_heartbeat(&mut self) -> Result<bool> {
         let Some((gid, mid)) = self.group.clone() else {
-            return true;
+            return Ok(true);
         };
-        match self.cluster.heartbeat(&gid, &mid) {
+        match self.broker.heartbeat(&gid, &mid)? {
             Some(m) => {
+                self.last_heartbeat = Instant::now();
                 if m.generation != self.generation {
                     self.generation = m.generation;
-                    self.apply_assignment(m.assigned);
+                    self.apply_assignment(m.assigned)?;
                 }
-                true
+                Ok(true)
             }
-            None => false,
+            None => Ok(false),
         }
     }
 
-    fn apply_assignment(&mut self, assigned: Vec<TopicPartition>) {
+    fn apply_assignment(&mut self, assigned: Vec<TopicPartition>) -> Result<()> {
         self.assigned = assigned;
         self.next_assigned_idx = 0;
         let gid = self.group.as_ref().map(|(g, _)| g.clone());
         for tp in &self.assigned {
-            let start = gid
-                .as_ref()
-                .and_then(|g| self.cluster.committed_offset(g, tp))
-                .unwrap_or(0);
+            let start = match &gid {
+                Some(g) => self.broker.committed_offset(g, tp)?.unwrap_or(0),
+                None => 0,
+            };
             // Keep an existing local position if it is ahead (we may have
             // polled past the last commit).
             let e = self.positions.entry(tp.clone()).or_insert(start);
             *e = (*e).max(start);
         }
+        Ok(())
     }
 
     pub fn leave(&mut self) {
         if let Some((gid, mid)) = self.group.take() {
-            self.cluster.leave_group(&gid, &mid);
+            // Best-effort: a broker we cannot reach will expire us via
+            // the session timeout anyway.
+            if let Err(e) = self.broker.leave_group(&gid, &mid) {
+                log::debug!("leave_group({gid}, {mid}): {e:#}");
+            }
         }
         self.subscription = None;
         self.assigned.clear();
@@ -153,7 +177,7 @@ impl Consumer {
             let tp = self.assigned[(self.next_assigned_idx + i) % n].clone();
             let pos = self.position(&tp);
             let batch =
-                self.cluster
+                self.broker
                     .fetch_batch(&tp.0, tp.1, pos, max - got, self.locality)?;
             if let Some(next) = batch.next_offset() {
                 self.positions.insert(tp.clone(), next);
@@ -181,11 +205,16 @@ impl Consumer {
     /// rebalance wait-set) until a produce or rebalance wakes it, or
     /// `timeout` passes. No sleep-poll loop: an idle consumer costs
     /// zero CPU and reacts to a produce in condvar-wakeup time rather
-    /// than a sleep quantum.
+    /// than a sleep quantum. On the remote transport the park happens
+    /// server-side; the wire just carries the deadline and the wakeup.
     ///
-    /// A group member woken by a rebalance refreshes its membership
-    /// (like [`Consumer::poll_heartbeat`]) and re-arms on its new
-    /// assignment, so wakeups survive generation changes.
+    /// Liveness while parked: the broker caps each group wait round
+    /// well below the session timeout, and the consumer heartbeats
+    /// after **every** round (woken or quiet) — so a member parked on
+    /// an idle topic for many session lengths is never wrongfully
+    /// expired. A member that *was* evicted (e.g. a long network
+    /// partition) rejoins with its original subscription, as Kafka
+    /// clients do.
     pub fn poll_batches_wait(
         &mut self,
         max: usize,
@@ -195,9 +224,34 @@ impl Consumer {
         loop {
             let batches = self.poll_batches(max)?;
             if !batches.is_empty() {
+                // A member that always finds data never reaches the
+                // wait-round heartbeat below — throttle-heartbeat on
+                // the data path too, or a saturated consumer would be
+                // wrongfully expired after one session timeout. Never
+                // at the cost of the fetched records, though: positions
+                // already advanced past them, so heartbeat trouble is
+                // logged (and retried next round), not propagated.
+                if self.group.is_some() && self.last_heartbeat.elapsed() >= BUSY_HEARTBEAT_EVERY {
+                    match self.poll_heartbeat() {
+                        Ok(true) => {}
+                        Ok(false) => {
+                            // Evicted: rejoin with the original
+                            // subscription, as the parked path does.
+                            if let (Some((gid, mid)), Some((topics, assignor))) =
+                                (self.group.clone(), self.subscription.clone())
+                            {
+                                if let Err(e) = self.subscribe(&gid, &mid, &topics, assignor) {
+                                    log::debug!("rejoin after eviction failed: {e:#}");
+                                }
+                            }
+                        }
+                        Err(e) => log::debug!("deferring busy-path heartbeat: {e:#}"),
+                    }
+                }
                 return Ok(batches);
             }
-            if Instant::now() >= deadline {
+            let now = Instant::now();
+            if now >= deadline {
                 return Ok(batches);
             }
             let assignments: Vec<(TopicPartition, u64)> = self
@@ -207,17 +261,18 @@ impl Consumer {
                 .collect();
             let group = self.group.clone();
             // A false return is a quiet timeout of this wait *round*
-            // (the cluster may cap a round when part of the assignment
-            // is not registrable yet); the loop re-polls and the
-            // deadline check above ends the long-poll — that final poll
-            // also closes the race with a produce landing exactly at
-            // the deadline.
-            let woken = self.cluster.wait_for_data(
+            // (the broker caps group waits below the session timeout,
+            // and may cap a round when part of the assignment is not
+            // registrable yet); the loop re-polls and the deadline
+            // check above ends the long-poll — that final poll also
+            // closes the race with a produce landing exactly at the
+            // deadline.
+            let _woken = self.broker.wait_for_data(
                 &assignments,
                 group.as_ref().map(|(gid, _)| (gid.as_str(), self.generation)),
-                deadline,
-            );
-            if woken && self.group.is_some() && !self.poll_heartbeat() {
+                deadline - now,
+            )?;
+            if self.group.is_some() && !self.poll_heartbeat()? {
                 // Evicted while parked (session expiry): rejoin with the
                 // original subscription, as Kafka clients do — this also
                 // resyncs our generation so the next wait parks instead
@@ -226,7 +281,7 @@ impl Consumer {
                 if let (Some((gid, mid)), Some((topics, assignor))) =
                     (self.group.clone(), self.subscription.clone())
                 {
-                    self.subscribe(&gid, &mid, &topics, assignor);
+                    self.subscribe(&gid, &mid, &topics, assignor)?;
                 }
             }
         }
@@ -238,13 +293,22 @@ impl Consumer {
         Ok(flatten(self.poll_batches_wait(max, timeout)?))
     }
 
-    /// Commit current positions to the group coordinator.
-    pub fn commit(&self) {
+    /// Commit current positions to the group coordinator (one round
+    /// trip on the remote transport). Covers only the partitions this
+    /// member **currently owns**: `positions` can retain cursors for
+    /// partitions rebalanced away, and committing those would rewind a
+    /// successor's newer commit (the coordinator stores the last write,
+    /// not the max).
+    pub fn commit(&self) -> Result<()> {
         if let Some((gid, _)) = &self.group {
-            for (tp, pos) in &self.positions {
-                self.cluster.commit_offset(gid, tp.clone(), *pos);
-            }
+            let offsets: Vec<(TopicPartition, u64)> = self
+                .assigned
+                .iter()
+                .map(|tp| (tp.clone(), self.position(tp)))
+                .collect();
+            self.broker.commit_offsets(gid, &offsets)?;
         }
+        Ok(())
     }
 }
 
@@ -260,7 +324,7 @@ fn flatten(batches: Vec<RecordBatch>) -> Vec<ConsumedRecord> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::broker::{BrokerConfig, Cluster, Record};
+    use crate::broker::{BrokerConfig, Cluster, ClusterHandle, Record};
 
     fn cluster_with(topic: &str, parts: u32, records_per_part: u8) -> ClusterHandle {
         let c = Cluster::new(BrokerConfig::default());
@@ -331,9 +395,9 @@ mod tests {
         let c = cluster_with("t", 4, 5);
         let mut a = Consumer::new(c.clone(), ClientLocality::InCluster);
         let mut b = Consumer::new(c.clone(), ClientLocality::InCluster);
-        a.subscribe("g", "a", &["t".into()], Assignor::RoundRobin);
-        b.subscribe("g", "b", &["t".into()], Assignor::RoundRobin);
-        a.poll_heartbeat();
+        a.subscribe("g", "a", &["t".into()], Assignor::RoundRobin).unwrap();
+        b.subscribe("g", "b", &["t".into()], Assignor::RoundRobin).unwrap();
+        a.poll_heartbeat().unwrap();
         let pa: Vec<_> = a.assigned().to_vec();
         let pb: Vec<_> = b.assigned().to_vec();
         assert_eq!(pa.len() + pb.len(), 4);
@@ -354,17 +418,48 @@ mod tests {
     fn committed_offsets_resume_replacement_member() {
         let c = cluster_with("t", 1, 10);
         let mut a = Consumer::new(c.clone(), ClientLocality::InCluster);
-        a.subscribe("g", "a", &["t".into()], Assignor::Range);
+        a.subscribe("g", "a", &["t".into()], Assignor::Range).unwrap();
         let got = a.poll(4).unwrap();
         assert_eq!(got.len(), 4);
-        a.commit();
+        a.commit().unwrap();
         a.leave();
         // Replacement resumes at the committed offset.
         let mut b = Consumer::new(c, ClientLocality::InCluster);
-        b.subscribe("g", "b", &["t".into()], Assignor::Range);
+        b.subscribe("g", "b", &["t".into()], Assignor::Range).unwrap();
         let recs = b.poll(100).unwrap();
         assert_eq!(recs.first().unwrap().offset, 4);
         assert_eq!(recs.len(), 6);
+    }
+
+    #[test]
+    fn commit_covers_only_the_current_assignment() {
+        // Regression: commit() used to send every entry in `positions`,
+        // including partitions rebalanced away — rewinding a successor's
+        // newer committed offset.
+        let c = cluster_with("t", 2, 5);
+        let mut a = Consumer::new(c.clone(), ClientLocality::InCluster);
+        a.subscribe("g", "a", &["t".into()], Assignor::Range).unwrap();
+        assert_eq!(a.assigned().len(), 2);
+        assert_eq!(a.poll(100).unwrap().len(), 10); // both cursors at 5
+        // A second member takes one partition off a.
+        let mut b = Consumer::new(c.clone(), ClientLocality::InCluster);
+        b.subscribe("g", "b", &["t".into()], Assignor::Range).unwrap();
+        a.poll_heartbeat().unwrap();
+        assert_eq!(a.assigned().len(), 1);
+        let bs = {
+            let pa = a.assigned()[0].clone();
+            let all = [("t".to_string(), 0), ("t".to_string(), 1)];
+            all.iter().find(|tp| **tp != pa).unwrap().clone()
+        };
+        // b (the new owner) has made more progress than a ever saw.
+        c.commit_offset("g", bs.clone(), 99);
+        a.commit().unwrap();
+        assert_eq!(
+            c.committed_offset("g", &bs),
+            Some(99),
+            "a's stale cursor rewound the successor's commit"
+        );
+        assert_eq!(c.committed_offset("g", &a.assigned()[0].clone()), Some(5));
     }
 
     #[test]
@@ -407,5 +502,80 @@ mod tests {
         let recs = cons.poll_wait(10, Duration::from_secs(5)).unwrap();
         assert_eq!(recs.len(), 1);
         assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn saturated_member_heartbeats_on_the_data_path() {
+        // Regression: poll_batches_wait returns early when data is
+        // ready, so a consumer that NEVER parks used to never
+        // heartbeat — one session timeout later a perfectly live,
+        // fully-saturated member was expired.
+        use crate::util::clock::ManualClock;
+        let clock = ManualClock::new(0);
+        let c = Cluster::with_clock(
+            BrokerConfig { session_timeout_ms: 10_000, ..Default::default() },
+            std::sync::Arc::new(clock.clone()),
+        );
+        c.create_topic("busy", 1);
+        let mut cons = Consumer::new(c.clone(), ClientLocality::InCluster);
+        cons.subscribe("g", "hot", &["busy".into()], Assignor::Range).unwrap();
+        // Last recorded heartbeat is at clock 0; move the clock near
+        // the session edge, then keep the consumer saturated long
+        // enough (real time) for the busy-path throttle to fire.
+        clock.advance_ms(9_000);
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_millis(700) {
+            c.produce("busy", 0, &[Record::new(vec![1])], ClientLocality::InCluster, None)
+                .unwrap();
+            let got = cons.poll_batches_wait(8, Duration::from_secs(5)).unwrap();
+            assert!(!got.is_empty(), "saturated consumer polled empty");
+        }
+        // Past the original session window: only a data-path heartbeat
+        // (recorded at clock 9_000) keeps the member alive.
+        clock.advance_ms(2_000);
+        let evicted = c.expire_group_members();
+        assert!(evicted.is_empty(), "saturated member was expired: {evicted:?}");
+        assert_eq!(c.group_members("g"), vec!["hot".to_string()]);
+    }
+
+    #[test]
+    fn member_parked_beyond_session_timeout_survives() {
+        // Regression (ISSUE 5): a consumer parked on an idle topic never
+        // used to heartbeat (PR 2 refreshed only on rebalance *wakes*),
+        // so a park longer than session_ms got a live member wrongfully
+        // expired. The broker now caps group wait rounds below the
+        // session timeout and the consumer heartbeats between rounds.
+        let session_ms = 600u64;
+        let c = Cluster::new(BrokerConfig {
+            session_timeout_ms: session_ms,
+            ..Default::default()
+        });
+        c.create_topic("idle", 1);
+        let mut cons = Consumer::new(c.clone(), ClientLocality::InCluster);
+        cons.subscribe("g", "parked", &["idle".into()], Assignor::Range).unwrap();
+        // A housekeeping thread sweeps expirations the whole time the
+        // member is parked (this is what evicts a silent member).
+        let c2 = c.clone();
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let sweeper = std::thread::spawn(move || {
+            let mut evicted = Vec::new();
+            while !stop2.load(std::sync::atomic::Ordering::SeqCst) {
+                evicted.extend(c2.expire_group_members());
+                crate::broker::notify::pause(Duration::from_millis(20));
+            }
+            evicted
+        });
+        // Park for 2x the session timeout on a topic nobody produces to.
+        let park = Duration::from_millis(session_ms * 2);
+        let recs = cons.poll_batches_wait(16, park).unwrap();
+        assert!(recs.is_empty());
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        let evicted = sweeper.join().unwrap();
+        assert!(
+            evicted.is_empty(),
+            "parked member was wrongfully expired: {evicted:?}"
+        );
+        assert_eq!(c.group_members("g"), vec!["parked".to_string()]);
     }
 }

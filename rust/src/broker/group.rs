@@ -44,6 +44,12 @@ pub(crate) struct GroupState {
     /// Topics this group subscribes to (set by the first joiner; later
     /// joins extend it).
     pub topics: Vec<String>,
+    /// The partition set the last rebalance distributed — how a
+    /// generation-stable re-join detects that the subscription now
+    /// resolves to different partitions (a subscribed topic created
+    /// *after* the member joined; topic creation itself never touches
+    /// groups).
+    pub rebalanced_partitions: Vec<TopicPartition>,
     /// Members parked in a blocking poll; membership changes signal it
     /// so they refresh their assignment immediately instead of on the
     /// next heartbeat interval.
@@ -59,6 +65,7 @@ impl GroupState {
             assignments: HashMap::new(),
             committed: HashMap::new(),
             topics: Vec::new(),
+            rebalanced_partitions: Vec::new(),
             wait_set: Arc::new(WaitSet::new()),
         }
     }
@@ -67,15 +74,32 @@ impl GroupState {
         self.members.keys().cloned().collect()
     }
 
-    pub fn join(&mut self, member_id: &str, topics: &[String], now: TimestampMs) {
+    /// Add (or refresh) a member. Returns `true` when membership
+    /// actually changed — a new member, or new topics on the
+    /// subscription. An existing member re-joining with identical
+    /// topics (a client reconnect) is **generation-stable**: it only
+    /// refreshes the heartbeat, so the rest of the group sees no
+    /// spurious rebalance and parked members are not woken.
+    pub fn join(&mut self, member_id: &str, topics: &[String], now: TimestampMs) -> bool {
+        let mut changed = false;
         for t in topics {
             if !self.topics.contains(t) {
                 self.topics.push(t.clone());
+                changed = true;
             }
         }
-        self.members
-            .insert(member_id.to_string(), Member { last_heartbeat: now });
-        self.generation += 1;
+        match self.members.get_mut(member_id) {
+            Some(m) => m.last_heartbeat = now,
+            None => {
+                self.members
+                    .insert(member_id.to_string(), Member { last_heartbeat: now });
+                changed = true;
+            }
+        }
+        if changed {
+            self.generation += 1;
+        }
+        changed
     }
 
     pub fn leave(&mut self, member_id: &str) -> bool {
@@ -99,6 +123,15 @@ impl GroupState {
 
     /// Evict members whose heartbeat is older than `session_ms`;
     /// returns evicted ids (each eviction bumps the generation).
+    ///
+    /// An eviction is a membership change, so this also (a) purges the
+    /// dead members' `assignments` entries — `assignment()` must stop
+    /// answering for an evicted member *immediately*, not at the next
+    /// external `rebalance()` — and (b) notifies the group wait-set so
+    /// a parked surviving member observes the generation change now
+    /// instead of sleeping through it until its deadline. Callers still
+    /// rebalance afterwards (under the same group-map lock) to hand the
+    /// orphaned partitions to the survivors.
     pub fn expire(&mut self, now: TimestampMs, session_ms: u64) -> Vec<String> {
         let dead: Vec<String> = self
             .members
@@ -108,7 +141,11 @@ impl GroupState {
             .collect();
         for id in &dead {
             self.members.remove(id);
+            self.assignments.remove(id);
             self.generation += 1;
+        }
+        if !dead.is_empty() {
+            self.wait_set.notify_all();
         }
         dead
     }
@@ -118,6 +155,7 @@ impl GroupState {
     /// they pick up the new generation at once.
     pub fn rebalance(&mut self, partitions: &[TopicPartition]) {
         self.wait_set.notify_all();
+        self.rebalanced_partitions = partitions.to_vec();
         self.assignments.clear();
         let members = self.member_ids();
         if members.is_empty() {
@@ -260,6 +298,54 @@ mod tests {
         let dead = g.expire(10_001, 5_000);
         assert_eq!(dead, vec!["b".to_string()]);
         assert_eq!(g.member_ids(), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn expiry_purges_assignments_and_notifies_parked_members() {
+        // Regression (ISSUE 5): expire used to leave the dead member's
+        // assignment answering and never woke parked survivors.
+        use crate::broker::notify::Waiter;
+        let mut g = GroupState::new(Assignor::Range);
+        g.join("a", &["t".into()], 0);
+        g.join("b", &["t".into()], 0);
+        g.rebalance(&tps("t", 4));
+        assert!(!g.assignment("b").is_empty());
+        let parked = Waiter::new();
+        g.wait_set.register(&parked);
+        let seen = parked.generation();
+        let gen0 = g.generation;
+        g.heartbeat("a", 10_000);
+        let dead = g.expire(10_001, 5_000);
+        assert_eq!(dead, vec!["b".to_string()]);
+        // The evicted member's assignment is gone *before* any external
+        // rebalance recomputes the survivors'.
+        assert!(g.assignment("b").is_empty());
+        assert!(g.generation > gen0);
+        // A parked survivor was woken by the eviction itself.
+        assert!(
+            parked.wait_until(seen, std::time::Instant::now()),
+            "expire did not notify the group wait-set"
+        );
+        g.wait_set.deregister(&parked);
+    }
+
+    #[test]
+    fn identical_rejoin_is_generation_stable() {
+        // Regression (ISSUE 5): a reconnecting member re-joining with
+        // identical topics must not bump the generation (and therefore
+        // must not trigger a group-wide rebalance wakeup storm).
+        let mut g = GroupState::new(Assignor::Range);
+        assert!(g.join("a", &["t".into()], 0));
+        assert!(g.join("b", &["t".into()], 0));
+        g.rebalance(&tps("t", 4));
+        let gen = g.generation;
+        let assigned = g.assignment("a");
+        assert!(!g.join("a", &["t".into()], 50));
+        assert_eq!(g.generation, gen);
+        assert_eq!(g.assignment("a"), assigned);
+        // ... but a re-join that *adds* a topic is a real change.
+        assert!(g.join("a", &["t".into(), "u".into()], 60));
+        assert_eq!(g.generation, gen + 1);
     }
 
     #[test]

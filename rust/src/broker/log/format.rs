@@ -89,6 +89,19 @@ pub struct DecodedFrame {
     pub end: usize,
 }
 
+/// Exact encoded size of one record frame (header + body), without
+/// encoding it — what the wire server uses to bound a response frame
+/// before building it.
+pub fn frame_size(record: &Record) -> usize {
+    let key = record.key.as_ref().map(|k| k.len()).unwrap_or(0);
+    let headers: usize = record
+        .headers
+        .iter()
+        .map(|(name, val)| 8 + name.len() + val.len())
+        .sum();
+    FRAME_HEADER_BYTES + BODY_FIXED_BYTES + headers + key + record.value.len()
+}
+
 /// Append one record frame to `out`.
 pub fn encode_frame(out: &mut Vec<u8>, offset: u64, record: &Record) {
     let start = out.len();
@@ -234,6 +247,19 @@ mod tests {
         let mut buf = Vec::new();
         encode_frame(&mut buf, offset, record);
         buf
+    }
+
+    #[test]
+    fn frame_size_matches_encoding() {
+        let records = [
+            Record::new(Vec::<u8>::new()),
+            Record::new(vec![1u8; 77]),
+            Record::with_key(vec![1, 2, 3], vec![9u8; 100]).header("fmt", b"avro"),
+            Record::new(vec![5]).header("a", b"x").header("bb", b"yy"),
+        ];
+        for rec in &records {
+            assert_eq!(frame_of(9, rec).len(), frame_size(rec), "{rec:?}");
+        }
     }
 
     #[test]

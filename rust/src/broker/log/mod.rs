@@ -53,7 +53,10 @@
 //! active (last) segment is never deleted. On the disk tier, deletion
 //! removes segment *files* and compaction atomically rewrites them.
 
-mod format;
+// `pub(crate)`: the wire protocol ([`crate::broker::wire`]) reuses this
+// framing discipline (length prefix + CRC-32 + zero-copy `Bytes` decode)
+// for records travelling over the socket.
+pub(crate) mod format;
 mod segment;
 
 use super::record::Record;

@@ -35,24 +35,43 @@
 //! * an **event-driven consume path**: nothing on the broker sleeps or
 //!   spin-polls. Idle consumers park on condvar waiters ([`notify`]) and
 //!   are pushed awake by the events they care about;
+//! * a **real TCP wire protocol** ([`wire`]): the broker serves clients
+//!   over sockets — length-prefixed, CRC-32-checksummed frames reusing
+//!   the segment format's framing discipline — behind one
+//!   [`transport::BrokerTransport`] abstraction, so producers,
+//!   consumers and coordinator jobs run unchanged in-process *or* as
+//!   separate OS processes (the paper's broker-pods vs job-pods
+//!   topology);
 //! * a **simulated network profile** (external vs in-cluster link
 //!   latency) so the Tables I/II latency columns can be reproduced on a
-//!   single machine — see DESIGN.md §Table I/II latency model.
+//!   single machine — see DESIGN.md §Table I/II latency model. On the
+//!   socket path the real network replaces the simulation
+//!   ([`ClientLocality::Remote`] never sleeps).
 //!
 //! # Data-flow scheduling: the notify/wakeup architecture
+//!
+//! Both transports funnel into the same core. In-process clients call
+//! `Cluster` directly; remote clients cross the wire first — and the
+//! blocking long-poll parks **server-side** on the very same wait-sets,
+//! so a remote consumer wakes in socket-round-trip time, not a poll
+//! quantum:
 //!
 //! ```text
 //!  Producer::flush_partition          Consumer::poll_wait / poll_batches_wait
 //!        │                                       │
-//!        ▼                                       ▼ (empty poll)
+//!        │  (either transport)                   │ (empty poll; either transport)
+//!        ▼                                       ▼
+//!  RemoteBroker ══ TCP frame ══► BrokerServer    RemoteBroker ══ FetchWait ══►
+//!        │            (or in-process: direct)    BrokerServer conn thread
+//!        ▼                                       ▼
 //!  Cluster::produce ──► Partition::append_batch  Cluster::wait_for_data
 //!        │                      │                        │
 //!        │              (one signal/batch)       one Waiter registered in
 //!        │                      ▼                every assigned partition's
 //!        │             partition WaitSet ◄────── WaitSet (+ the group's)
 //!        │                      │                        │
-//!        │                      └── notify_all ──► Waiter::wake ─► re-poll,
-//!        │                                                         deliver
+//!        │                      └── notify_all ──► Waiter::wake ─► re-poll /
+//!        │                                         wire response ─► deliver
 //!  Cluster::join/leave/heartbeat/expire
 //!        └── GroupState::rebalance ─► group WaitSet ─► parked members
 //!                                       refresh assignment immediately
@@ -65,9 +84,17 @@
 //! bumped the generation, so the park returns immediately — there is no
 //! lost-wakeup window and therefore no need for the 1 ms sleep-poll
 //! loops this design replaced. Idle consumers cost zero CPU; wakeup
-//! latency is condvar latency (microseconds, measured by the
-//! `consumer_wakeup_latency` bench case), and a source with no parked
-//! consumers pays one atomic load per event.
+//! latency is condvar latency in-process (microseconds, measured by the
+//! `consumer_wakeup_latency` bench case) plus one socket round trip on
+//! the wire (the `remote_vs_inprocess` bench case), and a source with
+//! no parked consumers pays one atomic load per event.
+//!
+//! Group liveness while parked: the broker caps each group wait round
+//! at a third of the session timeout, and consumers heartbeat between
+//! rounds — so a member parked on an idle topic survives arbitrarily
+//! long long-polls, an evicted member's assignment stops answering the
+//! moment it expires, and an identical re-join (client reconnect) is
+//! generation-stable instead of a group-wide wakeup storm.
 
 mod cluster;
 mod consumer;
@@ -79,6 +106,8 @@ mod partition;
 mod producer;
 mod record;
 mod topic;
+pub mod transport;
+pub mod wire;
 
 pub use cluster::{BrokerConfig, Cluster, ClusterHandle};
 pub use consumer::Consumer;
@@ -90,6 +119,8 @@ pub use partition::Partition;
 pub use producer::{Acks, Producer, ProducerConfig};
 pub use record::{ConsumedRecord, Record, RecordBatch};
 pub use topic::Topic;
+pub use transport::{BrokerHandle, BrokerTransport};
+pub use wire::{BrokerServer, RemoteBroker};
 
 /// `(topic, partition)` pair used throughout the broker.
 pub type TopicPartition = (String, u32);

@@ -23,6 +23,11 @@ use std::time::Duration;
 pub enum ClientLocality {
     External,
     InCluster,
+    /// A client reaching the broker over the **real** TCP wire protocol
+    /// ([`crate::broker::wire`]). The socket round trip *is* the
+    /// network, so the simulated profile never applies — real sockets
+    /// replace the `NetProfile` delay, they do not stack on top of it.
+    Remote,
 }
 
 /// One-way link latencies applied per request (produce or fetch batch).
@@ -55,6 +60,7 @@ impl NetProfile {
         match locality {
             ClientLocality::External => self.external_one_way,
             ClientLocality::InCluster => self.in_cluster_one_way,
+            ClientLocality::Remote => Duration::ZERO,
         }
     }
 
@@ -102,6 +108,19 @@ mod tests {
     fn calibrated_external_slower_than_in_cluster() {
         let p = NetProfile::calibrated();
         assert!(p.one_way(ClientLocality::External) > p.one_way(ClientLocality::InCluster));
+    }
+
+    #[test]
+    fn remote_locality_never_pays_simulated_latency() {
+        // The wire path rides real sockets; even a calibrated profile
+        // must add nothing on top.
+        let p = NetProfile::calibrated();
+        assert_eq!(p.one_way(ClientLocality::Remote), Duration::ZERO);
+        let t0 = std::time::Instant::now();
+        for _ in 0..1000 {
+            p.traverse(ClientLocality::Remote);
+        }
+        assert!(t0.elapsed() < Duration::from_millis(50));
     }
 
     #[test]

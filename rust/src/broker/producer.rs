@@ -14,11 +14,12 @@
 //! * `Acks::ExactlyOnce` retries with an idempotent `(producer_id, seq)`
 //!   so broker-side dedup keeps the log duplicate-free.
 
-use super::cluster::ClusterHandle;
 use super::net::ClientLocality;
 use super::record::Record;
+use super::transport::BrokerTransport;
 use anyhow::Result;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Acks {
@@ -49,41 +50,64 @@ impl Default for ProducerConfig {
 }
 
 pub struct Producer {
-    cluster: ClusterHandle,
+    broker: Arc<dyn BrokerTransport>,
     config: ProducerConfig,
+    /// 0 = not yet allocated (the broker was unreachable at
+    /// construction); re-fetched lazily before the first exactly-once
+    /// flush. Broker-issued ids start at 1.
     producer_id: u64,
     /// Per-partition sequence counter for idempotence.
     seqs: HashMap<(String, u32), u64>,
     buffers: HashMap<(String, u32), Vec<Record>>,
     round_robin: u64,
+    /// Partition counts learned from topic metadata (get-or-create),
+    /// so routing costs no metadata round trip per send. Topics never
+    /// re-partition, so the cache cannot go stale.
+    partition_counts: HashMap<String, u32>,
 }
 
 impl Producer {
-    pub fn new(cluster: ClusterHandle, config: ProducerConfig) -> Producer {
-        let producer_id = cluster.alloc_producer_id();
+    pub fn new(broker: Arc<dyn BrokerTransport>, config: ProducerConfig) -> Producer {
+        let producer_id = broker.alloc_producer_id().unwrap_or(0);
         Producer {
-            cluster,
+            broker,
             config,
             producer_id,
             seqs: HashMap::new(),
             buffers: HashMap::new(),
             round_robin: 0,
+            partition_counts: HashMap::new(),
         }
     }
 
-    pub fn with_defaults(cluster: ClusterHandle) -> Producer {
-        Producer::new(cluster, ProducerConfig::default())
+    pub fn with_defaults(broker: Arc<dyn BrokerTransport>) -> Producer {
+        Producer::new(broker, ProducerConfig::default())
     }
 
     pub fn id(&self) -> u64 {
         self.producer_id
     }
 
+    /// Partition count of `topic`, creating it with the broker default
+    /// when missing (Kafka auto-create); cached after the first lookup.
+    fn partitions_of(&mut self, topic: &str) -> Result<u32> {
+        if let Some(&n) = self.partition_counts.get(topic) {
+            return Ok(n);
+        }
+        let n = self.broker.create_topic(topic, 0)?;
+        self.partition_counts.insert(topic.to_string(), n);
+        Ok(n)
+    }
+
     /// Buffer a record; flushes its partition when the batch fills.
     /// Returns the partition it was routed to.
     pub fn send(&mut self, topic: &str, record: Record) -> Result<u32> {
-        let t = self.cluster.topic_or_create(topic);
-        let partition = t.route(&record, self.round_robin);
+        let n = self.partitions_of(topic)?;
+        let partition = super::topic::route_to(
+            record.key.as_ref().map(|k| k.as_slice()),
+            self.round_robin,
+            n,
+        );
         self.round_robin += 1;
         let key = (topic.to_string(), partition);
         let buf = self.buffers.entry(key.clone()).or_default();
@@ -96,7 +120,7 @@ impl Producer {
 
     /// Send straight to a specific partition (bypasses routing).
     pub fn send_to(&mut self, topic: &str, partition: u32, record: Record) -> Result<()> {
-        self.cluster.topic_or_create(topic);
+        self.partitions_of(topic)?;
         let key = (topic.to_string(), partition);
         let buf = self.buffers.entry(key.clone()).or_default();
         buf.push(record);
@@ -132,6 +156,11 @@ impl Producer {
         let n = batch.len() as u64;
         let seq = match self.config.acks {
             Acks::ExactlyOnce => {
+                if self.producer_id == 0 {
+                    // Construction could not reach the broker; dedup
+                    // needs a real id, so this flush must.
+                    self.producer_id = self.broker.alloc_producer_id()?;
+                }
                 let s = self.seqs.entry(key.clone()).or_insert(0);
                 let base = *s + 1;
                 *s += n;
@@ -145,7 +174,7 @@ impl Producer {
         // shared `Bytes`, so even the broker-side append copies nothing.
         let mut attempt = 0;
         loop {
-            let res = self.cluster.produce(
+            let res = self.broker.produce(
                 &key.0,
                 key.1,
                 &batch,

@@ -161,10 +161,23 @@ impl Topic {
     /// Route a record to a partition: key-hash when keyed, else the
     /// provided round-robin counter.
     pub fn route(&self, record: &Record, round_robin: u64) -> u32 {
-        match &record.key {
-            Some(k) => (fxhash(k) % self.num_partitions() as u64) as u32,
-            None => (round_robin % self.num_partitions() as u64) as u32,
-        }
+        route_to(
+            record.key.as_ref().map(|k| k.as_slice()),
+            round_robin,
+            self.num_partitions(),
+        )
+    }
+}
+
+/// The routing rule itself, decoupled from `Topic` so a producer that
+/// only knows a partition *count* (the remote transport learns it from
+/// topic metadata, not an `Arc<Topic>`) routes identically: key-hash
+/// when keyed, else round-robin.
+pub(crate) fn route_to(key: Option<&[u8]>, round_robin: u64, num_partitions: u32) -> u32 {
+    let n = num_partitions.max(1) as u64;
+    match key {
+        Some(k) => (fxhash(k) % n) as u32,
+        None => (round_robin % n) as u32,
     }
 }
 

@@ -1,0 +1,377 @@
+//! `RemoteBroker`: the socket client side of the wire protocol — a
+//! [`BrokerTransport`] whose broker lives in another OS process.
+//!
+//! Connections are pooled (one synchronous request/response in flight
+//! per connection; concurrent callers each check one out, so a parked
+//! long-poll never blocks a producer sharing the handle) and recreated
+//! transparently: a transport-level failure (connect refused, reset,
+//! torn response frame) is retried **once** on a fresh connection. A
+//! retried produce is at-least-once — exactly like the in-process
+//! producer's own retry path — and the idempotent `(producer_id, seq)`
+//! dedup keeps exactly-once batches duplicate-free across reconnects.
+//! Server-side *answers* (including errors like `duplicate batch`) are
+//! definitive and never retried.
+//!
+//! Fetch responses decode zero-copy: every record in one response frame
+//! is a [`crate::util::Bytes`] slice view of that frame's single buffer.
+
+use super::codec::{self, OpCode, Reader, WireError, STATUS_OK};
+use crate::broker::group::{Assignor, GroupMembership};
+use crate::broker::net::ClientLocality;
+use crate::broker::record::{Record, RecordBatch};
+use crate::broker::transport::BrokerTransport;
+use crate::broker::TopicPartition;
+use crate::util::bytes::Bytes;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// TCP connect timeout per address candidate.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Read timeout for ordinary calls (long-polls get their own margin).
+const CALL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Extra read-timeout slack on top of a long-poll's requested wait, so
+/// a server answering exactly at the deadline is never misread as dead.
+const WAIT_MARGIN: Duration = Duration::from_secs(5);
+
+/// Idle connections kept for reuse.
+const POOL_MAX: usize = 4;
+
+/// A socket [`BrokerTransport`]. Cheap to share: clone the `Arc`.
+#[derive(Debug)]
+pub struct RemoteBroker {
+    addr: String,
+    pool: Mutex<Vec<TcpStream>>,
+    /// Dedicated connection for one-way `Metric` frames (the server
+    /// never answers them), so a counter bump costs one buffered socket
+    /// write — it never stalls the latency path and never desyncs the
+    /// request/response discipline of the pooled connections.
+    metrics_conn: Mutex<Option<TcpStream>>,
+    corr: AtomicU64,
+}
+
+impl RemoteBroker {
+    /// Connect to a [`super::BrokerServer`] at `addr`
+    /// (e.g. `127.0.0.1:9092`). Fails fast when the broker is
+    /// unreachable; afterwards, individual calls reconnect as needed.
+    pub fn connect(addr: &str) -> Result<Arc<RemoteBroker>> {
+        let broker = Arc::new(RemoteBroker {
+            addr: addr.to_string(),
+            pool: Mutex::new(Vec::new()),
+            metrics_conn: Mutex::new(None),
+            corr: AtomicU64::new(1),
+        });
+        let probe = broker.fresh_conn()?;
+        broker.checkin(probe);
+        Ok(broker)
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn fresh_conn(&self) -> Result<TcpStream> {
+        let mut last: Option<std::io::Error> = None;
+        let addrs = self
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving broker address '{}'", self.addr))?;
+        for sa in addrs {
+            match TcpStream::connect_timeout(&sa, CONNECT_TIMEOUT) {
+                Ok(s) => {
+                    s.set_nodelay(true).ok();
+                    return Ok(s);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(match last {
+            Some(e) => {
+                anyhow::Error::from(e).context(format!("connecting to broker {}", self.addr))
+            }
+            None => anyhow!("broker address '{}' resolved to nothing", self.addr),
+        })
+    }
+
+    fn checkout(&self) -> Result<TcpStream> {
+        if let Some(c) = self.pool.lock().unwrap().pop() {
+            return Ok(c);
+        }
+        self.fresh_conn()
+    }
+
+    fn checkin(&self, conn: TcpStream) {
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < POOL_MAX {
+            pool.push(conn);
+        }
+    }
+
+    /// One request/response round trip. Transport failures are retried
+    /// once on a fresh connection; a decoded server answer (ok *or*
+    /// error) ends the call.
+    fn call(&self, op: OpCode, payload: &[u8], read_timeout: Duration) -> Result<Reader> {
+        // Reject a frame the server is guaranteed to refuse before
+        // shipping (and retrying!) megabytes of it: the peer would just
+        // drop the connection without a response.
+        if payload.len() as u64 + 9 > u64::from(codec::MAX_FRAME_BYTES) {
+            bail!(
+                "request payload of {} bytes exceeds the wire frame limit ({} bytes)",
+                payload.len(),
+                codec::MAX_FRAME_BYTES
+            );
+        }
+        let mut attempt = 0usize;
+        loop {
+            attempt += 1;
+            let conn = if attempt == 1 { self.checkout()? } else { self.fresh_conn()? };
+            match self.try_call(conn, op, payload, read_timeout) {
+                Ok(answer) => {
+                    return answer.map(Reader::new);
+                }
+                Err(e) if attempt == 1 => {
+                    log::debug!("broker call {op:?} failed ({e:#}); reconnecting to {}", self.addr);
+                }
+                Err(e) => {
+                    return Err(e.context(format!("broker {} unreachable ({op:?})", self.addr)));
+                }
+            }
+        }
+    }
+
+    /// Outer `Err` = transport failure (retryable); inner `Err` = the
+    /// server's answer was an error (definitive).
+    fn try_call(
+        &self,
+        mut conn: TcpStream,
+        op: OpCode,
+        payload: &[u8],
+        read_timeout: Duration,
+    ) -> Result<Result<Bytes, anyhow::Error>> {
+        let corr = self.corr.fetch_add(1, Ordering::SeqCst);
+        let frame = codec::encode_request(corr, op, payload);
+        conn.set_read_timeout(Some(read_timeout))?;
+        conn.write_all(&frame)?;
+        let body = codec::read_frame(&mut conn).map_err(|e| match e {
+            WireError::Io(io) => anyhow::Error::from(io),
+            other => anyhow::Error::from(other),
+        })?;
+        let mut r = Reader::new(body.clone());
+        let rcorr = r
+            .u64()
+            .map_err(|_| anyhow!("response too short for a correlation id"))?;
+        if rcorr != corr {
+            // The connection is out of sync (e.g. a stale response from
+            // a timed-out call); do not reuse it.
+            bail!("correlation mismatch: sent {corr}, got {rcorr}");
+        }
+        let status = r.u8().map_err(|_| anyhow!("response missing status byte"))?;
+        self.checkin(conn);
+        if status == STATUS_OK {
+            Ok(Ok(body.slice(9..)))
+        } else {
+            let msg = r
+                .str()
+                .unwrap_or_else(|_| "unreadable error message".to_string());
+            Ok(Err(anyhow!("{msg}")))
+        }
+    }
+}
+
+impl BrokerTransport for RemoteBroker {
+    fn produce(
+        &self,
+        topic: &str,
+        partition: u32,
+        records: &[Record],
+        _locality: ClientLocality,
+        producer_seq: Option<(u64, u64)>,
+    ) -> Result<u64> {
+        let mut p = Vec::new();
+        codec::put_u32(&mut p, partition);
+        codec::put_opt(&mut p, producer_seq.as_ref(), |o, (pid, seq)| {
+            codec::put_u64(o, *pid);
+            codec::put_u64(o, *seq);
+        });
+        codec::put_str(&mut p, topic);
+        codec::put_records(
+            &mut p,
+            records.iter().enumerate().map(|(i, rec)| (i as u64, rec)),
+        );
+        let mut r = self.call(OpCode::Produce, &p, CALL_TIMEOUT)?;
+        Ok(r.u64()?)
+    }
+
+    fn fetch_batch(
+        &self,
+        topic: &str,
+        partition: u32,
+        from: u64,
+        max: usize,
+        _locality: ClientLocality,
+    ) -> Result<RecordBatch> {
+        let mut p = Vec::new();
+        codec::put_u32(&mut p, partition);
+        codec::put_u64(&mut p, from);
+        codec::put_u32(&mut p, max.min(u32::MAX as usize) as u32);
+        codec::put_str(&mut p, topic);
+        let mut r = self.call(OpCode::FetchBatch, &p, CALL_TIMEOUT)?;
+        // Zero-copy on this side of the wire too: every record is a
+        // slice of the one response buffer.
+        let records = r.records()?;
+        Ok(RecordBatch {
+            topic: Arc::from(topic),
+            partition,
+            records,
+        })
+    }
+
+    fn offsets(&self, topic: &str, partition: u32) -> Result<(u64, u64)> {
+        let mut p = Vec::new();
+        codec::put_u32(&mut p, partition);
+        codec::put_str(&mut p, topic);
+        let mut r = self.call(OpCode::Offsets, &p, CALL_TIMEOUT)?;
+        Ok((r.u64()?, r.u64()?))
+    }
+
+    fn create_topic(&self, topic: &str, partitions: u32) -> Result<u32> {
+        let mut p = Vec::new();
+        codec::put_u32(&mut p, partitions);
+        codec::put_str(&mut p, topic);
+        let mut r = self.call(OpCode::CreateTopic, &p, CALL_TIMEOUT)?;
+        Ok(r.u32()?)
+    }
+
+    fn topic_partitions(&self, topic: &str) -> Result<Option<u32>> {
+        let mut p = Vec::new();
+        codec::put_str(&mut p, topic);
+        let mut r = self.call(OpCode::Metadata, &p, CALL_TIMEOUT)?;
+        Ok(r.opt(|r| r.u32())?)
+    }
+
+    fn topic_names(&self) -> Result<Vec<String>> {
+        let mut r = self.call(OpCode::ListTopics, &[], CALL_TIMEOUT)?;
+        Ok(r.strings()?)
+    }
+
+    fn alloc_producer_id(&self) -> Result<u64> {
+        let mut r = self.call(OpCode::AllocProducerId, &[], CALL_TIMEOUT)?;
+        Ok(r.u64()?)
+    }
+
+    fn join_group(
+        &self,
+        group_id: &str,
+        member_id: &str,
+        topics: &[String],
+        assignor: Assignor,
+    ) -> Result<GroupMembership> {
+        let mut p = Vec::new();
+        codec::put_u8(&mut p, codec::assignor_to_u8(assignor));
+        codec::put_str(&mut p, group_id);
+        codec::put_str(&mut p, member_id);
+        codec::put_strings(&mut p, topics);
+        let mut r = self.call(OpCode::JoinGroup, &p, CALL_TIMEOUT)?;
+        Ok(r.membership()?)
+    }
+
+    fn leave_group(&self, group_id: &str, member_id: &str) -> Result<()> {
+        let mut p = Vec::new();
+        codec::put_str(&mut p, group_id);
+        codec::put_str(&mut p, member_id);
+        self.call(OpCode::LeaveGroup, &p, CALL_TIMEOUT)?;
+        Ok(())
+    }
+
+    fn heartbeat(&self, group_id: &str, member_id: &str) -> Result<Option<GroupMembership>> {
+        let mut p = Vec::new();
+        codec::put_str(&mut p, group_id);
+        codec::put_str(&mut p, member_id);
+        let mut r = self.call(OpCode::Heartbeat, &p, CALL_TIMEOUT)?;
+        Ok(r.opt(|r| r.membership())?)
+    }
+
+    fn commit_offsets(&self, group_id: &str, offsets: &[(TopicPartition, u64)]) -> Result<()> {
+        let mut p = Vec::new();
+        codec::put_str(&mut p, group_id);
+        codec::put_u32(&mut p, offsets.len() as u32);
+        for ((topic, partition), off) in offsets {
+            codec::put_str(&mut p, topic);
+            codec::put_u32(&mut p, *partition);
+            codec::put_u64(&mut p, *off);
+        }
+        self.call(OpCode::CommitOffsets, &p, CALL_TIMEOUT)?;
+        Ok(())
+    }
+
+    fn committed_offset(&self, group_id: &str, tp: &TopicPartition) -> Result<Option<u64>> {
+        let mut p = Vec::new();
+        codec::put_str(&mut p, group_id);
+        codec::put_str(&mut p, &tp.0);
+        codec::put_u32(&mut p, tp.1);
+        let mut r = self.call(OpCode::CommittedOffset, &p, CALL_TIMEOUT)?;
+        Ok(r.opt(|r| r.u64())?)
+    }
+
+    fn wait_for_data(
+        &self,
+        assignments: &[(TopicPartition, u64)],
+        group: Option<(&str, u64)>,
+        timeout: Duration,
+    ) -> Result<bool> {
+        let mut p = Vec::new();
+        codec::put_u64(&mut p, timeout.as_millis().min(u64::MAX as u128) as u64);
+        codec::put_opt(&mut p, group.as_ref(), |o, (gid, gen)| {
+            codec::put_str(o, gid);
+            codec::put_u64(o, *gen);
+        });
+        codec::put_u32(&mut p, assignments.len() as u32);
+        for ((topic, partition), pos) in assignments {
+            codec::put_str(&mut p, topic);
+            codec::put_u32(&mut p, *partition);
+            codec::put_u64(&mut p, *pos);
+        }
+        // The server clamps the park (its MAX_WAIT_SLICE); our read
+        // timeout just needs to outlast whatever it grants.
+        let read_timeout = timeout.min(Duration::from_secs(3600)) + WAIT_MARGIN;
+        let mut r = self.call(OpCode::FetchWait, &p, read_timeout)?;
+        Ok(r.bool()?)
+    }
+
+    fn add_metric(&self, name: &str, delta: u64) {
+        // One-way by protocol: write the frame on the dedicated metrics
+        // connection and return — no response to wait for. Best-effort:
+        // one reconnect attempt, then the delta is dropped (and logged).
+        let mut p = Vec::new();
+        codec::put_u64(&mut p, delta);
+        codec::put_str(&mut p, name);
+        let corr = self.corr.fetch_add(1, Ordering::SeqCst);
+        let frame = codec::encode_request(corr, OpCode::Metric, &p);
+        let mut conn = self.metrics_conn.lock().unwrap();
+        for _ in 0..2 {
+            if conn.is_none() {
+                match self.fresh_conn() {
+                    Ok(c) => *conn = Some(c),
+                    Err(e) => {
+                        log::debug!("dropping metric '{name}' (+{delta}): {e:#}");
+                        return;
+                    }
+                }
+            }
+            if let Some(c) = conn.as_mut() {
+                if c.write_all(&frame).is_ok() {
+                    return;
+                }
+            }
+            // Stale connection (e.g. idle-timed-out server side):
+            // reconnect once and retry the write.
+            *conn = None;
+        }
+        log::debug!("dropping metric '{name}' (+{delta}): connection lost");
+    }
+}

@@ -1,0 +1,531 @@
+//! The binary wire format.
+//!
+//! ```text
+//! frame    := len:u32 | crc:u32 | body              (integers little-endian)
+//! request  := corr_id:u64 | opcode:u8  | payload
+//! response := corr_id:u64 | status:u8  | payload    (status 0 = ok, 1 = err)
+//! ```
+//!
+//! `len` is the body length, `crc` a CRC-32 (IEEE) over the body — the
+//! exact framing discipline of the on-disk segment format
+//! (`broker/log/format.rs`), so a reader can *prove* where a valid
+//! frame ends: a truncated read, a flipped byte or a lying length
+//! prefix is detected before a single payload byte is interpreted.
+//! Oversized length prefixes are rejected up front ([`MAX_FRAME_BYTES`])
+//! so a corrupt header cannot make a peer allocate gigabytes.
+//!
+//! Records inside `Produce`/`FetchBatch` payloads are segment-format
+//! record frames ([`format::encode_frame`]): self-checksummed,
+//! self-describing, and decoded **zero-copy** — key/value/header
+//! payloads come back as [`Bytes`] slices of the one buffer the frame
+//! body was read into. A produced record therefore lands in the broker
+//! log sharing the request buffer's allocation, and a fetched record
+//! reaches the consumer sharing the response buffer's.
+//!
+//! Error payloads carry the server's error message verbatim, so client
+//! code that matches on messages (the exactly-once producer looks for
+//! `duplicate`) behaves identically over the wire.
+
+use crate::broker::group::{Assignor, GroupMembership};
+use crate::broker::log::format::{self, FrameError};
+use crate::broker::record::Record;
+use crate::broker::TopicPartition;
+use crate::util::bytes::Bytes;
+use std::io::Read;
+
+/// Hard ceiling on one frame's body: protects both sides from a
+/// corrupt/hostile length prefix. 64 MiB comfortably fits the largest
+/// legitimate message set.
+pub const MAX_FRAME_BYTES: u32 = 64 * 1024 * 1024;
+
+/// Bytes of `len` + `crc` before each frame body.
+pub const WIRE_HEADER_BYTES: usize = 8;
+
+/// Response status: success, payload follows.
+pub const STATUS_OK: u8 = 0;
+/// Response status: error, payload is the message string.
+pub const STATUS_ERR: u8 = 1;
+
+/// Request opcodes. The discriminants are the wire values — append-only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum OpCode {
+    CreateTopic = 1,
+    Metadata = 2,
+    ListTopics = 3,
+    Produce = 4,
+    FetchBatch = 5,
+    FetchWait = 6,
+    Offsets = 7,
+    AllocProducerId = 8,
+    JoinGroup = 9,
+    LeaveGroup = 10,
+    Heartbeat = 11,
+    CommitOffsets = 12,
+    CommittedOffset = 13,
+    Metric = 14,
+}
+
+impl OpCode {
+    pub fn from_u8(v: u8) -> Option<OpCode> {
+        Some(match v {
+            1 => OpCode::CreateTopic,
+            2 => OpCode::Metadata,
+            3 => OpCode::ListTopics,
+            4 => OpCode::Produce,
+            5 => OpCode::FetchBatch,
+            6 => OpCode::FetchWait,
+            7 => OpCode::Offsets,
+            8 => OpCode::AllocProducerId,
+            9 => OpCode::JoinGroup,
+            10 => OpCode::LeaveGroup,
+            11 => OpCode::Heartbeat,
+            12 => OpCode::CommitOffsets,
+            13 => OpCode::CommittedOffset,
+            14 => OpCode::Metric,
+            _ => return None,
+        })
+    }
+}
+
+/// Why a wire frame or payload could not be decoded.
+#[derive(Debug)]
+pub enum WireError {
+    /// The stream ended (or the buffer ran out) mid-frame.
+    Truncated,
+    /// The frame body does not match its checksum.
+    BadChecksum,
+    /// The length prefix exceeds [`MAX_FRAME_BYTES`].
+    TooLarge(u32),
+    /// Structurally invalid payload despite a valid checksum.
+    Malformed(&'static str),
+    /// Underlying socket error.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated wire frame"),
+            WireError::BadChecksum => write!(f, "wire frame failed its CRC-32 check"),
+            WireError::TooLarge(n) => {
+                write!(f, "wire frame claims {n} bytes (max {MAX_FRAME_BYTES})")
+            }
+            WireError::Malformed(what) => write!(f, "malformed wire payload: {what}"),
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<FrameError> for WireError {
+    fn from(e: FrameError) -> WireError {
+        match e {
+            FrameError::Truncated => WireError::Truncated,
+            FrameError::BadChecksum => WireError::BadChecksum,
+            FrameError::Malformed => WireError::Malformed("record frame"),
+        }
+    }
+}
+
+impl WireError {
+    /// Is this a transport-level failure (worth a reconnect) rather
+    /// than a decoded protocol answer?
+    pub fn is_io(&self) -> bool {
+        matches!(self, WireError::Io(_) | WireError::Truncated)
+    }
+}
+
+// ---- frame I/O -------------------------------------------------------------
+
+/// Append one `len | crc | body` frame to `out`.
+pub fn write_frame(out: &mut Vec<u8>, body: &[u8]) {
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&format::crc32(body).to_le_bytes());
+    out.extend_from_slice(body);
+}
+
+/// Read exactly one frame body off a stream, validating length bound
+/// and checksum. A clean EOF before the first header byte — the peer
+/// hung up between requests — surfaces as `Truncated`, which callers
+/// treat as a normal disconnect.
+pub fn read_frame(stream: &mut impl Read) -> Result<Bytes, WireError> {
+    let mut hdr = [0u8; WIRE_HEADER_BYTES];
+    read_exact(stream, &mut hdr)?;
+    let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+    let crc = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::TooLarge(len));
+    }
+    let mut body = vec![0u8; len as usize];
+    read_exact(stream, &mut body)?;
+    if format::crc32(&body) != crc {
+        return Err(WireError::BadChecksum);
+    }
+    Ok(Bytes::from_vec(body))
+}
+
+fn read_exact(stream: &mut impl Read, buf: &mut [u8]) -> Result<(), WireError> {
+    stream.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Truncated
+        } else {
+            WireError::Io(e)
+        }
+    })
+}
+
+/// One full request frame: `corr | op | payload`, framed.
+pub fn encode_request(corr: u64, op: OpCode, payload: &[u8]) -> Vec<u8> {
+    let mut body = Vec::with_capacity(9 + payload.len());
+    body.extend_from_slice(&corr.to_le_bytes());
+    body.push(op as u8);
+    body.extend_from_slice(payload);
+    let mut out = Vec::with_capacity(WIRE_HEADER_BYTES + body.len());
+    write_frame(&mut out, &body);
+    out
+}
+
+/// One full response frame: `corr | status | payload-or-message`.
+pub fn encode_response(corr: u64, result: Result<&[u8], &str>) -> Vec<u8> {
+    let mut body = Vec::new();
+    body.extend_from_slice(&corr.to_le_bytes());
+    match result {
+        Ok(payload) => {
+            body.push(STATUS_OK);
+            body.extend_from_slice(payload);
+        }
+        Err(msg) => {
+            body.push(STATUS_ERR);
+            put_str(&mut body, msg);
+        }
+    }
+    let mut out = Vec::with_capacity(WIRE_HEADER_BYTES + body.len());
+    write_frame(&mut out, &body);
+    out
+}
+
+// ---- primitive writers -----------------------------------------------------
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(u8::from(v));
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub fn put_strings(out: &mut Vec<u8>, ss: &[String]) {
+    put_u32(out, ss.len() as u32);
+    for s in ss {
+        put_str(out, s);
+    }
+}
+
+/// Tagged option: `0` or `1 | value`.
+pub fn put_opt<T>(out: &mut Vec<u8>, v: Option<&T>, put: impl FnOnce(&mut Vec<u8>, &T)) {
+    match v {
+        None => out.push(0),
+        Some(t) => {
+            out.push(1);
+            put(out, t);
+        }
+    }
+}
+
+/// `count | record-frame*` — each record is a segment-format frame
+/// carrying `offset` (meaningful in fetch responses; the produce path
+/// sends the in-batch index, which the broker re-assigns).
+pub fn put_records<'a>(
+    out: &mut Vec<u8>,
+    records: impl ExactSizeIterator<Item = (u64, &'a Record)>,
+) {
+    put_u32(out, records.len() as u32);
+    for (offset, rec) in records {
+        format::encode_frame(out, offset, rec);
+    }
+}
+
+pub fn put_membership(out: &mut Vec<u8>, m: &GroupMembership) {
+    put_u64(out, m.generation);
+    put_u32(out, m.assigned.len() as u32);
+    for (topic, p) in &m.assigned {
+        put_str(out, topic);
+        put_u32(out, *p);
+    }
+}
+
+pub fn assignor_to_u8(a: Assignor) -> u8 {
+    match a {
+        Assignor::Range => 0,
+        Assignor::RoundRobin => 1,
+    }
+}
+
+pub fn assignor_from_u8(v: u8) -> Result<Assignor, WireError> {
+    match v {
+        0 => Ok(Assignor::Range),
+        1 => Ok(Assignor::RoundRobin),
+        _ => Err(WireError::Malformed("assignor")),
+    }
+}
+
+// ---- payload reader --------------------------------------------------------
+
+/// Cursor over one received frame body. Scalar reads copy; `records`
+/// decodes zero-copy slices of the underlying buffer.
+pub struct Reader {
+    buf: Bytes,
+    pos: usize,
+}
+
+impl Reader {
+    pub fn new(buf: Bytes) -> Reader {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&[u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let start = self.pos;
+        self.pos += n;
+        Ok(&self.buf.as_slice()[start..start + n])
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool, WireError> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String, WireError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::Malformed("utf-8 string"))
+    }
+
+    pub fn strings(&mut self) -> Result<Vec<String>, WireError> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            out.push(self.str()?);
+        }
+        Ok(out)
+    }
+
+    pub fn opt<T>(
+        &mut self,
+        read: impl FnOnce(&mut Self) -> Result<T, WireError>,
+    ) -> Result<Option<T>, WireError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(read(self)?)),
+            _ => Err(WireError::Malformed("option tag")),
+        }
+    }
+
+    /// Decode a record set. Each record's key/value/header payloads are
+    /// O(1) [`Bytes`] slices of this reader's buffer — the zero-copy
+    /// hop across the wire.
+    pub fn records(&mut self) -> Result<Vec<(u64, Record)>, WireError> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            let f = format::decode_frame(&self.buf, self.pos)?;
+            self.pos = f.end;
+            out.push((f.offset, f.record));
+        }
+        Ok(out)
+    }
+
+    pub fn membership(&mut self) -> Result<GroupMembership, WireError> {
+        let generation = self.u64()?;
+        let n = self.u32()? as usize;
+        let mut assigned: Vec<TopicPartition> = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            let topic = self.str()?;
+            let p = self.u32()?;
+            assigned.push((topic, p));
+        }
+        Ok(GroupMembership { generation, assigned })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_body(body: &[u8]) -> Bytes {
+        let mut framed = Vec::new();
+        write_frame(&mut framed, body);
+        read_frame(&mut framed.as_slice()).unwrap()
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let body = b"hello wire".to_vec();
+        assert_eq!(roundtrip_body(&body).as_slice(), body.as_slice());
+        assert!(roundtrip_body(&[]).is_empty());
+    }
+
+    #[test]
+    fn truncated_frame_detected() {
+        let mut framed = Vec::new();
+        write_frame(&mut framed, b"some payload body");
+        for cut in [framed.len() - 1, WIRE_HEADER_BYTES + 3, 5, 0] {
+            let mut short = &framed[..cut];
+            match read_frame(&mut short) {
+                Err(WireError::Truncated) => {}
+                other => panic!("cut {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn flipped_byte_fails_checksum() {
+        let mut framed = Vec::new();
+        write_frame(&mut framed, b"checksummed payload");
+        for i in WIRE_HEADER_BYTES..framed.len() {
+            let mut bad = framed.clone();
+            bad[i] ^= 0xFF;
+            match read_frame(&mut bad.as_slice()) {
+                Err(WireError::BadChecksum) => {}
+                other => panic!("flip at {i}: expected BadChecksum, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_allocation() {
+        let mut framed = Vec::new();
+        write_frame(&mut framed, b"x");
+        framed[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        match read_frame(&mut framed.as_slice()) {
+            Err(WireError::TooLarge(n)) => assert_eq!(n, u32::MAX),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_response_envelopes() {
+        let req = encode_request(42, OpCode::Offsets, b"pay");
+        let body = read_frame(&mut req.as_slice()).unwrap();
+        let mut r = Reader::new(body.clone());
+        assert_eq!(r.u64().unwrap(), 42);
+        assert_eq!(OpCode::from_u8(r.u8().unwrap()), Some(OpCode::Offsets));
+        assert_eq!(r.take(3).unwrap(), b"pay");
+
+        let ok = encode_response(42, Ok(b"result"));
+        let body = read_frame(&mut ok.as_slice()).unwrap();
+        let mut r = Reader::new(body);
+        assert_eq!(r.u64().unwrap(), 42);
+        assert_eq!(r.u8().unwrap(), STATUS_OK);
+
+        let err = encode_response(7, Err("duplicate batch"));
+        let body = read_frame(&mut err.as_slice()).unwrap();
+        let mut r = Reader::new(body);
+        assert_eq!(r.u64().unwrap(), 7);
+        assert_eq!(r.u8().unwrap(), STATUS_ERR);
+        assert_eq!(r.str().unwrap(), "duplicate batch");
+    }
+
+    #[test]
+    fn records_roundtrip_zero_copy() {
+        let recs = vec![
+            Record::with_key(vec![1, 2], vec![9u8; 100]).header("fmt", b"raw"),
+            Record::new(vec![7u8; 50]),
+        ];
+        let mut payload = Vec::new();
+        put_records(
+            &mut payload,
+            recs.iter().enumerate().map(|(i, r)| (i as u64 + 10, r)),
+        );
+        let buf = roundtrip_body(&payload);
+        let mut r = Reader::new(buf.clone());
+        let got = r.records().unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, 10);
+        assert_eq!(got[1].0, 11);
+        assert_eq!(got[0].1, recs[0]);
+        assert_eq!(got[1].1, recs[1]);
+        // Zero-copy: decoded payloads are slices of the received buffer.
+        assert!(Bytes::ptr_eq(&got[0].1.value, &buf));
+        assert!(Bytes::ptr_eq(got[0].1.key.as_ref().unwrap(), &buf));
+        assert!(Bytes::ptr_eq(&got[1].1.value, &buf));
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn membership_and_scalars_roundtrip() {
+        let m = GroupMembership {
+            generation: 9,
+            assigned: vec![("in".to_string(), 0), ("in".to_string(), 2)],
+        };
+        let mut out = Vec::new();
+        put_membership(&mut out, &m);
+        put_opt(&mut out, Some(&(3u64, 4u64)), |o, (a, b)| {
+            put_u64(o, *a);
+            put_u64(o, *b);
+        });
+        put_opt::<u64>(&mut out, None, |o, v| put_u64(o, *v));
+        put_strings(&mut out, &["a".to_string(), "b".to_string()]);
+        put_bool(&mut out, true);
+
+        let mut r = Reader::new(Bytes::from_vec(out));
+        assert_eq!(r.membership().unwrap(), m);
+        assert_eq!(
+            r.opt(|r| Ok((r.u64()?, r.u64()?))).unwrap(),
+            Some((3u64, 4u64))
+        );
+        assert_eq!(r.opt(|r| r.u64()).unwrap(), None);
+        assert_eq!(r.strings().unwrap(), vec!["a".to_string(), "b".to_string()]);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.remaining(), 0);
+        // Reading past the end is Truncated, never a panic.
+        assert!(matches!(r.u8(), Err(WireError::Truncated)));
+    }
+
+    #[test]
+    fn assignor_mapping_roundtrips_and_rejects() {
+        for a in [Assignor::Range, Assignor::RoundRobin] {
+            assert_eq!(assignor_from_u8(assignor_to_u8(a)).unwrap(), a);
+        }
+        assert!(assignor_from_u8(9).is_err());
+    }
+
+    #[test]
+    fn unknown_opcode_is_none() {
+        assert_eq!(OpCode::from_u8(0), None);
+        assert_eq!(OpCode::from_u8(200), None);
+        assert_eq!(OpCode::from_u8(4), Some(OpCode::Produce));
+    }
+}

@@ -1,0 +1,37 @@
+//! The TCP wire protocol: the broker as a real network service.
+//!
+//! Three pieces, all plain `std::net` (the vendored build is hermetic —
+//! no tokio, no serde):
+//!
+//! * [`codec`] — the binary frame format. Every request and response is
+//!   one length-prefixed, CRC-32-checksummed frame (the same framing
+//!   discipline as the on-disk segment format,
+//!   `broker/log/format.rs`), and records travel *as* segment-format
+//!   record frames, so both sides decode them zero-copy into
+//!   [`crate::util::Bytes`] slice views of the received buffer.
+//! * [`server`] — [`BrokerServer`]: a `TcpListener` accept loop plus
+//!   one handler thread per connection, serving a
+//!   [`crate::broker::Cluster`]. Blocking long-polls (`FetchWait`)
+//!   park **server-side** on the broker's [`crate::broker::notify`]
+//!   wait-sets — the wire carries the deadline in the request and the
+//!   wakeup in the response, so a parked remote consumer reacts to a
+//!   produce in one socket round trip, with zero polling on the wire.
+//!   Shutdown rides the crate's cancel primitives and unblocks every
+//!   connection deterministically.
+//! * [`client`] — [`RemoteBroker`]: the socket client implementing
+//!   [`crate::broker::BrokerTransport`], with a small connection pool
+//!   and transparent reconnect, so `Producer`/`Consumer`/coordinator
+//!   jobs run against a broker in another OS process exactly as they
+//!   run in-process.
+//!
+//! On this path the *real* network replaces the simulated
+//! [`crate::broker::NetProfile`] delay — the server dispatches every
+//! operation with [`crate::broker::ClientLocality::Remote`], whose
+//! traversal is always free.
+
+pub mod client;
+pub mod codec;
+pub mod server;
+
+pub use client::RemoteBroker;
+pub use server::BrokerServer;

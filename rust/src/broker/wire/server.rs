@@ -1,0 +1,412 @@
+//! `BrokerServer`: the broker as a TCP service.
+//!
+//! One accept thread plus one handler thread per connection (the REST
+//! back-end's model, which the deployment already runs). Each handler
+//! decodes requests zero-copy ([`codec::Reader`]), dispatches them on
+//! the served [`Cluster`] with [`ClientLocality::Remote`] (real sockets
+//! replace the simulated network profile) and writes one response frame
+//! per request.
+//!
+//! **Long-polls park here.** A `FetchWait` request parks its handler
+//! thread on the cluster's wait-sets
+//! ([`Cluster::wait_for_data_cancellable`]) — the same condvar
+//! discipline in-process consumers use — so a produce wakes the remote
+//! consumer in one socket round trip, and an idle remote consumer costs
+//! the wire *nothing* for the whole client deadline. The server's
+//! shutdown wait-set is an extra wakeup source of every park, so
+//! stopping the server ends all of them immediately; group waits are
+//! additionally capped broker-side below the session timeout (the
+//! member must heartbeat between rounds), and a quiet round returns
+//! `false` for the client to re-arm, exactly like the in-process
+//! contract.
+//!
+//! [`Cluster::wait_for_data_cancellable`]: crate::broker::Cluster::wait_for_data_cancellable
+//!
+//! **Shutdown is deterministic**: the cancel token flips, every open
+//! connection's socket is shut down (unblocking reads), a dummy connect
+//! unblocks the accept loop, and all threads are joined.
+//!
+//! **Corruption never propagates**: a frame that fails its length bound
+//! or CRC, an unknown opcode, or a payload that decodes malformed either
+//! answers with an error response (when the envelope was intact) or
+//! drops the connection — the broker state and its locks are untouched
+//! either way, because decoding completes before any cluster call.
+
+use super::codec::{self, OpCode, Reader, WireError};
+use crate::broker::cluster::ClusterHandle;
+use crate::broker::net::ClientLocality;
+use crate::broker::notify::WaitSet;
+use crate::broker::record::Record;
+use crate::broker::transport::BrokerTransport;
+use crate::broker::TopicPartition;
+use crate::exec::CancelToken;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Hygiene ceiling on one `FetchWait` park — NOT a poll interval. A
+/// parked handler wakes on data, rebalance, *or server shutdown* (the
+/// shutdown wait-set is one of its wakeup sources), so the server can
+/// honor the client's full long-poll deadline with zero polling on the
+/// wire; this cap only bounds a wait whose client named an absurd
+/// timeout.
+pub const MAX_WAIT_SLICE: Duration = Duration::from_secs(600);
+
+/// Idle connections are dropped after this long without a request; the
+/// client pool reconnects transparently on its next call.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(60);
+
+#[derive(Debug)]
+struct Shared {
+    cluster: ClusterHandle,
+    cancel: CancelToken,
+    /// Notified once at shutdown: every handler parked in a server-side
+    /// long-poll wakes immediately (it is registered with this set via
+    /// [`crate::broker::Cluster::wait_for_data_cancellable`]).
+    shutdown: Arc<WaitSet>,
+    /// `try_clone`d handles of every open connection (keyed by a
+    /// connection id), so shutdown can unblock their (blocking) reads;
+    /// handlers remove their entry on exit.
+    open: Mutex<Vec<(u64, TcpStream)>>,
+}
+
+impl Shared {
+    fn forget_conn(&self, id: u64) {
+        self.open.lock().unwrap().retain(|(cid, _)| *cid != id);
+    }
+}
+
+/// The broker's TCP front door. See the module docs.
+pub struct BrokerServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BrokerServer {
+    /// Bind `listen` (e.g. `127.0.0.1:9092`; port 0 = ephemeral) and
+    /// serve `cluster` until [`BrokerServer::shutdown`].
+    pub fn start(listen: &str, cluster: ClusterHandle) -> Result<BrokerServer> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding broker on {listen}"))?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            cluster,
+            cancel: CancelToken::new(),
+            shutdown: Arc::new(WaitSet::new()),
+            open: Mutex::new(Vec::new()),
+        });
+        let shared2 = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("broker-accept".to_string())
+            .spawn(move || accept_loop(listener, shared2))?;
+        log::info!("broker wire protocol serving on {addr}");
+        Ok(BrokerServer { addr, shared, accept: Some(accept) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.shared.cancel.is_cancelled() {
+            return;
+        }
+        self.shared.cancel.cancel();
+        // Wake every handler parked in a server-side long-poll...
+        self.shared.shutdown.notify_all();
+        // ...unblock every parked connection read...
+        for (_, s) in self.shared.open.lock().unwrap().iter() {
+            s.shutdown(Shutdown::Both).ok();
+        }
+        // ...and the blocking accept itself. A wildcard bind (0.0.0.0 /
+        // [::]) is not connectable everywhere — rewrite it to the same
+        // family's loopback, which the listener accepts on.
+        let mut target = self.addr;
+        if target.ip().is_unspecified() {
+            target.set_ip(match target {
+                SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        TcpStream::connect(target).ok();
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for BrokerServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut next_conn_id = 0u64;
+    for stream in listener.incoming() {
+        if shared.cancel.is_cancelled() {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                let conn_id = next_conn_id;
+                next_conn_id += 1;
+                if let Ok(clone) = s.try_clone() {
+                    shared.open.lock().unwrap().push((conn_id, clone));
+                }
+                let shared2 = shared.clone();
+                handlers.retain(|h| !h.is_finished());
+                match std::thread::Builder::new()
+                    .name("broker-conn".to_string())
+                    .spawn(move || {
+                        serve_conn(s, &shared2);
+                        shared2.forget_conn(conn_id);
+                    }) {
+                    Ok(h) => handlers.push(h),
+                    Err(e) => {
+                        // The closure (owning the stream) was dropped;
+                        // also drop the registered clone so the client
+                        // sees a prompt EOF instead of a dead socket.
+                        log::warn!("broker: spawning connection handler: {e}");
+                        shared.forget_conn(conn_id);
+                    }
+                }
+            }
+            Err(e) => {
+                log::warn!("broker accept error: {e}");
+                if shared.cancel.is_cancelled() {
+                    break;
+                }
+            }
+        }
+    }
+    // A connection accepted concurrently with shutdown may have been
+    // registered after `stop()` swept the open list — sweep once more
+    // so no handler is left blocking on a live socket.
+    for (_, s) in shared.open.lock().unwrap().iter() {
+        s.shutdown(Shutdown::Both).ok();
+    }
+    for h in handlers {
+        h.join().ok();
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, shared: &Shared) {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(IDLE_TIMEOUT)).ok();
+    let mut metrics_channel = false;
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".to_string());
+    while !shared.cancel.is_cancelled() {
+        let body = match codec::read_frame(&mut stream) {
+            Ok(b) => b,
+            Err(WireError::Truncated) => {
+                // Clean disconnect (or a frame torn mid-send): nothing
+                // half-applied, nothing poisoned — just close.
+                log::debug!("broker: {peer} disconnected");
+                return;
+            }
+            Err(e) => {
+                log::debug!("broker: dropping {peer}: {e}");
+                return;
+            }
+        };
+        let mut r = Reader::new(body.clone());
+        // If even the envelope is unreadable there is no correlation id
+        // to answer on — drop the connection.
+        let Ok(corr) = r.u64() else { return };
+        let Ok(op_byte) = r.u8() else { return };
+        // `Metric` is the one one-way opcode: best-effort by contract,
+        // so no response frame — the client never stalls its latency
+        // path on a counter bump.
+        if OpCode::from_u8(op_byte) == Some(OpCode::Metric) {
+            if !metrics_channel {
+                // Clients send metrics on a dedicated connection that
+                // can sit quiet for minutes; if the idle timeout closed
+                // it, the client's next write would land in a closed
+                // socket's buffer and that delta would vanish. Exempt
+                // the channel — EOF and server shutdown still end it.
+                metrics_channel = true;
+                stream.set_read_timeout(None).ok();
+            }
+            if let Err(e) = dispatch(OpCode::Metric, &mut r, shared) {
+                log::debug!("broker: bad metric from {peer}: {e:#}");
+            }
+            continue;
+        }
+        let reply = match OpCode::from_u8(op_byte) {
+            None => Err(format!("unknown opcode {op_byte}")),
+            Some(op) => dispatch(op, &mut r, shared).map_err(|e| format!("{e:#}")),
+        };
+        let frame = codec::encode_response(corr, reply.as_deref().map_err(String::as_str));
+        if let Err(e) = stream.write_all(&frame) {
+            log::debug!("broker: writing to {peer}: {e}");
+            return;
+        }
+    }
+}
+
+/// Decode one request payload and run it against the cluster. Decoding
+/// happens *entirely* before the cluster call, so a malformed payload
+/// can never leave a partition lock poisoned or a group half-updated.
+fn dispatch(op: OpCode, r: &mut Reader, shared: &Shared) -> Result<Vec<u8>> {
+    let cluster = &shared.cluster;
+    let mut out = Vec::new();
+    match op {
+        OpCode::CreateTopic => {
+            let partitions = r.u32()?;
+            let topic = r.str()?;
+            // Through the SAME trait impl the in-process transport
+            // uses (0 = broker default), so the two paths cannot drift.
+            let n = BrokerTransport::create_topic(&**cluster, &topic, partitions)?;
+            codec::put_u32(&mut out, n);
+        }
+        OpCode::Metadata => {
+            let topic = r.str()?;
+            let parts = cluster.topic(&topic).map(|t| t.num_partitions());
+            codec::put_opt(&mut out, parts.as_ref(), |o, n| codec::put_u32(o, *n));
+        }
+        OpCode::ListTopics => {
+            codec::put_strings(&mut out, &cluster.topic_names());
+        }
+        OpCode::Produce => {
+            let partition = r.u32()?;
+            let seq = r.opt(|r| Ok((r.u64()?, r.u64()?)))?;
+            let topic = r.str()?;
+            // Zero-copy: each decoded record's payloads are slices of
+            // the request buffer; the append below shares them.
+            let records: Vec<Record> =
+                r.records()?.into_iter().map(|(_, rec)| rec).collect();
+            let base = cluster.produce(&topic, partition, &records, ClientLocality::Remote, seq)?;
+            codec::put_u64(&mut out, base);
+        }
+        OpCode::FetchBatch => {
+            let partition = r.u32()?;
+            let from = r.u64()?;
+            let max = r.u32()? as usize;
+            let topic = r.str()?;
+            let batch =
+                cluster.fetch_batch(&topic, partition, from, max, ClientLocality::Remote)?;
+            // Bound the RESPONSE to the frame limit too: the client
+            // hard-rejects oversized frames, so an unbounded batch of
+            // large records would wedge the consumer forever. Return a
+            // prefix instead — fetch's contract is "up to max", and
+            // the consumer advances through the rest in later fetches.
+            let budget = codec::MAX_FRAME_BYTES as usize - 1024; // envelope headroom
+            let mut bytes = 4usize; // record-count prefix
+            let mut take = 0usize;
+            for (offset, rec) in &batch.records {
+                let frame = crate::broker::log::format::frame_size(rec);
+                if bytes + frame > budget {
+                    if take == 0 {
+                        anyhow::bail!(
+                            "record at {topic}:{partition}@{offset} ({frame} bytes) \
+                             exceeds the wire frame limit"
+                        );
+                    }
+                    break;
+                }
+                bytes += frame;
+                take += 1;
+            }
+            codec::put_records(
+                &mut out,
+                batch.records.iter().take(take).map(|(o, rec)| (*o, rec)),
+            );
+        }
+        OpCode::FetchWait => {
+            let timeout_ms = r.u64()?;
+            let group = r.opt(|r| Ok((r.str()?, r.u64()?)))?;
+            let n = r.u32()? as usize;
+            let mut assignments: Vec<(TopicPartition, u64)> = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                let topic = r.str()?;
+                let p = r.u32()?;
+                let pos = r.u64()?;
+                assignments.push(((topic, p), pos));
+            }
+            // Park THIS thread on the broker's wait-sets; the client is
+            // blocked on its socket read until the response frame. The
+            // shutdown wait-set is an extra wakeup source, so the park
+            // can honor the client's full deadline and still end the
+            // instant the server stops. (Group waits are still capped
+            // broker-side below the session timeout so remote members
+            // heartbeat between rounds; a quiet round is a normal
+            // "re-arm" answer.)
+            let wait = Duration::from_millis(timeout_ms).min(MAX_WAIT_SLICE);
+            let woken = cluster.wait_for_data_cancellable(
+                &assignments,
+                group.as_ref().map(|(gid, gen)| (gid.as_str(), *gen)),
+                Instant::now() + wait,
+                Some(&shared.shutdown),
+                || shared.cancel.is_cancelled(),
+            );
+            codec::put_bool(&mut out, woken);
+        }
+        OpCode::Offsets => {
+            let partition = r.u32()?;
+            let topic = r.str()?;
+            let (earliest, latest) = cluster.offsets(&topic, partition)?;
+            codec::put_u64(&mut out, earliest);
+            codec::put_u64(&mut out, latest);
+        }
+        OpCode::AllocProducerId => {
+            codec::put_u64(&mut out, cluster.alloc_producer_id());
+        }
+        OpCode::JoinGroup => {
+            let assignor = codec::assignor_from_u8(r.u8()?)?;
+            let gid = r.str()?;
+            let member = r.str()?;
+            let topics = r.strings()?;
+            let m = cluster.join_group(&gid, &member, &topics, assignor);
+            codec::put_membership(&mut out, &m);
+        }
+        OpCode::LeaveGroup => {
+            let gid = r.str()?;
+            let member = r.str()?;
+            cluster.leave_group(&gid, &member);
+        }
+        OpCode::Heartbeat => {
+            let gid = r.str()?;
+            let member = r.str()?;
+            let m = cluster.heartbeat(&gid, &member);
+            codec::put_opt(&mut out, m.as_ref(), codec::put_membership);
+        }
+        OpCode::CommitOffsets => {
+            let gid = r.str()?;
+            let n = r.u32()? as usize;
+            let mut offsets: Vec<(TopicPartition, u64)> = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                let topic = r.str()?;
+                let p = r.u32()?;
+                let off = r.u64()?;
+                offsets.push(((topic, p), off));
+            }
+            // Same trait impl as the in-process transport — no drift.
+            BrokerTransport::commit_offsets(&**cluster, &gid, &offsets)?;
+        }
+        OpCode::CommittedOffset => {
+            let gid = r.str()?;
+            let topic = r.str()?;
+            let p = r.u32()?;
+            let committed = cluster.committed_offset(&gid, &(topic, p));
+            codec::put_opt(&mut out, committed.as_ref(), |o, v| codec::put_u64(o, *v));
+        }
+        OpCode::Metric => {
+            let delta = r.u64()?;
+            let name = r.str()?;
+            cluster.metrics.counter(&name).add(delta);
+        }
+    }
+    Ok(out)
+}

@@ -4,16 +4,33 @@
 //!
 //! ```text
 //! kafka-ml pipeline [--samples N] [--epochs E] [--replicas R] [--artifacts DIR]
-//! kafka-ml serve    [--port P] [--artifacts DIR]
+//! kafka-ml serve    [--port P] [--listen ADDR] [--artifacts DIR]
 //! kafka-ml info     [--artifacts DIR]
+//! kafka-ml produce  --broker ADDR --topic T ...
+//! kafka-ml consume  --broker ADDR --topic T ...
+//! kafka-ml train    --broker ADDR --backend-url URL ...
+//! kafka-ml infer    --broker ADDR --backend-url URL ...
 //! ```
+//!
+//! `serve --listen` exposes the broker's TCP wire protocol; the
+//! `produce`/`consume`/`train`/`infer` subcommands are workers that
+//! reach it with `--broker ADDR` over a [`RemoteBroker`] transport —
+//! broker and workers as separate OS processes, the paper's separate
+//! containers.
 
-use crate::broker::{BrokerConfig, ClientLocality, LogConfig, StorageMode};
-use crate::coordinator::{KafkaMl, KafkaMlConfig, TrainParams};
+use crate::broker::{
+    BrokerConfig, BrokerHandle, BrokerServer, BrokerTransport, ClientLocality, Consumer,
+    LogConfig, Producer, ProducerConfig, Record, RemoteBroker, StorageMode,
+};
+use crate::coordinator::{
+    InferenceReplicaConfig, KafkaMl, KafkaMlConfig, TrainParams, TrainingJobConfig,
+};
+use crate::exec::CancelToken;
 use crate::json::Json;
 use crate::ml::hcopd_dataset;
+use crate::registry::BackendClient;
 use crate::runtime::BackendSelect;
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::time::Duration;
 
@@ -50,12 +67,29 @@ USAGE:
   kafka-ml pipeline [--samples N] [--epochs E] [--replicas R] [--artifacts DIR]
                     [--data-dir DIR] [--backend auto|pjrt|native]
       Run the full Fig-1 pipeline (A-F) on the synthetic HCOPD workload.
-  kafka-ml serve [--port P] [--artifacts DIR] [--state FILE.json]
-                 [--data-dir DIR] [--backend auto|pjrt|native]
+  kafka-ml serve [--port P] [--listen ADDR] [--artifacts DIR]
+                 [--state FILE.json] [--data-dir DIR] [--backend auto|pjrt|native]
       Boot the platform (broker + back-end + orchestrator) and serve the
       RESTful back-end until Ctrl-C; --state snapshots the registry.
+      --listen ADDR additionally serves the broker's TCP wire protocol
+      (e.g. 127.0.0.1:9092), so workers in other processes can attach
+      with --broker.
   kafka-ml info [--artifacts DIR] [--backend auto|pjrt|native]
       Print the model's metadata and which execution backend loads.
+
+REMOTE WORKERS (separate OS processes; need a `serve --listen` broker):
+  kafka-ml produce --broker ADDR --topic T [--partition P] [--value V | --count N]
+      Produce records (--value once, or --count synthetic records).
+  kafka-ml consume --broker ADDR --topic T [--partition P] [--group G]
+                   [--from OFFSET] [--max N] [--idle-ms MS]
+      Print records as they arrive; exits after MS idle (default 5000).
+  kafka-ml train --broker ADDR --backend-url URL --deployment ID --result ID
+                 [--model ID | --artifacts DIR] [--epochs E]
+                 [--backend auto|pjrt|native]
+      Run one training Job (Algorithm 1) against the remote broker.
+  kafka-ml infer --broker ADDR --backend-url URL --inference ID
+                 [--member NAME] [--backend auto|pjrt|native]
+      Run one inference replica (Algorithm 2) until Ctrl-C.
 
   --data-dir enables tiered segment storage: rolled log segments are
   sealed to checksummed files under DIR and recovered on the next boot,
@@ -86,12 +120,49 @@ pub fn run(args: &[String]) -> Result<()> {
         Some("pipeline") => cmd_pipeline(&parse_flags(&args[1..])?),
         Some("serve") => cmd_serve(&parse_flags(&args[1..])?),
         Some("info") => cmd_info(&parse_flags(&args[1..])?),
+        Some("produce") => cmd_produce(&parse_flags(&args[1..])?),
+        Some("consume") => cmd_consume(&parse_flags(&args[1..])?),
+        Some("train") => cmd_train(&parse_flags(&args[1..])?),
+        Some("infer") => cmd_infer(&parse_flags(&args[1..])?),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
         }
         Some(other) => bail!("unknown command '{other}'\n\n{USAGE}"),
     }
+}
+
+/// Connect the remote broker transport named by `--broker ADDR`.
+fn remote_broker(flags: &BTreeMap<String, String>) -> Result<BrokerHandle> {
+    let addr = flags
+        .get("broker")
+        .context("this subcommand needs --broker ADDR (a `kafka-ml serve --listen` endpoint)")?;
+    let broker = RemoteBroker::connect(addr)?;
+    Ok(broker)
+}
+
+fn required<'a>(flags: &'a BTreeMap<String, String>, key: &str) -> Result<&'a String> {
+    flags
+        .get(key)
+        .with_context(|| format!("missing required flag --{key}"))
+}
+
+fn required_u64(flags: &BTreeMap<String, String>, key: &str) -> Result<u64> {
+    required(flags, key)?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--{key} must be an integer: {e}"))
+}
+
+/// A default group member id unique across hosts AND processes: pids
+/// alone collide in containers (every pod's worker is pid 1), and a
+/// colliding id silently merges two workers into one member.
+fn default_member_id(prefix: &str) -> String {
+    let host = std::env::var("HOSTNAME").unwrap_or_else(|_| "local".to_string());
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    format!("{prefix}-{host}-{}-{nanos:08x}", std::process::id())
 }
 
 fn artifacts_dir(flags: &BTreeMap<String, String>) -> String {
@@ -154,6 +225,17 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
         backend: backend_flag(flags)?,
         ..Default::default()
     })?;
+    // --listen: expose the broker over the TCP wire protocol so remote
+    // workers (produce/consume/train/infer --broker) can attach. The
+    // server lives as long as the serve loop below.
+    let _wire_server = match flags.get("listen") {
+        Some(addr) => {
+            let server = BrokerServer::start(addr, kml.cluster.clone())?;
+            println!("broker wire protocol on {}", server.addr());
+            Some(server)
+        }
+        None => None,
+    };
     // Optional durability: restore + periodically snapshot the back-end
     // state (--state path.json), like the paper's database-backed Django.
     let state_path = flags.get("state").cloned();
@@ -252,6 +334,183 @@ fn cmd_pipeline(flags: &BTreeMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+// ---- remote workers (separate OS processes over the wire) -----------------
+
+fn cmd_produce(flags: &BTreeMap<String, String>) -> Result<()> {
+    let broker = remote_broker(flags)?;
+    let topic = required(flags, "topic")?;
+    let partition = flag_u64(flags, "partition", 0)? as u32;
+    let mut producer = Producer::new(
+        broker,
+        ProducerConfig {
+            batch_size: 64,
+            locality: ClientLocality::Remote,
+            ..Default::default()
+        },
+    );
+    let n = match flags.get("value") {
+        Some(v) => {
+            producer.send_to(topic, partition, Record::new(v.as_bytes().to_vec()))?;
+            1
+        }
+        None => {
+            let count = flag_u64(flags, "count", 10)?;
+            for i in 0..count {
+                producer.send_to(
+                    topic,
+                    partition,
+                    Record::new(format!("record-{i}").into_bytes()),
+                )?;
+            }
+            count
+        }
+    };
+    producer.flush()?;
+    println!("produced {n} record(s) to {topic}:{partition}");
+    Ok(())
+}
+
+fn cmd_consume(flags: &BTreeMap<String, String>) -> Result<()> {
+    let broker = remote_broker(flags)?;
+    let topic = required(flags, "topic")?;
+    let max = flag_u64(flags, "max", u64::MAX)?;
+    let idle_ms = flag_u64(flags, "idle-ms", 5000)?;
+    let mut consumer = Consumer::new(broker.clone(), ClientLocality::Remote);
+    match flags.get("group") {
+        Some(group) => {
+            if flags.contains_key("from") {
+                bail!("--from replays a fixed offset and --group resumes from commits; pick one");
+            }
+            // Auto-create (like producers do): joining a group on a
+            // not-yet-created topic would yield an empty assignment
+            // that no later produce can fix (topic creation does not
+            // rebalance existing groups).
+            broker.create_topic(topic, 0)?;
+            let member = default_member_id("cli");
+            consumer.subscribe(group, &member, &[topic.clone()], crate::broker::Assignor::Range)?;
+        }
+        None => {
+            let parts = match flags.get("partition") {
+                Some(_) => vec![flag_u64(flags, "partition", 0)? as u32],
+                None => {
+                    let n = broker
+                        .topic_partitions(topic)?
+                        .with_context(|| format!("unknown topic '{topic}'"))?;
+                    (0..n).collect()
+                }
+            };
+            consumer.assign(parts.iter().map(|&p| (topic.clone(), p)).collect());
+            if let Some(from) = flags.get("from") {
+                let from: u64 = from.parse().context("--from must be an offset")?;
+                for &p in &parts {
+                    consumer.seek((topic.clone(), p), from);
+                }
+            }
+        }
+    }
+    let mut seen = 0u64;
+    while seen < max {
+        let budget = (max - seen).min(256) as usize;
+        let recs = consumer.poll_wait(budget, Duration::from_millis(idle_ms))?;
+        if recs.is_empty() {
+            break; // idle window elapsed with nothing new
+        }
+        for rec in recs {
+            println!(
+                "{}:{} @{}  {}",
+                rec.topic,
+                rec.partition,
+                rec.offset,
+                String::from_utf8_lossy(&rec.record.value)
+            );
+            seen += 1;
+        }
+        consumer.commit()?;
+    }
+    // Leave promptly so a dead CLI member does not hold partitions
+    // until session expiry (best-effort; no-op for manual assignment).
+    consumer.leave();
+    println!("consumed {seen} record(s) from {topic}");
+    Ok(())
+}
+
+fn cmd_train(flags: &BTreeMap<String, String>) -> Result<()> {
+    let broker = remote_broker(flags)?;
+    let backend_url = required(flags, "backend-url")?;
+    let deployment_id = required_u64(flags, "deployment")?;
+    let result_id = required_u64(flags, "result")?;
+    // The artifact dir comes from the model registry (--model ID, the
+    // containerized path) or straight from --artifacts.
+    let artifact_dir = match flags.get("model") {
+        Some(m) => {
+            let model_id: u64 = m.parse().context("--model must be an id")?;
+            BackendClient::new(backend_url).model_artifact_dir(model_id)?
+        }
+        None => artifacts_dir(flags),
+    };
+    let config = TrainingJobConfig {
+        epochs: flag_u64(flags, "epochs", 1)? as usize,
+        control_timeout: Duration::from_secs(flag_u64(flags, "control-timeout-s", 120)?),
+        locality: ClientLocality::Remote,
+        backend: backend_flag(flags)?,
+        ..TrainingJobConfig::new(deployment_id, result_id, &artifact_dir, backend_url)
+    };
+    println!("training job: deployment {deployment_id}, result {result_id}, broker {}",
+        required(flags, "broker")?);
+    let outcome =
+        crate::coordinator::training::run_training_job(&broker, &config, &CancelToken::new())?;
+    println!(
+        "trained: loss {:.4} acc {:.3} ({} steps, {} train / {} val samples)",
+        outcome.metrics.loss,
+        outcome.metrics.accuracy,
+        outcome.steps,
+        outcome.samples_train,
+        outcome.samples_val
+    );
+    Ok(())
+}
+
+fn cmd_infer(flags: &BTreeMap<String, String>) -> Result<()> {
+    let broker = remote_broker(flags)?;
+    let backend_url = required(flags, "backend-url")?;
+    let inference_id = required_u64(flags, "inference")?;
+    let member = flags
+        .get("member")
+        .cloned()
+        .unwrap_or_else(|| default_member_id("replica"));
+    // Same auto-configuration the orchestrator entrypoint does: the
+    // deployment row names topics, format and the trained result.
+    let backend = BackendClient::new(backend_url);
+    let info = backend.inference_info(inference_id)?;
+    let result_id = info.req_u64("result_id")?;
+    let result = backend.result_info(result_id)?;
+    let model_id = result.req_u64("model_id")?;
+    let artifact_dir = backend.model_artifact_dir(model_id)?;
+    let config = InferenceReplicaConfig {
+        inference_id,
+        result_id,
+        artifact_dir,
+        backend_url: backend_url.clone(),
+        input_topic: info.req_str("input_topic")?.to_string(),
+        output_topic: info.req_str("output_topic")?.to_string(),
+        input_format: info.req_str("input_format")?.to_string(),
+        input_config: info.get("input_config").clone(),
+        locality: ClientLocality::Remote,
+        max_poll: 32,
+        backend: backend_flag(flags)?,
+    };
+    println!(
+        "inference replica '{member}' on {} -> {} (Ctrl-C to stop)",
+        config.input_topic, config.output_topic
+    );
+    crate::coordinator::inference::run_inference_replica(
+        &broker,
+        &config,
+        &member,
+        &CancelToken::new(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -304,5 +563,28 @@ mod tests {
         assert!(run(&s(&["help"])).is_ok());
         assert!(run(&[]).is_ok());
         assert!(run(&s(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn remote_workers_require_broker_flag() {
+        for cmd in ["produce", "consume", "train", "infer"] {
+            let err = run(&s(&[cmd, "--topic", "t"])).unwrap_err();
+            assert!(
+                err.to_string().contains("--broker"),
+                "{cmd}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn produce_requires_topic() {
+        // An unreachable broker address fails before --topic is read;
+        // use a local listener so connect succeeds.
+        let c = crate::broker::Cluster::new(BrokerConfig::default());
+        let srv = BrokerServer::start("127.0.0.1:0", c).unwrap();
+        let addr = srv.addr().to_string();
+        let err = run(&s(&["produce", "--broker", &addr])).unwrap_err();
+        assert!(err.to_string().contains("--topic"), "{err}");
+        srv.shutdown();
     }
 }

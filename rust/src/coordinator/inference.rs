@@ -19,7 +19,10 @@
 //! formats' label-in-key convention; the replica copies the header onto
 //! the prediction it produces.
 
-use crate::broker::{Assignor, ClientLocality, ClusterHandle, Consumer, Producer, ProducerConfig, Record};
+use crate::broker::{
+    Assignor, BrokerHandle, BrokerTransport, ClientLocality, Consumer, Producer, ProducerConfig,
+    Record,
+};
 use crate::exec::CancelToken;
 use crate::formats::registry;
 use crate::json::Json;
@@ -55,9 +58,11 @@ impl InferenceReplicaConfig {
 }
 
 /// Run one inference replica until cancelled (Algorithm 2). `member_id`
-/// distinguishes replicas inside the consumer group.
+/// distinguishes replicas inside the consumer group. Runs identically
+/// in-process and against a remote broker over the wire
+/// (`kafka-ml infer --broker`) — the paper's replica-pods topology.
 pub fn run_inference_replica(
-    cluster: &ClusterHandle,
+    broker: &BrokerHandle,
     config: &InferenceReplicaConfig,
     member_id: &str,
     cancel: &CancelToken,
@@ -71,17 +76,17 @@ pub fn run_inference_replica(
     // getDeserializer(input_configuration)
     let format = registry(&config.input_format, &config.input_config)?;
 
-    cluster.topic_or_create(&config.input_topic);
-    cluster.topic_or_create(&config.output_topic);
-    let mut consumer = Consumer::new(cluster.clone(), config.locality);
+    broker.create_topic(&config.input_topic, 0)?;
+    broker.create_topic(&config.output_topic, 0)?;
+    let mut consumer = Consumer::new(broker.clone(), config.locality);
     consumer.subscribe(
         &config.group_id(),
         member_id,
         &[config.input_topic.clone()],
         Assignor::RoundRobin,
-    );
+    )?;
     let mut producer = Producer::new(
-        cluster.clone(),
+        broker.clone(),
         ProducerConfig {
             batch_size: 1, // predictions leave immediately (latency path)
             locality: config.locality,
@@ -93,21 +98,17 @@ pub fn run_inference_replica(
     let features = engine.meta().input_dim;
     let mut x_buf: Vec<f32> = Vec::new();
     while !cancel.is_cancelled() {
-        if !consumer.poll_heartbeat() {
-            // Evicted (e.g. after a pause); rejoin.
-            consumer.subscribe(
-                &config.group_id(),
-                member_id,
-                &[config.input_topic.clone()],
-                Assignor::RoundRobin,
-            );
-        }
+        // Liveness is handled inside the blocking poll: it heartbeats
+        // after every wait round, throttle-heartbeats on the saturated
+        // data path, and rejoins with the original subscription when
+        // evicted — an extra heartbeat round trip here would just tax
+        // the remote latency path.
+        //
         // Batched fetch (zero-copy): requests arrive as shared-payload
         // batches; decoding reads `&[u8]` views of the log's buffers.
         // When idle the replica parks across its assigned partitions and
         // is pushed awake by the next request (or a group rebalance);
-        // the slice bounds cancellation/heartbeat latency, not wakeup
-        // latency.
+        // the slice bounds cancellation latency, not wakeup latency.
         let batches = consumer.poll_batches_wait(config.max_poll, Duration::from_millis(25))?;
         if batches.is_empty() {
             continue;
@@ -149,11 +150,10 @@ pub fn run_inference_replica(
             }
             producer.send_to(&config.output_topic, 0, rec)?;
         }
-        consumer.commit();
-        cluster
-            .metrics
-            .counter("kafka_ml.inference.predictions")
-            .add(rows as u64);
+        consumer.commit()?;
+        // Platform metric; lands on the broker's registry whichever
+        // transport carried it.
+        broker.add_metric("kafka_ml.inference.predictions", rows as u64);
     }
     consumer.leave();
     Ok(())
@@ -185,9 +185,10 @@ impl Prediction {
 
 /// Client-side request/response over the input/output topics (§III-F:
 /// "send encoded data streams to the input topic, and inference results
-/// will be immediately sent to the output topic").
+/// will be immediately sent to the output topic"). Transport-agnostic:
+/// hand it an in-process cluster or a [`crate::broker::RemoteBroker`].
 pub struct InferenceClient {
-    cluster: ClusterHandle,
+    broker: BrokerHandle,
     input_topic: String,
     output_topic: String,
     format: Box<dyn crate::formats::DataFormat>,
@@ -203,7 +204,7 @@ pub struct InferenceClient {
 
 impl InferenceClient {
     pub fn new(
-        cluster: ClusterHandle,
+        broker: BrokerHandle,
         input_topic: &str,
         output_topic: &str,
         input_format: &str,
@@ -211,20 +212,20 @@ impl InferenceClient {
         locality: ClientLocality,
     ) -> Result<InferenceClient> {
         let format = registry(input_format, input_config)?;
-        cluster.topic_or_create(input_topic);
-        cluster.topic_or_create(output_topic);
+        broker.create_topic(input_topic, 0)?;
+        broker.create_topic(output_topic, 0)?;
         let producer = Producer::new(
-            cluster.clone(),
+            broker.clone(),
             ProducerConfig { batch_size: 1, locality, ..Default::default() },
         );
-        let mut consumer = Consumer::new(cluster.clone(), locality);
+        let mut consumer = Consumer::new(broker.clone(), locality);
         consumer.assign(vec![(output_topic.to_string(), 0)]);
         // Start reading at the current end: old predictions are not ours.
-        let (_, latest) = cluster.offsets(output_topic, 0)?;
+        let (_, latest) = broker.offsets(output_topic, 0)?;
         consumer.seek((output_topic.to_string(), 0), latest);
-        let client_id = cluster.alloc_producer_id();
+        let client_id = broker.alloc_producer_id()?;
         Ok(InferenceClient {
-            cluster,
+            broker,
             input_topic: input_topic.to_string(),
             output_topic: output_topic.to_string(),
             format,
@@ -294,8 +295,8 @@ impl InferenceClient {
         }
     }
 
-    pub fn cluster(&self) -> &ClusterHandle {
-        &self.cluster
+    pub fn broker(&self) -> &BrokerHandle {
+        &self.broker
     }
 }
 

@@ -42,7 +42,7 @@ pub fn run_control_logger(
         "logger-0",
         &[CONTROL_TOPIC.to_string()],
         crate::broker::Assignor::Range,
-    );
+    )?;
     while !cancel.is_cancelled() {
         // Blocking long-poll: the logger parks on the control partition
         // and is woken the instant a control message is produced. The
@@ -62,7 +62,7 @@ pub fn run_control_logger(
                 Err(e) => log::warn!("control logger: bad message at {}: {e}", rec.offset),
             }
         }
-        consumer.commit();
+        consumer.commit()?;
     }
     consumer.leave();
     Ok(())

@@ -22,7 +22,9 @@ use super::inference::{InferenceClient, InferenceReplicaConfig};
 use super::logger::run_control_logger;
 use super::reuse::ReuseManager;
 use super::training::{run_training_job, TrainingJobConfig};
-use crate::broker::{BrokerConfig, ClientLocality, Cluster, ClusterHandle, Producer, ProducerConfig};
+use crate::broker::{
+    BrokerConfig, BrokerHandle, ClientLocality, Cluster, ClusterHandle, Producer, ProducerConfig,
+};
 use crate::formats::{registry as format_registry, Sample};
 use crate::json::Json;
 use crate::orchestrator::{
@@ -139,7 +141,7 @@ impl KafkaMl {
     fn register_entrypoints(orch: &Arc<Orchestrator>, cluster: &ClusterHandle, backend_url: &str) {
         // training Job (§IV-C, Algorithm 1)
         {
-            let cluster = cluster.clone();
+            let broker: BrokerHandle = cluster.clone();
             let url = backend_url.to_string();
             orch.register_entrypoint("training-job", move |ctx| {
                 let backend = BackendClient::new(&url);
@@ -160,7 +162,7 @@ impl KafkaMl {
                     backend: ctx.env_or("BACKEND", "auto").parse()?,
                 };
                 let result_id = config.result_id;
-                match run_training_job(&cluster, &config, &ctx.cancel) {
+                match run_training_job(&broker, &config, &ctx.cancel) {
                     Ok(_) => Ok(()),
                     Err(e) => {
                         BackendClient::new(&url)
@@ -173,7 +175,7 @@ impl KafkaMl {
         }
         // inference replica (§IV-D, Algorithm 2)
         {
-            let cluster = cluster.clone();
+            let broker: BrokerHandle = cluster.clone();
             let url = backend_url.to_string();
             orch.register_entrypoint("inference-replica", move |ctx| {
                 let backend = BackendClient::new(&url);
@@ -197,7 +199,7 @@ impl KafkaMl {
                     backend: ctx.env_or("BACKEND", "auto").parse()?,
                 };
                 super::inference::run_inference_replica(
-                    &cluster,
+                    &broker,
                     &config,
                     &ctx.pod_name,
                     &ctx.cancel,
@@ -216,6 +218,12 @@ impl KafkaMl {
 
     pub fn backend_url(&self) -> &str {
         &self.backend_url
+    }
+
+    /// The in-process transport handle on this platform's broker — what
+    /// inline jobs and tests pass to the coordinator entrypoints.
+    pub fn broker(&self) -> BrokerHandle {
+        self.cluster.clone()
     }
 
     pub fn backend(&self) -> BackendClient {

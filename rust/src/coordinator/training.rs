@@ -23,7 +23,7 @@
 //! job's `backend` knob, `Auto` by default.
 
 use super::control::{ControlMessage, CONTROL_TOPIC};
-use crate::broker::{ClientLocality, ClusterHandle, Consumer};
+use crate::broker::{BrokerHandle, BrokerTransport, ClientLocality, Consumer};
 use crate::exec::CancelToken;
 use crate::formats::{registry, Sample};
 use crate::ml::{epoch_batches, split_validation, MetricAverager};
@@ -87,15 +87,15 @@ pub struct TrainingOutcome {
 /// (no sleep-poll loop); waits run in short slices so cancellation is
 /// still observed promptly while idle.
 pub fn await_control_message(
-    cluster: &ClusterHandle,
+    broker: &BrokerHandle,
     deployment_id: u64,
     locality: ClientLocality,
     timeout: Duration,
     cancel: &CancelToken,
 ) -> Result<ControlMessage> {
     const CANCEL_SLICE: Duration = Duration::from_millis(25);
-    cluster.topic_or_create(CONTROL_TOPIC);
-    let mut consumer = Consumer::new(cluster.clone(), locality);
+    broker.create_topic(CONTROL_TOPIC, 1)?;
+    let mut consumer = Consumer::new(broker.clone(), locality);
     consumer.assign(vec![(CONTROL_TOPIC.to_string(), 0)]);
     let deadline = Instant::now() + timeout;
     loop {
@@ -118,15 +118,15 @@ pub fn await_control_message(
 
 /// Read the exact log window a control message names and decode it.
 pub fn read_stream_window(
-    cluster: &ClusterHandle,
+    broker: &BrokerHandle,
     msg: &ControlMessage,
     locality: ClientLocality,
 ) -> Result<Vec<Sample>> {
     let format = registry(&msg.input_format, &msg.input_config)?;
-    let mut consumer = Consumer::new(cluster.clone(), locality);
+    let mut consumer = Consumer::new(broker.clone(), locality);
     let tp = (msg.stream.topic.clone(), msg.stream.partition);
     // The window must still be in the log (retention!) — §V.
-    let (earliest, latest) = cluster.offsets(&msg.stream.topic, msg.stream.partition)?;
+    let (earliest, latest) = broker.offsets(&msg.stream.topic, msg.stream.partition)?;
     if msg.stream.offset < earliest {
         bail!(
             "stream {} expired: starts at {} but log begins at {earliest}",
@@ -245,8 +245,13 @@ pub fn train_on_samples(
 
 /// The full training Job (Algorithm 1). Returns the outcome after
 /// uploading model + metrics to the back-end.
+///
+/// `broker` is a transport handle: the job runs identically against an
+/// in-process cluster (the inline "data streams" column of Tables I/II)
+/// and a remote broker over the wire (`kafka-ml train --broker`), just
+/// as the paper's containerized jobs reach Kafka over the network.
 pub fn run_training_job(
-    cluster: &ClusterHandle,
+    broker: &BrokerHandle,
     config: &TrainingJobConfig,
     cancel: &CancelToken,
 ) -> Result<TrainingOutcome> {
@@ -266,13 +271,13 @@ pub fn run_training_job(
     );
 
     let msg = await_control_message(
-        cluster,
+        broker,
         config.deployment_id,
         config.locality,
         config.control_timeout,
         cancel,
     )?;
-    let samples = read_stream_window(cluster, &msg, config.locality)?;
+    let samples = read_stream_window(broker, &msg, config.locality)?;
     let (params, outcome) = train_on_samples(
         &engine,
         samples,
@@ -289,11 +294,16 @@ pub fn run_training_job(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::broker::{BrokerConfig, Cluster, Producer, ProducerConfig, Record};
+    use crate::broker::{BrokerConfig, Cluster, ClusterHandle, Producer, ProducerConfig, Record};
     use crate::json::Json;
 
     fn cluster() -> ClusterHandle {
         Cluster::new(BrokerConfig::default())
+    }
+
+    /// The in-process transport view of a test cluster.
+    fn handle(c: &ClusterHandle) -> BrokerHandle {
+        c.clone()
     }
 
     fn raw_config() -> Json {
@@ -347,7 +357,7 @@ mod tests {
         )
         .unwrap();
         let got = await_control_message(
-            &c,
+            &handle(&c),
             1,
             ClientLocality::InCluster,
             Duration::from_secs(2),
@@ -361,7 +371,7 @@ mod tests {
     fn await_times_out_without_message() {
         let c = cluster();
         let err = await_control_message(
-            &c,
+            &handle(&c),
             1,
             ClientLocality::InCluster,
             Duration::from_millis(50),
@@ -377,7 +387,7 @@ mod tests {
         let cancel = CancelToken::new();
         cancel.cancel();
         let err = await_control_message(
-            &c,
+            &handle(&c),
             1,
             ClientLocality::InCluster,
             Duration::from_secs(5),
@@ -394,7 +404,7 @@ mod tests {
         // Restrict to a sub-window [10, 30).
         msg.stream.offset = 10;
         msg.stream.length = 20;
-        let samples = read_stream_window(&c, &msg, ClientLocality::InCluster).unwrap();
+        let samples = read_stream_window(&handle(&c), &msg, ClientLocality::InCluster).unwrap();
         assert_eq!(samples.len(), 20);
         assert_eq!(samples[0].features[0], 10.0);
         assert_eq!(samples[19].features[0], 29.0);
@@ -425,7 +435,7 @@ mod tests {
         // Append fresh data so old segments can be deleted.
         produce_samples(&c, "data", 10);
         c.run_retention();
-        let err = read_stream_window(&c, &msg, ClientLocality::InCluster).unwrap_err();
+        let err = read_stream_window(&handle(&c), &msg, ClientLocality::InCluster).unwrap_err();
         assert!(err.to_string().contains("expired"), "{err}");
     }
 
@@ -434,7 +444,7 @@ mod tests {
         let c = cluster();
         let mut msg = produce_samples(&c, "data", 10);
         msg.stream.length = 50; // claims more than the log has
-        let err = read_stream_window(&c, &msg, ClientLocality::InCluster).unwrap_err();
+        let err = read_stream_window(&handle(&c), &msg, ClientLocality::InCluster).unwrap_err();
         assert!(err.to_string().contains("incomplete"), "{err}");
     }
 

@@ -65,7 +65,7 @@ fn wakeup_survives_group_rebalance() {
     let h = std::thread::spawn(move || {
         let mut a = Consumer::new(c2, ClientLocality::InCluster);
         // Sole member: owns both partitions, parks across them.
-        a.subscribe("g", "a", &["t".into()], Assignor::Range);
+        a.subscribe("g", "a", &["t".into()], Assignor::Range).unwrap();
         assert_eq!(a.assigned().len(), 2);
         let recs = a.poll_wait(16, Duration::from_secs(10)).unwrap();
         // The rebalance wakeup must have refreshed the assignment down

@@ -415,7 +415,7 @@ fn training_job_fails_cleanly_without_stream() {
         )
     };
     let err = kafka_ml::coordinator::training::run_training_job(
-        &kml.cluster,
+        &kml.broker(),
         &config,
         &kafka_ml::exec::CancelToken::new(),
     )

@@ -1,0 +1,448 @@
+//! The TCP wire protocol over real loopback sockets: functional
+//! round-trips, the blocking long-poll waking *via the wire*, the group
+//! protocol across remote clients, reconnect behavior — and the
+//! corruption suite: torn frames, flipped CRC bytes, oversized length
+//! prefixes and mid-request disconnects must produce clean errors on
+//! both sides, never a panic, a poisoned partition lock, or a wedged
+//! server (mirroring `storage_recovery.rs`'s torn-frame style).
+
+use kafka_ml::broker::wire::codec::{self, OpCode};
+use kafka_ml::broker::{
+    Acks, Assignor, BrokerConfig, BrokerHandle, BrokerServer, BrokerTransport, ClientLocality,
+    Cluster, ClusterHandle, Consumer, Producer, ProducerConfig, Record, RemoteBroker,
+};
+use kafka_ml::util::Bytes;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// A served cluster + a connected remote transport.
+fn served() -> (ClusterHandle, BrokerServer, BrokerHandle) {
+    let cluster = Cluster::new(BrokerConfig::default());
+    let server = BrokerServer::start("127.0.0.1:0", cluster.clone()).unwrap();
+    let remote: BrokerHandle = RemoteBroker::connect(&server.addr().to_string()).unwrap();
+    (cluster, server, remote)
+}
+
+#[test]
+fn remote_produce_fetch_roundtrip_with_keys_and_headers() {
+    let (_cluster, server, remote) = served();
+    remote.create_topic("t", 2).unwrap();
+    let records = vec![
+        Record::with_key(vec![1, 2], vec![9u8; 256]).header("fmt", b"raw"),
+        Record::new(vec![7u8; 64]),
+        Record::new(Vec::<u8>::new()),
+    ];
+    let base = remote
+        .produce("t", 1, &records, ClientLocality::Remote, None)
+        .unwrap();
+    assert_eq!(base, 0);
+    let batch = remote
+        .fetch_batch("t", 1, 0, 10, ClientLocality::Remote)
+        .unwrap();
+    assert_eq!(batch.len(), 3);
+    assert_eq!(batch.partition, 1);
+    for (i, (off, rec)) in batch.records.iter().enumerate() {
+        assert_eq!(*off, i as u64);
+        assert_eq!(rec, &records[i]);
+    }
+    // Zero-copy on the client side: every record in one fetch response
+    // is a slice view of that response's single buffer.
+    assert!(Bytes::ptr_eq(
+        &batch.records[0].1.value,
+        &batch.records[1].1.value
+    ));
+    assert!(Bytes::ptr_eq(
+        batch.records[0].1.key.as_ref().unwrap(),
+        &batch.records[0].1.value
+    ));
+    // The untouched partition is empty, and unknown topics error cleanly.
+    assert!(remote
+        .fetch_batch("t", 0, 0, 10, ClientLocality::Remote)
+        .unwrap()
+        .is_empty());
+    let err = remote
+        .fetch_batch("nope", 0, 0, 1, ClientLocality::Remote)
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown topic"), "{err}");
+    server.shutdown();
+}
+
+#[test]
+fn remote_metadata_offsets_and_producer_ids() {
+    let (_cluster, server, remote) = served();
+    assert_eq!(remote.create_topic("a", 3).unwrap(), 3);
+    assert_eq!(remote.create_topic("a", 9).unwrap(), 3); // idempotent
+    assert_eq!(remote.topic_partitions("a").unwrap(), Some(3));
+    assert_eq!(remote.topic_partitions("ghost").unwrap(), None);
+    remote.create_topic("b", 1).unwrap();
+    assert_eq!(
+        remote.topic_names().unwrap(),
+        vec!["a".to_string(), "b".to_string()]
+    );
+    assert_eq!(remote.offsets("a", 0).unwrap(), (0, 0));
+    let id1 = remote.alloc_producer_id().unwrap();
+    let id2 = remote.alloc_producer_id().unwrap();
+    assert_ne!(id1, id2);
+    server.shutdown();
+}
+
+#[test]
+fn remote_producer_consumer_pipeline() {
+    // The SAME Producer/Consumer types, just a different transport.
+    let (_cluster, server, remote) = served();
+    let mut producer = Producer::new(
+        remote.clone(),
+        ProducerConfig {
+            batch_size: 16,
+            locality: ClientLocality::Remote,
+            ..Default::default()
+        },
+    );
+    for i in 0..50u8 {
+        producer.send("t", Record::new(vec![i])).unwrap();
+    }
+    producer.flush().unwrap();
+    let mut consumer = Consumer::new(remote.clone(), ClientLocality::Remote);
+    consumer.assign(vec![("t".to_string(), 0)]);
+    let recs = consumer.poll(100).unwrap();
+    assert_eq!(recs.len(), 50);
+    let mut got: Vec<u8> = recs.iter().map(|r| r.record.value[0]).collect();
+    got.sort_unstable();
+    assert_eq!(got, (0..50u8).collect::<Vec<_>>());
+    server.shutdown();
+}
+
+#[test]
+fn remote_exactly_once_dedup_across_the_wire() {
+    let (cluster, server, remote) = served();
+    remote.create_topic("t", 1).unwrap();
+    let mut p = Producer::new(
+        remote.clone(),
+        ProducerConfig {
+            batch_size: 100,
+            acks: Acks::ExactlyOnce,
+            locality: ClientLocality::Remote,
+            ..Default::default()
+        },
+    );
+    for i in 0..5u8 {
+        p.send_to("t", 0, Record::new(vec![i])).unwrap();
+    }
+    p.flush().unwrap();
+    // Replay the same seq range: the server's error message carries
+    // "duplicate" verbatim over the wire.
+    let replay: Vec<Record> = (0..5u8).map(|i| Record::new(vec![i])).collect();
+    let err = remote
+        .produce("t", 0, &replay, ClientLocality::Remote, Some((p.id(), 1)))
+        .unwrap_err();
+    assert!(err.to_string().contains("duplicate"), "{err}");
+    assert_eq!(cluster.offsets("t", 0).unwrap(), (0, 5));
+    server.shutdown();
+}
+
+#[test]
+fn remote_long_poll_wakes_via_the_wire_within_100ms() {
+    // The acceptance bar: a consumer blocked in a long-poll OVER THE
+    // SOCKET reacts to a produce within 100 ms (the park is server-side
+    // on the broker's wait-sets; the wakeup is one response frame).
+    let (cluster, server, remote) = served();
+    cluster.create_topic("t", 1);
+    let (tx, rx) = kafka_ml::exec::unbounded::<Instant>();
+    let h = std::thread::spawn(move || {
+        let mut cons = Consumer::new(remote, ClientLocality::Remote);
+        cons.assign(vec![("t".to_string(), 0)]);
+        let recs = cons.poll_wait(16, Duration::from_secs(10)).unwrap();
+        assert_eq!(recs.len(), 1);
+        tx.send(Instant::now()).unwrap();
+    });
+    // Give the remote consumer time to cross the wire and park.
+    std::thread::sleep(Duration::from_millis(150));
+    let t0 = Instant::now();
+    cluster
+        .produce("t", 0, &[Record::new(vec![1])], ClientLocality::InCluster, None)
+        .unwrap();
+    let woke_at = rx.recv().unwrap();
+    h.join().unwrap();
+    let latency = woke_at.duration_since(t0);
+    assert!(
+        latency < Duration::from_millis(100),
+        "produce -> wire-delivered wakeup took {latency:?}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn remote_group_members_split_partitions_and_resume_from_commits() {
+    let (cluster, server, remote) = served();
+    cluster.create_topic("t", 4);
+    for p in 0..4 {
+        for i in 0..5u8 {
+            cluster
+                .produce("t", p, &[Record::new(vec![p as u8, i])], ClientLocality::InCluster, None)
+                .unwrap();
+        }
+    }
+    // Two members over two INDEPENDENT wire connections.
+    let remote_b: BrokerHandle = RemoteBroker::connect(&server.addr().to_string()).unwrap();
+    let mut a = Consumer::new(remote.clone(), ClientLocality::Remote);
+    let mut b = Consumer::new(remote_b, ClientLocality::Remote);
+    a.subscribe("g", "a", &["t".into()], Assignor::RoundRobin).unwrap();
+    b.subscribe("g", "b", &["t".into()], Assignor::RoundRobin).unwrap();
+    a.poll_heartbeat().unwrap();
+    assert_eq!(a.assigned().len() + b.assigned().len(), 4);
+    let mut all: Vec<Vec<u8>> = Vec::new();
+    all.extend(a.poll(100).unwrap().into_iter().map(|r| r.record.value.to_vec()));
+    all.extend(b.poll(100).unwrap().into_iter().map(|r| r.record.value.to_vec()));
+    assert_eq!(all.len(), 20);
+    all.sort();
+    all.dedup();
+    assert_eq!(all.len(), 20, "duplicate or lost records across the group");
+    // Commits travel the wire; a replacement member resumes from them.
+    a.commit().unwrap();
+    b.commit().unwrap();
+    a.leave();
+    b.leave();
+    let remote_c: BrokerHandle = RemoteBroker::connect(&server.addr().to_string()).unwrap();
+    let mut c = Consumer::new(remote_c, ClientLocality::Remote);
+    c.subscribe("g", "c", &["t".into()], Assignor::RoundRobin).unwrap();
+    assert!(c.poll(100).unwrap().is_empty(), "resumed before the commits");
+    server.shutdown();
+}
+
+#[test]
+fn fetch_batch_responses_are_bounded_to_the_frame_limit() {
+    // An unbounded response of large records would exceed the client's
+    // 64 MiB frame cap and wedge the consumer forever; the server must
+    // return a prefix instead so the consumer advances in steps.
+    let (cluster, server, remote) = served();
+    cluster.create_topic("big", 1);
+    // One shared 30 MiB buffer, three log entries (zero-copy clones).
+    let body = Bytes::from_vec(vec![7u8; 30 * 1024 * 1024]);
+    for _ in 0..3 {
+        cluster
+            .produce("big", 0, &[Record::new(body.clone())], ClientLocality::InCluster, None)
+            .unwrap();
+    }
+    let mut cons = Consumer::new(remote, ClientLocality::Remote);
+    cons.assign(vec![("big".to_string(), 0)]);
+    let mut got = 0usize;
+    for _round in 0..5 {
+        let n: usize = cons
+            .poll_batches(10)
+            .unwrap()
+            .iter()
+            .map(|b| b.len())
+            .sum();
+        got += n;
+        if got >= 3 {
+            break;
+        }
+        assert!(n >= 1, "bounded fetch returned no records at all");
+    }
+    assert_eq!(got, 3, "consumer failed to advance past the large records");
+    server.shutdown();
+}
+
+// ---- corruption / fault-injection -----------------------------------------
+
+/// Raw socket to the server, bypassing the client codec.
+fn raw_conn(server: &BrokerServer) -> TcpStream {
+    let s = TcpStream::connect(server.addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s
+}
+
+/// The server must still answer correctly on a FRESH connection.
+fn assert_server_healthy(server: &BrokerServer) {
+    let remote = RemoteBroker::connect(&server.addr().to_string()).unwrap();
+    let n = remote.create_topic("health-check", 1).unwrap();
+    assert_eq!(n, 1);
+    remote
+        .produce(
+            "health-check",
+            0,
+            &[Record::new(vec![1])],
+            ClientLocality::Remote,
+            None,
+        )
+        .unwrap();
+}
+
+#[test]
+fn garbage_bytes_drop_the_connection_not_the_server() {
+    let (_cluster, server, _remote) = served();
+    let mut s = raw_conn(&server);
+    s.write_all(&[0xDE; 64]).unwrap();
+    // Header decodes to a huge/bogus frame -> server closes the
+    // connection without answering.
+    let mut buf = [0u8; 16];
+    assert_eq!(s.read(&mut buf).unwrap_or(0), 0, "expected EOF");
+    assert_server_healthy(&server);
+    server.shutdown();
+}
+
+#[test]
+fn flipped_crc_byte_drops_the_connection_cleanly() {
+    let (_cluster, server, _remote) = served();
+    let mut frame = codec::encode_request(1, OpCode::ListTopics, &[]);
+    let last = frame.len() - 1;
+    frame[last] ^= 0xFF; // corrupt the body -> CRC mismatch
+    let mut s = raw_conn(&server);
+    s.write_all(&frame).unwrap();
+    let mut buf = [0u8; 16];
+    assert_eq!(s.read(&mut buf).unwrap_or(0), 0, "expected EOF");
+    assert_server_healthy(&server);
+    server.shutdown();
+}
+
+#[test]
+fn oversized_length_prefix_rejected_without_allocation() {
+    let (_cluster, server, _remote) = served();
+    let mut s = raw_conn(&server);
+    let mut hdr = Vec::new();
+    hdr.extend_from_slice(&u32::MAX.to_le_bytes()); // 4 GiB claim
+    hdr.extend_from_slice(&0u32.to_le_bytes());
+    s.write_all(&hdr).unwrap();
+    let mut buf = [0u8; 16];
+    assert_eq!(s.read(&mut buf).unwrap_or(0), 0, "expected EOF");
+    assert_server_healthy(&server);
+    server.shutdown();
+}
+
+#[test]
+fn mid_request_disconnect_leaves_server_healthy() {
+    let (cluster, server, _remote) = served();
+    cluster.create_topic("t", 1);
+    for _ in 0..3 {
+        let frame = codec::encode_request(7, OpCode::ListTopics, &[]);
+        let mut s = raw_conn(&server);
+        // Send only half the frame, then hang up.
+        s.write_all(&frame[..frame.len() / 2]).unwrap();
+        drop(s);
+    }
+    assert_server_healthy(&server);
+    // No partition lock was poisoned by the torn requests.
+    assert!(cluster
+        .topic("t")
+        .unwrap()
+        .partition(0)
+        .unwrap()
+        .lock()
+        .is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn malformed_payload_gets_error_response_and_connection_survives() {
+    let (_cluster, server, _remote) = served();
+    let mut s = raw_conn(&server);
+    // Valid envelope + CRC, but the Offsets payload is missing.
+    let bad = codec::encode_request(11, OpCode::Offsets, &[]);
+    s.write_all(&bad).unwrap();
+    let body = codec::read_frame(&mut s).unwrap();
+    let mut r = codec::Reader::new(body);
+    assert_eq!(r.u64().unwrap(), 11);
+    assert_eq!(r.u8().unwrap(), codec::STATUS_ERR);
+    let msg = r.str().unwrap();
+    assert!(!msg.is_empty());
+    // An unknown opcode also answers with an error (well-framed junk
+    // does not kill the connection): hand-build a frame whose opcode
+    // byte maps to nothing.
+    let mut payload_body = Vec::new();
+    payload_body.extend_from_slice(&13u64.to_le_bytes());
+    payload_body.push(250u8); // no such opcode
+    let mut evil = Vec::new();
+    codec::write_frame(&mut evil, &payload_body);
+    s.write_all(&evil).unwrap();
+    let body = codec::read_frame(&mut s).unwrap();
+    let mut r = codec::Reader::new(body);
+    assert_eq!(r.u64().unwrap(), 13);
+    assert_eq!(r.u8().unwrap(), codec::STATUS_ERR);
+    assert!(r.str().unwrap().contains("opcode"));
+    // The SAME connection still serves valid requests.
+    let ok = codec::encode_request(14, OpCode::ListTopics, &[]);
+    s.write_all(&ok).unwrap();
+    let body = codec::read_frame(&mut s).unwrap();
+    let mut r = codec::Reader::new(body);
+    assert_eq!(r.u64().unwrap(), 14);
+    assert_eq!(r.u8().unwrap(), codec::STATUS_OK);
+    server.shutdown();
+}
+
+#[test]
+fn client_reconnects_after_connection_loss() {
+    // A fake broker that kills the first connection mid-request, then
+    // serves the second correctly: the client's retry-on-fresh-
+    // connection path must make the call succeed transparently.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fake = std::thread::spawn(move || {
+        // Conn 1: the client's connect() probe — accept and keep open.
+        // It becomes the pooled connection the first call uses.
+        let (mut c1, _) = listener.accept().unwrap();
+        // Read its request, then hang up without answering.
+        let _ = codec::read_frame(&mut c1);
+        drop(c1);
+        // Conn 2: the retry. Serve one AllocProducerId correctly.
+        let (mut c2, _) = listener.accept().unwrap();
+        let body = codec::read_frame(&mut c2).unwrap();
+        let mut r = codec::Reader::new(body);
+        let corr = r.u64().unwrap();
+        assert_eq!(codec::OpCode::from_u8(r.u8().unwrap()), Some(OpCode::AllocProducerId));
+        let mut payload = Vec::new();
+        codec::put_u64(&mut payload, 777);
+        let resp = codec::encode_response(corr, Ok(&payload));
+        c2.write_all(&resp).unwrap();
+    });
+    let remote = RemoteBroker::connect(&addr.to_string()).unwrap();
+    assert_eq!(remote.alloc_producer_id().unwrap(), 777);
+    fake.join().unwrap();
+}
+
+#[test]
+fn client_surfaces_corrupt_server_responses_as_errors() {
+    // A fake broker that answers garbage (twice — the client retries
+    // once): the call must fail with a clean error, never panic.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fake = std::thread::spawn(move || {
+        for _ in 0..2 {
+            let (mut c, _) = listener.accept().unwrap();
+            let _ = codec::read_frame(&mut c);
+            c.write_all(&[0xBA; 32]).ok();
+        }
+    });
+    let remote = RemoteBroker::connect(&addr.to_string()).unwrap();
+    // The probe connection is conn 1 (unread); the first call reuses it
+    // -> garbage after its request; retry hits conn 2 -> garbage again.
+    let err = remote.alloc_producer_id().unwrap_err();
+    let text = format!("{err:#}");
+    assert!(
+        text.contains("unreachable") || text.contains("wire"),
+        "unexpected error shape: {text}"
+    );
+    fake.join().unwrap();
+}
+
+#[test]
+fn server_shutdown_unblocks_parked_remote_longpoll() {
+    let (cluster, server, remote) = served();
+    cluster.create_topic("t", 1);
+    let h = std::thread::spawn(move || {
+        let mut cons = Consumer::new(remote, ClientLocality::Remote);
+        cons.assign(vec![("t".to_string(), 0)]);
+        // Either a quiet empty return or a transport error is fine —
+        // what matters is that it RETURNS once the server dies.
+        let _ = cons.poll_wait(16, Duration::from_secs(30));
+    });
+    std::thread::sleep(Duration::from_millis(100)); // let it park remotely
+    let t0 = Instant::now();
+    server.shutdown();
+    h.join().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "shutdown left a long-poll wedged for {:?}",
+        t0.elapsed()
+    );
+}
