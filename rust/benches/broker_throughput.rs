@@ -360,7 +360,8 @@ fn main() -> anyhow::Result<()> {
     // The cost of the real wire: one single-record produce + one fetch
     // through the same BrokerTransport API, in-process (direct calls)
     // vs over a loopback TCP socket (frame encode + CRC + syscalls).
-    // This is the number the ROADMAP's reactor follow-on will move.
+    // The epoll-reactor server serves this path; the c10k case below
+    // measures its scaling under connection load.
     let mut t = Table::new(
         "Transport round trip (1k x [produce 64B + fetch], loopback TCP vs in-process)",
         &["transport", "p50 (µs)", "p99 (µs)", "round trips/s"],
@@ -466,6 +467,220 @@ fn main() -> anyhow::Result<()> {
         );
     }
     t.print();
+
+    // ---- C10K: thousands of idle parked long-polls ----------------------------
+    // The reactor rewrite's whole point. N idle consumers sit parked in
+    // server-side long-polls on a partition that never receives data,
+    // while one probe consumer long-polls a live partition and measures
+    // produce→wake latency. Two servers over identical raw-socket
+    // traffic: a thread-per-connection accept loop (the pre-reactor
+    // design, reconstructed in ~40 lines below) vs the real epoll
+    // `BrokerServer`. What the reactor must show: per-idle-connection
+    // memory down ≥10× (connection state, not a thread stack) and a flat
+    // thread count, at no produce→wake latency cost.
+    {
+        use kafka_ml::broker::notify::WaitSet;
+        use kafka_ml::broker::wire::codec::{self as wire, OpCode};
+        use std::io::Write;
+        use std::net::{SocketAddr, TcpListener, TcpStream};
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        let conns: usize = std::env::var("KAFKA_ML_C10K_CONNS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(500);
+        let probe_rounds = 50usize;
+        let mut t = Table::new(
+            &format!("C10K long-poll: {conns} idle parked consumers + active probe"),
+            &["server", "p50 wake (µs)", "p99 wake (µs)", "threads +", "RSS/conn (KiB)"],
+        );
+
+        // One FetchWait request frame: no group, a single
+        // (topic, partition 0, position) assignment.
+        let fetch_wait = |corr: u64, topic: &str, pos: u64, timeout_ms: u64| -> Vec<u8> {
+            let mut p = Vec::new();
+            wire::put_u64(&mut p, timeout_ms);
+            wire::put_opt::<()>(&mut p, None, |_, _| {});
+            wire::put_u32(&mut p, 1);
+            wire::put_str(&mut p, topic);
+            wire::put_u32(&mut p, 0);
+            wire::put_u64(&mut p, pos);
+            wire::encode_request(corr, OpCode::FetchWait, &p)
+        };
+
+        // The legacy arm: accept loop + one handler thread per
+        // connection, each parking in the broker's blocking long-poll —
+        // the design `BrokerServer` used before the reactor.
+        let start_legacy = |cluster: ClusterHandle,
+                           stop: Arc<AtomicBool>,
+                           shutdown: Arc<WaitSet>|
+         -> anyhow::Result<(SocketAddr, std::thread::JoinHandle<()>)> {
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr()?;
+            let accept = std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let Ok(mut s) = stream else { continue };
+                    let cluster = cluster.clone();
+                    let stop = stop.clone();
+                    let shutdown = shutdown.clone();
+                    std::thread::spawn(move || {
+                        while let Ok(body) = wire::read_frame(&mut s) {
+                            let mut r = wire::Reader::new(body);
+                            let (Ok(corr), Ok(_op)) = (r.u64(), r.u8()) else { return };
+                            let Ok(timeout_ms) = r.u64() else { return };
+                            let Ok(group) = r.opt(|r| Ok((r.str()?, r.u64()?))) else { return };
+                            let Ok(n) = r.u32() else { return };
+                            let mut asn = Vec::with_capacity(n as usize);
+                            for _ in 0..n {
+                                let (Ok(t), Ok(p), Ok(pos)) = (r.str(), r.u32(), r.u64()) else {
+                                    return;
+                                };
+                                asn.push(((t, p), pos));
+                            }
+                            let deadline =
+                                Instant::now() + Duration::from_millis(timeout_ms.min(600_000));
+                            let woken = cluster.wait_for_data_cancellable(
+                                &asn,
+                                group.as_ref().map(|(g, gen)| (g.as_str(), *gen)),
+                                deadline,
+                                Some(&shutdown),
+                                || stop.load(Ordering::SeqCst),
+                            );
+                            let mut payload = Vec::new();
+                            wire::put_bool(&mut payload, woken);
+                            let resp = wire::encode_response(corr, Ok(&payload));
+                            if s.write_all(&resp).is_err() {
+                                return;
+                            }
+                        }
+                    });
+                }
+            });
+            Ok((addr, accept))
+        };
+
+        for reactor_arm in [false, true] {
+            let cluster = Cluster::new(BrokerConfig::default());
+            cluster.create_topic("idle", 1);
+            cluster.create_topic("probe", 1);
+            let stop = Arc::new(AtomicBool::new(false));
+            let legacy_shutdown = Arc::new(WaitSet::new());
+            let mut real_server: Option<BrokerServer> = None;
+            let mut legacy_accept: Option<std::thread::JoinHandle<()>> = None;
+            let addr: SocketAddr = if reactor_arm {
+                let s = BrokerServer::start("127.0.0.1:0", cluster.clone())?;
+                let a = s.addr();
+                real_server = Some(s);
+                a
+            } else {
+                let (a, h) =
+                    start_legacy(cluster.clone(), stop.clone(), legacy_shutdown.clone())?;
+                legacy_accept = Some(h);
+                a
+            };
+
+            let threads_before = kafka_ml::benchkit::proc_threads().unwrap_or(0);
+            let rss_before = kafka_ml::benchkit::proc_rss_kb().unwrap_or(0);
+
+            // Park the idle fleet and wait until every one is registered.
+            let idle_set = cluster.topic("idle").unwrap().wait_set(0).unwrap().clone();
+            let mut fleet: Vec<TcpStream> = Vec::with_capacity(conns);
+            for i in 0..conns {
+                let mut s = TcpStream::connect(addr)?;
+                s.set_read_timeout(Some(Duration::from_secs(30)))?;
+                s.write_all(&fetch_wait(i as u64, "idle", 0, 300_000))?;
+                fleet.push(s);
+            }
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while idle_set.len() < conns && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            assert_eq!(idle_set.len(), conns, "idle fleet failed to park");
+
+            let threads_delta =
+                kafka_ml::benchkit::proc_threads().unwrap_or(0).saturating_sub(threads_before);
+            let rss_per_conn_kb = kafka_ml::benchkit::proc_rss_kb()
+                .unwrap_or(0)
+                .saturating_sub(rss_before) as f64
+                / conns as f64;
+
+            // Probe: produce→wake latency through a parked long-poll,
+            // with the whole idle fleet parked alongside.
+            let mut probe = TcpStream::connect(addr)?;
+            probe.set_read_timeout(Some(Duration::from_secs(10)))?;
+            let mut lats: Vec<Duration> = Vec::with_capacity(probe_rounds);
+            for round in 0..probe_rounds {
+                probe.write_all(&fetch_wait(round as u64, "probe", round as u64, 10_000))?;
+                // Let the wait cross the wire and park server-side.
+                std::thread::sleep(Duration::from_millis(2));
+                let t0 = Instant::now();
+                cluster.produce(
+                    "probe",
+                    0,
+                    &[Record::new(vec![round as u8])],
+                    ClientLocality::InCluster,
+                    None,
+                )?;
+                let body = wire::read_frame(&mut probe)?;
+                let lat = t0.elapsed();
+                let mut r = wire::Reader::new(body);
+                assert_eq!(r.u64()?, round as u64);
+                assert_eq!(r.u8()?, wire::STATUS_OK);
+                assert!(r.bool()?);
+                lats.push(lat);
+            }
+            lats.sort();
+            let us = |d: Duration| d.as_secs_f64() * 1e6;
+            let p50 = us(lats[lats.len() / 2]);
+            let p99 = us(lats[lats.len() * 99 / 100]);
+
+            t.row(&[
+                if reactor_arm { "epoll reactor" } else { "thread-per-connection" }.to_string(),
+                format!("{p50:.1}"),
+                format!("{p99:.1}"),
+                threads_delta.to_string(),
+                format!("{rss_per_conn_kb:.1}"),
+            ]);
+            report.entry(
+                "c10k_longpoll",
+                &[
+                    ("reactor", if reactor_arm { 1.0 } else { 0.0 }),
+                    ("connections", conns as f64),
+                ],
+                &[
+                    ("p50_wake_us", p50),
+                    ("p99_wake_us", p99),
+                    ("threads_delta", threads_delta as f64),
+                    ("rss_per_conn_kb", rss_per_conn_kb),
+                ],
+            );
+
+            // Teardown, and let the process settle so the next arm's
+            // before-measurements are clean.
+            drop(probe);
+            drop(fleet);
+            if let Some(s) = real_server.take() {
+                s.shutdown();
+            }
+            if let Some(h) = legacy_accept.take() {
+                stop.store(true, Ordering::SeqCst);
+                legacy_shutdown.notify_all(); // unparks every handler thread
+                let _ = TcpStream::connect(addr); // unblocks the accept loop
+                h.join().ok();
+            }
+            let settle = Instant::now() + Duration::from_secs(30);
+            while kafka_ml::benchkit::proc_threads().unwrap_or(0) > threads_before
+                && Instant::now() < settle
+            {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+        t.print();
+    }
 
     report.save(REPORT_PATH)?;
     println!("\nwrote {REPORT_PATH} ({} entries)", report.len());

@@ -224,6 +224,56 @@ pub fn millis(d: Duration) -> String {
     format!("{:.2}", d.as_secs_f64() * 1e3)
 }
 
+// ---- process-level measurements (Linux) ------------------------------------
+//
+// Resource-footprint benches (memory per idle connection, thread-count
+// ceilings) and the wire soak tests read them from /proc. Off-Linux they
+// return None and callers report/assert nothing.
+
+/// A numeric field from `/proc/self/status` (value's first token).
+#[cfg(target_os = "linux")]
+fn proc_status_field(field: &str) -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with(field))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// Resident set size of this process in KiB (`VmRSS`).
+pub fn proc_rss_kb() -> Option<u64> {
+    #[cfg(target_os = "linux")]
+    {
+        proc_status_field("VmRSS:")
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+/// Current thread count of this process (`Threads`).
+pub fn proc_threads() -> Option<u64> {
+    #[cfg(target_os = "linux")]
+    {
+        proc_status_field("Threads:")
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+/// Number of open file descriptors of this process.
+pub fn proc_open_fds() -> Option<usize> {
+    #[cfg(target_os = "linux")]
+    {
+        Some(std::fs::read_dir("/proc/self/fd").ok()?.count())
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -9,9 +9,9 @@
 //! measures.
 
 use super::group::{Assignor, GroupMembership, GroupState};
-use super::log::{LogConfig, StorageMode};
+use super::log::{LogConfig, StorageMode, TopicMeta};
 use super::net::{ClientLocality, NetProfile};
-use super::notify::WaitSet;
+use super::notify::{Waiter, WaitSet};
 use super::record::{ConsumedRecord, Record, RecordBatch};
 use super::topic::Topic;
 use super::TopicPartition;
@@ -48,6 +48,32 @@ impl Default for BrokerConfig {
 }
 
 pub type ClusterHandle = Arc<Cluster>;
+
+/// A live long-poll registration handed out by
+/// [`Cluster::register_data_wait`]: the waiter stays registered with
+/// every captured wait-set until this guard drops. Owning the `Arc`
+/// clones keeps the sets alive across topic-map churn for the whole
+/// wait, exactly like the blocking path always did.
+#[derive(Debug)]
+pub struct DataWaitGuard {
+    sets: Vec<Arc<WaitSet>>,
+    waiter: Waiter,
+}
+
+impl DataWaitGuard {
+    /// The registered waiter (for generation snapshots/re-checks).
+    pub fn waiter(&self) -> &Waiter {
+        &self.waiter
+    }
+}
+
+impl Drop for DataWaitGuard {
+    fn drop(&mut self) {
+        for ws in &self.sets {
+            ws.deregister(&self.waiter);
+        }
+    }
+}
 
 #[derive(Debug)]
 pub struct Cluster {
@@ -89,9 +115,14 @@ impl Cluster {
     }
 
     /// Scan `data_dir` for topic directories left by a previous run and
-    /// re-create them (with the default log config; per-topic overrides
-    /// passed to `create_topic_with` are not persisted). Missing or
-    /// fresh data dirs are simply empty — nothing to recover.
+    /// re-create them as configured: `topic.meta` ([`TopicMeta`])
+    /// carries the raw name, the partition count and the per-topic
+    /// [`LogConfig`] overrides, so a recovered topic keeps its segment
+    /// size and retention settings instead of reverting to broker
+    /// defaults. Legacy raw-name meta files (and missing ones) recover
+    /// with defaults, partitions inferred from the directory layout.
+    /// Missing or fresh data dirs are simply empty — nothing to
+    /// recover.
     fn recover_topics(&self, data_dir: &std::path::Path) {
         let Ok(entries) = std::fs::read_dir(data_dir) else {
             return;
@@ -115,13 +146,29 @@ impl Cluster {
             let Some(max_partition) = max_partition else {
                 continue; // no partition dirs: not a topic dir
             };
-            let name = std::fs::read_to_string(path.join("topic.meta"))
-                .map(|s| s.trim().to_string())
-                .unwrap_or_else(|_| entry.file_name().to_string_lossy().to_string());
-            self.create_topic(&name, max_partition + 1);
+            let meta = std::fs::read_to_string(path.join("topic.meta"))
+                .map(|raw| TopicMeta::decode(&raw))
+                .ok()
+                .filter(|m| !m.name.is_empty());
+            let name = meta.as_ref().map_or_else(
+                || entry.file_name().to_string_lossy().to_string(),
+                |m| m.name.clone(),
+            );
+            // The directory scan is the floor (partitions that actually
+            // hold data must all come back); the meta count wins when
+            // higher (trailing partitions may never have sealed a
+            // segment).
+            let partitions = meta
+                .as_ref()
+                .and_then(|m| m.partitions)
+                .unwrap_or(0)
+                .max(max_partition + 1);
+            let log = meta
+                .as_ref()
+                .map_or_else(|| self.config.log.clone(), |m| m.apply_to(&self.config.log));
+            self.create_topic_with(&name, partitions, log);
             log::info!(
-                "recovered topic '{name}' ({} partitions) from {}",
-                max_partition + 1,
+                "recovered topic '{name}' ({partitions} partitions) from {}",
                 path.display()
             );
         }
@@ -338,8 +385,49 @@ impl Cluster {
         cancel_set: Option<&Arc<WaitSet>>,
         cancelled: impl Fn() -> bool,
     ) -> bool {
-        // Own the Arc clones so the borrowed set slice stays valid for
-        // the whole wait.
+        // The blocking form is the non-blocking registration plus a
+        // thread park: register → snapshot → check → park, deregister on
+        // guard drop. Both the in-process consumer and the wire server's
+        // reactor go through the same `register_data_wait`, so the two
+        // paths cannot drift.
+        let waiter = Waiter::new();
+        let (guard, deadline) =
+            self.register_data_wait(&waiter, assignments, group, deadline, cancel_set);
+        let seen = waiter.generation();
+        let changed = || cancelled() || self.data_wait_ready(assignments, group);
+        // The check/park order closes the lost-wakeup race for both
+        // event kinds: a produce bumps `any_data_ready`, a rebalance
+        // bumps the group generation, and either one landing
+        // mid-registration has already woken the waiter.
+        let ready = changed() || waiter.wait_until(seen, deadline) || changed();
+        drop(guard);
+        ready
+    }
+
+    /// Non-blocking registration form of
+    /// [`Cluster::wait_for_data_cancellable`]: register `waiter` with
+    /// every relevant wait-set (assigned partitions, the group's
+    /// rebalance set, an optional extra cancellation set) **without
+    /// parking**, and return the registration guard plus the effective
+    /// deadline after broker-side capping. The caller owns the park —
+    /// a thread calls [`Waiter::wait_until`]; the wire server's reactor
+    /// instead installs a [`Waiter::set_hook`] eventfd bridge and keeps
+    /// a timer entry, so a parked long-poll costs no thread at all.
+    ///
+    /// Protocol: install any wake hook first, call this, snapshot the
+    /// waiter's generation, then check [`Cluster::data_wait_ready`];
+    /// only park/arm if the check says quiet. Drop the guard to
+    /// deregister.
+    pub fn register_data_wait(
+        &self,
+        waiter: &Waiter,
+        assignments: &[(TopicPartition, u64)],
+        group: Option<(&str, u64)>,
+        deadline: Instant,
+        extra: Option<&Arc<WaitSet>>,
+    ) -> (DataWaitGuard, Instant) {
+        // Own the Arc clones so registrations outlive topic-map churn
+        // for the whole wait.
         let mut owned: Vec<Arc<WaitSet>> = Vec::with_capacity(assignments.len() + 2);
         let mut unregistered = false;
         for ((topic, p), _) in assignments {
@@ -355,7 +443,7 @@ impl Cluster {
                 owned.push(ws);
             }
         }
-        if let Some(ws) = cancel_set {
+        if let Some(ws) = extra {
             owned.push(ws.clone());
         }
         // With an assignment we could not register for, an append there
@@ -372,26 +460,27 @@ impl Cluster {
         // produces none). Cap each wait round well under the session
         // timeout so the caller heartbeats between rounds — the broker
         // owns the session configuration, so the cap lives here and
-        // covers the remote wire path (whose server parks on this very
-        // method) for free.
+        // covers the remote wire path for free.
         if group.is_some() {
             let slice = Duration::from_millis((self.config.session_timeout_ms / 3).max(1));
             deadline = deadline.min(Instant::now() + slice);
         }
-        let sets: Vec<&WaitSet> = owned.iter().map(|ws| &**ws).collect();
-        // `wait_any` closes the lost-wakeup race for both event kinds: a
-        // produce bumps `any_data_ready`, a rebalance bumps the group
-        // generation, and either one landing mid-registration has
-        // already woken the waiter.
-        super::notify::wait_any(
-            &sets,
-            || {
-                cancelled()
-                    || self.any_data_ready(assignments)
-                    || group.is_some_and(|(gid, gen)| self.group_generation(gid) != Some(gen))
-            },
-            deadline,
-        )
+        for ws in &owned {
+            ws.register(waiter);
+        }
+        (DataWaitGuard { sets: owned, waiter: waiter.clone() }, deadline)
+    }
+
+    /// The condition a registered data-wait checks before arming and
+    /// re-checks on every wakeup: data behind any assigned cursor, or a
+    /// group generation that moved past the one the member last saw.
+    pub fn data_wait_ready(
+        &self,
+        assignments: &[(TopicPartition, u64)],
+        group: Option<(&str, u64)>,
+    ) -> bool {
+        self.any_data_ready(assignments)
+            || group.is_some_and(|(gid, gen)| self.group_generation(gid) != Some(gen))
     }
 
     /// The wait-set signalled on every rebalance of `group_id`.
@@ -726,6 +815,59 @@ mod tests {
         let far = t0 + std::time::Duration::from_secs(5);
         assert!(c.wait_for_data(&[], Some(("g", m.generation)), far));
         assert!(t0.elapsed() < std::time::Duration::from_millis(100));
+    }
+
+    #[test]
+    fn register_data_wait_is_nonblocking_and_hook_driven() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let c = cluster();
+        c.create_topic("t", 1);
+        let assignments = vec![(("t".to_string(), 0), 0u64)];
+
+        // The reactor pattern: hook first, then register, snapshot,
+        // check — all without parking any thread.
+        let waiter = Waiter::new();
+        let woken = Arc::new(AtomicUsize::new(0));
+        let w2 = woken.clone();
+        waiter.set_hook(move || {
+            w2.fetch_add(1, Ordering::SeqCst);
+        });
+        let t0 = Instant::now();
+        let (guard, deadline) =
+            c.register_data_wait(&waiter, &assignments, None, t0 + Duration::from_secs(60), None);
+        assert!(t0.elapsed() < Duration::from_millis(100), "registration must not park");
+        // No group, topic registered: the deadline is not capped.
+        assert!(deadline >= t0 + Duration::from_secs(59));
+        let seen = guard.waiter().generation();
+        assert!(!c.data_wait_ready(&assignments, None));
+
+        // A produce pushes the registered waiter — and its hook.
+        c.produce("t", 0, &[Record::new(vec![1])], ClientLocality::InCluster, None)
+            .unwrap();
+        assert_eq!(woken.load(Ordering::SeqCst), 1);
+        assert_ne!(guard.waiter().generation(), seen);
+        assert!(c.data_wait_ready(&assignments, None));
+
+        // Dropping the guard deregisters everywhere.
+        drop(guard);
+        assert!(c.topic("t").unwrap().wait_set(0).unwrap().is_empty());
+
+        // Group registrations are capped below the session timeout so
+        // parked members keep heartbeating.
+        let m = c.join_group("g", "a", &["t".into()], Assignor::Range);
+        let w = Waiter::new();
+        let t0 = Instant::now();
+        let (guard, capped) = c.register_data_wait(
+            &w,
+            &assignments,
+            Some(("g", m.generation)),
+            t0 + Duration::from_secs(3600),
+            None,
+        );
+        let session = Duration::from_millis(c.config().session_timeout_ms);
+        assert!(capped <= t0 + session / 2);
+        drop(guard);
+        assert!(c.group_wait_set("g").unwrap().is_empty());
     }
 
     #[test]

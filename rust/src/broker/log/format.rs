@@ -60,11 +60,38 @@ const fn crc32_table() -> [u32; 256] {
 
 /// CRC-32 (IEEE 802.3 polynomial) — the per-frame checksum.
 pub fn crc32(data: &[u8]) -> u32 {
-    let mut c = 0xFFFF_FFFFu32;
-    for &b in data {
-        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    let mut c = Crc32::new();
+    c.update(data);
+    c.finish()
+}
+
+/// Streaming CRC-32 over discontiguous parts. The wire layer checksums
+/// a fetch response assembled as header chunks plus shared payload
+/// slices (`writev`) — this lets it do so without ever concatenating
+/// the parts into one buffer. `Crc32::new().update(a).finish()` equals
+/// `crc32(a)`, and updates over split slices equal one update over
+/// their concatenation.
+#[derive(Debug, Clone, Copy)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
     }
-    c ^ 0xFFFF_FFFF
+
+    pub fn update(&mut self, data: &[u8]) -> &mut Self {
+        for &b in data {
+            self.state = CRC_TABLE[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
+        }
+        self
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
 }
 
 /// Why a frame could not be decoded. To the recovery scanner all three
@@ -125,6 +152,41 @@ pub fn encode_frame(out: &mut Vec<u8>, offset: u64, record: &Record) {
     out.extend_from_slice(&record.value);
     let len = (out.len() - body) as u32;
     let crc = crc32(&out[body..]);
+    out[start..start + 4].copy_from_slice(&len.to_le_bytes());
+    out[start + 4..start + 8].copy_from_slice(&crc.to_le_bytes());
+}
+
+/// Append everything of one record frame *except* the value payload —
+/// `len` and `crc` still describe the complete frame (value included),
+/// so `encode_frame_header(out, o, r)` followed by the raw bytes of
+/// `r.value` is byte-identical to [`encode_frame`]. This is the
+/// gather-write form: the wire server emits the header into a small
+/// owned buffer and hands the value's [`Bytes`] straight to `writev`,
+/// so a large fetched record never gets copied into a response buffer.
+pub fn encode_frame_header(out: &mut Vec<u8>, offset: u64, record: &Record) {
+    let start = out.len();
+    out.extend_from_slice(&[0u8; FRAME_HEADER_BYTES]); // len + crc, patched below
+    let body = out.len();
+    out.extend_from_slice(&offset.to_le_bytes());
+    out.extend_from_slice(&record.timestamp_ms.to_le_bytes());
+    let key_len = record.key.as_ref().map(|k| k.len() as u32).unwrap_or(NO_KEY);
+    out.extend_from_slice(&key_len.to_le_bytes());
+    out.extend_from_slice(&(record.value.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(record.headers.len() as u32).to_le_bytes());
+    for (name, val) in &record.headers {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&(val.len() as u32).to_le_bytes());
+        out.extend_from_slice(val);
+    }
+    if let Some(k) = &record.key {
+        out.extend_from_slice(k);
+    }
+    let len = (out.len() - body + record.value.len()) as u32;
+    let crc = Crc32::new()
+        .update(&out[body..])
+        .update(record.value.as_slice())
+        .finish();
     out[start..start + 4].copy_from_slice(&len.to_le_bytes());
     out[start + 4..start + 8].copy_from_slice(&crc.to_le_bytes());
 }
@@ -345,6 +407,42 @@ mod tests {
         // The classic IEEE CRC-32 check value.
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn streaming_crc_matches_one_shot_over_any_split() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let whole = crc32(data);
+        for split in 0..=data.len() {
+            let mut c = Crc32::new();
+            c.update(&data[..split]);
+            c.update(&data[split..]);
+            assert_eq!(c.finish(), whole, "split at {split}");
+        }
+        assert_eq!(Crc32::new().finish(), crc32(b""));
+    }
+
+    #[test]
+    fn frame_header_plus_value_equals_full_frame() {
+        let records = [
+            Record::new(Vec::<u8>::new()),
+            Record::new(vec![0xAB; 300]),
+            Record::with_key(vec![1, 2, 3], vec![9u8; 100]).header("fmt", b"avro"),
+            Record::new(vec![5]).header("a", b"x").header("bb", b"yy"),
+        ];
+        for rec in &records {
+            let full = frame_of(42, rec);
+            let mut split = Vec::new();
+            encode_frame_header(&mut split, 42, rec);
+            assert_eq!(split.len(), frame_size(rec) - rec.value.len(), "{rec:?}");
+            split.extend_from_slice(&rec.value);
+            assert_eq!(split, full, "{rec:?}");
+            // The patched crc covers the value, so the assembled frame
+            // decodes like any other.
+            let buf = Bytes::from_vec(split);
+            let f = decode_frame(&buf, 0).unwrap();
+            assert_eq!(&f.record, rec);
+        }
     }
 
     #[test]

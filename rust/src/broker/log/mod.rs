@@ -124,7 +124,7 @@ pub fn sanitize_topic(name: &str) -> String {
         .collect()
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LogConfig {
     /// Roll to a new segment once appending would push it past this
     /// many bytes (the incoming record's size counts).
@@ -152,6 +152,149 @@ impl Default for LogConfig {
             storage: StorageMode::InMemory,
             max_resident_bytes: 64 << 20, // 64 MiB
         }
+    }
+}
+
+/// The persisted face of a topic: what `topic.meta` records next to the
+/// partition directories so a restarted broker re-creates the topic
+/// *as configured*, not with broker defaults.
+///
+/// Two formats coexist on disk:
+///
+/// * **legacy** — the whole file is the raw topic name (what early
+///   tiered-storage builds wrote). Decodes to a name with no overrides.
+/// * **v2** — first line `v2`, then `key=value` lines for the name, the
+///   partition count, and every [`LogConfig`] knob except `storage`
+///   (storage placement is the *recovering* broker's own concern — a
+///   data dir moved to another host must not resurrect old paths).
+///
+/// Decoding never fails: unknown keys and malformed values are ignored
+/// (forward compatibility), and a file that is not v2 is read as a
+/// legacy raw name.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TopicMeta {
+    pub name: String,
+    pub partitions: Option<u32>,
+    pub segment_bytes: Option<usize>,
+    /// `Some(inner)` = the file specified `retention_bytes` (inner
+    /// `None` encodes as the literal `none` = unlimited); outer `None`
+    /// = unspecified, keep the recovering broker's default.
+    pub retention_bytes: Option<Option<u64>>,
+    pub retention_ms: Option<Option<u64>>,
+    pub cleanup_policy: Option<CleanupPolicy>,
+    pub max_resident_bytes: Option<usize>,
+}
+
+impl TopicMeta {
+    /// The meta for a topic created with `config` — everything pinned.
+    pub fn of(name: &str, partitions: u32, config: &LogConfig) -> TopicMeta {
+        TopicMeta {
+            name: name.to_string(),
+            partitions: Some(partitions),
+            segment_bytes: Some(config.segment_bytes),
+            retention_bytes: Some(config.retention_bytes),
+            retention_ms: Some(config.retention_ms),
+            cleanup_policy: Some(config.cleanup_policy),
+            max_resident_bytes: Some(config.max_resident_bytes),
+        }
+    }
+
+    pub fn encode(&self) -> String {
+        fn opt_u64(v: Option<u64>) -> String {
+            v.map_or_else(|| "none".to_string(), |n| n.to_string())
+        }
+        let mut s = String::from("v2\n");
+        s.push_str(&format!("name={}\n", self.name));
+        if let Some(p) = self.partitions {
+            s.push_str(&format!("partitions={p}\n"));
+        }
+        if let Some(b) = self.segment_bytes {
+            s.push_str(&format!("segment_bytes={b}\n"));
+        }
+        if let Some(b) = self.retention_bytes {
+            s.push_str(&format!("retention_bytes={}\n", opt_u64(b)));
+        }
+        if let Some(ms) = self.retention_ms {
+            s.push_str(&format!("retention_ms={}\n", opt_u64(ms)));
+        }
+        if let Some(c) = self.cleanup_policy {
+            let c = match c {
+                CleanupPolicy::Delete => "delete",
+                CleanupPolicy::Compact => "compact",
+            };
+            s.push_str(&format!("cleanup={c}\n"));
+        }
+        if let Some(b) = self.max_resident_bytes {
+            s.push_str(&format!("max_resident_bytes={b}\n"));
+        }
+        s
+    }
+
+    pub fn decode(raw: &str) -> TopicMeta {
+        let mut lines = raw.lines();
+        if lines.next().map(str::trim) != Some("v2") {
+            // Legacy file: the whole content is the raw topic name.
+            return TopicMeta {
+                name: raw.trim().to_string(),
+                ..TopicMeta::default()
+            };
+        }
+        fn opt_u64(v: &str) -> Option<Option<u64>> {
+            if v == "none" {
+                Some(None)
+            } else {
+                v.parse::<u64>().ok().map(Some)
+            }
+        }
+        let mut meta = TopicMeta::default();
+        for line in lines {
+            let Some((key, value)) = line.split_once('=') else {
+                continue;
+            };
+            let v = value.trim();
+            match key.trim() {
+                // The name is the one value that may legitimately
+                // contain '=' or spaces — take the rest of the line raw.
+                "name" => meta.name = value.to_string(),
+                "partitions" => meta.partitions = v.parse().ok(),
+                "segment_bytes" => meta.segment_bytes = v.parse().ok(),
+                "retention_bytes" => meta.retention_bytes = opt_u64(v),
+                "retention_ms" => meta.retention_ms = opt_u64(v),
+                "cleanup" => {
+                    meta.cleanup_policy = match v {
+                        "delete" => Some(CleanupPolicy::Delete),
+                        "compact" => Some(CleanupPolicy::Compact),
+                        _ => None,
+                    }
+                }
+                "max_resident_bytes" => meta.max_resident_bytes = v.parse().ok(),
+                _ => {} // forward compatibility
+            }
+        }
+        meta
+    }
+
+    /// `base` (the recovering broker's config, which supplies `storage`
+    /// and any knob this meta leaves unspecified) overridden by every
+    /// knob the meta pins.
+    pub fn apply_to(&self, base: &LogConfig) -> LogConfig {
+        let mut cfg = base.clone();
+        if let Some(b) = self.segment_bytes {
+            cfg.segment_bytes = b;
+        }
+        if let Some(b) = self.retention_bytes {
+            cfg.retention_bytes = b;
+        }
+        if let Some(ms) = self.retention_ms {
+            cfg.retention_ms = ms;
+        }
+        if let Some(c) = self.cleanup_policy {
+            cfg.cleanup_policy = c;
+        }
+        if let Some(b) = self.max_resident_bytes {
+            cfg.max_resident_bytes = b;
+        }
+        cfg
     }
 }
 
@@ -521,6 +664,12 @@ impl SegmentedLog {
     /// `max_resident_bytes`, modulo the always-kept most recent buffer).
     pub fn resident_bytes(&self) -> usize {
         self.resident_bytes
+    }
+
+    /// The effective log configuration (for inspection: recovery tests,
+    /// admin surfaces).
+    pub fn config(&self) -> &LogConfig {
+        &self.config
     }
 
     /// Number of sealed-segment buffers currently resident.
@@ -1173,5 +1322,56 @@ mod tests {
         assert_eq!(StorageMode::InMemory.partition_dir("t", 0), None);
         assert_eq!(sanitize_topic(""), "_");
         assert_eq!(sanitize_topic("a.b_c-D9"), "a.b_c-D9");
+    }
+
+    #[test]
+    fn topic_meta_round_trips_every_config_knob() {
+        let config = LogConfig {
+            segment_bytes: 4096,
+            retention_bytes: Some(1 << 20),
+            retention_ms: None, // keep forever — encodes as "none"
+            cleanup_policy: CleanupPolicy::Compact,
+            storage: StorageMode::tiered("/data"), // NOT persisted
+            max_resident_bytes: 8 << 20,
+        };
+        let meta = TopicMeta::of("sensor/¹ readings", 7, &config);
+        let decoded = TopicMeta::decode(&meta.encode());
+        assert_eq!(decoded, meta);
+        assert_eq!(decoded.name, "sensor/¹ readings");
+        assert_eq!(decoded.partitions, Some(7));
+
+        // Applying onto a base with a *different* storage keeps the
+        // base's storage but every persisted knob wins.
+        let base = LogConfig {
+            storage: StorageMode::tiered("/elsewhere"),
+            ..LogConfig::default()
+        };
+        let applied = decoded.apply_to(&base);
+        assert_eq!(applied.segment_bytes, 4096);
+        assert_eq!(applied.retention_bytes, Some(1 << 20));
+        assert_eq!(applied.retention_ms, None);
+        assert_eq!(applied.cleanup_policy, CleanupPolicy::Compact);
+        assert_eq!(applied.max_resident_bytes, 8 << 20);
+        assert_eq!(applied.storage, StorageMode::tiered("/elsewhere"));
+    }
+
+    #[test]
+    fn topic_meta_reads_legacy_raw_name_files() {
+        let meta = TopicMeta::decode("plain old topic name\n");
+        assert_eq!(meta.name, "plain old topic name");
+        assert_eq!(meta.partitions, None);
+        // No overrides: applying is the identity on the base config.
+        let base = LogConfig::default();
+        assert_eq!(meta.apply_to(&base), base);
+    }
+
+    #[test]
+    fn topic_meta_ignores_unknown_keys_and_junk_values() {
+        let meta = TopicMeta::decode(
+            "v2\nname=t\npartitions=3\nfuture_knob=whatever\nsegment_bytes=not-a-number\n",
+        );
+        assert_eq!(meta.name, "t");
+        assert_eq!(meta.partitions, Some(3));
+        assert_eq!(meta.segment_bytes, None);
     }
 }

@@ -53,8 +53,9 @@
 //! Both transports funnel into the same core. In-process clients call
 //! `Cluster` directly; remote clients cross the wire first — and the
 //! blocking long-poll parks **server-side** on the very same wait-sets,
-//! so a remote consumer wakes in socket-round-trip time, not a poll
-//! quantum:
+//! as an epoll-reactor registration rather than a blocked thread, so a
+//! remote consumer wakes in socket-round-trip time, not a poll quantum,
+//! and an idle consumer costs the broker no thread at all:
 //!
 //! ```text
 //!  Producer::flush_partition          Consumer::poll_wait / poll_batches_wait
@@ -62,16 +63,17 @@
 //!        │  (either transport)                   │ (empty poll; either transport)
 //!        ▼                                       ▼
 //!  RemoteBroker ══ TCP frame ══► BrokerServer    RemoteBroker ══ FetchWait ══►
-//!        │            (or in-process: direct)    BrokerServer conn thread
+//!        │            (or in-process: direct)    BrokerServer reactor ─► io worker
 //!        ▼                                       ▼
-//!  Cluster::produce ──► Partition::append_batch  Cluster::wait_for_data
+//!  Cluster::produce ──► Partition::append_batch  Cluster::register_data_wait
 //!        │                      │                        │
 //!        │              (one signal/batch)       one Waiter registered in
 //!        │                      ▼                every assigned partition's
-//!        │             partition WaitSet ◄────── WaitSet (+ the group's)
+//!        │             partition WaitSet ◄────── WaitSet (+ the group's),
+//!        │                      │               conn parked in the reactor
 //!        │                      │                        │
-//!        │                      └── notify_all ──► Waiter::wake ─► re-poll /
-//!        │                                         wire response ─► deliver
+//!        │                      └── notify_all ──► Waiter::wake ─► hook posts
+//!        │                                         to reactor ─► wire response
 //!  Cluster::join/leave/heartbeat/expire
 //!        └── GroupState::rebalance ─► group WaitSet ─► parked members
 //!                                       refresh assignment immediately
@@ -79,7 +81,10 @@
 //!
 //! Protocol, in order: **register** the waiter with every relevant
 //! [`notify::WaitSet`], **snapshot** the waiter generation, **check**
-//! for data, then **park** ([`notify::Waiter::wait_until`]). An append
+//! for data, then **park** — on a condvar in-process
+//! ([`notify::Waiter::wait_until`]), or as a reactor-side registration
+//! on the wire, where a [`notify::Waiter`] wake hook posts the wakeup
+//! back to the event loop instead of unblocking a thread. An append
 //! or rebalance landing between the check and the park has already
 //! bumped the generation, so the park returns immediately — there is no
 //! lost-wakeup window and therefore no need for the 1 ms sleep-poll
@@ -109,10 +114,10 @@ mod topic;
 pub mod transport;
 pub mod wire;
 
-pub use cluster::{BrokerConfig, Cluster, ClusterHandle};
+pub use cluster::{BrokerConfig, Cluster, ClusterHandle, DataWaitGuard};
 pub use consumer::Consumer;
 pub use group::{Assignor, GroupMembership};
-pub use log::{CleanupPolicy, LogConfig, SegmentedLog, StorageMode};
+pub use log::{CleanupPolicy, LogConfig, SegmentedLog, StorageMode, TopicMeta};
 pub use net::{ClientLocality, NetProfile};
 pub use notify::{WaitSet, Waiter};
 pub use partition::Partition;

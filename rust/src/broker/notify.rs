@@ -53,10 +53,25 @@ pub fn wait_any(sets: &[&WaitSet], changed: impl Fn() -> bool, deadline: Instant
     ready
 }
 
-#[derive(Debug, Default)]
+#[derive(Default)]
 struct WaiterInner {
     generation: Mutex<u64>,
     cv: Condvar,
+    /// Optional side-channel run on every [`Waiter::wake`], *after* the
+    /// generation bump: how a non-thread waiter (the wire server's
+    /// reactor parks connections, not threads) turns a condvar-world
+    /// notification into its own wakeup (an eventfd write). Must be
+    /// cheap and non-blocking — it runs on the notifier's thread, e.g.
+    /// inside a produce call.
+    hook: Mutex<Option<Box<dyn Fn() + Send + Sync>>>,
+}
+
+impl std::fmt::Debug for WaiterInner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WaiterInner")
+            .field("generation", &self.generation)
+            .finish_non_exhaustive()
+    }
 }
 
 /// One parkable thread. Clones share the same generation/condvar, so a
@@ -78,12 +93,28 @@ impl Waiter {
     }
 
     /// Wake the parked thread (bumps the generation so an about-to-park
-    /// thread does not sleep through this wakeup).
+    /// thread does not sleep through this wakeup). Runs the wake hook,
+    /// if one is set, after the bump — so the hook's observer always
+    /// sees `generation() != seen` for a wake that already fired.
     pub fn wake(&self) {
         let mut g = self.inner.generation.lock().unwrap();
         *g = g.wrapping_add(1);
         drop(g);
         self.inner.cv.notify_all();
+        let hook = self.inner.hook.lock().unwrap();
+        if let Some(f) = hook.as_ref() {
+            f();
+        }
+    }
+
+    /// Install a side-channel called on every [`Waiter::wake`] — the
+    /// bridge from condvar-world notifications to an event loop (the
+    /// reactor's eventfd). Install *before* registering the waiter with
+    /// any [`WaitSet`], or a wake can slip by unhooked. The hook fires
+    /// once per wake (which may be more than once per park) and must be
+    /// cheap and non-blocking.
+    pub fn set_hook(&self, f: impl Fn() + Send + Sync + 'static) {
+        *self.inner.hook.lock().unwrap() = Some(Box::new(f));
     }
 
     /// Park until the generation moves past `seen` or `deadline` passes.
@@ -205,6 +236,30 @@ mod tests {
         assert!(w.wait_until(seen, Instant::now() + Duration::from_secs(5)));
         assert!(t0.elapsed() < Duration::from_secs(1));
         h.join().unwrap();
+    }
+
+    #[test]
+    fn wake_hook_fires_on_every_wake_including_via_waitset() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let w = Waiter::new();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f2 = fired.clone();
+        w.set_hook(move || {
+            f2.fetch_add(1, Ordering::SeqCst);
+        });
+        let seen = w.generation();
+        w.wake();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        // The bump precedes the hook: an observer the hook triggers
+        // always sees the moved generation.
+        assert_ne!(w.generation(), seen);
+        let set = WaitSet::new();
+        set.register(&w);
+        set.notify_all();
+        assert_eq!(fired.load(Ordering::SeqCst), 2);
+        set.deregister(&w);
+        set.notify_all();
+        assert_eq!(fired.load(Ordering::SeqCst), 2);
     }
 
     #[test]

@@ -139,6 +139,12 @@ impl Partition {
         self.log.resident_bytes()
     }
 
+    /// The effective log configuration (recovered topics keep their
+    /// persisted per-topic overrides — see `topic.meta`).
+    pub fn log_config(&self) -> &LogConfig {
+        self.log.config()
+    }
+
     pub fn earliest_offset(&self) -> u64 {
         self.log.earliest_offset()
     }

@@ -1,6 +1,6 @@
 //! A topic: an ordered set of partitions, each an independent log.
 
-use super::log::LogConfig;
+use super::log::{LogConfig, TopicMeta};
 use super::notify::WaitSet;
 use super::partition::Partition;
 use super::record::{Record, RecordBatch};
@@ -31,16 +31,20 @@ impl Topic {
         config: &LogConfig,
         clock: &SharedClock,
     ) -> Topic {
-        // Tiered storage: record the raw topic name next to the
-        // partition dirs so a restarted cluster can re-create the topic
-        // even when the directory name had to be sanitized.
+        // Tiered storage: persist the raw topic name, partition count
+        // and log-config overrides next to the partition dirs, so a
+        // restarted cluster re-creates the topic exactly as configured
+        // (and even when the directory name had to be sanitized). A
+        // stale or legacy-format file is rewritten in place — decode is
+        // lossless for the legacy raw-name format, so this only ever
+        // upgrades.
         if let Some(tdir) = config.storage.topic_dir(name) {
+            let encoded = TopicMeta::of(name, num_partitions, config).encode();
             let write_meta = std::fs::create_dir_all(&tdir).and_then(|_| {
                 let meta = tdir.join("topic.meta");
-                if meta.exists() {
-                    Ok(())
-                } else {
-                    std::fs::write(meta, name)
+                match std::fs::read_to_string(&meta) {
+                    Ok(existing) if existing == encoded => Ok(()),
+                    _ => std::fs::write(meta, encoded),
                 }
             });
             if let Err(e) = write_meta {

@@ -14,6 +14,12 @@
 //!
 //! Fetch responses decode zero-copy: every record in one response frame
 //! is a [`crate::util::Bytes`] slice view of that frame's single buffer.
+//!
+//! Long-poll (`FetchWait`) calls park **server-side** as reactor
+//! registrations, not blocked threads; a broker shutting down answers
+//! every parked long-poll with `woken = true`, so the client re-polls,
+//! observes the broker gone, and fails over its normal reconnect path
+//! instead of hanging until the wait deadline.
 
 use super::codec::{self, OpCode, Reader, WireError, STATUS_OK};
 use crate::broker::group::{Assignor, GroupMembership};

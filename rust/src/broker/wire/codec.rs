@@ -176,34 +176,159 @@ fn read_exact(stream: &mut impl Read, buf: &mut [u8]) -> Result<(), WireError> {
     })
 }
 
+/// Start a request frame in `out` (clearing it): placeholder header,
+/// then `corr | op`. Append the payload with the `put_*` writers and
+/// seal with [`finish_frame`]. Encoding straight into a reused buffer
+/// is what keeps the steady-state wire path allocation-free.
+pub fn begin_request(out: &mut Vec<u8>, corr: u64, op: OpCode) {
+    out.clear();
+    out.extend_from_slice(&[0u8; WIRE_HEADER_BYTES]); // len + crc, patched by finish_frame
+    put_u64(out, corr);
+    put_u8(out, op as u8);
+}
+
+/// Start a success-response frame in `out` (clearing it): placeholder
+/// header, then `corr | STATUS_OK`. Seal with [`finish_frame`].
+pub fn begin_response(out: &mut Vec<u8>, corr: u64) {
+    out.clear();
+    out.extend_from_slice(&[0u8; WIRE_HEADER_BYTES]);
+    put_u64(out, corr);
+    put_u8(out, STATUS_OK);
+}
+
+/// Patch the `len | crc` header of the frame begun by
+/// [`begin_request`]/[`begin_response`]. `out` then holds one complete
+/// wire frame, byte-identical to the [`encode_request`]/
+/// [`encode_response`] forms.
+pub fn finish_frame(out: &mut Vec<u8>) {
+    let len = (out.len() - WIRE_HEADER_BYTES) as u32;
+    let crc = format::crc32(&out[WIRE_HEADER_BYTES..]);
+    out[0..4].copy_from_slice(&len.to_le_bytes());
+    out[4..8].copy_from_slice(&crc.to_le_bytes());
+}
+
+/// Encode one full request frame into a reused buffer (cleared first).
+pub fn encode_request_into(out: &mut Vec<u8>, corr: u64, op: OpCode, payload: &[u8]) {
+    begin_request(out, corr, op);
+    out.extend_from_slice(payload);
+    finish_frame(out);
+}
+
+/// Encode one full response frame (`corr | status | payload-or-message`)
+/// into a reused buffer (cleared first).
+pub fn encode_response_into(out: &mut Vec<u8>, corr: u64, result: Result<&[u8], &str>) {
+    match result {
+        Ok(payload) => {
+            begin_response(out, corr);
+            out.extend_from_slice(payload);
+        }
+        Err(msg) => {
+            out.clear();
+            out.extend_from_slice(&[0u8; WIRE_HEADER_BYTES]);
+            put_u64(out, corr);
+            put_u8(out, STATUS_ERR);
+            put_str(out, msg);
+        }
+    }
+    finish_frame(out);
+}
+
 /// One full request frame: `corr | op | payload`, framed.
 pub fn encode_request(corr: u64, op: OpCode, payload: &[u8]) -> Vec<u8> {
-    let mut body = Vec::with_capacity(9 + payload.len());
-    body.extend_from_slice(&corr.to_le_bytes());
-    body.push(op as u8);
-    body.extend_from_slice(payload);
-    let mut out = Vec::with_capacity(WIRE_HEADER_BYTES + body.len());
-    write_frame(&mut out, &body);
+    let mut out = Vec::with_capacity(WIRE_HEADER_BYTES + 9 + payload.len());
+    encode_request_into(&mut out, corr, op, payload);
     out
 }
 
 /// One full response frame: `corr | status | payload-or-message`.
 pub fn encode_response(corr: u64, result: Result<&[u8], &str>) -> Vec<u8> {
-    let mut body = Vec::new();
-    body.extend_from_slice(&corr.to_le_bytes());
-    match result {
-        Ok(payload) => {
-            body.push(STATUS_OK);
-            body.extend_from_slice(payload);
-        }
-        Err(msg) => {
-            body.push(STATUS_ERR);
-            put_str(&mut body, msg);
+    let mut out = Vec::new();
+    encode_response_into(&mut out, corr, result);
+    out
+}
+
+// ---- gather-write response chunks ------------------------------------------
+
+/// Values at or above this size ride the response as shared [`Bytes`]
+/// slices (`writev` gather segments) instead of being copied into the
+/// response buffer. Below it, one copy into the contiguous header chunk
+/// is cheaper than an extra iovec entry.
+pub const SHARED_CHUNK_MIN: usize = 4096;
+
+/// One piece of an outgoing frame. A response is a sequence of chunks
+/// whose concatenation is byte-identical to the contiguous encoding;
+/// `Shared` chunks alias broker-log (or segment-file) buffers so large
+/// payloads cross from log to socket without an intermediate copy.
+#[derive(Debug)]
+pub enum Chunk {
+    Owned(Vec<u8>),
+    Shared(Bytes),
+}
+
+impl Chunk {
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            Chunk::Owned(v) => v.as_slice(),
+            Chunk::Shared(b) => b.as_slice(),
         }
     }
-    let mut out = Vec::with_capacity(WIRE_HEADER_BYTES + body.len());
-    write_frame(&mut out, &body);
-    out
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Encode a `FetchBatch` success response as gather-write chunks:
+/// `count | record-frame*` under one wire frame, where every value of
+/// at least [`SHARED_CHUNK_MIN`] bytes is emitted as a zero-copy
+/// `Shared` chunk (the record-frame header for it comes from
+/// [`format::encode_frame_header`], whose `len`/`crc` already cover the
+/// detached value). The outer frame's `len`/`crc` are streamed across
+/// all chunks and patched into the first, so no contiguous response
+/// buffer ever exists. `first` is the caller's recycled scratch buffer
+/// (cleared here); chunk 0 is always `Owned` and starts with the wire
+/// header.
+pub fn encode_fetch_response_chunks<'a>(
+    first: Vec<u8>,
+    corr: u64,
+    records: impl ExactSizeIterator<Item = (u64, &'a Record)>,
+) -> Vec<Chunk> {
+    let mut buf = first;
+    begin_response(&mut buf, corr);
+    put_u32(&mut buf, records.len() as u32);
+    let mut chunks: Vec<Chunk> = Vec::new();
+    for (offset, rec) in records {
+        if rec.value.len() >= SHARED_CHUNK_MIN {
+            format::encode_frame_header(&mut buf, offset, rec);
+            chunks.push(Chunk::Owned(std::mem::take(&mut buf)));
+            chunks.push(Chunk::Shared(rec.value.clone()));
+        } else {
+            format::encode_frame(&mut buf, offset, rec);
+        }
+    }
+    if !buf.is_empty() {
+        chunks.push(Chunk::Owned(buf));
+    }
+    let total: usize = chunks.iter().map(Chunk::len).sum();
+    let len = (total - WIRE_HEADER_BYTES) as u32;
+    let mut crc = format::Crc32::new();
+    for (i, c) in chunks.iter().enumerate() {
+        let s = c.as_slice();
+        crc.update(if i == 0 { &s[WIRE_HEADER_BYTES..] } else { s });
+    }
+    let crc = crc.finish();
+    match &mut chunks[0] {
+        Chunk::Owned(head) => {
+            head[0..4].copy_from_slice(&len.to_le_bytes());
+            head[4..8].copy_from_slice(&crc.to_le_bytes());
+        }
+        Chunk::Shared(_) => unreachable!("chunk 0 is the owned header"),
+    }
+    chunks
 }
 
 // ---- primitive writers -----------------------------------------------------
@@ -456,6 +581,105 @@ mod tests {
         assert_eq!(r.u64().unwrap(), 7);
         assert_eq!(r.u8().unwrap(), STATUS_ERR);
         assert_eq!(r.str().unwrap(), "duplicate batch");
+    }
+
+    #[test]
+    fn into_encoders_recycle_a_buffer_and_match_allocating_forms() {
+        let mut scratch = vec![0xEEu8; 64]; // stale content must not leak through
+        encode_request_into(&mut scratch, 42, OpCode::Offsets, b"pay");
+        assert_eq!(scratch, encode_request(42, OpCode::Offsets, b"pay"));
+        encode_response_into(&mut scratch, 7, Ok(b"result"));
+        assert_eq!(scratch, encode_response(7, Ok(b"result")));
+        encode_response_into(&mut scratch, 9, Err("duplicate batch"));
+        assert_eq!(scratch, encode_response(9, Err("duplicate batch")));
+
+        // The begin/put/finish form composes with the payload writers.
+        begin_response(&mut scratch, 11);
+        put_bool(&mut scratch, true);
+        finish_frame(&mut scratch);
+        let mut payload = Vec::new();
+        put_bool(&mut payload, true);
+        assert_eq!(scratch, encode_response(11, Ok(&payload)));
+    }
+
+    #[test]
+    fn fetch_response_chunks_match_contiguous_encoding() {
+        let recs = vec![
+            Record::with_key(vec![1], vec![2u8; 10]).header("fmt", b"raw"),
+            Record::new(vec![7u8; SHARED_CHUNK_MIN + 100]),
+            Record::new(vec![3u8; 5]),
+            Record::new(vec![9u8; SHARED_CHUNK_MIN]), // boundary: shared
+        ];
+        let mut payload = Vec::new();
+        put_records(
+            &mut payload,
+            recs.iter().enumerate().map(|(i, r)| (i as u64 + 3, r)),
+        );
+        let contiguous = encode_response(5, Ok(&payload));
+
+        let chunks = encode_fetch_response_chunks(
+            vec![0xEE; 32], // recycled scratch with stale content
+            5,
+            recs.iter().enumerate().map(|(i, r)| (i as u64 + 3, r)),
+        );
+        let mut flat = Vec::new();
+        for c in &chunks {
+            flat.extend_from_slice(c.as_slice());
+        }
+        assert_eq!(flat, contiguous);
+
+        // Large values ride as zero-copy slices of the records' own
+        // buffers — never copied into a response buffer.
+        let shared: Vec<&Bytes> = chunks
+            .iter()
+            .filter_map(|c| match c {
+                Chunk::Shared(b) => Some(b),
+                Chunk::Owned(_) => None,
+            })
+            .collect();
+        assert_eq!(shared.len(), 2);
+        assert!(Bytes::ptr_eq(shared[0], &recs[1].value));
+        assert!(Bytes::ptr_eq(shared[1], &recs[3].value));
+
+        // And the reassembled frame still decodes like any other.
+        let body = read_frame(&mut flat.as_slice()).unwrap();
+        let mut r = Reader::new(body);
+        assert_eq!(r.u64().unwrap(), 5);
+        assert_eq!(r.u8().unwrap(), STATUS_OK);
+        let got = r.records().unwrap();
+        assert_eq!(got.len(), recs.len());
+        for (i, (off, rec)) in got.iter().enumerate() {
+            assert_eq!(*off, i as u64 + 3);
+            assert_eq!(rec, &recs[i]);
+        }
+    }
+
+    #[test]
+    fn fetch_response_chunks_empty_and_all_large() {
+        // Zero records: one owned chunk, identical to the contiguous form.
+        let chunks =
+            encode_fetch_response_chunks(Vec::new(), 1, std::iter::empty::<(u64, &Record)>());
+        assert_eq!(chunks.len(), 1);
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 0);
+        assert_eq!(chunks[0].as_slice(), encode_response(1, Ok(&payload)));
+
+        // A trailing large value leaves no dangling empty owned chunk.
+        let recs = [Record::new(vec![4u8; SHARED_CHUNK_MIN * 2])];
+        let chunks = encode_fetch_response_chunks(
+            Vec::new(),
+            2,
+            recs.iter().map(|r| (0u64, r)),
+        );
+        assert_eq!(chunks.len(), 2);
+        assert!(matches!(chunks[1], Chunk::Shared(_)));
+        let mut payload = Vec::new();
+        put_records(&mut payload, recs.iter().map(|r| (0u64, r)));
+        let mut flat = Vec::new();
+        for c in &chunks {
+            flat.extend_from_slice(c.as_slice());
+        }
+        assert_eq!(flat, encode_response(2, Ok(&payload)));
     }
 
     #[test]

@@ -1,21 +1,30 @@
 //! The TCP wire protocol: the broker as a real network service.
 //!
-//! Three pieces, all plain `std::net` (the vendored build is hermetic —
-//! no tokio, no serde):
+//! Four pieces, all plain `std::net` plus a thin vendored FFI shim
+//! (the build is hermetic — no tokio, no serde, no mio):
 //!
 //! * [`codec`] — the binary frame format. Every request and response is
 //!   one length-prefixed, CRC-32-checksummed frame (the same framing
 //!   discipline as the on-disk segment format,
 //!   `broker/log/format.rs`), and records travel *as* segment-format
 //!   record frames, so both sides decode them zero-copy into
-//!   [`crate::util::Bytes`] slice views of the received buffer.
-//! * [`server`] — [`BrokerServer`]: a `TcpListener` accept loop plus
-//!   one handler thread per connection, serving a
-//!   [`crate::broker::Cluster`]. Blocking long-polls (`FetchWait`)
-//!   park **server-side** on the broker's [`crate::broker::notify`]
-//!   wait-sets — the wire carries the deadline in the request and the
-//!   wakeup in the response, so a parked remote consumer reacts to a
-//!   produce in one socket round trip, with zero polling on the wire.
+//!   [`crate::util::Bytes`] slice views of the received buffer. Fetch
+//!   responses can also be *encoded* zero-copy, as gather-write chunk
+//!   lists whose record payloads alias the broker log
+//!   ([`codec::encode_fetch_response_chunks`]).
+//! * [`reactor`] — the event-loop substrate: a readiness [`Poller`]
+//!   (epoll on Linux, portable `poll(2)` elsewhere), an eventfd/pipe
+//!   [`WakeFd`] for cross-thread wakeups, and vectored
+//!   [`writev`](reactor::writev) — all over the vendored `libc` shim.
+//! * [`server`] — [`BrokerServer`]: an epoll reactor thread plus a
+//!   small request worker pool, serving a [`crate::broker::Cluster`].
+//!   Thread count is O(worker pool), not O(connections). Blocking
+//!   long-polls (`FetchWait`) park **server-side** as registrations on
+//!   the broker's [`crate::broker::notify`] wait-sets, bridged to the
+//!   reactor through a wake hook — the wire carries the deadline in
+//!   the request and the wakeup in the response, so a parked remote
+//!   consumer reacts to a produce in one socket round trip, with zero
+//!   polling on the wire and zero threads per parked connection.
 //!   Shutdown rides the crate's cancel primitives and unblocks every
 //!   connection deterministically.
 //! * [`client`] — [`RemoteBroker`]: the socket client implementing
@@ -31,7 +40,9 @@
 
 pub mod client;
 pub mod codec;
+pub mod reactor;
 pub mod server;
 
 pub use client::RemoteBroker;
+pub use reactor::{Poller, WakeFd};
 pub use server::BrokerServer;

@@ -1,0 +1,451 @@
+//! Readiness-event plumbing for the broker's event-loop network core:
+//! a thin safe layer over the vendored [`libc`] FFI shim.
+//!
+//! Three pieces, all OS-level and broker-agnostic (the protocol state
+//! machines live in [`super::server`]):
+//!
+//! * [`Poller`] — level-triggered readiness multiplexing. On Linux this
+//!   is an `epoll` instance; elsewhere a `poll(2)` sweep over the
+//!   registered set. One reactor thread waits here for *all* sockets.
+//! * [`WakeFd`] — the cross-thread wakeup primitive: an `eventfd` on
+//!   Linux, a nonblocking self-pipe elsewhere. Worker threads (and
+//!   [`crate::broker::notify::Waiter`] wake hooks) write to it; the
+//!   reactor registers its read side like any other fd, so a wakeup is
+//!   just another readiness event.
+//! * [`writev`] — vectored write: one syscall gathers a response's
+//!   header chunk and its zero-copy payload slices
+//!   ([`super::codec::Chunk`]) straight from the broker log into the
+//!   socket, so large fetch batches never get copied into a contiguous
+//!   response buffer.
+//!
+//! Level-triggered is deliberate: the reactor may stop reading a socket
+//! mid-buffer (backpressure while a request is in flight) and relies on
+//! the next `wait` re-reporting readiness it has not consumed.
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct PollerEvent {
+    /// The registration's token (connection id, listener, wake fd).
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Peer hung up or the fd errored — reported even when read
+    /// interest is off (how a parked long-poll notices its client
+    /// vanished without the reactor reading the socket).
+    pub hangup: bool,
+}
+
+/// Upper bound on iovec entries per [`writev`] call — comfortably under
+/// every platform's `IOV_MAX` (1024 on Linux); longer chunk queues just
+/// take another readiness round.
+pub const MAX_WRITEV_SEGMENTS: usize = 64;
+
+fn last_errno() -> io::Error {
+    io::Error::last_os_error()
+}
+
+/// Vectored write of up to [`MAX_WRITEV_SEGMENTS`] slices. Returns the
+/// byte count accepted by the kernel (a short write spanning part of
+/// the slice list is normal); `WouldBlock` when the socket buffer is
+/// full, `Interrupted` on EINTR — the caller's flush loop handles both.
+pub fn writev(fd: RawFd, slices: &[&[u8]]) -> io::Result<usize> {
+    let mut iov = [libc::iovec { iov_base: std::ptr::null_mut(), iov_len: 0 }; MAX_WRITEV_SEGMENTS];
+    let n = slices.len().min(MAX_WRITEV_SEGMENTS);
+    for (dst, s) in iov.iter_mut().zip(slices[..n].iter()) {
+        dst.iov_base = s.as_ptr() as *mut libc::c_void;
+        dst.iov_len = s.len();
+    }
+    let rc = unsafe { libc::writev(fd, iov.as_ptr(), n as libc::c_int) };
+    if rc < 0 {
+        Err(last_errno())
+    } else {
+        Ok(rc as usize)
+    }
+}
+
+/// Put an fd into nonblocking mode via `fcntl` — the portable form used
+/// for the self-pipe halves (sockets go through std's
+/// `set_nonblocking`, which does the same thing).
+pub fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+    let flags = unsafe { libc::fcntl(fd, libc::F_GETFL) };
+    if flags < 0 {
+        return Err(last_errno());
+    }
+    if unsafe { libc::fcntl(fd, libc::F_SETFL, flags | libc::O_NONBLOCK) } < 0 {
+        return Err(last_errno());
+    }
+    Ok(())
+}
+
+/// Milliseconds for a poll/epoll timeout, rounded *up* so a wait never
+/// returns just short of its deadline and spins. `None` = block forever.
+fn timeout_ms(timeout: Option<Duration>) -> libc::c_int {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = d.as_millis() + u128::from(d.as_nanos() % 1_000_000 != 0);
+            ms.min(i32::MAX as u128) as libc::c_int
+        }
+    }
+}
+
+// ---- Poller: epoll (Linux) -------------------------------------------------
+
+#[cfg(target_os = "linux")]
+#[derive(Debug)]
+pub struct Poller {
+    epfd: RawFd,
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        let epfd = unsafe { libc::epoll_create1(libc::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(last_errno());
+        }
+        Ok(Poller { epfd })
+    }
+
+    fn interest_bits(readable: bool, writable: bool) -> u32 {
+        // RDHUP is always on: hangups must surface even while read
+        // interest is parked off (backpressure / long-poll states).
+        let mut events = libc::EPOLLRDHUP;
+        if readable {
+            events |= libc::EPOLLIN;
+        }
+        if writable {
+            events |= libc::EPOLLOUT;
+        }
+        events
+    }
+
+    fn ctl(&mut self, op: libc::c_int, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+        let mut ev = libc::epoll_event { events, u64: token };
+        if unsafe { libc::epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
+            return Err(last_errno());
+        }
+        Ok(())
+    }
+
+    /// Start watching `fd`, reporting events under `token`.
+    pub fn register(&mut self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.ctl(libc::EPOLL_CTL_ADD, fd, token, Self::interest_bits(readable, writable))
+    }
+
+    /// Change an existing registration's interest set.
+    pub fn modify(&mut self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.ctl(libc::EPOLL_CTL_MOD, fd, token, Self::interest_bits(readable, writable))
+    }
+
+    /// Stop watching `fd`. (Closing the fd would deregister it anyway;
+    /// calling this first keeps Linux and the poll fallback identical.)
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        self.ctl(libc::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Block until readiness or `timeout`; append reports to `out`.
+    pub fn wait(&mut self, out: &mut Vec<PollerEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        const MAX_EVENTS: usize = 256;
+        let mut buf = [libc::epoll_event { events: 0, u64: 0 }; MAX_EVENTS];
+        let n = loop {
+            let rc = unsafe {
+                libc::epoll_wait(self.epfd, buf.as_mut_ptr(), MAX_EVENTS as libc::c_int, timeout_ms(timeout))
+            };
+            if rc >= 0 {
+                break rc as usize;
+            }
+            let e = last_errno();
+            if e.kind() != io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+            // EINTR: let the caller re-evaluate its deadlines.
+            break 0;
+        };
+        for ev in &buf[..n] {
+            // Braced copies: `epoll_event` is packed on x86-64, so
+            // field references would be unaligned.
+            let (events, token) = ({ ev.events }, { ev.u64 });
+            out.push(PollerEvent {
+                token,
+                readable: events & libc::EPOLLIN != 0,
+                writable: events & libc::EPOLLOUT != 0,
+                hangup: events & (libc::EPOLLERR | libc::EPOLLHUP | libc::EPOLLRDHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Poller {
+    fn drop(&mut self) {
+        unsafe { libc::close(self.epfd) };
+    }
+}
+
+// ---- Poller: poll(2) fallback (other Unixes) -------------------------------
+
+#[cfg(not(target_os = "linux"))]
+#[derive(Debug)]
+pub struct Poller {
+    /// `(fd, token, readable, writable)` — rebuilt into a pollfd array
+    /// each wait. O(n) per round, which is fine for the fallback; the
+    /// deployment target (and CI) take the epoll path.
+    fds: Vec<(RawFd, u64, bool, bool)>,
+}
+
+#[cfg(not(target_os = "linux"))]
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller { fds: Vec::new() })
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        if self.fds.iter().any(|(f, ..)| *f == fd) {
+            return Err(io::Error::from(io::ErrorKind::AlreadyExists));
+        }
+        self.fds.push((fd, token, readable, writable));
+        Ok(())
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        for slot in self.fds.iter_mut() {
+            if slot.0 == fd {
+                *slot = (fd, token, readable, writable);
+                return Ok(());
+            }
+        }
+        Err(io::Error::from(io::ErrorKind::NotFound))
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        let before = self.fds.len();
+        self.fds.retain(|(f, ..)| *f != fd);
+        if self.fds.len() == before {
+            return Err(io::Error::from(io::ErrorKind::NotFound));
+        }
+        Ok(())
+    }
+
+    pub fn wait(&mut self, out: &mut Vec<PollerEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        let mut pfds: Vec<libc::pollfd> = self
+            .fds
+            .iter()
+            .map(|&(fd, _, readable, writable)| libc::pollfd {
+                fd,
+                events: (if readable { libc::POLLIN } else { 0 })
+                    | (if writable { libc::POLLOUT } else { 0 }),
+                revents: 0,
+            })
+            .collect();
+        let rc = unsafe { libc::poll(pfds.as_mut_ptr(), pfds.len() as libc::nfds_t, timeout_ms(timeout)) };
+        if rc < 0 {
+            let e = last_errno();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        for (pfd, &(_, token, ..)) in pfds.iter().zip(self.fds.iter()) {
+            if pfd.revents == 0 {
+                continue;
+            }
+            out.push(PollerEvent {
+                token,
+                readable: pfd.revents & libc::POLLIN != 0,
+                writable: pfd.revents & libc::POLLOUT != 0,
+                hangup: pfd.revents & (libc::POLLERR | libc::POLLHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+// ---- WakeFd ----------------------------------------------------------------
+
+/// Cross-thread reactor wakeup: any thread calls [`WakeFd::wake`], the
+/// reactor sees [`WakeFd::raw`] turn readable and [`WakeFd::drain`]s
+/// it. Linux: an `eventfd` (one fd, kernel-side counter). Elsewhere: a
+/// nonblocking self-pipe. Both ends are nonblocking, so `wake` never
+/// parks the waker — a full pipe already means a wakeup is pending.
+#[derive(Debug)]
+pub struct WakeFd {
+    read_fd: RawFd,
+    /// Equal to `read_fd` for eventfd; the pipe's write half otherwise.
+    write_fd: RawFd,
+}
+
+impl WakeFd {
+    #[cfg(target_os = "linux")]
+    pub fn new() -> io::Result<WakeFd> {
+        let fd = unsafe { libc::eventfd(0, libc::EFD_CLOEXEC | libc::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(last_errno());
+        }
+        Ok(WakeFd { read_fd: fd, write_fd: fd })
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    pub fn new() -> io::Result<WakeFd> {
+        let mut fds = [-1 as RawFd; 2];
+        if unsafe { libc::pipe(fds.as_mut_ptr()) } < 0 {
+            return Err(last_errno());
+        }
+        let wake = WakeFd { read_fd: fds[0], write_fd: fds[1] }; // closes on early return
+        set_nonblocking(wake.read_fd)?;
+        set_nonblocking(wake.write_fd)?;
+        Ok(wake)
+    }
+
+    /// The fd to register (read interest) with the [`Poller`].
+    pub fn raw(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Make [`WakeFd::raw`] readable. Never blocks; a `WouldBlock`
+    /// (pipe already full) is itself proof a wakeup is pending.
+    pub fn wake(&self) {
+        let one = 1u64.to_ne_bytes();
+        unsafe { libc::write(self.write_fd, one.as_ptr() as *const libc::c_void, one.len()) };
+    }
+
+    /// Consume all pending wakeups so the fd reads quiet again.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            let n = unsafe { libc::read(self.read_fd, buf.as_mut_ptr() as *mut libc::c_void, buf.len()) };
+            if n <= 0 || (n as usize) < buf.len() {
+                break;
+            }
+        }
+    }
+}
+
+impl Drop for WakeFd {
+    fn drop(&mut self) {
+        unsafe { libc::close(self.read_fd) };
+        if self.write_fd != self.read_fd {
+            unsafe { libc::close(self.write_fd) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    fn tcp_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn wakefd_roundtrip_through_poller() {
+        let mut poller = Poller::new().unwrap();
+        let wake = WakeFd::new().unwrap();
+        poller.register(wake.raw(), 7, true, false).unwrap();
+        let mut events = Vec::new();
+        // Quiet until woken.
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty());
+        wake.wake();
+        wake.wake(); // coalesces; still one readable fd
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable));
+        // Drained, it reads quiet again.
+        wake.drain();
+        events.clear();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn wake_from_another_thread_unblocks_wait() {
+        let mut poller = Poller::new().unwrap();
+        let wake = std::sync::Arc::new(WakeFd::new().unwrap());
+        poller.register(wake.raw(), 1, true, false).unwrap();
+        let w2 = wake.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            w2.wake();
+        });
+        let t0 = std::time::Instant::now();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(10))).unwrap();
+        assert!(events.iter().any(|e| e.token == 1 && e.readable));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn socket_readiness_and_interest_changes() {
+        let (mut a, b) = tcp_pair();
+        b.set_nonblocking(true).unwrap();
+        let mut poller = Poller::new().unwrap();
+        // Write interest on an idle socket: immediately writable.
+        poller.register(b.as_raw_fd(), 3, false, true).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 3 && e.writable));
+        // Flip to read-only interest: quiet until the peer writes.
+        poller.modify(b.as_raw_fd(), 3, true, false).unwrap();
+        events.clear();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(!events.iter().any(|e| e.writable));
+        a.write_all(b"ping").unwrap();
+        events.clear();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 3 && e.readable));
+        poller.deregister(b.as_raw_fd()).unwrap();
+        drop(a);
+    }
+
+    #[test]
+    fn peer_disconnect_surfaces_as_event() {
+        let (a, mut b) = tcp_pair();
+        b.set_nonblocking(true).unwrap();
+        let mut poller = Poller::new().unwrap();
+        poller.register(b.as_raw_fd(), 9, true, false).unwrap();
+        drop(a);
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        // Hangup flag or plain readability (reading then yields EOF) —
+        // either way the reactor notices the dead peer.
+        let ev = events.iter().find(|e| e.token == 9).expect("disconnect event");
+        assert!(ev.hangup || ev.readable);
+        let mut buf = [0u8; 8];
+        assert_eq!(b.read(&mut buf).unwrap(), 0);
+    }
+
+    #[test]
+    fn writev_gathers_and_reports_short_writes() {
+        let (a, mut b) = tcp_pair();
+        a.set_nonblocking(true).unwrap();
+        let n = writev(a.as_raw_fd(), &[b"hello ", b"wire ", b"world"]).unwrap();
+        assert_eq!(n, 16); // a fresh socket buffer takes 16 bytes whole
+        let mut got = vec![0u8; 16];
+        b.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"hello wire world");
+        // Saturate the socket: writev must eventually report WouldBlock
+        // rather than parking the thread.
+        let big = vec![0xA5u8; 1 << 16];
+        loop {
+            match writev(a.as_raw_fd(), &[&big, &big]) {
+                Ok(_) => continue,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => panic!("unexpected writev error: {e}"),
+            }
+        }
+    }
+}

@@ -1,80 +1,223 @@
-//! `BrokerServer`: the broker as a TCP service.
+//! `BrokerServer`: the broker as a TCP service, built on an event-loop
+//! network core.
 //!
-//! One accept thread plus one handler thread per connection (the REST
-//! back-end's model, which the deployment already runs). Each handler
-//! decodes requests zero-copy ([`codec::Reader`]), dispatches them on
-//! the served [`Cluster`] with [`ClientLocality::Remote`] (real sockets
-//! replace the simulated network profile) and writes one response frame
-//! per request.
+//! One **reactor** thread owns every socket and multiplexes them
+//! through a readiness poller ([`super::reactor::Poller`] — epoll on
+//! Linux); a small fixed **worker pool** (`broker-io`) runs request
+//! handlers, which may block on disk (produce, fetch) or on cluster
+//! locks. Thread count is O(worker pool), not O(connections): ten
+//! thousand idle consumers cost ten thousand fd registrations and
+//! per-connection buffers, never ten thousand stacks.
 //!
-//! **Long-polls park here.** A `FetchWait` request parks its handler
-//! thread on the cluster's wait-sets
-//! ([`Cluster::wait_for_data_cancellable`]) — the same condvar
-//! discipline in-process consumers use — so a produce wakes the remote
-//! consumer in one socket round trip, and an idle remote consumer costs
-//! the wire *nothing* for the whole client deadline. The server's
-//! shutdown wait-set is an extra wakeup source of every park, so
-//! stopping the server ends all of them immediately; group waits are
-//! additionally capped broker-side below the session timeout (the
-//! member must heartbeat between rounds), and a quiet round returns
-//! `false` for the client to re-arm, exactly like the in-process
-//! contract.
+//! Per connection, two state machines driven by readiness events:
 //!
-//! [`Cluster::wait_for_data_cancellable`]: crate::broker::Cluster::wait_for_data_cancellable
+//! * **read**: bytes accumulate in a per-connection buffer across
+//!   readiness events until a full `len | crc | body` frame is present
+//!   ([`super::codec`]); the frame body then ships to a worker.
+//!   Requests on one connection stay strictly serial — while one is in
+//!   flight the reactor parks that connection's read interest, so a
+//!   fast client backpressures through TCP exactly as it did against
+//!   the thread-per-connection server.
+//! * **write**: response chunks queue per-connection and drain on
+//!   writability via vectored writes ([`super::reactor::writev`]). A
+//!   fetch response is a header chunk plus zero-copy
+//!   [`Bytes`](crate::util::Bytes) slices of the broker log
+//!   ([`codec::encode_fetch_response_chunks`]), so a large batch goes
+//!   from log to socket without ever being copied into a contiguous
+//!   response buffer. Plain responses are encoded into a recycled
+//!   per-connection scratch buffer — no steady-state allocation.
 //!
-//! **Shutdown is deterministic**: the cancel token flips, every open
-//! connection's socket is shut down (unblocking reads), a dummy connect
-//! unblocks the accept loop, and all threads are joined.
+//! **Long-polls park as registrations, not threads.** A `FetchWait`
+//! registers a [`Waiter`] with the cluster's wait-sets
+//! ([`Cluster::register_data_wait`]) whose wake hook posts a reactor
+//! wakeup through an eventfd ([`super::reactor::WakeFd`]); the
+//! connection then sits in `Parked` state with a timer-heap entry for
+//! its (group-liveness-capped) deadline. A produce wakes it in one
+//! eventfd write + one response frame; an idle parked consumer costs
+//! zero threads and zero CPU. The server's shutdown wait-set is an
+//! extra wakeup source of every park, so stopping the server answers
+//! all of them immediately.
+//!
+//! [`Cluster::register_data_wait`]: crate::broker::Cluster::register_data_wait
+//! [`Waiter`]: crate::broker::notify::Waiter
+//!
+//! **Shutdown is deterministic**: the cancel token flips, one eventfd
+//! write wakes the reactor, every parked long-poll is answered
+//! (`woken = true`) and every socket closed, then the reactor and the
+//! worker pool are joined — no dummy self-connect, no per-connection
+//! thread sweep.
 //!
 //! **Corruption never propagates**: a frame that fails its length bound
-//! or CRC, an unknown opcode, or a payload that decodes malformed either
-//! answers with an error response (when the envelope was intact) or
-//! drops the connection — the broker state and its locks are untouched
-//! either way, because decoding completes before any cluster call.
+//! or CRC, or an unreadable envelope, drops the connection; an unknown
+//! opcode or malformed payload answers with an error response — the
+//! broker state and its locks are untouched either way, because
+//! decoding completes before any cluster call.
 
-use super::codec::{self, OpCode, Reader, WireError};
-use crate::broker::cluster::ClusterHandle;
+use super::codec::{self, Chunk, OpCode, Reader};
+use super::reactor::{self, Poller, PollerEvent, WakeFd, MAX_WRITEV_SEGMENTS};
+use crate::broker::cluster::{ClusterHandle, DataWaitGuard};
+use crate::broker::log::format;
 use crate::broker::net::ClientLocality;
-use crate::broker::notify::WaitSet;
+use crate::broker::notify::{WaitSet, Waiter};
 use crate::broker::record::Record;
 use crate::broker::transport::BrokerTransport;
 use crate::broker::TopicPartition;
-use crate::exec::CancelToken;
+use crate::exec::{CancelToken, ThreadPool};
+use crate::util::bytes::Bytes;
 use anyhow::{Context, Result};
-use std::io::Write;
-use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::io::{ErrorKind, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Hygiene ceiling on one `FetchWait` park — NOT a poll interval. A
-/// parked handler wakes on data, rebalance, *or server shutdown* (the
-/// shutdown wait-set is one of its wakeup sources), so the server can
-/// honor the client's full long-poll deadline with zero polling on the
-/// wire; this cap only bounds a wait whose client named an absurd
+/// parked connection wakes on data, rebalance, *or server shutdown*
+/// (the shutdown wait-set is one of its wakeup sources), so the server
+/// can honor the client's full long-poll deadline with zero polling on
+/// the wire; this cap only bounds a wait whose client named an absurd
 /// timeout.
 pub const MAX_WAIT_SLICE: Duration = Duration::from_secs(600);
 
 /// Idle connections are dropped after this long without a request; the
-/// client pool reconnects transparently on its next call.
+/// client pool reconnects transparently on its next call. Parked
+/// long-polls and the metrics channel are exempt.
 const IDLE_TIMEOUT: Duration = Duration::from_secs(60);
 
-#[derive(Debug)]
+/// How often the reactor sweeps for idle connections.
+const SWEEP_INTERVAL: Duration = Duration::from_secs(5);
+
+/// Request handlers that may block (disk appends, segment loads,
+/// cluster locks) run on this many `broker-io` threads by default.
+pub const DEFAULT_IO_WORKERS: usize = 4;
+
+/// Poller token of the accept socket.
+const TOKEN_LISTENER: u64 = 0;
+/// Poller token of the reactor's wake fd.
+const TOKEN_WAKE: u64 = 1;
+/// Connection ids count up from here and are never reused, so a stale
+/// timer or event can never hit a different connection.
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Reactor-owned read staging buffer: one per reactor, not per
+/// connection, so ten thousand idle connections hold only their (tiny)
+/// pending-frame buffers.
+const READ_BUF_BYTES: usize = 64 * 1024;
+
+/// An empty, fully-parsed connection buffer above this capacity is
+/// released rather than kept hot (one huge produce should not pin 64
+/// MiB to an otherwise idle connection).
+const RBUF_KEEP_BYTES: usize = 256 * 1024;
+
+/// State shared between the reactor, the worker pool and shutdown.
 struct Shared {
     cluster: ClusterHandle,
     cancel: CancelToken,
-    /// Notified once at shutdown: every handler parked in a server-side
-    /// long-poll wakes immediately (it is registered with this set via
-    /// [`crate::broker::Cluster::wait_for_data_cancellable`]).
+    /// Notified once at shutdown: every parked long-poll registration
+    /// wakes (its hook posts a reactor wakeup) and is answered.
     shutdown: Arc<WaitSet>,
-    /// `try_clone`d handles of every open connection (keyed by a
-    /// connection id), so shutdown can unblock their (blocking) reads;
-    /// handlers remove their entry on exit.
-    open: Mutex<Vec<(u64, TcpStream)>>,
+    /// Events posted to the reactor by workers and waiter hooks;
+    /// drained on every reactor wakeup.
+    inbox: Mutex<Vec<Event>>,
+    /// The reactor's wakeup fd. Lives here — not on the reactor thread —
+    /// so a worker finishing after shutdown still writes to a live fd.
+    wake: WakeFd,
 }
 
 impl Shared {
-    fn forget_conn(&self, id: u64) {
-        self.open.lock().unwrap().retain(|(cid, _)| *cid != id);
+    fn post(&self, ev: Event) {
+        self.inbox.lock().unwrap().push(ev);
+        self.wake.wake();
+    }
+}
+
+/// Messages from worker threads (and waiter wake hooks) to the reactor.
+/// Workers never touch sockets; all socket I/O happens on the reactor.
+enum Event {
+    /// A request finished: queue these chunks and return the connection
+    /// to `Idle`. An empty chunk list (or empty chunks) just completes
+    /// the request cycle.
+    Respond { conn: u64, chunks: Vec<Chunk> },
+    /// A `FetchWait` found nothing ready: park the connection.
+    Park { conn: u64, parked: Box<Parked> },
+    /// A waiter wake hook fired for this connection's park.
+    PollWake { conn: u64 },
+    /// Protocol violation (bad CRC, unreadable envelope): drop the
+    /// connection.
+    Close { conn: u64 },
+}
+
+/// A parked `FetchWait`: everything needed to answer the long-poll
+/// later. Dropping it deregisters the waiter from every wait-set (the
+/// `guard`), so an abandoned park can never leak registrations.
+struct Parked {
+    corr: u64,
+    assignments: Vec<(TopicPartition, u64)>,
+    group: Option<(String, u64)>,
+    /// Already capped by [`Cluster::register_data_wait`] for group
+    /// liveness; the reactor's timer heap fires it.
+    ///
+    /// [`Cluster::register_data_wait`]: crate::broker::Cluster::register_data_wait
+    deadline: Instant,
+    waiter: Waiter,
+    /// Generation snapshot taken after registration; a wake that raced
+    /// the park has already moved it.
+    seen: u64,
+    guard: DataWaitGuard,
+    /// The connection's scratch buffer rides along so the eventual
+    /// response allocates nothing.
+    scratch: Vec<u8>,
+}
+
+enum ConnState {
+    /// Reading requests.
+    Idle,
+    /// One request is on the worker pool; read interest is off
+    /// (TCP backpressure) until its `Respond` comes back.
+    Busy,
+    /// A `FetchWait` is registered with the cluster's wait-sets.
+    Parked(Box<Parked>),
+}
+
+struct Conn {
+    stream: TcpStream,
+    peer: String,
+    /// Partial-frame accumulation across readiness events.
+    rbuf: Vec<u8>,
+    /// Outgoing chunks; `front_written` bytes of the front chunk are
+    /// already in the socket.
+    out: VecDeque<Chunk>,
+    front_written: usize,
+    state: ConnState,
+    metrics_channel: bool,
+    eof: bool,
+    last_activity: Instant,
+    /// Interest currently registered with the poller.
+    reg_read: bool,
+    reg_write: bool,
+    /// Recycled response scratch buffer (the codec encode path reuses
+    /// it instead of allocating a fresh `Vec` per response frame).
+    spare: Vec<u8>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, peer: String) -> Conn {
+        Conn {
+            stream,
+            peer,
+            rbuf: Vec::new(),
+            out: VecDeque::new(),
+            front_written: 0,
+            state: ConnState::Idle,
+            metrics_channel: false,
+            eof: false,
+            last_activity: Instant::now(),
+            reg_read: true,
+            reg_write: false,
+            spare: Vec::new(),
+        }
     }
 }
 
@@ -82,28 +225,60 @@ impl Shared {
 pub struct BrokerServer {
     addr: SocketAddr,
     shared: Arc<Shared>,
-    accept: Option<std::thread::JoinHandle<()>>,
+    reactor: Option<std::thread::JoinHandle<()>>,
+    workers: Option<Arc<ThreadPool>>,
 }
 
 impl BrokerServer {
     /// Bind `listen` (e.g. `127.0.0.1:9092`; port 0 = ephemeral) and
-    /// serve `cluster` until [`BrokerServer::shutdown`].
+    /// serve `cluster` until [`BrokerServer::shutdown`], with
+    /// [`DEFAULT_IO_WORKERS`] request workers.
     pub fn start(listen: &str, cluster: ClusterHandle) -> Result<BrokerServer> {
+        BrokerServer::start_with(listen, cluster, DEFAULT_IO_WORKERS)
+    }
+
+    /// [`BrokerServer::start`] with an explicit worker-pool size (the
+    /// `--io-workers` CLI flag). The pool bounds concurrent request
+    /// *handling*; connection count is bounded only by fds.
+    pub fn start_with(listen: &str, cluster: ClusterHandle, io_workers: usize) -> Result<BrokerServer> {
         let listener =
             TcpListener::bind(listen).with_context(|| format!("binding broker on {listen}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("nonblocking listener")?;
         let addr = listener.local_addr()?;
+        let wake = WakeFd::new().context("creating reactor wake fd")?;
+        let mut poller = Poller::new().context("creating readiness poller")?;
+        poller
+            .register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)
+            .context("registering listener")?;
+        poller
+            .register(wake.raw(), TOKEN_WAKE, true, false)
+            .context("registering wake fd")?;
         let shared = Arc::new(Shared {
             cluster,
             cancel: CancelToken::new(),
             shutdown: Arc::new(WaitSet::new()),
-            open: Mutex::new(Vec::new()),
+            inbox: Mutex::new(Vec::new()),
+            wake,
         });
-        let shared2 = shared.clone();
-        let accept = std::thread::Builder::new()
-            .name("broker-accept".to_string())
-            .spawn(move || accept_loop(listener, shared2))?;
-        log::info!("broker wire protocol serving on {addr}");
-        Ok(BrokerServer { addr, shared, accept: Some(accept) })
+        let io_workers = io_workers.max(1);
+        let workers = Arc::new(ThreadPool::new(io_workers, "broker-io"));
+        let reactor = Reactor {
+            shared: shared.clone(),
+            workers: workers.clone(),
+            listener,
+            poller,
+            conns: HashMap::new(),
+            timers: BinaryHeap::new(),
+            next_id: FIRST_CONN_TOKEN,
+            read_buf: vec![0u8; READ_BUF_BYTES],
+        };
+        let handle = std::thread::Builder::new()
+            .name("broker-reactor".to_string())
+            .spawn(move || reactor.run())?;
+        log::info!("broker wire protocol serving on {addr} (reactor + {io_workers} io workers)");
+        Ok(BrokerServer { addr, shared, reactor: Some(handle), workers: Some(workers) })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -115,29 +290,23 @@ impl BrokerServer {
     }
 
     fn stop(&mut self) {
-        if self.shared.cancel.is_cancelled() {
-            return;
-        }
+        let Some(handle) = self.reactor.take() else { return };
         self.shared.cancel.cancel();
-        // Wake every handler parked in a server-side long-poll...
+        // Wake every parked long-poll registration (their hooks post
+        // reactor wakeups) and the reactor itself; it answers the
+        // parked connections and exits.
         self.shared.shutdown.notify_all();
-        // ...unblock every parked connection read...
-        for (_, s) in self.shared.open.lock().unwrap().iter() {
-            s.shutdown(Shutdown::Both).ok();
-        }
-        // ...and the blocking accept itself. A wildcard bind (0.0.0.0 /
-        // [::]) is not connectable everywhere — rewrite it to the same
-        // family's loopback, which the listener accepts on.
-        let mut target = self.addr;
-        if target.ip().is_unspecified() {
-            target.set_ip(match target {
-                SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
-                SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
-            });
-        }
-        TcpStream::connect(target).ok();
-        if let Some(h) = self.accept.take() {
-            h.join().ok();
+        self.shared.wake.wake();
+        handle.join().ok();
+        // Drain in-flight request handlers: once the pool is joined, no
+        // cluster call started by this server is still running. Late
+        // posts from those handlers land in a dead inbox (the wake fd
+        // stays alive inside `Shared`) and are simply dropped.
+        if let Some(workers) = self.workers.take() {
+            match Arc::try_unwrap(workers) {
+                Ok(pool) => pool.shutdown(),
+                Err(arc) => drop(arc), // last ref joins via Drop
+            }
         }
     }
 }
@@ -148,120 +317,704 @@ impl Drop for BrokerServer {
     }
 }
 
-fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
-    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    let mut next_conn_id = 0u64;
-    for stream in listener.incoming() {
-        if shared.cancel.is_cancelled() {
-            break;
-        }
-        match stream {
-            Ok(s) => {
-                let conn_id = next_conn_id;
-                next_conn_id += 1;
-                if let Ok(clone) = s.try_clone() {
-                    shared.open.lock().unwrap().push((conn_id, clone));
+// ---- the reactor -----------------------------------------------------------
+
+struct Reactor {
+    shared: Arc<Shared>,
+    workers: Arc<ThreadPool>,
+    listener: TcpListener,
+    poller: Poller,
+    conns: HashMap<u64, Conn>,
+    /// `(deadline, conn)` min-heap for parked long-polls. Entries can
+    /// go stale (the park completed early); firing one against a
+    /// connection that is no longer parked is a no-op.
+    timers: BinaryHeap<Reverse<(Instant, u64)>>,
+    next_id: u64,
+    read_buf: Vec<u8>,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let mut events: Vec<PollerEvent> = Vec::new();
+        let mut next_sweep = Instant::now() + SWEEP_INTERVAL;
+        loop {
+            if self.shared.cancel.is_cancelled() {
+                break;
+            }
+            let now = Instant::now();
+            let mut wake_at = next_sweep;
+            if let Some(&Reverse((t, _))) = self.timers.peek() {
+                wake_at = wake_at.min(t);
+            }
+            let timeout = wake_at.saturating_duration_since(now);
+            events.clear();
+            if let Err(e) = self.poller.wait(&mut events, Some(timeout)) {
+                log::warn!("broker reactor poll error: {e}");
+            }
+            if self.shared.cancel.is_cancelled() {
+                break;
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKE => self.shared.wake.drain(),
+                    id => self.conn_ready(id, &ev),
                 }
-                let shared2 = shared.clone();
-                handlers.retain(|h| !h.is_finished());
-                match std::thread::Builder::new()
-                    .name("broker-conn".to_string())
-                    .spawn(move || {
-                        serve_conn(s, &shared2);
-                        shared2.forget_conn(conn_id);
-                    }) {
-                    Ok(h) => handlers.push(h),
-                    Err(e) => {
-                        // The closure (owning the stream) was dropped;
-                        // also drop the registered clone so the client
-                        // sees a prompt EOF instead of a dead socket.
-                        log::warn!("broker: spawning connection handler: {e}");
-                        shared.forget_conn(conn_id);
+            }
+            // Posts can land without the wake event racing into this
+            // batch — always drain.
+            self.drain_inbox();
+            self.fire_timers();
+            let now = Instant::now();
+            if now >= next_sweep {
+                self.sweep_idle(now);
+                next_sweep = now + SWEEP_INTERVAL;
+            }
+        }
+        self.shutdown_conns();
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    stream.set_nodelay(true).ok();
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    if let Err(e) = self.poller.register(stream.as_raw_fd(), id, true, false) {
+                        log::warn!("broker: registering {peer}: {e}");
+                        continue;
+                    }
+                    self.conns.insert(id, Conn::new(stream, peer.to_string()));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log::warn!("broker accept error: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn conn_ready(&mut self, id: u64, ev: &PollerEvent) {
+        if ev.writable {
+            self.flush_conn(id);
+        }
+        let idle = match self.conns.get(&id) {
+            Some(c) => matches!(c.state, ConnState::Idle),
+            None => return, // closed earlier in this batch
+        };
+        if (ev.readable || ev.hangup) && idle {
+            self.read_conn(id);
+            self.parse_frames(id);
+        } else if ev.hangup {
+            // The client vanished while a request was in flight. A
+            // parked long-poll is abandoned outright (its guard
+            // deregisters); a busy one closes as soon as its response
+            // cycle completes.
+            match self.conns.get_mut(&id) {
+                Some(c) if matches!(c.state, ConnState::Parked(_)) => {
+                    self.close_conn(id);
+                    return;
+                }
+                Some(c) => c.eof = true,
+                None => return,
+            }
+        }
+        self.finish_io(id);
+    }
+
+    /// Pull everything the socket has into the connection's frame
+    /// buffer (via the reactor's one staging buffer).
+    fn read_conn(&mut self, id: u64) {
+        loop {
+            let Some(conn) = self.conns.get_mut(&id) else { return };
+            match conn.stream.read(&mut self.read_buf) {
+                Ok(0) => {
+                    conn.eof = true;
+                    return;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&self.read_buf[..n]);
+                    conn.last_activity = Instant::now();
+                    if n < self.read_buf.len() {
+                        return;
+                    }
+                    // A torrential sender must not starve the loop: one
+                    // max-size frame buffered is enough for one round.
+                    if conn.rbuf.len() > codec::MAX_FRAME_BYTES as usize {
+                        return;
                     }
                 }
-            }
-            Err(e) => {
-                log::warn!("broker accept error: {e}");
-                if shared.cancel.is_cancelled() {
-                    break;
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log::debug!("broker: reading from {}: {e}", conn.peer);
+                    self.close_conn(id);
+                    return;
                 }
             }
         }
     }
-    // A connection accepted concurrently with shutdown may have been
-    // registered after `stop()` swept the open list — sweep once more
-    // so no handler is left blocking on a live socket.
-    for (_, s) in shared.open.lock().unwrap().iter() {
-        s.shutdown(Shutdown::Both).ok();
-    }
-    for h in handlers {
-        h.join().ok();
-    }
-}
 
-fn serve_conn(mut stream: TcpStream, shared: &Shared) {
-    stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(IDLE_TIMEOUT)).ok();
-    let mut metrics_channel = false;
-    let peer = stream
-        .peer_addr()
-        .map(|a| a.to_string())
-        .unwrap_or_else(|_| "?".to_string());
-    while !shared.cancel.is_cancelled() {
-        let body = match codec::read_frame(&mut stream) {
-            Ok(b) => b,
-            Err(WireError::Truncated) => {
-                // Clean disconnect (or a frame torn mid-send): nothing
-                // half-applied, nothing poisoned — just close.
-                log::debug!("broker: {peer} disconnected");
-                return;
-            }
-            Err(e) => {
-                log::debug!("broker: dropping {peer}: {e}");
-                return;
-            }
-        };
-        let mut r = Reader::new(body.clone());
-        // If even the envelope is unreadable there is no correlation id
-        // to answer on — drop the connection.
-        let Ok(corr) = r.u64() else { return };
-        let Ok(op_byte) = r.u8() else { return };
-        // `Metric` is the one one-way opcode: best-effort by contract,
-        // so no response frame — the client never stalls its latency
-        // path on a counter bump.
-        if OpCode::from_u8(op_byte) == Some(OpCode::Metric) {
-            if !metrics_channel {
-                // Clients send metrics on a dedicated connection that
-                // can sit quiet for minutes; if the idle timeout closed
-                // it, the client's next write would land in a closed
-                // socket's buffer and that delta would vanish. Exempt
-                // the channel — EOF and server shutdown still end it.
-                metrics_channel = true;
-                stream.set_read_timeout(None).ok();
-            }
-            if let Err(e) = dispatch(OpCode::Metric, &mut r, shared) {
-                log::debug!("broker: bad metric from {peer}: {e:#}");
-            }
-            continue;
+    /// Carve complete frames out of the connection buffer and dispatch
+    /// them. Stops at the first non-one-way frame (serial requests).
+    fn parse_frames(&mut self, id: u64) {
+        enum Next {
+            Frame { body: Bytes, crc: u32, metric: bool },
+            Close,
+            Done,
         }
-        let reply = match OpCode::from_u8(op_byte) {
-            None => Err(format!("unknown opcode {op_byte}")),
-            Some(op) => dispatch(op, &mut r, shared).map_err(|e| format!("{e:#}")),
+        loop {
+            let next = {
+                let Some(conn) = self.conns.get_mut(&id) else { return };
+                if !matches!(conn.state, ConnState::Idle)
+                    || conn.rbuf.len() < codec::WIRE_HEADER_BYTES
+                {
+                    Next::Done
+                } else {
+                    let len = u32::from_le_bytes(conn.rbuf[0..4].try_into().unwrap());
+                    let total = codec::WIRE_HEADER_BYTES + len as usize;
+                    if len > codec::MAX_FRAME_BYTES {
+                        log::debug!(
+                            "broker: dropping {}: wire frame claims {len} bytes (max {})",
+                            conn.peer,
+                            codec::MAX_FRAME_BYTES
+                        );
+                        Next::Close
+                    } else if conn.rbuf.len() < total {
+                        Next::Done
+                    } else {
+                        let crc = u32::from_le_bytes(conn.rbuf[4..8].try_into().unwrap());
+                        let body =
+                            Bytes::copy_from_slice(&conn.rbuf[codec::WIRE_HEADER_BYTES..total]);
+                        conn.rbuf.drain(..total);
+                        conn.last_activity = Instant::now();
+                        // Peek the opcode (offset 8: after corr_id).
+                        // `Metric` is one-way — fire-and-forget, the
+                        // connection stays idle — and marks the
+                        // connection as the client's dedicated metrics
+                        // channel, exempt from the idle sweep.
+                        let metric = body.as_slice().get(8) == Some(&(OpCode::Metric as u8));
+                        if metric {
+                            conn.metrics_channel = true;
+                        } else {
+                            conn.state = ConnState::Busy;
+                        }
+                        Next::Frame { body, crc, metric }
+                    }
+                }
+            };
+            match next {
+                Next::Done => return,
+                Next::Close => {
+                    self.close_conn(id);
+                    return;
+                }
+                Next::Frame { body, crc, metric } => {
+                    let shared = self.shared.clone();
+                    if metric {
+                        self.workers.execute(move || handle_metric(&shared, id, body, crc));
+                        continue;
+                    }
+                    let scratch = self
+                        .conns
+                        .get_mut(&id)
+                        .map(|c| std::mem::take(&mut c.spare))
+                        .unwrap_or_default();
+                    self.workers
+                        .execute(move || handle_request(&shared, id, body, crc, scratch));
+                    // Busy: the next frame waits for this one's Respond.
+                    self.update_interest(id);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Drain the outgoing chunk queue with vectored writes until the
+    /// socket blocks or the queue empties.
+    fn flush_conn(&mut self, id: u64) {
+        loop {
+            let outcome = {
+                let Some(conn) = self.conns.get_mut(&id) else { return };
+                if conn.out.is_empty() {
+                    return;
+                }
+                let mut slices: Vec<&[u8]> =
+                    Vec::with_capacity(conn.out.len().min(MAX_WRITEV_SEGMENTS));
+                for (i, c) in conn.out.iter().take(MAX_WRITEV_SEGMENTS).enumerate() {
+                    let s = c.as_slice();
+                    slices.push(if i == 0 { &s[conn.front_written..] } else { s });
+                }
+                reactor::writev(conn.stream.as_raw_fd(), &slices)
+            };
+            match outcome {
+                Ok(0) => return,
+                Ok(n) => {
+                    let Some(conn) = self.conns.get_mut(&id) else { return };
+                    Reactor::advance_out(conn, n);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    if let Some(conn) = self.conns.get(&id) {
+                        log::debug!("broker: writing to {}: {e}", conn.peer);
+                    }
+                    self.close_conn(id);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Account `n` written bytes against the front of the queue,
+    /// recycling fully-written owned chunks into the scratch buffer.
+    fn advance_out(conn: &mut Conn, mut n: usize) {
+        while n > 0 {
+            let Some(front) = conn.out.front() else { return };
+            let avail = front.len() - conn.front_written;
+            if n < avail {
+                conn.front_written += n;
+                return;
+            }
+            n -= avail;
+            conn.front_written = 0;
+            if let Some(Chunk::Owned(mut v)) = conn.out.pop_front() {
+                if v.capacity() > conn.spare.capacity() {
+                    v.clear();
+                    conn.spare = v;
+                }
+            }
+        }
+    }
+
+    /// Post-I/O bookkeeping: release oversized buffers, close drained
+    /// EOF connections, sync poller interest.
+    fn finish_io(&mut self, id: u64) {
+        let close = {
+            let Some(conn) = self.conns.get_mut(&id) else { return };
+            if conn.rbuf.is_empty() && conn.rbuf.capacity() > RBUF_KEEP_BYTES {
+                conn.rbuf = Vec::new();
+            }
+            conn.eof && conn.out.is_empty() && matches!(conn.state, ConnState::Idle)
         };
-        let frame = codec::encode_response(corr, reply.as_deref().map_err(String::as_str));
-        if let Err(e) = stream.write_all(&frame) {
-            log::debug!("broker: writing to {peer}: {e}");
+        if close {
+            self.close_conn(id);
             return;
         }
+        self.update_interest(id);
+    }
+
+    fn update_interest(&mut self, id: u64) {
+        let Some(conn) = self.conns.get_mut(&id) else { return };
+        let want_read = matches!(conn.state, ConnState::Idle) && !conn.eof;
+        let want_write = !conn.out.is_empty();
+        if want_read != conn.reg_read || want_write != conn.reg_write {
+            if let Err(e) = self
+                .poller
+                .modify(conn.stream.as_raw_fd(), id, want_read, want_write)
+            {
+                log::debug!("broker: poller modify for {}: {e}", conn.peer);
+            } else {
+                conn.reg_read = want_read;
+                conn.reg_write = want_write;
+            }
+        }
+    }
+
+    fn close_conn(&mut self, id: u64) {
+        if let Some(conn) = self.conns.remove(&id) {
+            self.poller.deregister(conn.stream.as_raw_fd()).ok();
+            log::debug!("broker: {} disconnected", conn.peer);
+            // Dropping `conn` closes the socket; a parked state's guard
+            // deregisters its waiter from every wait-set.
+        }
+    }
+
+    fn drain_inbox(&mut self) {
+        loop {
+            let batch: Vec<Event> = std::mem::take(&mut *self.shared.inbox.lock().unwrap());
+            if batch.is_empty() {
+                return;
+            }
+            for ev in batch {
+                self.handle_event(ev);
+            }
+        }
+    }
+
+    fn handle_event(&mut self, ev: Event) {
+        match ev {
+            Event::Respond { conn: id, chunks } => {
+                let Some(conn) = self.conns.get_mut(&id) else { return };
+                conn.state = ConnState::Idle;
+                for c in chunks {
+                    if c.is_empty() {
+                        // Degenerate chunk: recycle its buffer.
+                        if let Chunk::Owned(v) = c {
+                            if v.capacity() > conn.spare.capacity() {
+                                conn.spare = v;
+                            }
+                        }
+                    } else {
+                        conn.out.push_back(c);
+                    }
+                }
+                self.flush_conn(id);
+                self.parse_frames(id); // a pipelined next request may be buffered
+                self.finish_io(id);
+            }
+            Event::Park { conn: id, parked } => {
+                let Some(conn) = self.conns.get_mut(&id) else { return };
+                if conn.eof {
+                    // Client already gone: abandon the long-poll.
+                    self.close_conn(id);
+                    return;
+                }
+                if self.shared.cancel.is_cancelled()
+                    || parked.waiter.generation() != parked.seen
+                {
+                    // A wake raced the park decision (the hook's
+                    // PollWake may even sit earlier in this inbox, a
+                    // no-op against a Busy connection): complete now.
+                    self.complete_wait_async(id, parked);
+                } else {
+                    self.timers.push(Reverse((parked.deadline, id)));
+                    conn.state = ConnState::Parked(parked);
+                    self.update_interest(id);
+                }
+            }
+            Event::PollWake { conn: id } => {
+                let Some(conn) = self.conns.get_mut(&id) else { return };
+                if matches!(conn.state, ConnState::Parked(_)) {
+                    let ConnState::Parked(parked) =
+                        std::mem::replace(&mut conn.state, ConnState::Busy)
+                    else {
+                        unreachable!()
+                    };
+                    self.complete_wait_async(id, parked);
+                }
+                // Idle/Busy: a stale wake for a park that already
+                // completed — ignore.
+            }
+            Event::Close { conn: id } => self.close_conn(id),
+        }
+    }
+
+    /// Answer a (completed or expired) park on the worker pool — the
+    /// readiness re-check takes cluster locks, which stay off the
+    /// reactor thread.
+    fn complete_wait_async(&self, id: u64, parked: Box<Parked>) {
+        let shared = self.shared.clone();
+        self.workers.execute(move || complete_wait(&shared, id, parked));
+    }
+
+    fn fire_timers(&mut self) {
+        let now = Instant::now();
+        while let Some(&Reverse((t, id))) = self.timers.peek() {
+            if t > now {
+                return;
+            }
+            self.timers.pop();
+            let Some(conn) = self.conns.get_mut(&id) else { continue };
+            if let ConnState::Parked(p) = &conn.state {
+                if p.deadline <= now {
+                    let ConnState::Parked(parked) =
+                        std::mem::replace(&mut conn.state, ConnState::Busy)
+                    else {
+                        unreachable!()
+                    };
+                    self.complete_wait_async(id, parked);
+                } else {
+                    // Stale entry from an earlier park on this
+                    // connection; re-arm for the current deadline.
+                    let d = p.deadline;
+                    self.timers.push(Reverse((d, id)));
+                }
+            }
+        }
+    }
+
+    fn sweep_idle(&mut self, now: Instant) {
+        let stale: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| {
+                matches!(c.state, ConnState::Idle)
+                    && !c.metrics_channel
+                    && c.out.is_empty()
+                    && now.duration_since(c.last_activity) >= IDLE_TIMEOUT
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        for id in stale {
+            self.close_conn(id);
+        }
+    }
+
+    /// Shutdown path: answer every parked long-poll (`woken = true` —
+    /// the client re-checks and observes the shutdown), flush
+    /// best-effort, close everything.
+    fn shutdown_conns(&mut self) {
+        let ids: Vec<u64> = self.conns.keys().copied().collect();
+        for id in ids {
+            let Some(conn) = self.conns.get_mut(&id) else { continue };
+            if matches!(conn.state, ConnState::Parked(_)) {
+                let ConnState::Parked(parked) =
+                    std::mem::replace(&mut conn.state, ConnState::Idle)
+                else {
+                    unreachable!()
+                };
+                let p = *parked;
+                let Parked { corr, guard, mut scratch, .. } = p;
+                drop(guard);
+                codec::begin_response(&mut scratch, corr);
+                codec::put_bool(&mut scratch, true);
+                codec::finish_frame(&mut scratch);
+                conn.out.push_back(Chunk::Owned(scratch));
+            }
+            // A parked response is a handful of bytes into an empty
+            // socket buffer: this all but always completes. A socket
+            // mid-backpressure just loses its tail — the client sees
+            // EOF and reports the disconnect.
+            self.flush_conn(id);
+        }
+        self.conns.clear();
     }
 }
 
-/// Decode one request payload and run it against the cluster. Decoding
-/// happens *entirely* before the cluster call, so a malformed payload
-/// can never leave a partition lock poisoned or a group half-updated.
-fn dispatch(op: OpCode, r: &mut Reader, shared: &Shared) -> Result<Vec<u8>> {
+// ---- request handling (worker pool) ----------------------------------------
+
+/// One-way `Metric` frame: validate, decode, bump the counter. No
+/// response; a CRC failure still drops the connection like any other
+/// corrupt frame.
+fn handle_metric(shared: &Arc<Shared>, conn: u64, body: Bytes, crc: u32) {
+    if format::crc32(body.as_slice()) != crc {
+        shared.post(Event::Close { conn });
+        return;
+    }
+    let mut r = Reader::new(body);
+    let (Ok(_corr), Ok(_op)) = (r.u64(), r.u8()) else {
+        shared.post(Event::Close { conn });
+        return;
+    };
+    if let Err(e) = metric_payload(shared, &mut r) {
+        log::debug!("broker: bad metric frame: {e:#}");
+    }
+}
+
+fn metric_payload(shared: &Arc<Shared>, r: &mut Reader) -> Result<()> {
+    let delta = r.u64()?;
+    let name = r.str()?;
+    shared.cluster.metrics.counter(&name).add(delta);
+    Ok(())
+}
+
+/// Handle one request frame end-to-end on a worker thread: CRC check,
+/// envelope decode, dispatch, response encode (into the connection's
+/// recycled scratch buffer), and a `Respond`/`Park`/`Close` post back
+/// to the reactor.
+fn handle_request(shared: &Arc<Shared>, conn: u64, body: Bytes, crc: u32, mut scratch: Vec<u8>) {
+    if format::crc32(body.as_slice()) != crc {
+        shared.post(Event::Close { conn });
+        return;
+    }
+    let mut r = Reader::new(body);
+    // If even the envelope is unreadable there is no correlation id to
+    // answer on — drop the connection.
+    let (Ok(corr), Ok(op_byte)) = (r.u64(), r.u8()) else {
+        shared.post(Event::Close { conn });
+        return;
+    };
+    let Some(op) = OpCode::from_u8(op_byte) else {
+        codec::encode_response_into(&mut scratch, corr, Err(&format!("unknown opcode {op_byte}")));
+        shared.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)] });
+        return;
+    };
+    match op {
+        OpCode::FetchBatch => {
+            let chunks = fetch_batch_chunks(shared, &mut r, corr, scratch);
+            shared.post(Event::Respond { conn, chunks });
+        }
+        OpCode::FetchWait => fetch_wait(shared, conn, &mut r, corr, scratch),
+        OpCode::Metric => {
+            // Normally dispatched one-way straight from the reactor;
+            // reaching here (a short body defeated the opcode peek)
+            // still completes the request cycle, without a response.
+            if let Err(e) = metric_payload(shared, &mut r) {
+                log::debug!("broker: bad metric frame: {e:#}");
+            }
+            scratch.clear();
+            shared.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)] });
+        }
+        _ => {
+            codec::begin_response(&mut scratch, corr);
+            match dispatch_simple(op, &mut r, shared, &mut scratch) {
+                Ok(()) => codec::finish_frame(&mut scratch),
+                Err(e) => codec::encode_response_into(&mut scratch, corr, Err(&format!("{e:#}"))),
+            }
+            shared.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)] });
+        }
+    }
+}
+
+/// `FetchBatch`: bound the response to the frame limit, then encode it
+/// as gather-write chunks — header bytes in the scratch buffer, large
+/// record values as zero-copy slices of the broker log.
+fn fetch_batch_chunks(
+    shared: &Arc<Shared>,
+    r: &mut Reader,
+    corr: u64,
+    mut scratch: Vec<u8>,
+) -> Vec<Chunk> {
+    let fetched = (|| -> Result<_> {
+        let partition = r.u32()?;
+        let from = r.u64()?;
+        let max = r.u32()? as usize;
+        let topic = r.str()?;
+        let batch =
+            shared
+                .cluster
+                .fetch_batch(&topic, partition, from, max, ClientLocality::Remote)?;
+        // Bound the RESPONSE to the frame limit too: the client
+        // hard-rejects oversized frames, so an unbounded batch of
+        // large records would wedge the consumer forever. Return a
+        // prefix instead — fetch's contract is "up to max", and the
+        // consumer advances through the rest in later fetches.
+        let budget = codec::MAX_FRAME_BYTES as usize - 1024; // envelope headroom
+        let mut bytes = 4usize; // record-count prefix
+        let mut take = 0usize;
+        for (offset, rec) in &batch.records {
+            let frame = format::frame_size(rec);
+            if bytes + frame > budget {
+                if take == 0 {
+                    anyhow::bail!(
+                        "record at {topic}:{partition}@{offset} ({frame} bytes) \
+                         exceeds the wire frame limit"
+                    );
+                }
+                break;
+            }
+            bytes += frame;
+            take += 1;
+        }
+        Ok((batch, take))
+    })();
+    match fetched {
+        Ok((batch, take)) => codec::encode_fetch_response_chunks(
+            scratch,
+            corr,
+            batch.records.iter().take(take).map(|(o, rec)| (*o, rec)),
+        ),
+        Err(e) => {
+            codec::encode_response_into(&mut scratch, corr, Err(&format!("{e:#}")));
+            vec![Chunk::Owned(scratch)]
+        }
+    }
+}
+
+/// `FetchWait`: register with the cluster's wait-sets (plus the server
+/// shutdown set), bridge wakes to the reactor through the waiter hook,
+/// and either answer immediately (data already there, or a wake raced
+/// registration) or hand the reactor a [`Parked`] to hold. The
+/// connection costs a registration and a timer entry while parked —
+/// no thread.
+fn fetch_wait(shared: &Arc<Shared>, conn: u64, r: &mut Reader, corr: u64, mut scratch: Vec<u8>) {
+    let parsed = (|| -> Result<_> {
+        let timeout_ms = r.u64()?;
+        let group = r.opt(|r| Ok((r.str()?, r.u64()?)))?;
+        let n = r.u32()? as usize;
+        let mut assignments: Vec<(TopicPartition, u64)> = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            let topic = r.str()?;
+            let p = r.u32()?;
+            let pos = r.u64()?;
+            assignments.push(((topic, p), pos));
+        }
+        Ok((timeout_ms, group, assignments))
+    })();
+    let (timeout_ms, group, assignments) = match parsed {
+        Ok(t) => t,
+        Err(e) => {
+            codec::encode_response_into(&mut scratch, corr, Err(&format!("{e:#}")));
+            shared.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)] });
+            return;
+        }
+    };
+    let wait = Duration::from_millis(timeout_ms).min(MAX_WAIT_SLICE);
+    let waiter = Waiter::new();
+    // Install the hook BEFORE registering: every wake after this point
+    // posts a reactor wakeup for this connection.
+    let hook_shared = shared.clone();
+    waiter.set_hook(move || hook_shared.post(Event::PollWake { conn }));
+    let (guard, deadline) = shared.cluster.register_data_wait(
+        &waiter,
+        &assignments,
+        group.as_ref().map(|(gid, gen)| (gid.as_str(), *gen)),
+        Instant::now() + wait,
+        Some(&shared.shutdown),
+    );
+    let seen = waiter.generation();
+    // Register → snapshot → check: data (or cancellation) that landed
+    // before the snapshot is answered without parking; anything after
+    // it has already fired the hook.
+    if shared.cancel.is_cancelled()
+        || shared
+            .cluster
+            .data_wait_ready(&assignments, group.as_ref().map(|(gid, gen)| (gid.as_str(), *gen)))
+    {
+        drop(guard);
+        codec::begin_response(&mut scratch, corr);
+        codec::put_bool(&mut scratch, true);
+        codec::finish_frame(&mut scratch);
+        shared.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)] });
+        return;
+    }
+    shared.post(Event::Park {
+        conn,
+        parked: Box::new(Parked {
+            corr,
+            assignments,
+            group,
+            deadline,
+            waiter,
+            seen,
+            guard,
+            scratch,
+        }),
+    });
+}
+
+/// Answer a park that completed (wake, timeout, or shutdown): re-check
+/// readiness, deregister, encode `woken` into the recycled scratch.
+fn complete_wait(shared: &Arc<Shared>, conn: u64, parked: Box<Parked>) {
+    let Parked { corr, assignments, group, waiter, seen, guard, mut scratch, .. } = *parked;
+    let woken = shared.cancel.is_cancelled()
+        || waiter.generation() != seen
+        || shared
+            .cluster
+            .data_wait_ready(&assignments, group.as_ref().map(|(gid, gen)| (gid.as_str(), *gen)));
+    drop(guard);
+    codec::begin_response(&mut scratch, corr);
+    codec::put_bool(&mut scratch, woken);
+    codec::finish_frame(&mut scratch);
+    shared.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)] });
+}
+
+/// Decode one request payload and run it against the cluster, writing
+/// the response payload straight into the (envelope-prefixed) scratch
+/// buffer. Decoding happens *entirely* before the cluster call, so a
+/// malformed payload can never leave a partition lock poisoned or a
+/// group half-updated. On error the caller re-encodes the buffer as an
+/// error response — partial payload bytes are simply discarded.
+fn dispatch_simple(op: OpCode, r: &mut Reader, shared: &Arc<Shared>, out: &mut Vec<u8>) -> Result<()> {
     let cluster = &shared.cluster;
-    let mut out = Vec::new();
     match op {
         OpCode::CreateTopic => {
             let partitions = r.u32()?;
@@ -269,15 +1022,15 @@ fn dispatch(op: OpCode, r: &mut Reader, shared: &Shared) -> Result<Vec<u8>> {
             // Through the SAME trait impl the in-process transport
             // uses (0 = broker default), so the two paths cannot drift.
             let n = BrokerTransport::create_topic(&**cluster, &topic, partitions)?;
-            codec::put_u32(&mut out, n);
+            codec::put_u32(out, n);
         }
         OpCode::Metadata => {
             let topic = r.str()?;
             let parts = cluster.topic(&topic).map(|t| t.num_partitions());
-            codec::put_opt(&mut out, parts.as_ref(), |o, n| codec::put_u32(o, *n));
+            codec::put_opt(out, parts.as_ref(), |o, n| codec::put_u32(o, *n));
         }
         OpCode::ListTopics => {
-            codec::put_strings(&mut out, &cluster.topic_names());
+            codec::put_strings(out, &cluster.topic_names());
         }
         OpCode::Produce => {
             let partition = r.u32()?;
@@ -285,83 +1038,19 @@ fn dispatch(op: OpCode, r: &mut Reader, shared: &Shared) -> Result<Vec<u8>> {
             let topic = r.str()?;
             // Zero-copy: each decoded record's payloads are slices of
             // the request buffer; the append below shares them.
-            let records: Vec<Record> =
-                r.records()?.into_iter().map(|(_, rec)| rec).collect();
+            let records: Vec<Record> = r.records()?.into_iter().map(|(_, rec)| rec).collect();
             let base = cluster.produce(&topic, partition, &records, ClientLocality::Remote, seq)?;
-            codec::put_u64(&mut out, base);
-        }
-        OpCode::FetchBatch => {
-            let partition = r.u32()?;
-            let from = r.u64()?;
-            let max = r.u32()? as usize;
-            let topic = r.str()?;
-            let batch =
-                cluster.fetch_batch(&topic, partition, from, max, ClientLocality::Remote)?;
-            // Bound the RESPONSE to the frame limit too: the client
-            // hard-rejects oversized frames, so an unbounded batch of
-            // large records would wedge the consumer forever. Return a
-            // prefix instead — fetch's contract is "up to max", and
-            // the consumer advances through the rest in later fetches.
-            let budget = codec::MAX_FRAME_BYTES as usize - 1024; // envelope headroom
-            let mut bytes = 4usize; // record-count prefix
-            let mut take = 0usize;
-            for (offset, rec) in &batch.records {
-                let frame = crate::broker::log::format::frame_size(rec);
-                if bytes + frame > budget {
-                    if take == 0 {
-                        anyhow::bail!(
-                            "record at {topic}:{partition}@{offset} ({frame} bytes) \
-                             exceeds the wire frame limit"
-                        );
-                    }
-                    break;
-                }
-                bytes += frame;
-                take += 1;
-            }
-            codec::put_records(
-                &mut out,
-                batch.records.iter().take(take).map(|(o, rec)| (*o, rec)),
-            );
-        }
-        OpCode::FetchWait => {
-            let timeout_ms = r.u64()?;
-            let group = r.opt(|r| Ok((r.str()?, r.u64()?)))?;
-            let n = r.u32()? as usize;
-            let mut assignments: Vec<(TopicPartition, u64)> = Vec::with_capacity(n.min(4096));
-            for _ in 0..n {
-                let topic = r.str()?;
-                let p = r.u32()?;
-                let pos = r.u64()?;
-                assignments.push(((topic, p), pos));
-            }
-            // Park THIS thread on the broker's wait-sets; the client is
-            // blocked on its socket read until the response frame. The
-            // shutdown wait-set is an extra wakeup source, so the park
-            // can honor the client's full deadline and still end the
-            // instant the server stops. (Group waits are still capped
-            // broker-side below the session timeout so remote members
-            // heartbeat between rounds; a quiet round is a normal
-            // "re-arm" answer.)
-            let wait = Duration::from_millis(timeout_ms).min(MAX_WAIT_SLICE);
-            let woken = cluster.wait_for_data_cancellable(
-                &assignments,
-                group.as_ref().map(|(gid, gen)| (gid.as_str(), *gen)),
-                Instant::now() + wait,
-                Some(&shared.shutdown),
-                || shared.cancel.is_cancelled(),
-            );
-            codec::put_bool(&mut out, woken);
+            codec::put_u64(out, base);
         }
         OpCode::Offsets => {
             let partition = r.u32()?;
             let topic = r.str()?;
             let (earliest, latest) = cluster.offsets(&topic, partition)?;
-            codec::put_u64(&mut out, earliest);
-            codec::put_u64(&mut out, latest);
+            codec::put_u64(out, earliest);
+            codec::put_u64(out, latest);
         }
         OpCode::AllocProducerId => {
-            codec::put_u64(&mut out, cluster.alloc_producer_id());
+            codec::put_u64(out, cluster.alloc_producer_id());
         }
         OpCode::JoinGroup => {
             let assignor = codec::assignor_from_u8(r.u8()?)?;
@@ -369,7 +1058,7 @@ fn dispatch(op: OpCode, r: &mut Reader, shared: &Shared) -> Result<Vec<u8>> {
             let member = r.str()?;
             let topics = r.strings()?;
             let m = cluster.join_group(&gid, &member, &topics, assignor);
-            codec::put_membership(&mut out, &m);
+            codec::put_membership(out, &m);
         }
         OpCode::LeaveGroup => {
             let gid = r.str()?;
@@ -380,7 +1069,7 @@ fn dispatch(op: OpCode, r: &mut Reader, shared: &Shared) -> Result<Vec<u8>> {
             let gid = r.str()?;
             let member = r.str()?;
             let m = cluster.heartbeat(&gid, &member);
-            codec::put_opt(&mut out, m.as_ref(), codec::put_membership);
+            codec::put_opt(out, m.as_ref(), codec::put_membership);
         }
         OpCode::CommitOffsets => {
             let gid = r.str()?;
@@ -400,13 +1089,10 @@ fn dispatch(op: OpCode, r: &mut Reader, shared: &Shared) -> Result<Vec<u8>> {
             let topic = r.str()?;
             let p = r.u32()?;
             let committed = cluster.committed_offset(&gid, &(topic, p));
-            codec::put_opt(&mut out, committed.as_ref(), |o, v| codec::put_u64(o, *v));
+            codec::put_opt(out, committed.as_ref(), |o, v| codec::put_u64(o, *v));
         }
-        OpCode::Metric => {
-            let delta = r.u64()?;
-            let name = r.str()?;
-            cluster.metrics.counter(&name).add(delta);
-        }
+        // Handled before dispatch_simple is reached.
+        OpCode::FetchBatch | OpCode::FetchWait | OpCode::Metric => unreachable!(),
     }
-    Ok(out)
+    Ok(())
 }

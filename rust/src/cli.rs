@@ -67,13 +67,15 @@ USAGE:
   kafka-ml pipeline [--samples N] [--epochs E] [--replicas R] [--artifacts DIR]
                     [--data-dir DIR] [--backend auto|pjrt|native]
       Run the full Fig-1 pipeline (A-F) on the synthetic HCOPD workload.
-  kafka-ml serve [--port P] [--listen ADDR] [--artifacts DIR]
+  kafka-ml serve [--port P] [--listen ADDR] [--io-workers N] [--artifacts DIR]
                  [--state FILE.json] [--data-dir DIR] [--backend auto|pjrt|native]
       Boot the platform (broker + back-end + orchestrator) and serve the
       RESTful back-end until Ctrl-C; --state snapshots the registry.
       --listen ADDR additionally serves the broker's TCP wire protocol
       (e.g. 127.0.0.1:9092), so workers in other processes can attach
-      with --broker.
+      with --broker. The wire server is an epoll reactor: one event-loop
+      thread plus --io-workers request threads (default 4) regardless of
+      how many connections are attached.
   kafka-ml info [--artifacts DIR] [--backend auto|pjrt|native]
       Print the model's metadata and which execution backend loads.
 
@@ -227,10 +229,17 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     })?;
     // --listen: expose the broker over the TCP wire protocol so remote
     // workers (produce/consume/train/infer --broker) can attach. The
-    // server lives as long as the serve loop below.
+    // server lives as long as the serve loop below. --io-workers sizes
+    // the request worker pool behind the reactor thread; connection
+    // count does not add threads.
     let _wire_server = match flags.get("listen") {
         Some(addr) => {
-            let server = BrokerServer::start(addr, kml.cluster.clone())?;
+            let io_workers = flag_u64(
+                flags,
+                "io-workers",
+                crate::broker::wire::server::DEFAULT_IO_WORKERS as u64,
+            )? as usize;
+            let server = BrokerServer::start_with(addr, kml.cluster.clone(), io_workers)?;
             println!("broker wire protocol on {}", server.addr());
             Some(server)
         }

@@ -256,6 +256,56 @@ fn lagging_cursor_on_fully_retained_log_parks_instead_of_spinning() {
 }
 
 #[test]
+fn per_topic_log_config_survives_restart() {
+    // `create_topic_with` overrides (segment size, retention, residency
+    // budget) are persisted in `topic.meta` and re-applied on recovery:
+    // the restarted broker must NOT silently revert the topic to its
+    // own defaults. Partition count and the raw (unsanitizable) topic
+    // name ride in the same file.
+    use kafka_ml::broker::CleanupPolicy;
+    let dir = temp_data_dir("config");
+    let topic = "sensor readings/v2"; // sanitized on disk, raw in meta
+    let overridden = LogConfig {
+        segment_bytes: 777,
+        retention_bytes: Some(5 << 20),
+        retention_ms: None,
+        cleanup_policy: CleanupPolicy::Compact,
+        storage: StorageMode::Tiered {
+            data_dir: dir.clone(),
+        },
+        max_resident_bytes: 3 << 20,
+    };
+    {
+        let c = Cluster::new(tiered_config(&dir, 1 << 20)); // broker default: 1 MiB segments
+        c.create_topic_with(topic, 3, overridden.clone());
+        // Only partition 0 ever gets data: recovery must still bring
+        // back all 3 partitions, from the meta, not the dir scan.
+        produce_one(&c, topic, 0, vec![7u8; 64]);
+        c.flush_storage().unwrap();
+    }
+    let c = Cluster::new(tiered_config(&dir, 1 << 20));
+    let t = c.topic(topic).expect("topic recovered under its raw name");
+    assert_eq!(t.num_partitions(), 3, "partition count from topic.meta");
+    let pm = t.partition(0).unwrap().lock().unwrap();
+    let cfg = pm.log_config();
+    assert_eq!(cfg.segment_bytes, 777, "segment override survives restart");
+    assert_eq!(cfg.retention_bytes, Some(5 << 20));
+    assert_eq!(cfg.retention_ms, None);
+    assert_eq!(cfg.cleanup_policy, CleanupPolicy::Compact);
+    assert_eq!(cfg.max_resident_bytes, 3 << 20);
+    // Storage placement is the recovering broker's, not the file's.
+    assert_eq!(cfg.storage, overridden.storage);
+    drop(pm);
+    // And the data came back with the config.
+    let recs = c.fetch(topic, 0, 0, 10, ClientLocality::InCluster).unwrap();
+    assert_eq!(recs.len(), 1);
+    assert_eq!(recs[0].record.value, vec![7u8; 64]);
+    drop(t);
+    drop(c);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn restart_survives_multiple_segments_and_partitions() {
     // Small segments + 2 partitions: recovery re-creates the topic with
     // its full partition count and every sealed file's records.

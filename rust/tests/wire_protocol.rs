@@ -425,6 +425,198 @@ fn client_surfaces_corrupt_server_responses_as_errors() {
     fake.join().unwrap();
 }
 
+// ---- soak: the event-loop core under connection pressure -------------------
+//
+// The reactor's reason to exist: hundreds of concurrent connections must
+// cost per-connection *state*, not per-connection *threads*. These tests
+// hit the server with raw sockets (bypassing the pooled client, so the
+// connection count is exact) and read the process's own footprint from
+// /proc (Linux; the footprint asserts are skipped elsewhere — the
+// functional asserts always run).
+
+/// Hand-built `FetchWait` request frame: `timeout_ms`, no group, one
+/// `(topic, partition=0, position=0)` assignment.
+fn fetch_wait_frame(corr: u64, topic: &str, timeout_ms: u64) -> Vec<u8> {
+    let mut p = Vec::new();
+    codec::put_u64(&mut p, timeout_ms);
+    codec::put_opt::<()>(&mut p, None, |_, _| {});
+    codec::put_u32(&mut p, 1);
+    codec::put_str(&mut p, topic);
+    codec::put_u32(&mut p, 0);
+    codec::put_u64(&mut p, 0);
+    codec::encode_request(corr, OpCode::FetchWait, &p)
+}
+
+#[test]
+fn soak_500_parked_longpolls_hold_a_fixed_thread_ceiling() {
+    // The acceptance bar from the reactor rewrite: thread count is
+    // O(worker pool), not O(connections). 500 parked long-polls on the
+    // old thread-per-connection server held 500 handler threads; the
+    // reactor holds them as wait-set registrations + timer entries.
+    const CONNS: usize = 500;
+    let (cluster, server, _remote) = served();
+    cluster.create_topic("t", 1);
+    let threads_before = kafka_ml::benchkit::proc_threads();
+
+    let mut socks: Vec<TcpStream> = Vec::with_capacity(CONNS);
+    for i in 0..CONNS {
+        let mut s = raw_conn(&server);
+        s.write_all(&fetch_wait_frame(i as u64, "t", 60_000)).unwrap();
+        socks.push(s);
+    }
+    // Wait until every connection is genuinely PARKED — registered on
+    // the partition's wait-set — not just written to the socket. (Each
+    // park crosses the reactor and the worker pool once.)
+    let wait_set = cluster.topic("t").unwrap().wait_set(0).unwrap().clone();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while wait_set.len() < CONNS && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(wait_set.len(), CONNS, "not all long-polls parked in time");
+
+    if let (Some(before), Some(after)) =
+        (threads_before, kafka_ml::benchkit::proc_threads())
+    {
+        let grew = after.saturating_sub(before);
+        assert!(
+            grew < 100,
+            "{CONNS} parked connections grew the thread count by {grew} \
+             (before {before}, after {after}) — that is thread-per-connection behavior"
+        );
+    }
+
+    // All 500 are genuinely live and parked: one produce must wake every
+    // one of them with a woken=true response.
+    cluster
+        .produce("t", 0, &[Record::new(vec![1])], ClientLocality::InCluster, None)
+        .unwrap();
+    for (i, s) in socks.iter_mut().enumerate() {
+        let body = codec::read_frame(s).unwrap_or_else(|e| panic!("conn {i}: {e}"));
+        let mut r = codec::Reader::new(body);
+        assert_eq!(r.u64().unwrap(), i as u64, "correlation id on conn {i}");
+        assert_eq!(r.u8().unwrap(), codec::STATUS_OK);
+        assert!(r.bool().unwrap(), "conn {i} woke without data");
+    }
+    drop(socks);
+    server.shutdown();
+}
+
+#[test]
+fn soak_torture_io_leaks_no_fds_or_threads() {
+    // Interleaved partial writes, slow readers and mid-frame
+    // disconnects across hundreds of short-lived connections, in
+    // several waves. Afterwards the process must settle back to its
+    // starting footprint: no leaked server-side fd, no stray thread,
+    // and the server still answers.
+    let (cluster, server, _remote) = served();
+    cluster.create_topic("t", 1);
+    let fds_before = kafka_ml::benchkit::proc_open_fds();
+    let threads_before = kafka_ml::benchkit::proc_threads();
+
+    let list_frame = codec::encode_request(1, OpCode::ListTopics, &[]);
+    for wave in 0..3 {
+        let mut keep: Vec<TcpStream> = Vec::new();
+        for i in 0..100usize {
+            let mut s = raw_conn(&server);
+            match (i + wave) % 4 {
+                // Dribble a valid request byte-by-byte across many
+                // writes (partial frames must accumulate server-side),
+                // then read the response slowly, two bytes at a time.
+                0 => {
+                    for chunk in list_frame.chunks(3) {
+                        s.write_all(chunk).unwrap();
+                    }
+                    let body = codec::read_frame(&mut s).unwrap();
+                    let mut r = codec::Reader::new(body);
+                    assert_eq!(r.u64().unwrap(), 1);
+                    assert_eq!(r.u8().unwrap(), codec::STATUS_OK);
+                    keep.push(s); // stays open, idle, until the wave ends
+                }
+                // Half a frame, then an abrupt disconnect.
+                1 => {
+                    s.write_all(&list_frame[..list_frame.len() / 2]).unwrap();
+                    drop(s);
+                }
+                // A parked long-poll abandoned mid-wait.
+                2 => {
+                    s.write_all(&fetch_wait_frame(9, "t", 30_000)).unwrap();
+                    drop(s);
+                }
+                // Connect and immediately hang up without a byte.
+                _ => drop(s),
+            }
+        }
+        drop(keep);
+    }
+
+    // The reactor reaps closed peers asynchronously; poll until the fd
+    // count settles instead of sleeping a fixed (flaky) amount.
+    if let (Some(before), Some(t_before)) = (fds_before, threads_before) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut fds_now = usize::MAX;
+        while Instant::now() < deadline {
+            fds_now = kafka_ml::benchkit::proc_open_fds().unwrap();
+            if fds_now <= before + 8 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        assert!(
+            fds_now <= before + 8,
+            "fd leak: {before} open fds before the soak, {fds_now} after settling"
+        );
+        let t_after = kafka_ml::benchkit::proc_threads().unwrap();
+        assert!(
+            t_after.saturating_sub(t_before) < 16,
+            "thread leak: {t_before} -> {t_after} across the soak"
+        );
+    }
+    assert_server_healthy(&server);
+    server.shutdown();
+}
+
+#[test]
+fn soak_shutdown_answers_every_parked_longpoll_within_5s() {
+    // Stopping the server must answer (or cleanly EOF) every parked
+    // long-poll immediately — one shutdown notification fans out to all
+    // of them; nothing waits out its own timeout.
+    const CONNS: usize = 100;
+    let (cluster, server, _remote) = served();
+    cluster.create_topic("t", 1);
+    let mut socks: Vec<TcpStream> = Vec::with_capacity(CONNS);
+    for i in 0..CONNS {
+        let mut s = raw_conn(&server);
+        s.write_all(&fetch_wait_frame(i as u64, "t", 120_000)).unwrap();
+        socks.push(s);
+    }
+    std::thread::sleep(Duration::from_millis(300)); // let them all park
+    let t0 = Instant::now();
+    server.shutdown();
+    for (i, s) in socks.iter_mut().enumerate() {
+        // Each parked connection gets a woken=true response (the client
+        // then re-checks and sees the broker gone); a connection caught
+        // mid-park may see a plain EOF. Both are clean; a read timeout
+        // (wedged server) is the failure.
+        match codec::read_frame(s) {
+            Ok(body) => {
+                let mut r = codec::Reader::new(body);
+                assert_eq!(r.u64().unwrap(), i as u64);
+                assert_eq!(r.u8().unwrap(), codec::STATUS_OK);
+                assert!(r.bool().unwrap());
+            }
+            Err(e) => assert!(
+                matches!(e, codec::WireError::Truncated),
+                "conn {i}: expected response or EOF, got {e}"
+            ),
+        }
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown + {CONNS} unparks took {:?}",
+        t0.elapsed()
+    );
+}
+
 #[test]
 fn server_shutdown_unblocks_parked_remote_longpoll() {
     let (cluster, server, remote) = served();

@@ -1,0 +1,232 @@
+//! Hermetic stand-in for the `libc` crate.
+//!
+//! The offline build environment carries no crates.io registry, so this
+//! path dependency declares exactly the raw FFI surface the broker's
+//! event-loop network core (`broker/wire/reactor.rs`) needs and nothing
+//! more:
+//!
+//! * `epoll_create1` / `epoll_ctl` / `epoll_wait` + `eventfd` — the
+//!   Linux readiness engine and its cross-thread wakeup primitive;
+//! * `fcntl(F_SETFL, O_NONBLOCK)` — nonblocking sockets;
+//! * `writev` — vectored writes (header + zero-copy payload slices);
+//! * `poll` + `pipe` — the portable POSIX fallback used on non-Linux
+//!   Unixes (self-pipe instead of eventfd, `poll(2)` instead of epoll).
+//!
+//! Declarations are call-for-call compatible with the real `libc`
+//! crate's for this subset — swapping back is a one-line Cargo.toml
+//! change. Types and constants are defined per-target exactly as the
+//! platform ABI requires (notably `epoll_event` is packed on x86-64
+//! Linux and `O_NONBLOCK` differs between Linux and the BSDs).
+//!
+//! Errors are read the std way: every wrapper-level caller uses
+//! `std::io::Error::last_os_error()` right after a failing call, so no
+//! `errno` accessor needs declaring here.
+
+#![allow(non_camel_case_types)]
+
+pub use std::os::raw::{c_char, c_int, c_short, c_uint, c_ulong, c_void};
+
+pub type size_t = usize;
+pub type ssize_t = isize;
+
+#[cfg(target_os = "linux")]
+pub type nfds_t = c_ulong;
+#[cfg(not(target_os = "linux"))]
+pub type nfds_t = c_uint;
+
+// ---- fcntl ---------------------------------------------------------------
+
+pub const F_GETFL: c_int = 3;
+pub const F_SETFL: c_int = 4;
+
+#[cfg(target_os = "linux")]
+pub const O_NONBLOCK: c_int = 0o4000;
+#[cfg(not(target_os = "linux"))]
+pub const O_NONBLOCK: c_int = 0x0004;
+
+// ---- poll (portable readiness fallback) ----------------------------------
+
+pub const POLLIN: c_short = 0x001;
+pub const POLLOUT: c_short = 0x004;
+pub const POLLERR: c_short = 0x008;
+pub const POLLHUP: c_short = 0x010;
+
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct pollfd {
+    pub fd: c_int,
+    pub events: c_short,
+    pub revents: c_short,
+}
+
+// ---- writev --------------------------------------------------------------
+
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct iovec {
+    pub iov_base: *mut c_void,
+    pub iov_len: size_t,
+}
+
+// ---- epoll + eventfd (Linux) ---------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use super::c_int;
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    pub const EFD_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_NONBLOCK: c_int = 0o4000;
+
+    /// The kernel ABI packs this struct on x86-64 (12 bytes); other
+    /// architectures use natural alignment (16 bytes).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Debug, Clone, Copy)]
+    pub struct epoll_event {
+        pub events: u32,
+        pub u64: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(
+            epfd: c_int,
+            op: c_int,
+            fd: c_int,
+            event: *mut epoll_event,
+        ) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut epoll_event,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: super::c_uint, flags: c_int) -> c_int;
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub use linux::*;
+
+// ---- POSIX-universal calls -----------------------------------------------
+
+extern "C" {
+    pub fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+    pub fn read(fd: c_int, buf: *mut c_void, count: size_t) -> ssize_t;
+    pub fn write(fd: c_int, buf: *const c_void, count: size_t) -> ssize_t;
+    pub fn writev(fd: c_int, iov: *const iovec, iovcnt: c_int) -> ssize_t;
+    pub fn close(fd: c_int) -> c_int;
+    pub fn pipe(fds: *mut c_int) -> c_int;
+    pub fn poll(fds: *mut pollfd, nfds: nfds_t, timeout: c_int) -> c_int;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A self-pipe round trip exercises pipe/fcntl/write/read/close —
+    /// the portable half of the surface.
+    #[test]
+    fn pipe_nonblock_roundtrip() {
+        unsafe {
+            let mut fds = [-1 as c_int; 2];
+            assert_eq!(pipe(fds.as_mut_ptr()), 0);
+            let (r, w) = (fds[0], fds[1]);
+            let flags = fcntl(r, F_GETFL);
+            assert!(flags >= 0);
+            assert_eq!(fcntl(r, F_SETFL, flags | O_NONBLOCK), 0);
+            // Empty nonblocking pipe: read must not park this thread.
+            let mut byte = 0u8;
+            let n = read(r, &mut byte as *mut u8 as *mut c_void, 1);
+            assert_eq!(n, -1);
+            assert_eq!(
+                std::io::Error::last_os_error().kind(),
+                std::io::ErrorKind::WouldBlock
+            );
+            assert_eq!(write(w, b"x".as_ptr() as *const c_void, 1), 1);
+            assert_eq!(read(r, &mut byte as *mut u8 as *mut c_void, 1), 1);
+            assert_eq!(byte, b'x');
+            assert_eq!(close(r), 0);
+            assert_eq!(close(w), 0);
+        }
+    }
+
+    #[test]
+    fn writev_gathers_slices() {
+        unsafe {
+            let mut fds = [-1 as c_int; 2];
+            assert_eq!(pipe(fds.as_mut_ptr()), 0);
+            let (r, w) = (fds[0], fds[1]);
+            let (a, b) = (b"hello ".to_vec(), b"world".to_vec());
+            let iov = [
+                iovec { iov_base: a.as_ptr() as *mut c_void, iov_len: a.len() },
+                iovec { iov_base: b.as_ptr() as *mut c_void, iov_len: b.len() },
+            ];
+            assert_eq!(writev(w, iov.as_ptr(), 2), 11);
+            let mut buf = [0u8; 16];
+            assert_eq!(read(r, buf.as_mut_ptr() as *mut c_void, 16), 11);
+            assert_eq!(&buf[..11], b"hello world");
+            close(r);
+            close(w);
+        }
+    }
+
+    #[test]
+    fn poll_reports_readiness() {
+        unsafe {
+            let mut fds = [-1 as c_int; 2];
+            assert_eq!(pipe(fds.as_mut_ptr()), 0);
+            let (r, w) = (fds[0], fds[1]);
+            let mut pfd = [pollfd { fd: r, events: POLLIN, revents: 0 }];
+            // Nothing written yet: a zero-timeout poll reports quiet.
+            assert_eq!(poll(pfd.as_mut_ptr(), 1, 0), 0);
+            assert_eq!(write(w, b"x".as_ptr() as *const c_void, 1), 1);
+            assert_eq!(poll(pfd.as_mut_ptr(), 1, 1000), 1);
+            assert_ne!(pfd[0].revents & POLLIN, 0);
+            close(r);
+            close(w);
+        }
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_eventfd_roundtrip() {
+        unsafe {
+            let ep = epoll_create1(EPOLL_CLOEXEC);
+            assert!(ep >= 0);
+            let ev = eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK);
+            assert!(ev >= 0);
+            let mut reg = epoll_event { events: EPOLLIN, u64: 42 };
+            assert_eq!(epoll_ctl(ep, EPOLL_CTL_ADD, ev, &mut reg), 0);
+            // Quiet eventfd: zero-timeout wait returns no events.
+            let mut out = [epoll_event { events: 0, u64: 0 }; 4];
+            assert_eq!(epoll_wait(ep, out.as_mut_ptr(), 4, 0), 0);
+            // A counter bump makes it readable, tagged with our token.
+            let one = 1u64.to_ne_bytes();
+            assert_eq!(write(ev, one.as_ptr() as *const c_void, 8), 8);
+            let n = epoll_wait(ep, out.as_mut_ptr(), 4, 1000);
+            assert_eq!(n, 1);
+            assert_eq!({ out[0].u64 }, 42);
+            assert_ne!({ out[0].events } & EPOLLIN, 0);
+            // Draining resets it to quiet.
+            let mut buf = [0u8; 8];
+            assert_eq!(read(ev, buf.as_mut_ptr() as *mut c_void, 8), 8);
+            assert_eq!(u64::from_ne_bytes(buf), 1);
+            assert_eq!(epoll_wait(ep, out.as_mut_ptr(), 4, 0), 0);
+            close(ev);
+            close(ep);
+        }
+    }
+}
