@@ -328,9 +328,22 @@ fn main() -> anyhow::Result<()> {
         fill(&c)?;
         c.flush_storage()?;
     }
-    let c = Cluster::new(tiered);
-    let cold_wall = consume_once(&c); // loads every sealed file
+    let c = Cluster::new(tiered.clone());
+    let cold_wall = consume_once(&c); // maps every sealed file
     let warm_wall = consume_once(&c); // served from resident buffers
+    drop(c);
+    // Cold time-to-first-record: another fresh restart, one poll(1) —
+    // the latency a lagging consumer pays before its first sealed byte.
+    // With mmap residency this is one mmap(2) + page fault, not a full
+    // segment read into a fresh allocation.
+    let c = Cluster::new(tiered);
+    let mut cons = Consumer::new(c.clone(), ClientLocality::InCluster);
+    cons.assign(vec![("ts".to_string(), 0)]);
+    let t0 = Instant::now();
+    let first = cons.poll(1)?;
+    let first_record_us = t0.elapsed().as_secs_f64() * 1e6;
+    assert_eq!(first.len(), 1);
+    drop(cons);
     drop(c);
     let _ = std::fs::remove_dir_all(&data_dir);
 
@@ -349,12 +362,19 @@ fn main() -> anyhow::Result<()> {
         ]);
         report.entry(
             "tiered_fetch",
-            // mode: 0 = in-memory, 1 = sealed cold, 2 = sealed warm
+            // mode: 0 = in-memory, 1 = sealed cold, 2 = sealed warm,
+            // 3 = cold time-to-first-record (see below)
             &[("mode", mode), ("payload_bytes", 1024.0)],
             &[("records_per_s", rps), ("wall_s", wall.as_secs_f64())],
         );
     }
     t.print();
+    println!("  cold time-to-first-record: {first_record_us:.1} µs");
+    report.entry(
+        "tiered_fetch",
+        &[("mode", 3.0), ("payload_bytes", 1024.0)],
+        &[("first_record_us", first_record_us)],
+    );
 
     // ---- remote vs in-process transport ---------------------------------------
     // The cost of the real wire: one single-record produce + one fetch
@@ -421,11 +441,14 @@ fn main() -> anyhow::Result<()> {
     // ---- native training-step latency -----------------------------------------
     // The pure-Rust backend is the engine every artifact-less training
     // Job runs on, so its per-step latency is a platform number worth
-    // tracking: one dense forward + softmax-CE backward + Adam update
-    // on the default spec (8 → 16 → 4 MLP, batch 10).
+    // tracking: one dense forward + softmax-CE backward + Adam update.
+    // Two shapes: the default spec (8 → 16 → 4, batch 10), where the
+    // scratch arena's zero-allocation steady state is the lever, and a
+    // wider one (64 → 128 → 10, batch 32) where the cache-blocked
+    // kernels themselves carry the win.
     let mut t = Table::new(
-        "Native backend train_step (8→16→4 MLP, batch 10, 2000 steps)",
-        &["backend", "steps/s", "µs/step", "final loss"],
+        "Native backend train_step (2000 steps)",
+        &["config", "steps/s", "µs/step", "final loss"],
     );
     {
         use kafka_ml::runtime::{BackendSelect, Engine};
@@ -452,7 +475,50 @@ fn main() -> anyhow::Result<()> {
         let sps = steps as f64 / wall.as_secs_f64();
         let us = wall.as_secs_f64() * 1e6 / steps as f64;
         t.row(&[
-            engine.backend_name().to_string(),
+            format!("8→16→4 b10 ({})", engine.backend_name()),
+            format!("{sps:.0}"),
+            format!("{us:.2}"),
+            format!("{loss:.5}"),
+        ]);
+        report.entry(
+            "native_train_step",
+            &[
+                ("batch", meta.batch as f64),
+                ("weights", meta.total_weights() as f64),
+            ],
+            &[("steps_per_s", sps), ("us_per_step", us)],
+        );
+    }
+    {
+        use kafka_ml::runtime::native::NativeBackend;
+        use kafka_ml::runtime::{ArtifactMeta, Backend, TrainState};
+        let meta =
+            ArtifactMeta::synthesize(std::path::PathBuf::new(), 64, &[128], 10, 32, 0.01, 5);
+        let backend = NativeBackend::new(&meta)?;
+        let ds = kafka_ml::ml::separable_dataset(meta.batch, meta.input_dim, meta.classes, 13);
+        let mut x = Vec::with_capacity(meta.batch * meta.input_dim);
+        let mut y = Vec::with_capacity(meta.batch);
+        for s in &ds.samples {
+            x.extend_from_slice(&s.features);
+            y.push(s.label.unwrap());
+        }
+        let mut state = TrainState::new(backend.init_params()?);
+        for _ in 0..100 {
+            state.t += 1;
+            backend.train_step(&mut state, &x, &y)?;
+        }
+        let steps = 2000usize;
+        let t0 = Instant::now();
+        let mut loss = 0f32;
+        for _ in 0..steps {
+            state.t += 1;
+            loss = backend.train_step(&mut state, &x, &y)?.0;
+        }
+        let wall = t0.elapsed();
+        let sps = steps as f64 / wall.as_secs_f64();
+        let us = wall.as_secs_f64() * 1e6 / steps as f64;
+        t.row(&[
+            "64→128→10 b32 (native)".to_string(),
             format!("{sps:.0}"),
             format!("{us:.2}"),
             format!("{loss:.5}"),

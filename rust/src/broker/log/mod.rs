@@ -21,11 +21,20 @@
 //!   atomically (tmp + rename + fsync) as
 //!   `data_dir/<topic>/<partition>/<base-offset>.seg`. Only the index
 //!   (offset → frame position) stays in memory.
-//! * **Resident buffers** — reading a sealed segment loads its file
-//!   once into a single shared [`Bytes`] allocation; every record is an
-//!   O(1) slice view of it (`Bytes::ptr_eq` observable). An LRU bounded
-//!   by `max_resident_bytes` caps how many sealed buffers stay loaded,
-//!   so broker memory is bounded by config, not by retention.
+//! * **Resident buffers** — reading a sealed segment makes its
+//!   validated prefix *resident*: one shared [`Bytes`] allocation from
+//!   which every record is an O(1) slice view (`Bytes::ptr_eq`
+//!   observable). On Linux residency is a read-only `mmap(2)` of the
+//!   segment file — becoming resident copies nothing; pages fault in
+//!   from the page cache as frames are decoded — with a plain-read
+//!   fallback off Linux or under `KAFKA_ML_NO_MMAP=1`. An LRU bounded
+//!   by `max_resident_bytes` caps how much stays resident, charging
+//!   each buffer's full backing length (mapped region or heap vector);
+//!   eviction hints the kernel with `madvise(DONTNEED)` and drops the
+//!   broker's handle, so the address space unmaps as soon as the last
+//!   consumer slice drops. Residency therefore moves through three
+//!   tiers: in-memory (active) → mapped (sealed, resident) → evicted
+//!   (sealed, index only).
 //!
 //! In `StorageMode::InMemory` (the default; tests and benches) closed
 //! segments simply stay in memory — exactly the pre-tiered behaviour.
@@ -567,43 +576,41 @@ impl SegmentedLog {
 
     /// Load (or touch) the resident buffer of the sealed segment at
     /// `idx`. Returns None for in-memory segments and on IO errors.
+    ///
+    /// A cold load maps exactly the validated prefix (`file_len`), so
+    /// bytes past it — e.g. a torn tail whose truncation failed on open
+    /// — are never part of the view, and a file that shrank below the
+    /// prefix (impossible without external tampering: sealed files are
+    /// immutable in place) is refused inside `load_resident`.
     fn ensure_resident(&mut self, idx: usize) -> Option<Bytes> {
-        let (base, path, file_len, cached) = match &self.segments[idx] {
-            Segment::Sealed(s) => (s.base, s.path.clone(), s.file_len(), s.resident.clone()),
+        let (base, cached) = match &self.segments[idx] {
+            Segment::Sealed(s) => (s.base, s.resident.clone()),
             Segment::Mem(_) => return None,
         };
         if let Some(buf) = cached {
             self.touch_resident(base);
             return Some(buf);
         }
-        let data = match std::fs::read(&path) {
-            Ok(d) => d,
-            Err(e) => {
-                log::error!("loading sealed segment {}: {e}", path.display());
-                return None;
-            }
+        let buf = match &self.segments[idx] {
+            Segment::Sealed(s) => match s.load_resident() {
+                Ok(b) => b,
+                Err(e) => {
+                    log::error!("{e:#}");
+                    return None;
+                }
+            },
+            Segment::Mem(_) => unreachable!("checked sealed above"),
         };
-        if (data.len() as u64) < file_len {
-            log::error!(
-                "sealed segment {} shrank below its validated prefix ({} < {file_len})",
-                path.display(),
-                data.len()
-            );
-            return None;
-        }
-        let mut buf = Bytes::from_vec(data);
-        if buf.len() as u64 > file_len {
-            // Ignore bytes past the validated prefix (e.g. a torn tail
-            // whose truncation failed on open).
-            buf = buf.slice(..file_len as usize);
-        }
         self.admit_resident(idx, buf.clone());
         Some(buf)
     }
 
     /// Account a freshly loaded buffer and evict down to the budget.
+    /// The charge is the buffer's full *backing* length — what the
+    /// mapping (or heap vector) actually pins — not the window length,
+    /// so a sliced admit cannot under-count against the budget.
     fn admit_resident(&mut self, idx: usize, buf: Bytes) {
-        let len = buf.len();
+        let len = buf.backing_len();
         let base = match &mut self.segments[idx] {
             Segment::Sealed(s) => {
                 debug_assert!(s.resident.is_none(), "double admit");
@@ -627,7 +634,11 @@ impl SegmentedLog {
     /// Drop least-recently-used buffers until under budget, always
     /// keeping `keep` (the buffer a read is about to use). Outstanding
     /// consumer handles on an evicted buffer stay valid — eviction only
-    /// drops the broker's reference.
+    /// drops the broker's reference. For a mapped buffer the demote is
+    /// `madvise(DONTNEED)` (physical pages released immediately, even
+    /// while consumer slices are still live — they re-fault from the
+    /// immutable file) and the address range itself unmaps when the
+    /// last handle drops.
     fn evict_residents(&mut self, keep: u64) {
         let budget = self.config.max_resident_bytes;
         while self.resident_bytes > budget && self.resident_order.len() > 1 {
@@ -646,7 +657,10 @@ impl SegmentedLog {
                     Segment::Sealed(s) if s.base == victim => s.resident.take(),
                     _ => None,
                 })
-                .map(|b| b.len())
+                .map(|b| {
+                    b.advise_dont_need();
+                    b.backing_len()
+                })
                 .unwrap_or(0);
             self.resident_bytes = self.resident_bytes.saturating_sub(freed);
         }
@@ -655,7 +669,7 @@ impl SegmentedLog {
     /// Forget residency accounting for a segment about to be removed.
     fn forget_resident(&mut self, base: u64, resident: &Option<Bytes>) {
         if let Some(buf) = resident {
-            self.resident_bytes = self.resident_bytes.saturating_sub(buf.len());
+            self.resident_bytes = self.resident_bytes.saturating_sub(buf.backing_len());
             self.resident_order.retain(|&b| b != base);
         }
     }
@@ -1236,6 +1250,73 @@ mod tests {
             assert_eq!(r.value, vec![i as u8; 10]);
         }
         assert!(log.resident_count() <= 1, "{}", log.resident_count());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Per sealed segment: (base, resident?, mapped?, backing bytes).
+    fn sealed_residency(log: &SegmentedLog) -> Vec<(u64, bool, bool, usize)> {
+        log.segments
+            .iter()
+            .filter_map(|s| match s {
+                Segment::Sealed(seg) => Some((
+                    seg.base,
+                    seg.resident.is_some(),
+                    seg.resident.as_ref().map(Bytes::is_mapped).unwrap_or(false),
+                    seg.resident.as_ref().map(Bytes::backing_len).unwrap_or(0),
+                )),
+                Segment::Mem(_) => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tiered_eviction_drops_residency_and_accounts_backing_length() {
+        let dir = data_dir("evict-unmap");
+        // 1-byte budget: every admit evicts down to a single survivor.
+        let config = tiered(
+            LogConfig {
+                segment_bytes: 64,
+                retention_ms: None,
+                max_resident_bytes: 1,
+                ..LogConfig::default()
+            },
+            &dir,
+        );
+        let (mut log, _) = log_with(config);
+        for i in 0..30u8 {
+            log.append(rec(i));
+        }
+        assert!(log.sealed_count() > 3);
+        let first: Vec<(u64, Vec<u8>)> = log
+            .read(0, 100)
+            .into_iter()
+            .map(|(o, r)| (o, r.value.to_vec()))
+            .collect();
+        assert_eq!(first.len(), 30);
+        // Eviction really dropped the victims' residency (the broker
+        // handle is gone — for a mapped buffer that is the unmap), and
+        // the LRU bookkeeping agrees with the per-segment state.
+        let state = sealed_residency(&log);
+        let survivors: Vec<_> = state.iter().filter(|(_, res, _, _)| *res).collect();
+        assert!(survivors.len() <= 1, "{state:?}");
+        assert_eq!(log.resident_count(), survivors.len());
+        // Accounting charges exactly the survivors' backing length.
+        let charged: usize = state.iter().map(|(_, _, _, n)| n).sum();
+        assert_eq!(log.resident_bytes(), charged);
+        // Residency is the mapped tier wherever mmap is available.
+        let expect_mapped = cfg!(target_os = "linux") && !crate::util::bytes::mmap_disabled();
+        for (base, res, mapped, _) in &state {
+            if *res {
+                assert_eq!(*mapped, expect_mapped, "segment {base}");
+            }
+        }
+        // Evicted segments re-load on the next read, byte-identically.
+        let second: Vec<(u64, Vec<u8>)> = log
+            .read(0, 100)
+            .into_iter()
+            .map(|(o, r)| (o, r.value.to_vec()))
+            .collect();
+        assert_eq!(first, second);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

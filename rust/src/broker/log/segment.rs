@@ -5,12 +5,27 @@
 //!
 //! A sealed segment keeps only its *index* in memory — offsets and
 //! frame positions, a few bytes per record — while the payload bytes
-//! live in the segment file. Reads go through a resident buffer: the
-//! whole file is loaded once into a single shared [`Bytes`] allocation
-//! and every record decoded from it is an O(1) slice view, so the
-//! zero-copy discipline of the hot path survives the disk tier. The
-//! owning [`super::SegmentedLog`] decides when buffers are loaded and
-//! evicted (LRU, bounded by `LogConfig::max_resident_bytes`).
+//! live in the segment file. Reads go through a resident buffer: one
+//! shared [`Bytes`] allocation covering the validated prefix, from
+//! which every decoded record is an O(1) slice view, so the zero-copy
+//! discipline of the hot path survives the disk tier. On Linux the
+//! resident buffer is a read-only `mmap(2)` of the segment file
+//! ([`SealedSegment::load_resident`]): becoming resident costs no copy
+//! at all — pages fault in from the page cache as frames are actually
+//! decoded — and eviction is `madvise(DONTNEED)` + drop rather than
+//! freeing a heap copy. Off Linux (or under `KAFKA_ML_NO_MMAP=1`) the
+//! buffer degrades to a plain read with identical observable behavior.
+//! The owning [`super::SegmentedLog`] decides when buffers are loaded
+//! and evicted (LRU, bounded by `LogConfig::max_resident_bytes`).
+//!
+//! The mapping is sound because sealed files are immutable in place:
+//! retention *unlinks* (the inode outlives any live mapping) and
+//! compaction *renames a fresh file over the name* — nothing ever
+//! truncates or rewrites a sealed file while it can be mapped, so a
+//! mapped view can neither change under a reader nor SIGBUS. The one
+//! writer of sealed files, [`SealedSegment::recover`], runs before the
+//! segment is readable (boot) and deliberately uses `fs::read` — its
+//! scan touches every byte anyway, and it may truncate the torn tail.
 //!
 //! File writes are atomic (tmp + rename, the `registry/store.rs`
 //! discipline) and synced before the rename, so a crash leaves either
@@ -222,6 +237,26 @@ impl SealedSegment {
         Ok(Some(RecoveredSegment { segment, torn }))
     }
 
+    /// Load this segment's validated prefix as a resident buffer: a
+    /// page-cache-backed mapping on Linux (first access faults in only
+    /// the pages actually decoded — no up-front copy of the file), a
+    /// plain read elsewhere or under `KAFKA_ML_NO_MMAP=1`.
+    ///
+    /// Errors if the file shrank below the validated prefix — sealed
+    /// files are immutable, so that can only mean external tampering.
+    pub fn load_resident(&self) -> Result<Bytes> {
+        self.load_resident_with(!crate::util::bytes::mmap_disabled())
+    }
+
+    /// [`SealedSegment::load_resident`] with the mmap-vs-read choice
+    /// made explicit (fallback parity tests).
+    pub fn load_resident_with(&self, allow_mmap: bool) -> Result<Bytes> {
+        Bytes::map_file_with(&self.path, self.file_len, allow_mmap)
+            .with_context(|| {
+                format!("loading sealed segment {}", self.path.display())
+            })
+    }
+
     /// Append records at/past `from` to `out`, up to `max` total,
     /// decoding from the resident buffer `buf`. Each record is a slice
     /// view of `buf` — zero copies.
@@ -353,6 +388,29 @@ mod tests {
         let after = fs::read(&seg.path).unwrap();
         assert_eq!(after.len() as u64, back.segment.file_len());
         assert!(after.len() < full.len());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resident_load_mapped_and_read_are_byte_identical() {
+        let dir = tmp_dir("resident");
+        let (seg, sealed_buf) = SealedSegment::write(&dir, 0, &recs(8)).unwrap();
+        let mapped = seg.load_resident_with(true).unwrap();
+        let heap = seg.load_resident_with(false).unwrap();
+        assert_eq!(mapped, heap);
+        assert_eq!(mapped, sealed_buf);
+        assert_eq!(mapped.is_mapped(), cfg!(target_os = "linux"));
+        assert!(!heap.is_mapped());
+        assert_eq!(mapped.backing_len() as u64, seg.file_len());
+        // Records decode as zero-copy slices of whichever tier served.
+        for buf in [&mapped, &heap] {
+            let mut out = Vec::new();
+            seg.read_into(buf, 0, 100, &mut out);
+            assert_eq!(out.len(), 8);
+            for (_, r) in &out {
+                assert!(Bytes::ptr_eq(&r.value, buf));
+            }
+        }
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -8,11 +8,125 @@
 //! `&[f32]` views the zero-copy record decoders hand the coordinator —
 //! no tensor type, no reshapes, no copies beyond the activations
 //! themselves.
+//!
+//! # Kernel scheme
+//!
+//! The hot loops are cache-blocked, 4-wide-unrolled f32 micro-kernels
+//! over a caller-owned scratch arena ([`MlpScratch`]):
+//!
+//! * **forward** (`z = a·W + b`, fused bias + ReLU epilogue) — the
+//!   output dimension is tiled ([`J_TILE`] floats ≈ 1 KiB) so one
+//!   `z`-row tile stays register/L1-hot while the reduction streams;
+//!   the reduction is unrolled 4-wide, so four weight rows share each
+//!   `z[j]` load;
+//! * **backward `dW += aᵀ·dz`** — same tiling, four `dW` rows updated
+//!   per load of the `dz` tile;
+//! * **backward `da = dz·Wᵀ`** — runs over a transposed-weight tile
+//!   (`wt`, rebuilt per layer in scratch) so every `dz[j]` scales one
+//!   *contiguous* `wt` row instead of striding through `W`, unrolled
+//!   4-wide over `j`;
+//! * **zero steady-state allocation** — all intermediates (activations,
+//!   `dz`/`da`, `wt`, gradients) live in the arena and are reused
+//!   across steps; a debug assertion fires if a warm step ever grows a
+//!   buffer.
+//!
+//! Bit-stability contract: per-element accumulation order depends only
+//! on the layer dimensions — never on the batch size or tile split — so
+//! batched and single-row runs agree bit-for-bit and repeated runs are
+//! deterministic (the pins in `tests/native_engine.rs`).
 
 use crate::runtime::meta::ArtifactMeta;
 use crate::runtime::params::{ModelParams, ParamTensor};
 use crate::util::Rng;
 use anyhow::{bail, Result};
+
+/// Output-dimension tile width (floats) for the blocked kernels: 256
+/// f32 = 1 KiB per weight-row strip, so a `z` tile plus four weight
+/// strips sit comfortably in L1.
+const J_TILE: usize = 256;
+
+/// Reusable buffers for the forward/backward hot path. One arena per
+/// training/eval loop (the native backend owns one behind a lock);
+/// buffers grow to the high-water mark of the shapes seen, then every
+/// later step runs with zero heap allocation.
+#[derive(Debug, Default)]
+pub struct MlpScratch {
+    /// Post-activations `[a_0 = x, a_1, …, logits]` — `L+1` buffers.
+    acts: Vec<Vec<f32>>,
+    /// Upstream gradient of the layer currently being walked.
+    dz: Vec<f32>,
+    /// Downstream gradient under construction (swapped into `dz`).
+    da: Vec<f32>,
+    /// Transposed-weight tile (`fan_out × fan_in`) for the `dz·Wᵀ` pass.
+    wt: Vec<f32>,
+    /// Parameter gradients in artifact order `[dw1, db1, dw2, db2, …]`.
+    grads: Vec<Vec<f32>>,
+    /// Did the most recent kernel call grow any buffer?
+    grew: bool,
+    /// Batch size the forward-only buffers are warmed for.
+    fwd_rows: Option<usize>,
+    /// Batch size the full backward path is warmed for.
+    bwd_rows: Option<usize>,
+}
+
+impl MlpScratch {
+    pub fn new() -> MlpScratch {
+        MlpScratch::default()
+    }
+
+    /// True when the most recent kernel call had to grow a buffer —
+    /// steady-state steps must keep this `false` (asserted in debug
+    /// builds, observable here for tests).
+    pub fn grew(&self) -> bool {
+        self.grew
+    }
+
+    /// Gradients produced by the last [`NativeMlp::loss_grad_with`]
+    /// call, in artifact order, shapes matching the model's tensors.
+    pub fn grads(&self) -> &[Vec<f32>] {
+        &self.grads
+    }
+
+    fn note_fwd(&mut self, rows: usize, warm: bool, grew: bool) {
+        self.grew = grew;
+        debug_assert!(
+            !(warm && grew),
+            "native forward kernel allocated on a warm scratch (rows={rows})"
+        );
+        self.fwd_rows = Some(rows);
+    }
+
+    fn note_bwd(&mut self, rows: usize, warm: bool, grew: bool) {
+        self.grew = grew;
+        debug_assert!(
+            !(warm && grew),
+            "native backward kernel allocated on a warm scratch (rows={rows})"
+        );
+        self.bwd_rows = Some(rows);
+        self.fwd_rows = Some(rows);
+    }
+}
+
+/// Resize `v` to exactly `len`, recording whether that forced an
+/// allocation. Callers fully overwrite (or zero) the buffer afterwards.
+fn ensure_len(v: &mut Vec<f32>, len: usize, grew: &mut bool) {
+    if v.capacity() < len {
+        *grew = true;
+    }
+    v.resize(len, 0.0);
+}
+
+/// Guarantee capacity for `cap` elements without touching the length,
+/// recording whether that forced an allocation. Used to pre-size the
+/// `dz`/`da` pair: the two trade buffers via `swap` every layer, so
+/// sizing them individually would leave the pair asymmetric after a
+/// cold call and the *second* call would still have to allocate.
+fn ensure_cap(v: &mut Vec<f32>, cap: usize, grew: &mut bool) {
+    if v.capacity() < cap {
+        *grew = true;
+        v.reserve_exact(cap - v.len());
+    }
+}
 
 /// Architecture view the math runs over: `(fan_in, fan_out)` per layer,
 /// hidden layers ReLU, output layer linear.
@@ -91,45 +205,42 @@ impl NativeMlp {
         ModelParams { tensors }
     }
 
-    /// Forward pass keeping every post-activation (needed by backward):
-    /// returns `[a_0 = x, a_1, …, a_{L-1}, logits]` — `L+1` buffers.
-    fn forward_all(&self, params: &ModelParams, x: &[f32], rows: usize) -> Vec<Vec<f32>> {
+    /// Forward pass into the scratch arena, keeping every
+    /// post-activation (needed by backward): fills `acts` with
+    /// `[a_0 = x, a_1, …, a_{L-1}, logits]` — `L+1` buffers.
+    fn forward_into(
+        &self,
+        params: &ModelParams,
+        x: &[f32],
+        rows: usize,
+        acts: &mut Vec<Vec<f32>>,
+        grew: &mut bool,
+    ) {
         let n_layers = self.layers.len();
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers + 1);
-        acts.push(x.to_vec());
+        if acts.len() != n_layers + 1 {
+            *grew = true;
+            acts.clear();
+            acts.resize_with(n_layers + 1, Vec::new);
+        }
+        ensure_len(&mut acts[0], x.len(), grew);
+        acts[0].copy_from_slice(x);
         for (li, &(fan_in, fan_out)) in self.layers.iter().enumerate() {
             let w = &params.tensors[2 * li].data;
             let b = &params.tensors[2 * li + 1].data;
-            let a = &acts[li];
-            let mut z = vec![0f32; rows * fan_out];
-            for r in 0..rows {
-                let zr = &mut z[r * fan_out..(r + 1) * fan_out];
-                zr.copy_from_slice(b);
-                let ar = &a[r * fan_in..(r + 1) * fan_in];
-                for (k, &av) in ar.iter().enumerate() {
-                    if av != 0.0 {
-                        let wk = &w[k * fan_out..(k + 1) * fan_out];
-                        for (zv, &wv) in zr.iter_mut().zip(wk) {
-                            *zv += av * wv;
-                        }
-                    }
-                }
-            }
-            if li < n_layers - 1 {
-                for zv in z.iter_mut() {
-                    if *zv < 0.0 {
-                        *zv = 0.0;
-                    }
-                }
-            }
-            acts.push(z);
+            let (head, tail) = acts.split_at_mut(li + 1);
+            let a = head[li].as_slice();
+            let z = &mut tail[0];
+            ensure_len(z, rows * fan_out, grew);
+            let relu = li < n_layers - 1;
+            dense_forward(a, w, b, z, rows, fan_in, fan_out, relu);
         }
-        acts
     }
 
     /// Logits for `rows` samples (`rows × classes`, row-major).
     pub fn logits(&self, params: &ModelParams, x: &[f32], rows: usize) -> Vec<f32> {
-        self.forward_all(params, x, rows).pop().unwrap()
+        let mut s = MlpScratch::default();
+        self.forward_into(params, x, rows, &mut s.acts, &mut s.grew);
+        s.acts.pop().unwrap()
     }
 
     /// Class probabilities (numerically stable row-wise softmax).
@@ -141,15 +252,55 @@ impl NativeMlp {
         logits
     }
 
+    /// [`NativeMlp::probs`] over caller-owned scratch: only the
+    /// returned vector is allocated once the scratch is warm.
+    pub fn probs_with(
+        &self,
+        params: &ModelParams,
+        x: &[f32],
+        rows: usize,
+        s: &mut MlpScratch,
+    ) -> Vec<f32> {
+        let warm = s.fwd_rows == Some(rows);
+        let mut grew = false;
+        self.forward_into(params, x, rows, &mut s.acts, &mut grew);
+        s.note_fwd(rows, warm, grew);
+        let mut out = s.acts[self.layers.len()].clone();
+        for row in out.chunks_mut(self.classes) {
+            softmax_row(row);
+        }
+        out
+    }
+
     /// Mean NLL + accuracy over one batch of `rows` labeled samples.
     pub fn loss_acc(&self, params: &ModelParams, x: &[f32], y: &[i32], rows: usize) -> (f32, f32) {
-        let logits = self.logits(params, x, rows);
-        loss_acc_of_logits(&logits, y, rows, self.classes)
+        let mut s = MlpScratch::default();
+        self.loss_acc_with(params, x, y, rows, &mut s)
+    }
+
+    /// [`NativeMlp::loss_acc`] over caller-owned scratch (zero heap
+    /// allocation once warm).
+    pub fn loss_acc_with(
+        &self,
+        params: &ModelParams,
+        x: &[f32],
+        y: &[i32],
+        rows: usize,
+        s: &mut MlpScratch,
+    ) -> (f32, f32) {
+        let warm = s.fwd_rows == Some(rows);
+        let mut grew = false;
+        self.forward_into(params, x, rows, &mut s.acts, &mut grew);
+        s.note_fwd(rows, warm, grew);
+        loss_acc_of_logits(&s.acts[self.layers.len()], y, rows, self.classes)
     }
 
     /// Loss, accuracy and the full parameter gradient (softmax-CE
     /// backward pass). Gradients come back flat, in artifact order
     /// `[dw1, db1, dw2, db2, …]`, shapes matching `params`.
+    ///
+    /// Convenience wrapper allocating its own scratch; loops should use
+    /// [`NativeMlp::loss_grad_with`] and read `scratch.grads()` instead.
     pub fn loss_grad(
         &self,
         params: &ModelParams,
@@ -157,14 +308,41 @@ impl NativeMlp {
         y: &[i32],
         rows: usize,
     ) -> (f32, f32, Vec<Vec<f32>>) {
+        let mut s = MlpScratch::default();
+        let (loss, acc) = self.loss_grad_with(params, x, y, rows, &mut s);
+        (loss, acc, std::mem::take(&mut s.grads))
+    }
+
+    /// The backward hot path over caller-owned scratch: loss/accuracy
+    /// return by value, gradients land in `scratch.grads()`. Zero heap
+    /// allocation once the scratch is warm for this batch shape (debug
+    /// builds assert it).
+    pub fn loss_grad_with(
+        &self,
+        params: &ModelParams,
+        x: &[f32],
+        y: &[i32],
+        rows: usize,
+        s: &mut MlpScratch,
+    ) -> (f32, f32) {
+        let warm = s.bwd_rows == Some(rows);
+        let mut grew = false;
         let n_layers = self.layers.len();
-        let acts = self.forward_all(params, x, rows);
-        let logits = &acts[n_layers];
-        let (loss, acc) = loss_acc_of_logits(logits, y, rows, self.classes);
+        self.forward_into(params, x, rows, &mut s.acts, &mut grew);
+        let (loss, acc) = loss_acc_of_logits(&s.acts[n_layers], y, rows, self.classes);
+
+        // dz and da trade buffers via swap at every layer boundary, so
+        // give BOTH capacity for the widest interface now — sizing them
+        // lazily would leave the pair asymmetric after the cold call and
+        // the second call would still allocate for the swapped-in side.
+        let max_dim = self.layers.iter().map(|&(i, o)| i.max(o)).max().unwrap_or(0);
+        ensure_cap(&mut s.dz, rows * max_dim, &mut grew);
+        ensure_cap(&mut s.da, rows * max_dim, &mut grew);
 
         // dz for the output layer: (softmax(logits) − onehot(y)) / rows.
-        let mut dz = logits.clone();
-        for (r, row) in dz.chunks_mut(self.classes).enumerate() {
+        ensure_len(&mut s.dz, rows * self.classes, &mut grew);
+        s.dz.copy_from_slice(&s.acts[n_layers]);
+        for (r, row) in s.dz.chunks_mut(self.classes).enumerate() {
             softmax_row(row);
             row[y[r] as usize] -= 1.0;
             for v in row.iter_mut() {
@@ -172,61 +350,216 @@ impl NativeMlp {
             }
         }
 
-        let mut grads: Vec<Vec<f32>> =
-            params.tensors.iter().map(|t| vec![0f32; t.numel()]).collect();
+        if s.grads.len() != params.tensors.len() {
+            grew = true;
+            s.grads.clear();
+            s.grads.resize_with(params.tensors.len(), Vec::new);
+        }
         for li in (0..n_layers).rev() {
             let (fan_in, fan_out) = self.layers[li];
-            let a = &acts[li]; // input to this layer, rows × fan_in
+            // dW += aᵀ·dz (a = acts[li], the input to this layer).
+            ensure_len(&mut s.grads[2 * li], fan_in * fan_out, &mut grew);
+            s.grads[2 * li].fill(0.0);
+            accumulate_dw(&s.acts[li], &s.dz, &mut s.grads[2 * li], rows, fan_in, fan_out);
+            // db = column sums of dz.
+            ensure_len(&mut s.grads[2 * li + 1], fan_out, &mut grew);
+            s.grads[2 * li + 1].fill(0.0);
             {
-                let dw = &mut grads[2 * li];
+                let db = &mut s.grads[2 * li + 1];
                 for r in 0..rows {
-                    let dzr = &dz[r * fan_out..(r + 1) * fan_out];
-                    let ar = &a[r * fan_in..(r + 1) * fan_in];
-                    for (k, &av) in ar.iter().enumerate() {
-                        if av != 0.0 {
-                            let dwk = &mut dw[k * fan_out..(k + 1) * fan_out];
-                            for (dwv, &dzv) in dwk.iter_mut().zip(dzr) {
-                                *dwv += av * dzv;
-                            }
-                        }
-                    }
-                }
-            }
-            {
-                let db = &mut grads[2 * li + 1];
-                for r in 0..rows {
-                    let dzr = &dz[r * fan_out..(r + 1) * fan_out];
+                    let dzr = &s.dz[r * fan_out..(r + 1) * fan_out];
                     for (dbv, &dzv) in db.iter_mut().zip(dzr) {
                         *dbv += dzv;
                     }
                 }
             }
             if li > 0 {
-                // da_{li-1} = dz · Wᵀ, then gate through the ReLU mask
-                // (a_{li-1} > 0 ⟺ z_{li-1} > 0 since a = relu(z)).
+                // da_{li-1} = dz · Wᵀ over a transposed-weight tile so
+                // every dz element scales a contiguous wt row, then the
+                // ReLU gate (a_{li-1} > 0 ⟺ z_{li-1} > 0).
                 let w = &params.tensors[2 * li].data;
-                let mut da = vec![0f32; rows * fan_in];
-                for r in 0..rows {
-                    let dzr = &dz[r * fan_out..(r + 1) * fan_out];
-                    let dar = &mut da[r * fan_in..(r + 1) * fan_in];
-                    for (k, dav) in dar.iter_mut().enumerate() {
-                        let wk = &w[k * fan_out..(k + 1) * fan_out];
-                        let mut s = 0f32;
-                        for (&wv, &dzv) in wk.iter().zip(dzr) {
-                            s += wv * dzv;
-                        }
-                        *dav = s;
-                    }
-                }
-                for (dav, &av) in da.iter_mut().zip(&acts[li]) {
+                ensure_len(&mut s.wt, fan_in * fan_out, &mut grew);
+                transpose_into(w, &mut s.wt, fan_in, fan_out);
+                ensure_len(&mut s.da, rows * fan_in, &mut grew);
+                s.da.fill(0.0);
+                backward_da(&s.dz, &s.wt, &mut s.da, rows, fan_in, fan_out);
+                for (dav, &av) in s.da.iter_mut().zip(s.acts[li].iter()) {
                     if av <= 0.0 {
                         *dav = 0.0;
                     }
                 }
-                dz = da;
+                std::mem::swap(&mut s.dz, &mut s.da);
             }
         }
-        (loss, acc, grads)
+        s.note_bwd(rows, warm, grew);
+        (loss, acc)
+    }
+}
+
+/// One dense layer `z = a·W + b` (row-major), ReLU epilogue fused when
+/// `relu` is set.
+///
+/// Blocked over the output dimension ([`J_TILE`]) and unrolled 4-wide
+/// over the reduction: four weight rows stream through one register-
+/// resident `z` tile per pass, and an all-zero activation quad (common
+/// behind ReLU) skips its four rows entirely. Per-element accumulation
+/// order depends only on `fan_in` and the element's own tile — never on
+/// `rows` — preserving batched == single-row bit-identity.
+#[allow(clippy::too_many_arguments)]
+fn dense_forward(
+    a: &[f32],
+    w: &[f32],
+    b: &[f32],
+    z: &mut [f32],
+    rows: usize,
+    fan_in: usize,
+    fan_out: usize,
+    relu: bool,
+) {
+    for j0 in (0..fan_out).step_by(J_TILE) {
+        let jw = (fan_out - j0).min(J_TILE);
+        let bt = &b[j0..j0 + jw];
+        for r in 0..rows {
+            let ar = &a[r * fan_in..(r + 1) * fan_in];
+            let zr = &mut z[r * fan_out + j0..r * fan_out + j0 + jw];
+            zr.copy_from_slice(bt);
+            let mut k = 0;
+            while k + 4 <= fan_in {
+                let (a0, a1, a2, a3) = (ar[k], ar[k + 1], ar[k + 2], ar[k + 3]);
+                if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                    let w0 = &w[k * fan_out + j0..][..jw];
+                    let w1 = &w[(k + 1) * fan_out + j0..][..jw];
+                    let w2 = &w[(k + 2) * fan_out + j0..][..jw];
+                    let w3 = &w[(k + 3) * fan_out + j0..][..jw];
+                    for (j, zv) in zr.iter_mut().enumerate() {
+                        *zv += a0 * w0[j] + a1 * w1[j] + a2 * w2[j] + a3 * w3[j];
+                    }
+                }
+                k += 4;
+            }
+            while k < fan_in {
+                let ak = ar[k];
+                if ak != 0.0 {
+                    let wk = &w[k * fan_out + j0..][..jw];
+                    for (j, zv) in zr.iter_mut().enumerate() {
+                        *zv += ak * wk[j];
+                    }
+                }
+                k += 1;
+            }
+            if relu {
+                for zv in zr.iter_mut() {
+                    if *zv < 0.0 {
+                        *zv = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Weight-gradient accumulation `dW += aᵀ·dz` (`dw` pre-zeroed).
+/// Mirrors the forward blocking: the output dimension is tiled and the
+/// reduction walked in quads — four `dW` rows updated per load of the
+/// `dz` tile, all-zero activation quads skipped.
+fn accumulate_dw(
+    a: &[f32],
+    dz: &[f32],
+    dw: &mut [f32],
+    rows: usize,
+    fan_in: usize,
+    fan_out: usize,
+) {
+    for j0 in (0..fan_out).step_by(J_TILE) {
+        let jw = (fan_out - j0).min(J_TILE);
+        for r in 0..rows {
+            let ar = &a[r * fan_in..(r + 1) * fan_in];
+            let dzr = &dz[r * fan_out + j0..][..jw];
+            for (q, dw4) in dw.chunks_mut(4 * fan_out).enumerate() {
+                let k = 4 * q;
+                if k + 4 <= fan_in {
+                    let (a0, a1, a2, a3) = (ar[k], ar[k + 1], ar[k + 2], ar[k + 3]);
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        continue;
+                    }
+                    let (d0, rest) = dw4.split_at_mut(fan_out);
+                    let (d1, rest) = rest.split_at_mut(fan_out);
+                    let (d2, d3) = rest.split_at_mut(fan_out);
+                    let t0 = &mut d0[j0..j0 + jw];
+                    let t1 = &mut d1[j0..j0 + jw];
+                    let t2 = &mut d2[j0..j0 + jw];
+                    let t3 = &mut d3[j0..j0 + jw];
+                    for (j, &dzv) in dzr.iter().enumerate() {
+                        t0[j] += a0 * dzv;
+                        t1[j] += a1 * dzv;
+                        t2[j] += a2 * dzv;
+                        t3[j] += a3 * dzv;
+                    }
+                } else {
+                    // Remainder rows (fan_in % 4).
+                    for (i, dwk) in dw4.chunks_mut(fan_out).enumerate() {
+                        let ak = ar[k + i];
+                        if ak != 0.0 {
+                            let t = &mut dwk[j0..j0 + jw];
+                            for (j, tv) in t.iter_mut().enumerate() {
+                                *tv += ak * dzr[j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Activation gradient `da += dz·Wᵀ` (`da` pre-zeroed), over the
+/// transposed-weight tile `wt` (`fan_out × fan_in`, row-major): each
+/// `dz[j]` scales one contiguous `wt` row, unrolled 4-wide over `j` so
+/// four scaled rows accumulate per pass over the `da` row.
+fn backward_da(
+    dz: &[f32],
+    wt: &[f32],
+    da: &mut [f32],
+    rows: usize,
+    fan_in: usize,
+    fan_out: usize,
+) {
+    for r in 0..rows {
+        let dzr = &dz[r * fan_out..(r + 1) * fan_out];
+        let dar = &mut da[r * fan_in..(r + 1) * fan_in];
+        let mut j = 0;
+        while j + 4 <= fan_out {
+            let (d0, d1, d2, d3) = (dzr[j], dzr[j + 1], dzr[j + 2], dzr[j + 3]);
+            let w0 = &wt[j * fan_in..][..fan_in];
+            let w1 = &wt[(j + 1) * fan_in..][..fan_in];
+            let w2 = &wt[(j + 2) * fan_in..][..fan_in];
+            let w3 = &wt[(j + 3) * fan_in..][..fan_in];
+            for (k, dav) in dar.iter_mut().enumerate() {
+                *dav += d0 * w0[k] + d1 * w1[k] + d2 * w2[k] + d3 * w3[k];
+            }
+            j += 4;
+        }
+        while j < fan_out {
+            let dj = dzr[j];
+            if dj != 0.0 {
+                let wj = &wt[j * fan_in..][..fan_in];
+                for (k, dav) in dar.iter_mut().enumerate() {
+                    *dav += dj * wj[k];
+                }
+            }
+            j += 1;
+        }
+    }
+}
+
+/// `wt[j·fan_in + k] = w[k·fan_out + j]` — the backward pass's
+/// transposed-weight tile.
+fn transpose_into(w: &[f32], wt: &mut [f32], fan_in: usize, fan_out: usize) {
+    for k in 0..fan_in {
+        let wk = &w[k * fan_out..(k + 1) * fan_out];
+        for (j, &wv) in wk.iter().enumerate() {
+            wt[j * fan_in + k] = wv;
+        }
     }
 }
 

@@ -4,10 +4,13 @@
 //! (and its integration suites) runnable on every clean checkout, the
 //! way ML.NET ships a self-contained native pipeline backend.
 //!
-//! * [`mlp`] — the compute core: dense forward pass (ReLU hidden,
-//!   linear output), numerically-stable softmax-cross-entropy, the full
-//!   backward pass and Glorot init, all over flat row-major `f32`
-//!   buffers;
+//! * [`mlp`] — the compute core: cache-blocked, 4-wide-unrolled dense
+//!   kernels (ReLU hidden, linear output; transposed-weight tiles for
+//!   the backward `dz·Wᵀ` pass; fused bias+ReLU epilogue),
+//!   numerically-stable softmax-cross-entropy, the full backward pass
+//!   and Glorot init, all over flat row-major `f32` buffers in a
+//!   preallocated scratch arena ([`MlpScratch`]) — steady-state steps
+//!   perform zero heap allocation in the kernel path (debug-asserted);
 //! * [`adam`] — fused Adam update with folded bias correction,
 //!   mirroring the Pallas kernel in `python/compile/kernels/adam.py`
 //!   bit-for-formula;
@@ -42,18 +45,25 @@ pub mod mlp;
 pub mod model;
 
 pub use adam::{adam_step, AdamHyper};
-pub use mlp::NativeMlp;
+pub use mlp::{MlpScratch, NativeMlp};
 pub use model::{NativeModel, NativeSpec};
 
 use super::backend::{Backend, TrainState};
 use super::meta::ArtifactMeta;
 use super::params::ModelParams;
 use anyhow::Result;
+use std::sync::Mutex;
 
 /// The pure-Rust MLP engine behind [`crate::runtime::Engine`].
+///
+/// Owns one [`MlpScratch`] arena behind a lock: train/eval/predict all
+/// run their kernels over it, so a training loop allocates during its
+/// first step and then never again (`Backend` methods take `&self`; the
+/// lock serializes kernel calls without changing the trait).
 pub struct NativeBackend {
     mlp: NativeMlp,
     hyper: AdamHyper,
+    scratch: Mutex<MlpScratch>,
 }
 
 impl NativeBackend {
@@ -66,6 +76,7 @@ impl NativeBackend {
                 beta2: meta.beta2,
                 eps: meta.eps,
             },
+            scratch: Mutex::new(MlpScratch::new()),
         })
     }
 
@@ -93,8 +104,9 @@ impl Backend for NativeBackend {
 
     fn train_step(&self, state: &mut TrainState, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
         let rows = y.len();
-        let (loss, acc, grads) = self.mlp.loss_grad(&state.params, x, y, rows);
-        for (i, g) in grads.iter().enumerate() {
+        let mut s = self.scratch.lock().unwrap_or_else(|p| p.into_inner());
+        let (loss, acc) = self.mlp.loss_grad_with(&state.params, x, y, rows, &mut s);
+        for (i, g) in s.grads().iter().enumerate() {
             adam_step(
                 &self.hyper,
                 state.t,
@@ -108,11 +120,13 @@ impl Backend for NativeBackend {
     }
 
     fn eval_step(&self, params: &ModelParams, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
-        Ok(self.mlp.loss_acc(params, x, y, y.len()))
+        let mut s = self.scratch.lock().unwrap_or_else(|p| p.into_inner());
+        Ok(self.mlp.loss_acc_with(params, x, y, y.len(), &mut s))
     }
 
     fn predict(&self, params: &ModelParams, x: &[f32], rows: usize) -> Result<Vec<f32>> {
-        Ok(self.mlp.probs(params, x, rows))
+        let mut s = self.scratch.lock().unwrap_or_else(|p| p.into_inner());
+        Ok(self.mlp.probs_with(params, x, rows, &mut s))
     }
 }
 
@@ -158,5 +172,28 @@ mod tests {
             last < first * 0.5,
             "50 steps on one batch must overfit it: {first} -> {last}"
         );
+    }
+
+    #[test]
+    fn steady_state_steps_reuse_the_scratch_arena() {
+        let b = backend();
+        let mut state = TrainState::new(b.init_params().unwrap());
+        let x: Vec<f32> = (0..6 * 4).map(|i| ((i * 5 % 11) as f32 - 5.0) / 5.0).collect();
+        let y = [2i32, 0, 1, 2, 0, 1];
+        for _ in 0..3 {
+            state.t += 1;
+            b.train_step(&mut state, &x, &y).unwrap();
+        }
+        assert!(
+            !b.scratch.lock().unwrap().grew(),
+            "a warm train_step must not grow any kernel buffer"
+        );
+        // Interleaved eval and predict share the arena without
+        // re-allocating either (debug builds also assert this inside
+        // the kernels themselves).
+        b.eval_step(&state.params, &x, &y).unwrap();
+        b.train_step(&mut state, &x, &y).unwrap();
+        b.predict(&state.params, &x, 6).unwrap();
+        assert!(!b.scratch.lock().unwrap().grew());
     }
 }

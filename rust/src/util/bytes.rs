@@ -20,22 +20,115 @@
 //!    in assertions against plain vectors.
 //!  * [`Bytes::ptr_eq`] observes sharing — the property the zero-copy
 //!    tests assert.
+//!
+//! Two backings live behind one `Arc`: a heap vector (the encode path)
+//! and, on Linux, a read-only private `mmap(2)` region
+//! ([`Bytes::map_file`]) used for sealed-segment residency — a mapped
+//! `Bytes` behaves identically (slice/clone/`ptr_eq`/`writev`) but its
+//! bytes are the kernel page cache, faulted in on first touch instead
+//! of copied up front, and the last handle's `Drop` unmaps the region.
+//! Off Linux — or under `KAFKA_ML_NO_MMAP=1` — `map_file` degrades to a
+//! plain read into a heap backing with the same observable semantics.
 
 use std::borrow::Borrow;
 use std::fmt;
 use std::hash::{Hash, Hasher};
+use std::io;
 use std::ops::{Bound, Deref, RangeBounds};
-use std::sync::Arc;
+use std::path::Path;
+use std::sync::{Arc, OnceLock};
+
+/// What an allocation actually is: an owned heap vector, or (Linux) a
+/// read-only private file mapping whose pages belong to the page cache.
+enum Backing {
+    Heap(Vec<u8>),
+    #[cfg(target_os = "linux")]
+    Mapped(MappedRegion),
+}
+
+impl Backing {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            Backing::Heap(v) => v,
+            #[cfg(target_os = "linux")]
+            Backing::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Backing::Heap(v) => v.len(),
+            #[cfg(target_os = "linux")]
+            Backing::Mapped(m) => m.len,
+        }
+    }
+}
+
+/// An owned `mmap(2)` region; unmapped when the last `Bytes` handle
+/// drops.
+///
+/// Safety contract (upheld by the sealed-segment tier, the only
+/// producer of mappings): the region is `PROT_READ` + `MAP_PRIVATE`
+/// over a file that is never truncated or rewritten in place while
+/// mapped — retention unlinks (the inode outlives the mapping) and
+/// compaction renames a fresh file over the name — so the view can
+/// never change underneath a reader and a shrink can never SIGBUS.
+#[cfg(target_os = "linux")]
+struct MappedRegion {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// A PROT_READ mapping of an immutable file is plain shared memory:
+// no interior mutability, safe to read from any thread.
+#[cfg(target_os = "linux")]
+unsafe impl Send for MappedRegion {}
+#[cfg(target_os = "linux")]
+unsafe impl Sync for MappedRegion {}
+
+#[cfg(target_os = "linux")]
+impl MappedRegion {
+    fn as_slice(&self) -> &[u8] {
+        // Safety: ptr/len came from a successful mmap that this struct
+        // owns until Drop, and the backing file is immutable (above).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for MappedRegion {
+    fn drop(&mut self) {
+        // Safety: exclusively owned region from mmap; dropped once.
+        unsafe {
+            libc::munmap(self.ptr as *mut libc::c_void, self.len);
+        }
+    }
+}
+
+/// True when `KAFKA_ML_NO_MMAP=1` (or any non-empty, non-`0` value)
+/// disables the mapped backing process-wide, forcing [`Bytes::map_file`]
+/// onto the portable read fallback. Read once and cached: flipping the
+/// variable mid-process is not supported (tests that need both paths in
+/// one process use [`Bytes::map_file_with`]).
+pub fn mmap_disabled() -> bool {
+    static DISABLED: OnceLock<bool> = OnceLock::new();
+    *DISABLED.get_or_init(|| {
+        std::env::var("KAFKA_ML_NO_MMAP")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
 
 /// A cheaply cloneable, sliceable, immutable byte buffer.
 ///
-/// Internally `Arc<Vec<u8>>` (not `Arc<[u8]>`): `Arc::from(vec)` would
-/// memcpy the payload into a fresh allocation, while `Arc::new(vec)`
-/// moves the vector — so taking ownership of an encoded payload really
-/// is free, at the cost of one extra pointer hop on reads.
+/// Internally `Arc<Backing>`, where the backing is either an owned
+/// `Vec<u8>` (not `Arc<[u8]>`: `Arc::from(vec)` would memcpy the
+/// payload into a fresh allocation, while `Arc::new` moves it — taking
+/// ownership of an encoded payload really is free) or, on Linux, a
+/// file-backed mapped region (see [`Bytes::map_file`]).
 #[derive(Clone)]
 pub struct Bytes {
-    buf: Arc<Vec<u8>>,
+    buf: Arc<Backing>,
     start: usize,
     len: usize,
 }
@@ -44,7 +137,7 @@ impl Bytes {
     /// The empty buffer.
     pub fn new() -> Bytes {
         Bytes {
-            buf: Arc::new(Vec::new()),
+            buf: Arc::new(Backing::Heap(Vec::new())),
             start: 0,
             len: 0,
         }
@@ -55,9 +148,126 @@ impl Bytes {
     pub fn from_vec(v: Vec<u8>) -> Bytes {
         let len = v.len();
         Bytes {
-            buf: Arc::new(v),
+            buf: Arc::new(Backing::Heap(v)),
             start: 0,
             len,
+        }
+    }
+
+    /// Map the first `len` bytes of `path` as a shared, read-only view
+    /// (the sealed-segment residency tier: O(touched pages) on first
+    /// access instead of an O(file) copy).
+    ///
+    /// On Linux this is a `PROT_READ | MAP_PRIVATE` `mmap(2)` whose
+    /// pages are the kernel page cache; the fd closes immediately (the
+    /// mapping pins the inode) and the last handle's `Drop` unmaps.
+    /// Off Linux, or when [`mmap_disabled`] (env `KAFKA_ML_NO_MMAP=1`),
+    /// the bytes are read into a heap backing instead — byte-identical
+    /// observable behavior, minus the page-cache sharing.
+    ///
+    /// Errors if the file is shorter than `len` (a sealed file must
+    /// never shrink below its validated prefix) or the map/read fails.
+    pub fn map_file(path: &Path, len: u64) -> io::Result<Bytes> {
+        Bytes::map_file_with(path, len, !mmap_disabled())
+    }
+
+    /// [`Bytes::map_file`] with the mmap-vs-read choice made explicit,
+    /// ignoring the `KAFKA_ML_NO_MMAP` override — lets one process
+    /// exercise both paths side by side (fallback parity tests).
+    pub fn map_file_with(
+        path: &Path,
+        len: u64,
+        allow_mmap: bool,
+    ) -> io::Result<Bytes> {
+        let want = usize::try_from(len).map_err(|_| {
+            io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "mapping length overflows usize",
+            )
+        })?;
+        #[cfg(target_os = "linux")]
+        if allow_mmap && want > 0 {
+            use std::os::unix::io::AsRawFd;
+            let file = std::fs::File::open(path)?;
+            let on_disk = file.metadata()?.len();
+            if on_disk < len {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("file is {on_disk} B, need {len} B"),
+                ));
+            }
+            // Safety: null addr + validated length over a freshly
+            // opened read-only fd; MAP_FAILED checked below.
+            let ptr = unsafe {
+                libc::mmap(
+                    std::ptr::null_mut(),
+                    want,
+                    libc::PROT_READ,
+                    libc::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr == libc::MAP_FAILED {
+                return Err(io::Error::last_os_error());
+            }
+            let region = MappedRegion { ptr: ptr as *mut u8, len: want };
+            return Ok(Bytes {
+                buf: Arc::new(Backing::Mapped(region)),
+                start: 0,
+                len: want,
+            });
+        }
+        let _ = allow_mmap;
+        let mut data = std::fs::read(path)?;
+        if data.len() < want {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!("file is {} B, need {len} B", data.len()),
+            ));
+        }
+        data.truncate(want);
+        Ok(Bytes::from_vec(data))
+    }
+
+    /// True when this handle views a file mapping (always `false` off
+    /// Linux or on the read-fallback path).
+    pub fn is_mapped(&self) -> bool {
+        match &*self.buf {
+            #[cfg(target_os = "linux")]
+            Backing::Mapped(_) => true,
+            _ => false,
+        }
+    }
+
+    /// Length of the whole underlying allocation (vector or mapped
+    /// region), independent of the window this handle views. This is
+    /// what residency actually costs, so the LRU charges it — a short
+    /// slice of a long mapping still pins the long mapping.
+    pub fn backing_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Best-effort hint that the backing's physical pages won't be
+    /// needed soon. For a mapped backing this is
+    /// `madvise(MADV_DONTNEED)` — on a read-only private file mapping
+    /// it only drops the resident pages; any surviving handle simply
+    /// re-faults from the (immutable) file on next touch, so this is
+    /// safe to call with readers still live. No-op for heap backings
+    /// and off Linux.
+    pub fn advise_dont_need(&self) {
+        #[cfg(target_os = "linux")]
+        if let Backing::Mapped(m) = &*self.buf {
+            if m.len > 0 {
+                // Safety: region owned by the Arc this handle holds.
+                unsafe {
+                    libc::madvise(
+                        m.ptr as *mut libc::c_void,
+                        m.len,
+                        libc::MADV_DONTNEED,
+                    );
+                }
+            }
         }
     }
 
@@ -76,7 +286,7 @@ impl Bytes {
 
     /// View the underlying bytes.
     pub fn as_slice(&self) -> &[u8] {
-        &self.buf[self.start..self.start + self.len]
+        &self.buf.as_slice()[self.start..self.start + self.len]
     }
 
     /// O(1) sub-view sharing the same allocation. Panics when the range
@@ -347,5 +557,68 @@ mod tests {
         assert!(Bytes::new().is_empty());
         assert_eq!(Bytes::default().len(), 0);
         assert_eq!(Bytes::new(), Vec::<u8>::new());
+    }
+
+    fn tmp_file(tag: &str, data: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!(
+            "kafka-ml-bytes-{tag}-{}.bin",
+            std::process::id()
+        ));
+        std::fs::write(&path, data).unwrap();
+        path
+    }
+
+    #[test]
+    fn map_file_matches_read_fallback_byte_for_byte() {
+        let data: Vec<u8> = (0..20_000u32).map(|i| (i % 241) as u8).collect();
+        let path = tmp_file("parity", &data);
+        let prefix = data.len() as u64 - 123;
+        let mapped =
+            Bytes::map_file_with(&path, prefix, true).unwrap();
+        let heap = Bytes::map_file_with(&path, prefix, false).unwrap();
+        assert_eq!(mapped, heap);
+        assert_eq!(mapped.as_slice(), &data[..prefix as usize]);
+        assert_eq!(mapped.is_mapped(), cfg!(target_os = "linux"));
+        assert!(!heap.is_mapped());
+        assert_eq!(mapped.backing_len(), prefix as usize);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn mapped_slices_share_and_survive_dontneed_and_unlink() {
+        let data: Vec<u8> = (0..9000u32).map(|i| (i % 199) as u8).collect();
+        let path = tmp_file("share", &data);
+        let whole = Bytes::map_file(&path, data.len() as u64).unwrap();
+        let view = whole.slice(4096..4200);
+        assert!(Bytes::ptr_eq(&whole, &view));
+        assert_eq!(view, data[4096..4200].to_vec());
+        // A short slice still pins (and costs) the whole region.
+        assert_eq!(view.backing_len(), data.len());
+        // Unlink + DONTNEED with handles live: the inode outlives the
+        // unlink and dropped pages re-fault, so reads stay identical.
+        std::fs::remove_file(&path).unwrap();
+        whole.advise_dont_need();
+        assert_eq!(whole, data);
+        assert_eq!(view, data[4096..4200].to_vec());
+    }
+
+    #[test]
+    fn map_file_rejects_short_files() {
+        let path = tmp_file("short", &[1, 2, 3]);
+        for allow_mmap in [true, false] {
+            let err = Bytes::map_file_with(&path, 10, allow_mmap)
+                .expect_err("3-byte file cannot satisfy a 10-byte map");
+            assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn map_file_of_zero_length_is_the_empty_heap_buffer() {
+        let path = tmp_file("zero", b"ignored");
+        let b = Bytes::map_file(&path, 0).unwrap();
+        assert!(b.is_empty());
+        assert!(!b.is_mapped());
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -1,11 +1,15 @@
 //! Unit/property tests for the pure-Rust native backend: the backward
 //! pass against finite differences, Adam bias correction against
-//! hand-computed values, the `.kmln` checkpoint byte round-trip, and
-//! the train→predict loop actually learning.
+//! hand-computed values, the `.kmln` checkpoint byte round-trip, the
+//! train→predict loop actually learning, and the blocked/unrolled
+//! kernels against a naive triple-loop reference (plus the scratch
+//! arena's zero-steady-state-allocation contract).
 
 use kafka_ml::ml::separable_dataset;
-use kafka_ml::runtime::native::{adam_step, AdamHyper, NativeMlp, NativeModel, NativeSpec};
-use kafka_ml::runtime::{ArtifactMeta, BackendSelect, Engine};
+use kafka_ml::runtime::native::{
+    adam_step, AdamHyper, MlpScratch, NativeMlp, NativeModel, NativeSpec,
+};
+use kafka_ml::runtime::{ArtifactMeta, BackendSelect, Engine, ModelParams};
 use std::path::PathBuf;
 
 fn tiny_meta() -> ArtifactMeta {
@@ -220,4 +224,204 @@ fn two_runs_are_bit_identical() {
         e.params_of(&state).unwrap()
     };
     assert_eq!(run(), run());
+}
+
+// ---------------------------------------------------------------------------
+// Blocked-kernel equivalence against a naive triple-loop reference.
+// ---------------------------------------------------------------------------
+
+/// Textbook forward pass: `z[r][j] = b[j] + Σ_k a[r][k]·w[k][j]`, one
+/// scalar accumulator, ReLU on hidden layers. Returns every
+/// post-activation `[a_0 = x, …, logits]`.
+fn naive_acts(
+    layers: &[(usize, usize)],
+    params: &ModelParams,
+    x: &[f32],
+    rows: usize,
+) -> Vec<Vec<f32>> {
+    let n = layers.len();
+    let mut acts = vec![x.to_vec()];
+    for (li, &(fan_in, fan_out)) in layers.iter().enumerate() {
+        let w = &params.tensors[2 * li].data;
+        let b = &params.tensors[2 * li + 1].data;
+        let a = &acts[li];
+        let mut z = vec![0f32; rows * fan_out];
+        for r in 0..rows {
+            for j in 0..fan_out {
+                let mut acc = b[j];
+                for k in 0..fan_in {
+                    acc += a[r * fan_in + k] * w[k * fan_out + j];
+                }
+                z[r * fan_out + j] = if li < n - 1 && acc < 0.0 { 0.0 } else { acc };
+            }
+        }
+        acts.push(z);
+    }
+    acts
+}
+
+/// Textbook softmax-CE backward pass over `naive_acts`, gradients in
+/// artifact order `[dw1, db1, …]`.
+fn naive_loss_grad(
+    layers: &[(usize, usize)],
+    classes: usize,
+    params: &ModelParams,
+    x: &[f32],
+    y: &[i32],
+    rows: usize,
+) -> Vec<Vec<f32>> {
+    let n = layers.len();
+    let acts = naive_acts(layers, params, x, rows);
+    let mut dz = acts[n].clone();
+    for (r, row) in dz.chunks_mut(classes).enumerate() {
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+        row[y[r] as usize] -= 1.0;
+        for v in row.iter_mut() {
+            *v /= rows as f32;
+        }
+    }
+    let mut grads = vec![Vec::new(); 2 * n];
+    for li in (0..n).rev() {
+        let (fan_in, fan_out) = layers[li];
+        let mut dw = vec![0f32; fan_in * fan_out];
+        let mut db = vec![0f32; fan_out];
+        for r in 0..rows {
+            for j in 0..fan_out {
+                db[j] += dz[r * fan_out + j];
+                for k in 0..fan_in {
+                    dw[k * fan_out + j] += acts[li][r * fan_in + k] * dz[r * fan_out + j];
+                }
+            }
+        }
+        if li > 0 {
+            let w = &params.tensors[2 * li].data;
+            let mut da = vec![0f32; rows * fan_in];
+            for r in 0..rows {
+                for k in 0..fan_in {
+                    let mut acc = 0f32;
+                    for j in 0..fan_out {
+                        acc += dz[r * fan_out + j] * w[k * fan_out + j];
+                    }
+                    da[r * fan_in + k] =
+                        if acts[li][r * fan_in + k] > 0.0 { acc } else { 0.0 };
+                }
+            }
+            dz = da;
+        }
+        grads[2 * li] = dw;
+        grads[2 * li + 1] = db;
+    }
+    grads
+}
+
+#[test]
+fn blocked_kernels_match_a_naive_reference() {
+    // The blocked/unrolled kernels reassociate the f32 reductions, so
+    // bit-equality with the naive loops is NOT expected — agreement to
+    // a few ulps over these magnitudes is (tolerance 1e-4 absolute +
+    // 1e-4 relative). Shapes deliberately hit remainder paths: fan_in
+    // and fan_out not multiples of 4, zero hidden layers, rows = 1.
+    let shapes: [(usize, &[usize], usize, usize, u64); 4] = [
+        (7, &[13, 5], 3, 9, 31),
+        (5, &[], 2, 6, 7),
+        (4, &[6], 4, 1, 3),
+        (3, &[8, 8], 2, 10, 11),
+    ];
+    let close = |a: f32, b: f32| (a - b).abs() <= 1e-4 + 1e-4 * b.abs();
+    for &(input_dim, hidden, classes, rows, seed) in &shapes {
+        let meta =
+            ArtifactMeta::synthesize(PathBuf::new(), input_dim, hidden, classes, rows, 0.01, seed);
+        let mlp = NativeMlp::from_meta(&meta).unwrap();
+        let mut params = mlp.init();
+        // Glorot init leaves biases at zero; give them non-zero values
+        // so the fused bias epilogue is actually load-bearing.
+        for (ti, t) in params.tensors.iter_mut().enumerate() {
+            if ti % 2 == 1 {
+                for (i, v) in t.data.iter_mut().enumerate() {
+                    *v = ((ti + 3 * i) as f32 * 0.41).sin() * 0.3;
+                }
+            }
+        }
+        let x: Vec<f32> = (0..rows * input_dim).map(|i| (i as f32 * 0.7 + 0.1).sin()).collect();
+        let y: Vec<i32> = (0..rows as i32).map(|r| r % classes as i32).collect();
+
+        let logits = mlp.logits(&params, &x, rows);
+        let ref_logits = naive_acts(&mlp.layers, &params, &x, rows).pop().unwrap();
+        assert_eq!(logits.len(), ref_logits.len());
+        for (i, (&got, &want)) in logits.iter().zip(&ref_logits).enumerate() {
+            assert!(
+                close(got, want),
+                "{input_dim}->{hidden:?}->{classes} rows={rows} logit[{i}]: {got} vs {want}"
+            );
+        }
+
+        let (_, _, grads) = mlp.loss_grad(&params, &x, &y, rows);
+        let ref_grads = naive_loss_grad(&mlp.layers, classes, &params, &x, &y, rows);
+        assert_eq!(grads.len(), ref_grads.len());
+        for (ti, (g, rg)) in grads.iter().zip(&ref_grads).enumerate() {
+            assert_eq!(g.len(), rg.len(), "tensor {ti} shape");
+            for (i, (&got, &want)) in g.iter().zip(rg).enumerate() {
+                assert!(
+                    close(got, want),
+                    "{input_dim}->{hidden:?}->{classes} rows={rows} grad[{ti}][{i}]: {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_scratch_repeats_are_allocation_free_and_bit_stable() {
+    let meta = ArtifactMeta::synthesize(PathBuf::new(), 6, &[9], 3, 5, 0.01, 23);
+    let mlp = NativeMlp::from_meta(&meta).unwrap();
+    let params = mlp.init();
+    let rows = 5usize;
+    let x: Vec<f32> = (0..rows * 6).map(|i| (i as f32 * 0.29).sin()).collect();
+    let y: Vec<i32> = (0..rows as i32).map(|r| r % 3).collect();
+
+    let mut s = MlpScratch::new();
+    let (l1, a1) = mlp.loss_grad_with(&params, &x, &y, rows, &mut s);
+    assert!(s.grew(), "the first call must build the arena");
+    let g1: Vec<Vec<f32>> = s.grads().to_vec();
+
+    let (l2, a2) = mlp.loss_grad_with(&params, &x, &y, rows, &mut s);
+    assert!(!s.grew(), "a warm repeat must not grow any buffer");
+    assert_eq!((l1, a1), (l2, a2), "warm path changes the math");
+    assert_eq!(s.grads(), &g1[..], "warm-path grads must be bit-identical");
+
+    // Forward-only entry points ride the same warm arena.
+    let p = mlp.probs_with(&params, &x, rows, &mut s);
+    assert!(!s.grew());
+    assert_eq!(p, mlp.probs(&params, &x, rows), "scratch vs oneshot probs");
+    let (l3, _) = mlp.loss_acc_with(&params, &x, &y, rows, &mut s);
+    assert!(!s.grew());
+    assert_eq!(l3, l1);
+}
+
+#[test]
+fn engine_predict_batched_matches_single_rows_bit_for_bit() {
+    // The kernel contract: per-element accumulation order depends only
+    // on layer dims, never on the batch — so slicing a batch into
+    // single-row calls reproduces the batched output exactly, through
+    // the full Engine facade (shared backend scratch included).
+    let e = Engine::load_with("no-artifacts", BackendSelect::Native).unwrap();
+    let meta = e.meta();
+    let (d, c) = (meta.input_dim, meta.classes);
+    let params = e.init_params().unwrap();
+    let rows = 7usize; // deliberately not the meta batch size
+    let x: Vec<f32> = (0..rows * d).map(|i| (i as f32 * 0.173).cos()).collect();
+    let batched = e.predict(&params, &x, rows).unwrap();
+    assert_eq!(batched.len(), rows * c);
+    for r in 0..rows {
+        let single = e.predict(&params, &x[r * d..(r + 1) * d], 1).unwrap();
+        assert_eq!(&batched[r * c..(r + 1) * c], &single[..], "row {r}");
+    }
 }

@@ -4,6 +4,11 @@
 //! (one shared buffer per segment, observable via `Bytes::ptr_eq`),
 //! and a torn tail frame — written by hand here, as a crash would —
 //! must be truncated away without harming the valid prefix.
+//!
+//! Residency-tier coverage rides in the same binary: sealed fetches
+//! come off an mmap(2) view on Linux (heap read elsewhere, or under
+//! `KAFKA_ML_NO_MMAP=1` — CI runs this whole suite both ways), and
+//! eviction under a tiny budget must re-map byte-identically.
 
 use kafka_ml::broker::{
     BrokerConfig, ClientLocality, Cluster, ClusterHandle, Consumer, LogConfig, Producer,
@@ -301,6 +306,87 @@ fn per_topic_log_config_survives_restart() {
     assert_eq!(recs.len(), 1);
     assert_eq!(recs[0].record.value, vec![7u8; 64]);
     drop(t);
+    drop(c);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sealed_fetch_residency_tier_matches_platform_and_env() {
+    // The resident buffer behind a sealed-segment fetch is an mmap(2)
+    // view on Linux — unless KAFKA_ML_NO_MMAP disables it, in which
+    // case (and on every other OS) it is a heap read. Either way the
+    // records keep working after the cluster is dropped and the file
+    // unlinked: a PROT_READ MAP_PRIVATE mapping pins the inode, and a
+    // heap buffer never needed it.
+    let dir = temp_data_dir("mapped");
+    {
+        let c = Cluster::new(tiered_config(&dir, 1 << 20));
+        c.create_topic("t", 1);
+        for i in 0..8u8 {
+            produce_one(&c, "t", 0, vec![i; 512]);
+        }
+        c.flush_storage().unwrap();
+    }
+    let c = Cluster::new(tiered_config(&dir, 1 << 20));
+    let batch = c.fetch_batch("t", 0, 0, 10, ClientLocality::InCluster).unwrap();
+    assert_eq!(batch.len(), 8);
+    let expect_mapped = cfg!(target_os = "linux") && !kafka_ml::util::bytes::mmap_disabled();
+    let first = batch.records[0].1.value.clone();
+    for (off, rec) in &batch.records {
+        assert_eq!(
+            rec.value.is_mapped(),
+            expect_mapped,
+            "offset {off}: residency tier must match platform/env"
+        );
+        assert!(Bytes::ptr_eq(&first, &rec.value), "zero-copy holds on the mapped tier");
+    }
+    drop(c);
+    let _ = std::fs::remove_dir_all(&dir); // unlink under the live buffers
+    for (off, rec) in &batch.records {
+        assert_eq!(rec.value, vec![*off as u8; 512], "readable after unlink");
+    }
+}
+
+#[test]
+fn eviction_under_a_tiny_residency_budget_remaps_byte_identically() {
+    // max_resident_bytes = 1: admitting any sealed segment evicts every
+    // other one (madvise(DONTNEED) + drop on the mapped tier). Repeated
+    // full scans must then re-fault/re-map and still read the exact
+    // same bytes — and the re-map really is a NEW buffer, proving the
+    // eviction wasn't a no-op.
+    let dir = temp_data_dir("evict");
+    let tiny = |dir: &PathBuf| {
+        let mut c = tiered_config(dir, 64);
+        c.log.max_resident_bytes = 1;
+        c
+    };
+    {
+        let c = Cluster::new(tiny(&dir));
+        c.create_topic("t", 1);
+        for i in 0..24u8 {
+            produce_one(&c, "t", 0, vec![i; 16]);
+        }
+    } // drop seals the active segment
+    assert!(segment_files(&dir, "t", 0).len() > 2, "need several sealed segments");
+    let c = Cluster::new(tiny(&dir));
+    let fetch_all = || {
+        let recs = c.fetch("t", 0, 0, 100, ClientLocality::InCluster).unwrap();
+        assert_eq!(recs.len(), 24);
+        recs
+    };
+    let round1 = fetch_all();
+    let round2 = fetch_all();
+    for (i, (a, b)) in round1.iter().zip(&round2).enumerate() {
+        assert_eq!((a.offset, b.offset), (i as u64, i as u64));
+        assert_eq!(a.record.value, vec![i as u8; 16], "round 1 bytes");
+        assert_eq!(b.record.value, vec![i as u8; 16], "round 2 bytes, post-remap");
+    }
+    // Later admits evicted the first segment during round 1, so round 2
+    // re-loaded it into a fresh buffer: same bytes, different backing.
+    assert!(
+        !Bytes::ptr_eq(&round1[0].record.value, &round2[0].record.value),
+        "first segment must have been evicted and re-mapped between rounds"
+    );
     drop(c);
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -10,7 +10,12 @@
 //! * `fcntl(F_SETFL, O_NONBLOCK)` — nonblocking sockets;
 //! * `writev` — vectored writes (header + zero-copy payload slices);
 //! * `poll` + `pipe` — the portable POSIX fallback used on non-Linux
-//!   Unixes (self-pipe instead of eventfd, `poll(2)` instead of epoll).
+//!   Unixes (self-pipe instead of eventfd, `poll(2)` instead of epoll);
+//! * `mmap` / `munmap` / `madvise` — page-cache-backed sealed-segment
+//!   residency (`util::bytes::Bytes::map_file`): a read-only private
+//!   mapping replaces the full `fs::read` copy, and `MADV_DONTNEED`
+//!   releases physical pages on hot-demote. Linux-only, same discipline
+//!   as the epoll/poll split — off-Linux callers take a read fallback.
 //!
 //! Declarations are call-for-call compatible with the real `libc`
 //! crate's for this subset — swapping back is a one-line Cargo.toml
@@ -72,7 +77,7 @@ pub struct iovec {
 
 #[cfg(target_os = "linux")]
 mod linux {
-    use super::c_int;
+    use super::{c_int, c_void, size_t};
 
     pub const EPOLL_CLOEXEC: c_int = 0o2000000;
 
@@ -99,6 +104,20 @@ mod linux {
         pub u64: u64,
     }
 
+    // ---- mmap (sealed-segment residency) ---------------------------------
+
+    /// 64-bit file offset: glibc exposes `mmap` with the LFS `off_t` on
+    /// every 64-bit target this repo builds for (x86-64, aarch64).
+    pub type off_t = i64;
+
+    pub const PROT_READ: c_int = 0x1;
+    pub const MAP_PRIVATE: c_int = 0x02;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    pub const MADV_SEQUENTIAL: c_int = 2;
+    pub const MADV_WILLNEED: c_int = 3;
+    pub const MADV_DONTNEED: c_int = 4;
+
     extern "C" {
         pub fn epoll_create1(flags: c_int) -> c_int;
         pub fn epoll_ctl(
@@ -114,6 +133,16 @@ mod linux {
             timeout: c_int,
         ) -> c_int;
         pub fn eventfd(initval: super::c_uint, flags: c_int) -> c_int;
+        pub fn mmap(
+            addr: *mut c_void,
+            len: size_t,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: off_t,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: size_t) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: size_t, advice: c_int) -> c_int;
     }
 }
 
@@ -198,6 +227,44 @@ mod tests {
             close(r);
             close(w);
         }
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn mmap_reads_a_file_and_survives_dontneed() {
+        use std::io::Write as _;
+        use std::os::unix::io::AsRawFd;
+        let path = std::env::temp_dir()
+            .join(format!("libc-shim-mmap-{}.bin", std::process::id()));
+        let data: Vec<u8> = (0..8192u32).map(|i| (i % 251) as u8).collect();
+        std::fs::File::create(&path)
+            .unwrap()
+            .write_all(&data)
+            .unwrap();
+        unsafe {
+            let f = std::fs::File::open(&path).unwrap();
+            let ptr = mmap(
+                std::ptr::null_mut(),
+                data.len(),
+                PROT_READ,
+                MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            );
+            assert_ne!(ptr, MAP_FAILED);
+            // The mapping pins the inode; the fd may close immediately.
+            drop(f);
+            let view =
+                std::slice::from_raw_parts(ptr as *const u8, data.len());
+            assert_eq!(view, &data[..]);
+            // DONTNEED on a read-only private file mapping drops the
+            // physical pages only; the next touch re-faults from the
+            // (immutable) file and must read back identical bytes.
+            assert_eq!(madvise(ptr, data.len(), MADV_DONTNEED), 0);
+            assert_eq!(view, &data[..]);
+            assert_eq!(munmap(ptr, data.len()), 0);
+        }
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[cfg(target_os = "linux")]
