@@ -15,6 +15,9 @@
 //!   consumer on the event-driven `poll_wait` path vs the 1 ms
 //!   sleep-poll loop it replaced, plus the fetch-request rate an *idle*
 //!   consumer burns under each discipline.
+//! * pipelined produce — the producer's in-flight window over loopback
+//!   TCP (1 vs 5 vs 16 batches in flight on one multiplexed
+//!   connection): records/s and p99 submit-to-ack per batch.
 //!
 //! Results are also written machine-readably to
 //! `BENCH_broker_throughput.json` (repo root) via `benchkit::Report` so
@@ -23,10 +26,11 @@
 use kafka_ml::benchkit::{Bench, Report, Table};
 use kafka_ml::broker::{
     BrokerConfig, BrokerHandle, BrokerServer, BrokerTransport, ClientLocality, Cluster,
-    ClusterHandle, Consumer, LogConfig, NetProfile, Producer, ProducerConfig, Record, RemoteBroker,
-    StorageMode,
+    ClusterHandle, Consumer, LogConfig, NetProfile, ProduceHandle, ProduceOutcome, Producer,
+    ProducerConfig, Record, RemoteBroker, StorageMode,
 };
 use kafka_ml::util::Bytes;
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 const REPORT_PATH: &str = concat!(
@@ -744,6 +748,85 @@ fn main() -> anyhow::Result<()> {
             {
                 std::thread::sleep(Duration::from_millis(20));
             }
+        }
+        t.print();
+    }
+
+    // ---- pipelined produce window over the wire -------------------------------
+    // What the in-flight window buys on the real socket path: window 1
+    // replays the old submit-and-wait discipline (one round trip per
+    // batch, latency-bound), 5 is the producer default, 16 shows the
+    // saturation plateau. Single-record 64 B batches are the worst case
+    // for pipelining — the round trip IS the cost, so the window is the
+    // whole lever. p99 is submit-to-reaped-ack per batch.
+    {
+        let mut t = Table::new(
+            "Pipelined produce window (2k x 64B single-record batches, loopback TCP)",
+            &["window", "wall (s)", "records/s", "p99 batch (µs)"],
+        );
+        let batches = 2_000usize;
+        for window in [1usize, 5, 16] {
+            let cluster = Cluster::new(BrokerConfig::default());
+            cluster.create_topic("pw", 1);
+            let server = BrokerServer::start("127.0.0.1:0", cluster.clone())?;
+            let remote = RemoteBroker::connect(&server.addr().to_string())?;
+            let body = Bytes::from_vec(vec![9u8; 64]);
+            // Warmup: connection, allocator, server-side topic state.
+            for _ in 0..50 {
+                let rec = [Record::new(body.clone())];
+                remote.produce("pw", 0, &rec, ClientLocality::Remote, None)?;
+            }
+            let mut inflight: VecDeque<(Instant, Box<dyn ProduceHandle>)> =
+                VecDeque::with_capacity(window);
+            let mut lats: Vec<Duration> = Vec::with_capacity(batches);
+            let reap = |q: &mut VecDeque<(Instant, Box<dyn ProduceHandle>)>,
+                            lats: &mut Vec<Duration>|
+             -> anyhow::Result<()> {
+                let (submitted, mut h) = q.pop_front().expect("reap on empty window");
+                match h.wait() {
+                    ProduceOutcome::Acked(_) => {
+                        lats.push(submitted.elapsed());
+                        Ok(())
+                    }
+                    other => anyhow::bail!("pipelined produce failed: {other:?}"),
+                }
+            };
+            let t0 = Instant::now();
+            for _ in 0..batches {
+                while inflight.len() >= window {
+                    reap(&mut inflight, &mut lats)?;
+                }
+                let epoch = inflight.back().map(|(_, h)| h.epoch());
+                let h = remote.produce_submit(
+                    "pw",
+                    0,
+                    &[Record::new(body.clone())],
+                    ClientLocality::Remote,
+                    None,
+                    epoch,
+                );
+                inflight.push_back((Instant::now(), h));
+            }
+            while !inflight.is_empty() {
+                reap(&mut inflight, &mut lats)?;
+            }
+            let wall = t0.elapsed();
+            assert_eq!(lats.len(), batches);
+            lats.sort();
+            let rps = batches as f64 / wall.as_secs_f64();
+            let p99 = lats[lats.len() * 99 / 100].as_secs_f64() * 1e6;
+            t.row(&[
+                window.to_string(),
+                format!("{:.3}", wall.as_secs_f64()),
+                format!("{rps:.0}"),
+                format!("{p99:.1}"),
+            ]);
+            report.entry(
+                "pipelined_produce",
+                &[("window", window as f64), ("payload_bytes", 64.0)],
+                &[("records_per_s", rps), ("p99_us", p99)],
+            );
+            server.shutdown();
         }
         t.print();
     }

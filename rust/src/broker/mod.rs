@@ -41,7 +41,11 @@
 //!   [`transport::BrokerTransport`] abstraction, so producers,
 //!   consumers and coordinator jobs run unchanged in-process *or* as
 //!   separate OS processes (the paper's broker-pods vs job-pods
-//!   topology);
+//!   topology). The protocol is **pipelined and multiplexed**: every
+//!   request carries a correlation id, responses return in completion
+//!   order, N client threads share one socket, and the server runs N
+//!   reactor shards (`serve --reactors N`) that each own their
+//!   connections end to end;
 //! * a **simulated network profile** (external vs in-cluster link
 //!   latency) so the Tables I/II latency columns can be reproduced on a
 //!   single machine — see DESIGN.md §Table I/II latency model. On the
@@ -59,11 +63,12 @@
 //!
 //! ```text
 //!  Producer::flush_partition          Consumer::poll_wait / poll_batches_wait
-//!        │                                       │
-//!        │  (either transport)                   │ (empty poll; either transport)
+//!        │ (window of ≤ max_in_flight            │
+//!        │  batches; either transport)           │ (empty poll; either transport)
 //!        ▼                                       ▼
 //!  RemoteBroker ══ TCP frame ══► BrokerServer    RemoteBroker ══ FetchWait ══►
-//!        │            (or in-process: direct)    BrokerServer reactor ─► io worker
+//!        │   (corr-id multiplexed; or            BrokerServer reactor ─► io worker
+//!        │    in-process: direct call)                   │
 //!        ▼                                       ▼
 //!  Cluster::produce ──► Partition::append_batch  Cluster::register_data_wait
 //!        │                      │                        │
@@ -124,7 +129,7 @@ pub use partition::Partition;
 pub use producer::{Acks, Producer, ProducerConfig};
 pub use record::{ConsumedRecord, Record, RecordBatch};
 pub use topic::Topic;
-pub use transport::{BrokerHandle, BrokerTransport};
+pub use transport::{BrokerHandle, BrokerTransport, ProduceHandle, ProduceOutcome};
 pub use wire::{BrokerServer, RemoteBroker};
 
 /// `(topic, partition)` pair used throughout the broker.

@@ -13,12 +13,25 @@
 //!   possible);
 //! * `Acks::ExactlyOnce` retries with an idempotent `(producer_id, seq)`
 //!   so broker-side dedup keeps the log duplicate-free.
+//!
+//! **Pipelining**: up to [`ProducerConfig::max_in_flight`] batches per
+//! partition ride the wire at once (default 5), submitted through
+//! [`BrokerTransport::produce_submit`] and reaped **oldest-first** —
+//! per-partition in-order completion. That ordering is what keeps the
+//! idempotent dedup exact under failure: the broker applies one
+//! connection's requests serially in arrival order, so when a batch's
+//! transport dies, every batch behind it in the window is re-driven in
+//! the same order with its original sequence number, and the dedup
+//! resolves "did batch k actually land?" per batch. Nothing new is
+//! *ever* submitted behind a failed-but-not-yet-re-driven batch — a
+//! newer batch's higher sequence would make the older one's retry look
+//! like an idempotent replay and silently drop it.
 
 use super::net::ClientLocality;
 use super::record::Record;
-use super::transport::BrokerTransport;
-use anyhow::Result;
-use std::collections::HashMap;
+use super::transport::{BrokerTransport, ProduceHandle, ProduceOutcome};
+use anyhow::{anyhow, Result};
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -36,6 +49,12 @@ pub struct ProducerConfig {
     pub locality: ClientLocality,
     /// Retries for (at-least/exactly)-once on send failure.
     pub max_retries: usize,
+    /// Produce batches allowed in flight per partition before a flush
+    /// blocks on the oldest one's ack. `1` restores the strictly
+    /// synchronous pre-pipelining behavior; the default `5` hides the
+    /// broker round-trip behind batch accumulation (see the module
+    /// docs for why completion stays in order).
+    pub max_in_flight: usize,
 }
 
 impl Default for ProducerConfig {
@@ -45,8 +64,18 @@ impl Default for ProducerConfig {
             acks: Acks::AtLeastOnce,
             locality: ClientLocality::External,
             max_retries: 3,
+            max_in_flight: 5,
         }
     }
+}
+
+/// One submitted-but-not-reaped batch in a partition's window. The
+/// records are held (not dropped at submit) because a transport failure
+/// re-drives them through the synchronous path.
+struct InFlight {
+    batch: Vec<Record>,
+    seq: Option<(u64, u64)>,
+    handle: Box<dyn ProduceHandle>,
 }
 
 pub struct Producer {
@@ -59,6 +88,8 @@ pub struct Producer {
     /// Per-partition sequence counter for idempotence.
     seqs: HashMap<(String, u32), u64>,
     buffers: HashMap<(String, u32), Vec<Record>>,
+    /// Per-partition pipelining window, reaped oldest-first.
+    in_flight: HashMap<(String, u32), VecDeque<InFlight>>,
     round_robin: u64,
     /// Partition counts learned from topic metadata (get-or-create),
     /// so routing costs no metadata round trip per send. Topics never
@@ -75,6 +106,7 @@ impl Producer {
             producer_id,
             seqs: HashMap::new(),
             buffers: HashMap::new(),
+            in_flight: HashMap::new(),
             round_robin: 0,
             partition_counts: HashMap::new(),
         }
@@ -130,7 +162,9 @@ impl Producer {
         Ok(())
     }
 
-    /// Flush all buffered partitions.
+    /// Flush all buffered partitions AND reap every in-flight window:
+    /// when `flush` returns `Ok`, every record handed to the producer
+    /// is durable on the broker (or its failure has been reported).
     pub fn flush(&mut self) -> Result<()> {
         let keys: Vec<(String, u32)> = self
             .buffers
@@ -141,6 +175,15 @@ impl Producer {
         for k in keys {
             self.flush_partition(&k)?;
         }
+        let keys: Vec<(String, u32)> = self
+            .in_flight
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in keys {
+            self.drain_partition(&k)?;
+        }
         Ok(())
     }
 
@@ -148,7 +191,25 @@ impl Producer {
         self.buffers.values().map(|v| v.len()).sum()
     }
 
+    /// Batches submitted but not yet reaped, across all partitions.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.values().map(|q| q.len()).sum()
+    }
+
     fn flush_partition(&mut self, key: &(String, u32)) -> Result<()> {
+        if self.buffers.get(key).map_or(true, |b| b.is_empty()) {
+            return Ok(());
+        }
+        // Make room BEFORE submitting. Ordering invariant (see module
+        // docs): nothing new ever goes on the wire behind a batch that
+        // failed and has not been re-driven — `complete_oldest` drains
+        // the whole window on a transport failure, so reaching the
+        // submit below means every earlier batch is settled or healthy.
+        // On error the records stay buffered for a later retry.
+        let window = self.config.max_in_flight.max(1);
+        while self.in_flight.get(key).map_or(0, |q| q.len()) >= window {
+            self.complete_oldest(key)?;
+        }
         let batch = match self.buffers.get_mut(key) {
             Some(b) if !b.is_empty() => std::mem::take(b),
             _ => return Ok(()),
@@ -168,23 +229,123 @@ impl Producer {
             }
             _ => None,
         };
-        // The batch travels by reference: the happy path (and the
-        // at-most-once path) never copies it, and the at-least-once /
-        // exactly-once retry just re-sends the same slice — payloads are
-        // shared `Bytes`, so even the broker-side append copies nothing.
+        // The batch travels by reference: the happy path never copies
+        // it — payloads are shared `Bytes`, so even the broker-side
+        // append copies nothing. The records are kept in the window
+        // entry so a failed batch can be re-driven by reference too.
+        // A non-empty window pins the submit to the connection carrying
+        // its predecessors (`window_epoch`): landing this batch on any
+        // other connection could reorder it past an unresolved earlier
+        // seq and turn that batch's re-drive into a swallowed
+        // "duplicate".
+        let window_epoch = self
+            .in_flight
+            .get(key)
+            .and_then(|q| q.back())
+            .map(|f| f.handle.epoch());
+        let handle = self.broker.produce_submit(
+            &key.0,
+            key.1,
+            &batch,
+            self.config.locality,
+            seq,
+            window_epoch,
+        );
+        self.in_flight
+            .entry(key.clone())
+            .or_default()
+            .push_back(InFlight { batch, seq, handle });
+        Ok(())
+    }
+
+    /// Reap every outstanding batch for one partition, oldest first.
+    fn drain_partition(&mut self, key: &(String, u32)) -> Result<()> {
+        while self.in_flight.get(key).map_or(false, |q| !q.is_empty()) {
+            self.complete_oldest(key)?;
+        }
+        Ok(())
+    }
+
+    /// Block on the oldest in-flight batch for `key` and apply the
+    /// delivery semantics to its outcome.
+    fn complete_oldest(&mut self, key: &(String, u32)) -> Result<()> {
+        let Some(mut inflight) = self.in_flight.get_mut(key).and_then(|q| q.pop_front()) else {
+            return Ok(());
+        };
+        match inflight.handle.wait() {
+            ProduceOutcome::Acked(_) => Ok(()),
+            ProduceOutcome::Rejected(msg) if msg.contains("duplicate") => {
+                // A retry (ours or the transport's reconnect) hit the
+                // broker-side dedup: the batch is durable. Success.
+                Ok(())
+            }
+            ProduceOutcome::Rejected(msg) => match self.config.acks {
+                Acks::AtMostOnce => Ok(()), // fire and forget
+                Acks::AtLeastOnce => {
+                    // Blind re-send (no seq — duplicates are allowed).
+                    self.retry_sync(key, &inflight.batch, None)
+                }
+                Acks::ExactlyOnce => {
+                    let later_in_flight =
+                        self.in_flight.get(key).map_or(false, |q| !q.is_empty());
+                    if later_in_flight {
+                        // The broker processes a connection serially, so
+                        // batches behind this one may ALREADY be applied
+                        // with higher sequence numbers — re-sending this
+                        // seq now would read as an idempotent replay and
+                        // be dropped, silently losing the batch. Settle
+                        // the window, then surface the rejection.
+                        let _ = self.drain_partition(key);
+                        Err(anyhow!(
+                            "broker rejected batch at {}:{} (seq {:?}): {msg}",
+                            key.0,
+                            key.1,
+                            inflight.seq
+                        ))
+                    } else {
+                        // Nothing was submitted after it: retrying with
+                        // the original seq is exact.
+                        self.retry_sync(key, &inflight.batch, inflight.seq)
+                    }
+                }
+            },
+            ProduceOutcome::TransportFailed(e) => {
+                if matches!(self.config.acks, Acks::AtMostOnce) {
+                    return Ok(()); // fire and forget
+                }
+                log::debug!(
+                    "produce batch at {}:{} lost its transport ({e:#}); re-driving the window",
+                    key.0,
+                    key.1
+                );
+                // The connection died, so every batch behind this one is
+                // doomed too. Re-drive THIS batch first (its original
+                // seq disambiguates "did it land?" against the dedup),
+                // then settle the entire remaining window in order
+                // before flush_partition may submit anything new.
+                self.retry_sync(key, &inflight.batch, inflight.seq)?;
+                self.drain_partition(key)
+            }
+        }
+    }
+
+    /// Synchronous re-drive of one batch with the standard retry
+    /// budget. Mirrors the pre-pipelining produce loop: `duplicate`
+    /// answers are success, at-most-once swallows, the rest retry up to
+    /// `max_retries` times.
+    fn retry_sync(
+        &mut self,
+        key: &(String, u32),
+        batch: &[Record],
+        seq: Option<(u64, u64)>,
+    ) -> Result<()> {
         let mut attempt = 0;
         loop {
-            let res = self.broker.produce(
-                &key.0,
-                key.1,
-                &batch,
-                self.config.locality,
-                seq,
-            );
+            let res = self.broker.produce(&key.0, key.1, batch, self.config.locality, seq);
             match res {
                 Ok(_) => return Ok(()),
                 Err(e) if e.to_string().contains("duplicate") => {
-                    // Exactly-once retry hit broker-side dedup: success.
+                    // Retry hit broker-side dedup: the batch landed.
                     return Ok(());
                 }
                 Err(e) => {
@@ -209,7 +370,7 @@ impl Drop for Producer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::broker::{BrokerConfig, Cluster};
+    use crate::broker::{BrokerConfig, Cluster, ClusterHandle};
 
     fn cluster() -> ClusterHandle {
         Cluster::new(BrokerConfig { default_partitions: 2, ..Default::default() })
@@ -301,6 +462,34 @@ mod tests {
         // End-to-end zero-copy: the consumed payload IS the produced one.
         let got = c.fetch("t", 0, 0, 1, ClientLocality::InCluster).unwrap();
         assert!(crate::util::Bytes::ptr_eq(&got[0].record.value, &payload));
+    }
+
+    #[test]
+    fn window_drains_on_flush() {
+        let c = cluster();
+        c.create_topic("t", 1);
+        let mut p = Producer::new(
+            c.clone(),
+            ProducerConfig {
+                batch_size: 1, // every send is its own batch
+                max_in_flight: 5,
+                acks: Acks::ExactlyOnce,
+                ..Default::default()
+            },
+        );
+        for i in 0..12u8 {
+            p.send_to("t", 0, Record::new(vec![i])).unwrap();
+        }
+        // The in-process transport resolves at submit, but the window
+        // still queues handles until reaped — never beyond its size.
+        assert!(p.in_flight() <= 5, "window exceeded: {}", p.in_flight());
+        p.flush().unwrap();
+        assert_eq!(p.in_flight(), 0);
+        assert_eq!(p.buffered(), 0);
+        // All 12 records durable, in submission order, no duplicates.
+        let batch = c.fetch_batch("t", 0, 0, 100, ClientLocality::InCluster).unwrap();
+        let values: Vec<u8> = batch.records.iter().map(|(_, r)| r.value.as_slice()[0]).collect();
+        assert_eq!(values, (0..12u8).collect::<Vec<_>>());
     }
 
     #[test]

@@ -34,6 +34,67 @@ use std::time::{Duration, Instant};
 /// A shared, thread-safe handle on a broker — in-process or remote.
 pub type BrokerHandle = Arc<dyn BrokerTransport>;
 
+/// The terminal state of one submitted produce batch
+/// ([`BrokerTransport::produce_submit`]).
+///
+/// The three-way split is what lets the *producer* own retry policy:
+/// `Rejected` means the broker answered (retrying with the same seq is
+/// only safe if no later batch for the partition has been applied),
+/// while `TransportFailed` means the answer was lost — the batch may or
+/// may not have landed, and only re-driving it with its original
+/// `(producer_id, seq)` against the idempotent dedup can disambiguate.
+#[derive(Debug)]
+pub enum ProduceOutcome {
+    /// Appended (or deduplicated as an idempotent replay): the batch's
+    /// base offset.
+    Acked(u64),
+    /// The broker answered with an error. Definitive — the server saw
+    /// the request and refused it. (Messages containing `duplicate`
+    /// signal idempotent replay; the exactly-once producer treats them
+    /// as success.)
+    Rejected(String),
+    /// The transport died before an answer arrived.
+    TransportFailed(anyhow::Error),
+}
+
+/// One in-flight produce batch: `wait` blocks until the outcome is
+/// known. Handles complete independently, so a producer can keep
+/// several in flight and reap them oldest-first (per-partition in-order
+/// completion).
+pub trait ProduceHandle: Send {
+    /// Consume the handle's one result. A second call reports
+    /// `TransportFailed` (the result was already taken).
+    fn wait(&mut self) -> ProduceOutcome;
+
+    /// Identity of the connection this batch was submitted on, for the
+    /// producer's window pinning (see
+    /// [`BrokerTransport::produce_submit`]'s `window_epoch`). `0` means
+    /// "no connection" — the in-process transport, or a submission that
+    /// failed before reaching a socket.
+    fn epoch(&self) -> u64 {
+        0
+    }
+}
+
+/// A [`ProduceHandle`] that resolved at submission — the in-process
+/// transport's produce is synchronous (submission *is* completion), and
+/// remote submission failures are wrapped this way too.
+pub struct ReadyProduce(Option<ProduceOutcome>);
+
+impl ReadyProduce {
+    pub fn new(outcome: ProduceOutcome) -> ReadyProduce {
+        ReadyProduce(Some(outcome))
+    }
+}
+
+impl ProduceHandle for ReadyProduce {
+    fn wait(&mut self) -> ProduceOutcome {
+        self.0.take().unwrap_or_else(|| {
+            ProduceOutcome::TransportFailed(anyhow::anyhow!("produce outcome already consumed"))
+        })
+    }
+}
+
 /// The client-facing broker API. See the module docs for the two
 /// implementations.
 pub trait BrokerTransport: Send + Sync + std::fmt::Debug {
@@ -48,6 +109,46 @@ pub trait BrokerTransport: Send + Sync + std::fmt::Debug {
         locality: ClientLocality,
         producer_seq: Option<(u64, u64)>,
     ) -> Result<u64>;
+
+    /// Submit a batch without waiting for its answer — the pipelined
+    /// window path ([`crate::broker::ProducerConfig::max_in_flight`]).
+    /// Infallible at submission: every failure mode is reported through
+    /// the returned handle's [`ProduceHandle::wait`], so the producer
+    /// sees one uniform completion surface. The default implementation
+    /// delegates to the synchronous [`BrokerTransport::produce`]
+    /// (submission = completion, window effectively 1); the remote
+    /// transport overrides it to put the frame on the wire and return
+    /// before the broker answers.
+    ///
+    /// `window_epoch` pins a pipelined window to one connection. The
+    /// idempotent-dedup ordering guarantee rests on the server applying
+    /// one connection's produces strictly in arrival order — if batch k
+    /// is unresolved on a dead connection while batch k+1 lands with a
+    /// higher seq on a *fresh* one, k's re-drive would read as a
+    /// duplicate and be silently dropped. So: `None` means the window
+    /// is empty (any connection, write retried on a fresh one), while
+    /// `Some(e)` — the [`ProduceHandle::epoch`] of the newest in-flight
+    /// batch — means "submit on that exact connection or fail the
+    /// handle fast" so the producer drains and re-drives in order.
+    /// Transports without connection identity ignore it.
+    fn produce_submit(
+        &self,
+        topic: &str,
+        partition: u32,
+        records: &[Record],
+        locality: ClientLocality,
+        producer_seq: Option<(u64, u64)>,
+        window_epoch: Option<u64>,
+    ) -> Box<dyn ProduceHandle> {
+        let _ = window_epoch; // no connection identity in-process
+        let outcome = match self.produce(topic, partition, records, locality, producer_seq) {
+            Ok(base) => ProduceOutcome::Acked(base),
+            // No transport underneath the default path: an error is the
+            // broker's own (definitive) answer.
+            Err(e) => ProduceOutcome::Rejected(format!("{e:#}")),
+        };
+        Box::new(ReadyProduce::new(outcome))
+    }
 
     /// Read up to `max` records from one partition starting at `from`.
     fn fetch_batch(

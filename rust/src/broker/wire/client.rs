@@ -1,64 +1,290 @@
 //! `RemoteBroker`: the socket client side of the wire protocol — a
 //! [`BrokerTransport`] whose broker lives in another OS process.
 //!
-//! Connections are pooled (one synchronous request/response in flight
-//! per connection; concurrent callers each check one out, so a parked
-//! long-poll never blocks a producer sharing the handle) and recreated
-//! transparently: a transport-level failure (connect refused, reset,
-//! torn response frame) is retried **once** on a fresh connection. A
+//! The client is **multiplexed**: all ordinary calls share ONE socket.
+//! Each caller stamps its request with a fresh correlation id,
+//! registers a completion channel in the connection's demux table,
+//! writes its frame (a short critical section on the write half), and
+//! parks on its channel; a per-connection **reader thread** pulls
+//! response frames off the socket and routes each to its caller by
+//! correlation id ([`codec::peek_corr`]). N concurrent callers — and a
+//! pipelined producer with several batches in flight
+//! ([`produce_submit`](BrokerTransport::produce_submit)) — therefore
+//! cost one fd and zero per-call connection setup, and responses may
+//! complete out of submission order.
+//!
+//! Long-polls (`FetchWait`) ride a **dedicated lane** — a second
+//! multiplexed connection — so a poll parked server-side for seconds
+//! never delays a produce's response bytes behind its own (the server
+//! interleaves responses per *connection*; separating the lanes keeps
+//! the latency path clean even mid-flight). One-way `Metric` frames
+//! keep their own fire-and-forget socket.
+//!
+//! Failure model: a transport-level failure (connect refused, reset,
+//! torn or corrupt response frame, response timeout) kills the whole
+//! connection — the reader fails every parked caller, the lane opens a
+//! fresh connection, and the failed call is retried **once**. A
 //! retried produce is at-least-once — exactly like the in-process
 //! producer's own retry path — and the idempotent `(producer_id, seq)`
 //! dedup keeps exactly-once batches duplicate-free across reconnects.
 //! Server-side *answers* (including errors like `duplicate batch`) are
-//! definitive and never retried.
+//! definitive and never retried. Connections idle longer than
+//! [`CLIENT_IDLE_EXPIRY`] are dropped proactively — the server's idle
+//! sweep is about to close them anyway, and burning the one transport
+//! retry on a predictably-dead socket would turn every post-quiet-
+//! period call into a reconnect.
 //!
 //! Fetch responses decode zero-copy: every record in one response frame
 //! is a [`crate::util::Bytes`] slice view of that frame's single buffer.
-//!
-//! Long-poll (`FetchWait`) calls park **server-side** as reactor
-//! registrations, not blocked threads; a broker shutting down answers
-//! every parked long-poll with `woken = true`, so the client re-polls,
-//! observes the broker gone, and fails over its normal reconnect path
-//! instead of hanging until the wait deadline.
 
-use super::codec::{self, OpCode, Reader, WireError, STATUS_OK};
+use super::codec::{self, OpCode, Reader, STATUS_OK};
+use super::server;
 use crate::broker::group::{Assignor, GroupMembership};
 use crate::broker::net::ClientLocality;
 use crate::broker::record::{Record, RecordBatch};
-use crate::broker::transport::BrokerTransport;
+use crate::broker::transport::{BrokerTransport, ProduceHandle, ProduceOutcome, ReadyProduce};
 use crate::broker::TopicPartition;
+use crate::exec::channel::{bounded, Receiver, RecvError, Sender};
 use crate::util::bytes::Bytes;
 use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
 use std::io::Write;
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// TCP connect timeout per address candidate.
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
 
-/// Read timeout for ordinary calls (long-polls get their own margin).
+/// How long a caller waits for its response (long-polls get their own
+/// margin).
 const CALL_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// Extra read-timeout slack on top of a long-poll's requested wait, so
-/// a server answering exactly at the deadline is never misread as dead.
+/// Extra wait slack on top of a long-poll's requested timeout, so a
+/// server answering exactly at the deadline is never misread as dead.
 const WAIT_MARGIN: Duration = Duration::from_secs(5);
 
-/// Idle connections kept for reuse.
-const POOL_MAX: usize = 4;
+/// Drop a connection this long after its last request instead of
+/// reusing it: the server's idle sweep closes connections after
+/// [`server::IDLE_TIMEOUT`] (checked every [`server::SWEEP_INTERVAL`]),
+/// so anything older than the sweep window minus one full sweep period
+/// is presumed dead and not worth burning the one transport retry on.
+pub const CLIENT_IDLE_EXPIRY: Duration = Duration::from_secs(
+    server::IDLE_TIMEOUT.as_secs() - 2 * server::SWEEP_INTERVAL.as_secs(),
+);
+
+/// What the reader thread delivers to a parked caller: the whole
+/// response frame body, or the transport failure that killed the
+/// connection.
+type Delivery = Result<Bytes, String>;
+type PendingMap = HashMap<u64, Sender<Delivery>>;
+
+/// One multiplexed connection: a shared write half, a demux table, and
+/// a reader thread routing response frames to registered callers.
+struct MuxConn {
+    writer: Mutex<TcpStream>,
+    /// `None` once the connection has failed — the tombstone that makes
+    /// late registrations fail fast instead of parking forever. The
+    /// reader thread holds its own `Arc` on this (NOT on the `MuxConn`),
+    /// so a discarded connection's memory is not pinned by its reader.
+    pending: Arc<Mutex<Option<PendingMap>>>,
+    /// Last request submission, for [`CLIENT_IDLE_EXPIRY`].
+    last_used: Mutex<Instant>,
+    /// Broker-unique connection identity (never 0), for the producer's
+    /// window pinning (`produce_submit`'s `window_epoch`).
+    epoch: u64,
+}
+
+impl MuxConn {
+    /// Connect and spawn the reader thread.
+    fn open(broker: &RemoteBroker, lane: &'static str) -> Result<Arc<MuxConn>> {
+        let stream = broker.fresh_stream()?;
+        let read_half = stream.try_clone().context("cloning broker socket")?;
+        let conn = Arc::new(MuxConn {
+            writer: Mutex::new(stream),
+            pending: Arc::new(Mutex::new(Some(HashMap::new()))),
+            last_used: Mutex::new(Instant::now()),
+            epoch: broker.conn_epoch.fetch_add(1, Ordering::Relaxed) + 1,
+        });
+        let pending = conn.pending.clone();
+        std::thread::Builder::new()
+            .name(format!("remote-mux-{lane}"))
+            .spawn(move || reader_loop(read_half, pending))
+            .context("spawning connection reader")?;
+        Ok(conn)
+    }
+
+    /// Reserve a demux slot for `corr`. Fails if the connection already
+    /// died (the caller should grab a fresh one).
+    fn register(&self, corr: u64) -> Result<Receiver<Delivery>> {
+        let (tx, rx) = bounded(1);
+        let mut p = self.pending.lock().unwrap();
+        match p.as_mut() {
+            Some(map) => {
+                map.insert(corr, tx);
+                *self.last_used.lock().unwrap() = Instant::now();
+                Ok(rx)
+            }
+            None => bail!("connection already failed"),
+        }
+    }
+
+    fn is_dead(&self) -> bool {
+        self.pending.lock().unwrap().is_none()
+    }
+
+    fn idle_expired(&self) -> bool {
+        self.last_used.lock().unwrap().elapsed() >= CLIENT_IDLE_EXPIRY
+    }
+
+    /// Tear the connection down: fail every parked caller and shut the
+    /// socket so the reader thread exits *now* (a plain drop would
+    /// leave it blocked in `read` until the server's idle sweep).
+    fn kill(&self) {
+        fail_all(&self.pending, "connection closed");
+        self.writer.lock().unwrap().shutdown(Shutdown::Both).ok();
+    }
+}
+
+/// Fail every registered caller and tombstone the map.
+fn fail_all(pending: &Arc<Mutex<Option<PendingMap>>>, why: &str) {
+    let map = pending.lock().unwrap().take();
+    if let Some(map) = map {
+        for (_, tx) in map {
+            tx.send(Err(why.to_string())).ok();
+        }
+    }
+}
+
+/// The per-connection demux pump: read frames, route by correlation id.
+/// Exits (failing all parked callers) on the first transport error —
+/// after a torn frame the stream position is unknowable, so the whole
+/// connection is condemned rather than resynchronized.
+fn reader_loop(mut stream: TcpStream, pending: Arc<Mutex<Option<PendingMap>>>) {
+    loop {
+        let body = match codec::read_frame(&mut stream) {
+            Ok(b) => b,
+            Err(e) => {
+                fail_all(&pending, &format!("wire read failed: {e}"));
+                return;
+            }
+        };
+        let Some(corr) = codec::peek_corr(body.as_slice()) else {
+            fail_all(&pending, "response too short for a correlation id");
+            return;
+        };
+        let slot = match pending.lock().unwrap().as_mut() {
+            Some(map) => map.remove(&corr),
+            None => return, // killed while we were reading
+        };
+        match slot {
+            Some(tx) => {
+                tx.send(Ok(body)).ok();
+            }
+            None => {
+                // A caller that timed out and walked away; its answer
+                // is stale but the stream is still framed — drop it.
+                log::debug!("dropping unmatched response (corr {corr})");
+            }
+        }
+    }
+}
+
+/// One named slot holding the current [`MuxConn`] for a traffic class.
+struct Lane {
+    name: &'static str,
+    slot: Mutex<Option<Arc<MuxConn>>>,
+}
+
+impl Lane {
+    fn new(name: &'static str) -> Lane {
+        Lane { name, slot: Mutex::new(None) }
+    }
+
+    /// The lane's live connection, opening a fresh one if the slot is
+    /// empty, dead, or idle-expired.
+    fn get(&self, broker: &RemoteBroker) -> Result<Arc<MuxConn>> {
+        let stale = {
+            let mut slot = self.slot.lock().unwrap();
+            match slot.as_ref() {
+                Some(c) if !c.is_dead() && !c.idle_expired() => return Ok(c.clone()),
+                Some(_) => slot.take(),
+                None => None,
+            }
+        };
+        if let Some(c) = stale {
+            c.kill();
+        }
+        let fresh = MuxConn::open(broker, self.name)?;
+        let mut slot = self.slot.lock().unwrap();
+        if let Some(c) = slot.as_ref() {
+            if !c.is_dead() {
+                // Another caller raced a connection in first: share it.
+                let theirs = c.clone();
+                drop(slot);
+                fresh.kill();
+                return Ok(theirs);
+            }
+        }
+        *slot = Some(fresh.clone());
+        Ok(fresh)
+    }
+
+    /// Drop `conn` from the slot (if it is still the resident) and kill
+    /// it. Called on any transport failure.
+    fn discard(&self, conn: &Arc<MuxConn>) {
+        {
+            let mut slot = self.slot.lock().unwrap();
+            if slot.as_ref().map_or(false, |c| Arc::ptr_eq(c, conn)) {
+                slot.take();
+            }
+        }
+        conn.kill();
+    }
+
+    fn kill_resident(&self) {
+        if let Some(c) = self.slot.lock().unwrap().take() {
+            c.kill();
+        }
+    }
+}
 
 /// A socket [`BrokerTransport`]. Cheap to share: clone the `Arc`.
-#[derive(Debug)]
 pub struct RemoteBroker {
     addr: String,
-    pool: Mutex<Vec<TcpStream>>,
+    /// Ordinary request/response traffic (everything but long-polls).
+    main: Lane,
+    /// `FetchWait` long-polls, so a poll parked for seconds shares no
+    /// socket with the latency path.
+    wait: Lane,
     /// Dedicated connection for one-way `Metric` frames (the server
     /// never answers them), so a counter bump costs one buffered socket
     /// write — it never stalls the latency path and never desyncs the
-    /// request/response discipline of the pooled connections.
-    metrics_conn: Mutex<Option<TcpStream>>,
+    /// demux discipline of the mux connections. Timestamped for the
+    /// same idle expiry as the lanes.
+    metrics_conn: Mutex<Option<(TcpStream, Instant)>>,
     corr: AtomicU64,
+    /// Source of [`MuxConn::epoch`] identities (post-increment, so the
+    /// first connection is epoch 1 and 0 stays "no connection").
+    conn_epoch: AtomicU64,
+}
+
+impl std::fmt::Debug for RemoteBroker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RemoteBroker").field("addr", &self.addr).finish()
+    }
+}
+
+impl Drop for RemoteBroker {
+    fn drop(&mut self) {
+        // Shut the sockets so the reader threads exit immediately.
+        self.main.kill_resident();
+        self.wait.kill_resident();
+        if let Some((c, _)) = self.metrics_conn.lock().unwrap().take() {
+            c.shutdown(Shutdown::Both).ok();
+        }
+    }
 }
 
 impl RemoteBroker {
@@ -68,12 +294,13 @@ impl RemoteBroker {
     pub fn connect(addr: &str) -> Result<Arc<RemoteBroker>> {
         let broker = Arc::new(RemoteBroker {
             addr: addr.to_string(),
-            pool: Mutex::new(Vec::new()),
+            main: Lane::new("main"),
+            wait: Lane::new("wait"),
             metrics_conn: Mutex::new(None),
             corr: AtomicU64::new(1),
+            conn_epoch: AtomicU64::new(0),
         });
-        let probe = broker.fresh_conn()?;
-        broker.checkin(probe);
+        broker.main.get(&broker)?; // eager probe: unreachable fails here
         Ok(broker)
     }
 
@@ -81,7 +308,7 @@ impl RemoteBroker {
         &self.addr
     }
 
-    fn fresh_conn(&self) -> Result<TcpStream> {
+    fn fresh_stream(&self) -> Result<TcpStream> {
         let mut last: Option<std::io::Error> = None;
         let addrs = self
             .addr
@@ -104,24 +331,37 @@ impl RemoteBroker {
         })
     }
 
-    fn checkout(&self) -> Result<TcpStream> {
-        if let Some(c) = self.pool.lock().unwrap().pop() {
-            return Ok(c);
-        }
-        self.fresh_conn()
+    /// Submit one frame on `conn` and return the demux channel its
+    /// response will arrive on. Register-then-write: the slot exists
+    /// before the first response byte can possibly come back.
+    fn submit(
+        &self,
+        conn: &MuxConn,
+        op: OpCode,
+        payload: &[u8],
+    ) -> Result<(u64, Receiver<Delivery>)> {
+        let corr = self.corr.fetch_add(1, Ordering::SeqCst);
+        let rx = conn.register(corr)?;
+        let frame = codec::encode_request(corr, op, payload);
+        conn.writer
+            .lock()
+            .unwrap()
+            .write_all(&frame)
+            .with_context(|| format!("writing {op:?} frame"))?;
+        Ok((corr, rx))
     }
 
-    fn checkin(&self, conn: TcpStream) {
-        let mut pool = self.pool.lock().unwrap();
-        if pool.len() < POOL_MAX {
-            pool.push(conn);
-        }
-    }
-
-    /// One request/response round trip. Transport failures are retried
-    /// once on a fresh connection; a decoded server answer (ok *or*
+    /// One request/response round trip on `lane`. Transport failures
+    /// (including a response timeout) kill the connection and are
+    /// retried once on a fresh one; a decoded server answer (ok *or*
     /// error) ends the call.
-    fn call(&self, op: OpCode, payload: &[u8], read_timeout: Duration) -> Result<Reader> {
+    fn call_on(
+        &self,
+        lane: &Lane,
+        op: OpCode,
+        payload: &[u8],
+        wait_for: Duration,
+    ) -> Result<Reader> {
         // Reject a frame the server is guaranteed to refuse before
         // shipping (and retrying!) megabytes of it: the peer would just
         // drop the connection without a response.
@@ -135,11 +375,17 @@ impl RemoteBroker {
         let mut attempt = 0usize;
         loop {
             attempt += 1;
-            let conn = if attempt == 1 { self.checkout()? } else { self.fresh_conn()? };
-            match self.try_call(conn, op, payload, read_timeout) {
-                Ok(answer) => {
-                    return answer.map(Reader::new);
-                }
+            let outcome = lane
+                .get(self)
+                .and_then(|conn| match self.try_call(&conn, op, payload, wait_for) {
+                    Ok(answer) => Ok(answer),
+                    Err(e) => {
+                        lane.discard(&conn);
+                        Err(e)
+                    }
+                });
+            match outcome {
+                Ok(answer) => return answer.map(Reader::new),
                 Err(e) if attempt == 1 => {
                     log::debug!("broker call {op:?} failed ({e:#}); reconnecting to {}", self.addr);
                 }
@@ -154,39 +400,115 @@ impl RemoteBroker {
     /// server's answer was an error (definitive).
     fn try_call(
         &self,
-        mut conn: TcpStream,
+        conn: &MuxConn,
         op: OpCode,
         payload: &[u8],
-        read_timeout: Duration,
+        wait_for: Duration,
     ) -> Result<Result<Bytes, anyhow::Error>> {
-        let corr = self.corr.fetch_add(1, Ordering::SeqCst);
-        let frame = codec::encode_request(corr, op, payload);
-        conn.set_read_timeout(Some(read_timeout))?;
-        conn.write_all(&frame)?;
-        let body = codec::read_frame(&mut conn).map_err(|e| match e {
-            WireError::Io(io) => anyhow::Error::from(io),
-            other => anyhow::Error::from(other),
-        })?;
-        let mut r = Reader::new(body.clone());
-        let rcorr = r
-            .u64()
-            .map_err(|_| anyhow!("response too short for a correlation id"))?;
-        if rcorr != corr {
-            // The connection is out of sync (e.g. a stale response from
-            // a timed-out call); do not reuse it.
-            bail!("correlation mismatch: sent {corr}, got {rcorr}");
-        }
-        let status = r.u8().map_err(|_| anyhow!("response missing status byte"))?;
-        self.checkin(conn);
-        if status == STATUS_OK {
-            Ok(Ok(body.slice(9..)))
-        } else {
-            let msg = r
-                .str()
-                .unwrap_or_else(|_| "unreadable error message".to_string());
-            Ok(Err(anyhow!("{msg}")))
+        let (corr, rx) = self.submit(conn, op, payload)?;
+        let body = match rx.recv_deadline(Instant::now() + wait_for) {
+            Ok(Ok(body)) => body,
+            Ok(Err(why)) => bail!("{why}"),
+            Err(RecvError::Timeout) => bail!("no response within {wait_for:?}"),
+            Err(RecvError::Disconnected) => bail!("connection reader exited"),
+        };
+        decode_response(corr, body)
+    }
+}
+
+/// Split a response frame body into the definitive server answer.
+/// Outer `Err` = the body itself was unreadable (transport-grade: the
+/// connection is condemned); inner `Err` = the server answered with an
+/// error message.
+fn decode_response(corr: u64, body: Bytes) -> Result<Result<Bytes, anyhow::Error>> {
+    let mut r = Reader::new(body.clone());
+    let rcorr = r
+        .u64()
+        .map_err(|_| anyhow!("response too short for a correlation id"))?;
+    if rcorr != corr {
+        // The demux routes by corr, so this can only mean memory
+        // corruption or a bug — but check anyway: it's one compare.
+        bail!("correlation mismatch: sent {corr}, got {rcorr}");
+    }
+    let status = r.u8().map_err(|_| anyhow!("response missing status byte"))?;
+    if status == STATUS_OK {
+        Ok(Ok(body.slice(9..)))
+    } else {
+        let msg = r
+            .str()
+            .unwrap_or_else(|_| "unreadable error message".to_string());
+        Ok(Err(anyhow!("{msg}")))
+    }
+}
+
+/// An in-flight windowed produce on a [`RemoteBroker`]: the frame is
+/// already written; `wait` parks on the demux channel for the answer.
+struct RemoteProduceHandle {
+    conn: Arc<MuxConn>,
+    rx: Receiver<Delivery>,
+    corr: u64,
+    deadline: Instant,
+}
+
+impl ProduceHandle for RemoteProduceHandle {
+    fn wait(&mut self) -> ProduceOutcome {
+        let body = match self.rx.recv_deadline(self.deadline) {
+            Ok(Ok(body)) => body,
+            Ok(Err(why)) => return ProduceOutcome::TransportFailed(anyhow!("{why}")),
+            Err(RecvError::Timeout) => {
+                // The connection is wedged (or the server is): condemn
+                // it so every sibling in-flight batch fails fast too.
+                self.conn.kill();
+                return ProduceOutcome::TransportFailed(anyhow!(
+                    "no produce response within {:?}",
+                    CALL_TIMEOUT
+                ));
+            }
+            Err(RecvError::Disconnected) => {
+                return ProduceOutcome::TransportFailed(anyhow!("connection reader exited"))
+            }
+        };
+        match decode_response(self.corr, body) {
+            Ok(Ok(payload)) => {
+                let mut r = Reader::new(payload);
+                match r.u64() {
+                    Ok(base) => ProduceOutcome::Acked(base),
+                    Err(_) => ProduceOutcome::TransportFailed(anyhow!(
+                        "produce ack missing its base offset"
+                    )),
+                }
+            }
+            Ok(Err(server_err)) => ProduceOutcome::Rejected(format!("{server_err:#}")),
+            Err(e) => {
+                self.conn.kill();
+                ProduceOutcome::TransportFailed(e)
+            }
         }
     }
+
+    fn epoch(&self) -> u64 {
+        self.conn.epoch
+    }
+}
+
+fn produce_payload(
+    topic: &str,
+    partition: u32,
+    records: &[Record],
+    producer_seq: Option<(u64, u64)>,
+) -> Vec<u8> {
+    let mut p = Vec::new();
+    codec::put_u32(&mut p, partition);
+    codec::put_opt(&mut p, producer_seq.as_ref(), |o, (pid, seq)| {
+        codec::put_u64(o, *pid);
+        codec::put_u64(o, *seq);
+    });
+    codec::put_str(&mut p, topic);
+    codec::put_records(
+        &mut p,
+        records.iter().enumerate().map(|(i, rec)| (i as u64, rec)),
+    );
+    p
 }
 
 impl BrokerTransport for RemoteBroker {
@@ -198,19 +520,87 @@ impl BrokerTransport for RemoteBroker {
         _locality: ClientLocality,
         producer_seq: Option<(u64, u64)>,
     ) -> Result<u64> {
-        let mut p = Vec::new();
-        codec::put_u32(&mut p, partition);
-        codec::put_opt(&mut p, producer_seq.as_ref(), |o, (pid, seq)| {
-            codec::put_u64(o, *pid);
-            codec::put_u64(o, *seq);
-        });
-        codec::put_str(&mut p, topic);
-        codec::put_records(
-            &mut p,
-            records.iter().enumerate().map(|(i, rec)| (i as u64, rec)),
-        );
-        let mut r = self.call(OpCode::Produce, &p, CALL_TIMEOUT)?;
+        let p = produce_payload(topic, partition, records, producer_seq);
+        let mut r = self.call_on(&self.main, OpCode::Produce, &p, CALL_TIMEOUT)?;
         Ok(r.u64()?)
+    }
+
+    fn produce_submit(
+        &self,
+        topic: &str,
+        partition: u32,
+        records: &[Record],
+        _locality: ClientLocality,
+        producer_seq: Option<(u64, u64)>,
+        window_epoch: Option<u64>,
+    ) -> Box<dyn ProduceHandle> {
+        let p = produce_payload(topic, partition, records, producer_seq);
+        if p.len() as u64 + 9 > u64::from(codec::MAX_FRAME_BYTES) {
+            // Definitive — no transport involved, and no retry could
+            // ever make the frame fit.
+            return Box::new(ReadyProduce::new(ProduceOutcome::Rejected(format!(
+                "produce payload of {} bytes exceeds the wire frame limit ({} bytes)",
+                p.len(),
+                codec::MAX_FRAME_BYTES
+            ))));
+        }
+        // With in-flight window neighbors (`window_epoch`), the batch
+        // must go out on the exact connection that carried them — the
+        // server's per-connection serial ordering is what makes a
+        // failed window re-drivable without tripping the idempotent
+        // dedup. Submitting on any *other* connection could land this
+        // batch (higher seq) while a predecessor never arrives, turning
+        // that predecessor's re-drive into a silently-swallowed
+        // "duplicate". So on a mismatch or a dead connection we fail
+        // the handle fast and let the producer drain + re-drive FIFO.
+        // With an empty window the write is free to retry once on a
+        // fresh connection (nothing has reached the broker if the write
+        // itself fails).
+        let attempts = if window_epoch.is_some() { 1 } else { 2 };
+        let mut attempt = 0usize;
+        loop {
+            attempt += 1;
+            let submitted = self.main.get(self).and_then(|conn| {
+                if let Some(we) = window_epoch {
+                    if conn.epoch != we {
+                        bail!(
+                            "connection changed mid-window (epoch {} -> {}); \
+                             draining the window before re-driving",
+                            we,
+                            conn.epoch
+                        );
+                    }
+                }
+                match self.submit(&conn, OpCode::Produce, &p) {
+                    Ok((corr, rx)) => Ok((conn, corr, rx)),
+                    Err(e) => {
+                        self.main.discard(&conn);
+                        Err(e)
+                    }
+                }
+            });
+            match submitted {
+                Ok((conn, corr, rx)) => {
+                    return Box::new(RemoteProduceHandle {
+                        conn,
+                        rx,
+                        corr,
+                        deadline: Instant::now() + CALL_TIMEOUT,
+                    });
+                }
+                Err(e) if attempt < attempts => {
+                    log::debug!(
+                        "produce submit failed ({e:#}); reconnecting to {}",
+                        self.addr
+                    );
+                }
+                Err(e) => {
+                    return Box::new(ReadyProduce::new(ProduceOutcome::TransportFailed(
+                        e.context(format!("broker {} unreachable (Produce)", self.addr)),
+                    )));
+                }
+            }
+        }
     }
 
     fn fetch_batch(
@@ -226,7 +616,7 @@ impl BrokerTransport for RemoteBroker {
         codec::put_u64(&mut p, from);
         codec::put_u32(&mut p, max.min(u32::MAX as usize) as u32);
         codec::put_str(&mut p, topic);
-        let mut r = self.call(OpCode::FetchBatch, &p, CALL_TIMEOUT)?;
+        let mut r = self.call_on(&self.main, OpCode::FetchBatch, &p, CALL_TIMEOUT)?;
         // Zero-copy on this side of the wire too: every record is a
         // slice of the one response buffer.
         let records = r.records()?;
@@ -241,7 +631,7 @@ impl BrokerTransport for RemoteBroker {
         let mut p = Vec::new();
         codec::put_u32(&mut p, partition);
         codec::put_str(&mut p, topic);
-        let mut r = self.call(OpCode::Offsets, &p, CALL_TIMEOUT)?;
+        let mut r = self.call_on(&self.main, OpCode::Offsets, &p, CALL_TIMEOUT)?;
         Ok((r.u64()?, r.u64()?))
     }
 
@@ -249,24 +639,24 @@ impl BrokerTransport for RemoteBroker {
         let mut p = Vec::new();
         codec::put_u32(&mut p, partitions);
         codec::put_str(&mut p, topic);
-        let mut r = self.call(OpCode::CreateTopic, &p, CALL_TIMEOUT)?;
+        let mut r = self.call_on(&self.main, OpCode::CreateTopic, &p, CALL_TIMEOUT)?;
         Ok(r.u32()?)
     }
 
     fn topic_partitions(&self, topic: &str) -> Result<Option<u32>> {
         let mut p = Vec::new();
         codec::put_str(&mut p, topic);
-        let mut r = self.call(OpCode::Metadata, &p, CALL_TIMEOUT)?;
+        let mut r = self.call_on(&self.main, OpCode::Metadata, &p, CALL_TIMEOUT)?;
         Ok(r.opt(|r| r.u32())?)
     }
 
     fn topic_names(&self) -> Result<Vec<String>> {
-        let mut r = self.call(OpCode::ListTopics, &[], CALL_TIMEOUT)?;
+        let mut r = self.call_on(&self.main, OpCode::ListTopics, &[], CALL_TIMEOUT)?;
         Ok(r.strings()?)
     }
 
     fn alloc_producer_id(&self) -> Result<u64> {
-        let mut r = self.call(OpCode::AllocProducerId, &[], CALL_TIMEOUT)?;
+        let mut r = self.call_on(&self.main, OpCode::AllocProducerId, &[], CALL_TIMEOUT)?;
         Ok(r.u64()?)
     }
 
@@ -282,7 +672,7 @@ impl BrokerTransport for RemoteBroker {
         codec::put_str(&mut p, group_id);
         codec::put_str(&mut p, member_id);
         codec::put_strings(&mut p, topics);
-        let mut r = self.call(OpCode::JoinGroup, &p, CALL_TIMEOUT)?;
+        let mut r = self.call_on(&self.main, OpCode::JoinGroup, &p, CALL_TIMEOUT)?;
         Ok(r.membership()?)
     }
 
@@ -290,7 +680,7 @@ impl BrokerTransport for RemoteBroker {
         let mut p = Vec::new();
         codec::put_str(&mut p, group_id);
         codec::put_str(&mut p, member_id);
-        self.call(OpCode::LeaveGroup, &p, CALL_TIMEOUT)?;
+        self.call_on(&self.main, OpCode::LeaveGroup, &p, CALL_TIMEOUT)?;
         Ok(())
     }
 
@@ -298,7 +688,7 @@ impl BrokerTransport for RemoteBroker {
         let mut p = Vec::new();
         codec::put_str(&mut p, group_id);
         codec::put_str(&mut p, member_id);
-        let mut r = self.call(OpCode::Heartbeat, &p, CALL_TIMEOUT)?;
+        let mut r = self.call_on(&self.main, OpCode::Heartbeat, &p, CALL_TIMEOUT)?;
         Ok(r.opt(|r| r.membership())?)
     }
 
@@ -311,7 +701,7 @@ impl BrokerTransport for RemoteBroker {
             codec::put_u32(&mut p, *partition);
             codec::put_u64(&mut p, *off);
         }
-        self.call(OpCode::CommitOffsets, &p, CALL_TIMEOUT)?;
+        self.call_on(&self.main, OpCode::CommitOffsets, &p, CALL_TIMEOUT)?;
         Ok(())
     }
 
@@ -320,7 +710,7 @@ impl BrokerTransport for RemoteBroker {
         codec::put_str(&mut p, group_id);
         codec::put_str(&mut p, &tp.0);
         codec::put_u32(&mut p, tp.1);
-        let mut r = self.call(OpCode::CommittedOffset, &p, CALL_TIMEOUT)?;
+        let mut r = self.call_on(&self.main, OpCode::CommittedOffset, &p, CALL_TIMEOUT)?;
         Ok(r.opt(|r| r.u64())?)
     }
 
@@ -342,10 +732,11 @@ impl BrokerTransport for RemoteBroker {
             codec::put_u32(&mut p, *partition);
             codec::put_u64(&mut p, *pos);
         }
-        // The server clamps the park (its MAX_WAIT_SLICE); our read
-        // timeout just needs to outlast whatever it grants.
-        let read_timeout = timeout.min(Duration::from_secs(3600)) + WAIT_MARGIN;
-        let mut r = self.call(OpCode::FetchWait, &p, read_timeout)?;
+        // The server clamps the park (its MAX_WAIT_SLICE); our wait
+        // just needs to outlast whatever it grants. The dedicated wait
+        // lane means this parked call shares no socket with produces.
+        let wait_for = timeout.min(Duration::from_secs(3600)) + WAIT_MARGIN;
+        let mut r = self.call_on(&self.wait, OpCode::FetchWait, &p, wait_for)?;
         Ok(r.bool()?)
     }
 
@@ -359,18 +750,28 @@ impl BrokerTransport for RemoteBroker {
         let corr = self.corr.fetch_add(1, Ordering::SeqCst);
         let frame = codec::encode_request(corr, OpCode::Metric, &p);
         let mut conn = self.metrics_conn.lock().unwrap();
+        // Proactive idle expiry, same reasoning as the mux lanes: the
+        // server's sweep is about to close a quiet metrics channel, and
+        // a one-way write down a dead socket is silently lost.
+        if conn
+            .as_ref()
+            .map_or(false, |(_, at)| at.elapsed() >= CLIENT_IDLE_EXPIRY)
+        {
+            *conn = None;
+        }
         for _ in 0..2 {
             if conn.is_none() {
-                match self.fresh_conn() {
-                    Ok(c) => *conn = Some(c),
+                match self.fresh_stream() {
+                    Ok(c) => *conn = Some((c, Instant::now())),
                     Err(e) => {
                         log::debug!("dropping metric '{name}' (+{delta}): {e:#}");
                         return;
                     }
                 }
             }
-            if let Some(c) = conn.as_mut() {
+            if let Some((c, at)) = conn.as_mut() {
                 if c.write_all(&frame).is_ok() {
+                    *at = Instant::now();
                     return;
                 }
             }

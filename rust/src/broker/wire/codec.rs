@@ -22,6 +22,14 @@
 //! log sharing the request buffer's allocation, and a fetched record
 //! reaches the consumer sharing the response buffer's.
 //!
+//! The `corr_id` is the pipelining handle: a client may write many
+//! requests down one connection before reading anything back, and
+//! responses come back in *completion* order (a parked long-poll
+//! finishes after the produce that followed it), so each side matches
+//! frames by correlation id ([`peek_corr`]) rather than by position.
+//! The server additionally peeks the opcode ([`peek_op`]) to pick a
+//! dispatch lane before decoding.
+//!
 //! Error payloads carry the server's error message verbatim, so client
 //! code that matches on messages (the exactly-once producer looks for
 //! `duplicate`) behaves identically over the wire.
@@ -174,6 +182,21 @@ fn read_exact(stream: &mut impl Read, buf: &mut [u8]) -> Result<(), WireError> {
             WireError::Io(e)
         }
     })
+}
+
+/// Peek the correlation id of a frame *body* — requests and responses
+/// both lead with `corr:u64`, so this is what a pipelined peer demuxes
+/// on before any further decoding. `None` if the body is shorter than
+/// the envelope prefix.
+pub fn peek_corr(body: &[u8]) -> Option<u64> {
+    Some(u64::from_le_bytes(body.get(0..8)?.try_into().ok()?))
+}
+
+/// Peek the opcode byte of a request body (byte 8, right after the
+/// correlation id) — how the server picks a dispatch lane (one-way
+/// metric / long-poll / ordinary-serial) before decoding the frame.
+pub fn peek_op(body: &[u8]) -> Option<u8> {
+    body.get(8).copied()
 }
 
 /// Start a request frame in `out` (clearing it): placeholder header,

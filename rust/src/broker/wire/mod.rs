@@ -11,27 +11,43 @@
 //!   [`crate::util::Bytes`] slice views of the received buffer. Fetch
 //!   responses can also be *encoded* zero-copy, as gather-write chunk
 //!   lists whose record payloads alias the broker log
-//!   ([`codec::encode_fetch_response_chunks`]).
+//!   ([`codec::encode_fetch_response_chunks`]). Every request body
+//!   leads with a **correlation id** — the pipelining handle: requests
+//!   stream down a connection back to back, responses return in
+//!   *completion* order, and both ends match them up by id
+//!   ([`codec::peek_corr`]).
 //! * [`reactor`] — the event-loop substrate: a readiness [`Poller`]
 //!   (epoll on Linux, portable `poll(2)` elsewhere), an eventfd/pipe
 //!   [`WakeFd`] for cross-thread wakeups, and vectored
 //!   [`writev`](reactor::writev) — all over the vendored `libc` shim.
-//! * [`server`] — [`BrokerServer`]: an epoll reactor thread plus a
-//!   small request worker pool, serving a [`crate::broker::Cluster`].
-//!   Thread count is O(worker pool), not O(connections). Blocking
-//!   long-polls (`FetchWait`) park **server-side** as registrations on
-//!   the broker's [`crate::broker::notify`] wait-sets, bridged to the
-//!   reactor through a wake hook — the wire carries the deadline in
-//!   the request and the wakeup in the response, so a parked remote
-//!   consumer reacts to a produce in one socket round trip, with zero
-//!   polling on the wire and zero threads per parked connection.
-//!   Shutdown rides the crate's cancel primitives and unblocks every
-//!   connection deterministically.
+//!   Each reactor shard owns one `Poller` + `WakeFd` pair.
+//! * [`server`] — [`BrokerServer`]: **N reactor shards** (`serve
+//!   --reactors N`, default [`server::default_reactors`]) sharing one
+//!   request worker pool, serving a [`crate::broker::Cluster`]. Shard 0
+//!   owns the listener and deals accepted connections round-robin;
+//!   after that a connection lives and dies on its shard — its own
+//!   poller, timer heap and read staging, no cross-shard locks on the
+//!   hot path. Connections are **pipelined**: a readability wake
+//!   parses every complete frame in the buffer (bounded by
+//!   [`server::MAX_INFLIGHT_PER_CONN`]), ordinary requests execute
+//!   strictly serially per connection (the ordering guarantee producer
+//!   retries depend on), and blocking long-polls (`FetchWait`) skip
+//!   the serial lane and park **server-side** as registrations on the
+//!   broker's [`crate::broker::notify`] wait-sets, bridged to the
+//!   owning shard through a wake hook — so a parked remote consumer
+//!   reacts to a produce in one socket round trip, with zero polling
+//!   on the wire and zero threads per parked connection. Shutdown
+//!   rides the crate's cancel primitives and unblocks every connection
+//!   deterministically.
 //! * [`client`] — [`RemoteBroker`]: the socket client implementing
-//!   [`crate::broker::BrokerTransport`], with a small connection pool
-//!   and transparent reconnect, so `Producer`/`Consumer`/coordinator
-//!   jobs run against a broker in another OS process exactly as they
-//!   run in-process.
+//!   [`crate::broker::BrokerTransport`] over a **multiplexed
+//!   connection**: N concurrent callers share one socket, a reader
+//!   thread demultiplexes responses by correlation id, and long-polls
+//!   get a dedicated lane so a parked `FetchWait` never queues behind
+//!   (or ahead of) request traffic. Transparent reconnect plus
+//!   client-side idle expiry ([`client::CLIENT_IDLE_EXPIRY`]) keep the
+//!   pool fresh, so `Producer`/`Consumer`/coordinator jobs run against
+//!   a broker in another OS process exactly as they run in-process.
 //!
 //! On this path the *real* network replaces the simulated
 //! [`crate::broker::NetProfile`] delay — the server dispatches every

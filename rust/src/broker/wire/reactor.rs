@@ -6,12 +6,13 @@
 //!
 //! * [`Poller`] — level-triggered readiness multiplexing. On Linux this
 //!   is an `epoll` instance; elsewhere a `poll(2)` sweep over the
-//!   registered set. One reactor thread waits here for *all* sockets.
+//!   registered set. Each reactor shard owns one `Poller` and waits
+//!   here for all sockets dealt to that shard.
 //! * [`WakeFd`] — the cross-thread wakeup primitive: an `eventfd` on
 //!   Linux, a nonblocking self-pipe elsewhere. Worker threads (and
-//!   [`crate::broker::notify::Waiter`] wake hooks) write to it; the
-//!   reactor registers its read side like any other fd, so a wakeup is
-//!   just another readiness event.
+//!   [`crate::broker::notify::Waiter`] wake hooks) write to the owning
+//!   shard's `WakeFd`; the shard registers its read side like any
+//!   other fd, so a wakeup is just another readiness event.
 //! * [`writev`] — vectored write: one syscall gathers a response's
 //!   header chunk and its zero-copy payload slices
 //!   ([`super::codec::Chunk`]) straight from the broker log into the

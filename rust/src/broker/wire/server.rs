@@ -1,23 +1,36 @@
-//! `BrokerServer`: the broker as a TCP service, built on an event-loop
-//! network core.
+//! `BrokerServer`: the broker as a TCP service, built on a sharded
+//! event-loop network core.
 //!
-//! One **reactor** thread owns every socket and multiplexes them
-//! through a readiness poller ([`super::reactor::Poller`] — epoll on
-//! Linux); a small fixed **worker pool** (`broker-io`) runs request
-//! handlers, which may block on disk (produce, fetch) or on cluster
-//! locks. Thread count is O(worker pool), not O(connections): ten
-//! thousand idle consumers cost ten thousand fd registrations and
-//! per-connection buffers, never ten thousand stacks.
+//! **N reactor shards** (`serve --reactors N`, default `min(4, cores)`)
+//! each own an independent readiness poller ([`super::reactor::Poller`]
+//! — epoll on Linux), wake fd, timer heap and read-staging buffer;
+//! shard 0 owns the accept socket and round-robins accepted connections
+//! across all shards (an `SO_REUSEPORT` listener per shard is the
+//! natural follow-on once one accept loop saturates). A small fixed
+//! **worker pool** (`broker-io`) is shared by every shard and runs
+//! request handlers, which may block on disk (produce, fetch) or on
+//! cluster locks. Thread count is O(reactors + worker pool), not
+//! O(connections): ten thousand idle consumers cost ten thousand fd
+//! registrations and per-connection buffers, never ten thousand stacks.
 //!
 //! Per connection, two state machines driven by readiness events:
 //!
 //! * **read**: bytes accumulate in a per-connection buffer across
-//!   readiness events until a full `len | crc | body` frame is present
-//!   ([`super::codec`]); the frame body then ships to a worker.
-//!   Requests on one connection stay strictly serial — while one is in
-//!   flight the reactor parks that connection's read interest, so a
-//!   fast client backpressures through TCP exactly as it did against
-//!   the thread-per-connection server.
+//!   readiness events until full `len | crc | body` frames are present
+//!   ([`super::codec`]). The connection is **pipelined**: every
+//!   complete frame in the buffer is accepted per readability wake —
+//!   read interest no longer gates off after one request — bounded by
+//!   [`MAX_INFLIGHT_PER_CONN`] decoded-but-unanswered requests, so a
+//!   torrential sender still backpressures through TCP. Ordinary
+//!   requests execute **strictly serially per connection** (a FIFO
+//!   queue feeds one worker at a time), which is what keeps a
+//!   pipelined producer's batches appending in submission order — the
+//!   invariant the idempotent `(producer_id, seq)` dedup needs to stay
+//!   exact under client retries. `FetchWait` long-polls bypass the
+//!   serial queue entirely (they park, below) and one-way `Metric`
+//!   frames dispatch immediately, so a parked poll never head-of-line
+//!   blocks a produce sharing the socket; responses therefore complete
+//!   *out of order* and clients demultiplex them by correlation id.
 //! * **write**: response chunks queue per-connection and drain on
 //!   writability via vectored writes ([`super::reactor::writev`]). A
 //!   fetch response is a header chunk plus zero-copy
@@ -29,23 +42,25 @@
 //!
 //! **Long-polls park as registrations, not threads.** A `FetchWait`
 //! registers a [`Waiter`] with the cluster's wait-sets
-//! ([`Cluster::register_data_wait`]) whose wake hook posts a reactor
-//! wakeup through an eventfd ([`super::reactor::WakeFd`]); the
-//! connection then sits in `Parked` state with a timer-heap entry for
-//! its (group-liveness-capped) deadline. A produce wakes it in one
-//! eventfd write + one response frame; an idle parked consumer costs
-//! zero threads and zero CPU. The server's shutdown wait-set is an
-//! extra wakeup source of every park, so stopping the server answers
-//! all of them immediately.
+//! ([`Cluster::register_data_wait`]) whose wake hook posts a wakeup to
+//! the owning shard through its eventfd ([`super::reactor::WakeFd`]);
+//! the park is then held in a per-connection map keyed by correlation
+//! id (one multiplexed client connection can hold several parked polls
+//! at once) with a shard-timer entry for its
+//! (group-liveness-capped) deadline. A produce wakes it in one eventfd
+//! write + one response frame; an idle parked consumer costs zero
+//! threads and zero CPU. The server's shutdown wait-set is an extra
+//! wakeup source of every park, so stopping the server answers all of
+//! them immediately.
 //!
 //! [`Cluster::register_data_wait`]: crate::broker::Cluster::register_data_wait
 //! [`Waiter`]: crate::broker::notify::Waiter
 //!
 //! **Shutdown is deterministic**: the cancel token flips, one eventfd
-//! write wakes the reactor, every parked long-poll is answered
-//! (`woken = true`) and every socket closed, then the reactor and the
-//! worker pool are joined — no dummy self-connect, no per-connection
-//! thread sweep.
+//! write per shard wakes every reactor, every parked long-poll is
+//! answered (`woken = true`) and every socket closed, then the
+//! reactors and the worker pool are joined — no dummy self-connect, no
+//! per-connection thread sweep.
 //!
 //! **Corruption never propagates**: a frame that fails its length bound
 //! or CRC, or an unreadable envelope, drops the connection; an unknown
@@ -70,6 +85,7 @@ use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::io::{ErrorKind, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -82,26 +98,34 @@ use std::time::{Duration, Instant};
 pub const MAX_WAIT_SLICE: Duration = Duration::from_secs(600);
 
 /// Idle connections are dropped after this long without a request; the
-/// client pool reconnects transparently on its next call. Parked
-/// long-polls and the metrics channel are exempt.
-const IDLE_TIMEOUT: Duration = Duration::from_secs(60);
+/// client reconnects transparently on its next call (and expires its
+/// own side proactively — see `client::CLIENT_IDLE_EXPIRY`). Parked
+/// long-polls, in-flight requests and the metrics channel are exempt.
+pub const IDLE_TIMEOUT: Duration = Duration::from_secs(60);
 
-/// How often the reactor sweeps for idle connections.
-const SWEEP_INTERVAL: Duration = Duration::from_secs(5);
+/// How often each reactor shard sweeps for idle connections.
+pub const SWEEP_INTERVAL: Duration = Duration::from_secs(5);
 
 /// Request handlers that may block (disk appends, segment loads,
 /// cluster locks) run on this many `broker-io` threads by default.
 pub const DEFAULT_IO_WORKERS: usize = 4;
 
-/// Poller token of the accept socket.
+/// Backpressure bound on request pipelining: at most this many
+/// decoded-but-unanswered requests (queued, executing, or parked) per
+/// connection. Once reached, the shard parks the connection's read
+/// interest and the sender backpressures through TCP until responses
+/// drain.
+pub const MAX_INFLIGHT_PER_CONN: usize = 32;
+
+/// Poller token of the accept socket (shard 0 only).
 const TOKEN_LISTENER: u64 = 0;
-/// Poller token of the reactor's wake fd.
+/// Poller token of each shard's wake fd.
 const TOKEN_WAKE: u64 = 1;
-/// Connection ids count up from here and are never reused, so a stale
-/// timer or event can never hit a different connection.
+/// Connection ids count up from here (per shard, never reused), so a
+/// stale timer or event can never hit a different connection.
 const FIRST_CONN_TOKEN: u64 = 2;
 
-/// Reactor-owned read staging buffer: one per reactor, not per
+/// Shard-owned read staging buffer: one per reactor shard, not per
 /// connection, so ten thousand idle connections hold only their (tiny)
 /// pending-frame buffers.
 const READ_BUF_BYTES: usize = 64 * 1024;
@@ -111,39 +135,64 @@ const READ_BUF_BYTES: usize = 64 * 1024;
 /// MiB to an otherwise idle connection).
 const RBUF_KEEP_BYTES: usize = 256 * 1024;
 
-/// State shared between the reactor, the worker pool and shutdown.
+/// Default reactor shard count: one per core up to four — past that the
+/// accept path and the shared worker pool, not the event loops, are the
+/// measured bottleneck.
+pub fn default_reactors() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 4)
+}
+
+/// State shared between every reactor shard, the worker pool and
+/// shutdown.
 struct Shared {
     cluster: ClusterHandle,
     cancel: CancelToken,
     /// Notified once at shutdown: every parked long-poll registration
-    /// wakes (its hook posts a reactor wakeup) and is answered.
+    /// wakes (its hook posts a shard wakeup) and is answered.
     shutdown: Arc<WaitSet>,
-    /// Events posted to the reactor by workers and waiter hooks;
-    /// drained on every reactor wakeup.
+    /// One mailbox per reactor shard; workers and waiter hooks post to
+    /// the shard owning the connection.
+    shards: Vec<Arc<ShardMailbox>>,
+    /// Round-robin cursor distributing accepted fds across shards.
+    next_shard: AtomicUsize,
+    /// Live connection count per shard (observability; the
+    /// shard-distribution soak asserts on it).
+    conn_counts: Vec<AtomicUsize>,
+}
+
+/// A shard's inbox + wakeup fd. Lives in an `Arc` held by worker
+/// closures and waiter hooks — not on the reactor thread — so a worker
+/// finishing after shutdown still writes to a live fd.
+struct ShardMailbox {
     inbox: Mutex<Vec<Event>>,
-    /// The reactor's wakeup fd. Lives here — not on the reactor thread —
-    /// so a worker finishing after shutdown still writes to a live fd.
     wake: WakeFd,
 }
 
-impl Shared {
+impl ShardMailbox {
     fn post(&self, ev: Event) {
         self.inbox.lock().unwrap().push(ev);
         self.wake.wake();
     }
 }
 
-/// Messages from worker threads (and waiter wake hooks) to the reactor.
-/// Workers never touch sockets; all socket I/O happens on the reactor.
+/// Messages to a reactor shard, from worker threads, waiter wake hooks
+/// and (for `Accept`) the listener-owning shard. Workers never touch
+/// sockets; all socket I/O happens on the owning shard.
 enum Event {
-    /// A request finished: queue these chunks and return the connection
-    /// to `Idle`. An empty chunk list (or empty chunks) just completes
-    /// the request cycle.
-    Respond { conn: u64, chunks: Vec<Chunk> },
-    /// A `FetchWait` found nothing ready: park the connection.
+    /// Shard 0 accepted a connection and round-robined it here.
+    Accept { stream: TcpStream, peer: String },
+    /// A request finished: queue these chunks. `serial` requests
+    /// release the connection's serial execution slot (the next queued
+    /// ordinary request dispatches); parked-poll completions do not
+    /// hold one.
+    Respond { conn: u64, chunks: Vec<Chunk>, serial: bool },
+    /// A `FetchWait` found nothing ready: park it on the connection.
     Park { conn: u64, parked: Box<Parked> },
-    /// A waiter wake hook fired for this connection's park.
-    PollWake { conn: u64 },
+    /// A waiter wake hook fired for one parked poll.
+    PollWake { conn: u64, corr: u64 },
     /// Protocol violation (bad CRC, unreadable envelope): drop the
     /// connection.
     Close { conn: u64 },
@@ -157,7 +206,7 @@ struct Parked {
     assignments: Vec<(TopicPartition, u64)>,
     group: Option<(String, u64)>,
     /// Already capped by [`Cluster::register_data_wait`] for group
-    /// liveness; the reactor's timer heap fires it.
+    /// liveness; the shard's timer heap fires it.
     ///
     /// [`Cluster::register_data_wait`]: crate::broker::Cluster::register_data_wait
     deadline: Instant,
@@ -166,19 +215,8 @@ struct Parked {
     /// the park has already moved it.
     seen: u64,
     guard: DataWaitGuard,
-    /// The connection's scratch buffer rides along so the eventual
-    /// response allocates nothing.
+    /// Scratch buffer for the eventual response frame.
     scratch: Vec<u8>,
-}
-
-enum ConnState {
-    /// Reading requests.
-    Idle,
-    /// One request is on the worker pool; read interest is off
-    /// (TCP backpressure) until its `Respond` comes back.
-    Busy,
-    /// A `FetchWait` is registered with the cluster's wait-sets.
-    Parked(Box<Parked>),
 }
 
 struct Conn {
@@ -190,7 +228,18 @@ struct Conn {
     /// already in the socket.
     out: VecDeque<Chunk>,
     front_written: usize,
-    state: ConnState,
+    /// Ordinary requests decoded but not yet dispatched — the serial
+    /// queue. One entry at a time is on the worker pool (`busy`), so
+    /// same-connection produces append in arrival order even though
+    /// the read side keeps accepting frames.
+    pending: VecDeque<(Bytes, u32)>,
+    busy: bool,
+    /// Parked long-polls keyed by correlation id — a multiplexed
+    /// client can hold several at once on one socket.
+    parks: HashMap<u64, Box<Parked>>,
+    /// Decoded-but-unanswered request count (pending + busy + parked +
+    /// completing). Gates read interest at [`MAX_INFLIGHT_PER_CONN`].
+    inflight: usize,
     metrics_channel: bool,
     eof: bool,
     last_activity: Instant,
@@ -210,7 +259,10 @@ impl Conn {
             rbuf: Vec::new(),
             out: VecDeque::new(),
             front_written: 0,
-            state: ConnState::Idle,
+            pending: VecDeque::new(),
+            busy: false,
+            parks: HashMap::new(),
+            inflight: 0,
             metrics_channel: false,
             eof: false,
             last_activity: Instant::now(),
@@ -225,14 +277,15 @@ impl Conn {
 pub struct BrokerServer {
     addr: SocketAddr,
     shared: Arc<Shared>,
-    reactor: Option<std::thread::JoinHandle<()>>,
+    reactors: Vec<std::thread::JoinHandle<()>>,
     workers: Option<Arc<ThreadPool>>,
 }
 
 impl BrokerServer {
     /// Bind `listen` (e.g. `127.0.0.1:9092`; port 0 = ephemeral) and
     /// serve `cluster` until [`BrokerServer::shutdown`], with
-    /// [`DEFAULT_IO_WORKERS`] request workers.
+    /// [`DEFAULT_IO_WORKERS`] request workers and
+    /// [`default_reactors`] reactor shards.
     pub fn start(listen: &str, cluster: ClusterHandle) -> Result<BrokerServer> {
         BrokerServer::start_with(listen, cluster, DEFAULT_IO_WORKERS)
     }
@@ -241,48 +294,97 @@ impl BrokerServer {
     /// `--io-workers` CLI flag). The pool bounds concurrent request
     /// *handling*; connection count is bounded only by fds.
     pub fn start_with(listen: &str, cluster: ClusterHandle, io_workers: usize) -> Result<BrokerServer> {
+        BrokerServer::start_sharded(listen, cluster, io_workers, default_reactors())
+    }
+
+    /// Fully explicit constructor: `reactors` event-loop shards (the
+    /// `--reactors` CLI flag) sharing one `io_workers`-sized request
+    /// pool. Accepted connections are round-robined across shards.
+    pub fn start_sharded(
+        listen: &str,
+        cluster: ClusterHandle,
+        io_workers: usize,
+        reactors: usize,
+    ) -> Result<BrokerServer> {
         let listener =
             TcpListener::bind(listen).with_context(|| format!("binding broker on {listen}"))?;
         listener
             .set_nonblocking(true)
             .context("nonblocking listener")?;
         let addr = listener.local_addr()?;
-        let wake = WakeFd::new().context("creating reactor wake fd")?;
-        let mut poller = Poller::new().context("creating readiness poller")?;
-        poller
-            .register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)
-            .context("registering listener")?;
-        poller
-            .register(wake.raw(), TOKEN_WAKE, true, false)
-            .context("registering wake fd")?;
+        let n_shards = reactors.max(1);
+        let mut mailboxes = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            mailboxes.push(Arc::new(ShardMailbox {
+                inbox: Mutex::new(Vec::new()),
+                wake: WakeFd::new().context("creating shard wake fd")?,
+            }));
+        }
         let shared = Arc::new(Shared {
             cluster,
             cancel: CancelToken::new(),
             shutdown: Arc::new(WaitSet::new()),
-            inbox: Mutex::new(Vec::new()),
-            wake,
+            shards: mailboxes,
+            next_shard: AtomicUsize::new(0),
+            conn_counts: (0..n_shards).map(|_| AtomicUsize::new(0)).collect(),
         });
         let io_workers = io_workers.max(1);
         let workers = Arc::new(ThreadPool::new(io_workers, "broker-io"));
-        let reactor = Reactor {
-            shared: shared.clone(),
-            workers: workers.clone(),
-            listener,
-            poller,
-            conns: HashMap::new(),
-            timers: BinaryHeap::new(),
-            next_id: FIRST_CONN_TOKEN,
-            read_buf: vec![0u8; READ_BUF_BYTES],
-        };
-        let handle = std::thread::Builder::new()
-            .name("broker-reactor".to_string())
-            .spawn(move || reactor.run())?;
-        log::info!("broker wire protocol serving on {addr} (reactor + {io_workers} io workers)");
-        Ok(BrokerServer { addr, shared, reactor: Some(handle), workers: Some(workers) })
+        let mut handles = Vec::with_capacity(n_shards);
+        let mut listener = Some(listener);
+        for shard in 0..n_shards {
+            let mut poller = Poller::new().context("creating readiness poller")?;
+            let shard_listener = if shard == 0 { listener.take() } else { None };
+            if let Some(l) = &shard_listener {
+                poller
+                    .register(l.as_raw_fd(), TOKEN_LISTENER, true, false)
+                    .context("registering listener")?;
+            }
+            let mailbox = shared.shards[shard].clone();
+            poller
+                .register(mailbox.wake.raw(), TOKEN_WAKE, true, false)
+                .context("registering wake fd")?;
+            let reactor = Reactor {
+                shard,
+                shared: shared.clone(),
+                mailbox,
+                workers: workers.clone(),
+                listener: shard_listener,
+                poller,
+                conns: HashMap::new(),
+                timers: BinaryHeap::new(),
+                next_id: FIRST_CONN_TOKEN,
+                read_buf: vec![0u8; READ_BUF_BYTES],
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("broker-reactor-{shard}"))
+                    .spawn(move || reactor.run())?,
+            );
+        }
+        log::info!(
+            "broker wire protocol serving on {addr} ({n_shards} reactor shards + {io_workers} io workers)"
+        );
+        Ok(BrokerServer { addr, shared, reactors: handles, workers: Some(workers) })
     }
 
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Number of reactor shards serving connections.
+    pub fn reactors(&self) -> usize {
+        self.shared.shards.len()
+    }
+
+    /// Live connection count per reactor shard (round-robin makes these
+    /// near-uniform under load; the shard-distribution soak asserts it).
+    pub fn shard_conn_counts(&self) -> Vec<usize> {
+        self.shared
+            .conn_counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
     }
 
     pub fn shutdown(mut self) {
@@ -290,18 +392,24 @@ impl BrokerServer {
     }
 
     fn stop(&mut self) {
-        let Some(handle) = self.reactor.take() else { return };
+        if self.reactors.is_empty() {
+            return;
+        }
         self.shared.cancel.cancel();
         // Wake every parked long-poll registration (their hooks post
-        // reactor wakeups) and the reactor itself; it answers the
+        // shard wakeups) and every reactor shard; each answers its
         // parked connections and exits.
         self.shared.shutdown.notify_all();
-        self.shared.wake.wake();
-        handle.join().ok();
+        for mb in &self.shared.shards {
+            mb.wake.wake();
+        }
+        for handle in self.reactors.drain(..) {
+            handle.join().ok();
+        }
         // Drain in-flight request handlers: once the pool is joined, no
         // cluster call started by this server is still running. Late
-        // posts from those handlers land in a dead inbox (the wake fd
-        // stays alive inside `Shared`) and are simply dropped.
+        // posts from those handlers land in dead inboxes (each wake fd
+        // stays alive inside its mailbox Arc) and are simply dropped.
         if let Some(workers) = self.workers.take() {
             match Arc::try_unwrap(workers) {
                 Ok(pool) => pool.shutdown(),
@@ -317,18 +425,33 @@ impl Drop for BrokerServer {
     }
 }
 
-// ---- the reactor -----------------------------------------------------------
+// ---- the reactor shards ----------------------------------------------------
+
+/// What one carved frame is, decided by peeking the opcode byte — it
+/// picks the dispatch lane before any decoding happens.
+enum FrameKind {
+    /// One-way; dispatches immediately, no response, no in-flight slot.
+    Metric,
+    /// Long-poll; dispatches immediately (parks instead of occupying
+    /// the serial slot), so it can never head-of-line block a produce.
+    Wait,
+    /// Everything else: strictly serial per connection.
+    Ordinary,
+}
 
 struct Reactor {
+    shard: usize,
     shared: Arc<Shared>,
+    mailbox: Arc<ShardMailbox>,
     workers: Arc<ThreadPool>,
-    listener: TcpListener,
+    /// Some only on shard 0, which owns the accept loop.
+    listener: Option<TcpListener>,
     poller: Poller,
     conns: HashMap<u64, Conn>,
-    /// `(deadline, conn)` min-heap for parked long-polls. Entries can
-    /// go stale (the park completed early); firing one against a
-    /// connection that is no longer parked is a no-op.
-    timers: BinaryHeap<Reverse<(Instant, u64)>>,
+    /// `(deadline, conn, corr)` min-heap for parked long-polls. Entries
+    /// can go stale (the park completed early); firing one against a
+    /// corr that is no longer parked is a no-op.
+    timers: BinaryHeap<Reverse<(Instant, u64, u64)>>,
     next_id: u64,
     read_buf: Vec<u8>,
 }
@@ -343,13 +466,13 @@ impl Reactor {
             }
             let now = Instant::now();
             let mut wake_at = next_sweep;
-            if let Some(&Reverse((t, _))) = self.timers.peek() {
+            if let Some(&Reverse((t, _, _))) = self.timers.peek() {
                 wake_at = wake_at.min(t);
             }
             let timeout = wake_at.saturating_duration_since(now);
             events.clear();
             if let Err(e) = self.poller.wait(&mut events, Some(timeout)) {
-                log::warn!("broker reactor poll error: {e}");
+                log::warn!("broker reactor {} poll error: {e}", self.shard);
             }
             if self.shared.cancel.is_cancelled() {
                 break;
@@ -358,7 +481,7 @@ impl Reactor {
                 let ev = events[i];
                 match ev.token {
                     TOKEN_LISTENER => self.accept_ready(),
-                    TOKEN_WAKE => self.shared.wake.drain(),
+                    TOKEN_WAKE => self.mailbox.wake.drain(),
                     id => self.conn_ready(id, &ev),
                 }
             }
@@ -375,21 +498,26 @@ impl Reactor {
         self.shutdown_conns();
     }
 
+    /// Shard 0 only: accept everything ready and round-robin it across
+    /// shards — local registration for our own share, an `Accept` post
+    /// for the rest.
     fn accept_ready(&mut self) {
         loop {
-            match self.listener.accept() {
+            let Some(listener) = &self.listener else { return };
+            match listener.accept() {
                 Ok((stream, peer)) => {
                     stream.set_nodelay(true).ok();
                     if stream.set_nonblocking(true).is_err() {
                         continue;
                     }
-                    let id = self.next_id;
-                    self.next_id += 1;
-                    if let Err(e) = self.poller.register(stream.as_raw_fd(), id, true, false) {
-                        log::warn!("broker: registering {peer}: {e}");
-                        continue;
+                    let n = self.shared.shards.len();
+                    let target = self.shared.next_shard.fetch_add(1, Ordering::Relaxed) % n;
+                    if target == self.shard {
+                        self.adopt_conn(stream, peer.to_string());
+                    } else {
+                        self.shared.shards[target]
+                            .post(Event::Accept { stream, peer: peer.to_string() });
                     }
-                    self.conns.insert(id, Conn::new(stream, peer.to_string()));
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => return,
                 Err(e) if e.kind() == ErrorKind::Interrupted => continue,
@@ -401,36 +529,31 @@ impl Reactor {
         }
     }
 
+    /// Register an accepted connection with this shard's poller.
+    fn adopt_conn(&mut self, stream: TcpStream, peer: String) {
+        let id = self.next_id;
+        self.next_id += 1;
+        if let Err(e) = self.poller.register(stream.as_raw_fd(), id, true, false) {
+            log::warn!("broker: registering {peer}: {e}");
+            return;
+        }
+        self.conns.insert(id, Conn::new(stream, peer));
+        self.shared.conn_counts[self.shard].fetch_add(1, Ordering::Relaxed);
+    }
+
     fn conn_ready(&mut self, id: u64, ev: &PollerEvent) {
         if ev.writable {
             self.flush_conn(id);
         }
-        let idle = match self.conns.get(&id) {
-            Some(c) => matches!(c.state, ConnState::Idle),
-            None => return, // closed earlier in this batch
-        };
-        if (ev.readable || ev.hangup) && idle {
+        if ev.readable || ev.hangup {
             self.read_conn(id);
             self.parse_frames(id);
-        } else if ev.hangup {
-            // The client vanished while a request was in flight. A
-            // parked long-poll is abandoned outright (its guard
-            // deregisters); a busy one closes as soon as its response
-            // cycle completes.
-            match self.conns.get_mut(&id) {
-                Some(c) if matches!(c.state, ConnState::Parked(_)) => {
-                    self.close_conn(id);
-                    return;
-                }
-                Some(c) => c.eof = true,
-                None => return,
-            }
         }
         self.finish_io(id);
     }
 
     /// Pull everything the socket has into the connection's frame
-    /// buffer (via the reactor's one staging buffer).
+    /// buffer (via the shard's one staging buffer).
     fn read_conn(&mut self, id: u64) {
         loop {
             let Some(conn) = self.conns.get_mut(&id) else { return };
@@ -462,20 +585,19 @@ impl Reactor {
         }
     }
 
-    /// Carve complete frames out of the connection buffer and dispatch
-    /// them. Stops at the first non-one-way frame (serial requests).
+    /// Carve every complete frame out of the connection buffer and
+    /// dispatch it down its lane (pipelining). Stops only on incomplete
+    /// bytes or the in-flight cap; the cap re-opens as responses drain.
     fn parse_frames(&mut self, id: u64) {
         enum Next {
-            Frame { body: Bytes, crc: u32, metric: bool },
+            Frame { body: Bytes, crc: u32, kind: FrameKind },
             Close,
             Done,
         }
         loop {
             let next = {
                 let Some(conn) = self.conns.get_mut(&id) else { return };
-                if !matches!(conn.state, ConnState::Idle)
-                    || conn.rbuf.len() < codec::WIRE_HEADER_BYTES
-                {
+                if conn.rbuf.len() < codec::WIRE_HEADER_BYTES {
                     Next::Done
                 } else {
                     let len = u32::from_le_bytes(conn.rbuf[0..4].try_into().unwrap());
@@ -490,51 +612,84 @@ impl Reactor {
                     } else if conn.rbuf.len() < total {
                         Next::Done
                     } else {
-                        let crc = u32::from_le_bytes(conn.rbuf[4..8].try_into().unwrap());
-                        let body =
-                            Bytes::copy_from_slice(&conn.rbuf[codec::WIRE_HEADER_BYTES..total]);
-                        conn.rbuf.drain(..total);
-                        conn.last_activity = Instant::now();
-                        // Peek the opcode (offset 8: after corr_id).
-                        // `Metric` is one-way — fire-and-forget, the
-                        // connection stays idle — and marks the
-                        // connection as the client's dedicated metrics
-                        // channel, exempt from the idle sweep.
-                        let metric = body.as_slice().get(8) == Some(&(OpCode::Metric as u8));
-                        if metric {
-                            conn.metrics_channel = true;
+                        // Peek the opcode (after the correlation id) to
+                        // pick the dispatch lane. `Metric` is one-way —
+                        // fire-and-forget, exempt from the in-flight
+                        // cap — and marks the connection as the
+                        // client's dedicated metrics channel.
+                        let op = codec::peek_op(&conn.rbuf[codec::WIRE_HEADER_BYTES..total]);
+                        let kind = match op {
+                            Some(v) if v == OpCode::Metric as u8 => FrameKind::Metric,
+                            Some(v) if v == OpCode::FetchWait as u8 => FrameKind::Wait,
+                            _ => FrameKind::Ordinary,
+                        };
+                        if !matches!(kind, FrameKind::Metric)
+                            && conn.inflight >= MAX_INFLIGHT_PER_CONN
+                        {
+                            // Backpressure: leave the frame buffered;
+                            // the Respond that drains the cap re-parses.
+                            Next::Done
                         } else {
-                            conn.state = ConnState::Busy;
+                            let crc = u32::from_le_bytes(conn.rbuf[4..8].try_into().unwrap());
+                            let body = Bytes::copy_from_slice(
+                                &conn.rbuf[codec::WIRE_HEADER_BYTES..total],
+                            );
+                            conn.rbuf.drain(..total);
+                            conn.last_activity = Instant::now();
+                            match kind {
+                                FrameKind::Metric => conn.metrics_channel = true,
+                                FrameKind::Wait => conn.inflight += 1,
+                                FrameKind::Ordinary => {
+                                    conn.inflight += 1;
+                                    conn.pending.push_back((body.clone(), crc));
+                                }
+                            }
+                            Next::Frame { body, crc, kind }
                         }
-                        Next::Frame { body, crc, metric }
                     }
                 }
             };
             match next {
-                Next::Done => return,
+                Next::Done => break,
                 Next::Close => {
                     self.close_conn(id);
                     return;
                 }
-                Next::Frame { body, crc, metric } => {
+                Next::Frame { body, crc, kind } => {
                     let shared = self.shared.clone();
-                    if metric {
-                        self.workers.execute(move || handle_metric(&shared, id, body, crc));
-                        continue;
+                    let mailbox = self.mailbox.clone();
+                    match kind {
+                        FrameKind::Metric => self
+                            .workers
+                            .execute(move || handle_metric(&shared, &mailbox, id, body, crc)),
+                        // Long-polls bypass the serial queue: they park
+                        // rather than occupy a worker, so dispatch now.
+                        FrameKind::Wait => self.workers.execute(move || {
+                            handle_request(&shared, &mailbox, id, body, crc, Vec::new(), false)
+                        }),
+                        FrameKind::Ordinary => {} // dispatched below, serially
                     }
-                    let scratch = self
-                        .conns
-                        .get_mut(&id)
-                        .map(|c| std::mem::take(&mut c.spare))
-                        .unwrap_or_default();
-                    self.workers
-                        .execute(move || handle_request(&shared, id, body, crc, scratch));
-                    // Busy: the next frame waits for this one's Respond.
-                    self.update_interest(id);
-                    return;
                 }
             }
         }
+        self.maybe_dispatch(id);
+        self.update_interest(id);
+    }
+
+    /// Feed the serial lane: if no ordinary request is executing for
+    /// this connection, put the oldest queued one on the worker pool.
+    fn maybe_dispatch(&mut self, id: u64) {
+        let Some(conn) = self.conns.get_mut(&id) else { return };
+        if conn.busy {
+            return;
+        }
+        let Some((body, crc)) = conn.pending.pop_front() else { return };
+        conn.busy = true;
+        let scratch = std::mem::take(&mut conn.spare);
+        let shared = self.shared.clone();
+        let mailbox = self.mailbox.clone();
+        self.workers
+            .execute(move || handle_request(&shared, &mailbox, id, body, crc, scratch, true));
     }
 
     /// Drain the outgoing chunk queue with vectored writes until the
@@ -602,7 +757,12 @@ impl Reactor {
             if conn.rbuf.is_empty() && conn.rbuf.capacity() > RBUF_KEEP_BYTES {
                 conn.rbuf = Vec::new();
             }
-            conn.eof && conn.out.is_empty() && matches!(conn.state, ConnState::Idle)
+            // A hung-up peer abandons its parked polls outright (their
+            // guards deregister); requests still executing finish their
+            // cycle first so the worker's Respond lands on a vanished
+            // conn as a no-op.
+            conn.eof
+                && (!conn.parks.is_empty() || (conn.inflight == 0 && conn.out.is_empty()))
         };
         if close {
             self.close_conn(id);
@@ -613,7 +773,7 @@ impl Reactor {
 
     fn update_interest(&mut self, id: u64) {
         let Some(conn) = self.conns.get_mut(&id) else { return };
-        let want_read = matches!(conn.state, ConnState::Idle) && !conn.eof;
+        let want_read = !conn.eof && conn.inflight < MAX_INFLIGHT_PER_CONN;
         let want_write = !conn.out.is_empty();
         if want_read != conn.reg_read || want_write != conn.reg_write {
             if let Err(e) = self
@@ -631,15 +791,16 @@ impl Reactor {
     fn close_conn(&mut self, id: u64) {
         if let Some(conn) = self.conns.remove(&id) {
             self.poller.deregister(conn.stream.as_raw_fd()).ok();
+            self.shared.conn_counts[self.shard].fetch_sub(1, Ordering::Relaxed);
             log::debug!("broker: {} disconnected", conn.peer);
-            // Dropping `conn` closes the socket; a parked state's guard
-            // deregisters its waiter from every wait-set.
+            // Dropping `conn` closes the socket; every parked poll's
+            // guard deregisters its waiter from every wait-set.
         }
     }
 
     fn drain_inbox(&mut self) {
         loop {
-            let batch: Vec<Event> = std::mem::take(&mut *self.shared.inbox.lock().unwrap());
+            let batch: Vec<Event> = std::mem::take(&mut *self.mailbox.inbox.lock().unwrap());
             if batch.is_empty() {
                 return;
             }
@@ -651,9 +812,13 @@ impl Reactor {
 
     fn handle_event(&mut self, ev: Event) {
         match ev {
-            Event::Respond { conn: id, chunks } => {
+            Event::Accept { stream, peer } => self.adopt_conn(stream, peer),
+            Event::Respond { conn: id, chunks, serial } => {
                 let Some(conn) = self.conns.get_mut(&id) else { return };
-                conn.state = ConnState::Idle;
+                if serial {
+                    conn.busy = false;
+                }
+                conn.inflight = conn.inflight.saturating_sub(1);
                 for c in chunks {
                     if c.is_empty() {
                         // Degenerate chunk: recycle its buffer.
@@ -666,8 +831,9 @@ impl Reactor {
                         conn.out.push_back(c);
                     }
                 }
+                self.maybe_dispatch(id);
                 self.flush_conn(id);
-                self.parse_frames(id); // a pipelined next request may be buffered
+                self.parse_frames(id); // the cap may have re-opened
                 self.finish_io(id);
             }
             Event::Park { conn: id, parked } => {
@@ -679,28 +845,26 @@ impl Reactor {
                 }
                 if self.shared.cancel.is_cancelled()
                     || parked.waiter.generation() != parked.seen
+                    || conn.parks.contains_key(&parked.corr)
                 {
                     // A wake raced the park decision (the hook's
                     // PollWake may even sit earlier in this inbox, a
-                    // no-op against a Busy connection): complete now.
+                    // no-op until the park registers) — or the client
+                    // reused a parked correlation id, which would make
+                    // the demux ambiguous: complete now instead.
                     self.complete_wait_async(id, parked);
                 } else {
-                    self.timers.push(Reverse((parked.deadline, id)));
-                    conn.state = ConnState::Parked(parked);
+                    self.timers.push(Reverse((parked.deadline, id, parked.corr)));
+                    conn.parks.insert(parked.corr, parked);
                     self.update_interest(id);
                 }
             }
-            Event::PollWake { conn: id } => {
+            Event::PollWake { conn: id, corr } => {
                 let Some(conn) = self.conns.get_mut(&id) else { return };
-                if matches!(conn.state, ConnState::Parked(_)) {
-                    let ConnState::Parked(parked) =
-                        std::mem::replace(&mut conn.state, ConnState::Busy)
-                    else {
-                        unreachable!()
-                    };
+                if let Some(parked) = conn.parks.remove(&corr) {
                     self.complete_wait_async(id, parked);
                 }
-                // Idle/Busy: a stale wake for a park that already
+                // Absent: a stale wake for a park that already
                 // completed — ignore.
             }
             Event::Close { conn: id } => self.close_conn(id),
@@ -712,31 +876,29 @@ impl Reactor {
     /// reactor thread.
     fn complete_wait_async(&self, id: u64, parked: Box<Parked>) {
         let shared = self.shared.clone();
-        self.workers.execute(move || complete_wait(&shared, id, parked));
+        let mailbox = self.mailbox.clone();
+        self.workers
+            .execute(move || complete_wait(&shared, &mailbox, id, parked));
     }
 
     fn fire_timers(&mut self) {
         let now = Instant::now();
-        while let Some(&Reverse((t, id))) = self.timers.peek() {
+        while let Some(&Reverse((t, id, corr))) = self.timers.peek() {
             if t > now {
                 return;
             }
             self.timers.pop();
             let Some(conn) = self.conns.get_mut(&id) else { continue };
-            if let ConnState::Parked(p) = &conn.state {
-                if p.deadline <= now {
-                    let ConnState::Parked(parked) =
-                        std::mem::replace(&mut conn.state, ConnState::Busy)
-                    else {
-                        unreachable!()
-                    };
-                    self.complete_wait_async(id, parked);
-                } else {
-                    // Stale entry from an earlier park on this
-                    // connection; re-arm for the current deadline.
-                    let d = p.deadline;
-                    self.timers.push(Reverse((d, id)));
-                }
+            let Some(deadline) = conn.parks.get(&corr).map(|p| p.deadline) else {
+                continue; // park already completed — stale entry
+            };
+            if deadline <= now {
+                let parked = conn.parks.remove(&corr).unwrap();
+                self.complete_wait_async(id, parked);
+            } else {
+                // Stale entry from an earlier park that reused this
+                // corr; re-arm for the current deadline.
+                self.timers.push(Reverse((deadline, id, corr)));
             }
         }
     }
@@ -746,7 +908,7 @@ impl Reactor {
             .conns
             .iter()
             .filter(|(_, c)| {
-                matches!(c.state, ConnState::Idle)
+                c.inflight == 0
                     && !c.metrics_channel
                     && c.out.is_empty()
                     && now.duration_since(c.last_activity) >= IDLE_TIMEOUT
@@ -765,14 +927,10 @@ impl Reactor {
         let ids: Vec<u64> = self.conns.keys().copied().collect();
         for id in ids {
             let Some(conn) = self.conns.get_mut(&id) else { continue };
-            if matches!(conn.state, ConnState::Parked(_)) {
-                let ConnState::Parked(parked) =
-                    std::mem::replace(&mut conn.state, ConnState::Idle)
-                else {
-                    unreachable!()
-                };
-                let p = *parked;
-                let Parked { corr, guard, mut scratch, .. } = p;
+            let parked: Vec<Box<Parked>> =
+                conn.parks.drain().map(|(_, p)| p).collect();
+            for p in parked {
+                let Parked { corr, guard, mut scratch, .. } = *p;
                 drop(guard);
                 codec::begin_response(&mut scratch, corr);
                 codec::put_bool(&mut scratch, true);
@@ -785,6 +943,7 @@ impl Reactor {
             // EOF and reports the disconnect.
             self.flush_conn(id);
         }
+        self.shared.conn_counts[self.shard].store(0, Ordering::Relaxed);
         self.conns.clear();
     }
 }
@@ -794,14 +953,14 @@ impl Reactor {
 /// One-way `Metric` frame: validate, decode, bump the counter. No
 /// response; a CRC failure still drops the connection like any other
 /// corrupt frame.
-fn handle_metric(shared: &Arc<Shared>, conn: u64, body: Bytes, crc: u32) {
+fn handle_metric(shared: &Arc<Shared>, mailbox: &Arc<ShardMailbox>, conn: u64, body: Bytes, crc: u32) {
     if format::crc32(body.as_slice()) != crc {
-        shared.post(Event::Close { conn });
+        mailbox.post(Event::Close { conn });
         return;
     }
     let mut r = Reader::new(body);
     let (Ok(_corr), Ok(_op)) = (r.u64(), r.u8()) else {
-        shared.post(Event::Close { conn });
+        mailbox.post(Event::Close { conn });
         return;
     };
     if let Err(e) = metric_payload(shared, &mut r) {
@@ -819,30 +978,39 @@ fn metric_payload(shared: &Arc<Shared>, r: &mut Reader) -> Result<()> {
 /// Handle one request frame end-to-end on a worker thread: CRC check,
 /// envelope decode, dispatch, response encode (into the connection's
 /// recycled scratch buffer), and a `Respond`/`Park`/`Close` post back
-/// to the reactor.
-fn handle_request(shared: &Arc<Shared>, conn: u64, body: Bytes, crc: u32, mut scratch: Vec<u8>) {
+/// to the owning shard. `serial` echoes through to the `Respond` so the
+/// shard knows whether to release the connection's serial slot.
+fn handle_request(
+    shared: &Arc<Shared>,
+    mailbox: &Arc<ShardMailbox>,
+    conn: u64,
+    body: Bytes,
+    crc: u32,
+    mut scratch: Vec<u8>,
+    serial: bool,
+) {
     if format::crc32(body.as_slice()) != crc {
-        shared.post(Event::Close { conn });
+        mailbox.post(Event::Close { conn });
         return;
     }
     let mut r = Reader::new(body);
     // If even the envelope is unreadable there is no correlation id to
     // answer on — drop the connection.
     let (Ok(corr), Ok(op_byte)) = (r.u64(), r.u8()) else {
-        shared.post(Event::Close { conn });
+        mailbox.post(Event::Close { conn });
         return;
     };
     let Some(op) = OpCode::from_u8(op_byte) else {
         codec::encode_response_into(&mut scratch, corr, Err(&format!("unknown opcode {op_byte}")));
-        shared.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)] });
+        mailbox.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)], serial });
         return;
     };
     match op {
         OpCode::FetchBatch => {
             let chunks = fetch_batch_chunks(shared, &mut r, corr, scratch);
-            shared.post(Event::Respond { conn, chunks });
+            mailbox.post(Event::Respond { conn, chunks, serial });
         }
-        OpCode::FetchWait => fetch_wait(shared, conn, &mut r, corr, scratch),
+        OpCode::FetchWait => fetch_wait(shared, mailbox, conn, &mut r, corr, scratch, serial),
         OpCode::Metric => {
             // Normally dispatched one-way straight from the reactor;
             // reaching here (a short body defeated the opcode peek)
@@ -851,7 +1019,7 @@ fn handle_request(shared: &Arc<Shared>, conn: u64, body: Bytes, crc: u32, mut sc
                 log::debug!("broker: bad metric frame: {e:#}");
             }
             scratch.clear();
-            shared.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)] });
+            mailbox.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)], serial });
         }
         _ => {
             codec::begin_response(&mut scratch, corr);
@@ -859,7 +1027,7 @@ fn handle_request(shared: &Arc<Shared>, conn: u64, body: Bytes, crc: u32, mut sc
                 Ok(()) => codec::finish_frame(&mut scratch),
                 Err(e) => codec::encode_response_into(&mut scratch, corr, Err(&format!("{e:#}"))),
             }
-            shared.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)] });
+            mailbox.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)], serial });
         }
     }
 }
@@ -920,12 +1088,20 @@ fn fetch_batch_chunks(
 }
 
 /// `FetchWait`: register with the cluster's wait-sets (plus the server
-/// shutdown set), bridge wakes to the reactor through the waiter hook,
-/// and either answer immediately (data already there, or a wake raced
-/// registration) or hand the reactor a [`Parked`] to hold. The
+/// shutdown set), bridge wakes to the owning shard through the waiter
+/// hook, and either answer immediately (data already there, or a wake
+/// raced registration) or hand the shard a [`Parked`] to hold. The
 /// connection costs a registration and a timer entry while parked —
-/// no thread.
-fn fetch_wait(shared: &Arc<Shared>, conn: u64, r: &mut Reader, corr: u64, mut scratch: Vec<u8>) {
+/// no thread, and no serial slot: requests behind it keep flowing.
+fn fetch_wait(
+    shared: &Arc<Shared>,
+    mailbox: &Arc<ShardMailbox>,
+    conn: u64,
+    r: &mut Reader,
+    corr: u64,
+    mut scratch: Vec<u8>,
+    serial: bool,
+) {
     let parsed = (|| -> Result<_> {
         let timeout_ms = r.u64()?;
         let group = r.opt(|r| Ok((r.str()?, r.u64()?)))?;
@@ -943,16 +1119,16 @@ fn fetch_wait(shared: &Arc<Shared>, conn: u64, r: &mut Reader, corr: u64, mut sc
         Ok(t) => t,
         Err(e) => {
             codec::encode_response_into(&mut scratch, corr, Err(&format!("{e:#}")));
-            shared.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)] });
+            mailbox.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)], serial });
             return;
         }
     };
     let wait = Duration::from_millis(timeout_ms).min(MAX_WAIT_SLICE);
     let waiter = Waiter::new();
     // Install the hook BEFORE registering: every wake after this point
-    // posts a reactor wakeup for this connection.
-    let hook_shared = shared.clone();
-    waiter.set_hook(move || hook_shared.post(Event::PollWake { conn }));
+    // posts a shard wakeup for this (connection, corr) park.
+    let hook_mailbox = mailbox.clone();
+    waiter.set_hook(move || hook_mailbox.post(Event::PollWake { conn, corr }));
     let (guard, deadline) = shared.cluster.register_data_wait(
         &waiter,
         &assignments,
@@ -973,10 +1149,10 @@ fn fetch_wait(shared: &Arc<Shared>, conn: u64, r: &mut Reader, corr: u64, mut sc
         codec::begin_response(&mut scratch, corr);
         codec::put_bool(&mut scratch, true);
         codec::finish_frame(&mut scratch);
-        shared.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)] });
+        mailbox.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)], serial });
         return;
     }
-    shared.post(Event::Park {
+    mailbox.post(Event::Park {
         conn,
         parked: Box::new(Parked {
             corr,
@@ -992,8 +1168,8 @@ fn fetch_wait(shared: &Arc<Shared>, conn: u64, r: &mut Reader, corr: u64, mut sc
 }
 
 /// Answer a park that completed (wake, timeout, or shutdown): re-check
-/// readiness, deregister, encode `woken` into the recycled scratch.
-fn complete_wait(shared: &Arc<Shared>, conn: u64, parked: Box<Parked>) {
+/// readiness, deregister, encode `woken` into the carried scratch.
+fn complete_wait(shared: &Arc<Shared>, mailbox: &Arc<ShardMailbox>, conn: u64, parked: Box<Parked>) {
     let Parked { corr, assignments, group, waiter, seen, guard, mut scratch, .. } = *parked;
     let woken = shared.cancel.is_cancelled()
         || waiter.generation() != seen
@@ -1004,7 +1180,7 @@ fn complete_wait(shared: &Arc<Shared>, conn: u64, parked: Box<Parked>) {
     codec::begin_response(&mut scratch, corr);
     codec::put_bool(&mut scratch, woken);
     codec::finish_frame(&mut scratch);
-    shared.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)] });
+    mailbox.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)], serial: false });
 }
 
 /// Decode one request payload and run it against the cluster, writing

@@ -67,15 +67,19 @@ USAGE:
   kafka-ml pipeline [--samples N] [--epochs E] [--replicas R] [--artifacts DIR]
                     [--data-dir DIR] [--backend auto|pjrt|native]
       Run the full Fig-1 pipeline (A-F) on the synthetic HCOPD workload.
-  kafka-ml serve [--port P] [--listen ADDR] [--io-workers N] [--artifacts DIR]
-                 [--state FILE.json] [--data-dir DIR] [--backend auto|pjrt|native]
+  kafka-ml serve [--port P] [--listen ADDR] [--io-workers N] [--reactors N]
+                 [--artifacts DIR] [--state FILE.json] [--data-dir DIR]
+                 [--backend auto|pjrt|native]
       Boot the platform (broker + back-end + orchestrator) and serve the
       RESTful back-end until Ctrl-C; --state snapshots the registry.
       --listen ADDR additionally serves the broker's TCP wire protocol
       (e.g. 127.0.0.1:9092), so workers in other processes can attach
-      with --broker. The wire server is an epoll reactor: one event-loop
-      thread plus --io-workers request threads (default 4) regardless of
-      how many connections are attached.
+      with --broker. The wire server is a sharded epoll reactor:
+      --reactors event-loop shards (default min(4, cores)) plus
+      --io-workers request threads (default 4) shared across shards,
+      regardless of how many connections are attached. Accepted
+      connections are dealt round-robin across shards and each shard
+      owns its connections end to end.
   kafka-ml info [--artifacts DIR] [--backend auto|pjrt|native]
       Print the model's metadata and which execution backend loads.
 
@@ -229,9 +233,9 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     })?;
     // --listen: expose the broker over the TCP wire protocol so remote
     // workers (produce/consume/train/infer --broker) can attach. The
-    // server lives as long as the serve loop below. --io-workers sizes
-    // the request worker pool behind the reactor thread; connection
-    // count does not add threads.
+    // server lives as long as the serve loop below. --reactors sizes
+    // the event-loop shard count and --io-workers the request worker
+    // pool shared across shards; connection count does not add threads.
     let _wire_server = match flags.get("listen") {
         Some(addr) => {
             let io_workers = flag_u64(
@@ -239,8 +243,18 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
                 "io-workers",
                 crate::broker::wire::server::DEFAULT_IO_WORKERS as u64,
             )? as usize;
-            let server = BrokerServer::start_with(addr, kml.cluster.clone(), io_workers)?;
-            println!("broker wire protocol on {}", server.addr());
+            let reactors = flag_u64(
+                flags,
+                "reactors",
+                crate::broker::wire::server::default_reactors() as u64,
+            )? as usize;
+            let server =
+                BrokerServer::start_sharded(addr, kml.cluster.clone(), io_workers, reactors)?;
+            println!(
+                "broker wire protocol on {} ({} reactor shard(s))",
+                server.addr(),
+                server.reactors()
+            );
             Some(server)
         }
         None => None,

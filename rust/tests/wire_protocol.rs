@@ -1,25 +1,50 @@
 //! The TCP wire protocol over real loopback sockets: functional
 //! round-trips, the blocking long-poll waking *via the wire*, the group
-//! protocol across remote clients, reconnect behavior — and the
-//! corruption suite: torn frames, flipped CRC bytes, oversized length
-//! prefixes and mid-request disconnects must produce clean errors on
-//! both sides, never a panic, a poisoned partition lock, or a wedged
-//! server (mirroring `storage_recovery.rs`'s torn-frame style).
+//! protocol across remote clients, reconnect behavior, pipelining
+//! (out-of-order response completion, the producer's in-flight window
+//! surviving a mid-window transport cut, round-robin shard
+//! distribution) — and the corruption suite: torn frames, flipped CRC
+//! bytes, oversized length prefixes and mid-request disconnects must
+//! produce clean errors on both sides, never a panic, a poisoned
+//! partition lock, or a wedged server (mirroring
+//! `storage_recovery.rs`'s torn-frame style).
+//!
+//! `KAFKA_ML_TEST_REACTORS` pins the reactor shard count every served
+//! broker in this suite uses (CI runs the soak tests once with 1 and
+//! once with 4); unset, the server's own default applies.
 
 use kafka_ml::broker::wire::codec::{self, OpCode};
+use kafka_ml::broker::wire::server as wire_server;
 use kafka_ml::broker::{
     Acks, Assignor, BrokerConfig, BrokerHandle, BrokerServer, BrokerTransport, ClientLocality,
     Cluster, ClusterHandle, Consumer, Producer, ProducerConfig, Record, RemoteBroker,
 };
 use kafka_ml::util::Bytes;
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Reactor shard count for every served broker in this suite
+/// (`KAFKA_ML_TEST_REACTORS`, or the server default).
+fn test_reactors() -> usize {
+    std::env::var("KAFKA_ML_TEST_REACTORS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(wire_server::default_reactors)
+}
 
 /// A served cluster + a connected remote transport.
 fn served() -> (ClusterHandle, BrokerServer, BrokerHandle) {
     let cluster = Cluster::new(BrokerConfig::default());
-    let server = BrokerServer::start("127.0.0.1:0", cluster.clone()).unwrap();
+    let server = BrokerServer::start_sharded(
+        "127.0.0.1:0",
+        cluster.clone(),
+        wire_server::DEFAULT_IO_WORKERS,
+        test_reactors(),
+    )
+    .unwrap();
     let remote: BrokerHandle = RemoteBroker::connect(&server.addr().to_string()).unwrap();
     (cluster, server, remote)
 }
@@ -615,6 +640,222 @@ fn soak_shutdown_answers_every_parked_longpoll_within_5s() {
         "shutdown + {CONNS} unparks took {:?}",
         t0.elapsed()
     );
+}
+
+// ---- pipelining: correlation ids, the produce window, shard dealing -------
+
+/// Hand-built `Produce` request frame: one record to partition 0, no
+/// producer seq.
+fn produce_frame(corr: u64, topic: &str, value: &[u8]) -> Vec<u8> {
+    let rec = Record::new(value.to_vec());
+    let mut p = Vec::new();
+    codec::put_u32(&mut p, 0);
+    codec::put_opt::<()>(&mut p, None, |_, _| {});
+    codec::put_str(&mut p, topic);
+    codec::put_records(&mut p, std::iter::once((0u64, &rec)));
+    codec::encode_request(corr, OpCode::Produce, &p)
+}
+
+#[test]
+fn pipelined_requests_complete_out_of_order_on_one_connection() {
+    // Two requests down ONE socket: a long-poll on a topic nothing will
+    // touch, then a produce to another topic. On a strictly-FIFO
+    // connection the produce ack would be stuck behind the 60 s
+    // long-poll; pipelining lets it overtake — responses return in
+    // completion order, matched by correlation id.
+    let (cluster, server, _remote) = served();
+    cluster.create_topic("quiet", 1);
+    cluster.create_topic("busy", 1);
+    let mut s = raw_conn(&server);
+    s.write_all(&fetch_wait_frame(100, "quiet", 60_000)).unwrap();
+    // Wait until request 100 is genuinely parked server-side.
+    let wait_set = cluster.topic("quiet").unwrap().wait_set(0).unwrap().clone();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while wait_set.len() < 1 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(wait_set.len(), 1, "long-poll did not park in time");
+
+    s.write_all(&produce_frame(101, "busy", b"x")).unwrap();
+    let body = codec::read_frame(&mut s).unwrap();
+    let mut r = codec::Reader::new(body);
+    assert_eq!(
+        r.u64().unwrap(),
+        101,
+        "produce response must overtake the parked long-poll"
+    );
+    assert_eq!(r.u8().unwrap(), codec::STATUS_OK);
+    assert_eq!(r.u64().unwrap(), 0); // base offset
+
+    // Wake the long-poll: its response arrives second, correlation 100.
+    cluster
+        .produce("quiet", 0, &[Record::new(vec![1])], ClientLocality::InCluster, None)
+        .unwrap();
+    let body = codec::read_frame(&mut s).unwrap();
+    let mut r = codec::Reader::new(body);
+    assert_eq!(r.u64().unwrap(), 100);
+    assert_eq!(r.u8().unwrap(), codec::STATUS_OK);
+    assert!(r.bool().unwrap(), "woken long-poll must report data");
+    server.shutdown();
+}
+
+/// A frame-aware TCP proxy: forwards client <-> broker traffic and
+/// severs BOTH directions the moment the `cut_after`-th `Produce`
+/// request frame has been forwarded — so in-flight batches fail with
+/// their fate unknown (the batch may have landed; its ack died with the
+/// connection). Reconnections pump transparently; the cut fires once.
+fn cutting_proxy(upstream: SocketAddr, cut_after: usize) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let produces = Arc::new(AtomicUsize::new(0));
+    std::thread::spawn(move || loop {
+        let Ok((client, _)) = listener.accept() else { break };
+        let Ok(broker) = TcpStream::connect(upstream) else { break };
+        let produces = produces.clone();
+        let (mut cr, mut cw) = (client.try_clone().unwrap(), client);
+        let (mut sr, mut sw) = (broker.try_clone().unwrap(), broker);
+        // Client -> broker: forward, parse frame boundaries, count
+        // Produce opcodes (frame offset 16: 8 header bytes + the body's
+        // 8-byte correlation id), cut after the Nth.
+        std::thread::spawn(move || {
+            let mut acc: Vec<u8> = Vec::new();
+            let mut buf = [0u8; 4096];
+            loop {
+                let n = match cr.read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => n,
+                };
+                if sw.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+                acc.extend_from_slice(&buf[..n]);
+                let mut cut = false;
+                while acc.len() >= 8 {
+                    let len = u32::from_le_bytes(acc[0..4].try_into().unwrap()) as usize;
+                    if acc.len() < 8 + len {
+                        break;
+                    }
+                    if acc.get(16) == Some(&(OpCode::Produce as u8))
+                        && produces.fetch_add(1, Ordering::SeqCst) + 1 == cut_after
+                    {
+                        cut = true;
+                    }
+                    acc.drain(..8 + len);
+                }
+                if cut {
+                    let _ = cr.shutdown(Shutdown::Both);
+                    let _ = sw.shutdown(Shutdown::Both);
+                    break;
+                }
+            }
+        });
+        // Broker -> client: plain pump.
+        std::thread::spawn(move || {
+            let mut buf = [0u8; 4096];
+            loop {
+                let n = match sr.read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => n,
+                };
+                if cw.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+        });
+    });
+    addr
+}
+
+#[test]
+fn produce_window_survives_transport_cut_without_loss_or_reorder() {
+    // A mid-window transport failure: the proxy severs the connection
+    // right after the 3rd produce frame, with up to 5 batches in
+    // flight. The producer must re-drive the window FIFO against the
+    // idempotent dedup — every record durable exactly once, in send
+    // order, no matter which acks were lost or which frames never
+    // arrived.
+    let (cluster, server, _remote) = served();
+    cluster.create_topic("t", 1);
+    let proxy = cutting_proxy(server.addr(), 3);
+    let remote: BrokerHandle = RemoteBroker::connect(&proxy.to_string()).unwrap();
+    let mut p = Producer::new(
+        remote,
+        ProducerConfig {
+            batch_size: 1, // every record is its own batch/frame
+            max_in_flight: 5,
+            acks: Acks::ExactlyOnce,
+            locality: ClientLocality::Remote,
+            ..Default::default()
+        },
+    );
+    for i in 0..20u8 {
+        p.send_to("t", 0, Record::new(vec![i])).unwrap();
+    }
+    p.flush().unwrap();
+    assert_eq!(p.in_flight(), 0, "flush left batches in the window");
+    let batch = cluster
+        .fetch_batch("t", 0, 0, 100, ClientLocality::InCluster)
+        .unwrap();
+    let got: Vec<u8> = batch.records.iter().map(|(_, r)| r.value[0]).collect();
+    assert_eq!(
+        got,
+        (0..20u8).collect::<Vec<_>>(),
+        "records lost, duplicated or reordered across the cut"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn soak_500_connections_spread_across_reactor_shards() {
+    // Round-robin dealing: with R reactor shards and 500 live
+    // connections, every shard must own about 500/R of them, and thread
+    // count stays O(shards + worker pool) — never O(connections).
+    const CONNS: usize = 500;
+    let (cluster, server, _remote) = served();
+    cluster.create_topic("t", 1);
+    let threads_before = kafka_ml::benchkit::proc_threads();
+    let shards = server.reactors();
+
+    let list_frame = codec::encode_request(1, OpCode::ListTopics, &[]);
+    let mut socks: Vec<TcpStream> = Vec::with_capacity(CONNS);
+    for i in 0..CONNS {
+        let mut s = raw_conn(&server);
+        // A full round-trip proves the shard that adopted this
+        // connection is actually serving it.
+        s.write_all(&list_frame).unwrap();
+        let body = codec::read_frame(&mut s).unwrap_or_else(|e| panic!("conn {i}: {e}"));
+        let mut r = codec::Reader::new(body);
+        assert_eq!(r.u64().unwrap(), 1);
+        assert_eq!(r.u8().unwrap(), codec::STATUS_OK);
+        socks.push(s); // stays open and idle
+    }
+
+    let counts = server.shard_conn_counts();
+    assert_eq!(counts.len(), shards);
+    let total: usize = counts.iter().sum();
+    // The served() probe connection may sit on top of our 500.
+    assert!(
+        total >= CONNS,
+        "expected >= {CONNS} live connections, shards own {counts:?}"
+    );
+    let floor = (CONNS / shards) * 4 / 5;
+    for (shard, &n) in counts.iter().enumerate() {
+        assert!(
+            n >= floor,
+            "shard {shard} owns {n} connections (floor {floor}, counts {counts:?})"
+        );
+    }
+
+    if let (Some(before), Some(after)) = (threads_before, kafka_ml::benchkit::proc_threads()) {
+        let grew = after.saturating_sub(before);
+        assert!(
+            grew < 100,
+            "{CONNS} connections grew the thread count by {grew} \
+             (before {before}, after {after})"
+        );
+    }
+    drop(socks);
+    server.shutdown();
 }
 
 #[test]
