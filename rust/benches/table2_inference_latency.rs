@@ -89,6 +89,7 @@ fn main() -> anyhow::Result<()> {
         locality: ClientLocality::External, // plain script outside the cluster
         max_poll: 32,
         backend: kafka_ml::runtime::BackendSelect::Auto,
+        api_key: None,
     };
     let cancel = CancelToken::new();
     let cluster: kafka_ml::broker::BrokerHandle = kml.cluster.clone();
@@ -107,6 +108,7 @@ fn main() -> anyhow::Result<()> {
                 output_topic: "t2-out-plain".into(),
                 input_format: "RAW".into(),
                 input_config: raw(),
+                tenant: kafka_ml::registry::DEFAULT_TENANT.into(),
             },
             ClientLocality::External,
         )?;

@@ -97,9 +97,15 @@ struct MuxConn {
 }
 
 impl MuxConn {
-    /// Connect and spawn the reader thread.
+    /// Connect and spawn the reader thread. When the broker was built
+    /// with an API key, the connection authenticates *before* the
+    /// reader thread exists — the handshake is the one moment a plain
+    /// blocking read on the socket is race-free.
     fn open(broker: &RemoteBroker, lane: &'static str) -> Result<Arc<MuxConn>> {
-        let stream = broker.fresh_stream()?;
+        let mut stream = broker.fresh_stream()?;
+        if let Some(key) = &broker.api_key {
+            authenticate_stream(&mut stream, key)?;
+        }
         let read_half = stream.try_clone().context("cloning broker socket")?;
         let conn = Arc::new(MuxConn {
             writer: Mutex::new(stream),
@@ -144,6 +150,36 @@ impl MuxConn {
     fn kill(&self) {
         fail_all(&self.pending, "connection closed");
         self.writer.lock().unwrap().shutdown(Shutdown::Both).ok();
+    }
+}
+
+/// Present the API key as the connection's first frame and wait for
+/// the server's verdict before any multiplexed traffic starts. A
+/// rejected key fails the connect (definitive — retrying won't make
+/// the key valid); so does a transport error mid-handshake.
+fn authenticate_stream(stream: &mut TcpStream, key: &str) -> Result<()> {
+    stream
+        .set_read_timeout(Some(CALL_TIMEOUT))
+        .context("arming the auth handshake timeout")?;
+    let mut p = Vec::new();
+    codec::put_str(&mut p, key);
+    // Correlation id 0 is reserved for the handshake: the demux table
+    // doesn't exist yet, and ordinary corrs start at 1.
+    let frame = codec::encode_request(0, OpCode::Authenticate, &p);
+    stream
+        .write_all(&frame)
+        .context("writing Authenticate frame")?;
+    let body = codec::read_frame(stream).context("reading Authenticate response")?;
+    match decode_response(0, body)? {
+        Ok(_) => {
+            // Back to a blocking socket: the reader thread must park in
+            // `read` indefinitely, not wake up every CALL_TIMEOUT.
+            stream
+                .set_read_timeout(None)
+                .context("disarming the auth handshake timeout")?;
+            Ok(())
+        }
+        Err(server_err) => Err(server_err.context("broker rejected API key")),
     }
 }
 
@@ -264,6 +300,11 @@ pub struct RemoteBroker {
     /// demux discipline of the mux connections. Timestamped for the
     /// same idle expiry as the lanes.
     metrics_conn: Mutex<Option<(TcpStream, Instant)>>,
+    /// API key presented on every new mux connection (`Authenticate`
+    /// is each connection's first frame when this is set). The metrics
+    /// socket is exempt, matching the server's one-way `Metric` carve-
+    /// out.
+    api_key: Option<String>,
     corr: AtomicU64,
     /// Source of [`MuxConn::epoch`] identities (post-increment, so the
     /// first connection is epoch 1 and 0 stays "no connection").
@@ -292,15 +333,24 @@ impl RemoteBroker {
     /// (e.g. `127.0.0.1:9092`). Fails fast when the broker is
     /// unreachable; afterwards, individual calls reconnect as needed.
     pub fn connect(addr: &str) -> Result<Arc<RemoteBroker>> {
+        RemoteBroker::connect_with_key(addr, None)
+    }
+
+    /// [`connect`](RemoteBroker::connect), presenting `api_key` as each
+    /// connection's first frame (for brokers running `--require-auth`).
+    /// A bad key fails here, at connect time — the eager probe opens a
+    /// connection, and the handshake is part of opening one.
+    pub fn connect_with_key(addr: &str, api_key: Option<&str>) -> Result<Arc<RemoteBroker>> {
         let broker = Arc::new(RemoteBroker {
             addr: addr.to_string(),
             main: Lane::new("main"),
             wait: Lane::new("wait"),
             metrics_conn: Mutex::new(None),
+            api_key: api_key.map(str::to_string),
             corr: AtomicU64::new(1),
             conn_epoch: AtomicU64::new(0),
         });
-        broker.main.get(&broker)?; // eager probe: unreachable fails here
+        broker.main.get(&broker)?; // eager probe: unreachable (or rejected) fails here
         Ok(broker)
     }
 

@@ -72,6 +72,9 @@ pub enum OpCode {
     CommitOffsets = 12,
     CommittedOffset = 13,
     Metric = 14,
+    /// Presents an API key; must precede every other opcode on a
+    /// connection when the server enforces auth.
+    Authenticate = 15,
 }
 
 impl OpCode {
@@ -91,6 +94,7 @@ impl OpCode {
             12 => OpCode::CommitOffsets,
             13 => OpCode::CommittedOffset,
             14 => OpCode::Metric,
+            15 => OpCode::Authenticate,
             _ => return None,
         })
     }

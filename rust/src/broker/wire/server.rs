@@ -71,6 +71,7 @@
 use super::codec::{self, Chunk, OpCode, Reader};
 use super::reactor::{self, Poller, PollerEvent, WakeFd, MAX_WRITEV_SEGMENTS};
 use crate::broker::cluster::{ClusterHandle, DataWaitGuard};
+use crate::registry::auth::{AuthKeys, AuthOutcome, Identity};
 use crate::broker::log::format;
 use crate::broker::net::ClientLocality;
 use crate::broker::notify::{WaitSet, Waiter};
@@ -149,6 +150,11 @@ pub fn default_reactors() -> usize {
 /// shutdown.
 struct Shared {
     cluster: ClusterHandle,
+    /// Shared API-key table (same `Arc` the REST layer guards with).
+    /// `None` means no key table at all; with `Some` but
+    /// `require_auth() == false`, keys are validated and metered when
+    /// presented but never demanded.
+    auth: Option<Arc<AuthKeys>>,
     cancel: CancelToken,
     /// Notified once at shutdown: every parked long-poll registration
     /// wakes (its hook posts a shard wakeup) and is answered.
@@ -241,6 +247,9 @@ struct Conn {
     /// completing). Gates read interest at [`MAX_INFLIGHT_PER_CONN`].
     inflight: usize,
     metrics_channel: bool,
+    /// Set by a successful `Authenticate`; cloned into workers for
+    /// quota charges. `None` on servers without auth enforcement.
+    identity: Option<Identity>,
     eof: bool,
     last_activity: Instant,
     /// Interest currently registered with the poller.
@@ -264,6 +273,7 @@ impl Conn {
             parks: HashMap::new(),
             inflight: 0,
             metrics_channel: false,
+            identity: None,
             eof: false,
             last_activity: Instant::now(),
             reg_read: true,
@@ -306,6 +316,23 @@ impl BrokerServer {
         io_workers: usize,
         reactors: usize,
     ) -> Result<BrokerServer> {
+        BrokerServer::start_sharded_auth(listen, cluster, io_workers, reactors, None)
+    }
+
+    /// [`BrokerServer::start_sharded`] with an API-key table. When the
+    /// table enforces auth ([`AuthKeys::require_auth`]), a connection's
+    /// first accepted opcode must be [`OpCode::Authenticate`]; every
+    /// other request before a successful authentication is answered
+    /// with an error response (`Metric` frames, which are one-way on a
+    /// dedicated socket, stay exempt). Produce and CreateTopic charge
+    /// the authenticated tenant's quota.
+    pub fn start_sharded_auth(
+        listen: &str,
+        cluster: ClusterHandle,
+        io_workers: usize,
+        reactors: usize,
+        auth: Option<Arc<AuthKeys>>,
+    ) -> Result<BrokerServer> {
         let listener =
             TcpListener::bind(listen).with_context(|| format!("binding broker on {listen}"))?;
         listener
@@ -322,6 +349,7 @@ impl BrokerServer {
         }
         let shared = Arc::new(Shared {
             cluster,
+            auth,
             cancel: CancelToken::new(),
             shutdown: Arc::new(WaitSet::new()),
             shards: mailboxes,
@@ -432,6 +460,10 @@ impl Drop for BrokerServer {
 enum FrameKind {
     /// One-way; dispatches immediately, no response, no in-flight slot.
     Metric,
+    /// `Authenticate`: handled synchronously on the reactor thread so
+    /// the connection's identity is set before any later frame in the
+    /// same buffer is parsed — no in-flight slot, no worker round-trip.
+    Auth,
     /// Long-poll; dispatches immediately (parks instead of occupying
     /// the serial slot), so it can never head-of-line block a produce.
     Wait,
@@ -591,6 +623,8 @@ impl Reactor {
     fn parse_frames(&mut self, id: u64) {
         enum Next {
             Frame { body: Bytes, crc: u32, kind: FrameKind },
+            /// Unauthenticated request answered inline with an error.
+            Rejected,
             Close,
             Done,
         }
@@ -620,10 +654,23 @@ impl Reactor {
                         let op = codec::peek_op(&conn.rbuf[codec::WIRE_HEADER_BYTES..total]);
                         let kind = match op {
                             Some(v) if v == OpCode::Metric as u8 => FrameKind::Metric,
+                            Some(v) if v == OpCode::Authenticate as u8 => FrameKind::Auth,
                             Some(v) if v == OpCode::FetchWait as u8 => FrameKind::Wait,
                             _ => FrameKind::Ordinary,
                         };
-                        if !matches!(kind, FrameKind::Metric)
+                        // With auth enforced, an unauthenticated
+                        // connection may speak only `Authenticate`
+                        // (and one-way `Metric`): everything else is
+                        // answered with an error, never dispatched.
+                        let unauthenticated = conn.identity.is_none()
+                            && matches!(kind, FrameKind::Wait | FrameKind::Ordinary)
+                            && self
+                                .shared
+                                .auth
+                                .as_ref()
+                                .is_some_and(|a| a.require_auth());
+                        if !matches!(kind, FrameKind::Metric | FrameKind::Auth)
+                            && !unauthenticated
                             && conn.inflight >= MAX_INFLIGHT_PER_CONN
                         {
                             // Backpressure: leave the frame buffered;
@@ -636,21 +683,44 @@ impl Reactor {
                             );
                             conn.rbuf.drain(..total);
                             conn.last_activity = Instant::now();
-                            match kind {
-                                FrameKind::Metric => conn.metrics_channel = true,
-                                FrameKind::Wait => conn.inflight += 1,
-                                FrameKind::Ordinary => {
-                                    conn.inflight += 1;
-                                    conn.pending.push_back((body.clone(), crc));
+                            if unauthenticated {
+                                // Corruption still drops the socket;
+                                // an intact frame gets a decodable
+                                // error on its own correlation id.
+                                if format::crc32(body.as_slice()) != crc || body.len() < 9 {
+                                    Next::Close
+                                } else {
+                                    let corr = u64::from_le_bytes(
+                                        body.as_slice()[0..8].try_into().unwrap(),
+                                    );
+                                    let mut buf = Vec::new();
+                                    codec::encode_response_into(
+                                        &mut buf,
+                                        corr,
+                                        Err("unauthenticated: present an API key with Authenticate first"),
+                                    );
+                                    conn.out.push_back(Chunk::Owned(buf));
+                                    Next::Rejected
                                 }
+                            } else {
+                                match kind {
+                                    FrameKind::Metric => conn.metrics_channel = true,
+                                    FrameKind::Auth => {}
+                                    FrameKind::Wait => conn.inflight += 1,
+                                    FrameKind::Ordinary => {
+                                        conn.inflight += 1;
+                                        conn.pending.push_back((body.clone(), crc));
+                                    }
+                                }
+                                Next::Frame { body, crc, kind }
                             }
-                            Next::Frame { body, crc, kind }
                         }
                     }
                 }
             };
             match next {
                 Next::Done => break,
+                Next::Rejected => continue,
                 Next::Close => {
                     self.close_conn(id);
                     return;
@@ -659,13 +729,16 @@ impl Reactor {
                     let shared = self.shared.clone();
                     let mailbox = self.mailbox.clone();
                     match kind {
+                        // Synchronous: identity must be visible to the
+                        // very next frame in this buffer.
+                        FrameKind::Auth => self.handle_auth_frame(id, body, crc),
                         FrameKind::Metric => self
                             .workers
                             .execute(move || handle_metric(&shared, &mailbox, id, body, crc)),
                         // Long-polls bypass the serial queue: they park
                         // rather than occupy a worker, so dispatch now.
                         FrameKind::Wait => self.workers.execute(move || {
-                            handle_request(&shared, &mailbox, id, body, crc, Vec::new(), false)
+                            handle_request(&shared, &mailbox, id, body, crc, Vec::new(), false, None)
                         }),
                         FrameKind::Ordinary => {} // dispatched below, serially
                     }
@@ -674,6 +747,54 @@ impl Reactor {
         }
         self.maybe_dispatch(id);
         self.update_interest(id);
+    }
+
+    /// `Authenticate`, handled inline on the reactor thread: validate
+    /// the frame, resolve the key, set the connection's identity, and
+    /// queue the response. A server without a key table accepts any
+    /// credential (auth is a no-op); unknown and revoked keys answer
+    /// distinct errors but keep the connection open, so a client can
+    /// retry with a better key.
+    fn handle_auth_frame(&mut self, id: u64, body: Bytes, crc: u32) {
+        if format::crc32(body.as_slice()) != crc {
+            self.close_conn(id);
+            return;
+        }
+        let mut r = Reader::new(body);
+        let (Ok(corr), Ok(_op)) = (r.u64(), r.u8()) else {
+            self.close_conn(id);
+            return;
+        };
+        let Ok(token) = r.str() else {
+            self.close_conn(id);
+            return;
+        };
+        let mut identity = None;
+        let outcome: Result<(), &str> = match &self.shared.auth {
+            Some(auth) => match auth.authenticate(&token) {
+                AuthOutcome::Accepted(ident) => {
+                    identity = Some(ident);
+                    Ok(())
+                }
+                AuthOutcome::Revoked => Err("key revoked"),
+                AuthOutcome::Unknown => Err("unknown key"),
+            },
+            None => Ok(()),
+        };
+        let Some(conn) = self.conns.get_mut(&id) else { return };
+        let mut buf = Vec::new();
+        match outcome {
+            Ok(()) => {
+                if identity.is_some() {
+                    conn.identity = identity;
+                }
+                codec::begin_response(&mut buf, corr);
+                codec::finish_frame(&mut buf);
+            }
+            Err(msg) => codec::encode_response_into(&mut buf, corr, Err(msg)),
+        }
+        conn.out.push_back(Chunk::Owned(buf));
+        conn.last_activity = Instant::now();
     }
 
     /// Feed the serial lane: if no ordinary request is executing for
@@ -686,10 +807,11 @@ impl Reactor {
         let Some((body, crc)) = conn.pending.pop_front() else { return };
         conn.busy = true;
         let scratch = std::mem::take(&mut conn.spare);
+        let identity = conn.identity.clone();
         let shared = self.shared.clone();
         let mailbox = self.mailbox.clone();
         self.workers
-            .execute(move || handle_request(&shared, &mailbox, id, body, crc, scratch, true));
+            .execute(move || handle_request(&shared, &mailbox, id, body, crc, scratch, true, identity));
     }
 
     /// Drain the outgoing chunk queue with vectored writes until the
@@ -988,6 +1110,7 @@ fn handle_request(
     crc: u32,
     mut scratch: Vec<u8>,
     serial: bool,
+    identity: Option<Identity>,
 ) {
     if format::crc32(body.as_slice()) != crc {
         mailbox.post(Event::Close { conn });
@@ -1023,7 +1146,7 @@ fn handle_request(
         }
         _ => {
             codec::begin_response(&mut scratch, corr);
-            match dispatch_simple(op, &mut r, shared, &mut scratch) {
+            match dispatch_simple(op, &mut r, shared, identity.as_ref(), &mut scratch) {
                 Ok(()) => codec::finish_frame(&mut scratch),
                 Err(e) => codec::encode_response_into(&mut scratch, corr, Err(&format!("{e:#}"))),
             }
@@ -1189,12 +1312,25 @@ fn complete_wait(shared: &Arc<Shared>, mailbox: &Arc<ShardMailbox>, conn: u64, p
 /// malformed payload can never leave a partition lock poisoned or a
 /// group half-updated. On error the caller re-encodes the buffer as an
 /// error response — partial payload bytes are simply discarded.
-fn dispatch_simple(op: OpCode, r: &mut Reader, shared: &Arc<Shared>, out: &mut Vec<u8>) -> Result<()> {
+fn dispatch_simple(
+    op: OpCode,
+    r: &mut Reader,
+    shared: &Arc<Shared>,
+    identity: Option<&Identity>,
+    out: &mut Vec<u8>,
+) -> Result<()> {
     let cluster = &shared.cluster;
     match op {
         OpCode::CreateTopic => {
             let partitions = r.u32()?;
             let topic = r.str()?;
+            // A tenant at its stored-bytes ceiling can't create more
+            // storage-bearing resources.
+            if let (Some(auth), Some(ident)) = (&shared.auth, identity) {
+                if auth.storage_exhausted(ident) {
+                    anyhow::bail!("quota: stored-bytes ceiling reached");
+                }
+            }
             // Through the SAME trait impl the in-process transport
             // uses (0 = broker default), so the two paths cannot drift.
             let n = BrokerTransport::create_topic(&**cluster, &topic, partitions)?;
@@ -1215,6 +1351,13 @@ fn dispatch_simple(op: OpCode, r: &mut Reader, shared: &Arc<Shared>, out: &mut V
             // Zero-copy: each decoded record's payloads are slices of
             // the request buffer; the append below shares them.
             let records: Vec<Record> = r.records()?.into_iter().map(|(_, rec)| rec).collect();
+            // Quota: charge rate + stored bytes against the tenant
+            // BEFORE appending — a rejected produce stores nothing.
+            if let (Some(auth), Some(ident)) = (&shared.auth, identity) {
+                let bytes: u64 = records.iter().map(|rec| format::frame_size(rec) as u64).sum();
+                auth.charge_produce(ident, records.len() as u64, bytes)
+                    .map_err(|_| anyhow::anyhow!("quota: tenant produce quota exceeded"))?;
+            }
             let base = cluster.produce(&topic, partition, &records, ClientLocality::Remote, seq)?;
             codec::put_u64(out, base);
         }
@@ -1267,6 +1410,10 @@ fn dispatch_simple(op: OpCode, r: &mut Reader, shared: &Arc<Shared>, out: &mut V
             let committed = cluster.committed_offset(&gid, &(topic, p));
             codec::put_opt(out, committed.as_ref(), |o, v| codec::put_u64(o, *v));
         }
+        // The reactor answers Authenticate inline; a frame whose short
+        // body defeated the opcode peek still lands here — answer it
+        // as an error rather than asserting.
+        OpCode::Authenticate => anyhow::bail!("malformed Authenticate frame"),
         // Handled before dispatch_simple is reached.
         OpCode::FetchBatch | OpCode::FetchWait | OpCode::Metric => unreachable!(),
     }

@@ -28,7 +28,7 @@ use crate::coordinator::{
 use crate::exec::CancelToken;
 use crate::json::Json;
 use crate::ml::hcopd_dataset;
-use crate::registry::BackendClient;
+use crate::registry::{AuthKeys, BackendClient, DEFAULT_TENANT};
 use crate::runtime::BackendSelect;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -70,8 +70,13 @@ USAGE:
   kafka-ml serve [--port P] [--listen ADDR] [--io-workers N] [--reactors N]
                  [--artifacts DIR] [--state FILE.json] [--data-dir DIR]
                  [--backend auto|pjrt|native]
+                 [--auth-keys FILE.json] [--require-auth true]
       Boot the platform (broker + back-end + orchestrator) and serve the
       RESTful back-end until Ctrl-C; --state snapshots the registry.
+      --auth-keys loads an API-key table (see `kafka-ml keys`) and turns
+      authentication on for the REST API and the wire protocol alike;
+      --require-auth true enforces even without a file. The platform
+      mints its own internal admin service key for its pods either way.
       --listen ADDR additionally serves the broker's TCP wire protocol
       (e.g. 127.0.0.1:9092), so workers in other processes can attach
       with --broker. The wire server is a sharded epoll reactor:
@@ -82,8 +87,18 @@ USAGE:
       owns its connections end to end.
   kafka-ml info [--artifacts DIR] [--backend auto|pjrt|native]
       Print the model's metadata and which execution backend loads.
+  kafka-ml keys create --file F [--tenant T] [--admin true]
+  kafka-ml keys revoke --file F --token K
+  kafka-ml keys quota  --file F --tenant T [--records-per-sec N] [--stored-bytes N]
+  kafka-ml keys list   --file F
+      Administer the API-key file a `serve --auth-keys F` loads: mint a
+      key for a tenant (prints the token once), revoke one, set the
+      tenant's produce-rate / stored-bytes quotas, or list keys with
+      their usage counters.
 
-REMOTE WORKERS (separate OS processes; need a `serve --listen` broker):
+REMOTE WORKERS (separate OS processes; need a `serve --listen` broker;
+all take --api-key K when the server runs with authentication — the key
+is presented on the wire protocol AND as the REST bearer token):
   kafka-ml produce --broker ADDR --topic T [--partition P] [--value V | --count N]
       Produce records (--value once, or --count synthetic records).
   kafka-ml consume --broker ADDR --topic T [--partition P] [--group G]
@@ -130,6 +145,7 @@ pub fn run(args: &[String]) -> Result<()> {
         Some("consume") => cmd_consume(&parse_flags(&args[1..])?),
         Some("train") => cmd_train(&parse_flags(&args[1..])?),
         Some("infer") => cmd_infer(&parse_flags(&args[1..])?),
+        Some("keys") => cmd_keys(&args[1..]),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -138,12 +154,13 @@ pub fn run(args: &[String]) -> Result<()> {
     }
 }
 
-/// Connect the remote broker transport named by `--broker ADDR`.
+/// Connect the remote broker transport named by `--broker ADDR`,
+/// presenting `--api-key` (if given) on every connection.
 fn remote_broker(flags: &BTreeMap<String, String>) -> Result<BrokerHandle> {
     let addr = flags
         .get("broker")
         .context("this subcommand needs --broker ADDR (a `kafka-ml serve --listen` endpoint)")?;
-    let broker = RemoteBroker::connect(addr)?;
+    let broker = RemoteBroker::connect_with_key(addr, flags.get("api-key").map(String::as_str))?;
     Ok(broker)
 }
 
@@ -222,15 +239,40 @@ fn cmd_info(flags: &BTreeMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// A `--flag true|false` boolean (absent = false).
+fn flag_bool(flags: &BTreeMap<String, String>, key: &str) -> Result<bool> {
+    match flags.get(key).map(String::as_str) {
+        None | Some("false") => Ok(false),
+        Some("true") => Ok(true),
+        Some(other) => bail!("--{key} must be true or false, got '{other}'"),
+    }
+}
+
 fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
     let port = flag_u64(flags, "port", 8080)? as u16;
+    // Either flag turns authentication on: a keys file names who may
+    // call, and --require-auth true enforces even without one (only
+    // keys minted at runtime over POST /keys work until then).
+    let keys_path = flags.get("auth-keys");
+    let require_auth = flag_bool(flags, "require-auth")? || keys_path.is_some();
     let kml = KafkaMl::start(KafkaMlConfig {
         rest_port: port,
         artifact_dir: artifacts_dir(flags),
         broker: broker_config(flags),
         backend: backend_flag(flags)?,
+        require_auth,
         ..Default::default()
     })?;
+    // Re-asserting the platform's own credentials after anything that
+    // replaces the key table (keys file now, state restore below): the
+    // pods' service key must survive, and the CLI's auth posture wins
+    // over whatever a file says.
+    let reassert_auth = |kml: &KafkaMl| {
+        if let Some(sk) = kml.service_key() {
+            kml.store.auth().insert_key(sk, DEFAULT_TENANT, true).ok();
+        }
+        kml.store.auth().set_require(require_auth);
+    };
     // --listen: expose the broker over the TCP wire protocol so remote
     // workers (produce/consume/train/infer --broker) can attach. The
     // server lives as long as the serve loop below. --reactors sizes
@@ -248,12 +290,20 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
                 "reactors",
                 crate::broker::wire::server::default_reactors() as u64,
             )? as usize;
-            let server =
-                BrokerServer::start_sharded(addr, kml.cluster.clone(), io_workers, reactors)?;
+            // The wire server shares the back-end's key table, so one
+            // `keys` file (or POST /keys) governs both planes.
+            let server = BrokerServer::start_sharded_auth(
+                addr,
+                kml.cluster.clone(),
+                io_workers,
+                reactors,
+                Some(kml.store.auth().clone()),
+            )?;
             println!(
-                "broker wire protocol on {} ({} reactor shard(s))",
+                "broker wire protocol on {} ({} reactor shard(s){})",
                 server.addr(),
-                server.reactors()
+                server.reactors(),
+                if require_auth { ", auth required" } else { "" }
             );
             Some(server)
         }
@@ -271,10 +321,23 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<()> {
                 })
                 .and_then(|j| kml.store.restore_from_json(&j));
             match restore {
-                Ok(()) => println!("restored back-end state from {path}"),
+                Ok(()) => {
+                    reassert_auth(&kml);
+                    println!("restored back-end state from {path}");
+                }
                 Err(e) => log::warn!("could not restore {path}: {e}"),
             }
         }
+    }
+    // The keys file is authoritative over whatever a state snapshot
+    // carried, so it loads after the restore.
+    if let Some(path) = keys_path {
+        kml.store
+            .auth()
+            .load_file(path)
+            .with_context(|| format!("loading API keys from {path}"))?;
+        reassert_auth(&kml);
+        println!("loaded API keys from {path}");
     }
     println!("kafka-ml back-end serving at {}", kml.backend_url());
     println!("(Ctrl-C to stop)");
@@ -354,6 +417,68 @@ fn cmd_pipeline(flags: &BTreeMap<String, String>) -> Result<()> {
     kml.stop_inference(inf.id)?;
     kml.shutdown();
     println!("done.");
+    Ok(())
+}
+
+/// Offline API-key administration on the keys file `serve --auth-keys`
+/// loads. Every action rewrites the file atomically (tmp + rename).
+fn cmd_keys(args: &[String]) -> Result<()> {
+    let action = args
+        .first()
+        .context("keys needs an action: create | revoke | list | quota")?
+        .as_str();
+    let flags = parse_flags(&args[1..])?;
+    let path = required(&flags, "file")?;
+    let keys = AuthKeys::new();
+    if std::path::Path::new(path).exists() {
+        keys.load_file(path)?;
+    } else if action != "create" {
+        bail!("keys file {path} does not exist");
+    }
+    match action {
+        "create" => {
+            let tenant = flags.get("tenant").map(String::as_str).unwrap_or(DEFAULT_TENANT);
+            let token = keys.create_key(tenant, flag_bool(&flags, "admin")?)?;
+            keys.save_file(path)?;
+            println!("{token}");
+        }
+        "revoke" => {
+            let token = required(&flags, "token")?;
+            if !keys.revoke(token) {
+                bail!("no such key in {path}");
+            }
+            keys.save_file(path)?;
+            println!("revoked {token}");
+        }
+        "quota" => {
+            let tenant = required(&flags, "tenant")?;
+            let mut q = keys.quota(tenant);
+            if let Some(v) = flags.get("records-per-sec") {
+                q.records_per_sec = Some(v.parse().context("--records-per-sec must be an integer")?);
+            }
+            if let Some(v) = flags.get("stored-bytes") {
+                q.stored_bytes = Some(v.parse().context("--stored-bytes must be an integer")?);
+            }
+            keys.set_quota(tenant, q);
+            keys.save_file(path)?;
+            println!("quota set for tenant {tenant}");
+        }
+        "list" => {
+            for k in keys.list() {
+                println!(
+                    "{}  tenant={} admin={} revoked={} requests={} records={} bytes={}",
+                    k.token,
+                    k.tenant,
+                    k.admin,
+                    k.revoked,
+                    k.usage.requests,
+                    k.usage.records_produced,
+                    k.usage.bytes_stored
+                );
+            }
+        }
+        other => bail!("unknown keys action '{other}' (create | revoke | list | quota)"),
+    }
     Ok(())
 }
 
@@ -464,10 +589,12 @@ fn cmd_train(flags: &BTreeMap<String, String>) -> Result<()> {
     let result_id = required_u64(flags, "result")?;
     // The artifact dir comes from the model registry (--model ID, the
     // containerized path) or straight from --artifacts.
+    let api_key = flags.get("api-key").cloned();
     let artifact_dir = match flags.get("model") {
         Some(m) => {
             let model_id: u64 = m.parse().context("--model must be an id")?;
-            BackendClient::new(backend_url).model_artifact_dir(model_id)?
+            BackendClient::new_with_key(backend_url, api_key.as_deref())
+                .model_artifact_dir(model_id)?
         }
         None => artifacts_dir(flags),
     };
@@ -476,6 +603,7 @@ fn cmd_train(flags: &BTreeMap<String, String>) -> Result<()> {
         control_timeout: Duration::from_secs(flag_u64(flags, "control-timeout-s", 120)?),
         locality: ClientLocality::Remote,
         backend: backend_flag(flags)?,
+        api_key,
         ..TrainingJobConfig::new(deployment_id, result_id, &artifact_dir, backend_url)
     };
     println!("training job: deployment {deployment_id}, result {result_id}, broker {}",
@@ -503,7 +631,8 @@ fn cmd_infer(flags: &BTreeMap<String, String>) -> Result<()> {
         .unwrap_or_else(|| default_member_id("replica"));
     // Same auto-configuration the orchestrator entrypoint does: the
     // deployment row names topics, format and the trained result.
-    let backend = BackendClient::new(backend_url);
+    let api_key = flags.get("api-key").cloned();
+    let backend = BackendClient::new_with_key(backend_url, api_key.as_deref());
     let info = backend.inference_info(inference_id)?;
     let result_id = info.req_u64("result_id")?;
     let result = backend.result_info(result_id)?;
@@ -521,6 +650,7 @@ fn cmd_infer(flags: &BTreeMap<String, String>) -> Result<()> {
         locality: ClientLocality::Remote,
         max_poll: 32,
         backend: backend_flag(flags)?,
+        api_key,
     };
     println!(
         "inference replica '{member}' on {} -> {} (Ctrl-C to stop)",
@@ -597,6 +727,59 @@ mod tests {
                 "{cmd}: {err}"
             );
         }
+    }
+
+    #[test]
+    fn flag_bool_accepts_only_true_false() {
+        assert!(!flag_bool(&BTreeMap::new(), "require-auth").unwrap());
+        let f = parse_flags(&s(&["--require-auth", "true"])).unwrap();
+        assert!(flag_bool(&f, "require-auth").unwrap());
+        let f = parse_flags(&s(&["--require-auth", "yes"])).unwrap();
+        assert!(flag_bool(&f, "require-auth").is_err());
+    }
+
+    #[test]
+    fn keys_subcommand_roundtrips_a_key_file() {
+        let dir = std::env::temp_dir().join(format!("kml-keys-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("keys.json");
+        let file = file.to_str().unwrap();
+
+        // create prints nothing we can capture here, but the file must
+        // exist afterwards and hold one key for the tenant.
+        run(&s(&["keys", "create", "--file", file, "--tenant", "acme"])).unwrap();
+        let keys = AuthKeys::new();
+        keys.load_file(file).unwrap();
+        let listed = keys.list();
+        assert_eq!(listed.len(), 1);
+        assert_eq!(listed[0].tenant, "acme");
+        assert!(!listed[0].admin);
+        let token = listed[0].token.clone();
+
+        // quota lands in the file too.
+        run(&s(&[
+            "keys", "quota", "--file", file, "--tenant", "acme",
+            "--records-per-sec", "100", "--stored-bytes", "4096",
+        ]))
+        .unwrap();
+        let keys = AuthKeys::new();
+        keys.load_file(file).unwrap();
+        assert_eq!(keys.quota("acme").records_per_sec, Some(100));
+        assert_eq!(keys.quota("acme").stored_bytes, Some(4096));
+
+        // revoke flips the flag without deleting (403, not 401).
+        run(&s(&["keys", "revoke", "--file", file, "--token", &token])).unwrap();
+        let keys = AuthKeys::new();
+        keys.load_file(file).unwrap();
+        assert!(keys.list()[0].revoked);
+        // list and unknown actions.
+        run(&s(&["keys", "list", "--file", file])).unwrap();
+        assert!(run(&s(&["keys", "frob", "--file", file])).is_err());
+        // every non-create action demands an existing file.
+        let missing = dir.join("nope.json");
+        let err = run(&s(&["keys", "list", "--file", missing.to_str().unwrap()])).unwrap_err();
+        assert!(err.to_string().contains("does not exist"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -49,6 +49,8 @@ pub struct InferenceReplicaConfig {
     pub max_poll: usize,
     /// Execution backend for the model (`--backend` knob).
     pub backend: BackendSelect,
+    /// API key for the back-end (`--require-auth` platforms).
+    pub api_key: Option<String>,
 }
 
 impl InferenceReplicaConfig {
@@ -68,7 +70,7 @@ pub fn run_inference_replica(
     cancel: &CancelToken,
 ) -> Result<()> {
     // downloadTrainedModelFromBackend
-    let backend = BackendClient::new(&config.backend_url);
+    let backend = BackendClient::new_with_key(&config.backend_url, config.api_key.as_deref());
     let params_host = backend.download_model(config.result_id)?;
     let engine = Engine::load_with(&config.artifact_dir, config.backend)?;
     log::info!("inference replica {member_id} running on the '{}' backend", engine.backend_name());
@@ -339,6 +341,7 @@ mod tests {
             locality: ClientLocality::InCluster,
             max_poll: 16,
             backend: BackendSelect::Auto,
+            api_key: None,
         };
         assert_eq!(cfg.group_id(), "inference-12");
     }

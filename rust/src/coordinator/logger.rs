@@ -31,10 +31,11 @@ pub fn entry_from_message(msg: &ControlMessage, now_ms: u64) -> ControlLogEntry 
 pub fn run_control_logger(
     cluster: &ClusterHandle,
     backend_url: &str,
+    api_key: Option<&str>,
     locality: ClientLocality,
     cancel: &CancelToken,
 ) -> Result<()> {
-    let backend = BackendClient::new(backend_url);
+    let backend = BackendClient::new_with_key(backend_url, api_key);
     cluster.topic_or_create(CONTROL_TOPIC);
     let mut consumer = Consumer::new(cluster.clone(), locality);
     consumer.subscribe(

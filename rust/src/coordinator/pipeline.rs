@@ -30,7 +30,9 @@ use crate::json::Json;
 use crate::orchestrator::{
     ContainerSpec, JobSpec, Orchestrator, OrchestratorCosts, RcSpec, Scheduler,
 };
-use crate::registry::{api, BackendClient, Deployment, InferenceDeployment, Store, TrainingResult};
+use crate::registry::{
+    api, BackendClient, Deployment, InferenceDeployment, Store, TrainingResult, DEFAULT_TENANT,
+};
 use crate::rest::Server;
 use crate::runtime::BackendSelect;
 use anyhow::{bail, Context, Result};
@@ -56,6 +58,12 @@ pub struct KafkaMlConfig {
     /// (`--backend {auto,pjrt,native}`; `Auto` prefers PJRT artifacts
     /// and falls back to the pure-Rust native engine).
     pub backend: BackendSelect,
+    /// Demand API keys on every REST call. The platform mints itself an
+    /// internal admin *service key* that its own pods (training Jobs,
+    /// inference replicas, the control logger) authenticate with;
+    /// external clients must present keys minted via `POST /keys` (or
+    /// [`Store::auth`]).
+    pub require_auth: bool,
 }
 
 impl Default for KafkaMlConfig {
@@ -69,6 +77,7 @@ impl Default for KafkaMlConfig {
             reconcile_every: Duration::from_millis(10),
             clock: None,
             backend: BackendSelect::Auto,
+            require_auth: false,
         }
     }
 }
@@ -99,6 +108,9 @@ pub struct KafkaMl {
     backend_url: String,
     artifact_dir: String,
     backend: BackendSelect,
+    /// The internal admin key the platform's own pods authenticate
+    /// with (`None` unless `require_auth`).
+    service_key: Option<String>,
 }
 
 impl KafkaMl {
@@ -110,12 +122,25 @@ impl KafkaMl {
             None => Cluster::new(config.broker.clone()),
         };
         let store = Arc::new(Store::new());
+        // Mint the service key before the server starts answering, so
+        // there is no window where the platform's own pods would be
+        // locked out of a `require_auth` back-end.
+        let service_key = if config.require_auth {
+            let key = store
+                .auth()
+                .create_key(DEFAULT_TENANT, true)
+                .context("minting the platform service key")?;
+            store.auth().set_require(true);
+            Some(key)
+        } else {
+            None
+        };
         let server = Server::start(config.rest_port, 8, api::router(store.clone()))
             .context("starting back-end server")?;
         let backend_url = server.base_url();
         let orch = Orchestrator::new(Scheduler::single_node(), config.costs);
 
-        Self::register_entrypoints(&orch, &cluster, &backend_url);
+        Self::register_entrypoints(&orch, &cluster, &backend_url, service_key.as_deref());
 
         if config.control_logger {
             orch.create_rc(RcSpec::new(
@@ -135,16 +160,23 @@ impl KafkaMl {
             backend_url,
             artifact_dir: config.artifact_dir,
             backend: config.backend,
+            service_key,
         })
     }
 
-    fn register_entrypoints(orch: &Arc<Orchestrator>, cluster: &ClusterHandle, backend_url: &str) {
+    fn register_entrypoints(
+        orch: &Arc<Orchestrator>,
+        cluster: &ClusterHandle,
+        backend_url: &str,
+        service_key: Option<&str>,
+    ) {
         // training Job (§IV-C, Algorithm 1)
         {
             let broker: BrokerHandle = cluster.clone();
             let url = backend_url.to_string();
+            let key = service_key.map(str::to_string);
             orch.register_entrypoint("training-job", move |ctx| {
-                let backend = BackendClient::new(&url);
+                let backend = BackendClient::new_with_key(&url, key.as_deref());
                 let model_id = ctx.env_u64("MODEL_ID")?;
                 let artifact_dir = backend.model_artifact_dir(model_id)?;
                 let config = TrainingJobConfig {
@@ -160,14 +192,13 @@ impl KafkaMl {
                     ),
                     locality: ClientLocality::InCluster,
                     backend: ctx.env_or("BACKEND", "auto").parse()?,
+                    api_key: key.clone(),
                 };
                 let result_id = config.result_id;
                 match run_training_job(&broker, &config, &ctx.cancel) {
                     Ok(_) => Ok(()),
                     Err(e) => {
-                        BackendClient::new(&url)
-                            .set_result_status(result_id, "failed")
-                            .ok();
+                        backend.set_result_status(result_id, "failed").ok();
                         Err(e)
                     }
                 }
@@ -177,8 +208,9 @@ impl KafkaMl {
         {
             let broker: BrokerHandle = cluster.clone();
             let url = backend_url.to_string();
+            let key = service_key.map(str::to_string);
             orch.register_entrypoint("inference-replica", move |ctx| {
-                let backend = BackendClient::new(&url);
+                let backend = BackendClient::new_with_key(&url, key.as_deref());
                 let inference_id = ctx.env_u64("INFERENCE_ID")?;
                 let info = backend.inference_info(inference_id)?;
                 let result_id = info.req_u64("result_id")?;
@@ -197,6 +229,7 @@ impl KafkaMl {
                     locality: ClientLocality::InCluster,
                     max_poll: 32,
                     backend: ctx.env_or("BACKEND", "auto").parse()?,
+                    api_key: key.clone(),
                 };
                 super::inference::run_inference_replica(
                     &broker,
@@ -210,8 +243,15 @@ impl KafkaMl {
         {
             let cluster = cluster.clone();
             let url = backend_url.to_string();
+            let key = service_key.map(str::to_string);
             orch.register_entrypoint("control-logger", move |ctx| {
-                run_control_logger(&cluster, &url, ClientLocality::InCluster, &ctx.cancel)
+                run_control_logger(
+                    &cluster,
+                    &url,
+                    key.as_deref(),
+                    ClientLocality::InCluster,
+                    &ctx.cancel,
+                )
             });
         }
     }
@@ -227,7 +267,14 @@ impl KafkaMl {
     }
 
     pub fn backend(&self) -> BackendClient {
-        BackendClient::new(&self.backend_url)
+        BackendClient::new_with_key(&self.backend_url, self.service_key.as_deref())
+    }
+
+    /// The internal admin key minted under `require_auth` — what the
+    /// platform's own pods authenticate with. Embedding processes use
+    /// it to mint tenant keys over `POST /keys`.
+    pub fn service_key(&self) -> Option<&str> {
+        self.service_key.as_deref()
     }
 
     // ---- step A: define the model --------------------------------------------
@@ -456,6 +503,56 @@ mod tests {
         // REST back-end is actually serving.
         let models = kml.backend();
         assert!(models.model_artifact_dir(1).is_err()); // 404 -> err
+        kml.shutdown();
+    }
+
+    #[test]
+    fn require_auth_locks_out_anonymous_clients_but_not_the_pods() {
+        let kml = KafkaMl::start(KafkaMlConfig {
+            require_auth: true,
+            ..Default::default()
+        })
+        .unwrap();
+        let key = kml.service_key().expect("require_auth mints a service key").to_string();
+        // Anonymous REST calls bounce off the guard…
+        let anon = BackendClient::new(kml.backend_url());
+        let err = format!("{:#}", anon.create_model("m", "/tmp/x").unwrap_err());
+        assert!(err.contains("missing bearer token"), "{err}");
+        // …while the platform's own client (service key) passes.
+        let id = kml.backend().create_model("m", "/tmp/x").unwrap();
+        assert_eq!(kml.backend().model_artifact_dir(id).unwrap(), "/tmp/x");
+        // The control logger pod authenticates with the same key: a
+        // control message still reaches the store end-to-end.
+        kml.orch
+            .wait_rc_ready("control-logger", Duration::from_secs(5))
+            .unwrap();
+        let msg = ControlMessage {
+            deployment_id: 41,
+            stream: StreamRef::new("data", 0, 0, 4),
+            input_format: "RAW".into(),
+            input_config: Json::obj(vec![
+                ("dtype", Json::str("f32")),
+                ("shape", Json::arr(vec![Json::from(2u64)])),
+            ]),
+            validation_rate: 0.25,
+            total_msg: 4,
+        };
+        kml.cluster
+            .produce(
+                CONTROL_TOPIC,
+                0,
+                &[crate::broker::Record::new(msg.encode())],
+                ClientLocality::External,
+                None,
+            )
+            .unwrap();
+        kml.wait_control_logged(41, Duration::from_secs(5)).unwrap();
+        // The service key really is an admin key on the keys API.
+        let http = crate::rest::HttpClient::new(kml.backend_url()).with_token(&key);
+        let resp = http
+            .post_json("/keys", &Json::obj(vec![("tenant", Json::str("acme"))]))
+            .unwrap();
+        assert!(resp.status.is_success(), "{:?}", resp.status);
         kml.shutdown();
     }
 

@@ -51,6 +51,8 @@ pub struct TrainingJobConfig {
     pub locality: ClientLocality,
     /// Execution backend for the model (`--backend` knob).
     pub backend: BackendSelect,
+    /// API key for the back-end (`--require-auth` platforms).
+    pub api_key: Option<String>,
 }
 
 impl TrainingJobConfig {
@@ -66,6 +68,7 @@ impl TrainingJobConfig {
             control_timeout: Duration::from_secs(60),
             locality: ClientLocality::InCluster,
             backend: BackendSelect::Auto,
+            api_key: None,
         }
     }
 }
@@ -255,7 +258,7 @@ pub fn run_training_job(
     config: &TrainingJobConfig,
     cancel: &CancelToken,
 ) -> Result<TrainingOutcome> {
-    let backend = BackendClient::new(&config.backend_url);
+    let backend = BackendClient::new_with_key(&config.backend_url, config.api_key.as_deref());
     backend
         .set_result_status(config.result_id, "training")
         .ok(); // best-effort status update

@@ -8,7 +8,14 @@
 //! | `GET /results/:id`, `POST /results/:id/finish`, `GET/POST .../model` | III-E |
 //! | `POST /inferences`, `GET /inferences/:id` | III-E/F |
 //! | `POST /control`, `GET /control` | IV-E (control logger) |
+//! | `POST /keys`, `GET /keys`, `POST /keys/revoke`, `POST /keys/quota` | admin |
+//!
+//! When the store's [`AuthKeys`] table runs with `require_auth`, every
+//! route demands `authorization: Bearer <key>` (401 missing/unknown,
+//! 403 revoked) and non-admin keys see only their own tenant's
+//! entities — a cross-tenant id answers the same 404 as a missing one.
 
+use super::auth::{AuthOutcome, Identity};
 use super::store::{ControlLogEntry, Store, TrainingMetrics, TrainingStatus};
 use crate::json::Json;
 use crate::rest::{Method, Request, Response, Router, Status};
@@ -24,6 +31,39 @@ fn created(j: Json) -> Response {
 
 fn bad(e: impl std::fmt::Display) -> Response {
     Response::error(Status::BadRequest, &format!("{e}"))
+}
+
+fn quota_exceeded() -> Response {
+    Response::error(Status::TooManyRequests, "tenant quota exceeded")
+}
+
+/// Registry scope for this request: `None` (unscoped) for admin keys
+/// and for servers running without auth; the key's tenant otherwise.
+/// Reads the annotations the auth guard left in `req.params`.
+fn scope_of(req: &Request) -> Option<&str> {
+    if req.params.get("auth.admin").map(String::as_str) == Some("true") {
+        return None;
+    }
+    req.params.get("auth.tenant").map(String::as_str)
+}
+
+/// The authenticated identity, when there is one (auth enabled and the
+/// guard accepted a key). Quota charges need the full identity; scoped
+/// reads only need [`scope_of`].
+fn identity_of(req: &Request) -> Option<Identity> {
+    Some(Identity {
+        token: req.params.get("auth.token")?.clone(),
+        tenant: req.params.get("auth.tenant")?.clone(),
+        admin: req.params.get("auth.admin").map(String::as_str) == Some("true"),
+    })
+}
+
+/// Gate for key-management routes: only unscoped (admin) callers pass.
+fn require_admin(req: &Request) -> Option<Response> {
+    if scope_of(req).is_some() {
+        return Some(Response::error(Status::Forbidden, "admin key required"));
+    }
+    None
 }
 
 fn parse_body(req: &Request) -> Result<Json, Response> {
@@ -105,7 +145,47 @@ pub fn control_from_json(j: &Json) -> anyhow::Result<ControlLogEntry> {
 /// Build the back-end router over a shared store.
 pub fn router(store: Arc<Store>) -> Router {
     let s = store;
+    let auth = s.auth().clone();
     Router::new()
+        // ---- auth guard ---------------------------------------------------
+        // Runs before route matching: with auth enforced, a missing or
+        // unknown key is 401 and a revoked key 403 on EVERY path, known
+        // or not. Accepted keys annotate the request with their
+        // identity for the scoped handlers below.
+        .guard(move |req| {
+            if !auth.require_auth() {
+                return None;
+            }
+            let token = match req
+                .header("authorization")
+                .and_then(|h| h.strip_prefix("Bearer "))
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+            {
+                Some(t) => t.to_string(),
+                None => {
+                    return Some(Response::error(
+                        Status::Unauthorized,
+                        "missing bearer token",
+                    ))
+                }
+            };
+            match auth.authenticate(&token) {
+                AuthOutcome::Accepted(id) => {
+                    req.params.insert("auth.token".into(), id.token);
+                    req.params.insert("auth.tenant".into(), id.tenant);
+                    req.params
+                        .insert("auth.admin".into(), id.admin.to_string());
+                    None
+                }
+                AuthOutcome::Revoked => {
+                    Some(Response::error(Status::Forbidden, "key revoked"))
+                }
+                AuthOutcome::Unknown => {
+                    Some(Response::error(Status::Unauthorized, "unknown key"))
+                }
+            }
+        })
         // ---- models (§III-A) --------------------------------------------
         .route(Method::Post, "/models", {
             let s = s.clone();
@@ -114,13 +194,20 @@ pub fn router(store: Arc<Store>) -> Router {
                     Ok(b) => b,
                     Err(r) => return r,
                 };
+                // A tenant at its storage ceiling can't mint more
+                // storage-bearing resources.
+                if let Some(ident) = identity_of(&req) {
+                    if s.auth().storage_exhausted(&ident) {
+                        return quota_exceeded();
+                    }
+                }
                 let name = body.get("name").as_str().unwrap_or("model");
                 let dir = match body.req_str("artifact_dir") {
                     Ok(d) => d,
                     Err(e) => return bad(e),
                 };
                 let desc = body.get("description").as_str().unwrap_or("");
-                match s.create_model(name, dir, desc) {
+                match s.create_model_scoped(scope_of(&req), name, dir, desc) {
                     Ok(id) => created(Json::obj(vec![("id", Json::from(id))])),
                     Err(e) => bad(e),
                 }
@@ -128,9 +215,9 @@ pub fn router(store: Arc<Store>) -> Router {
         })
         .route(Method::Get, "/models", {
             let s = s.clone();
-            move |_| {
+            move |req| {
                 ok(Json::arr(
-                    s.models()
+                    s.models_scoped(scope_of(&req))
                         .iter()
                         .map(|m| {
                             Json::obj(vec![
@@ -150,7 +237,7 @@ pub fn router(store: Arc<Store>) -> Router {
                     Ok(id) => id,
                     Err(r) => return r,
                 };
-                match s.model(id) {
+                match s.model_scoped(scope_of(&req), id) {
                     Ok(m) => ok(Json::obj(vec![
                         ("id", Json::from(m.id)),
                         ("name", Json::str(&m.name)),
@@ -177,7 +264,7 @@ pub fn router(store: Arc<Store>) -> Router {
                     .iter()
                     .filter_map(|v| v.as_u64())
                     .collect();
-                match s.create_configuration(name, &ids) {
+                match s.create_configuration_scoped(scope_of(&req), name, &ids) {
                     Ok(id) => created(Json::obj(vec![("id", Json::from(id))])),
                     Err(e) => bad(e),
                 }
@@ -190,7 +277,7 @@ pub fn router(store: Arc<Store>) -> Router {
                     Ok(id) => id,
                     Err(r) => return r,
                 };
-                match s.configuration(id) {
+                match s.configuration_scoped(scope_of(&req), id) {
                     Ok(c) => ok(Json::obj(vec![
                         ("id", Json::from(c.id)),
                         ("name", Json::str(&c.name)),
@@ -218,7 +305,7 @@ pub fn router(store: Arc<Store>) -> Router {
                 let batch = body.get("batch_size").as_usize().unwrap_or(10);
                 let epochs = body.get("epochs").as_usize().unwrap_or(1);
                 let shuffle = body.get("shuffle").as_bool().unwrap_or(true);
-                match s.create_deployment(conf, batch, epochs, shuffle) {
+                match s.create_deployment_scoped(scope_of(&req), conf, batch, epochs, shuffle) {
                     Ok(d) => created(Json::obj(vec![
                         ("id", Json::from(d.id)),
                         (
@@ -237,7 +324,7 @@ pub fn router(store: Arc<Store>) -> Router {
                     Ok(id) => id,
                     Err(r) => return r,
                 };
-                match s.deployment(id) {
+                match s.deployment_scoped(scope_of(&req), id) {
                     Ok(d) => ok(Json::obj(vec![
                         ("id", Json::from(d.id)),
                         ("configuration_id", Json::from(d.configuration_id)),
@@ -261,7 +348,7 @@ pub fn router(store: Arc<Store>) -> Router {
                     Ok(id) => id,
                     Err(r) => return r,
                 };
-                match s.result(id) {
+                match s.result_scoped(scope_of(&req), id) {
                     Ok(r) => ok(Json::obj(vec![
                         ("id", Json::from(r.id)),
                         ("deployment_id", Json::from(r.deployment_id)),
@@ -291,7 +378,7 @@ pub fn router(store: Arc<Store>) -> Router {
                     Ok(st) => st,
                     Err(e) => return bad(e),
                 };
-                match s.set_result_status(id, status) {
+                match s.set_result_status_scoped(scope_of(&req), id, status) {
                     Ok(()) => ok(Json::Bool(true)),
                     Err(e) => Response::error(Status::NotFound, &format!("{e}")),
                 }
@@ -312,7 +399,15 @@ pub fn router(store: Arc<Store>) -> Router {
                     .and_then(|h| crate::json::parse(h).ok())
                     .map(|j| metrics_from_json(&j))
                     .unwrap_or_default();
-                match s.finish_result(id, metrics, req.body) {
+                // The blob counts against the tenant's stored-bytes
+                // quota; charge before accepting it.
+                if let Some(ident) = identity_of(&req) {
+                    if s.auth().charge_stored(&ident, req.body.len() as u64).is_err() {
+                        return quota_exceeded();
+                    }
+                }
+                let scope = scope_of(&req).map(str::to_string);
+                match s.finish_result_scoped(scope.as_deref(), id, metrics, req.body) {
                     Ok(()) => ok(Json::Bool(true)),
                     Err(e) => bad(e),
                 }
@@ -325,7 +420,7 @@ pub fn router(store: Arc<Store>) -> Router {
                     Ok(id) => id,
                     Err(r) => return r,
                 };
-                match s.download_model_blob(id) {
+                match s.download_model_blob_scoped(scope_of(&req), id) {
                     Ok(blob) => Response::binary(Status::Ok, blob),
                     Err(e) => Response::error(Status::NotFound, &format!("{e}")),
                 }
@@ -349,7 +444,7 @@ pub fn router(store: Arc<Store>) -> Router {
                 let fmt = body.get("input_format").as_str().map(|f| {
                     (f.to_string(), body.get("input_config").clone())
                 });
-                match s.create_inference(result_id, replicas, input, output, fmt) {
+                match s.create_inference_scoped(scope_of(&req), result_id, replicas, input, output, fmt) {
                     Ok(d) => created(Json::obj(vec![("id", Json::from(d.id))])),
                     Err(e) => bad(e),
                 }
@@ -362,7 +457,7 @@ pub fn router(store: Arc<Store>) -> Router {
                     Ok(id) => id,
                     Err(r) => return r,
                 };
-                match s.inference(id) {
+                match s.inference_scoped(scope_of(&req), id) {
                     Ok(d) => ok(Json::obj(vec![
                         ("id", Json::from(d.id)),
                         ("result_id", Json::from(d.result_id)),
@@ -386,6 +481,20 @@ pub fn router(store: Arc<Store>) -> Router {
                 };
                 match control_from_json(&body) {
                     Ok(e) => {
+                        // A tenant can only log control entries for
+                        // deployments it can see. Unscoped callers
+                        // (auth off, or an admin key — the control
+                        // logger pod) keep the historical behavior of
+                        // logging entries for any deployment id, even
+                        // one not registered here.
+                        if let Some(scope) = scope_of(&req) {
+                            if s.deployment_scoped(Some(scope), e.deployment_id).is_err() {
+                                return Response::error(
+                                    Status::NotFound,
+                                    &format!("unknown deployment {}", e.deployment_id),
+                                );
+                            }
+                        }
                         s.log_control(e);
                         created(Json::Bool(true))
                     }
@@ -395,7 +504,110 @@ pub fn router(store: Arc<Store>) -> Router {
         })
         .route(Method::Get, "/control", {
             let s = s.clone();
-            move |_| ok(Json::arr(s.control_log().iter().map(control_to_json).collect()))
+            move |req| {
+                ok(Json::arr(
+                    s.control_log_scoped(scope_of(&req))
+                        .iter()
+                        .map(control_to_json)
+                        .collect(),
+                ))
+            }
+        })
+        // ---- key management (admin only) ---------------------------------
+        .route(Method::Post, "/keys", {
+            let s = s.clone();
+            move |req| {
+                if let Some(resp) = require_admin(&req) {
+                    return resp;
+                }
+                let body = match parse_body(&req) {
+                    Ok(b) => b,
+                    Err(r) => return r,
+                };
+                let tenant = match body.req_str("tenant") {
+                    Ok(t) => t,
+                    Err(e) => return bad(e),
+                };
+                let admin = body.get("admin").as_bool().unwrap_or(false);
+                match s.auth().create_key(tenant, admin) {
+                    Ok(token) => created(Json::obj(vec![
+                        ("token", Json::str(&token)),
+                        ("tenant", Json::str(tenant)),
+                        ("admin", Json::from(admin)),
+                    ])),
+                    Err(e) => bad(e),
+                }
+            }
+        })
+        .route(Method::Get, "/keys", {
+            let s = s.clone();
+            move |req| {
+                if let Some(resp) = require_admin(&req) {
+                    return resp;
+                }
+                ok(Json::arr(
+                    s.auth()
+                        .list()
+                        .iter()
+                        .map(|k| {
+                            Json::obj(vec![
+                                ("token", Json::str(&k.token)),
+                                ("tenant", Json::str(&k.tenant)),
+                                ("admin", Json::from(k.admin)),
+                                ("revoked", Json::from(k.revoked)),
+                                ("requests", Json::from(k.usage.requests)),
+                                ("records_produced", Json::from(k.usage.records_produced)),
+                                ("bytes_stored", Json::from(k.usage.bytes_stored)),
+                            ])
+                        })
+                        .collect(),
+                ))
+            }
+        })
+        .route(Method::Post, "/keys/revoke", {
+            let s = s.clone();
+            move |req| {
+                if let Some(resp) = require_admin(&req) {
+                    return resp;
+                }
+                let body = match parse_body(&req) {
+                    Ok(b) => b,
+                    Err(r) => return r,
+                };
+                let token = match body.req_str("token") {
+                    Ok(t) => t,
+                    Err(e) => return bad(e),
+                };
+                if s.auth().revoke(token) {
+                    ok(Json::Bool(true))
+                } else {
+                    Response::error(Status::NotFound, "no such key")
+                }
+            }
+        })
+        .route(Method::Post, "/keys/quota", {
+            let s = s.clone();
+            move |req| {
+                if let Some(resp) = require_admin(&req) {
+                    return resp;
+                }
+                let body = match parse_body(&req) {
+                    Ok(b) => b,
+                    Err(r) => return r,
+                };
+                let tenant = match body.req_str("tenant") {
+                    Ok(t) => t,
+                    Err(e) => return bad(e),
+                };
+                s.auth().set_quota(
+                    tenant,
+                    super::auth::Quota {
+                        records_per_sec: body.get("records_per_sec").as_u64(),
+                        stored_bytes: body.get("stored_bytes").as_u64(),
+                    },
+                );
+                ok(Json::Bool(true))
+            }
         })
 }
 
@@ -532,5 +744,161 @@ mod tests {
             dispatch(&r, Method::Get, "/results/abc", None).status,
             Status::BadRequest
         );
+    }
+
+    // ---- auth + tenancy ---------------------------------------------------
+
+    fn dispatch_as(
+        r: &Router,
+        key: Option<&str>,
+        method: Method,
+        path: &str,
+        body: Option<&str>,
+    ) -> Response {
+        let mut req = Request::new(method, path);
+        if let Some(b) = body {
+            req = req.with_body(b.as_bytes().to_vec(), "application/json");
+        }
+        if let Some(k) = key {
+            req.headers
+                .insert("authorization".into(), format!("Bearer {k}"));
+        }
+        r.dispatch(req)
+    }
+
+    #[test]
+    fn with_auth_required_every_route_demands_a_key() {
+        let store = Arc::new(Store::new());
+        store.auth().set_require(true);
+        let good = store.auth().create_key("alice", false).unwrap();
+        let revoked = store.auth().create_key("alice", false).unwrap();
+        store.auth().revoke(&revoked);
+        let r = router(store);
+        // Known and unknown paths alike answer 401 with no key…
+        for path in ["/models", "/control", "/definitely/not/a/route"] {
+            assert_eq!(
+                dispatch_as(&r, None, Method::Get, path, None).status,
+                Status::Unauthorized,
+                "{path}"
+            );
+        }
+        // …401 with a wrong key, 403 with a revoked one.
+        assert_eq!(
+            dispatch_as(&r, Some("kml_bogus"), Method::Get, "/models", None).status,
+            Status::Unauthorized
+        );
+        assert_eq!(
+            dispatch_as(&r, Some(&revoked), Method::Get, "/models", None).status,
+            Status::Forbidden
+        );
+        assert_eq!(
+            dispatch_as(&r, Some(&good), Method::Get, "/models", None).status,
+            Status::Ok
+        );
+    }
+
+    #[test]
+    fn cross_tenant_reads_are_404_not_403() {
+        let store = Arc::new(Store::new());
+        store.auth().set_require(true);
+        let alice = store.auth().create_key("alice", false).unwrap();
+        let bob = store.auth().create_key("bob", false).unwrap();
+        let admin = store.auth().create_key("ops", true).unwrap();
+        let r = router(store);
+        let body = format!(r#"{{"name": "m", "artifact_dir": "{}"}}"#, artifact_dir());
+        let resp = dispatch_as(&r, Some(&alice), Method::Post, "/models", Some(&body));
+        assert_eq!(resp.status, Status::Created);
+        let mid = resp.body_json().unwrap().req_u64("id").unwrap();
+        // Alice and the admin see it; bob gets the same 404 a missing
+        // id would produce (no existence leak via 403).
+        let path = format!("/models/{mid}");
+        assert_eq!(dispatch_as(&r, Some(&alice), Method::Get, &path, None).status, Status::Ok);
+        assert_eq!(dispatch_as(&r, Some(&admin), Method::Get, &path, None).status, Status::Ok);
+        assert_eq!(dispatch_as(&r, Some(&bob), Method::Get, &path, None).status, Status::NotFound);
+        let listed = dispatch_as(&r, Some(&bob), Method::Get, "/models", None);
+        assert_eq!(listed.body_json().unwrap().as_arr().unwrap().len(), 0);
+        // Bob can't build a configuration on alice's model either.
+        let steal = format!(r#"{{"name": "c", "model_ids": [{mid}]}}"#);
+        assert_eq!(
+            dispatch_as(&r, Some(&bob), Method::Post, "/configurations", Some(&steal)).status,
+            Status::BadRequest
+        );
+    }
+
+    #[test]
+    fn key_management_is_admin_only() {
+        let store = Arc::new(Store::new());
+        store.auth().set_require(true);
+        let admin = store.auth().create_key("ops", true).unwrap();
+        let tenant = store.auth().create_key("alice", false).unwrap();
+        let r = router(store);
+        for (method, path, body) in [
+            (Method::Post, "/keys", Some(r#"{"tenant": "x"}"#)),
+            (Method::Get, "/keys", None),
+            (Method::Post, "/keys/revoke", Some(r#"{"token": "t"}"#)),
+            (Method::Post, "/keys/quota", Some(r#"{"tenant": "x"}"#)),
+        ] {
+            assert_eq!(
+                dispatch_as(&r, Some(&tenant), method, path, body).status,
+                Status::Forbidden,
+                "{path} must be admin-only"
+            );
+        }
+        // The admin mints a key over the API and the new key works.
+        let resp = dispatch_as(
+            &r,
+            Some(&admin),
+            Method::Post,
+            "/keys",
+            Some(r#"{"tenant": "carol"}"#),
+        );
+        assert_eq!(resp.status, Status::Created);
+        let token = resp.body_json().unwrap().req_str("token").unwrap().to_string();
+        assert_eq!(
+            dispatch_as(&r, Some(&token), Method::Get, "/models", None).status,
+            Status::Ok
+        );
+        // Revoking it over the API flips it to 403.
+        let resp = dispatch_as(
+            &r,
+            Some(&admin),
+            Method::Post,
+            "/keys/revoke",
+            Some(&format!(r#"{{"token": "{token}"}}"#)),
+        );
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(
+            dispatch_as(&r, Some(&token), Method::Get, "/models", None).status,
+            Status::Forbidden
+        );
+    }
+
+    #[test]
+    fn storage_quota_answers_429() {
+        let store = Arc::new(Store::new());
+        store.auth().set_require(true);
+        let admin = store.auth().create_key("ops", true).unwrap();
+        let alice = store.auth().create_key("alice", false).unwrap();
+        store.auth().set_quota(
+            "alice",
+            crate::registry::auth::Quota {
+                records_per_sec: None,
+                stored_bytes: Some(8),
+            },
+        );
+        let r = router(store);
+        // Upload path: a blob bigger than the ceiling answers 429
+        // before touching the store.
+        let body = format!(r#"{{"name": "m", "artifact_dir": "{}"}}"#, artifact_dir());
+        let resp = dispatch_as(&r, Some(&alice), Method::Post, "/models", Some(&body));
+        assert_eq!(resp.status, Status::Created);
+        let mut req = Request::new(Method::Post, "/results/999/model")
+            .with_body(vec![0u8; 64], "application/octet-stream");
+        req.headers
+            .insert("authorization".into(), format!("Bearer {alice}"));
+        assert_eq!(r.dispatch(req).status, Status::TooManyRequests);
+        // The admin (no quota on "ops") is unaffected.
+        let resp = dispatch_as(&r, Some(&admin), Method::Post, "/models", Some(&body));
+        assert_eq!(resp.status, Status::Created);
     }
 }

@@ -1,0 +1,645 @@
+//! API keys, tenants and quotas — the credential model shared by the
+//! REST control plane and the broker wire protocol.
+//!
+//! One [`AuthKeys`] table serves both planes: the REST router's auth
+//! guard resolves `authorization: Bearer` tokens against it, and the
+//! wire server resolves `Authenticate` frames against the same table,
+//! so a key minted once works everywhere.
+//!
+//! * **Keys** map a secret token to a tenant (+ an `admin` bit). Token
+//!   lookup is a constant-time sweep over the whole table — the compare
+//!   never early-exits on a prefix match, so response timing leaks
+//!   nothing about stored tokens.
+//! * **Usage** is metered per key: requests served, records produced,
+//!   bytes stored.
+//! * **Quotas** are enforced per tenant (several keys may share one):
+//!   a records/second rate (fixed one-second window) and a stored-bytes
+//!   ceiling, checked at produce time and at model/topic creation.
+//!
+//! The table persists through [`super::Store`]'s snapshot (`to_json` /
+//! `restore_from_json`) and through a standalone keys file
+//! (`serve --auth-keys`, managed by the `kafka-ml keys` subcommand) —
+//! both carry the same JSON schema.
+
+use crate::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// The tenant every request belongs to when authentication is off (the
+/// single-process `pipeline` topology and all pre-auth snapshots).
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Per-tenant resource limits. `None` = unlimited.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Quota {
+    /// Produce rate ceiling, enforced over a fixed one-second window.
+    pub records_per_sec: Option<u64>,
+    /// Ceiling on bytes durably stored for the tenant (broker records
+    /// plus uploaded model blobs).
+    pub stored_bytes: Option<u64>,
+}
+
+/// Per-key usage counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Usage {
+    pub requests: u64,
+    pub records_produced: u64,
+    pub bytes_stored: u64,
+}
+
+/// The resolved identity behind an accepted credential.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Identity {
+    pub token: String,
+    pub tenant: String,
+    /// Admin keys see every tenant's entities and manage keys.
+    pub admin: bool,
+}
+
+impl Identity {
+    /// The tenant scope for registry reads: admins are unscoped.
+    pub fn scope(&self) -> Option<&str> {
+        if self.admin {
+            None
+        } else {
+            Some(&self.tenant)
+        }
+    }
+}
+
+/// Outcome of presenting a token.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AuthOutcome {
+    Accepted(Identity),
+    /// Token matches no key — indistinguishable from a wrong key.
+    Unknown,
+    /// Token matches a key that has been revoked.
+    Revoked,
+}
+
+/// A key row as reported by [`AuthKeys::list`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KeyInfo {
+    pub token: String,
+    pub tenant: String,
+    pub admin: bool,
+    pub revoked: bool,
+    pub usage: Usage,
+}
+
+#[derive(Debug, Clone)]
+struct KeyState {
+    tenant: String,
+    admin: bool,
+    revoked: bool,
+    usage: Usage,
+}
+
+#[derive(Debug, Default)]
+struct TenantState {
+    quota: Quota,
+    /// Bytes currently charged against `quota.stored_bytes`.
+    stored_bytes: u64,
+    /// Fixed-window produce-rate accounting (not persisted).
+    window_start: Option<Instant>,
+    window_records: u64,
+}
+
+#[derive(Debug, Default)]
+struct AuthState {
+    /// token -> key. The BTreeMap key doubles as the secret; lookups
+    /// never use `get` — see [`AuthKeys::authenticate`].
+    keys: BTreeMap<String, KeyState>,
+    tenants: BTreeMap<String, TenantState>,
+}
+
+/// The shared key/tenant/quota table. Cheap to `Arc` across the REST
+/// router, the wire server and the registry store.
+#[derive(Debug, Default)]
+pub struct AuthKeys {
+    /// When false (the default), every request runs unauthenticated as
+    /// an unscoped admin — the single-process topology needs no keys.
+    require: AtomicBool,
+    state: Mutex<AuthState>,
+}
+
+/// Constant-time byte-string equality: compares every position of the
+/// longer input regardless of where the first mismatch sits, and folds
+/// the length difference into the verdict.
+pub fn constant_time_eq(a: &[u8], b: &[u8]) -> bool {
+    let n = a.len().max(b.len());
+    let mut diff = (a.len() ^ b.len()) as u8;
+    for i in 0..n {
+        let x = a.get(i).copied().unwrap_or(0);
+        let y = b.get(i).copied().unwrap_or(0);
+        diff |= x ^ y;
+    }
+    diff == 0
+}
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Mint a fresh token: 128 bits from a splitmix64 stream seeded by
+/// wall-clock nanos, pid and a process-wide counter. Not a CSPRNG — an
+/// operator who wants externally generated secrets puts them in the
+/// keys file directly; this covers the common "mint me a key" path
+/// with tokens that never repeat within a deployment.
+fn generate_token() -> String {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let mut seed = nanos
+        ^ (u64::from(std::process::id())).rotate_left(32)
+        ^ COUNTER
+            .fetch_add(1, Ordering::Relaxed)
+            .wrapping_mul(0xA24B_AED4_963E_E407);
+    let (a, b) = (splitmix64(&mut seed), splitmix64(&mut seed));
+    format!("kml_{a:016x}{b:016x}")
+}
+
+impl AuthKeys {
+    pub fn new() -> AuthKeys {
+        AuthKeys::default()
+    }
+
+    /// Is authentication enforced? When false every caller is an
+    /// unscoped admin.
+    pub fn require_auth(&self) -> bool {
+        self.require.load(Ordering::Acquire)
+    }
+
+    pub fn set_require(&self, require: bool) {
+        self.require.store(require, Ordering::Release);
+    }
+
+    /// Mint and register a fresh key for `tenant`.
+    pub fn create_key(&self, tenant: &str, admin: bool) -> Result<String> {
+        if tenant.is_empty() {
+            bail!("tenant name must not be empty");
+        }
+        let token = generate_token();
+        self.insert_key(&token, tenant, admin)?;
+        Ok(token)
+    }
+
+    /// Register an externally supplied token (keys-file load).
+    pub fn insert_key(&self, token: &str, tenant: &str, admin: bool) -> Result<()> {
+        if token.is_empty() || tenant.is_empty() {
+            bail!("token and tenant must not be empty");
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.keys.contains_key(token) {
+            bail!("key already exists");
+        }
+        st.keys.insert(
+            token.to_string(),
+            KeyState {
+                tenant: tenant.to_string(),
+                admin,
+                revoked: false,
+                usage: Usage::default(),
+            },
+        );
+        st.tenants.entry(tenant.to_string()).or_default();
+        Ok(())
+    }
+
+    /// Revoke a key. Returns false when no such key exists. The row is
+    /// kept (revoked) so its usage history — and the 403-vs-401
+    /// distinction — survive.
+    pub fn revoke(&self, token: &str) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match st.keys.get_mut(token) {
+            Some(k) => {
+                k.revoked = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn list(&self) -> Vec<KeyInfo> {
+        let st = self.state.lock().unwrap();
+        st.keys
+            .iter()
+            .map(|(token, k)| KeyInfo {
+                token: token.clone(),
+                tenant: k.tenant.clone(),
+                admin: k.admin,
+                revoked: k.revoked,
+                usage: k.usage,
+            })
+            .collect()
+    }
+
+    /// Resolve a presented token. Sweeps the whole table with a
+    /// constant-time compare per entry (no early exit on a match), so
+    /// timing reveals only the table size, and meters the matched key's
+    /// request counter.
+    pub fn authenticate(&self, token: &str) -> AuthOutcome {
+        let mut st = self.state.lock().unwrap();
+        let mut matched: Option<String> = None;
+        for stored in st.keys.keys() {
+            if constant_time_eq(stored.as_bytes(), token.as_bytes()) && matched.is_none() {
+                matched = Some(stored.clone());
+            }
+        }
+        let Some(stored) = matched else {
+            return AuthOutcome::Unknown;
+        };
+        let k = st.keys.get_mut(&stored).expect("matched key exists");
+        if k.revoked {
+            return AuthOutcome::Revoked;
+        }
+        k.usage.requests += 1;
+        AuthOutcome::Accepted(Identity {
+            token: stored,
+            tenant: k.tenant.clone(),
+            admin: k.admin,
+        })
+    }
+
+    /// Set (or clear fields of) a tenant's quota.
+    pub fn set_quota(&self, tenant: &str, quota: Quota) {
+        let mut st = self.state.lock().unwrap();
+        st.tenants.entry(tenant.to_string()).or_default().quota = quota;
+    }
+
+    pub fn quota(&self, tenant: &str) -> Quota {
+        let st = self.state.lock().unwrap();
+        st.tenants.get(tenant).map(|t| t.quota.clone()).unwrap_or_default()
+    }
+
+    /// Charge a produce of `records` records / `bytes` bytes against
+    /// `identity`'s tenant. `Err("quota")` when either the rate window
+    /// or the stored-bytes ceiling would be breached — nothing is
+    /// charged or metered on rejection.
+    pub fn charge_produce(
+        &self,
+        identity: &Identity,
+        records: u64,
+        bytes: u64,
+    ) -> std::result::Result<(), &'static str> {
+        let mut st = self.state.lock().unwrap();
+        let tenant = st.tenants.entry(identity.tenant.clone()).or_default();
+        let now = Instant::now();
+        let fresh_window = match tenant.window_start {
+            Some(t0) => now.duration_since(t0).as_secs() >= 1,
+            None => true,
+        };
+        if fresh_window {
+            tenant.window_start = Some(now);
+            tenant.window_records = 0;
+        }
+        if let Some(limit) = tenant.quota.records_per_sec {
+            if tenant.window_records.saturating_add(records) > limit {
+                return Err("quota");
+            }
+        }
+        if let Some(limit) = tenant.quota.stored_bytes {
+            if tenant.stored_bytes.saturating_add(bytes) > limit {
+                return Err("quota");
+            }
+        }
+        tenant.window_records += records;
+        tenant.stored_bytes += bytes;
+        if let Some(k) = st.keys.get_mut(&identity.token) {
+            k.usage.records_produced += records;
+            k.usage.bytes_stored += bytes;
+        }
+        Ok(())
+    }
+
+    /// Charge `bytes` of durable storage (model blob upload) against
+    /// `identity`'s tenant. Same rejection contract as
+    /// [`AuthKeys::charge_produce`].
+    pub fn charge_stored(
+        &self,
+        identity: &Identity,
+        bytes: u64,
+    ) -> std::result::Result<(), &'static str> {
+        let mut st = self.state.lock().unwrap();
+        let tenant = st.tenants.entry(identity.tenant.clone()).or_default();
+        if let Some(limit) = tenant.quota.stored_bytes {
+            if tenant.stored_bytes.saturating_add(bytes) > limit {
+                return Err("quota");
+            }
+        }
+        tenant.stored_bytes += bytes;
+        if let Some(k) = st.keys.get_mut(&identity.token) {
+            k.usage.bytes_stored += bytes;
+        }
+        Ok(())
+    }
+
+    /// Is the tenant already at (or past) its stored-bytes ceiling?
+    /// Creation of new storage-bearing resources (topics, models) is
+    /// refused once the ceiling is reached.
+    pub fn storage_exhausted(&self, identity: &Identity) -> bool {
+        let st = self.state.lock().unwrap();
+        match st.tenants.get(&identity.tenant) {
+            Some(t) => match t.quota.stored_bytes {
+                Some(limit) => t.stored_bytes >= limit,
+                None => false,
+            },
+            None => false,
+        }
+    }
+
+    // ---- persistence -------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let st = self.state.lock().unwrap();
+        let keys = st
+            .keys
+            .iter()
+            .map(|(token, k)| {
+                Json::obj(vec![
+                    ("token", Json::str(token)),
+                    ("tenant", Json::str(&k.tenant)),
+                    ("admin", Json::Bool(k.admin)),
+                    ("revoked", Json::Bool(k.revoked)),
+                    (
+                        "usage",
+                        Json::obj(vec![
+                            ("requests", Json::from(k.usage.requests)),
+                            ("records_produced", Json::from(k.usage.records_produced)),
+                            ("bytes_stored", Json::from(k.usage.bytes_stored)),
+                        ]),
+                    ),
+                ])
+            })
+            .collect();
+        let tenants = st
+            .tenants
+            .iter()
+            .map(|(name, t)| {
+                let mut fields = vec![
+                    ("name", Json::str(name)),
+                    ("stored_bytes", Json::from(t.stored_bytes)),
+                ];
+                if let Some(rps) = t.quota.records_per_sec {
+                    fields.push(("records_per_sec", Json::from(rps)));
+                }
+                if let Some(sb) = t.quota.stored_bytes {
+                    fields.push(("quota_stored_bytes", Json::from(sb)));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("require", Json::Bool(self.require_auth())),
+            ("keys", Json::arr(keys)),
+            ("tenants", Json::arr(tenants)),
+        ])
+    }
+
+    /// Replace the whole table from a snapshot produced by
+    /// [`AuthKeys::to_json`]. Rate windows restart empty.
+    pub fn restore_from_json(&self, j: &Json) -> Result<()> {
+        let mut next = AuthState::default();
+        for k in j.get("keys").as_arr().unwrap_or(&[]) {
+            let token = k.req_str("token")?.to_string();
+            let usage = k.get("usage");
+            next.keys.insert(
+                token,
+                KeyState {
+                    tenant: k.req_str("tenant")?.to_string(),
+                    admin: k.get("admin").as_bool().unwrap_or(false),
+                    revoked: k.get("revoked").as_bool().unwrap_or(false),
+                    usage: Usage {
+                        requests: usage.get("requests").as_u64().unwrap_or(0),
+                        records_produced: usage.get("records_produced").as_u64().unwrap_or(0),
+                        bytes_stored: usage.get("bytes_stored").as_u64().unwrap_or(0),
+                    },
+                },
+            );
+        }
+        for t in j.get("tenants").as_arr().unwrap_or(&[]) {
+            let name = t.req_str("name")?.to_string();
+            next.tenants.insert(
+                name,
+                TenantState {
+                    quota: Quota {
+                        records_per_sec: t.get("records_per_sec").as_u64(),
+                        stored_bytes: t.get("quota_stored_bytes").as_u64(),
+                    },
+                    stored_bytes: t.get("stored_bytes").as_u64().unwrap_or(0),
+                    window_start: None,
+                    window_records: 0,
+                },
+            );
+        }
+        // Every key's tenant must have a row even if the snapshot
+        // omitted it.
+        let tenants_of_keys: Vec<String> = next.keys.values().map(|k| k.tenant.clone()).collect();
+        for t in tenants_of_keys {
+            next.tenants.entry(t).or_default();
+        }
+        if let Some(require) = j.get("require").as_bool() {
+            self.set_require(require);
+        }
+        *self.state.lock().unwrap() = next;
+        Ok(())
+    }
+
+    /// Load a keys file written by [`AuthKeys::save_file`] (or by hand:
+    /// the same JSON schema as the store snapshot's `auth` section).
+    pub fn load_file(&self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading keys file {path}: {e}"))?;
+        let j = crate::json::parse(&text).map_err(|e| anyhow!("parsing keys file {path}: {e}"))?;
+        self.restore_from_json(&j)
+    }
+
+    pub fn save_file(&self, path: &str) -> Result<()> {
+        let text = crate::json::to_string_pretty(&self.to_json());
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, text).map_err(|e| anyhow!("writing keys file {tmp}: {e}"))?;
+        std::fs::rename(&tmp, path).map_err(|e| anyhow!("renaming keys file into {path}: {e}"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn identity(auth: &AuthKeys, token: &str) -> Identity {
+        match auth.authenticate(token) {
+            AuthOutcome::Accepted(id) => id,
+            other => panic!("expected acceptance, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn constant_time_eq_semantics() {
+        assert!(constant_time_eq(b"abc", b"abc"));
+        assert!(!constant_time_eq(b"abc", b"abd"));
+        assert!(!constant_time_eq(b"abc", b"ab"));
+        assert!(!constant_time_eq(b"", b"x"));
+        assert!(constant_time_eq(b"", b""));
+    }
+
+    #[test]
+    fn create_authenticate_revoke_cycle() {
+        let auth = AuthKeys::new();
+        let token = auth.create_key("acme", false).unwrap();
+        assert!(token.starts_with("kml_"));
+        let id = identity(&auth, &token);
+        assert_eq!(id.tenant, "acme");
+        assert!(!id.admin);
+        assert_eq!(id.scope(), Some("acme"));
+        assert_eq!(auth.authenticate("kml_bogus"), AuthOutcome::Unknown);
+        assert!(auth.revoke(&token));
+        assert_eq!(auth.authenticate(&token), AuthOutcome::Revoked);
+        assert!(!auth.revoke("kml_bogus"));
+        // The revoked row survives in the listing.
+        let rows = auth.list();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].revoked);
+    }
+
+    #[test]
+    fn admin_scope_is_unscoped() {
+        let auth = AuthKeys::new();
+        let token = auth.create_key("platform", true).unwrap();
+        assert_eq!(identity(&auth, &token).scope(), None);
+    }
+
+    #[test]
+    fn tokens_are_unique() {
+        let auth = AuthKeys::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..100 {
+            assert!(seen.insert(auth.create_key("t", false).unwrap()));
+        }
+    }
+
+    #[test]
+    fn request_metering_counts_authentications() {
+        let auth = AuthKeys::new();
+        let token = auth.create_key("acme", false).unwrap();
+        for _ in 0..3 {
+            identity(&auth, &token);
+        }
+        assert_eq!(auth.list()[0].usage.requests, 3);
+    }
+
+    #[test]
+    fn produce_rate_quota_enforced_per_window() {
+        let auth = AuthKeys::new();
+        let token = auth.create_key("acme", false).unwrap();
+        auth.set_quota("acme", Quota { records_per_sec: Some(10), stored_bytes: None });
+        let id = identity(&auth, &token);
+        assert!(auth.charge_produce(&id, 8, 100).is_ok());
+        assert!(auth.charge_produce(&id, 2, 100).is_ok());
+        // Window exhausted: the 11th record in the same second rejects.
+        assert_eq!(auth.charge_produce(&id, 1, 1), Err("quota"));
+        // Rejection charges nothing: usage reflects the accepted 10.
+        assert_eq!(auth.list()[0].usage.records_produced, 10);
+        assert_eq!(auth.list()[0].usage.bytes_stored, 200);
+    }
+
+    #[test]
+    fn stored_bytes_quota_enforced() {
+        let auth = AuthKeys::new();
+        let token = auth.create_key("acme", false).unwrap();
+        auth.set_quota("acme", Quota { records_per_sec: None, stored_bytes: Some(1000) });
+        let id = identity(&auth, &token);
+        assert!(!auth.storage_exhausted(&id));
+        assert!(auth.charge_stored(&id, 900).is_ok());
+        assert_eq!(auth.charge_stored(&id, 200), Err("quota"));
+        assert!(auth.charge_stored(&id, 100).is_ok());
+        assert!(auth.storage_exhausted(&id));
+        assert_eq!(auth.charge_produce(&id, 1, 1), Err("quota"));
+    }
+
+    #[test]
+    fn other_tenant_unaffected_by_quota_breach() {
+        let auth = AuthKeys::new();
+        let capped = auth.create_key("capped", false).unwrap();
+        let free = auth.create_key("free", false).unwrap();
+        auth.set_quota("capped", Quota { records_per_sec: Some(1), stored_bytes: None });
+        let capped_id = identity(&auth, &capped);
+        let free_id = identity(&auth, &free);
+        assert!(auth.charge_produce(&capped_id, 1, 10).is_ok());
+        assert_eq!(auth.charge_produce(&capped_id, 1, 10), Err("quota"));
+        for _ in 0..100 {
+            assert!(auth.charge_produce(&free_id, 1, 10).is_ok());
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_keys_quotas_usage() {
+        let auth = AuthKeys::new();
+        auth.set_require(true);
+        let a = auth.create_key("acme", false).unwrap();
+        let b = auth.create_key("platform", true).unwrap();
+        auth.set_quota("acme", Quota { records_per_sec: Some(5), stored_bytes: Some(4096) });
+        let id = identity(&auth, &a);
+        auth.charge_produce(&id, 3, 300).unwrap();
+        auth.revoke(&b);
+
+        let snap = auth.to_json();
+        let restored = AuthKeys::new();
+        restored.restore_from_json(&snap).unwrap();
+        assert!(restored.require_auth());
+        assert_eq!(restored.list(), auth.list());
+        assert_eq!(
+            restored.quota("acme"),
+            Quota { records_per_sec: Some(5), stored_bytes: Some(4096) }
+        );
+        assert_eq!(restored.authenticate(&b), AuthOutcome::Revoked);
+        // Stored-bytes accounting survives: 300 of 4096 used, so a
+        // 3900-byte upload must reject on the restored table too.
+        let rid = match restored.authenticate(&a) {
+            AuthOutcome::Accepted(id) => id,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(restored.charge_stored(&rid, 3900), Err("quota"));
+        assert!(restored.charge_stored(&rid, 3700).is_ok());
+    }
+
+    #[test]
+    fn duplicate_and_empty_keys_rejected() {
+        let auth = AuthKeys::new();
+        auth.insert_key("tok", "t", false).unwrap();
+        assert!(auth.insert_key("tok", "t2", false).is_err());
+        assert!(auth.insert_key("", "t", false).is_err());
+        assert!(auth.insert_key("x", "", false).is_err());
+        assert!(auth.create_key("", false).is_err());
+    }
+
+    #[test]
+    fn keys_file_roundtrip() {
+        let auth = AuthKeys::new();
+        auth.set_require(true);
+        auth.create_key("acme", false).unwrap();
+        auth.set_quota("acme", Quota { records_per_sec: Some(7), stored_bytes: None });
+        let path = std::env::temp_dir().join(format!(
+            "kafka-ml-keys-{}-{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = path.to_string_lossy().to_string();
+        auth.save_file(&path).unwrap();
+        let loaded = AuthKeys::new();
+        loaded.load_file(&path).unwrap();
+        assert_eq!(loaded.list(), auth.list());
+        assert_eq!(loaded.quota("acme").records_per_sec, Some(7));
+        assert!(loaded.require_auth());
+        let _ = std::fs::remove_file(&path);
+    }
+}

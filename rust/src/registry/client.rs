@@ -19,6 +19,16 @@ impl BackendClient {
         BackendClient { http: HttpClient::new(base_url) }
     }
 
+    /// A client that authenticates with an API key (`--require-auth`
+    /// back-ends). `None` builds the plain unauthenticated client.
+    pub fn new_with_key(base_url: &str, api_key: Option<&str>) -> BackendClient {
+        let mut http = HttpClient::new(base_url);
+        if let Some(k) = api_key {
+            http = http.with_token(k);
+        }
+        BackendClient { http }
+    }
+
     pub fn create_model(&self, name: &str, artifact_dir: &str) -> Result<u64> {
         let resp = self.http.post_json(
             "/models",

@@ -4,14 +4,18 @@
 //!
 //! * [`Store`] — the state + invariants (in-memory, JSON-persistable);
 //! * [`api`] — the REST surface (the paper's Django endpoints);
+//! * [`auth`] — API keys, tenants, quotas and usage metering shared by
+//!   the REST guard and the broker wire server;
 //! * [`BackendClient`] — typed HTTP client used by training Jobs and
 //!   inference replicas ("download the ML model from the back-end",
 //!   "submit the trained model and metrics").
 
 pub mod api;
+pub mod auth;
 mod client;
 mod store;
 
+pub use auth::{AuthKeys, AuthOutcome, Identity, KeyInfo, Quota, Usage, DEFAULT_TENANT};
 pub use client::BackendClient;
 pub use store::{
     Configuration, ControlLogEntry, Deployment, InferenceDeployment, MlModel, Store,

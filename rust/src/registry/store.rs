@@ -8,13 +8,20 @@
 //! data streams can be *reused* (§V) and inference input formats
 //! auto-configured.
 
+use super::auth::{AuthKeys, DEFAULT_TENANT};
 use crate::broker::notify::{wait_any, WaitSet};
 use crate::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Does a tenant scope admit an entity owned by `tenant`? `None` is the
+/// unscoped view (auth disabled, or an admin key).
+fn visible(scope: Option<&str>, tenant: &str) -> bool {
+    scope.is_none_or(|s| s == tenant)
+}
 
 /// An ML model definition. In the paper this is Keras source pasted into
 /// the Web UI; in the three-layer build it names an AOT artifact
@@ -23,6 +30,9 @@ use std::time::{Duration, Instant};
 #[derive(Debug, Clone, PartialEq)]
 pub struct MlModel {
     pub id: u64,
+    /// Owning tenant (multi-tenant control plane); entities created
+    /// through the unscoped in-process API belong to [`DEFAULT_TENANT`].
+    pub tenant: String,
     pub name: String,
     /// Artifact directory (the compiled model), e.g. "artifacts/".
     pub artifact_dir: String,
@@ -34,6 +44,7 @@ pub struct MlModel {
 #[derive(Debug, Clone, PartialEq)]
 pub struct Configuration {
     pub id: u64,
+    pub tenant: String,
     pub name: String,
     pub model_ids: Vec<u64>,
 }
@@ -42,6 +53,7 @@ pub struct Configuration {
 #[derive(Debug, Clone, PartialEq)]
 pub struct Deployment {
     pub id: u64,
+    pub tenant: String,
     pub configuration_id: u64,
     pub batch_size: usize,
     pub epochs: usize,
@@ -93,6 +105,8 @@ pub struct TrainingMetrics {
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainingResult {
     pub id: u64,
+    /// Inherited from the owning deployment.
+    pub tenant: String,
     pub deployment_id: u64,
     pub model_id: u64,
     pub status: TrainingStatus,
@@ -106,6 +120,7 @@ pub struct TrainingResult {
 #[derive(Debug, Clone, PartialEq)]
 pub struct InferenceDeployment {
     pub id: u64,
+    pub tenant: String,
     pub result_id: u64,
     pub replicas: u32,
     pub input_topic: String,
@@ -150,6 +165,10 @@ pub struct Store {
     /// park in [`Store::wait_control_logged`] instead of sleep-polling
     /// the asynchronous control logger.
     control_wait: WaitSet,
+    /// API keys / tenants / quotas — shared with the REST auth guard
+    /// and the broker wire server so one credential model covers both
+    /// planes. Persisted inside the store snapshot.
+    auth: Arc<AuthKeys>,
 }
 
 impl Store {
@@ -158,16 +177,38 @@ impl Store {
             state: Mutex::new(State::default()),
             next_id: AtomicU64::new(1),
             control_wait: WaitSet::new(),
+            auth: Arc::new(AuthKeys::new()),
         }
+    }
+
+    /// The key/tenant/quota table this store persists.
+    pub fn auth(&self) -> &Arc<AuthKeys> {
+        &self.auth
     }
 
     fn fresh_id(&self) -> u64 {
         self.next_id.fetch_add(1, Ordering::SeqCst)
     }
 
+    /// The tenant new entities belong to under `scope` (`None` = the
+    /// unscoped in-process/admin view).
+    fn owner(scope: Option<&str>) -> String {
+        scope.unwrap_or(DEFAULT_TENANT).to_string()
+    }
+
     // ---- models -----------------------------------------------------------
 
     pub fn create_model(&self, name: &str, artifact_dir: &str, description: &str) -> Result<u64> {
+        self.create_model_scoped(None, name, artifact_dir, description)
+    }
+
+    pub fn create_model_scoped(
+        &self,
+        scope: Option<&str>,
+        name: &str,
+        artifact_dir: &str,
+        description: &str,
+    ) -> Result<u64> {
         // "the source code will be checked as a valid TensorFlow model"
         // (§III-A) — our equivalent: the artifact dir must resolve to a
         // runnable model spec. A dir without meta.json is fine (the
@@ -180,6 +221,7 @@ impl Store {
             id,
             MlModel {
                 id,
+                tenant: Store::owner(scope),
                 name: name.to_string(),
                 artifact_dir: artifact_dir.to_string(),
                 description: description.to_string(),
@@ -189,28 +231,56 @@ impl Store {
     }
 
     pub fn model(&self, id: u64) -> Result<MlModel> {
+        self.model_scoped(None, id)
+    }
+
+    /// Scoped read: an entity outside `scope` answers the SAME "unknown"
+    /// error as a missing id, so existence never leaks across tenants.
+    pub fn model_scoped(&self, scope: Option<&str>, id: u64) -> Result<MlModel> {
         self.state
             .lock()
             .unwrap()
             .models
             .get(&id)
+            .filter(|m| visible(scope, &m.tenant))
             .cloned()
             .ok_or_else(|| anyhow!("unknown model {id}"))
     }
 
     pub fn models(&self) -> Vec<MlModel> {
-        self.state.lock().unwrap().models.values().cloned().collect()
+        self.models_scoped(None)
+    }
+
+    pub fn models_scoped(&self, scope: Option<&str>) -> Vec<MlModel> {
+        self.state
+            .lock()
+            .unwrap()
+            .models
+            .values()
+            .filter(|m| visible(scope, &m.tenant))
+            .cloned()
+            .collect()
     }
 
     // ---- configurations ------------------------------------------------------
 
     pub fn create_configuration(&self, name: &str, model_ids: &[u64]) -> Result<u64> {
+        self.create_configuration_scoped(None, name, model_ids)
+    }
+
+    pub fn create_configuration_scoped(
+        &self,
+        scope: Option<&str>,
+        name: &str,
+        model_ids: &[u64],
+    ) -> Result<u64> {
         if model_ids.is_empty() {
             bail!("a configuration needs at least one model");
         }
         let st = self.state.lock().unwrap();
         for mid in model_ids {
-            if !st.models.contains_key(mid) {
+            // Another tenant's model is as good as nonexistent.
+            if !st.models.get(mid).is_some_and(|m| visible(scope, &m.tenant)) {
                 bail!("configuration references unknown model {mid}");
             }
         }
@@ -218,17 +288,27 @@ impl Store {
         let id = self.fresh_id();
         self.state.lock().unwrap().configurations.insert(
             id,
-            Configuration { id, name: name.to_string(), model_ids: model_ids.to_vec() },
+            Configuration {
+                id,
+                tenant: Store::owner(scope),
+                name: name.to_string(),
+                model_ids: model_ids.to_vec(),
+            },
         );
         Ok(id)
     }
 
     pub fn configuration(&self, id: u64) -> Result<Configuration> {
+        self.configuration_scoped(None, id)
+    }
+
+    pub fn configuration_scoped(&self, scope: Option<&str>, id: u64) -> Result<Configuration> {
         self.state
             .lock()
             .unwrap()
             .configurations
             .get(&id)
+            .filter(|c| visible(scope, &c.tenant))
             .cloned()
             .ok_or_else(|| anyhow!("unknown configuration {id}"))
     }
@@ -244,10 +324,25 @@ impl Store {
         epochs: usize,
         shuffle: bool,
     ) -> Result<Deployment> {
-        let conf = self.configuration(configuration_id)?;
+        self.create_deployment_scoped(None, configuration_id, batch_size, epochs, shuffle)
+    }
+
+    pub fn create_deployment_scoped(
+        &self,
+        scope: Option<&str>,
+        configuration_id: u64,
+        batch_size: usize,
+        epochs: usize,
+        shuffle: bool,
+    ) -> Result<Deployment> {
+        let conf = self.configuration_scoped(scope, configuration_id)?;
         if batch_size == 0 || epochs == 0 {
             bail!("batch_size and epochs must be positive");
         }
+        // The deployment (and its results) inherit the CONFIGURATION's
+        // tenant, so an admin deploying a tenant's configuration keeps
+        // the rows inside that tenant.
+        let tenant = conf.tenant.clone();
         let id = self.fresh_id();
         let mut result_ids = Vec::new();
         {
@@ -258,6 +353,7 @@ impl Store {
                     rid,
                     TrainingResult {
                         id: rid,
+                        tenant: tenant.clone(),
                         deployment_id: id,
                         model_id: *mid,
                         status: TrainingStatus::Deployed,
@@ -271,6 +367,7 @@ impl Store {
                 id,
                 Deployment {
                     id,
+                    tenant,
                     configuration_id,
                     batch_size,
                     epochs,
@@ -283,36 +380,67 @@ impl Store {
     }
 
     pub fn deployment(&self, id: u64) -> Result<Deployment> {
+        self.deployment_scoped(None, id)
+    }
+
+    pub fn deployment_scoped(&self, scope: Option<&str>, id: u64) -> Result<Deployment> {
         self.state
             .lock()
             .unwrap()
             .deployments
             .get(&id)
+            .filter(|d| visible(scope, &d.tenant))
             .cloned()
             .ok_or_else(|| anyhow!("unknown deployment {id}"))
     }
 
     pub fn deployments(&self) -> Vec<Deployment> {
-        self.state.lock().unwrap().deployments.values().cloned().collect()
+        self.deployments_scoped(None)
+    }
+
+    pub fn deployments_scoped(&self, scope: Option<&str>) -> Vec<Deployment> {
+        self.state
+            .lock()
+            .unwrap()
+            .deployments
+            .values()
+            .filter(|d| visible(scope, &d.tenant))
+            .cloned()
+            .collect()
     }
 
     // ---- results ---------------------------------------------------------------
 
     pub fn result(&self, id: u64) -> Result<TrainingResult> {
+        self.result_scoped(None, id)
+    }
+
+    pub fn result_scoped(&self, scope: Option<&str>, id: u64) -> Result<TrainingResult> {
         self.state
             .lock()
             .unwrap()
             .results
             .get(&id)
+            .filter(|r| visible(scope, &r.tenant))
             .cloned()
             .ok_or_else(|| anyhow!("unknown result {id}"))
     }
 
     pub fn set_result_status(&self, id: u64, status: TrainingStatus) -> Result<()> {
+        self.set_result_status_scoped(None, id, status)
+    }
+
+    pub fn set_result_status_scoped(
+        &self,
+        scope: Option<&str>,
+        id: u64,
+        status: TrainingStatus,
+    ) -> Result<()> {
         let mut st = self.state.lock().unwrap();
         let r = st
             .results
             .get_mut(&id)
+            .filter(|r| visible(scope, &r.tenant))
             .ok_or_else(|| anyhow!("unknown result {id}"))?;
         r.status = status;
         Ok(())
@@ -325,6 +453,16 @@ impl Store {
         metrics: TrainingMetrics,
         model_blob: Vec<u8>,
     ) -> Result<()> {
+        self.finish_result_scoped(None, id, metrics, model_blob)
+    }
+
+    pub fn finish_result_scoped(
+        &self,
+        scope: Option<&str>,
+        id: u64,
+        metrics: TrainingMetrics,
+        model_blob: Vec<u8>,
+    ) -> Result<()> {
         // Validate the blob parses before accepting it.
         crate::runtime::ModelParams::from_bytes(&model_blob)
             .map_err(|e| anyhow!("result {id}: rejected model blob: {e}"))?;
@@ -332,6 +470,7 @@ impl Store {
         let r = st
             .results
             .get_mut(&id)
+            .filter(|r| visible(scope, &r.tenant))
             .ok_or_else(|| anyhow!("unknown result {id}"))?;
         r.metrics = metrics;
         r.model_blob = model_blob;
@@ -340,10 +479,19 @@ impl Store {
     }
 
     pub fn download_model_blob(&self, result_id: u64) -> Result<Vec<u8>> {
+        self.download_model_blob_scoped(None, result_id)
+    }
+
+    pub fn download_model_blob_scoped(
+        &self,
+        scope: Option<&str>,
+        result_id: u64,
+    ) -> Result<Vec<u8>> {
         let st = self.state.lock().unwrap();
         let r = st
             .results
             .get(&result_id)
+            .filter(|r| visible(scope, &r.tenant))
             .ok_or_else(|| anyhow!("unknown result {result_id}"))?;
         if r.status != TrainingStatus::Finished {
             bail!("result {result_id} is {}, not finished", r.status.as_str());
@@ -375,7 +523,19 @@ impl Store {
         output_topic: &str,
         format_override: Option<(String, Json)>,
     ) -> Result<InferenceDeployment> {
-        let result = self.result(result_id)?;
+        self.create_inference_scoped(None, result_id, replicas, input_topic, output_topic, format_override)
+    }
+
+    pub fn create_inference_scoped(
+        &self,
+        scope: Option<&str>,
+        result_id: u64,
+        replicas: u32,
+        input_topic: &str,
+        output_topic: &str,
+        format_override: Option<(String, Json)>,
+    ) -> Result<InferenceDeployment> {
+        let result = self.result_scoped(scope, result_id)?;
         if result.status != TrainingStatus::Finished {
             bail!("result {result_id} not finished (is {})", result.status.as_str());
         }
@@ -409,17 +569,25 @@ impl Store {
             output_topic: output_topic.to_string(),
             input_format,
             input_config,
+            // Inference deployments live wherever the result they serve
+            // lives, even when an admin key deployed them.
+            tenant: result.tenant.clone(),
         };
         self.state.lock().unwrap().inferences.insert(id, dep.clone());
         Ok(dep)
     }
 
     pub fn inference(&self, id: u64) -> Result<InferenceDeployment> {
+        self.inference_scoped(None, id)
+    }
+
+    pub fn inference_scoped(&self, scope: Option<&str>, id: u64) -> Result<InferenceDeployment> {
         self.state
             .lock()
             .unwrap()
             .inferences
             .get(&id)
+            .filter(|i| visible(scope, &i.tenant))
             .cloned()
             .ok_or_else(|| anyhow!("unknown inference deployment {id}"))
     }
@@ -453,7 +621,25 @@ impl Store {
     }
 
     pub fn control_log(&self) -> Vec<ControlLogEntry> {
-        self.state.lock().unwrap().control_log.clone()
+        self.control_log_scoped(None)
+    }
+
+    /// Control entries visible to `scope`: an entry belongs to the
+    /// tenant of the deployment it was logged for. Entries whose
+    /// deployment has vanished are admin-only.
+    pub fn control_log_scoped(&self, scope: Option<&str>) -> Vec<ControlLogEntry> {
+        let st = self.state.lock().unwrap();
+        st.control_log
+            .iter()
+            .filter(|e| match scope {
+                None => true,
+                Some(s) => st
+                    .deployments
+                    .get(&e.deployment_id)
+                    .is_some_and(|d| d.tenant == s),
+            })
+            .cloned()
+            .collect()
     }
 
     /// Latest control entry for a deployment (used for §V re-sends).
@@ -496,6 +682,7 @@ impl Store {
                                 ("name", Json::str(&m.name)),
                                 ("artifact_dir", Json::str(&m.artifact_dir)),
                                 ("description", Json::str(&m.description)),
+                                ("tenant", Json::str(&m.tenant)),
                             ])
                         })
                         .collect(),
@@ -510,6 +697,7 @@ impl Store {
                             Json::obj(vec![
                                 ("id", Json::from(c.id)),
                                 ("name", Json::str(&c.name)),
+                                ("tenant", Json::str(&c.tenant)),
                                 (
                                     "model_ids",
                                     Json::arr(
@@ -530,6 +718,7 @@ impl Store {
                             Json::obj(vec![
                                 ("id", Json::from(d.id)),
                                 ("configuration_id", Json::from(d.configuration_id)),
+                                ("tenant", Json::str(&d.tenant)),
                                 ("batch_size", Json::from(d.batch_size)),
                                 ("epochs", Json::from(d.epochs)),
                                 ("shuffle", Json::from(d.shuffle)),
@@ -554,6 +743,7 @@ impl Store {
                                 ("id", Json::from(r.id)),
                                 ("deployment_id", Json::from(r.deployment_id)),
                                 ("model_id", Json::from(r.model_id)),
+                                ("tenant", Json::str(&r.tenant)),
                                 ("status", Json::str(r.status.as_str())),
                                 (
                                     "metrics",
@@ -574,6 +764,7 @@ impl Store {
                             Json::obj(vec![
                                 ("id", Json::from(i.id)),
                                 ("result_id", Json::from(i.result_id)),
+                                ("tenant", Json::str(&i.tenant)),
                                 ("replicas", Json::from(i.replicas as u64)),
                                 ("input_topic", Json::str(&i.input_topic)),
                                 ("output_topic", Json::str(&i.output_topic)),
@@ -593,6 +784,7 @@ impl Store {
                         .collect(),
                 ),
             ),
+            ("auth", self.auth.to_json()),
         ])
     }
 
@@ -606,6 +798,11 @@ impl Store {
     /// Load a snapshot into this (live) store, replacing its contents —
     /// used by `kafka-ml serve --state` to recover after a restart.
     pub fn restore_from_json(&self, j: &Json) -> Result<()> {
+        // Snapshots from before multi-tenancy carry no tenant field;
+        // everything they held belongs to the default tenant.
+        let tenant_of = |v: &Json| -> String {
+            v.get("tenant").as_str().unwrap_or(DEFAULT_TENANT).to_string()
+        };
         let unhex = |s: &str| -> Result<Vec<u8>> {
             if s.len() % 2 != 0 {
                 bail!("odd hex length");
@@ -635,6 +832,7 @@ impl Store {
                         name: m.req_str("name")?.to_string(),
                         artifact_dir: m.req_str("artifact_dir")?.to_string(),
                         description: m.get("description").as_str().unwrap_or("").to_string(),
+                        tenant: tenant_of(m),
                     },
                 );
             }
@@ -645,6 +843,7 @@ impl Store {
                     Configuration {
                         id,
                         name: c.req_str("name")?.to_string(),
+                        tenant: tenant_of(c),
                         model_ids: c
                             .get("model_ids")
                             .as_arr()
@@ -662,6 +861,7 @@ impl Store {
                     Deployment {
                         id,
                         configuration_id: d.req_u64("configuration_id")?,
+                        tenant: tenant_of(d),
                         batch_size: d.get("batch_size").as_usize().unwrap_or(10),
                         epochs: d.get("epochs").as_usize().unwrap_or(1),
                         shuffle: d.get("shuffle").as_bool().unwrap_or(true),
@@ -683,6 +883,7 @@ impl Store {
                         id,
                         deployment_id: r.req_u64("deployment_id")?,
                         model_id: r.req_u64("model_id")?,
+                        tenant: tenant_of(r),
                         status: TrainingStatus::parse(r.req_str("status")?)?,
                         metrics: crate::registry::api::metrics_from_json(r.get("metrics")),
                         model_blob: unhex(r.get("model_blob_hex").as_str().unwrap_or(""))?,
@@ -696,6 +897,7 @@ impl Store {
                     InferenceDeployment {
                         id,
                         result_id: i.req_u64("result_id")?,
+                        tenant: tenant_of(i),
                         replicas: i.get("replicas").as_u64().unwrap_or(1) as u32,
                         input_topic: i.req_str("input_topic")?.to_string(),
                         output_topic: i.req_str("output_topic")?.to_string(),
@@ -708,6 +910,9 @@ impl Store {
                 st.control_log
                     .push(crate::registry::api::control_from_json(e)?);
             }
+        }
+        if !j.get("auth").is_null() {
+            self.auth.restore_from_json(j.get("auth"))?;
         }
         self.next_id
             .store(j.get("next_id").as_u64().unwrap_or(1), Ordering::SeqCst);
@@ -999,5 +1204,164 @@ mod tests {
         assert_eq!(s.last_control_for(7).unwrap().topic, "t2");
         assert!(s.last_control_for(8).is_none());
         assert_eq!(s.control_log().len(), 3);
+    }
+
+    // ---- multi-tenancy ----------------------------------------------------
+
+    /// A full pipeline owned by tenant `t`, returning (model, config,
+    /// deployment, finished result) ids.
+    fn tenant_pipeline(s: &Store, t: &str) -> (u64, u64, u64, u64) {
+        let scope = Some(t);
+        let mid = s
+            .create_model_scoped(scope, &format!("{t}-model"), &artifact_dir(), "")
+            .unwrap();
+        let cid = s.create_configuration_scoped(scope, "c", &[mid]).unwrap();
+        let dep = s.create_deployment_scoped(scope, cid, 10, 1, false).unwrap();
+        let rid = dep.result_ids[0];
+        s.finish_result_scoped(scope, rid, TrainingMetrics::default(), blob())
+            .unwrap();
+        (mid, cid, dep.id, rid)
+    }
+
+    #[test]
+    fn cross_tenant_rows_are_invisible_and_immutable() {
+        let s = Store::new();
+        let (mid, cid, did, rid) = tenant_pipeline(&s, "alice");
+        let bob = Some("bob");
+        // Reads: every lookup answers exactly like a missing id.
+        let missing = s.model_scoped(bob, 999_999).unwrap_err().to_string();
+        let hidden = s.model_scoped(bob, mid).unwrap_err().to_string();
+        assert_eq!(
+            missing.replace("999999", &mid.to_string()),
+            hidden,
+            "cross-tenant miss must be indistinguishable from a missing id"
+        );
+        assert!(s.configuration_scoped(bob, cid).is_err());
+        assert!(s.deployment_scoped(bob, did).is_err());
+        assert!(s.result_scoped(bob, rid).is_err());
+        assert!(s.download_model_blob_scoped(bob, rid).is_err());
+        assert!(s.models_scoped(bob).is_empty());
+        assert!(s.deployments_scoped(bob).is_empty());
+        // Writes: bob can neither mutate alice's result nor build on her
+        // model/result.
+        assert!(s
+            .set_result_status_scoped(bob, rid, TrainingStatus::Training)
+            .is_err());
+        assert!(s
+            .finish_result_scoped(bob, rid, TrainingMetrics::default(), blob())
+            .is_err());
+        assert!(s.create_configuration_scoped(bob, "steal", &[mid]).is_err());
+        assert!(s
+            .create_inference_scoped(bob, rid, 1, "in", "out", Some(("RAW".into(), Json::Null)))
+            .is_err());
+        // Alice herself (and an unscoped admin) still see everything.
+        assert!(s.model_scoped(Some("alice"), mid).is_ok());
+        assert!(s.model_scoped(None, mid).is_ok());
+        assert_eq!(s.models_scoped(Some("alice")).len(), 1);
+        assert_eq!(s.models_scoped(None).len(), 1);
+    }
+
+    #[test]
+    fn control_log_is_scoped_to_the_deployments_tenant() {
+        let s = Store::new();
+        let (_, _, did, _) = tenant_pipeline(&s, "alice");
+        s.log_control(ControlLogEntry {
+            deployment_id: did,
+            topic: "data".into(),
+            partition: 0,
+            offset: 0,
+            length: 1,
+            input_format: "RAW".into(),
+            input_config: Json::Null,
+            validation_rate: 0.0,
+            total_msg: 1,
+            logged_ms: 0,
+        });
+        assert_eq!(s.control_log_scoped(Some("alice")).len(), 1);
+        assert!(s.control_log_scoped(Some("bob")).is_empty());
+        assert_eq!(s.control_log_scoped(None).len(), 1);
+    }
+
+    #[test]
+    fn deployment_and_results_inherit_configuration_tenant() {
+        let s = Store::new();
+        let (mid, cid, did, rid) = tenant_pipeline(&s, "alice");
+        assert_eq!(s.model(mid).unwrap().tenant, "alice");
+        assert_eq!(s.configuration(cid).unwrap().tenant, "alice");
+        // An *admin* deploying alice's configuration keeps the rows in
+        // alice's tenant (they describe her workload, not the admin's).
+        let dep2 = s.create_deployment_scoped(None, cid, 10, 1, false).unwrap();
+        assert_eq!(dep2.tenant, "alice");
+        assert_eq!(s.result(dep2.result_ids[0]).unwrap().tenant, "alice");
+        assert_eq!(s.deployment(did).unwrap().tenant, "alice");
+        let inf = s
+            .create_inference_scoped(
+                Some("alice"),
+                rid,
+                1,
+                "in",
+                "out",
+                Some(("RAW".into(), Json::Null)),
+            )
+            .unwrap();
+        assert_eq!(inf.tenant, "alice");
+    }
+
+    #[test]
+    fn unscoped_calls_default_to_the_default_tenant() {
+        let (s, mid) = store_with_model();
+        assert_eq!(s.model(mid).unwrap().tenant, DEFAULT_TENANT);
+        // Scoped readers of the default tenant see it; others don't.
+        assert!(s.model_scoped(Some(DEFAULT_TENANT), mid).is_ok());
+        assert!(s.model_scoped(Some("bob"), mid).is_err());
+    }
+
+    #[test]
+    fn persistence_keeps_tenants_and_auth_keys() {
+        let s = Store::new();
+        let (mid, _, _, rid) = tenant_pipeline(&s, "alice");
+        let token = s.auth().create_key("alice", false).unwrap();
+        s.auth()
+            .set_quota("alice", crate::registry::auth::Quota {
+                records_per_sec: Some(100),
+                stored_bytes: Some(1 << 20),
+            });
+        s.auth().set_require(true);
+        let path = std::env::temp_dir().join(format!(
+            "kafka-ml-store-tenancy-{}.json",
+            std::process::id()
+        ));
+        s.save(&path).unwrap();
+        let back = Store::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.model(mid).unwrap().tenant, "alice");
+        assert_eq!(back.result(rid).unwrap().tenant, "alice");
+        assert!(back.auth().require_auth());
+        match back.auth().authenticate(&token) {
+            crate::registry::auth::AuthOutcome::Accepted(id) => {
+                assert_eq!(id.tenant, "alice");
+                assert!(!id.admin);
+            }
+            other => panic!("expected key to survive the snapshot, got {other:?}"),
+        }
+        assert_eq!(
+            back.auth().quota("alice").stored_bytes,
+            Some(1 << 20)
+        );
+    }
+
+    #[test]
+    fn pre_tenancy_snapshots_load_into_the_default_tenant() {
+        // A snapshot written before multi-tenancy existed has no
+        // "tenant" keys and no "auth" section.
+        let j = crate::json::parse(
+            r#"{"next_id": 5, "models": [
+                 {"id": 1, "name": "m", "artifact_dir": "/nonexistent",
+                  "description": ""}]}"#,
+        )
+        .unwrap();
+        let back = Store::from_json(&j).unwrap();
+        assert_eq!(back.model(1).unwrap().tenant, DEFAULT_TENANT);
+        assert!(!back.auth().require_auth());
     }
 }

@@ -11,6 +11,8 @@ use std::time::Duration;
 pub struct HttpClient {
     host: String,
     timeout: Duration,
+    /// Bearer token attached to every request when set.
+    token: Option<String>,
 }
 
 impl HttpClient {
@@ -20,11 +22,17 @@ impl HttpClient {
             .trim_start_matches("http://")
             .trim_end_matches('/')
             .to_string();
-        HttpClient { host, timeout: Duration::from_secs(30) }
+        HttpClient { host, timeout: Duration::from_secs(30), token: None }
     }
 
     pub fn with_timeout(mut self, t: Duration) -> HttpClient {
         self.timeout = t;
+        self
+    }
+
+    /// Authenticate every request with `authorization: Bearer <token>`.
+    pub fn with_token(mut self, token: impl Into<String>) -> HttpClient {
+        self.token = Some(token.into());
         self
     }
 
@@ -33,7 +41,12 @@ impl HttpClient {
         self.send(req)
     }
 
-    fn send(&self, req: Request) -> Result<Response> {
+    fn send(&self, mut req: Request) -> Result<Response> {
+        if let Some(tok) = &self.token {
+            req.headers
+                .entry("authorization".to_string())
+                .or_insert_with(|| format!("Bearer {tok}"));
+        }
         let mut stream = TcpStream::connect(&self.host)
             .with_context(|| format!("connecting to {}", self.host))?;
         stream.set_read_timeout(Some(self.timeout))?;

@@ -4,6 +4,82 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 
+/// Cap on a message body read from the wire, applied to BOTH directions:
+/// a `content-length` is attacker-controlled input and is allocated
+/// up-front, so servers (malicious client) and clients (malicious or
+/// corrupt server — training jobs download model blobs) share one limit.
+pub const MAX_BODY_BYTES: usize = 256 * 1024 * 1024;
+
+/// Cap on one request/status/header line. Anything legitimate fits in a
+/// fraction of this; a peer dripping bytes with no newline hits the cap
+/// instead of growing the line buffer forever.
+const MAX_HEADER_LINE_BYTES: usize = 8 * 1024;
+
+/// Cap on the whole header section (request line + all header lines) so
+/// an endless stream of small, valid-looking headers is bounded too.
+const MAX_HEADER_SECTION_BYTES: usize = 64 * 1024;
+
+/// Read one `\n`-terminated line of at most `max` bytes into `line`
+/// (cleared first); returns the byte count. A line that exceeds the cap
+/// is an error, not a truncation — HTTP has no way to resynchronise.
+fn read_bounded_line(reader: &mut impl BufRead, line: &mut String, max: usize) -> Result<usize> {
+    line.clear();
+    let n = reader.by_ref().take(max as u64 + 1).read_line(line)?;
+    if n > max {
+        bail!("header line too long (over {max} bytes)");
+    }
+    Ok(n)
+}
+
+/// Headers the serializers always emit themselves; a caller-inserted
+/// copy is skipped in the header loop so it cannot go out twice.
+fn is_reserved_header(k: &str) -> bool {
+    k.eq_ignore_ascii_case("content-length") || k.eq_ignore_ascii_case("connection")
+}
+
+/// Parse the header section (after the request/status line) with both
+/// the per-line and whole-section caps applied. `used` is the byte count
+/// already consumed by the first line.
+fn read_headers(
+    reader: &mut impl BufRead,
+    mut used: usize,
+) -> Result<BTreeMap<String, String>> {
+    let mut headers = BTreeMap::new();
+    let mut h = String::new();
+    loop {
+        let n = read_bounded_line(reader, &mut h, MAX_HEADER_LINE_BYTES)?;
+        if n == 0 {
+            bail!("connection closed inside header section");
+        }
+        used += n;
+        if used > MAX_HEADER_SECTION_BYTES {
+            bail!("header section too large (over {MAX_HEADER_SECTION_BYTES} bytes)");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    Ok(headers)
+}
+
+/// Parse and bounds-check a `content-length` header value.
+fn body_len(headers: &BTreeMap<String, String>) -> Result<usize> {
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.parse())
+        .transpose()
+        .map_err(|e| anyhow!("bad content-length: {e}"))?
+        .unwrap_or(0);
+    if len > MAX_BODY_BYTES {
+        bail!("body too large: {len}");
+    }
+    Ok(len)
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Method {
     Get,
@@ -39,8 +115,11 @@ pub enum Status {
     Created,
     NoContent,
     BadRequest,
+    Unauthorized,
+    Forbidden,
     NotFound,
     Conflict,
+    TooManyRequests,
     ServerError,
 }
 
@@ -51,8 +130,11 @@ impl Status {
             Status::Created => 201,
             Status::NoContent => 204,
             Status::BadRequest => 400,
+            Status::Unauthorized => 401,
+            Status::Forbidden => 403,
             Status::NotFound => 404,
             Status::Conflict => 409,
+            Status::TooManyRequests => 429,
             Status::ServerError => 500,
         }
     }
@@ -63,8 +145,11 @@ impl Status {
             Status::Created => "Created",
             Status::NoContent => "No Content",
             Status::BadRequest => "Bad Request",
+            Status::Unauthorized => "Unauthorized",
+            Status::Forbidden => "Forbidden",
             Status::NotFound => "Not Found",
             Status::Conflict => "Conflict",
+            Status::TooManyRequests => "Too Many Requests",
             Status::ServerError => "Internal Server Error",
         }
     }
@@ -75,8 +160,11 @@ impl Status {
             201 => Status::Created,
             204 => Status::NoContent,
             400 => Status::BadRequest,
+            401 => Status::Unauthorized,
+            403 => Status::Forbidden,
             404 => Status::NotFound,
             409 => Status::Conflict,
+            429 => Status::TooManyRequests,
             _ => Status::ServerError,
         }
     }
@@ -121,50 +209,50 @@ impl Request {
             .ok_or_else(|| anyhow!("missing path param :{name}"))
     }
 
+    /// Header lookup by (lowercased) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(name).map(|s| s.as_str())
+    }
+
     pub fn body_str(&self) -> Result<&str> {
         std::str::from_utf8(&self.body).map_err(|e| anyhow!("body not utf-8: {e}"))
     }
 
-    /// Read one request from a stream.
+    /// Read one request from a stream. EOF before any bytes arrive is
+    /// an error here; servers that want to treat it as a clean close
+    /// (a peer connecting and hanging up) use [`Request::read_from_opt`].
     pub fn read_from(stream: &mut impl Read) -> Result<Request> {
+        Request::read_from_opt(stream)?
+            .ok_or_else(|| anyhow!("connection closed before a request arrived"))
+    }
+
+    /// Like [`Request::read_from`] but `Ok(None)` when the peer closed
+    /// the connection without sending a single byte.
+    pub fn read_from_opt(stream: &mut impl Read) -> Result<Option<Request>> {
         let mut reader = BufReader::new(stream);
         let mut line = String::new();
-        reader.read_line(&mut line)?;
+        let used = read_bounded_line(&mut reader, &mut line, MAX_HEADER_LINE_BYTES)?;
+        if used == 0 {
+            return Ok(None);
+        }
         let mut parts = line.trim_end().split(' ');
         let method = Method::parse(parts.next().unwrap_or(""))?;
         let path = parts
             .next()
             .ok_or_else(|| anyhow!("malformed request line"))?
             .to_string();
-        let mut headers = BTreeMap::new();
-        loop {
-            let mut h = String::new();
-            reader.read_line(&mut h)?;
-            let h = h.trim_end();
-            if h.is_empty() {
-                break;
-            }
-            if let Some((k, v)) = h.split_once(':') {
-                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
-            }
-        }
-        let len: usize = headers
-            .get("content-length")
-            .map(|v| v.parse())
-            .transpose()
-            .map_err(|e| anyhow!("bad content-length: {e}"))?
-            .unwrap_or(0);
-        if len > 256 * 1024 * 1024 {
-            bail!("body too large: {len}");
-        }
-        let mut body = vec![0u8; len];
+        let headers = read_headers(&mut reader, used)?;
+        let mut body = vec![0u8; body_len(&headers)?];
         reader.read_exact(&mut body)?;
-        Ok(Request { method, path, headers, body, params: BTreeMap::new() })
+        Ok(Some(Request { method, path, headers, body, params: BTreeMap::new() }))
     }
 
     pub fn write_to(&self, stream: &mut impl Write) -> Result<()> {
         write!(stream, "{} {} HTTP/1.1\r\n", self.method.as_str(), self.path)?;
         for (k, v) in &self.headers {
+            if is_reserved_header(k) {
+                continue;
+            }
             write!(stream, "{k}: {v}\r\n")?;
         }
         write!(stream, "content-length: {}\r\n", self.body.len())?;
@@ -217,30 +305,17 @@ impl Response {
     pub fn read_from(stream: &mut impl Read) -> Result<Response> {
         let mut reader = BufReader::new(stream);
         let mut line = String::new();
-        reader.read_line(&mut line)?;
+        let used = read_bounded_line(&mut reader, &mut line, MAX_HEADER_LINE_BYTES)?;
+        if used == 0 {
+            bail!("connection closed before a response arrived");
+        }
         let code: u16 = line
             .split(' ')
             .nth(1)
             .ok_or_else(|| anyhow!("malformed status line: {line:?}"))?
             .parse()?;
-        let mut headers = BTreeMap::new();
-        loop {
-            let mut h = String::new();
-            reader.read_line(&mut h)?;
-            let h = h.trim_end();
-            if h.is_empty() {
-                break;
-            }
-            if let Some((k, v)) = h.split_once(':') {
-                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
-            }
-        }
-        let len: usize = headers
-            .get("content-length")
-            .map(|v| v.parse())
-            .transpose()?
-            .unwrap_or(0);
-        let mut body = vec![0u8; len];
+        let headers = read_headers(&mut reader, used)?;
+        let mut body = vec![0u8; body_len(&headers)?];
         reader.read_exact(&mut body)?;
         Ok(Response { status: Status::from_code(code), headers, body })
     }
@@ -253,6 +328,9 @@ impl Response {
             self.status.reason()
         )?;
         for (k, v) in &self.headers {
+            if is_reserved_header(k) {
+                continue;
+            }
             write!(stream, "{k}: {v}\r\n")?;
         }
         write!(stream, "content-length: {}\r\n", self.body.len())?;
@@ -309,5 +387,86 @@ mod tests {
         assert_eq!(Status::from_code(404), Status::NotFound);
         assert!(Status::Created.is_success());
         assert!(!Status::ServerError.is_success());
+    }
+
+    #[test]
+    fn auth_status_codes_roundtrip() {
+        for (status, code) in [
+            (Status::Unauthorized, 401),
+            (Status::Forbidden, 403),
+            (Status::TooManyRequests, 429),
+        ] {
+            assert_eq!(status.code(), code);
+            assert_eq!(Status::from_code(code), status);
+            assert!(!status.is_success());
+            assert!(!status.reason().is_empty());
+        }
+    }
+
+    #[test]
+    fn eof_before_any_bytes_is_a_clean_close() {
+        assert!(Request::read_from_opt(&mut &b""[..]).unwrap().is_none());
+        // ...but EOF after a partial request is still an error.
+        assert!(Request::read_from_opt(&mut &b"GET /x HTTP/1.1\r\n"[..]).is_err());
+        assert!(Request::read_from(&mut &b""[..]).is_err());
+    }
+
+    #[test]
+    fn response_body_over_cap_is_rejected_before_allocating() {
+        // A lying server advertising a 1 TiB body must fail the parse
+        // (pre-allocation), not OOM the client.
+        let wire = format!("HTTP/1.1 200 OK\r\ncontent-length: {}\r\n\r\n", 1u64 << 40);
+        let err = Response::read_from(&mut wire.as_bytes()).unwrap_err();
+        assert!(err.to_string().contains("too large"), "{err}");
+        // Request path keeps its cap too.
+        let wire = format!("POST /x HTTP/1.1\r\ncontent-length: {}\r\n\r\n", 1u64 << 40);
+        let err = Request::read_from(&mut wire.as_bytes()).unwrap_err();
+        assert!(err.to_string().contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn unterminated_line_is_bounded() {
+        // A peer dripping bytes with no newline must hit the line cap,
+        // not grow the buffer without limit.
+        let drip = vec![b'A'; MAX_HEADER_LINE_BYTES + 64];
+        let err = Request::read_from(&mut drip.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("too long"), "{err}");
+        let err = Response::read_from(&mut drip.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("too long"), "{err}");
+    }
+
+    #[test]
+    fn endless_headers_are_bounded() {
+        let mut wire = b"GET /x HTTP/1.1\r\n".to_vec();
+        for i in 0..100_000 {
+            wire.extend_from_slice(format!("x-h{i}: v\r\n").as_bytes());
+        }
+        wire.extend_from_slice(b"\r\n");
+        let err = Request::read_from(&mut wire.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("header section too large"), "{err}");
+    }
+
+    #[test]
+    fn caller_inserted_content_length_not_duplicated() {
+        let mut req = Request::new(Method::Post, "/x").with_body(b"hello".to_vec(), "text/plain");
+        // A caller (or a proxied header copy) smuggling its own framing
+        // headers must not produce duplicates on the wire.
+        req.headers.insert("content-length".into(), "999".into());
+        req.headers.insert("Connection".into(), "keep-alive".into());
+        let mut wire = Vec::new();
+        req.write_to(&mut wire).unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert_eq!(text.to_ascii_lowercase().matches("content-length").count(), 1);
+        assert_eq!(text.to_ascii_lowercase().matches("connection").count(), 1);
+        let back = Request::read_from(&mut wire.as_slice()).unwrap();
+        assert_eq!(back.body, b"hello"); // real length won, not the lie
+
+        let mut resp = Response::binary(Status::Ok, vec![1, 2, 3]);
+        resp.headers.insert("Content-Length".into(), "7".into());
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire).unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert_eq!(text.to_ascii_lowercase().matches("content-length").count(), 1);
+        assert_eq!(Response::read_from(&mut wire.as_slice()).unwrap().body, vec![1, 2, 3]);
     }
 }

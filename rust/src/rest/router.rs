@@ -1,10 +1,11 @@
-//! Path router with `:param` segments.
+//! Path router with `:param` segments and pre-dispatch guards.
 
 use super::http::{Method, Request, Response, Status};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 type Handler = Arc<dyn Fn(Request) -> Response + Send + Sync>;
+type Guard = Arc<dyn Fn(&mut Request) -> Option<Response> + Send + Sync>;
 
 struct Route {
     method: Method,
@@ -20,11 +21,25 @@ enum Segment {
 #[derive(Default)]
 pub struct Router {
     routes: Vec<Route>,
+    guards: Vec<Guard>,
 }
 
 impl Router {
     pub fn new() -> Router {
         Router::default()
+    }
+
+    /// Install middleware that runs before route matching on EVERY
+    /// request (including ones that would 404). Returning `Some`
+    /// short-circuits dispatch with that response; returning `None`
+    /// lets the request through, possibly after annotating
+    /// `req.params` (e.g. the auth guard records `auth.tenant`).
+    pub fn guard<F>(mut self, f: F) -> Router
+    where
+        F: Fn(&mut Request) -> Option<Response> + Send + Sync + 'static,
+    {
+        self.guards.push(Arc::new(f));
+        self
     }
 
     pub fn route<F>(mut self, method: Method, pattern: &str, f: F) -> Router
@@ -48,6 +63,13 @@ impl Router {
     }
 
     pub fn dispatch(&self, mut req: Request) -> Response {
+        // Guards run before matching so an unauthenticated probe can't
+        // map the route table through 404-vs-401 differences.
+        for guard in &self.guards {
+            if let Some(resp) = guard(&mut req) {
+                return resp;
+            }
+        }
         let path: Vec<&str> = req
             .path
             .split('?')
@@ -70,7 +92,9 @@ impl Router {
                 }
             });
             if matched {
-                req.params = params;
+                // Extend (not replace): guards may already have
+                // annotated params with auth context.
+                req.params.extend(params);
                 return (route.handler)(req);
             }
         }
@@ -144,5 +168,43 @@ mod tests {
             r.dispatch(Request::new(Method::Get, "/models/")).status,
             Status::Ok
         );
+    }
+
+    #[test]
+    fn guard_can_reject_and_annotate() {
+        let r = Router::new()
+            .guard(|req| {
+                if req.header("x-key") != Some("sesame") {
+                    return Some(Response::error(Status::Unauthorized, "no key"));
+                }
+                req.params.insert("auth.tenant".into(), "alice".into());
+                None
+            })
+            .route(Method::Get, "/whoami/:id", |req| {
+                // Guard-inserted params survive route matching…
+                Response::binary(
+                    Status::Ok,
+                    format!(
+                        "{}:{}",
+                        req.param("auth.tenant").unwrap(),
+                        req.param("id").unwrap()
+                    )
+                    .into_bytes(),
+                )
+            });
+        // Rejected before matching: even unknown paths answer 401.
+        assert_eq!(
+            r.dispatch(Request::new(Method::Get, "/whoami/7")).status,
+            Status::Unauthorized
+        );
+        assert_eq!(
+            r.dispatch(Request::new(Method::Get, "/nope")).status,
+            Status::Unauthorized
+        );
+        let mut req = Request::new(Method::Get, "/whoami/7");
+        req.headers.insert("x-key".into(), "sesame".into());
+        let resp = r.dispatch(req);
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(resp.body, b"alice:7");
     }
 }

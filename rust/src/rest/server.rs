@@ -1,16 +1,34 @@
 //! TCP accept loop + thread-pool request handling with graceful shutdown.
+//!
+//! The accept loop blocks in `poll(2)` on the listener fd (via the
+//! broker reactor's [`Poller`] helper) with a [`WakeFd`] as the cancel
+//! signal — zero wakeups while idle, instead of the 1 ms nonblocking
+//! sleep-poll this module started with (the same pattern the broker's
+//! event loop replaced).
 
 use super::http::{Request, Response, Status};
 use super::router::Router;
+use crate::broker::wire::reactor::{Poller, WakeFd};
 use crate::exec::{CancelToken, ThreadPool};
 use anyhow::{Context, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
 use std::sync::Arc;
 use std::time::Duration;
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_CANCEL: u64 = 1;
+
+/// Per-connection I/O deadline, applied to BOTH directions: a peer that
+/// stops reading its response would otherwise wedge a rest-worker
+/// thread forever in `write`.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
 
 pub struct Server {
     addr: SocketAddr,
     cancel: CancelToken,
+    /// Kicks the accept loop out of its blocking poll on shutdown.
+    wake: Arc<WakeFd>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -20,32 +38,22 @@ impl Server {
     pub fn start(port: u16, workers: usize, router: Router) -> Result<Server> {
         let listener = TcpListener::bind(("127.0.0.1", port)).context("binding server")?;
         let addr = listener.local_addr()?;
+        // Nonblocking so a connection that vanishes between readiness
+        // and accept yields WouldBlock instead of parking the loop.
         listener.set_nonblocking(true)?;
         let cancel = CancelToken::new();
         let token = cancel.clone();
+        let wake = Arc::new(WakeFd::new().context("rest accept wake fd")?);
+        let wake2 = wake.clone();
         let router = Arc::new(router);
         let accept_thread = std::thread::Builder::new()
             .name("rest-accept".to_string())
             .spawn(move || {
-                let pool = ThreadPool::new(workers, "rest-worker");
-                while !token.is_cancelled() {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let router = router.clone();
-                            pool.execute(move || handle(stream, &router));
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(1));
-                        }
-                        Err(e) => {
-                            log::warn!("accept error: {e}");
-                            std::thread::sleep(Duration::from_millis(5));
-                        }
-                    }
+                if let Err(e) = accept_loop(&listener, &router, workers, &token, &wake2) {
+                    log::error!("rest accept loop failed: {e}");
                 }
-                pool.shutdown();
             })?;
-        Ok(Server { addr, cancel, accept_thread: Some(accept_thread) })
+        Ok(Server { addr, cancel, wake, accept_thread: Some(accept_thread) })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -62,6 +70,7 @@ impl Server {
 
     fn stop(&mut self) {
         self.cancel.cancel();
+        self.wake.wake();
         if let Some(h) = self.accept_thread.take() {
             h.join().ok();
         }
@@ -74,12 +83,56 @@ impl Drop for Server {
     }
 }
 
+/// Block on listener readiness (or the cancel wake) and hand accepted
+/// sockets to the worker pool.
+fn accept_loop(
+    listener: &TcpListener,
+    router: &Arc<Router>,
+    workers: usize,
+    cancel: &CancelToken,
+    wake: &WakeFd,
+) -> Result<()> {
+    let mut poller = Poller::new().context("rest accept poller")?;
+    poller.register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)?;
+    poller.register(wake.raw(), TOKEN_CANCEL, true, false)?;
+    let pool = ThreadPool::new(workers, "rest-worker");
+    let mut events = Vec::new();
+    while !cancel.is_cancelled() {
+        events.clear();
+        poller.wait(&mut events, None)?;
+        // Accept wakes are level-triggered and coalesce, so drain the
+        // backlog each round regardless of which token fired.
+        wake.drain();
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let router = router.clone();
+                    pool.execute(move || handle(stream, &router));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // Transient per-connection accept failures (e.g.
+                    // ECONNABORTED); the listener itself stays usable.
+                    log::warn!("accept error: {e}");
+                    break;
+                }
+            }
+        }
+    }
+    pool.shutdown();
+    Ok(())
+}
+
 fn handle(mut stream: TcpStream, router: &Router) {
-    stream
-        .set_read_timeout(Some(Duration::from_secs(30)))
-        .ok();
-    let response = match Request::read_from(&mut stream) {
-        Ok(req) => router.dispatch(req),
+    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+    let response = match Request::read_from_opt(&mut stream) {
+        // A peer that connected and hung up without a byte (health
+        // probes, cancelled clients) gets a clean close, not a
+        // BadRequest written into a dead socket.
+        Ok(None) => return,
+        Ok(Some(req)) => router.dispatch(req),
         Err(e) => Response::error(Status::BadRequest, &format!("{e}")),
     };
     if let Err(e) = response.write_to(&mut stream) {
@@ -92,6 +145,7 @@ mod tests {
     use super::*;
     use crate::json::Json;
     use crate::rest::{HttpClient, Method};
+    use std::io::{Read, Write};
 
     fn test_server() -> Server {
         let router = Router::new()
@@ -149,5 +203,29 @@ mod tests {
         s.shutdown();
         let client = HttpClient::new(&url);
         assert!(client.get("/ping").is_err());
+    }
+
+    #[test]
+    fn connect_and_hangup_is_a_clean_close() {
+        // A probe that connects and disconnects without sending a byte
+        // must not be answered (there is no one to answer) and must not
+        // disturb later real requests.
+        let s = test_server();
+        for _ in 0..5 {
+            let probe = TcpStream::connect(s.addr()).unwrap();
+            drop(probe);
+        }
+        let client = HttpClient::new(&s.base_url());
+        assert_eq!(client.get("/ping").unwrap().status, Status::Ok);
+    }
+
+    #[test]
+    fn garbage_request_line_is_bad_request() {
+        let s = test_server();
+        let mut stream = TcpStream::connect(s.addr()).unwrap();
+        stream.write_all(b"NOT HTTP AT ALL\r\n\r\n").unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
     }
 }

@@ -165,6 +165,7 @@ fn full_pipeline_over_loopback_tcp_with_remote_workers() {
             locality: ClientLocality::Remote,
             max_poll: 32,
             backend: BackendSelect::Native,
+            api_key: None,
         };
         let c = cancel.clone();
         replicas.push(std::thread::spawn(move || {

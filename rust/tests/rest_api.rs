@@ -1,0 +1,604 @@
+//! ISSUE-9 acceptance: the hardened HTTP substrate under adversarial
+//! input, the authenticated control plane (REST + wire protocol), and
+//! two-tenant isolation end-to-end over the remote transport.
+//!
+//! Everything runs against REAL sockets — a live [`Server`] for the
+//! REST surface and a live [`BrokerServer`] for the wire protocol — so
+//! the request parsing, the auth guard, and the per-connection wire
+//! gate are exercised exactly as a remote peer sees them. The e2e test
+//! uses the artifact-less native backend (self-written meta.json), so
+//! the suite is checkout-independent: zero skips.
+
+use kafka_ml::broker::wire::codec::{self, OpCode, Reader, STATUS_ERR, STATUS_OK};
+use kafka_ml::broker::{
+    BrokerHandle, BrokerServer, BrokerTransport, ClientLocality, Producer, ProducerConfig, Record,
+    RemoteBroker,
+};
+use kafka_ml::coordinator::inference::run_inference_replica;
+use kafka_ml::coordinator::training::run_training_job;
+use kafka_ml::coordinator::{
+    ControlMessage, InferenceClient, InferenceReplicaConfig, KafkaMl, KafkaMlConfig, StreamRef,
+    TrainingJobConfig, CONTROL_TOPIC,
+};
+use kafka_ml::exec::CancelToken;
+use kafka_ml::json::Json;
+use kafka_ml::ml::separable_dataset;
+use kafka_ml::registry::{api, BackendClient, Quota, Store};
+use kafka_ml::rest::{HttpClient, Server};
+use kafka_ml::runtime::{BackendSelect, ModelParams, ParamTensor};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A REST back-end over a fresh store (auth posture left to the test).
+fn serve_store() -> (Server, Arc<Store>, String) {
+    let store = Arc::new(Store::new());
+    let server = Server::start(0, 4, api::router(store.clone())).unwrap();
+    let url = server.base_url();
+    (server, store, url)
+}
+
+fn host_of(base_url: &str) -> &str {
+    base_url.trim_start_matches("http://")
+}
+
+/// Write raw bytes to the server and return whatever it answers until
+/// close — the adversarial client no [`HttpClient`] would let us be.
+fn raw_http(host: &str, payload: &[u8]) -> String {
+    let mut s = TcpStream::connect(host).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(payload).unwrap();
+    s.shutdown(Shutdown::Write).ok();
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).ok();
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+// ---- the hardened HTTP substrate ------------------------------------------
+
+#[test]
+fn garbage_request_line_gets_400_and_the_server_survives() {
+    let (server, _store, url) = serve_store();
+    let host = host_of(&url);
+    for garbage in [
+        &b"NONSENSE\r\n\r\n"[..],
+        &b"GET\r\n\r\n"[..],
+        &b"\x00\xff\xfe binary trash\r\n\r\n"[..],
+    ] {
+        let resp = raw_http(host, garbage);
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp:.60}");
+    }
+    // The pool survived all of it: a well-formed request still works.
+    let resp = HttpClient::new(&url).get("/models").unwrap();
+    assert_eq!(resp.status.code(), 200);
+    server.shutdown();
+}
+
+#[test]
+fn oversized_header_line_and_header_section_get_400() {
+    let (server, _store, url) = serve_store();
+    let host = host_of(&url);
+    // One header line far past the 8 KiB line bound.
+    let mut big_line = b"GET /models HTTP/1.1\r\nx-big: ".to_vec();
+    big_line.extend(std::iter::repeat(b'a').take(32 * 1024));
+    big_line.extend_from_slice(b"\r\n\r\n");
+    let resp = raw_http(host, &big_line);
+    assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp:.60}");
+    // Many modest lines past the 64 KiB section bound.
+    let mut big_section = b"GET /models HTTP/1.1\r\n".to_vec();
+    for i in 0..200 {
+        big_section.extend_from_slice(format!("x-h{i}: {}\r\n", "b".repeat(1024)).as_bytes());
+    }
+    big_section.extend_from_slice(b"\r\n");
+    let resp = raw_http(host, &big_section);
+    assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp:.60}");
+    server.shutdown();
+}
+
+#[test]
+fn oversized_body_declaration_is_refused_up_front() {
+    let (server, _store, url) = serve_store();
+    let host = host_of(&url);
+    // Declares a body past the 256 MiB cap without sending one: the
+    // server must refuse on the declaration, not try to allocate/read.
+    let resp = raw_http(
+        host,
+        b"POST /models HTTP/1.1\r\ncontent-length: 999999999999\r\n\r\n",
+    );
+    assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp:.60}");
+    // And a non-numeric declaration is equally dead.
+    let resp = raw_http(
+        host,
+        b"POST /models HTTP/1.1\r\ncontent-length: a-lot\r\n\r\n",
+    );
+    assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp:.60}");
+    let resp = HttpClient::new(&url).get("/models").unwrap();
+    assert_eq!(resp.status.code(), 200);
+    server.shutdown();
+}
+
+// ---- the REST auth gate ----------------------------------------------------
+
+#[test]
+fn rest_demands_keys_401_unknown_403_revoked_200_good() {
+    let (server, store, url) = serve_store();
+    store.auth().set_require(true);
+    let good = store.auth().create_key("alice", false).unwrap();
+    let revoked = store.auth().create_key("alice", false).unwrap();
+    store.auth().revoke(&revoked);
+
+    // No key: 401 on a real route AND on an unknown path (the guard
+    // answers before routing, so probes can't map the route table).
+    for path in ["/models", "/definitely/not/a/route"] {
+        let resp = HttpClient::new(&url).get(path).unwrap();
+        assert_eq!(resp.status.code(), 401, "{path}");
+    }
+    let resp = HttpClient::new(&url).with_token("kml_bogus").get("/models").unwrap();
+    assert_eq!(resp.status.code(), 401);
+    let resp = HttpClient::new(&url).with_token(&revoked).get("/models").unwrap();
+    assert_eq!(resp.status.code(), 403);
+    let resp = HttpClient::new(&url).with_token(&good).get("/models").unwrap();
+    assert_eq!(resp.status.code(), 200);
+    server.shutdown();
+}
+
+#[test]
+fn cross_tenant_rest_reads_answer_404_not_403() {
+    let (server, store, url) = serve_store();
+    store.auth().set_require(true);
+    let alice = store.auth().create_key("alice", false).unwrap();
+    let bob = store.auth().create_key("bob", false).unwrap();
+
+    let id = BackendClient::new_with_key(&url, Some(&alice))
+        .create_model("alice-model", "/nonexistent")
+        .unwrap();
+    // Bob gets the exact same 404 a missing id would give — not a 403
+    // that would leak the row's existence.
+    let resp = HttpClient::new(&url)
+        .with_token(&bob)
+        .get(&format!("/models/{id}"))
+        .unwrap();
+    assert_eq!(resp.status.code(), 404);
+    let missing = HttpClient::new(&url)
+        .with_token(&bob)
+        .get(&format!("/models/{}", id + 999))
+        .unwrap();
+    assert_eq!(missing.status.code(), 404);
+    for body in [&resp.body, &missing.body] {
+        assert!(
+            String::from_utf8_lossy(body).contains("unknown model"),
+            "cross-tenant and missing-id answers must be indistinguishable"
+        );
+    }
+    // Bob's listing is empty; Alice sees her row.
+    let list = HttpClient::new(&url).with_token(&bob).get_json("/models").unwrap();
+    assert_eq!(list.as_arr().unwrap().len(), 0);
+    let list = HttpClient::new(&url).with_token(&alice).get_json("/models").unwrap();
+    assert_eq!(list.as_arr().unwrap().len(), 1);
+    server.shutdown();
+}
+
+#[test]
+fn storage_quota_breach_answers_429_while_the_neighbor_is_unaffected() {
+    let (server, store, url) = serve_store();
+    store.auth().set_require(true);
+    let alice = store.auth().create_key("alice", false).unwrap();
+    let bob = store.auth().create_key("bob", false).unwrap();
+    store
+        .auth()
+        .set_quota("alice", Quota { records_per_sec: None, stored_bytes: Some(8) });
+
+    // Both tenants walk the same model → configuration → deployment
+    // path; only Alice's 64-byte model upload breaches her ceiling.
+    let result_of = |key: &str| {
+        let be = BackendClient::new_with_key(&url, Some(key));
+        let m = be.create_model("m", "/nonexistent").unwrap();
+        let c = be.create_configuration("c", &[m]).unwrap();
+        let (_, rids) = be.create_deployment(c, 10, 1).unwrap();
+        rids[0]
+    };
+    let a_rid = result_of(&alice);
+    let b_rid = result_of(&bob);
+
+    // A well-formed (but > 8 bytes) model blob: the upload must die on
+    // the quota, not on blob validation.
+    let blob = ModelParams {
+        tensors: vec![ParamTensor { name: "w".into(), shape: vec![4], data: vec![0.0; 4] }],
+    }
+    .to_bytes();
+    let resp = HttpClient::new(&url)
+        .with_token(&alice)
+        .post_binary(&format!("/results/{a_rid}/model"), blob.clone())
+        .unwrap();
+    assert_eq!(resp.status.code(), 429, "{}", String::from_utf8_lossy(&resp.body));
+    assert!(String::from_utf8_lossy(&resp.body).contains("quota"));
+    // Bob, on the same server, is untouched by Alice's ceiling.
+    let resp = HttpClient::new(&url)
+        .with_token(&bob)
+        .post_binary(&format!("/results/{b_rid}/model"), blob)
+        .unwrap();
+    assert!(resp.status.is_success(), "{}", String::from_utf8_lossy(&resp.body));
+    server.shutdown();
+}
+
+// ---- the wire-protocol auth gate ------------------------------------------
+
+/// One raw request/response round trip on an already-open socket.
+fn wire_call(stream: &mut TcpStream, corr: u64, op: OpCode, payload: &[u8]) -> (u64, u8, String) {
+    stream
+        .write_all(&codec::encode_request(corr, op, payload))
+        .unwrap();
+    let body = codec::read_frame(stream).unwrap();
+    let mut r = Reader::new(body);
+    let rcorr = r.u64().unwrap();
+    let status = r.u8().unwrap();
+    let msg = if status == STATUS_OK {
+        String::new()
+    } else {
+        r.str().unwrap_or_default()
+    };
+    (rcorr, status, msg)
+}
+
+#[test]
+fn wire_rejects_every_opcode_before_authenticate() {
+    let store = Arc::new(Store::new());
+    store.auth().set_require(true);
+    let key = store.auth().create_key("alice", false).unwrap();
+    let cluster = kafka_ml::broker::Cluster::new(Default::default());
+    let server =
+        BrokerServer::start_sharded_auth("127.0.0.1:0", cluster, 2, 1, Some(store.auth().clone()))
+            .unwrap();
+    let addr = server.addr().to_string();
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // Every opcode except Authenticate (the gate itself) and Metric
+    // (one-way; nothing to answer on) bounces with an error response on
+    // the SAME connection — rejection does not tear the socket down.
+    let gated = [
+        OpCode::CreateTopic,
+        OpCode::Metadata,
+        OpCode::ListTopics,
+        OpCode::Produce,
+        OpCode::FetchBatch,
+        OpCode::FetchWait,
+        OpCode::Offsets,
+        OpCode::AllocProducerId,
+        OpCode::JoinGroup,
+        OpCode::LeaveGroup,
+        OpCode::Heartbeat,
+        OpCode::CommitOffsets,
+        OpCode::CommittedOffset,
+    ];
+    for (i, op) in gated.into_iter().enumerate() {
+        let corr = 100 + i as u64;
+        let (rcorr, status, msg) = wire_call(&mut stream, corr, op, &[]);
+        assert_eq!(rcorr, corr, "{op:?}");
+        assert_eq!(status, STATUS_ERR, "{op:?}");
+        assert!(msg.contains("unauthenticated"), "{op:?}: {msg}");
+    }
+    // A wrong key is a definitive error, and the connection survives…
+    let mut p = Vec::new();
+    codec::put_str(&mut p, "kml_not_a_key");
+    let (_, status, msg) = wire_call(&mut stream, 500, OpCode::Authenticate, &p);
+    assert_eq!(status, STATUS_ERR);
+    assert!(msg.contains("unknown key"), "{msg}");
+    // …so the right key on the same socket opens the gate.
+    let mut p = Vec::new();
+    codec::put_str(&mut p, &key);
+    let (rcorr, status, _) = wire_call(&mut stream, 501, OpCode::Authenticate, &p);
+    assert_eq!((rcorr, status), (501, STATUS_OK));
+    let (_, status, msg) = wire_call(&mut stream, 502, OpCode::ListTopics, &[]);
+    assert_eq!(status, STATUS_OK, "{msg}");
+    server.shutdown();
+}
+
+#[test]
+fn remote_broker_authenticates_automatically() {
+    let store = Arc::new(Store::new());
+    store.auth().set_require(true);
+    let key = store.auth().create_key("alice", false).unwrap();
+    let cluster = kafka_ml::broker::Cluster::new(Default::default());
+    let server =
+        BrokerServer::start_sharded_auth("127.0.0.1:0", cluster, 2, 1, Some(store.auth().clone()))
+            .unwrap();
+    let addr = server.addr().to_string();
+
+    // A bad key fails at connect (the eager probe runs the handshake).
+    let err = RemoteBroker::connect_with_key(&addr, Some("kml_wrong")).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown key"), "{err:#}");
+    // No key at all fails on the first real call's error answer.
+    let anon = RemoteBroker::connect(&addr).unwrap();
+    let err = anon.create_topic("t", 1).unwrap_err();
+    assert!(format!("{err:#}").contains("unauthenticated"), "{err:#}");
+    // The keyed client works end to end: every new connection (main
+    // lane, wait lane) authenticates before its first request.
+    let broker: BrokerHandle = RemoteBroker::connect_with_key(&addr, Some(&key)).unwrap();
+    broker.create_topic("t", 1).unwrap();
+    broker
+        .produce("t", 0, &[Record::new(b"hello".to_vec())], ClientLocality::Remote, None)
+        .unwrap();
+    assert_eq!(broker.offsets("t", 0).unwrap(), (0, 1));
+    assert!(broker
+        .wait_for_data(&[(("t".to_string(), 0), 0)], None, Duration::from_millis(50))
+        .unwrap());
+    server.shutdown();
+}
+
+#[test]
+fn wire_produce_quota_rejects_only_the_over_quota_tenant() {
+    let store = Arc::new(Store::new());
+    store.auth().set_require(true);
+    let alice = store.auth().create_key("alice", false).unwrap();
+    let bob = store.auth().create_key("bob", false).unwrap();
+    store
+        .auth()
+        .set_quota("alice", Quota { records_per_sec: Some(2), stored_bytes: None });
+    let cluster = kafka_ml::broker::Cluster::new(Default::default());
+    let server =
+        BrokerServer::start_sharded_auth("127.0.0.1:0", cluster, 2, 1, Some(store.auth().clone()))
+            .unwrap();
+    let addr = server.addr().to_string();
+
+    let a: BrokerHandle = RemoteBroker::connect_with_key(&addr, Some(&alice)).unwrap();
+    let b: BrokerHandle = RemoteBroker::connect_with_key(&addr, Some(&bob)).unwrap();
+    a.create_topic("q", 1).unwrap();
+    let batch3: Vec<Record> = (0..3).map(|i| Record::new(vec![i as u8; 16])).collect();
+    // Three records in one batch breach Alice's 2/s window — and the
+    // rejection charges nothing, so a smaller batch still fits.
+    let err = a
+        .produce("q", 0, &batch3, ClientLocality::Remote, None)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("quota"), "{err:#}");
+    a.produce("q", 0, &batch3[..1], ClientLocality::Remote, None)
+        .unwrap();
+    // Bob, same broker, same moment: unconstrained.
+    b.produce("q", 0, &batch3, ClientLocality::Remote, None).unwrap();
+    assert_eq!(b.offsets("q", 0).unwrap(), (0, 4));
+    server.shutdown();
+}
+
+// ---- two tenants, full pipeline, remote transport --------------------------
+
+fn raw_config() -> Json {
+    kafka_ml::json::parse(r#"{"dtype": "f32", "shape": [8]}"#).unwrap()
+}
+
+fn write_native_model_spec(dir: &std::path::Path) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(
+        dir.join("meta.json"),
+        r#"{
+          "format_version": 1,
+          "spec": {"input_dim": 8, "hidden": [16], "classes": 4, "batch": 10,
+                   "lr": 0.01, "beta1": 0.9, "beta2": 0.999, "eps": 1e-07, "seed": 7},
+          "params": [
+            {"name": "w1", "shape": [8, 16], "dtype": "f32"},
+            {"name": "b1", "shape": [16], "dtype": "f32"},
+            {"name": "w2", "shape": [16, 4], "dtype": "f32"},
+            {"name": "b2", "shape": [4], "dtype": "f32"}
+          ],
+          "artifacts": {}
+        }"#,
+    )
+    .unwrap();
+}
+
+/// Produce `samples` to `topic` and send the deployment's control
+/// message, all over `broker` (a tenant's remote connection).
+fn stream_samples(
+    broker: &BrokerHandle,
+    deployment_id: u64,
+    topic: &str,
+    samples: &[kafka_ml::formats::Sample],
+) {
+    let format = kafka_ml::formats::registry("RAW", &raw_config()).unwrap();
+    broker.create_topic(topic, 1).unwrap();
+    let (_, start) = broker.offsets(topic, 0).unwrap();
+    let mut producer = Producer::new(
+        broker.clone(),
+        ProducerConfig { batch_size: 64, locality: ClientLocality::Remote, ..Default::default() },
+    );
+    for s in samples {
+        producer
+            .send_to(topic, 0, format.encode(&s.features, s.label).unwrap())
+            .unwrap();
+    }
+    producer.flush().unwrap();
+    let (_, end) = broker.offsets(topic, 0).unwrap();
+    let msg = ControlMessage {
+        deployment_id,
+        stream: StreamRef::new(topic, 0, start, end - start),
+        input_format: "RAW".into(),
+        input_config: raw_config(),
+        validation_rate: 0.2,
+        total_msg: end - start,
+    };
+    broker
+        .produce(
+            CONTROL_TOPIC,
+            0,
+            &[Record::new(msg.encode())],
+            ClientLocality::Remote,
+            None,
+        )
+        .unwrap();
+}
+
+#[test]
+fn two_tenant_pipeline_end_to_end_with_zero_cross_visibility() {
+    let dir = std::env::temp_dir().join(format!("kafka-ml-tenants-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    write_native_model_spec(&dir);
+    let dir_str = dir.to_string_lossy().to_string();
+
+    // The platform pod: broker + REST back-end with auth REQUIRED, plus
+    // the wire server sharing the same key table.
+    let kml = KafkaMl::start(KafkaMlConfig {
+        backend: BackendSelect::Native,
+        require_auth: true,
+        ..Default::default()
+    })
+    .unwrap();
+    let wire = BrokerServer::start_sharded_auth(
+        "127.0.0.1:0",
+        kml.cluster.clone(),
+        4,
+        2,
+        Some(kml.store.auth().clone()),
+    )
+    .unwrap();
+    let broker_addr = wire.addr().to_string();
+    let backend_url = kml.backend_url().to_string();
+    let alice_key = kml.store.auth().create_key("alice", false).unwrap();
+    let bob_key = kml.store.auth().create_key("bob", false).unwrap();
+
+    // ---- Alice: full produce → train → infer, every hop keyed -----------
+    let alice_be = BackendClient::new_with_key(&backend_url, Some(&alice_key));
+    let a_model = alice_be.create_model("alice-mlp", &dir_str).unwrap();
+    let a_conf = alice_be.create_configuration("alice-conf", &[a_model]).unwrap();
+    let (a_dep, a_rids) = alice_be.create_deployment(a_conf, 10, 30).unwrap();
+    let a_rid = a_rids[0];
+
+    let a_trainer: BrokerHandle =
+        RemoteBroker::connect_with_key(&broker_addr, Some(&alice_key)).unwrap();
+    let a_cfg = TrainingJobConfig {
+        epochs: 30,
+        seed: 7,
+        locality: ClientLocality::Remote,
+        backend: BackendSelect::Native,
+        api_key: Some(alice_key.clone()),
+        ..TrainingJobConfig::new(a_dep, a_rid, &dir_str, &backend_url)
+    };
+    let a_thread =
+        std::thread::spawn(move || run_training_job(&a_trainer, &a_cfg, &CancelToken::new()));
+    let a_ingest: BrokerHandle =
+        RemoteBroker::connect_with_key(&broker_addr, Some(&alice_key)).unwrap();
+    stream_samples(&a_ingest, a_dep, "alice-data", &separable_dataset(260, 8, 4, 1).samples);
+
+    // ---- Bob: his own smaller pipeline on the SAME platform -------------
+    let bob_be = BackendClient::new_with_key(&backend_url, Some(&bob_key));
+    let b_model = bob_be.create_model("bob-mlp", &dir_str).unwrap();
+    let b_conf = bob_be.create_configuration("bob-conf", &[b_model]).unwrap();
+    let (b_dep, b_rids) = bob_be.create_deployment(b_conf, 10, 10).unwrap();
+    let b_rid = b_rids[0];
+    let b_trainer: BrokerHandle =
+        RemoteBroker::connect_with_key(&broker_addr, Some(&bob_key)).unwrap();
+    let b_cfg = TrainingJobConfig {
+        epochs: 10,
+        seed: 11,
+        locality: ClientLocality::Remote,
+        backend: BackendSelect::Native,
+        api_key: Some(bob_key.clone()),
+        ..TrainingJobConfig::new(b_dep, b_rid, &dir_str, &backend_url)
+    };
+    let b_thread =
+        std::thread::spawn(move || run_training_job(&b_trainer, &b_cfg, &CancelToken::new()));
+    let b_ingest: BrokerHandle =
+        RemoteBroker::connect_with_key(&broker_addr, Some(&bob_key)).unwrap();
+    stream_samples(&b_ingest, b_dep, "bob-data", &separable_dataset(120, 8, 4, 5).samples);
+
+    // Both jobs finish; Alice's model clears the 90% bar.
+    let a_out = a_thread.join().unwrap().expect("alice training job");
+    assert!(a_out.metrics.val_accuracy.unwrap() >= 0.9);
+    b_thread.join().unwrap().expect("bob training job");
+
+    // ---- zero cross-tenant visibility -----------------------------------
+    // Each tenant's listing holds exactly their own row.
+    let names = |key: &str| -> Vec<String> {
+        HttpClient::new(&backend_url)
+            .with_token(key)
+            .get_json("/models")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|m| m.req_str("name").unwrap().to_string())
+            .collect()
+    };
+    assert_eq!(names(&alice_key), vec!["alice-mlp".to_string()]);
+    assert_eq!(names(&bob_key), vec!["bob-mlp".to_string()]);
+    // Bob's probes at Alice's ids answer 404 — the same status a
+    // missing id gives, never a 403 that confirms existence.
+    for path in [
+        format!("/models/{a_model}"),
+        format!("/results/{a_rid}"),
+        format!("/results/{a_rid}/model"),
+        format!("/deployments/{a_dep}"),
+    ] {
+        let resp = HttpClient::new(&backend_url).with_token(&bob_key).get(&path).unwrap();
+        assert_eq!(resp.status.code(), 404, "{path}");
+    }
+    assert!(bob_be.download_model(a_rid).is_err());
+    // The admin service key sees both tenants.
+    let admin_names = names(kml.service_key().unwrap());
+    assert_eq!(admin_names.len(), 2);
+    // Wire usage was metered against Alice's key.
+    let alice_usage = kml
+        .store
+        .auth()
+        .list()
+        .into_iter()
+        .find(|k| k.token == alice_key)
+        .unwrap()
+        .usage;
+    assert!(alice_usage.records_produced >= 260, "{alice_usage:?}");
+
+    // ---- Alice serves inference; Bob cannot even see the row ------------
+    kml.wait_control_logged(a_dep, Duration::from_secs(10)).unwrap();
+    let a_inf = alice_be
+        .create_inference(a_rid, 1, "alice-in", "alice-out")
+        .unwrap();
+    assert!(bob_be.inference_info(a_inf).is_err());
+    let replica: BrokerHandle =
+        RemoteBroker::connect_with_key(&broker_addr, Some(&alice_key)).unwrap();
+    replica.create_topic("alice-in", 1).unwrap();
+    replica.create_topic("alice-out", 1).unwrap();
+    let cancel = CancelToken::new();
+    let r_cfg = InferenceReplicaConfig {
+        inference_id: a_inf,
+        result_id: a_rid,
+        artifact_dir: dir_str.clone(),
+        backend_url: backend_url.clone(),
+        input_topic: "alice-in".into(),
+        output_topic: "alice-out".into(),
+        input_format: "RAW".into(),
+        input_config: raw_config(),
+        locality: ClientLocality::Remote,
+        max_poll: 32,
+        backend: BackendSelect::Native,
+        api_key: Some(alice_key.clone()),
+    };
+    let r_cancel = cancel.clone();
+    let r_thread = std::thread::spawn(move || {
+        run_inference_replica(&replica, &r_cfg, "alice-replica-0", &r_cancel)
+    });
+    let client_conn: BrokerHandle =
+        RemoteBroker::connect_with_key(&broker_addr, Some(&alice_key)).unwrap();
+    let mut client = InferenceClient::new(
+        client_conn,
+        "alice-in",
+        "alice-out",
+        "RAW",
+        &raw_config(),
+        ClientLocality::Remote,
+    )
+    .unwrap();
+    let test = separable_dataset(20, 8, 4, 2);
+    let mut correct = 0usize;
+    for s in &test.samples {
+        let p = client.request(&s.features, Duration::from_secs(15)).unwrap();
+        if p.class as i32 == s.label.unwrap() {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 16, "only {correct}/20 over the authenticated wire");
+
+    cancel.cancel();
+    r_thread.join().unwrap().expect("alice inference replica");
+    wire.shutdown();
+    kml.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
