@@ -18,6 +18,10 @@
 //! * pipelined produce — the producer's in-flight window over loopback
 //!   TCP (1 vs 5 vs 16 batches in flight on one multiplexed
 //!   connection): records/s and p99 submit-to-ack per batch.
+//! * cluster failover — produce latency through a 3-broker cluster at
+//!   `acks=replicated`, steady state vs with the partition leader
+//!   SIGKILLed mid-stream: the p99/max gap is the failover stall
+//!   (heartbeat detection + promotion + client re-route).
 //!
 //! Results are also written machine-readably to
 //! `BENCH_broker_throughput.json` (repo root) via `benchkit::Report` so
@@ -829,6 +833,128 @@ fn main() -> anyhow::Result<()> {
             server.shutdown();
         }
         t.print();
+    }
+
+    // ---- produce latency through a forced leader failover ---------------------
+    // The cost of the availability story: a 3-broker cluster at
+    // acks=replicated, measured as per-record submit-to-ack latency on a
+    // routed client. The steady-state arm prices replication gating; the
+    // failover arm SIGKILLs the partition leader mid-stream and keeps
+    // producing — the stalled records span heartbeat detection (3 x 25 ms
+    // here), follower promotion and the client's metadata refresh, so
+    // max/p99 bound the unavailability window seen by a producer.
+    {
+        use kafka_ml::broker::{AckMode, ClusterCtl, PeerConnector, ReplicaPuller};
+        use kafka_ml::orchestrator::ClusterSupervisor;
+
+        let mut t = Table::new(
+            "Produce through a forced leader failover (3 brokers, acks=replicated, 64B records)",
+            &["phase", "records", "p50 (µs)", "p99 (µs)", "max (ms)"],
+        );
+        let cfg = BrokerConfig { ack_mode: AckMode::Replicated, ..Default::default() };
+        let cores: Vec<ClusterHandle> = (0..3).map(|_| Cluster::new(cfg.clone())).collect();
+        let mut servers: Vec<Option<BrokerServer>> = cores
+            .iter()
+            .map(|c| Some(BrokerServer::start("127.0.0.1:0", c.clone()).unwrap()))
+            .collect();
+        let roster: Vec<(u32, String)> = servers
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i as u32, s.as_ref().unwrap().addr().to_string()))
+            .collect();
+        let mut ctls = Vec::new();
+        let mut pullers = Vec::new();
+        let mut supervisors = Vec::new();
+        for (i, cluster) in cores.iter().enumerate() {
+            let ctl = ClusterCtl::new(i as u32, roster.clone());
+            cluster.attach_clusterctl(
+                ctl.clone(),
+                PeerConnector::new(|addr| {
+                    Ok(RemoteBroker::connect_peer(addr, None)? as BrokerHandle)
+                }),
+            );
+            pullers.push(Some(ReplicaPuller::start(
+                cluster.clone(),
+                ctl.clone(),
+                Duration::from_millis(2),
+            )));
+            supervisors.push(Some(ClusterSupervisor::start(
+                cluster.clone(),
+                ctl.clone(),
+                Duration::from_millis(25),
+                3,
+            )));
+            ctls.push(ctl);
+        }
+        // Rendezvous placement is deterministic per name: pick a topic
+        // whose partition 0 is not led by broker 0, so the client's
+        // bootstrap broker survives the kill.
+        let view = ctls[0].view();
+        let (topic, leader) = (0..32)
+            .map(|i| format!("fo-{i}"))
+            .find_map(|n| {
+                let l = view.leader_of(&n, 0).unwrap();
+                (l != 0).then_some((n, l))
+            })
+            .expect("no candidate topic avoids broker 0 as leader");
+        let client: BrokerHandle = RemoteBroker::connect(&roster[0].1)?;
+        client.create_topic(&topic, 1)?;
+        let body = Bytes::from_vec(vec![3u8; 64]);
+        let produce_n = |n: usize| -> anyhow::Result<Vec<Duration>> {
+            let mut lats = Vec::with_capacity(n);
+            for _ in 0..n {
+                let rec = [Record::new(body.clone())];
+                let t0 = Instant::now();
+                client.produce(&topic, 0, &rec, ClientLocality::Remote, None)?;
+                lats.push(t0.elapsed());
+            }
+            Ok(lats)
+        };
+        let n = 400usize;
+        for (failover, label) in [(false, "steady state"), (true, "leader killed mid-stream")] {
+            if failover {
+                supervisors[leader as usize].take();
+                pullers[leader as usize].take();
+                if let Some(s) = servers[leader as usize].take() {
+                    s.shutdown();
+                }
+            }
+            let mut lats = produce_n(n)?;
+            lats.sort();
+            let us = |d: Duration| d.as_secs_f64() * 1e6;
+            let p50 = us(lats[lats.len() / 2]);
+            let p99 = us(lats[lats.len() * 99 / 100]);
+            let max_ms = lats[lats.len() - 1].as_secs_f64() * 1e3;
+            t.row(&[
+                label.to_string(),
+                n.to_string(),
+                format!("{p50:.1}"),
+                format!("{p99:.1}"),
+                format!("{max_ms:.1}"),
+            ]);
+            report.entry(
+                "cluster_failover",
+                &[
+                    ("failover", if failover { 1.0 } else { 0.0 }),
+                    ("records", n as f64),
+                ],
+                &[("p50_us", p50), ("p99_us", p99), ("max_ms", max_ms)],
+            );
+        }
+        // At-least-once across the retry path: nothing acked may be
+        // missing from the promoted leader's log (duplicates are fine).
+        let survived = client
+            .fetch_batch(&topic, 0, 0, 10_000, ClientLocality::Remote)?
+            .len();
+        assert!(survived >= 2 * n, "acked records lost in failover: {survived} < {}", 2 * n);
+        t.print();
+        // Stop the heartbeat/pull threads before the servers go away so
+        // teardown doesn't read as another round of failovers.
+        supervisors.clear();
+        pullers.clear();
+        for s in servers.iter_mut().filter_map(|s| s.take()) {
+            s.shutdown();
+        }
     }
 
     report.save(REPORT_PATH)?;

@@ -8,12 +8,14 @@
 //! proceed in parallel — the property the inference-scaling bench
 //! measures.
 
+use super::clusterctl::{newly_led, ClusterCtl, ClusterView};
 use super::group::{Assignor, GroupMembership, GroupState};
 use super::log::{LogConfig, StorageMode, TopicMeta};
 use super::net::{ClientLocality, NetProfile};
 use super::notify::{Waiter, WaitSet};
 use super::record::{ConsumedRecord, Record, RecordBatch};
 use super::topic::Topic;
+use super::transport::BrokerHandle;
 use super::TopicPartition;
 use crate::metrics::Registry;
 use crate::util::clock::{system_clock, SharedClock};
@@ -22,6 +24,30 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
+
+/// When must a produce be acknowledged?
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AckMode {
+    /// Ack once the leader's log has the batch (Kafka `acks=1`). The
+    /// default — and the only semantics that existed before clustering.
+    #[default]
+    Leader,
+    /// Ack only once the follower's replication pull has advanced the
+    /// partition high-watermark past the batch (Kafka `acks=all`).
+    /// Consumer visibility is gated at the watermark too, so an acked
+    /// record survives losing either replica.
+    Replicated,
+}
+
+impl AckMode {
+    pub fn parse(s: &str) -> Result<AckMode> {
+        match s {
+            "leader" => Ok(AckMode::Leader),
+            "replicated" => Ok(AckMode::Replicated),
+            other => bail!("unknown ack mode '{other}' (want leader|replicated)"),
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct BrokerConfig {
@@ -32,6 +58,10 @@ pub struct BrokerConfig {
     pub net: NetProfile,
     /// Consumer-group session timeout (heartbeat expiry).
     pub session_timeout_ms: u64,
+    /// Produce acknowledgement discipline (see [`AckMode`]). Only
+    /// consulted when a [`ClusterCtl`] is attached and the view is
+    /// clustered; a solo broker always acks at the leader.
+    pub ack_mode: AckMode,
 }
 
 impl Default for BrokerConfig {
@@ -43,9 +73,41 @@ impl Default for BrokerConfig {
             log: LogConfig::default(),
             net: NetProfile::zero(),
             session_timeout_ms: 10_000,
+            ack_mode: AckMode::Leader,
         }
     }
 }
+
+/// Dials a peer broker's wire address into a [`BrokerHandle`]. The
+/// serve path injects one wrapping `RemoteBroker::connect` (plus the
+/// platform service key when auth is on); keeping it injected means
+/// this module never depends on the wire client.
+#[derive(Clone)]
+pub struct PeerConnector(Arc<dyn Fn(&str) -> Result<BrokerHandle> + Send + Sync>);
+
+impl PeerConnector {
+    pub fn new(
+        f: impl Fn(&str) -> Result<BrokerHandle> + Send + Sync + 'static,
+    ) -> PeerConnector {
+        PeerConnector(Arc::new(f))
+    }
+
+    pub fn connect(&self, addr: &str) -> Result<BrokerHandle> {
+        (self.0)(addr)
+    }
+}
+
+impl std::fmt::Debug for PeerConnector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("PeerConnector")
+    }
+}
+
+/// How long a replicated-ack produce waits for the follower's pull
+/// before reporting the batch unreplicated. Generous against the
+/// replica puller's interval; a dead follower is normally removed from
+/// the view (dropping the gate) well before this fires.
+const REPLICATED_ACK_TIMEOUT: Duration = Duration::from_secs(5);
 
 pub type ClusterHandle = Arc<Cluster>;
 
@@ -83,6 +145,14 @@ pub struct Cluster {
     groups: Mutex<HashMap<String, GroupState>>,
     broker_up: Vec<std::sync::atomic::AtomicBool>,
     next_producer_id: AtomicU64,
+    /// Multi-process membership/placement authority; `None` until
+    /// [`Cluster::attach_clusterctl`] (a solo broker never attaches).
+    clusterctl: RwLock<Option<Arc<ClusterCtl>>>,
+    /// Dials peer brokers for transparent in-process routing.
+    peer_connector: RwLock<Option<PeerConnector>>,
+    /// Cached peer handles by wire address (dropped on routing errors
+    /// so the next route re-dials).
+    peers: Mutex<HashMap<String, BrokerHandle>>,
     pub metrics: Registry,
 }
 
@@ -102,6 +172,9 @@ impl Cluster {
             groups: Mutex::new(HashMap::new()),
             broker_up,
             next_producer_id: AtomicU64::new(1),
+            clusterctl: RwLock::new(None),
+            peer_connector: RwLock::new(None),
+            peers: Mutex::new(HashMap::new()),
             metrics: Registry::new(),
         });
         // Tiered storage: re-create every topic found under data_dir so
@@ -184,6 +257,262 @@ impl Cluster {
 
     pub fn net(&self) -> &NetProfile {
         &self.config.net
+    }
+
+    // ---- cluster membership / routing / replication -------------------------
+
+    /// Join a multi-process cluster: adopt `ctl` as the metadata
+    /// authority and `connector` as the way to dial peers. Called once
+    /// by the serve path after the wire server is listening.
+    pub fn attach_clusterctl(&self, ctl: Arc<ClusterCtl>, connector: PeerConnector) {
+        *self.peer_connector.write().unwrap() = Some(connector);
+        *self.clusterctl.write().unwrap() = Some(ctl);
+    }
+
+    pub fn clusterctl(&self) -> Option<Arc<ClusterCtl>> {
+        self.clusterctl.read().unwrap().clone()
+    }
+
+    /// The current metadata snapshot: the controller's view when
+    /// clustered, [`ClusterView::solo`] otherwise (what the
+    /// `ClusterMeta` opcode serves).
+    pub fn cluster_view(&self) -> ClusterView {
+        self.clusterctl()
+            .map(|c| c.view())
+            .unwrap_or_else(ClusterView::solo)
+    }
+
+    /// Where an in-process partition-addressed call must go: `None` =
+    /// this broker leads it (or the deployment is not clustered),
+    /// `Some((addr, handle))` = the remote leader. Platform components
+    /// (stream feeders, pods) produce and fetch through the in-process
+    /// transport; this is what fans their traffic out to partition
+    /// leaders on peer brokers instead of stranding it locally.
+    pub(crate) fn route_remote(&self, topic: &str, partition: u32) -> Option<(String, BrokerHandle)> {
+        let ctl = self.clusterctl()?;
+        let view = ctl.view();
+        if !view.is_clustered() {
+            return None;
+        }
+        let leader = view.leader_of(topic, partition)?;
+        if leader == ctl.local_id() {
+            return None;
+        }
+        let addr = view.addr_of(leader)?.to_string();
+        let handle = self.peer_handle(&addr)?;
+        Some((addr, handle))
+    }
+
+    pub(crate) fn peer_handle(&self, addr: &str) -> Option<BrokerHandle> {
+        if let Some(h) = self.peers.lock().unwrap().get(addr) {
+            return Some(h.clone());
+        }
+        let connector = self.peer_connector.read().unwrap().clone()?;
+        match connector.connect(addr) {
+            Ok(h) => {
+                self.peers.lock().unwrap().insert(addr.to_string(), h.clone());
+                Some(h)
+            }
+            Err(e) => {
+                log::warn!("dialing peer broker {addr}: {e:#}");
+                None
+            }
+        }
+    }
+
+    /// Forget a cached peer handle (after a transport failure, so the
+    /// next route re-dials instead of reusing a dead socket).
+    pub(crate) fn drop_peer(&self, addr: &str) {
+        self.peers.lock().unwrap().remove(addr);
+    }
+
+    /// Every local topic with its partition count — the iteration
+    /// surface for the replica puller and the `newly_led` promotion
+    /// diff.
+    pub fn topic_partition_counts(&self) -> Vec<(String, u32)> {
+        let mut out: Vec<(String, u32)> = self
+            .topics
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(name, t)| (name.clone(), t.num_partitions()))
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// Serve a follower's replication pull (the `ReplicaFetch` opcode):
+    /// records of `topic:partition` from `from`, plus the leader's
+    /// high-watermark after accounting the pull. `ack` is the
+    /// follower's own log end *before* this pull — everything below it
+    /// is replicated, so the leader raises the watermark there (capped
+    /// at its own log end), waking producers parked on a replicated
+    /// ack and watermark-gated consumers.
+    pub fn replica_fetch(
+        &self,
+        topic: &str,
+        partition: u32,
+        from: u64,
+        max: usize,
+        ack: u64,
+    ) -> Result<(u64, RecordBatch)> {
+        let t = self
+            .topic(topic)
+            .ok_or_else(|| anyhow!("unknown topic {topic}"))?;
+        let pm = t
+            .partition(partition)
+            .ok_or_else(|| anyhow!("unknown partition {topic}:{partition}"))?;
+        pm.lock().unwrap().advance_high_watermark(ack);
+        // The replication stream reads the raw log, NOT the
+        // watermark-gated consumer view — the follower must see records
+        // above the watermark to be the one that advances it.
+        let batch = t
+            .fetch_batch(partition, from, max)
+            .ok_or_else(|| anyhow!("unknown partition {topic}:{partition}"))?;
+        let hwm = pm.lock().unwrap().high_watermark();
+        self.metrics
+            .counter("broker.replication.served")
+            .add(batch.len() as u64);
+        Ok((hwm, batch))
+    }
+
+    /// Apply a replicated batch pulled from the leader. Offsets must
+    /// extend the local log contiguously: a duplicate (below our log
+    /// end — the pull cursor re-reading the tail) is skipped, a gap is
+    /// a replication bug surfaced loudly. Returns the local log end.
+    pub fn replica_apply(
+        &self,
+        topic: &str,
+        partition: u32,
+        records: &[(u64, Record)],
+    ) -> Result<u64> {
+        let t = self.topic_or_create(topic);
+        let pm = t
+            .partition(partition)
+            .ok_or_else(|| anyhow!("unknown partition {topic}:{partition}"))?;
+        let mut p = pm.lock().unwrap();
+        for (off, r) in records {
+            let latest = p.latest_offset();
+            if *off < latest {
+                continue;
+            }
+            if *off > latest {
+                bail!(
+                    "replication gap on {topic}:{partition}: leader offset {off}, local log end {latest}"
+                );
+            }
+            p.append(r.clone(), None);
+        }
+        self.metrics
+            .counter("broker.replication.applied")
+            .add(records.len() as u64);
+        Ok(p.latest_offset())
+    }
+
+    /// A follower mirrors the leader's high-watermark so its own
+    /// consumer view (post-promotion) gates identically.
+    pub fn advance_high_watermark(&self, topic: &str, partition: u32, hwm: u64) {
+        if let Some(t) = self.topic(topic) {
+            if let Some(pm) = t.partition(partition) {
+                pm.lock().unwrap().advance_high_watermark(hwm);
+            }
+        }
+    }
+
+    /// Adopt a metadata view pushed by a peer (the `ClusterUpdate`
+    /// opcode): install it into the controller — strictly newer epochs
+    /// win, anything else is silently ignored — and promote every
+    /// partition whose leadership moved here under the new view.
+    pub fn install_cluster_view(&self, incoming: ClusterView) -> Result<()> {
+        let ctl = self
+            .clusterctl()
+            .ok_or_else(|| anyhow!("broker is not clustered"))?;
+        if let Some((old, new)) = ctl.install(incoming) {
+            let topics = self.topic_partition_counts();
+            let promoted = newly_led(&old, &new, ctl.local_id(), &topics);
+            self.promote_partitions(&promoted);
+            log::info!("installed cluster view epoch {}", new.epoch);
+        }
+        Ok(())
+    }
+
+    /// Leader promotion: this broker now leads `partitions` (a
+    /// [`super::clusterctl::newly_led`] diff). Its copy becomes the
+    /// authoritative one, so each high-watermark jumps to the local log
+    /// end — every record acked at `acks=replicated` reached this
+    /// follower before its ack, so it is below the new watermark by
+    /// construction.
+    pub fn promote_partitions(&self, partitions: &[(String, u32)]) {
+        for (topic, pi) in partitions {
+            let Some(t) = self.topic(topic) else { continue };
+            let Some(pm) = t.partition(*pi) else { continue };
+            let mut p = pm.lock().unwrap();
+            let end = p.latest_offset();
+            p.advance_high_watermark(end);
+            log::info!("promoted to leader of {topic}:{pi} (high-watermark -> {end})");
+        }
+        if !partitions.is_empty() {
+            self.metrics
+                .counter("broker.replication.promotions")
+                .add(partitions.len() as u64);
+        }
+    }
+
+    /// The view under which replication gates acks and visibility:
+    /// `Some` only under `acks=replicated` in an actually-clustered
+    /// deployment. Gating is then **per partition** — it applies
+    /// exactly when the partition has an alive follower, so losing the
+    /// follower (the view change marks it dead) drops the gate instead
+    /// of stranding acked records invisibly below a frozen watermark.
+    fn gating_view(&self) -> Option<ClusterView> {
+        if self.config.ack_mode != AckMode::Replicated {
+            return None;
+        }
+        let view = self.clusterctl()?.view();
+        view.is_clustered().then_some(view)
+    }
+
+    /// Must this produce wait for replication (and this partition's
+    /// consumer view gate at the watermark)?
+    fn replication_gated(&self, topic: &str, partition: u32) -> bool {
+        self.gating_view()
+            .is_some_and(|v| v.follower_of(topic, partition).is_some())
+    }
+
+    /// Park until the partition's high-watermark reaches `target` (the
+    /// log end as of the appended batch) — the replicated-ack wait. The
+    /// follower's pull advances the watermark and wakes the partition
+    /// wait-set.
+    fn await_replicated(&self, t: &Arc<Topic>, topic: &str, partition: u32, target: u64) -> Result<()> {
+        let Some(ws) = t.wait_set(partition).cloned() else {
+            return Ok(());
+        };
+        let pm = t
+            .partition(partition)
+            .ok_or_else(|| anyhow!("unknown partition {topic}:{partition}"))?;
+        let deadline = Instant::now() + REPLICATED_ACK_TIMEOUT;
+        let waiter = Waiter::new();
+        ws.register(&waiter);
+        let res = loop {
+            let seen = waiter.generation();
+            let hwm = pm.lock().unwrap().high_watermark();
+            if hwm >= target {
+                break Ok(());
+            }
+            // Re-check the gate while parked: a view change that lost
+            // the follower drops the requirement mid-wait.
+            if !self.replication_gated(topic, partition) {
+                break Ok(());
+            }
+            if Instant::now() >= deadline {
+                break Err(anyhow!(
+                    "replicated-ack timeout on {topic}:{partition}: high-watermark {hwm} < {target}"
+                ));
+            }
+            waiter.wait_until(seen, deadline);
+        };
+        ws.deregister(&waiter);
+        res
     }
 
     // ---- topic management -------------------------------------------------
@@ -269,11 +598,19 @@ impl Cluster {
         // woken once per batch (not once per record) by the partition's
         // wait-set.
         let base = p.append_batch(records, producer_seq);
+        let log_end = p.latest_offset();
         drop(p);
         self.config.net.traverse(locality); // ack leg
         self.metrics.counter("broker.produce.records").add(n);
         self.metrics.counter("broker.produce.batches").inc();
-        base.ok_or_else(|| anyhow!("duplicate batch (idempotent replay)"))
+        let base = base.ok_or_else(|| anyhow!("duplicate batch (idempotent replay)"))?;
+        // acks=replicated: hold the ack until the follower's pull has
+        // advanced the high-watermark past this batch (the durability
+        // contract the kill-the-leader test relies on).
+        if self.replication_gated(topic, partition) {
+            self.await_replicated(&t, topic, partition, log_end)?;
+        }
+        Ok(base)
     }
 
     /// Read up to `max` records from one partition starting at `from` as
@@ -299,6 +636,20 @@ impl Cluster {
             bail!("unknown partition {topic}:{partition}");
         }
         self.config.net.traverse(locality);
+        // Under acks=replicated, consumers only see offsets below the
+        // replication high-watermark: a record is visible exactly when
+        // it would survive a leader failover. (Capping `max` at the
+        // watermark distance is the whole gate — the log itself is
+        // never gated, so the replication stream reads past it.)
+        let max = if self.replication_gated(topic, partition) {
+            let hwm = t
+                .partition(partition)
+                .map(|pm| pm.lock().unwrap().high_watermark())
+                .unwrap_or(0);
+            hwm.saturating_sub(from).min(max as u64) as usize
+        } else {
+            max
+        };
         let batch = t
             .fetch_batch(partition, from, max)
             .ok_or_else(|| anyhow!("unknown partition {topic}:{partition}"))?;
@@ -337,16 +688,41 @@ impl Cluster {
     }
 
     pub fn alloc_producer_id(&self) -> u64 {
-        self.next_producer_id.fetch_add(1, Ordering::SeqCst)
+        let n = self.next_producer_id.fetch_add(1, Ordering::SeqCst);
+        // When clustered, namespace ids by broker so two brokers'
+        // allocators can never hand out the same id — idempotent
+        // dedup state would otherwise cross-talk when a client's
+        // produces land on a different broker than its id came from.
+        match self.clusterctl() {
+            Some(ctl) if ctl.view().is_clustered() => ((ctl.local_id() as u64 + 1) << 48) | n,
+            _ => n,
+        }
     }
 
     // ---- wakeups ------------------------------------------------------------
 
     /// Does any `(topic, partition)` cursor in `assignments` have a
-    /// record at or behind it?
+    /// record at or behind it? Under acks=replicated "have a record"
+    /// means *visible* — behind the high-watermark — so a parked
+    /// consumer is not woken into an empty gated fetch; the follower's
+    /// pull advancing the watermark signals the same wait-set.
     pub fn any_data_ready(&self, assignments: &[(TopicPartition, u64)]) -> bool {
+        let gate_view = self.gating_view();
         assignments.iter().any(|((topic, p), pos)| {
-            self.topic(topic).map(|t| t.has_data(*p, *pos)).unwrap_or(false)
+            self.topic(topic)
+                .map(|t| {
+                    let gated = gate_view
+                        .as_ref()
+                        .is_some_and(|v| v.follower_of(topic, *p).is_some());
+                    if gated {
+                        t.partition(*p)
+                            .map(|pm| pm.lock().unwrap().high_watermark() > *pos)
+                            .unwrap_or(false)
+                    } else {
+                        t.has_data(*p, *pos)
+                    }
+                })
+                .unwrap_or(false)
         })
     }
 
@@ -1015,6 +1391,121 @@ mod tests {
         c.commit_offset("g", ("in".into(), 0), 17);
         assert_eq!(c.committed_offset("g", &("in".into(), 0)), Some(17));
         assert_eq!(c.committed_offset("g", &("in".into(), 1)), None);
+    }
+
+    // ---- replication / ack-mode tests -----------------------------------
+
+    fn no_wire_connector() -> PeerConnector {
+        PeerConnector::new(|addr: &str| -> Result<BrokerHandle> {
+            bail!("no wire in unit tests (dialed {addr})")
+        })
+    }
+
+    fn two_broker_ctl() -> Arc<ClusterCtl> {
+        ClusterCtl::new(0, vec![(0, "a:1".to_string()), (1, "b:1".to_string())])
+    }
+
+    #[test]
+    fn replica_fetch_serves_raw_log_and_advances_watermark() {
+        let c = cluster();
+        c.create_topic("t", 1);
+        for i in 0..3u8 {
+            c.produce("t", 0, &[Record::new(vec![i])], ClientLocality::InCluster, None)
+                .unwrap();
+        }
+        // First pull: nothing acked yet, all three records served.
+        let (hwm, batch) = c.replica_fetch("t", 0, 0, 100, 0).unwrap();
+        assert_eq!(hwm, 0);
+        assert_eq!(batch.len(), 3);
+        // Follower applied them: the ack advances the watermark.
+        let (hwm, batch) = c.replica_fetch("t", 0, 3, 100, 3).unwrap();
+        assert_eq!(hwm, 3);
+        assert!(batch.is_empty());
+        // The ack never outruns the leader's own log.
+        let (hwm, _) = c.replica_fetch("t", 0, 3, 100, 99).unwrap();
+        assert_eq!(hwm, 3);
+    }
+
+    #[test]
+    fn replica_apply_is_idempotent_and_gap_safe() {
+        let c = cluster();
+        c.create_topic("t", 1);
+        let recs: Vec<(u64, Record)> =
+            (0..3u64).map(|i| (i, Record::new(vec![i as u8]))).collect();
+        assert_eq!(c.replica_apply("t", 0, &recs).unwrap(), 3);
+        // Re-applying the same pull (cursor re-read) is a no-op.
+        assert_eq!(c.replica_apply("t", 0, &recs).unwrap(), 3);
+        assert_eq!(c.offsets("t", 0).unwrap(), (0, 3));
+        // A gap is a replication bug, refused loudly.
+        let err = c.replica_apply("t", 0, &[(7, Record::new(vec![9]))]).unwrap_err();
+        assert!(err.to_string().contains("replication gap"), "{err:#}");
+    }
+
+    #[test]
+    fn replicated_ack_waits_for_follower_pull() {
+        let c = Cluster::new(BrokerConfig {
+            ack_mode: AckMode::Replicated,
+            ..Default::default()
+        });
+        c.attach_clusterctl(two_broker_ctl(), no_wire_connector());
+        c.create_topic("t", 1);
+        let c2 = c.clone();
+        let prod = std::thread::spawn(move || {
+            c2.produce("t", 0, &[Record::new(vec![1])], ClientLocality::InCluster, None)
+        });
+        super::super::notify::pause(Duration::from_millis(50));
+        assert!(!prod.is_finished(), "replicated produce acked before any replication");
+        // The follower's pull loop: read from its log end, acking it.
+        let (_, batch) = c.replica_fetch("t", 0, 0, 100, 0).unwrap();
+        assert_eq!(batch.len(), 1);
+        let (hwm, _) = c.replica_fetch("t", 0, 1, 100, 1).unwrap();
+        assert_eq!(hwm, 1);
+        assert_eq!(prod.join().unwrap().unwrap(), 0);
+    }
+
+    #[test]
+    fn watermark_gates_visibility_until_replicated() {
+        let c = Cluster::new(BrokerConfig {
+            ack_mode: AckMode::Replicated,
+            ..Default::default()
+        });
+        c.attach_clusterctl(two_broker_ctl(), no_wire_connector());
+        let t = c.create_topic("t", 1);
+        {
+            let mut p = t.partition(0).unwrap().lock().unwrap();
+            p.append_batch(
+                &[Record::new(vec![1]), Record::new(vec![2]), Record::new(vec![3])],
+                None,
+            );
+        }
+        // Nothing replicated: nothing visible, no wakeup-worthy data.
+        assert!(c.fetch("t", 0, 0, 10, ClientLocality::InCluster).unwrap().is_empty());
+        assert!(!c.any_data_ready(&[(("t".into(), 0), 0)]));
+        c.advance_high_watermark("t", 0, 2);
+        assert_eq!(c.fetch("t", 0, 0, 10, ClientLocality::InCluster).unwrap().len(), 2);
+        assert!(c.any_data_ready(&[(("t".into(), 0), 0)]));
+        // Promotion makes the local copy authoritative: all visible.
+        c.promote_partitions(&[("t".to_string(), 0)]);
+        assert_eq!(c.fetch("t", 0, 0, 10, ClientLocality::InCluster).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn dead_follower_drops_the_replication_gate() {
+        let c = Cluster::new(BrokerConfig {
+            ack_mode: AckMode::Replicated,
+            ..Default::default()
+        });
+        let ctl = two_broker_ctl();
+        ctl.mark_dead(1);
+        c.attach_clusterctl(ctl, no_wire_connector());
+        c.create_topic("t", 1);
+        // No alive follower: availability wins — the ack is immediate
+        // and the single surviving copy is fully visible.
+        let t0 = Instant::now();
+        c.produce("t", 0, &[Record::new(vec![1])], ClientLocality::InCluster, None)
+            .unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert_eq!(c.fetch("t", 0, 0, 10, ClientLocality::InCluster).unwrap().len(), 1);
     }
 
     #[test]

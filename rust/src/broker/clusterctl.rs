@@ -1,0 +1,444 @@
+//! Cluster membership + partition placement metadata.
+//!
+//! A multi-broker deployment runs one [`crate::broker::Cluster`] per OS
+//! process (`serve --broker-id N --cluster-peers ...`); this module is
+//! the piece that makes them *one* cluster:
+//!
+//! * **Roster** — every broker's `(id, addr, alive)` row.
+//! * **Placement** — each `(topic, partition)` has a **leader** and a
+//!   **follower**, chosen by rendezvous (highest-random-weight)
+//!   hashing over the *alive* brokers: every broker scores the key
+//!   `topic|partition|broker`, the best score leads, the runner-up
+//!   follows. Rendezvous hashing gives the property failover needs:
+//!   when a broker dies, only the partitions it led or followed move —
+//!   everything else keeps its placement, so a promotion does not
+//!   reshuffle the whole cluster.
+//! * **Epoch** — a monotonically increasing version stamped on every
+//!   metadata change. Clients cache the map and send their epoch with
+//!   every partition-addressed request; a broker that does not lead the
+//!   partition under the *current* epoch answers
+//!   [`not_leader`]`(..)` instead of silently serving (or accepting)
+//!   stale data. That error is the split-brain fence: a deposed leader
+//!   cannot accept produces from clients that still believe in it, and
+//!   a client holding a stale map is told to refresh and re-route.
+//!
+//! The view travels over the wire (the `ClusterMeta` opcode serves it,
+//! `ClusterUpdate` pushes a newer one) and is deliberately tiny: the
+//! assignment map is *derived* from the roster by pure hashing, so the
+//! epoch + roster is the entire metadata state — no per-partition table
+//! to replicate or reconcile.
+
+use super::topic::fxhash;
+use anyhow::{bail, Result};
+use std::sync::RwLock;
+
+/// One broker's row in the roster.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BrokerInfo {
+    pub id: u32,
+    /// Wire-protocol address (`host:port`) peers and clients dial.
+    pub addr: String,
+    pub alive: bool,
+}
+
+/// An immutable snapshot of the cluster metadata: the roster plus the
+/// epoch it was published under. Placement is derived on demand.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ClusterView {
+    pub epoch: u64,
+    pub brokers: Vec<BrokerInfo>,
+}
+
+/// Rendezvous score of broker `id` for `topic`/`partition` — the whole
+/// placement function. Mixing the broker id *into* the hashed key (not
+/// XORing it after) is what makes scores independent across brokers.
+fn score(topic: &str, partition: u32, id: u32) -> u64 {
+    // Place by the client-visible name: the broker namespaces tenant
+    // topics internally (`{tenant}::{topic}`), but a tenant's client
+    // routes by the bare name it knows — stripping the namespace here
+    // keeps both sides agreeing on who leads. (Two tenants' same-named
+    // topics sharing a placement is harmless; placement is only load
+    // spreading.)
+    let topic = topic.rsplit_once("::").map_or(topic, |(_, t)| t);
+    let mut key = Vec::with_capacity(topic.len() + 9);
+    key.extend_from_slice(topic.as_bytes());
+    key.push(b'|');
+    key.extend_from_slice(&partition.to_le_bytes());
+    key.extend_from_slice(&id.to_le_bytes());
+    fxhash(&key)
+}
+
+impl ClusterView {
+    /// The single-process view: no peers, epoch 0. An empty roster
+    /// means "not clustered" — no routing, no fencing.
+    pub fn solo() -> ClusterView {
+        ClusterView::default()
+    }
+
+    pub fn is_clustered(&self) -> bool {
+        self.brokers.len() > 1
+    }
+
+    /// Alive brokers ranked by rendezvous score for the partition,
+    /// best first.
+    fn ranked(&self, topic: &str, partition: u32) -> Vec<u32> {
+        let mut alive: Vec<&BrokerInfo> = self.brokers.iter().filter(|b| b.alive).collect();
+        // Sort by score descending; break exact ties by id so the
+        // ranking is total and identical on every broker.
+        alive.sort_by(|a, b| {
+            score(topic, partition, b.id)
+                .cmp(&score(topic, partition, a.id))
+                .then(a.id.cmp(&b.id))
+        });
+        alive.iter().map(|b| b.id).collect()
+    }
+
+    /// The broker that leads `topic`/`partition` under this view.
+    pub fn leader_of(&self, topic: &str, partition: u32) -> Option<u32> {
+        self.ranked(topic, partition).first().copied()
+    }
+
+    /// The runner-up broker replicating `topic`/`partition` (`None`
+    /// when fewer than two brokers are alive).
+    pub fn follower_of(&self, topic: &str, partition: u32) -> Option<u32> {
+        self.ranked(topic, partition).get(1).copied()
+    }
+
+    pub fn addr_of(&self, id: u32) -> Option<&str> {
+        self.brokers
+            .iter()
+            .find(|b| b.id == id)
+            .map(|b| b.addr.as_str())
+    }
+
+    pub fn is_alive(&self, id: u32) -> bool {
+        self.brokers.iter().any(|b| b.id == id && b.alive)
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.brokers.iter().filter(|b| b.alive).count()
+    }
+}
+
+/// The mutable metadata authority one broker process holds: its own id
+/// plus the latest [`ClusterView`] it believes in. Thread-safe; cheap
+/// to `Arc` across the wire server, the replica puller and the
+/// failover supervisor.
+#[derive(Debug)]
+pub struct ClusterCtl {
+    local_id: u32,
+    view: RwLock<ClusterView>,
+}
+
+/// Prefix of the fencing error every partition-addressed request can
+/// receive. Clients match on it ([`is_not_leader`]) to refresh their
+/// metadata and re-route instead of failing the call.
+pub const NOT_LEADER_PREFIX: &str = "not-leader:";
+
+/// Build the fencing answer: carries the answering broker's current
+/// epoch and (when known) the leader's address, so one refresh round
+/// trip is enough to re-route.
+pub fn not_leader(epoch: u64, leader_addr: Option<&str>) -> anyhow::Error {
+    anyhow::anyhow!(
+        "{NOT_LEADER_PREFIX} epoch={epoch} leader={}",
+        leader_addr.unwrap_or("?")
+    )
+}
+
+/// Does this error message signal the split-brain fence?
+pub fn is_not_leader(msg: &str) -> bool {
+    msg.contains(NOT_LEADER_PREFIX)
+}
+
+impl ClusterCtl {
+    /// A fresh controller: every listed broker alive, epoch 1 (epoch 0
+    /// is the solo view, so any clustered view outranks it).
+    pub fn new(local_id: u32, brokers: Vec<(u32, String)>) -> std::sync::Arc<ClusterCtl> {
+        let brokers = brokers
+            .into_iter()
+            .map(|(id, addr)| BrokerInfo { id, addr, alive: true })
+            .collect();
+        std::sync::Arc::new(ClusterCtl {
+            local_id,
+            view: RwLock::new(ClusterView { epoch: 1, brokers }),
+        })
+    }
+
+    pub fn local_id(&self) -> u32 {
+        self.local_id
+    }
+
+    pub fn view(&self) -> ClusterView {
+        self.view.read().unwrap().clone()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.view.read().unwrap().epoch
+    }
+
+    pub fn local_addr(&self) -> Option<String> {
+        self.view
+            .read()
+            .unwrap()
+            .addr_of(self.local_id)
+            .map(str::to_string)
+    }
+
+    /// Mark a broker dead and bump the epoch. Returns `(old, new)`
+    /// views when anything changed (`None` when the broker was already
+    /// dead or unknown) — the caller diffs them to find newly-led
+    /// partitions to promote.
+    pub fn mark_dead(&self, id: u32) -> Option<(ClusterView, ClusterView)> {
+        self.flip_alive(id, false)
+    }
+
+    /// Mark a broker alive again (a restarted process re-joining).
+    pub fn mark_alive(&self, id: u32) -> Option<(ClusterView, ClusterView)> {
+        self.flip_alive(id, true)
+    }
+
+    fn flip_alive(&self, id: u32, alive: bool) -> Option<(ClusterView, ClusterView)> {
+        let mut view = self.view.write().unwrap();
+        let b = view.brokers.iter_mut().find(|b| b.id == id)?;
+        if b.alive == alive {
+            return None;
+        }
+        let old = ClusterView { epoch: view.epoch, brokers: view.brokers.clone() };
+        let b = view.brokers.iter_mut().find(|b| b.id == id).unwrap();
+        b.alive = alive;
+        view.epoch += 1;
+        Some((old, view.clone()))
+    }
+
+    /// Adopt a view pushed by a peer (the `ClusterUpdate` opcode).
+    /// Strictly newer epochs win; anything else is ignored — epochs
+    /// only move forward, so two supervisors racing converge on the
+    /// higher one. Returns `(old, new)` when adopted.
+    pub fn install(&self, incoming: ClusterView) -> Option<(ClusterView, ClusterView)> {
+        let mut view = self.view.write().unwrap();
+        if incoming.epoch <= view.epoch {
+            return None;
+        }
+        let old = view.clone();
+        *view = incoming;
+        Some((old, view.clone()))
+    }
+
+    /// The split-brain fence, checked before serving any
+    /// partition-addressed request off the wire. Refuses when this
+    /// broker does not lead the partition under the current view, or
+    /// when the caller's epoch disagrees with ours (either side stale:
+    /// one metadata refresh resolves it).
+    pub fn check_leader(&self, topic: &str, partition: u32, caller_epoch: Option<u64>) -> Result<()> {
+        let view = self.view.read().unwrap();
+        let leader = view.leader_of(topic, partition);
+        let leads = leader == Some(self.local_id);
+        let epoch_ok = match caller_epoch {
+            Some(e) => e == view.epoch,
+            None => true, // legacy / non-clustered caller
+        };
+        if leads && epoch_ok {
+            return Ok(());
+        }
+        let addr = leader.and_then(|id| view.addr_of(id));
+        Err(not_leader(view.epoch, addr))
+    }
+}
+
+/// Parse `--cluster-peers`: comma-separated `id@host:port` entries,
+/// e.g. `0@10.0.0.1:9092,1@10.0.0.2:9092,2@10.0.0.3:9092`.
+pub fn parse_peers(spec: &str) -> Result<Vec<(u32, String)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let Some((id, addr)) = part.split_once('@') else {
+            bail!("peer '{part}' is not id@host:port");
+        };
+        let id: u32 = id
+            .parse()
+            .map_err(|e| anyhow::anyhow!("peer id in '{part}': {e}"))?;
+        if addr.is_empty() {
+            bail!("peer '{part}' has an empty address");
+        }
+        if out.iter().any(|(other, _)| *other == id) {
+            bail!("duplicate broker id {id} in --cluster-peers");
+        }
+        out.push((id, addr.to_string()));
+    }
+    if out.is_empty() {
+        bail!("--cluster-peers named no brokers");
+    }
+    Ok(out)
+}
+
+/// Partitions whose leadership `local` *gained* between two views —
+/// the promotion set. The new leader raises each one's high-watermark
+/// to its log end (its copy is now the authoritative one).
+pub fn newly_led(
+    old: &ClusterView,
+    new: &ClusterView,
+    local: u32,
+    topics: &[(String, u32)],
+) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    for (topic, partitions) in topics {
+        for p in 0..*partitions {
+            if new.leader_of(topic, p) == Some(local) && old.leader_of(topic, p) != Some(local) {
+                out.push((topic.clone(), p));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three() -> std::sync::Arc<ClusterCtl> {
+        ClusterCtl::new(
+            0,
+            vec![
+                (0, "h0:9092".to_string()),
+                (1, "h1:9092".to_string()),
+                (2, "h2:9092".to_string()),
+            ],
+        )
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_spread() {
+        let view = three().view();
+        let mut led = std::collections::BTreeSet::new();
+        for p in 0..32 {
+            let l = view.leader_of("events", p).unwrap();
+            assert_eq!(view.leader_of("events", p), Some(l)); // stable
+            let f = view.follower_of("events", p).unwrap();
+            assert_ne!(l, f, "partition {p}: leader follows itself");
+            led.insert(l);
+        }
+        // 32 partitions over 3 brokers: everyone leads something.
+        assert_eq!(led.len(), 3, "leaders not spread: {led:?}");
+    }
+
+    #[test]
+    fn rendezvous_moves_only_the_dead_brokers_partitions() {
+        let ctl = three();
+        let before = ctl.view();
+        let (_, after) = ctl.mark_dead(2).unwrap();
+        for p in 0..64 {
+            let old_leader = before.leader_of("t", p).unwrap();
+            let new_leader = after.leader_of("t", p).unwrap();
+            if old_leader != 2 {
+                // Minimal-disruption property: survivors keep their
+                // partitions.
+                assert_eq!(old_leader, new_leader, "partition {p} moved needlessly");
+            } else {
+                assert_ne!(new_leader, 2);
+                // The old follower is the natural heir.
+                assert_eq!(Some(new_leader), before.follower_of("t", p));
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_bumps_on_every_membership_change() {
+        let ctl = three();
+        assert_eq!(ctl.epoch(), 1);
+        assert!(ctl.mark_dead(1).is_some());
+        assert_eq!(ctl.epoch(), 2);
+        assert!(ctl.mark_dead(1).is_none()); // already dead: no bump
+        assert_eq!(ctl.epoch(), 2);
+        assert!(ctl.mark_alive(1).is_some());
+        assert_eq!(ctl.epoch(), 3);
+    }
+
+    #[test]
+    fn fencing_refuses_non_leaders_and_stale_epochs() {
+        let ctl = three();
+        let view = ctl.view();
+        // Find a partition broker 0 leads and one it does not.
+        let led = (0..64).find(|&p| view.leader_of("t", p) == Some(0)).unwrap();
+        let not_led = (0..64).find(|&p| view.leader_of("t", p) != Some(0)).unwrap();
+        assert!(ctl.check_leader("t", led, Some(1)).is_ok());
+        assert!(ctl.check_leader("t", led, None).is_ok()); // legacy caller
+        let e = ctl.check_leader("t", not_led, Some(1)).unwrap_err();
+        assert!(is_not_leader(&format!("{e:#}")), "{e:#}");
+        // Wrong epoch is refused even on the leader.
+        let e = ctl.check_leader("t", led, Some(99)).unwrap_err();
+        assert!(is_not_leader(&format!("{e:#}")));
+    }
+
+    #[test]
+    fn deposed_leader_is_fenced_after_promotion() {
+        let ctl = three();
+        let view = ctl.view();
+        let p = (0..64).find(|&p| view.leader_of("t", p) == Some(0)).unwrap();
+        assert!(ctl.check_leader("t", p, Some(1)).is_ok());
+        // The supervisor (on a surviving broker) declares broker 0
+        // dead and pushes the new view here — broker 0 adopting it must
+        // start refusing the partitions it lost.
+        let mut pushed = view.clone();
+        pushed.epoch = 5;
+        pushed.brokers[0].alive = false;
+        assert!(ctl.install(pushed).is_some());
+        let e = ctl.check_leader("t", p, Some(1)).unwrap_err();
+        assert!(is_not_leader(&format!("{e:#}")));
+    }
+
+    #[test]
+    fn install_ignores_stale_views() {
+        let ctl = three();
+        ctl.mark_dead(2).unwrap(); // epoch 2
+        let stale = ClusterView { epoch: 1, brokers: ctl.view().brokers };
+        assert!(ctl.install(stale).is_none());
+        assert_eq!(ctl.epoch(), 2);
+        let equal = ClusterView { epoch: 2, brokers: ctl.view().brokers };
+        assert!(ctl.install(equal).is_none());
+    }
+
+    #[test]
+    fn newly_led_diff_names_exactly_the_promotions() {
+        let ctl = ClusterCtl::new(
+            1,
+            vec![(0, "a".into()), (1, "b".into()), (2, "c".into())],
+        );
+        let before = ctl.view();
+        let (old, new) = ctl.mark_dead(0).unwrap();
+        let topics = vec![("t".to_string(), 64u32)];
+        let promoted = newly_led(&old, &new, 1, &topics);
+        for (topic, p) in &promoted {
+            assert_eq!(before.leader_of(topic, *p), Some(0));
+            assert_eq!(new.leader_of(topic, *p), Some(1));
+        }
+        // Every partition broker 0 led whose heir is broker 1 appears.
+        for p in 0..64 {
+            let inherits =
+                before.leader_of("t", p) == Some(0) && new.leader_of("t", p) == Some(1);
+            assert_eq!(promoted.contains(&("t".to_string(), p)), inherits, "partition {p}");
+        }
+    }
+
+    #[test]
+    fn solo_view_is_not_clustered() {
+        let v = ClusterView::solo();
+        assert!(!v.is_clustered());
+        assert_eq!(v.leader_of("t", 0), None);
+        assert_eq!(v.epoch, 0);
+    }
+
+    #[test]
+    fn parse_peers_formats() {
+        let peers = parse_peers("0@a:1,1@b:2,2@c:3").unwrap();
+        assert_eq!(peers.len(), 3);
+        assert_eq!(peers[1], (1, "b:2".to_string()));
+        assert!(parse_peers("").is_err());
+        assert!(parse_peers("0@a:1,0@b:2").is_err()); // duplicate id
+        assert!(parse_peers("nope").is_err());
+        assert!(parse_peers("x@a:1").is_err());
+        assert!(parse_peers("1@").is_err());
+    }
+}

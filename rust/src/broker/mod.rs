@@ -50,7 +50,16 @@
 //!   latency) so the Tables I/II latency columns can be reproduced on a
 //!   single machine — see DESIGN.md §Table I/II latency model. On the
 //!   socket path the real network replaces the simulation
-//!   ([`ClientLocality::Remote`] never sleeps).
+//!   ([`ClientLocality::Remote`] never sleeps);
+//! * a **multi-process cluster** ([`clusterctl`], [`replication`]):
+//!   N broker processes (`serve --broker-id N --cluster-peers ...`)
+//!   share one epoch-versioned membership view; every partition gets a
+//!   leader and a follower by rendezvous hashing, clients fetch the map
+//!   (`ClusterMeta`) and route produces/fetches straight to each
+//!   partition's leader, the follower pulls the leader's log over the
+//!   wire (`ReplicaFetch`) maintaining a per-partition high-watermark,
+//!   and a failed leader is detected by heartbeats, fenced by the epoch
+//!   (`not-leader` answers), and replaced by its follower.
 //!
 //! # Data-flow scheduling: the notify/wakeup architecture
 //!
@@ -82,6 +91,22 @@
 //!  Cluster::join/leave/heartbeat/expire
 //!        └── GroupState::rebalance ─► group WaitSet ─► parked members
 //!                                       refresh assignment immediately
+//!
+//!  ── replication path (acks=replicated; one follower per partition) ──
+//!
+//!  leader Cluster::produce ─► Partition::append_batch
+//!        │                          ▲
+//!        │ (ack parked on the       ║ ReplicaPuller (follower process)
+//!        │  partition WaitSet       ║   pulls ReplicaFetch(from=its log
+//!        │  until hwm ≥ batch end)  ║   end, ack=applied) over the wire
+//!        ▼                          ║
+//!  advance_high_watermark ◄── ack ══╝
+//!        │
+//!        ├── notify_all ─► parked producer acks resolve
+//!        └── consumer fetches gate at hwm (visible ⇔ survivable);
+//!            failover: supervisor bumps epoch ─► follower promotes,
+//!            hwm jumps to its log end ─► fenced old leader answers
+//!            "not-leader" ─► clients refresh metadata and re-route
 //! ```
 //!
 //! Protocol, in order: **register** the waiter with every relevant
@@ -107,6 +132,7 @@
 //! generation-stable instead of a group-wide wakeup storm.
 
 mod cluster;
+pub mod clusterctl;
 mod consumer;
 mod group;
 pub mod log;
@@ -115,11 +141,13 @@ pub mod notify;
 mod partition;
 mod producer;
 mod record;
+pub mod replication;
 mod topic;
 pub mod transport;
 pub mod wire;
 
-pub use cluster::{BrokerConfig, Cluster, ClusterHandle, DataWaitGuard};
+pub use cluster::{AckMode, BrokerConfig, Cluster, ClusterHandle, DataWaitGuard, PeerConnector};
+pub use clusterctl::{ClusterCtl, ClusterView};
 pub use consumer::Consumer;
 pub use group::{Assignor, GroupMembership};
 pub use log::{CleanupPolicy, LogConfig, SegmentedLog, StorageMode, TopicMeta};
@@ -128,6 +156,7 @@ pub use notify::{WaitSet, Waiter};
 pub use partition::Partition;
 pub use producer::{Acks, Producer, ProducerConfig};
 pub use record::{ConsumedRecord, Record, RecordBatch};
+pub use replication::ReplicaPuller;
 pub use topic::Topic;
 pub use transport::{BrokerHandle, BrokerTransport, ProduceHandle, ProduceOutcome};
 pub use wire::{BrokerServer, RemoteBroker};

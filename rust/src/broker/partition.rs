@@ -27,6 +27,11 @@ pub struct Partition {
     pub isr: Vec<usize>,
     log: SegmentedLog,
     producer_seqs: ProducerSeqs,
+    /// Replication high-watermark: offsets below this are known
+    /// replicated to the follower. Under `acks=replicated` both produce
+    /// acks and consumer visibility gate here; under `acks=leader` it
+    /// trails `latest_offset` and nothing reads it.
+    high_watermark: u64,
     /// Consumers parked on this partition; appends signal it. Shared
     /// (`Arc`) so [`super::Topic`] can hand out registration handles
     /// without taking the partition mutex.
@@ -49,6 +54,7 @@ impl Partition {
         // silently to in-memory (which would break durability).
         let log = SegmentedLog::open(config, clock, topic, index)
             .unwrap_or_else(|e| panic!("opening log for {topic}:{index}: {e:#}"));
+        let high_watermark = log.latest_offset();
         Partition {
             topic: topic.to_string(),
             index,
@@ -57,7 +63,27 @@ impl Partition {
             isr,
             log,
             producer_seqs: ProducerSeqs::default(),
+            high_watermark,
             wait_set: Arc::new(WaitSet::new()),
+        }
+    }
+
+    /// Offsets below this are replicated to the follower. Recovered
+    /// logs start with the watermark at `latest_offset` (everything on
+    /// disk is the durable prefix by definition).
+    pub fn high_watermark(&self) -> u64 {
+        self.high_watermark
+    }
+
+    /// Raise the high-watermark (monotonic; never past `latest_offset`)
+    /// and wake parked waiters — producers blocked on a replicated ack
+    /// and watermark-gated consumers both park on this partition's
+    /// wait-set.
+    pub fn advance_high_watermark(&mut self, hwm: u64) {
+        let hwm = hwm.min(self.log.latest_offset());
+        if hwm > self.high_watermark {
+            self.high_watermark = hwm;
+            self.wait_set.notify_all();
         }
     }
 
@@ -285,6 +311,26 @@ mod tests {
         p.handle_broker_down(1);
         p.handle_broker_down(2);
         assert_eq!(p.handle_broker_down(0), None);
+    }
+
+    #[test]
+    fn high_watermark_is_monotonic_and_capped() {
+        use crate::broker::notify::Waiter;
+        let mut p = part();
+        assert_eq!(p.high_watermark(), 0);
+        p.append(Record::new(vec![1]), None);
+        p.append(Record::new(vec![2]), None);
+        let waiter = Waiter::new();
+        p.wait_set().register(&waiter);
+        let seen = waiter.generation();
+        p.advance_high_watermark(1);
+        assert_eq!(p.high_watermark(), 1);
+        // A raise signals parked waiters (replicated-ack producers).
+        assert!(waiter.wait_until(seen, std::time::Instant::now()));
+        p.advance_high_watermark(99); // capped at latest_offset
+        assert_eq!(p.high_watermark(), 2);
+        p.advance_high_watermark(0); // monotonic: never regresses
+        assert_eq!(p.high_watermark(), 2);
     }
 
     #[test]

@@ -279,6 +279,24 @@ impl Producer {
                 // broker-side dedup: the batch is durable. Success.
                 Ok(())
             }
+            ProduceOutcome::Rejected(msg) if super::clusterctl::is_not_leader(&msg) => {
+                if matches!(self.config.acks, Acks::AtMostOnce) {
+                    return Ok(()); // fire and forget
+                }
+                log::debug!(
+                    "produce batch at {}:{} hit a deposed leader; re-driving via fresh routing",
+                    key.0,
+                    key.1
+                );
+                // The fence refused the batch BEFORE touching the log,
+                // so nothing landed and the original seq stays exact.
+                // Re-drive synchronously — the transport's produce()
+                // path refreshes cluster metadata and re-routes to the
+                // new leader — then settle the rest of the window,
+                // which rode the same stale route.
+                self.retry_sync(key, &inflight.batch, inflight.seq)?;
+                self.drain_partition(key)
+            }
             ProduceOutcome::Rejected(msg) => match self.config.acks {
                 Acks::AtMostOnce => Ok(()), // fire and forget
                 Acks::AtLeastOnce => {

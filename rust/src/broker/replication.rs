@@ -1,0 +1,280 @@
+//! Follower-side replication: the pull loop that mirrors led
+//! partitions onto their followers.
+//!
+//! Replication is **pull-based** (like Kafka's follower fetchers): each
+//! broker runs one [`ReplicaPuller`] thread that, every `interval`,
+//! walks its local topics, finds the partitions the current
+//! [`ClusterView`](super::clusterctl::ClusterView) says it *follows*,
+//! and issues a `ReplicaFetch` against each one's leader carrying
+//!
+//! * `from` — the follower's log end (where its copy stops), and
+//! * `ack`  — the same value, acknowledging everything below it as
+//!   applied. The leader raises the partition **high-watermark** to the
+//!   ack (capped at its own log end), which resolves producers parked
+//!   on an `acks=replicated` ack and unblocks watermark-gated
+//!   consumers.
+//!
+//! Records travel as ordinary segment-format frames (the
+//! `broker/log/format.rs` framing *is* the replication wire format) and
+//! are applied contiguously: re-reads of the tail are skipped as
+//! duplicates, a gap aborts the partition's pull loudly
+//! ([`super::Cluster::replica_apply`]).
+//!
+//! Topic discovery is mostly free: `create_topic` fans out to every
+//! alive broker, so a follower normally already has the topic before
+//! the first record lands. The puller additionally runs a periodic
+//! discovery sweep (peer `topic_names`) as the catch-up path for topics
+//! created while this broker was down.
+
+use super::cluster::ClusterHandle;
+use super::clusterctl::ClusterCtl;
+use crate::exec::CancelToken;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Default pull cadence. Low enough that an `acks=replicated` produce
+/// ack costs one-ish interval; the pull itself is one wire round trip
+/// per followed partition, empty most rounds.
+pub const DEFAULT_PULL_INTERVAL: Duration = Duration::from_millis(20);
+
+/// Records per pull round per partition.
+const PULL_BATCH_MAX: usize = 4096;
+
+/// Discovery sweep every N pull rounds (~every second at the default
+/// interval) — the catch-up path for topics created while down.
+const DISCOVERY_ROUNDS: u64 = 50;
+
+/// Handle on the background pull thread; dropping it cancels and joins.
+#[derive(Debug)]
+pub struct ReplicaPuller {
+    cancel: CancelToken,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ReplicaPuller {
+    pub fn start(
+        cluster: ClusterHandle,
+        ctl: Arc<ClusterCtl>,
+        interval: Duration,
+    ) -> ReplicaPuller {
+        let cancel = CancelToken::new();
+        let token = cancel.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("replica-puller-{}", ctl.local_id()))
+            .spawn(move || {
+                let mut round: u64 = 0;
+                // Discover before the first sleep so a restarted broker
+                // catches up immediately.
+                loop {
+                    pull_round(&cluster, &ctl, round);
+                    round += 1;
+                    if !token.sleep(interval) {
+                        return;
+                    }
+                }
+            })
+            .expect("spawning replica-puller thread");
+        ReplicaPuller { cancel, handle: Some(handle) }
+    }
+}
+
+impl Drop for ReplicaPuller {
+    fn drop(&mut self) {
+        self.cancel.cancel();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn pull_round(cluster: &ClusterHandle, ctl: &Arc<ClusterCtl>, round: u64) {
+    let view = ctl.view();
+    if !view.is_clustered() {
+        return;
+    }
+    let local = ctl.local_id();
+    if round % DISCOVERY_ROUNDS == 0 {
+        discover_topics(cluster, &view, local);
+    }
+    for (topic, partitions) in cluster.topic_partition_counts() {
+        for p in 0..partitions {
+            if view.follower_of(&topic, p) != Some(local) {
+                continue;
+            }
+            let Some(leader) = view.leader_of(&topic, p) else {
+                continue;
+            };
+            let Some(addr) = view.addr_of(leader).map(str::to_string) else {
+                continue;
+            };
+            let Some(peer) = cluster.peer_handle(&addr) else {
+                continue;
+            };
+            let Ok((_, latest)) = cluster.offsets(&topic, p) else {
+                continue;
+            };
+            match peer.replica_fetch(&topic, p, latest, PULL_BATCH_MAX, latest) {
+                Ok((leader_hwm, records)) => {
+                    if !records.is_empty() {
+                        if let Err(e) = cluster.replica_apply(&topic, p, &records) {
+                            log::warn!("replicating {topic}:{p} from broker {leader}: {e:#}");
+                            continue;
+                        }
+                    }
+                    // Mirror the leader's watermark (capped at our log
+                    // end) so a promoted follower gates identically.
+                    cluster.advance_high_watermark(&topic, p, leader_hwm);
+                }
+                Err(e) => {
+                    // The leader may be mid-failover; the next round
+                    // re-resolves it under the (possibly new) view.
+                    log::debug!("replica pull {topic}:{p} from {addr}: {e:#}");
+                    cluster.drop_peer(&addr);
+                }
+            }
+        }
+    }
+}
+
+/// Create (locally, with matching partition counts) any topic an alive
+/// peer has that we don't — the catch-up for topics created while this
+/// broker was down. Inherent `create_topic` is local-only, so this
+/// never fans back out.
+fn discover_topics(
+    cluster: &ClusterHandle,
+    view: &super::clusterctl::ClusterView,
+    local: u32,
+) {
+    for b in view.brokers.iter().filter(|b| b.alive && b.id != local) {
+        let Some(peer) = cluster.peer_handle(&b.addr) else {
+            continue;
+        };
+        let names = match peer.topic_names() {
+            Ok(names) => names,
+            Err(e) => {
+                log::debug!("topic discovery against broker {}: {e:#}", b.id);
+                cluster.drop_peer(&b.addr);
+                continue;
+            }
+        };
+        for t in names {
+            if cluster.topic(&t).is_some() {
+                continue;
+            }
+            if let Ok(Some(n)) = peer.topic_partitions(&t) {
+                cluster.create_topic(&t, n.max(1));
+                log::info!("discovered topic '{t}' ({n} partitions) from broker {}", b.id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::cluster::{AckMode, BrokerConfig, Cluster, PeerConnector};
+    use crate::broker::clusterctl::ClusterView;
+    use crate::broker::net::ClientLocality;
+    use crate::broker::record::Record;
+    use crate::broker::transport::BrokerHandle;
+    use std::time::Instant;
+
+    /// Two in-process clusters wired to each other through the
+    /// in-process transport — the pull loop runs exactly as it would
+    /// over the wire, minus the sockets.
+    fn linked_pair(ack: AckMode) -> (ClusterHandle, ClusterHandle, Arc<ClusterCtl>, Arc<ClusterCtl>) {
+        let cfg = BrokerConfig { ack_mode: ack, ..Default::default() };
+        let a = Cluster::new(cfg.clone());
+        let b = Cluster::new(cfg);
+        let roster = vec![(0, "addr-a".to_string()), (1, "addr-b".to_string())];
+        let ctl_a = ClusterCtl::new(0, roster.clone());
+        let ctl_b = ClusterCtl::new(1, roster);
+        let (a2, b2) = (a.clone(), b.clone());
+        a.attach_clusterctl(
+            ctl_a.clone(),
+            PeerConnector::new(move |addr| match addr {
+                "addr-b" => Ok(b2.clone() as BrokerHandle),
+                other => anyhow::bail!("unknown peer {other}"),
+            }),
+        );
+        b.attach_clusterctl(
+            ctl_b.clone(),
+            PeerConnector::new(move |addr| match addr {
+                "addr-a" => Ok(a2.clone() as BrokerHandle),
+                other => anyhow::bail!("unknown peer {other}"),
+            }),
+        );
+        (a, b, ctl_a, ctl_b)
+    }
+
+    /// Rendezvous placement is deterministic per topic name, so scan
+    /// candidate names for one with a partition led by `id`.
+    fn topic_led_by(view: &ClusterView, partitions: u32, id: u32) -> (String, u32) {
+        for i in 0..32 {
+            let name = format!("repl-t{i}");
+            if let Some(p) = (0..partitions).find(|&p| view.leader_of(&name, p) == Some(id)) {
+                return (name, p);
+            }
+        }
+        panic!("no candidate topic has a partition led by broker {id}");
+    }
+
+    #[test]
+    fn puller_mirrors_led_partitions_onto_the_follower() {
+        let (a, b, ctl_a, ctl_b) = linked_pair(AckMode::Leader);
+        let (topic, p) = topic_led_by(&ctl_a.view(), 8, 0);
+        a.create_topic(&topic, 8);
+        b.create_topic(&topic, 8);
+        for i in 0..5u8 {
+            a.produce(&topic, p, &[Record::new(vec![i])], ClientLocality::InCluster, None)
+                .unwrap();
+        }
+        let _puller = ReplicaPuller::start(b.clone(), ctl_b, Duration::from_millis(5));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while b.offsets(&topic, p).map(|(_, l)| l).unwrap_or(0) < 5 {
+            assert!(Instant::now() < deadline, "follower never caught up");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let got = b.fetch(&topic, p, 0, 10, ClientLocality::InCluster).unwrap();
+        assert_eq!(got.len(), 5);
+        for (i, r) in got.iter().enumerate() {
+            assert_eq!(r.record.value, vec![i as u8]);
+        }
+    }
+
+    #[test]
+    fn puller_releases_replicated_acks() {
+        let (a, b, ctl_a, ctl_b) = linked_pair(AckMode::Replicated);
+        let (topic, p) = topic_led_by(&ctl_a.view(), 8, 0);
+        a.create_topic(&topic, 8);
+        b.create_topic(&topic, 8);
+        let _puller = ReplicaPuller::start(b.clone(), ctl_b, Duration::from_millis(5));
+        // The produce parks until the pull acks — end to end this must
+        // resolve well inside the replicated-ack timeout.
+        let t0 = Instant::now();
+        let base = a
+            .produce(&topic, p, &[Record::new(vec![42u8])], ClientLocality::InCluster, None)
+            .unwrap();
+        assert_eq!(base, 0);
+        assert!(t0.elapsed() < Duration::from_secs(4), "ack took {:?}", t0.elapsed());
+        // And the acked record is visible on the leader (watermark
+        // advanced past it).
+        let got = a.fetch(&topic, p, 0, 10, ClientLocality::InCluster).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].record.value, vec![42u8]);
+    }
+
+    #[test]
+    fn discovery_recreates_missing_topics() {
+        let (a, b, _ctl_a, ctl_b) = linked_pair(AckMode::Leader);
+        a.create_topic("only-on-a", 4);
+        assert!(b.topic("only-on-a").is_none());
+        let _puller = ReplicaPuller::start(b.clone(), ctl_b, Duration::from_millis(5));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while b.topic("only-on-a").is_none() {
+            assert!(Instant::now() < deadline, "discovery never found the topic");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(b.topic("only-on-a").unwrap().num_partitions(), 4);
+    }
+}

@@ -23,6 +23,7 @@
 //! access. Every fallible operation returns `Result` because on the
 //! remote path any of them can fail with an I/O error.
 
+use super::clusterctl::ClusterView;
 use super::group::{Assignor, GroupMembership};
 use super::net::ClientLocality;
 use super::record::{Record, RecordBatch};
@@ -215,12 +216,50 @@ pub trait BrokerTransport: Send + Sync + std::fmt::Debug {
     /// may drop it on I/O failure). Platform metrics live with the
     /// broker regardless of where the worker incrementing them runs.
     fn add_metric(&self, name: &str, delta: u64);
+
+    // ---- cluster membership / replication -------------------------------
+
+    /// The broker's current metadata view (epoch + roster; the
+    /// `ClusterMeta` opcode remotely). An **empty roster** means the
+    /// deployment is not clustered — callers skip routing entirely.
+    fn cluster_meta(&self) -> Result<ClusterView>;
+
+    /// Push a newer metadata view (failover propagation; the
+    /// `ClusterUpdate` opcode remotely). The receiver installs strictly
+    /// newer epochs and promotes any partition whose leadership moved
+    /// to it; stale pushes are silently ignored.
+    fn cluster_update(&self, view: &ClusterView) -> Result<()>;
+
+    /// Replication pull, issued by a follower against the leader (the
+    /// `ReplicaFetch` opcode remotely): records of `topic:partition`
+    /// from `from`, acking `ack` — the follower's applied log end,
+    /// which advances the leader's high-watermark — and returning
+    /// `(leader high-watermark, records)`.
+    fn replica_fetch(
+        &self,
+        topic: &str,
+        partition: u32,
+        from: u64,
+        max: usize,
+        ack: u64,
+    ) -> Result<(u64, Vec<(u64, Record)>)>;
 }
 
 /// The in-process transport: the cluster itself. `Arc<Cluster>` coerces
 /// to [`BrokerHandle`] wherever one is expected, which is what keeps
 /// every pre-wire call site (`Consumer::new(cluster.clone(), ..)`)
 /// compiling unchanged.
+///
+/// **Cluster-aware**: when a [`super::ClusterCtl`] is attached and a
+/// partition's leader is a *peer* broker, the partition-addressed
+/// methods transparently forward to it over the wire
+/// (`Cluster::route_remote`). That is what lets platform components —
+/// stream feeders, training/inference pods — keep producing and
+/// fetching through their local `Arc<Cluster>` handle while the data
+/// actually lands on (and is read from) each partition's leader. The
+/// wire *server*, by contrast, calls the inherent `Cluster` methods
+/// after epoch fencing, so a forwarded request is applied locally
+/// rather than bouncing between brokers.
 impl BrokerTransport for Cluster {
     fn produce(
         &self,
@@ -230,6 +269,9 @@ impl BrokerTransport for Cluster {
         locality: ClientLocality,
         producer_seq: Option<(u64, u64)>,
     ) -> Result<u64> {
+        if let Some((_addr, peer)) = self.route_remote(topic, partition) {
+            return peer.produce(topic, partition, records, locality, producer_seq);
+        }
         Cluster::produce(self, topic, partition, records, locality, producer_seq)
     }
 
@@ -241,10 +283,16 @@ impl BrokerTransport for Cluster {
         max: usize,
         locality: ClientLocality,
     ) -> Result<RecordBatch> {
+        if let Some((_addr, peer)) = self.route_remote(topic, partition) {
+            return peer.fetch_batch(topic, partition, from, max, locality);
+        }
         Cluster::fetch_batch(self, topic, partition, from, max, locality)
     }
 
     fn offsets(&self, topic: &str, partition: u32) -> Result<(u64, u64)> {
+        if let Some((_addr, peer)) = self.route_remote(topic, partition) {
+            return peer.offsets(topic, partition);
+        }
         Cluster::offsets(self, topic, partition)
     }
 
@@ -254,7 +302,23 @@ impl BrokerTransport for Cluster {
         } else {
             Cluster::create_topic(self, topic, partitions)
         };
-        Ok(t.num_partitions())
+        let n = t.num_partitions();
+        // Clustered: fan the creation out so every peer — the leaders
+        // of this topic's partitions and the followers that will pull
+        // them — has it under the same partition count. Best-effort: a
+        // peer that is down recreates it from its replica puller's
+        // topic discovery. (The wire server's CreateTopic arm applies
+        // locally only, so the fan-out never ping-pongs.)
+        if let Some(ctl) = self.clusterctl() {
+            let view = ctl.view();
+            for b in view.brokers.iter().filter(|b| b.alive && b.id != ctl.local_id()) {
+                let Some(peer) = self.peer_handle(&b.addr) else { continue };
+                if let Err(e) = peer.create_topic(topic, n) {
+                    log::warn!("fanning create_topic('{topic}') to broker {}: {e:#}", b.id);
+                }
+            }
+        }
+        Ok(n)
     }
 
     fn topic_partitions(&self, topic: &str) -> Result<Option<u32>> {
@@ -305,11 +369,47 @@ impl BrokerTransport for Cluster {
         group: Option<(&str, u64)>,
         timeout: Duration,
     ) -> Result<bool> {
+        // An assignment led by a peer broker appends *there* — the
+        // local wait-sets would never signal for it. Cap the park so
+        // the caller re-polls (its fetches route to the leader); the
+        // contract already allows early quiet returns, so consumers
+        // loop to their own deadline unchanged.
+        let mut timeout = timeout;
+        if let Some(ctl) = self.clusterctl() {
+            let view = ctl.view();
+            let spans_peers = view.is_clustered()
+                && assignments.iter().any(|((t, p), _)| {
+                    view.leader_of(t, *p).is_some_and(|l| l != ctl.local_id())
+                });
+            if spans_peers {
+                timeout = timeout.min(Duration::from_millis(100));
+            }
+        }
         Ok(Cluster::wait_for_data(self, assignments, group, Instant::now() + timeout))
     }
 
     fn add_metric(&self, name: &str, delta: u64) {
         self.metrics.counter(name).add(delta);
+    }
+
+    fn cluster_meta(&self) -> Result<ClusterView> {
+        Ok(self.cluster_view())
+    }
+
+    fn cluster_update(&self, view: &ClusterView) -> Result<()> {
+        self.install_cluster_view(view.clone())
+    }
+
+    fn replica_fetch(
+        &self,
+        topic: &str,
+        partition: u32,
+        from: u64,
+        max: usize,
+        ack: u64,
+    ) -> Result<(u64, Vec<(u64, Record)>)> {
+        let (hwm, batch) = Cluster::replica_fetch(self, topic, partition, from, max, ack)?;
+        Ok((hwm, batch.records))
     }
 }
 
@@ -357,6 +457,24 @@ mod tests {
             &batch.records[0].1.value,
             &stored.records[0].1.value
         ));
+    }
+
+    #[test]
+    fn cluster_meta_is_solo_when_unclustered() {
+        let c = Cluster::new(BrokerConfig::default());
+        let b: BrokerHandle = c.clone();
+        let v = b.cluster_meta().unwrap();
+        assert!(v.brokers.is_empty(), "solo broker advertised a roster");
+        assert_eq!(v.epoch, 0);
+        // No controller attached: a pushed view has nowhere to land.
+        assert!(b.cluster_update(&v).is_err());
+        // The replication surface still answers (trivially) in solo mode.
+        b.create_topic("t", 1).unwrap();
+        b.produce("t", 0, &[Record::new(vec![1])], ClientLocality::InCluster, None)
+            .unwrap();
+        let (hwm, recs) = b.replica_fetch("t", 0, 0, 10, 0).unwrap();
+        assert_eq!(hwm, 0);
+        assert_eq!(recs.len(), 1);
     }
 
     #[test]

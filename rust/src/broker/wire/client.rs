@@ -36,9 +36,22 @@
 //!
 //! Fetch responses decode zero-copy: every record in one response frame
 //! is a [`crate::util::Bytes`] slice view of that frame's single buffer.
+//!
+//! **Cluster awareness**: a `RemoteBroker` built by
+//! [`RemoteBroker::connect`] is a
+//! *bootstrap* — on the first partition-addressed call it fetches the
+//! broker's [`ClusterView`] (`ClusterMeta`) and caches it. When the
+//! view is clustered, produces and fetches are routed straight to each
+//! partition's **leader** over a lazily-dialed per-broker connection
+//! pool, and every routed request carries the view's epoch so a
+//! deposed leader can fence it (`not-leader`). A `not-leader` answer —
+//! or an unreachable leader — triggers a metadata refresh and a
+//! re-route, so a mid-failover caller converges on the promoted
+//! follower without surfacing an error.
 
 use super::codec::{self, OpCode, Reader, STATUS_OK};
 use super::server;
+use crate::broker::clusterctl::{self, ClusterView};
 use crate::broker::group::{Assignor, GroupMembership};
 use crate::broker::net::ClientLocality;
 use crate::broker::record::{Record, RecordBatch};
@@ -73,6 +86,29 @@ const WAIT_MARGIN: Duration = Duration::from_secs(5);
 pub const CLIENT_IDLE_EXPIRY: Duration = Duration::from_secs(
     server::IDLE_TIMEOUT.as_secs() - 2 * server::SWEEP_INTERVAL.as_secs(),
 );
+
+/// How many times a partition-addressed call may re-resolve its route
+/// (metadata refresh + retry) after a `not-leader` answer or an
+/// unreachable leader. Sized to outlast a leader failover: detection
+/// plus promotion plus propagation comfortably fits inside
+/// `ROUTE_ATTEMPTS × ROUTE_RETRY_PAUSE` at the supervisor's defaults.
+const ROUTE_ATTEMPTS: usize = 5;
+
+/// Pause before each routed retry, giving the cluster's supervisor
+/// time to converge on a new leader.
+const ROUTE_RETRY_PAUSE: Duration = Duration::from_millis(150);
+
+/// Cap on a clustered long-poll whose assignments span more than one
+/// leader: the poll parks on one broker only, so it must come up for
+/// air often enough to notice data arriving on the others.
+const SPLIT_WAIT_CAP: Duration = Duration::from_millis(100);
+
+/// Process-global source of [`MuxConn::epoch`] identities. Global, not
+/// per-broker: the producer pins an in-flight window to a connection by
+/// epoch alone, and with cluster routing the retry may land on a
+/// *different* broker — two brokers' connections must never share an
+/// identity.
+static CONN_EPOCHS: AtomicU64 = AtomicU64::new(0);
 
 /// What the reader thread delivers to a parked caller: the whole
 /// response frame body, or the transport failure that killed the
@@ -111,7 +147,7 @@ impl MuxConn {
             writer: Mutex::new(stream),
             pending: Arc::new(Mutex::new(Some(HashMap::new()))),
             last_used: Mutex::new(Instant::now()),
-            epoch: broker.conn_epoch.fetch_add(1, Ordering::Relaxed) + 1,
+            epoch: CONN_EPOCHS.fetch_add(1, Ordering::Relaxed) + 1,
         });
         let pending = conn.pending.clone();
         std::thread::Builder::new()
@@ -306,9 +342,20 @@ pub struct RemoteBroker {
     /// out.
     api_key: Option<String>,
     corr: AtomicU64,
-    /// Source of [`MuxConn::epoch`] identities (post-increment, so the
-    /// first connection is epoch 1 and 0 stays "no connection").
-    conn_epoch: AtomicU64,
+    /// Whether this instance routes partition traffic by the cluster
+    /// metadata map. True for bootstraps built by `connect*`; false for
+    /// the per-broker pool entries they dial (a routed call must go
+    /// exactly where it was aimed) and for broker-to-broker handles
+    /// ([`RemoteBroker::connect_peer`]).
+    cluster_aware: bool,
+    /// Cached cluster metadata. `None` until the first
+    /// partition-addressed call probes `ClusterMeta`; a solo answer
+    /// (empty roster) caches too, disabling routing against
+    /// single-broker deployments at the cost of one round trip, ever.
+    view: Mutex<Option<ClusterView>>,
+    /// Lazily-dialed connections to the other brokers in the view,
+    /// keyed by advertised address.
+    peers: Mutex<HashMap<String, Arc<RemoteBroker>>>,
 }
 
 impl std::fmt::Debug for RemoteBroker {
@@ -341,6 +388,21 @@ impl RemoteBroker {
     /// A bad key fails here, at connect time — the eager probe opens a
     /// connection, and the handshake is part of opening one.
     pub fn connect_with_key(addr: &str, api_key: Option<&str>) -> Result<Arc<RemoteBroker>> {
+        RemoteBroker::connect_inner(addr, api_key, true)
+    }
+
+    /// A *pinned* connection for broker-to-broker traffic (replication
+    /// pulls, supervisor heartbeats, metadata pushes): never consults
+    /// the metadata map, never routes — every call lands on `addr`.
+    pub fn connect_peer(addr: &str, api_key: Option<&str>) -> Result<Arc<RemoteBroker>> {
+        RemoteBroker::connect_inner(addr, api_key, false)
+    }
+
+    fn connect_inner(
+        addr: &str,
+        api_key: Option<&str>,
+        cluster_aware: bool,
+    ) -> Result<Arc<RemoteBroker>> {
         let broker = Arc::new(RemoteBroker {
             addr: addr.to_string(),
             main: Lane::new("main"),
@@ -348,7 +410,9 @@ impl RemoteBroker {
             metrics_conn: Mutex::new(None),
             api_key: api_key.map(str::to_string),
             corr: AtomicU64::new(1),
-            conn_epoch: AtomicU64::new(0),
+            cluster_aware,
+            view: Mutex::new(None),
+            peers: Mutex::new(HashMap::new()),
         });
         broker.main.get(&broker)?; // eager probe: unreachable (or rejected) fails here
         Ok(broker)
@@ -356,6 +420,150 @@ impl RemoteBroker {
 
     pub fn addr(&self) -> &str {
         &self.addr
+    }
+
+    // ---- cluster routing ----------------------------------------------------
+
+    /// The cached metadata view, probing `ClusterMeta` on first use.
+    /// `None` disables routing (pinned handle, or the probe failed).
+    fn cached_view(&self) -> Option<ClusterView> {
+        if !self.cluster_aware {
+            return None;
+        }
+        let mut slot = self.view.lock().unwrap();
+        if slot.is_none() {
+            match self.fetch_cluster_meta() {
+                Ok(v) => *slot = Some(v),
+                Err(e) => {
+                    // Cache a solo view anyway: a broker that can't
+                    // answer ClusterMeta can't route either, and a
+                    // later `not-leader` answer forces a real refresh.
+                    log::debug!("cluster metadata probe against {} failed: {e:#}", self.addr);
+                    *slot = Some(ClusterView::solo());
+                }
+            }
+        }
+        slot.clone()
+    }
+
+    /// Drop the cache and re-fetch the view from the bootstrap broker.
+    /// Best-effort: on failure the stale view stays (a later attempt
+    /// refreshes again).
+    fn refresh_view(&self) {
+        if !self.cluster_aware {
+            return;
+        }
+        match self.fetch_cluster_meta() {
+            Ok(v) => {
+                log::debug!("refreshed cluster view from {}: epoch {}", self.addr, v.epoch);
+                *self.view.lock().unwrap() = Some(v);
+            }
+            Err(e) => log::debug!("cluster metadata refresh against {} failed: {e:#}", self.addr),
+        }
+    }
+
+    fn fetch_cluster_meta(&self) -> Result<ClusterView> {
+        let mut r = self.call_on(&self.main, OpCode::ClusterMeta, &[], CALL_TIMEOUT)?;
+        Ok(r.cluster_view()?)
+    }
+
+    fn is_clustered_cached(&self) -> bool {
+        self.view
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map_or(false, |v| v.is_clustered())
+    }
+
+    /// The pooled connection to a peer broker, dialing on first use.
+    /// The dial happens outside the pool lock so a slow peer never
+    /// stalls routes to healthy ones.
+    fn peer(&self, addr: &str) -> Result<Arc<RemoteBroker>> {
+        if let Some(p) = self.peers.lock().unwrap().get(addr) {
+            return Ok(p.clone());
+        }
+        let fresh = RemoteBroker::connect_peer(addr, self.api_key.as_deref())?;
+        let mut peers = self.peers.lock().unwrap();
+        Ok(peers.entry(addr.to_string()).or_insert(fresh).clone())
+    }
+
+    /// Evict a (presumed dead) pooled peer so the next route re-dials.
+    fn forget_peer(&self, addr: &str) {
+        self.peers.lock().unwrap().remove(addr);
+    }
+
+    /// Resolve `topic:partition` against the cached view: the broker to
+    /// send to (`None` = this one) and the epoch to stamp the request
+    /// with (`None` = unclustered, no fencing). A peer that won't dial
+    /// falls back to the bootstrap — whose `not-leader` answer then
+    /// drives a refresh.
+    fn route(&self, topic: &str, partition: u32) -> (Option<Arc<RemoteBroker>>, Option<u64>) {
+        let Some(view) = self.cached_view() else {
+            return (None, None);
+        };
+        if !view.is_clustered() {
+            return (None, None);
+        }
+        let epoch = Some(view.epoch);
+        let Some(leader) = view.leader_of(topic, partition) else {
+            return (None, epoch);
+        };
+        let Some(addr) = view.addr_of(leader) else {
+            return (None, epoch);
+        };
+        if addr == self.addr {
+            return (None, epoch);
+        }
+        match self.peer(addr) {
+            Ok(p) => (Some(p), epoch),
+            Err(e) => {
+                log::debug!("dialing leader {addr} for {topic}:{partition} failed: {e:#}");
+                (None, epoch)
+            }
+        }
+    }
+
+    /// Run a partition-addressed call against its current leader,
+    /// refreshing the metadata and re-routing on `not-leader` answers
+    /// and unreachable brokers. Any other error is definitive.
+    fn routed<T>(
+        &self,
+        topic: &str,
+        partition: u32,
+        f: impl Fn(&RemoteBroker, Option<u64>) -> Result<T>,
+    ) -> Result<T> {
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..ROUTE_ATTEMPTS {
+            if attempt > 0 {
+                std::thread::sleep(ROUTE_RETRY_PAUSE);
+                self.refresh_view();
+            }
+            let (target, epoch) = self.route(topic, partition);
+            let b = target.as_deref().unwrap_or(self);
+            match f(b, epoch) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    let rendered = format!("{e:#}");
+                    // `not-leader` is always a cluster signal; a
+                    // transport-dead broker only warrants a re-route
+                    // when the view says there is somewhere else to go.
+                    let reroute = clusterctl::is_not_leader(&rendered)
+                        || (self.is_clustered_cached() && rendered.contains("unreachable"));
+                    if !reroute || !self.cluster_aware {
+                        return Err(e);
+                    }
+                    if let Some(t) = &target {
+                        self.forget_peer(t.addr());
+                    }
+                    log::debug!("re-routing {topic}:{partition} (attempt {attempt}): {rendered}");
+                    last = Some(e);
+                }
+            }
+        }
+        let last = last.expect("routed loop exits early without an error");
+        Err(last.context(format!(
+            "no reachable leader for {topic}:{partition} after {ROUTE_ATTEMPTS} attempts"
+        )))
     }
 
     fn fresh_stream(&self) -> Result<TcpStream> {
@@ -546,6 +754,7 @@ fn produce_payload(
     partition: u32,
     records: &[Record],
     producer_seq: Option<(u64, u64)>,
+    epoch: Option<u64>,
 ) -> Vec<u8> {
     let mut p = Vec::new();
     codec::put_u32(&mut p, partition);
@@ -558,33 +767,26 @@ fn produce_payload(
         &mut p,
         records.iter().enumerate().map(|(i, rec)| (i as u64, rec)),
     );
+    // Metadata epoch rides at the tail so pre-cluster payloads parse
+    // unchanged (the server reads it only if bytes remain).
+    codec::put_opt(&mut p, epoch.as_ref(), |o, e| codec::put_u64(o, *e));
     p
 }
 
-impl BrokerTransport for RemoteBroker {
-    fn produce(
+impl RemoteBroker {
+    /// The pipelined produce write, aimed at *this* broker (routing, if
+    /// any, already happened). `route_epoch` is the metadata epoch the
+    /// request gets fenced under.
+    fn submit_produce(
         &self,
         topic: &str,
         partition: u32,
         records: &[Record],
-        _locality: ClientLocality,
-        producer_seq: Option<(u64, u64)>,
-    ) -> Result<u64> {
-        let p = produce_payload(topic, partition, records, producer_seq);
-        let mut r = self.call_on(&self.main, OpCode::Produce, &p, CALL_TIMEOUT)?;
-        Ok(r.u64()?)
-    }
-
-    fn produce_submit(
-        &self,
-        topic: &str,
-        partition: u32,
-        records: &[Record],
-        _locality: ClientLocality,
         producer_seq: Option<(u64, u64)>,
         window_epoch: Option<u64>,
+        route_epoch: Option<u64>,
     ) -> Box<dyn ProduceHandle> {
-        let p = produce_payload(topic, partition, records, producer_seq);
+        let p = produce_payload(topic, partition, records, producer_seq, route_epoch);
         if p.len() as u64 + 9 > u64::from(codec::MAX_FRAME_BYTES) {
             // Definitive — no transport involved, and no retry could
             // ever make the frame fit.
@@ -652,6 +854,42 @@ impl BrokerTransport for RemoteBroker {
             }
         }
     }
+}
+
+impl BrokerTransport for RemoteBroker {
+    fn produce(
+        &self,
+        topic: &str,
+        partition: u32,
+        records: &[Record],
+        _locality: ClientLocality,
+        producer_seq: Option<(u64, u64)>,
+    ) -> Result<u64> {
+        self.routed(topic, partition, |b, epoch| {
+            let p = produce_payload(topic, partition, records, producer_seq, epoch);
+            let mut r = b.call_on(&b.main, OpCode::Produce, &p, CALL_TIMEOUT)?;
+            Ok(r.u64()?)
+        })
+    }
+
+    fn produce_submit(
+        &self,
+        topic: &str,
+        partition: u32,
+        records: &[Record],
+        _locality: ClientLocality,
+        producer_seq: Option<(u64, u64)>,
+        window_epoch: Option<u64>,
+    ) -> Box<dyn ProduceHandle> {
+        // One route resolution, no refresh loop: a submit that lands on
+        // a deposed leader comes back `Rejected(not-leader)`, and the
+        // producer drains its window and re-drives through the sync
+        // [`produce`](BrokerTransport::produce) path — which *does*
+        // refresh and re-route.
+        let (target, epoch) = self.route(topic, partition);
+        let b = target.as_deref().unwrap_or(self);
+        b.submit_produce(topic, partition, records, producer_seq, window_epoch, epoch)
+    }
 
     fn fetch_batch(
         &self,
@@ -661,15 +899,18 @@ impl BrokerTransport for RemoteBroker {
         max: usize,
         _locality: ClientLocality,
     ) -> Result<RecordBatch> {
-        let mut p = Vec::new();
-        codec::put_u32(&mut p, partition);
-        codec::put_u64(&mut p, from);
-        codec::put_u32(&mut p, max.min(u32::MAX as usize) as u32);
-        codec::put_str(&mut p, topic);
-        let mut r = self.call_on(&self.main, OpCode::FetchBatch, &p, CALL_TIMEOUT)?;
-        // Zero-copy on this side of the wire too: every record is a
-        // slice of the one response buffer.
-        let records = r.records()?;
+        let records = self.routed(topic, partition, |b, epoch| {
+            let mut p = Vec::new();
+            codec::put_u32(&mut p, partition);
+            codec::put_u64(&mut p, from);
+            codec::put_u32(&mut p, max.min(u32::MAX as usize) as u32);
+            codec::put_str(&mut p, topic);
+            codec::put_opt(&mut p, epoch.as_ref(), |o, e| codec::put_u64(o, *e));
+            let mut r = b.call_on(&b.main, OpCode::FetchBatch, &p, CALL_TIMEOUT)?;
+            // Zero-copy on this side of the wire too: every record is a
+            // slice of the one response buffer.
+            Ok(r.records()?)
+        })?;
         Ok(RecordBatch {
             topic: Arc::from(topic),
             partition,
@@ -678,11 +919,13 @@ impl BrokerTransport for RemoteBroker {
     }
 
     fn offsets(&self, topic: &str, partition: u32) -> Result<(u64, u64)> {
-        let mut p = Vec::new();
-        codec::put_u32(&mut p, partition);
-        codec::put_str(&mut p, topic);
-        let mut r = self.call_on(&self.main, OpCode::Offsets, &p, CALL_TIMEOUT)?;
-        Ok((r.u64()?, r.u64()?))
+        self.routed(topic, partition, |b, _epoch| {
+            let mut p = Vec::new();
+            codec::put_u32(&mut p, partition);
+            codec::put_str(&mut p, topic);
+            let mut r = b.call_on(&b.main, OpCode::Offsets, &p, CALL_TIMEOUT)?;
+            Ok((r.u64()?, r.u64()?))
+        })
     }
 
     fn create_topic(&self, topic: &str, partitions: u32) -> Result<u32> {
@@ -690,7 +933,28 @@ impl BrokerTransport for RemoteBroker {
         codec::put_u32(&mut p, partitions);
         codec::put_str(&mut p, topic);
         let mut r = self.call_on(&self.main, OpCode::CreateTopic, &p, CALL_TIMEOUT)?;
-        Ok(r.u32()?)
+        let assigned = r.u32()?;
+        // The server applies CreateTopic locally only (fanning out
+        // server-side would ping-pong between brokers), so a clustered
+        // *client* declares the topic on every alive broker — each one
+        // may lead some of its partitions. Best-effort beyond the
+        // bootstrap: replication's discovery sweep backfills any broker
+        // the fan-out missed.
+        if let Some(view) = self.cached_view() {
+            if view.is_clustered() {
+                for b in view.brokers.iter().filter(|b| b.alive && b.addr != self.addr) {
+                    let fanned = self
+                        .peer(&b.addr)
+                        .and_then(|peer| {
+                            peer.call_on(&peer.main, OpCode::CreateTopic, &p, CALL_TIMEOUT)
+                        });
+                    if let Err(e) = fanned {
+                        log::warn!("declaring topic '{topic}' on broker {}: {e:#}", b.id);
+                    }
+                }
+            }
+        }
+        Ok(assigned)
     }
 
     fn topic_partitions(&self, topic: &str) -> Result<Option<u32>> {
@@ -770,6 +1034,41 @@ impl BrokerTransport for RemoteBroker {
         group: Option<(&str, u64)>,
         timeout: Duration,
     ) -> Result<bool> {
+        // Clustered routing: the poll parks on ONE broker, so aim it at
+        // the broker leading the most assigned partitions — with group
+        // coordination it must stay on the bootstrap (that's where the
+        // group's wait-set lives). Either way, when some assignments
+        // are led elsewhere the park is capped so data arriving there
+        // turns into a prompt wake instead of a full-timeout stall.
+        let mut target: Option<Arc<RemoteBroker>> = None;
+        let mut timeout = timeout;
+        if let Some(view) = self.cached_view() {
+            if view.is_clustered() {
+                let mut per_addr: HashMap<&str, usize> = HashMap::new();
+                for ((t, p), _) in assignments {
+                    if let Some(addr) = view.leader_of(t, *p).and_then(|l| view.addr_of(l)) {
+                        *per_addr.entry(addr).or_insert(0) += 1;
+                    }
+                }
+                let best = per_addr
+                    .iter()
+                    .max_by_key(|(_, n)| **n)
+                    .map(|(addr, _)| *addr)
+                    .unwrap_or(self.addr.as_str());
+                let split = per_addr.len() > 1
+                    || (per_addr.len() == 1 && group.is_some() && best != self.addr);
+                let aim = if group.is_some() { self.addr.as_str() } else { best };
+                if split || aim != best {
+                    timeout = timeout.min(SPLIT_WAIT_CAP);
+                }
+                if aim != self.addr {
+                    if let Ok(peer) = self.peer(aim) {
+                        target = Some(peer);
+                    }
+                }
+            }
+        }
+        let b = target.as_deref().unwrap_or(self);
         let mut p = Vec::new();
         codec::put_u64(&mut p, timeout.as_millis().min(u64::MAX as u128) as u64);
         codec::put_opt(&mut p, group.as_ref(), |o, (gid, gen)| {
@@ -786,8 +1085,41 @@ impl BrokerTransport for RemoteBroker {
         // just needs to outlast whatever it grants. The dedicated wait
         // lane means this parked call shares no socket with produces.
         let wait_for = timeout.min(Duration::from_secs(3600)) + WAIT_MARGIN;
-        let mut r = self.call_on(&self.wait, OpCode::FetchWait, &p, wait_for)?;
+        let mut r = b.call_on(&b.wait, OpCode::FetchWait, &p, wait_for)?;
         Ok(r.bool()?)
+    }
+
+    fn cluster_meta(&self) -> Result<ClusterView> {
+        self.fetch_cluster_meta()
+    }
+
+    fn cluster_update(&self, view: &ClusterView) -> Result<()> {
+        let mut p = Vec::new();
+        codec::put_cluster_view(&mut p, view);
+        self.call_on(&self.main, OpCode::ClusterUpdate, &p, CALL_TIMEOUT)?;
+        Ok(())
+    }
+
+    fn replica_fetch(
+        &self,
+        topic: &str,
+        partition: u32,
+        from: u64,
+        max: usize,
+        ack: u64,
+    ) -> Result<(u64, Vec<(u64, Record)>)> {
+        // Deliberately unrouted: a replication pull is aimed at the
+        // specific broker this handle was dialed for.
+        let mut p = Vec::new();
+        codec::put_u32(&mut p, partition);
+        codec::put_u64(&mut p, from);
+        codec::put_u32(&mut p, max.min(u32::MAX as usize) as u32);
+        codec::put_u64(&mut p, ack);
+        codec::put_str(&mut p, topic);
+        let mut r = self.call_on(&self.main, OpCode::ReplicaFetch, &p, CALL_TIMEOUT)?;
+        let hwm = r.u64()?;
+        let records = r.records()?;
+        Ok((hwm, records))
     }
 
     fn add_metric(&self, name: &str, delta: u64) {

@@ -34,6 +34,7 @@
 //! code that matches on messages (the exactly-once producer looks for
 //! `duplicate`) behaves identically over the wire.
 
+use crate::broker::clusterctl::{BrokerInfo, ClusterView};
 use crate::broker::group::{Assignor, GroupMembership};
 use crate::broker::log::format::{self, FrameError};
 use crate::broker::record::Record;
@@ -75,6 +76,14 @@ pub enum OpCode {
     /// Presents an API key; must precede every other opcode on a
     /// connection when the server enforces auth.
     Authenticate = 15,
+    /// The cluster membership/placement view (epoch + broker roster).
+    /// An empty roster answers "not clustered".
+    ClusterMeta = 16,
+    /// Broker-to-broker replication pull: a follower streams a led
+    /// partition's records and acks its applied log end.
+    ReplicaFetch = 17,
+    /// Push a newer membership view to a peer (failover propagation).
+    ClusterUpdate = 18,
 }
 
 impl OpCode {
@@ -95,6 +104,9 @@ impl OpCode {
             13 => OpCode::CommittedOffset,
             14 => OpCode::Metric,
             15 => OpCode::Authenticate,
+            16 => OpCode::ClusterMeta,
+            17 => OpCode::ReplicaFetch,
+            18 => OpCode::ClusterUpdate,
             _ => return None,
         })
     }
@@ -412,6 +424,19 @@ pub fn put_records<'a>(
     }
 }
 
+/// `epoch:u64 | count:u32 | (id:u32 addr:str alive:bool)*` — the
+/// cluster metadata view (`ClusterMeta` response, `ClusterUpdate`
+/// request payload).
+pub fn put_cluster_view(out: &mut Vec<u8>, v: &ClusterView) {
+    put_u64(out, v.epoch);
+    put_u32(out, v.brokers.len() as u32);
+    for b in &v.brokers {
+        put_u32(out, b.id);
+        put_str(out, &b.addr);
+        put_bool(out, b.alive);
+    }
+}
+
 pub fn put_membership(out: &mut Vec<u8>, m: &GroupMembership) {
     put_u64(out, m.generation);
     put_u32(out, m.assigned.len() as u32);
@@ -517,6 +542,19 @@ impl Reader {
             out.push((f.offset, f.record));
         }
         Ok(out)
+    }
+
+    pub fn cluster_view(&mut self) -> Result<ClusterView, WireError> {
+        let epoch = self.u64()?;
+        let n = self.u32()? as usize;
+        let mut brokers = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            let id = self.u32()?;
+            let addr = self.str()?;
+            let alive = self.bool()?;
+            brokers.push(BrokerInfo { id, addr, alive });
+        }
+        Ok(ClusterView { epoch, brokers })
     }
 
     pub fn membership(&mut self) -> Result<GroupMembership, WireError> {
@@ -763,6 +801,27 @@ mod tests {
         assert_eq!(r.remaining(), 0);
         // Reading past the end is Truncated, never a panic.
         assert!(matches!(r.u8(), Err(WireError::Truncated)));
+    }
+
+    #[test]
+    fn cluster_view_roundtrips() {
+        let v = ClusterView {
+            epoch: 7,
+            brokers: vec![
+                BrokerInfo { id: 0, addr: "10.0.0.1:9092".into(), alive: true },
+                BrokerInfo { id: 1, addr: "10.0.0.2:9092".into(), alive: false },
+            ],
+        };
+        let mut out = Vec::new();
+        put_cluster_view(&mut out, &v);
+        let mut r = Reader::new(roundtrip_body(&out));
+        assert_eq!(r.cluster_view().unwrap(), v);
+        assert_eq!(r.remaining(), 0);
+        // The solo (empty-roster) view survives too.
+        let mut out = Vec::new();
+        put_cluster_view(&mut out, &ClusterView::solo());
+        let mut r = Reader::new(roundtrip_body(&out));
+        assert_eq!(r.cluster_view().unwrap(), ClusterView::solo());
     }
 
     #[test]

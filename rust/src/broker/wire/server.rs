@@ -67,6 +67,20 @@
 //! opcode or malformed payload answers with an error response — the
 //! broker state and its locks are untouched either way, because
 //! decoding completes before any cluster call.
+//!
+//! **Clustered deployments** add two concerns handled entirely here at
+//! dispatch: *fencing* — partition-addressed requests (`Produce`,
+//! `FetchBatch`) may carry the caller's metadata epoch, and a broker
+//! that no longer leads the partition (or sees a stale epoch) answers
+//! `not-leader` instead of touching the log, so a deposed leader can
+//! never accept writes its successor won't have; and *tenant
+//! namespacing* — with auth enforced, a non-admin key's topic names are
+//! silently prefixed `{tenant}::` on ingress and stripped on egress,
+//! so two tenants can each own an `mnist-train` without ever seeing
+//! each other's data (admins and unscoped callers see the flat
+//! internal view). Placement hashes the *bare* name
+//! ([`ClusterCtl`](crate::broker::clusterctl::ClusterCtl)), so client
+//! routing by visible name and server fencing by internal name agree.
 
 use super::codec::{self, Chunk, OpCode, Reader};
 use super::reactor::{self, Poller, PollerEvent, WakeFd, MAX_WRITEV_SEGMENTS};
@@ -737,9 +751,14 @@ impl Reactor {
                             .execute(move || handle_metric(&shared, &mailbox, id, body, crc)),
                         // Long-polls bypass the serial queue: they park
                         // rather than occupy a worker, so dispatch now.
-                        FrameKind::Wait => self.workers.execute(move || {
-                            handle_request(&shared, &mailbox, id, body, crc, Vec::new(), false, None)
-                        }),
+                        FrameKind::Wait => {
+                            let identity = self.conns.get(&id).and_then(|c| c.identity.clone());
+                            self.workers.execute(move || {
+                                handle_request(
+                                    &shared, &mailbox, id, body, crc, Vec::new(), false, identity,
+                                )
+                            })
+                        }
                         FrameKind::Ordinary => {} // dispatched below, serially
                     }
                 }
@@ -777,6 +796,7 @@ impl Reactor {
                     Ok(())
                 }
                 AuthOutcome::Revoked => Err("key revoked"),
+                AuthOutcome::Expired => Err("key expired"),
                 AuthOutcome::Unknown => Err("unknown key"),
             },
             None => Ok(()),
@@ -1130,10 +1150,12 @@ fn handle_request(
     };
     match op {
         OpCode::FetchBatch => {
-            let chunks = fetch_batch_chunks(shared, &mut r, corr, scratch);
+            let chunks = fetch_batch_chunks(shared, &mut r, corr, scratch, identity.as_ref());
             mailbox.post(Event::Respond { conn, chunks, serial });
         }
-        OpCode::FetchWait => fetch_wait(shared, mailbox, conn, &mut r, corr, scratch, serial),
+        OpCode::FetchWait => {
+            fetch_wait(shared, mailbox, conn, &mut r, corr, scratch, serial, identity.as_ref())
+        }
         OpCode::Metric => {
             // Normally dispatched one-way straight from the reactor;
             // reaching here (a short body defeated the opcode peek)
@@ -1163,12 +1185,20 @@ fn fetch_batch_chunks(
     r: &mut Reader,
     corr: u64,
     mut scratch: Vec<u8>,
+    identity: Option<&Identity>,
 ) -> Vec<Chunk> {
     let fetched = (|| -> Result<_> {
         let partition = r.u32()?;
         let from = r.u64()?;
         let max = r.u32()? as usize;
-        let topic = r.str()?;
+        let topic = scoped_topic(shared, identity, &r.str()?);
+        // Optional trailing routing epoch (cluster-aware clients);
+        // absent on legacy payloads, where the read simply runs out of
+        // bytes.
+        let epoch = r.opt(|r| r.u64()).unwrap_or(None);
+        if let Some(ctl) = shared.cluster.clusterctl() {
+            ctl.check_leader(&topic, partition, epoch)?;
+        }
         let batch =
             shared
                 .cluster
@@ -1224,6 +1254,7 @@ fn fetch_wait(
     corr: u64,
     mut scratch: Vec<u8>,
     serial: bool,
+    identity: Option<&Identity>,
 ) {
     let parsed = (|| -> Result<_> {
         let timeout_ms = r.u64()?;
@@ -1231,7 +1262,7 @@ fn fetch_wait(
         let n = r.u32()? as usize;
         let mut assignments: Vec<(TopicPartition, u64)> = Vec::with_capacity(n.min(4096));
         for _ in 0..n {
-            let topic = r.str()?;
+            let topic = scoped_topic(shared, identity, &r.str()?);
             let p = r.u32()?;
             let pos = r.u64()?;
             assignments.push(((topic, p), pos));
@@ -1306,6 +1337,68 @@ fn complete_wait(shared: &Arc<Shared>, mailbox: &Arc<ShardMailbox>, conn: u64, p
     mailbox.post(Event::Respond { conn, chunks: vec![Chunk::Owned(scratch)], serial: false });
 }
 
+/// Is tenant namespacing in force for this caller? Only when auth is
+/// enforced AND the identity is a non-admin tenant key — admins and
+/// unauthenticated deployments see the flat internal namespace.
+fn tenant_scope<'a>(shared: &Shared, identity: Option<&'a Identity>) -> Option<&'a Identity> {
+    let auth_on = shared.auth.as_ref().is_some_and(|a| a.require_auth());
+    identity.filter(|ident| auth_on && !ident.admin)
+}
+
+/// The broker-internal name for a client-visible topic: prefixed
+/// `{tenant}::` under tenant namespacing, unchanged otherwise. Two
+/// tenants can each own an `mnist-train` without colliding. Placement
+/// ([`crate::broker::clusterctl`]) hashes the bare suffix, so the
+/// scoped name lands on the same leader the client routed to.
+fn scoped_topic(shared: &Shared, identity: Option<&Identity>, topic: &str) -> String {
+    match tenant_scope(shared, identity) {
+        Some(ident) => format!("{}::{topic}", ident.tenant),
+        None => topic.to_string(),
+    }
+}
+
+/// Egress inverse of [`scoped_topic`]: the name the caller may see —
+/// the bare suffix of their own topics, `None` for anyone else's.
+fn visible_topic<'a>(
+    shared: &Shared,
+    identity: Option<&Identity>,
+    topic: &'a str,
+) -> Option<&'a str> {
+    match tenant_scope(shared, identity) {
+        Some(ident) => topic
+            .strip_prefix(&ident.tenant)
+            .and_then(|rest| rest.strip_prefix("::")),
+        None => Some(topic),
+    }
+}
+
+/// Strip the caller's tenant prefix from group-assignment egress (a
+/// scoped join only ever assigns the caller's own topics).
+fn strip_assigned(shared: &Shared, identity: Option<&Identity>, assigned: &mut [TopicPartition]) {
+    for tp in assigned.iter_mut() {
+        let stripped = match visible_topic(shared, identity, &tp.0) {
+            Some(bare) if bare.len() != tp.0.len() => Some(bare.to_string()),
+            _ => None,
+        };
+        if let Some(bare) = stripped {
+            tp.0 = bare;
+        }
+    }
+}
+
+/// Cluster-management opcodes are broker-to-broker surface: with auth
+/// enforced they require an admin key (peers dial each other with the
+/// operator's key), so a tenant key can never rewrite membership or
+/// siphon raw partition frames.
+fn require_admin_op(shared: &Shared, identity: Option<&Identity>, what: &str) -> Result<()> {
+    if shared.auth.as_ref().is_some_and(|a| a.require_auth())
+        && !identity.is_some_and(|ident| ident.admin)
+    {
+        anyhow::bail!("{what} requires an admin key");
+    }
+    Ok(())
+}
+
 /// Decode one request payload and run it against the cluster, writing
 /// the response payload straight into the (envelope-prefixed) scratch
 /// buffer. Decoding happens *entirely* before the cluster call, so a
@@ -1323,7 +1416,7 @@ fn dispatch_simple(
     match op {
         OpCode::CreateTopic => {
             let partitions = r.u32()?;
-            let topic = r.str()?;
+            let topic = scoped_topic(shared, identity, &r.str()?);
             // A tenant at its stored-bytes ceiling can't create more
             // storage-bearing resources.
             if let (Some(auth), Some(ident)) = (&shared.auth, identity) {
@@ -1331,26 +1424,46 @@ fn dispatch_simple(
                     anyhow::bail!("quota: stored-bytes ceiling reached");
                 }
             }
-            // Through the SAME trait impl the in-process transport
-            // uses (0 = broker default), so the two paths cannot drift.
-            let n = BrokerTransport::create_topic(&**cluster, &topic, partitions)?;
-            codec::put_u32(out, n);
+            // Apply LOCALLY only (0 = broker default partitions). The
+            // cluster-aware *client* fans CreateTopic out to every
+            // broker — as does the in-process transport's trait impl —
+            // so a server-side fan-out here would ping-pong the create
+            // between brokers forever.
+            let t = if partitions == 0 {
+                cluster.topic_or_create(&topic)
+            } else {
+                cluster.create_topic(&topic, partitions)
+            };
+            codec::put_u32(out, t.num_partitions());
         }
         OpCode::Metadata => {
-            let topic = r.str()?;
+            let topic = scoped_topic(shared, identity, &r.str()?);
             let parts = cluster.topic(&topic).map(|t| t.num_partitions());
             codec::put_opt(out, parts.as_ref(), |o, n| codec::put_u32(o, *n));
         }
         OpCode::ListTopics => {
-            codec::put_strings(out, &cluster.topic_names());
+            let names: Vec<String> = cluster
+                .topic_names()
+                .into_iter()
+                .filter_map(|t| visible_topic(shared, identity, &t).map(str::to_string))
+                .collect();
+            codec::put_strings(out, &names);
         }
         OpCode::Produce => {
             let partition = r.u32()?;
             let seq = r.opt(|r| Ok((r.u64()?, r.u64()?)))?;
-            let topic = r.str()?;
+            let topic = scoped_topic(shared, identity, &r.str()?);
             // Zero-copy: each decoded record's payloads are slices of
             // the request buffer; the append below shares them.
             let records: Vec<Record> = r.records()?.into_iter().map(|(_, rec)| rec).collect();
+            // Optional trailing routing epoch (cluster-aware clients);
+            // absent on legacy payloads.
+            let epoch = r.opt(|r| r.u64()).unwrap_or(None);
+            // Fence BEFORE charging quota: a produce refused for
+            // routing reasons must not spend the tenant's rate budget.
+            if let Some(ctl) = cluster.clusterctl() {
+                ctl.check_leader(&topic, partition, epoch)?;
+            }
             // Quota: charge rate + stored bytes against the tenant
             // BEFORE appending — a rejected produce stores nothing.
             if let (Some(auth), Some(ident)) = (&shared.auth, identity) {
@@ -1363,7 +1476,7 @@ fn dispatch_simple(
         }
         OpCode::Offsets => {
             let partition = r.u32()?;
-            let topic = r.str()?;
+            let topic = scoped_topic(shared, identity, &r.str()?);
             let (earliest, latest) = cluster.offsets(&topic, partition)?;
             codec::put_u64(out, earliest);
             codec::put_u64(out, latest);
@@ -1375,8 +1488,17 @@ fn dispatch_simple(
             let assignor = codec::assignor_from_u8(r.u8()?)?;
             let gid = r.str()?;
             let member = r.str()?;
-            let topics = r.strings()?;
-            let m = cluster.join_group(&gid, &member, &topics, assignor);
+            // Subscriptions resolve against internal names; the
+            // assignments echo back bare. Group ids stay unscoped —
+            // they carry no data and scoping them would break
+            // cross-tenant ops dashboards.
+            let topics: Vec<String> = r
+                .strings()?
+                .iter()
+                .map(|t| scoped_topic(shared, identity, t))
+                .collect();
+            let mut m = cluster.join_group(&gid, &member, &topics, assignor);
+            strip_assigned(shared, identity, &mut m.assigned);
             codec::put_membership(out, &m);
         }
         OpCode::LeaveGroup => {
@@ -1387,7 +1509,10 @@ fn dispatch_simple(
         OpCode::Heartbeat => {
             let gid = r.str()?;
             let member = r.str()?;
-            let m = cluster.heartbeat(&gid, &member);
+            let mut m = cluster.heartbeat(&gid, &member);
+            if let Some(m) = &mut m {
+                strip_assigned(shared, identity, &mut m.assigned);
+            }
             codec::put_opt(out, m.as_ref(), codec::put_membership);
         }
         OpCode::CommitOffsets => {
@@ -1395,7 +1520,7 @@ fn dispatch_simple(
             let n = r.u32()? as usize;
             let mut offsets: Vec<(TopicPartition, u64)> = Vec::with_capacity(n.min(4096));
             for _ in 0..n {
-                let topic = r.str()?;
+                let topic = scoped_topic(shared, identity, &r.str()?);
                 let p = r.u32()?;
                 let off = r.u64()?;
                 offsets.push(((topic, p), off));
@@ -1405,10 +1530,52 @@ fn dispatch_simple(
         }
         OpCode::CommittedOffset => {
             let gid = r.str()?;
-            let topic = r.str()?;
+            let topic = scoped_topic(shared, identity, &r.str()?);
             let p = r.u32()?;
             let committed = cluster.committed_offset(&gid, &(topic, p));
             codec::put_opt(out, committed.as_ref(), |o, v| codec::put_u64(o, *v));
+        }
+        OpCode::ClusterMeta => {
+            // Readable by any authenticated caller: clients need the
+            // roster + epoch to route; it names brokers, not data.
+            codec::put_cluster_view(out, &cluster.cluster_view());
+        }
+        OpCode::ClusterUpdate => {
+            require_admin_op(shared, identity, "ClusterUpdate")?;
+            let view = r.cluster_view()?;
+            cluster.install_cluster_view(view)?;
+        }
+        OpCode::ReplicaFetch => {
+            require_admin_op(shared, identity, "ReplicaFetch")?;
+            let partition = r.u32()?;
+            let from = r.u64()?;
+            let max = r.u32()? as usize;
+            let ack = r.u64()?;
+            // Internal (possibly tenant-scoped) name verbatim: the
+            // follower mirrors the leader's namespace exactly.
+            let topic = r.str()?;
+            let (hwm, batch) = cluster.replica_fetch(&topic, partition, from, max, ack)?;
+            codec::put_u64(out, hwm);
+            // Bound the response to the frame limit like FetchBatch:
+            // replication advances through the rest next round.
+            let budget = codec::MAX_FRAME_BYTES as usize - 1024;
+            let mut bytes = 4usize;
+            let mut take = 0usize;
+            for (offset, rec) in &batch.records {
+                let frame = format::frame_size(rec);
+                if bytes + frame > budget {
+                    if take == 0 {
+                        anyhow::bail!(
+                            "record at {topic}:{partition}@{offset} ({frame} bytes) \
+                             exceeds the wire frame limit"
+                        );
+                    }
+                    break;
+                }
+                bytes += frame;
+                take += 1;
+            }
+            codec::put_records(out, batch.records.iter().take(take).map(|(o, rec)| (*o, rec)));
         }
         // The reactor answers Authenticate inline; a frame whose short
         // body defeated the opcode peek still lands here — answer it

@@ -20,14 +20,22 @@
 //! * a **startup-cost model** ([`OrchestratorCosts`]) that accounts for
 //!   image pull + scheduling + container boot, the measured difference
 //!   between the paper's "data streams" and "data streams &
-//!   containerization" columns (Tables I/II).
+//!   containerization" columns (Tables I/II);
+//! * **broker failover supervision** ([`ClusterSupervisor`]): in a
+//!   multi-broker deployment each process heartbeats the roster,
+//!   declares silent peers dead (bumping the metadata epoch), promotes
+//!   the partitions it inherits, and pushes the new view to the
+//!   survivors — the control-plane half of the broker's replication
+//!   story.
 
 mod controller;
 mod pod;
 mod resources;
 mod scheduler;
+mod supervisor;
 
 pub use controller::{JobStatus, Orchestrator, OrchestratorCosts, RcStatus};
 pub use pod::{ContainerCtx, EntrypointFn, PodPhase};
 pub use resources::{ContainerSpec, JobSpec, NodeSpec, PodSpec, RcSpec, RestartPolicy};
 pub use scheduler::Scheduler;
+pub use supervisor::{ClusterSupervisor, DEFAULT_HEARTBEAT_INTERVAL, DEFAULT_MISS_THRESHOLD};

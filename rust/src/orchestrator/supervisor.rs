@@ -1,0 +1,254 @@
+//! Cluster failover supervision: heartbeat the broker roster, declare
+//! silent peers dead, promote their followers.
+//!
+//! Every broker process runs one [`ClusterSupervisor`] thread (the
+//! orchestration-layer complement of the data-plane
+//! [`ReplicaPuller`](crate::broker::ReplicaPuller)). Each round it sends
+//! a `ClusterMeta` heartbeat to every peer the current
+//! [`ClusterView`](crate::broker::ClusterView) believes alive:
+//!
+//! * an **answer** clears the peer's miss counter — and doubles as
+//!   gossip: if the peer's view carries a newer epoch, it is adopted on
+//!   the spot (promoting any partitions whose leadership moved here);
+//! * a **failure** counts a miss. At `miss_threshold` consecutive
+//!   misses the supervisor declares the peer dead: it bumps the
+//!   metadata epoch ([`ClusterCtl::mark_dead`]), promotes every
+//!   partition this broker newly leads under the post-mortem view
+//!   (high-watermark jumps to the local log end — every
+//!   `acks=replicated` record is below it by construction), and pushes
+//!   the new view to the survivors (`ClusterUpdate`).
+//!
+//! Two supervisors racing to declare the same death converge: epochs
+//! only move forward and [`ClusterCtl::install`] takes strictly-newer
+//! views, so whichever push lands second is ignored. The deposed (or
+//! partitioned-away) broker itself needs no cooperation — the epoch
+//! bump fences it, and every partition-addressed request it still
+//! serves answers `not-leader` once it adopts the new view (or its
+//! clients' epochs stop matching, which fences it from their side).
+
+use crate::broker::clusterctl::{newly_led, ClusterCtl};
+use crate::broker::ClusterHandle;
+use crate::exec::CancelToken;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Default heartbeat cadence. Failover detection latency is
+/// `interval * miss_threshold`, so the defaults declare death in ~1.5 s.
+pub const DEFAULT_HEARTBEAT_INTERVAL: Duration = Duration::from_millis(500);
+
+/// Consecutive missed heartbeats before a peer is declared dead.
+pub const DEFAULT_MISS_THRESHOLD: u32 = 3;
+
+/// Handle on the background heartbeat thread; dropping it cancels and
+/// joins.
+#[derive(Debug)]
+pub struct ClusterSupervisor {
+    cancel: CancelToken,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ClusterSupervisor {
+    pub fn start(
+        cluster: ClusterHandle,
+        ctl: Arc<ClusterCtl>,
+        interval: Duration,
+        miss_threshold: u32,
+    ) -> ClusterSupervisor {
+        let cancel = CancelToken::new();
+        let token = cancel.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("cluster-supervisor-{}", ctl.local_id()))
+            .spawn(move || {
+                let mut misses: HashMap<u32, u32> = HashMap::new();
+                while token.sleep(interval) {
+                    heartbeat_round(&cluster, &ctl, &mut misses, miss_threshold.max(1));
+                }
+            })
+            .expect("spawning cluster-supervisor thread");
+        ClusterSupervisor { cancel, handle: Some(handle) }
+    }
+}
+
+impl Drop for ClusterSupervisor {
+    fn drop(&mut self) {
+        self.cancel.cancel();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn heartbeat_round(
+    cluster: &ClusterHandle,
+    ctl: &Arc<ClusterCtl>,
+    misses: &mut HashMap<u32, u32>,
+    threshold: u32,
+) {
+    let view = ctl.view();
+    if !view.is_clustered() {
+        return;
+    }
+    let local = ctl.local_id();
+    // A broker the view no longer counts alive needs no counter (it may
+    // have been declared dead by a peer's push between our rounds).
+    misses.retain(|id, _| view.is_alive(*id));
+    for b in view.brokers.iter().filter(|b| b.alive && b.id != local) {
+        let beat = match cluster.peer_handle(&b.addr) {
+            Some(peer) => peer.cluster_meta(),
+            None => Err(anyhow::anyhow!("peer {} unreachable", b.addr)),
+        };
+        match beat {
+            Ok(peer_view) => {
+                misses.remove(&b.id);
+                // Heartbeats double as gossip: adopt any strictly newer
+                // view the peer holds (install promotes as needed).
+                if peer_view.epoch > ctl.epoch() {
+                    let _ = cluster.install_cluster_view(peer_view);
+                }
+            }
+            Err(e) => {
+                cluster.drop_peer(&b.addr);
+                let n = misses.entry(b.id).or_insert(0);
+                *n += 1;
+                log::debug!(
+                    "heartbeat to broker {} ({}) failed ({}/{threshold}): {e:#}",
+                    b.id,
+                    b.addr,
+                    *n
+                );
+                if *n >= threshold {
+                    misses.remove(&b.id);
+                    declare_dead(cluster, ctl, b.id);
+                }
+            }
+        }
+    }
+}
+
+/// The failover moment: mark the silent broker dead (epoch bump),
+/// promote every partition this broker inherits, and push the
+/// post-mortem view to the survivors.
+fn declare_dead(cluster: &ClusterHandle, ctl: &Arc<ClusterCtl>, id: u32) {
+    let Some((old, new)) = ctl.mark_dead(id) else {
+        return; // a peer's push beat us to it
+    };
+    log::warn!(
+        "broker {id} declared dead after missed heartbeats; epoch {} -> {}",
+        old.epoch,
+        new.epoch
+    );
+    let topics = cluster.topic_partition_counts();
+    let promoted = newly_led(&old, &new, ctl.local_id(), &topics);
+    cluster.promote_partitions(&promoted);
+    for b in new
+        .brokers
+        .iter()
+        .filter(|b| b.alive && b.id != ctl.local_id())
+    {
+        let Some(peer) = cluster.peer_handle(&b.addr) else {
+            continue;
+        };
+        if let Err(e) = peer.cluster_update(&new) {
+            log::debug!("pushing epoch {} to broker {}: {e:#}", new.epoch, b.id);
+            cluster.drop_peer(&b.addr);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::{BrokerConfig, BrokerHandle, Cluster, PeerConnector};
+    use std::time::Instant;
+
+    /// Brokers 0 and 1 run in-process; broker 2 exists only in the
+    /// roster and its address never resolves — which is exactly what a
+    /// SIGKILLed broker looks like to its peers.
+    fn trio() -> (ClusterHandle, ClusterHandle, Arc<ClusterCtl>, Arc<ClusterCtl>) {
+        let a = Cluster::new(BrokerConfig::default());
+        let b = Cluster::new(BrokerConfig::default());
+        let roster = vec![
+            (0, "addr-a".to_string()),
+            (1, "addr-b".to_string()),
+            (2, "addr-dead".to_string()),
+        ];
+        let ctl_a = ClusterCtl::new(0, roster.clone());
+        let ctl_b = ClusterCtl::new(1, roster);
+        let (a2, b2) = (a.clone(), b.clone());
+        a.attach_clusterctl(
+            ctl_a.clone(),
+            PeerConnector::new(move |addr| match addr {
+                "addr-b" => Ok(b2.clone() as BrokerHandle),
+                other => anyhow::bail!("unknown peer {other}"),
+            }),
+        );
+        b.attach_clusterctl(
+            ctl_b.clone(),
+            PeerConnector::new(move |addr| match addr {
+                "addr-a" => Ok(a2.clone() as BrokerHandle),
+                other => anyhow::bail!("unknown peer {other}"),
+            }),
+        );
+        (a, b, ctl_a, ctl_b)
+    }
+
+    fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting: {what}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn missed_heartbeats_declare_death_and_push_the_new_view() {
+        let (a, _b, ctl_a, ctl_b) = trio();
+        let _sup = ClusterSupervisor::start(a, ctl_a.clone(), Duration::from_millis(10), 3);
+        wait_until("supervisor declares broker 2 dead", || {
+            !ctl_a.view().is_alive(2)
+        });
+        assert_eq!(ctl_a.epoch(), 2);
+        // The post-mortem view was pushed to the survivor.
+        wait_until("survivor receives the pushed view", || {
+            !ctl_b.view().is_alive(2)
+        });
+        assert_eq!(ctl_b.epoch(), 2);
+    }
+
+    #[test]
+    fn heartbeat_gossip_adopts_the_peers_newer_view() {
+        let (a, _b, ctl_a, ctl_b) = trio();
+        // Broker 1 already knows 2 is dead; broker 0 does not. A huge
+        // miss threshold stops broker 0 from finding out on its own —
+        // only gossip can tell it.
+        ctl_b.mark_dead(2).unwrap();
+        assert!(ctl_a.view().is_alive(2));
+        let _sup = ClusterSupervisor::start(a, ctl_a.clone(), Duration::from_millis(10), u32::MAX);
+        wait_until("gossip propagates the newer epoch", || {
+            !ctl_a.view().is_alive(2)
+        });
+        assert_eq!(ctl_a.epoch(), ctl_b.epoch());
+    }
+
+    #[test]
+    fn racing_declarations_converge_on_one_epoch() {
+        let (a, b, ctl_a, ctl_b) = trio();
+        // Both survivors supervise independently; both will declare
+        // broker 2 dead. Strictly-newer installs make the race benign.
+        let _sup_a =
+            ClusterSupervisor::start(a, ctl_a.clone(), Duration::from_millis(10), 3);
+        let _sup_b =
+            ClusterSupervisor::start(b, ctl_b.clone(), Duration::from_millis(10), 3);
+        wait_until("both sides see broker 2 dead", || {
+            !ctl_a.view().is_alive(2) && !ctl_b.view().is_alive(2)
+        });
+        // Each side bumped at most once (1 -> 2); the pushes were
+        // no-ops, not further bumps.
+        wait_until("epochs settle equal", || {
+            ctl_a.epoch() == ctl_b.epoch()
+        });
+        assert_eq!(ctl_a.epoch(), 2);
+        assert!(ctl_a.view().is_alive(0) && ctl_a.view().is_alive(1));
+    }
+}

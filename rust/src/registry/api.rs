@@ -181,6 +181,11 @@ pub fn router(store: Arc<Store>) -> Router {
                 AuthOutcome::Revoked => {
                     Some(Response::error(Status::Forbidden, "key revoked"))
                 }
+                // Expiry is revocation-by-clock: the caller proved
+                // possession, so 403 (not 401) like a revoked key.
+                AuthOutcome::Expired => {
+                    Some(Response::error(Status::Forbidden, "key expired"))
+                }
                 AuthOutcome::Unknown => {
                     Some(Response::error(Status::Unauthorized, "unknown key"))
                 }
@@ -550,15 +555,21 @@ pub fn router(store: Arc<Store>) -> Router {
                         .list()
                         .iter()
                         .map(|k| {
-                            Json::obj(vec![
+                            let mut fields = vec![
                                 ("token", Json::str(&k.token)),
                                 ("tenant", Json::str(&k.tenant)),
                                 ("admin", Json::from(k.admin)),
                                 ("revoked", Json::from(k.revoked)),
+                            ];
+                            if let Some(deadline) = k.expires_at {
+                                fields.push(("expires_at", Json::from(deadline)));
+                            }
+                            fields.extend([
                                 ("requests", Json::from(k.usage.requests)),
                                 ("records_produced", Json::from(k.usage.records_produced)),
                                 ("bytes_stored", Json::from(k.usage.bytes_stored)),
-                            ])
+                            ]);
+                            Json::obj(fields)
                         })
                         .collect(),
                 ))
@@ -585,6 +596,30 @@ pub fn router(store: Arc<Store>) -> Router {
                 }
             }
         })
+        .route(Method::Post, "/keys/rotate", {
+            let s = s.clone();
+            move |req| {
+                if let Some(resp) = require_admin(&req) {
+                    return resp;
+                }
+                let body = match parse_body(&req) {
+                    Ok(b) => b,
+                    Err(r) => return r,
+                };
+                let token = match body.req_str("token") {
+                    Ok(t) => t,
+                    Err(e) => return bad(e),
+                };
+                let grace = body.get("grace_secs").as_u64().unwrap_or(0);
+                match s.auth().rotate(token, grace) {
+                    Ok(successor) => created(Json::obj(vec![
+                        ("token", Json::str(&successor)),
+                        ("grace_secs", Json::from(grace)),
+                    ])),
+                    Err(e) => Response::error(Status::NotFound, &format!("{e}")),
+                }
+            }
+        })
         .route(Method::Post, "/keys/quota", {
             let s = s.clone();
             move |req| {
@@ -603,6 +638,7 @@ pub fn router(store: Arc<Store>) -> Router {
                     tenant,
                     super::auth::Quota {
                         records_per_sec: body.get("records_per_sec").as_u64(),
+                        burst: body.get("burst").as_u64(),
                         stored_bytes: body.get("stored_bytes").as_u64(),
                     },
                 );
@@ -882,8 +918,8 @@ mod tests {
         store.auth().set_quota(
             "alice",
             crate::registry::auth::Quota {
-                records_per_sec: None,
                 stored_bytes: Some(8),
+                ..Default::default()
             },
         );
         let r = router(store);

@@ -13,8 +13,14 @@
 //! * **Usage** is metered per key: requests served, records produced,
 //!   bytes stored.
 //! * **Quotas** are enforced per tenant (several keys may share one):
-//!   a records/second rate (fixed one-second window) and a stored-bytes
-//!   ceiling, checked at produce time and at model/topic creation.
+//!   a produce-rate **token bucket** (sustained records/second plus a
+//!   configurable burst) and a stored-bytes ceiling, checked at produce
+//!   time and at model/topic creation.
+//! * **Expiry and rotation**: a key may carry an `expires_at` deadline;
+//!   an expired key answers like a revoked one (403, not 401).
+//!   [`AuthKeys::rotate`] mints a successor key for the same tenant and
+//!   puts the old one on a grace-period countdown, so credentials roll
+//!   without a hard cutover.
 //!
 //! The table persists through [`super::Store`]'s snapshot (`to_json` /
 //! `restore_from_json`) and through a standalone keys file
@@ -35,8 +41,13 @@ pub const DEFAULT_TENANT: &str = "default";
 /// Per-tenant resource limits. `None` = unlimited.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Quota {
-    /// Produce rate ceiling, enforced over a fixed one-second window.
+    /// Sustained produce rate: the token bucket refills at this many
+    /// records per second.
     pub records_per_sec: Option<u64>,
+    /// Bucket capacity — the largest spike accepted at once. Defaults
+    /// to `records_per_sec` when unset, i.e. at most one second of
+    /// sustained rate in a burst.
+    pub burst: Option<u64>,
     /// Ceiling on bytes durably stored for the tenant (broker records
     /// plus uploaded model blobs).
     pub stored_bytes: Option<u64>,
@@ -78,6 +89,9 @@ pub enum AuthOutcome {
     Unknown,
     /// Token matches a key that has been revoked.
     Revoked,
+    /// Token matches a key whose `expires_at` deadline has passed —
+    /// answered like revocation (403, the caller proved possession).
+    Expired,
 }
 
 /// A key row as reported by [`AuthKeys::list`].
@@ -87,6 +101,8 @@ pub struct KeyInfo {
     pub tenant: String,
     pub admin: bool,
     pub revoked: bool,
+    /// Unix-seconds deadline after which the key stops authenticating.
+    pub expires_at: Option<u64>,
     pub usage: Usage,
 }
 
@@ -95,6 +111,8 @@ struct KeyState {
     tenant: String,
     admin: bool,
     revoked: bool,
+    /// Unix seconds (wall clock, so deadlines survive restarts).
+    expires_at: Option<u64>,
     usage: Usage,
 }
 
@@ -103,9 +121,11 @@ struct TenantState {
     quota: Quota,
     /// Bytes currently charged against `quota.stored_bytes`.
     stored_bytes: u64,
-    /// Fixed-window produce-rate accounting (not persisted).
-    window_start: Option<Instant>,
-    window_records: u64,
+    /// Token-bucket produce-rate state (not persisted). `None` refill
+    /// instant means the bucket has never been touched since the quota
+    /// was (re)set — the next charge starts from a full bucket.
+    bucket_tokens: f64,
+    bucket_refilled: Option<Instant>,
 }
 
 #[derive(Debug, Default)]
@@ -168,6 +188,15 @@ fn generate_token() -> String {
     format!("kml_{a:016x}{b:016x}")
 }
 
+/// Seconds since the Unix epoch — the clock `expires_at` deadlines are
+/// expressed on.
+fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
 impl AuthKeys {
     pub fn new() -> AuthKeys {
         AuthKeys::default()
@@ -195,6 +224,18 @@ impl AuthKeys {
 
     /// Register an externally supplied token (keys-file load).
     pub fn insert_key(&self, token: &str, tenant: &str, admin: bool) -> Result<()> {
+        self.insert_key_with(token, tenant, admin, None)
+    }
+
+    /// [`AuthKeys::insert_key`] with an explicit expiry deadline
+    /// (unix seconds; `None` = never expires).
+    pub fn insert_key_with(
+        &self,
+        token: &str,
+        tenant: &str,
+        admin: bool,
+        expires_at: Option<u64>,
+    ) -> Result<()> {
         if token.is_empty() || tenant.is_empty() {
             bail!("token and tenant must not be empty");
         }
@@ -208,11 +249,44 @@ impl AuthKeys {
                 tenant: tenant.to_string(),
                 admin,
                 revoked: false,
+                expires_at,
                 usage: Usage::default(),
             },
         );
         st.tenants.entry(tenant.to_string()).or_default();
         Ok(())
+    }
+
+    /// Rotate a key: mint a successor with the same tenant and admin
+    /// bit, and put the old key on a `grace_secs` expiry countdown so
+    /// in-flight deployments can switch over without a hard cutover.
+    /// With `grace_secs == 0` the old key stops working immediately.
+    pub fn rotate(&self, token: &str, grace_secs: u64) -> Result<String> {
+        let successor = generate_token();
+        let mut st = self.state.lock().unwrap();
+        let Some(k) = st.keys.get(token) else {
+            bail!("no such key");
+        };
+        if k.revoked {
+            bail!("key is revoked");
+        }
+        if k.expires_at.is_some_and(|deadline| unix_now() >= deadline) {
+            bail!("key is expired");
+        }
+        let (tenant, admin) = (k.tenant.clone(), k.admin);
+        st.keys.insert(
+            successor.clone(),
+            KeyState {
+                tenant,
+                admin,
+                revoked: false,
+                expires_at: None,
+                usage: Usage::default(),
+            },
+        );
+        let old = st.keys.get_mut(token).expect("checked above");
+        old.expires_at = Some(unix_now().saturating_add(grace_secs));
+        Ok(successor)
     }
 
     /// Revoke a key. Returns false when no such key exists. The row is
@@ -238,6 +312,7 @@ impl AuthKeys {
                 tenant: k.tenant.clone(),
                 admin: k.admin,
                 revoked: k.revoked,
+                expires_at: k.expires_at,
                 usage: k.usage,
             })
             .collect()
@@ -262,6 +337,9 @@ impl AuthKeys {
         if k.revoked {
             return AuthOutcome::Revoked;
         }
+        if k.expires_at.is_some_and(|deadline| unix_now() >= deadline) {
+            return AuthOutcome::Expired;
+        }
         k.usage.requests += 1;
         AuthOutcome::Accepted(Identity {
             token: stored,
@@ -270,10 +348,13 @@ impl AuthKeys {
         })
     }
 
-    /// Set (or clear fields of) a tenant's quota.
+    /// Set (or clear fields of) a tenant's quota. Resets the rate
+    /// bucket so the new rate/burst take effect from a full bucket.
     pub fn set_quota(&self, tenant: &str, quota: Quota) {
         let mut st = self.state.lock().unwrap();
-        st.tenants.entry(tenant.to_string()).or_default().quota = quota;
+        let t = st.tenants.entry(tenant.to_string()).or_default();
+        t.quota = quota;
+        t.bucket_refilled = None;
     }
 
     pub fn quota(&self, tenant: &str) -> Quota {
@@ -282,28 +363,49 @@ impl AuthKeys {
     }
 
     /// Charge a produce of `records` records / `bytes` bytes against
-    /// `identity`'s tenant. `Err("quota")` when either the rate window
+    /// `identity`'s tenant. `Err("quota")` when either the rate bucket
     /// or the stored-bytes ceiling would be breached — nothing is
     /// charged or metered on rejection.
+    ///
+    /// Rate limiting is a token bucket: the bucket holds up to
+    /// `burst` tokens (default: one second of `records_per_sec`),
+    /// refills continuously at `records_per_sec`, and a produce of N
+    /// records spends N tokens or rejects whole.
     pub fn charge_produce(
         &self,
         identity: &Identity,
         records: u64,
         bytes: u64,
     ) -> std::result::Result<(), &'static str> {
+        self.charge_produce_at(identity, records, bytes, Instant::now())
+    }
+
+    /// [`AuthKeys::charge_produce`] with an explicit clock, so the
+    /// refill math is unit-testable without sleeping.
+    fn charge_produce_at(
+        &self,
+        identity: &Identity,
+        records: u64,
+        bytes: u64,
+        now: Instant,
+    ) -> std::result::Result<(), &'static str> {
         let mut st = self.state.lock().unwrap();
         let tenant = st.tenants.entry(identity.tenant.clone()).or_default();
-        let now = Instant::now();
-        let fresh_window = match tenant.window_start {
-            Some(t0) => now.duration_since(t0).as_secs() >= 1,
-            None => true,
-        };
-        if fresh_window {
-            tenant.window_start = Some(now);
-            tenant.window_records = 0;
-        }
-        if let Some(limit) = tenant.quota.records_per_sec {
-            if tenant.window_records.saturating_add(records) > limit {
+        let rate = tenant.quota.records_per_sec;
+        if let Some(rate) = rate {
+            let burst = tenant.quota.burst.unwrap_or(rate).max(1) as f64;
+            tenant.bucket_tokens = match tenant.bucket_refilled {
+                // First charge since the quota was (re)set: full bucket.
+                None => burst,
+                Some(then) => {
+                    let dt = now.saturating_duration_since(then).as_secs_f64();
+                    (tenant.bucket_tokens + dt * rate as f64).min(burst)
+                }
+            };
+            tenant.bucket_refilled = Some(now);
+            // The epsilon keeps exact-fit spends (refill computed 5.0,
+            // spend 5) from rejecting on float rounding.
+            if tenant.bucket_tokens + 1e-9 < records as f64 {
                 return Err("quota");
             }
         }
@@ -312,7 +414,9 @@ impl AuthKeys {
                 return Err("quota");
             }
         }
-        tenant.window_records += records;
+        if rate.is_some() {
+            tenant.bucket_tokens -= records as f64;
+        }
         tenant.stored_bytes += bytes;
         if let Some(k) = st.keys.get_mut(&identity.token) {
             k.usage.records_produced += records;
@@ -365,20 +469,24 @@ impl AuthKeys {
             .keys
             .iter()
             .map(|(token, k)| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("token", Json::str(token)),
                     ("tenant", Json::str(&k.tenant)),
                     ("admin", Json::Bool(k.admin)),
                     ("revoked", Json::Bool(k.revoked)),
-                    (
-                        "usage",
-                        Json::obj(vec![
-                            ("requests", Json::from(k.usage.requests)),
-                            ("records_produced", Json::from(k.usage.records_produced)),
-                            ("bytes_stored", Json::from(k.usage.bytes_stored)),
-                        ]),
-                    ),
-                ])
+                ];
+                if let Some(deadline) = k.expires_at {
+                    fields.push(("expires_at", Json::from(deadline)));
+                }
+                fields.push((
+                    "usage",
+                    Json::obj(vec![
+                        ("requests", Json::from(k.usage.requests)),
+                        ("records_produced", Json::from(k.usage.records_produced)),
+                        ("bytes_stored", Json::from(k.usage.bytes_stored)),
+                    ]),
+                ));
+                Json::obj(fields)
             })
             .collect();
         let tenants = st
@@ -391,6 +499,9 @@ impl AuthKeys {
                 ];
                 if let Some(rps) = t.quota.records_per_sec {
                     fields.push(("records_per_sec", Json::from(rps)));
+                }
+                if let Some(burst) = t.quota.burst {
+                    fields.push(("burst", Json::from(burst)));
                 }
                 if let Some(sb) = t.quota.stored_bytes {
                     fields.push(("quota_stored_bytes", Json::from(sb)));
@@ -406,7 +517,7 @@ impl AuthKeys {
     }
 
     /// Replace the whole table from a snapshot produced by
-    /// [`AuthKeys::to_json`]. Rate windows restart empty.
+    /// [`AuthKeys::to_json`]. Rate buckets restart full.
     pub fn restore_from_json(&self, j: &Json) -> Result<()> {
         let mut next = AuthState::default();
         for k in j.get("keys").as_arr().unwrap_or(&[]) {
@@ -418,6 +529,7 @@ impl AuthKeys {
                     tenant: k.req_str("tenant")?.to_string(),
                     admin: k.get("admin").as_bool().unwrap_or(false),
                     revoked: k.get("revoked").as_bool().unwrap_or(false),
+                    expires_at: k.get("expires_at").as_u64(),
                     usage: Usage {
                         requests: usage.get("requests").as_u64().unwrap_or(0),
                         records_produced: usage.get("records_produced").as_u64().unwrap_or(0),
@@ -433,11 +545,12 @@ impl AuthKeys {
                 TenantState {
                     quota: Quota {
                         records_per_sec: t.get("records_per_sec").as_u64(),
+                        burst: t.get("burst").as_u64(),
                         stored_bytes: t.get("quota_stored_bytes").as_u64(),
                     },
                     stored_bytes: t.get("stored_bytes").as_u64().unwrap_or(0),
-                    window_start: None,
-                    window_records: 0,
+                    bucket_tokens: 0.0,
+                    bucket_refilled: None,
                 },
             );
         }
@@ -541,7 +654,7 @@ mod tests {
     fn produce_rate_quota_enforced_per_window() {
         let auth = AuthKeys::new();
         let token = auth.create_key("acme", false).unwrap();
-        auth.set_quota("acme", Quota { records_per_sec: Some(10), stored_bytes: None });
+        auth.set_quota("acme", Quota { records_per_sec: Some(10), ..Quota::default() });
         let id = identity(&auth, &token);
         assert!(auth.charge_produce(&id, 8, 100).is_ok());
         assert!(auth.charge_produce(&id, 2, 100).is_ok());
@@ -556,7 +669,7 @@ mod tests {
     fn stored_bytes_quota_enforced() {
         let auth = AuthKeys::new();
         let token = auth.create_key("acme", false).unwrap();
-        auth.set_quota("acme", Quota { records_per_sec: None, stored_bytes: Some(1000) });
+        auth.set_quota("acme", Quota { stored_bytes: Some(1000), ..Quota::default() });
         let id = identity(&auth, &token);
         assert!(!auth.storage_exhausted(&id));
         assert!(auth.charge_stored(&id, 900).is_ok());
@@ -571,7 +684,7 @@ mod tests {
         let auth = AuthKeys::new();
         let capped = auth.create_key("capped", false).unwrap();
         let free = auth.create_key("free", false).unwrap();
-        auth.set_quota("capped", Quota { records_per_sec: Some(1), stored_bytes: None });
+        auth.set_quota("capped", Quota { records_per_sec: Some(1), ..Quota::default() });
         let capped_id = identity(&auth, &capped);
         let free_id = identity(&auth, &free);
         assert!(auth.charge_produce(&capped_id, 1, 10).is_ok());
@@ -587,7 +700,7 @@ mod tests {
         auth.set_require(true);
         let a = auth.create_key("acme", false).unwrap();
         let b = auth.create_key("platform", true).unwrap();
-        auth.set_quota("acme", Quota { records_per_sec: Some(5), stored_bytes: Some(4096) });
+        auth.set_quota("acme", Quota { records_per_sec: Some(5), stored_bytes: Some(4096), ..Quota::default() });
         let id = identity(&auth, &a);
         auth.charge_produce(&id, 3, 300).unwrap();
         auth.revoke(&b);
@@ -599,7 +712,7 @@ mod tests {
         assert_eq!(restored.list(), auth.list());
         assert_eq!(
             restored.quota("acme"),
-            Quota { records_per_sec: Some(5), stored_bytes: Some(4096) }
+            Quota { records_per_sec: Some(5), stored_bytes: Some(4096), ..Quota::default() }
         );
         assert_eq!(restored.authenticate(&b), AuthOutcome::Revoked);
         // Stored-bytes accounting survives: 300 of 4096 used, so a
@@ -623,11 +736,103 @@ mod tests {
     }
 
     #[test]
+    fn token_bucket_burst_and_refill() {
+        use std::time::Duration;
+        let auth = AuthKeys::new();
+        let token = auth.create_key("acme", false).unwrap();
+        auth.set_quota(
+            "acme",
+            Quota { records_per_sec: Some(10), burst: Some(20), stored_bytes: None },
+        );
+        let id = identity(&auth, &token);
+        let t0 = Instant::now();
+        // The bucket starts full at the burst size...
+        assert!(auth.charge_produce_at(&id, 20, 0, t0).is_ok());
+        // ...and once drained, the same instant has no tokens left.
+        assert_eq!(auth.charge_produce_at(&id, 1, 0, t0), Err("quota"));
+        // 500 ms at 10 records/s refills exactly 5 tokens.
+        let t1 = t0 + Duration::from_millis(500);
+        assert!(auth.charge_produce_at(&id, 5, 0, t1).is_ok());
+        assert_eq!(auth.charge_produce_at(&id, 1, 0, t1), Err("quota"));
+        // A long idle stretch caps at the burst, not rate × elapsed.
+        let t2 = t1 + Duration::from_secs(3600);
+        assert_eq!(auth.charge_produce_at(&id, 21, 0, t2), Err("quota"));
+        assert!(auth.charge_produce_at(&id, 20, 0, t2).is_ok());
+        // Rejections charged nothing; the three accepted spends did.
+        assert_eq!(auth.list()[0].usage.records_produced, 45);
+    }
+
+    #[test]
+    fn token_bucket_burst_defaults_to_rate() {
+        use std::time::Duration;
+        let auth = AuthKeys::new();
+        let token = auth.create_key("acme", false).unwrap();
+        auth.set_quota("acme", Quota { records_per_sec: Some(10), ..Quota::default() });
+        let id = identity(&auth, &token);
+        let t0 = Instant::now();
+        assert!(auth.charge_produce_at(&id, 10, 0, t0).is_ok());
+        assert_eq!(auth.charge_produce_at(&id, 1, 0, t0), Err("quota"));
+        // 100 ms refills one token at 10/s.
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(auth.charge_produce_at(&id, 1, 0, t1).is_ok());
+        assert_eq!(auth.charge_produce_at(&id, 1, 0, t1), Err("quota"));
+    }
+
+    #[test]
+    fn expired_key_answers_expired() {
+        let auth = AuthKeys::new();
+        auth.insert_key_with("tok", "acme", false, Some(0)).unwrap();
+        assert_eq!(auth.authenticate("tok"), AuthOutcome::Expired);
+        // A future deadline still authenticates, and the deadline shows
+        // up in the listing.
+        auth.insert_key_with("tok2", "acme", false, Some(unix_now() + 3600)).unwrap();
+        assert!(matches!(auth.authenticate("tok2"), AuthOutcome::Accepted(_)));
+        assert_eq!(auth.list()[0].expires_at, Some(0));
+    }
+
+    #[test]
+    fn rotate_mints_successor_and_expires_the_old_key() {
+        let auth = AuthKeys::new();
+        let old = auth.create_key("acme", true).unwrap();
+        let new = auth.rotate(&old, 0).unwrap();
+        assert_ne!(old, new);
+        // Grace 0: the old key dies right away; the successor works and
+        // inherits tenant + admin.
+        assert_eq!(auth.authenticate(&old), AuthOutcome::Expired);
+        let id = identity(&auth, &new);
+        assert_eq!(id.tenant, "acme");
+        assert!(id.admin);
+        // A real grace period keeps the old key alive for now.
+        let newer = auth.rotate(&new, 3600).unwrap();
+        assert!(matches!(auth.authenticate(&new), AuthOutcome::Accepted(_)));
+        identity(&auth, &newer);
+        // Unknown, revoked and expired keys refuse to rotate.
+        assert!(auth.rotate("kml_bogus", 0).is_err());
+        assert!(auth.rotate(&old, 0).is_err());
+        auth.revoke(&newer);
+        assert!(auth.rotate(&newer, 0).is_err());
+    }
+
+    #[test]
+    fn expiry_survives_snapshot_roundtrip() {
+        let auth = AuthKeys::new();
+        auth.insert_key_with("tok", "acme", false, Some(12345)).unwrap();
+        auth.set_quota(
+            "acme",
+            Quota { records_per_sec: Some(9), burst: Some(42), stored_bytes: None },
+        );
+        let restored = AuthKeys::new();
+        restored.restore_from_json(&auth.to_json()).unwrap();
+        assert_eq!(restored.list()[0].expires_at, Some(12345));
+        assert_eq!(restored.quota("acme").burst, Some(42));
+    }
+
+    #[test]
     fn keys_file_roundtrip() {
         let auth = AuthKeys::new();
         auth.set_require(true);
         auth.create_key("acme", false).unwrap();
-        auth.set_quota("acme", Quota { records_per_sec: Some(7), stored_bytes: None });
+        auth.set_quota("acme", Quota { records_per_sec: Some(7), ..Quota::default() });
         let path = std::env::temp_dir().join(format!(
             "kafka-ml-keys-{}-{:?}.json",
             std::process::id(),

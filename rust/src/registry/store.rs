@@ -1325,6 +1325,7 @@ mod tests {
             .set_quota("alice", crate::registry::auth::Quota {
                 records_per_sec: Some(100),
                 stored_bytes: Some(1 << 20),
+                ..Default::default()
             });
         s.auth().set_require(true);
         let path = std::env::temp_dir().join(format!(

@@ -1,0 +1,276 @@
+//! The ISSUE-10 acceptance tests: a 3-broker cluster over loopback TCP
+//! surviving the death of a partition leader.
+//!
+//! Topology: three `Cluster` processes-in-miniature, each with its own
+//! wire server, replica puller and heartbeat supervisor, sharing one
+//! epoch-versioned roster. "Killing" a broker shuts its wire server
+//! down and stops its background threads — to every peer and client it
+//! looks exactly like a SIGKILLed process: connections reset, dials
+//! refused, heartbeats unanswered.
+//!
+//! * `killing_the_leader_loses_no_acked_records` — the kill-the-leader
+//!   e2e: at `acks=replicated`, records acked before and after the
+//!   leader dies are all readable from the promoted follower; the
+//!   routed client converges on the new leader without surfacing an
+//!   error.
+//! * `deposed_leader_fences_stale_produces` — the split-brain fence: a
+//!   broker that adopted a view under which it no longer leads refuses
+//!   a direct (stale) produce with `not-leader`, while a routed client
+//!   transparently refreshes and lands on the real leader.
+
+use kafka_ml::broker::{
+    Acks, AckMode, BrokerConfig, BrokerHandle, BrokerServer, BrokerTransport, ClientLocality,
+    Cluster, ClusterCtl, ClusterHandle, PeerConnector, Producer, ProducerConfig, Record,
+    RemoteBroker, ReplicaPuller,
+};
+use kafka_ml::orchestrator::ClusterSupervisor;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One broker "process": in-process core + wire server + cluster
+/// runtime threads.
+struct TestBroker {
+    cluster: ClusterHandle,
+    ctl: Arc<ClusterCtl>,
+    server: Option<BrokerServer>,
+    puller: Option<ReplicaPuller>,
+    supervisor: Option<ClusterSupervisor>,
+}
+
+impl TestBroker {
+    fn addr(&self) -> String {
+        self.server.as_ref().expect("broker already killed").addr().to_string()
+    }
+
+    /// SIGKILL, as seen from outside the process: background threads
+    /// stop, the listener closes, live connections reset.
+    fn kill(&mut self) {
+        self.supervisor.take();
+        self.puller.take();
+        if let Some(server) = self.server.take() {
+            server.shutdown();
+        }
+    }
+}
+
+impl Drop for TestBroker {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Boot an N=3 cluster: servers bind first (the roster needs real
+/// addresses), then every broker attaches the shared roster and starts
+/// its replica puller + heartbeat supervisor (50 ms beat, 3 misses —
+/// death declared in ~150 ms).
+fn start_trio(ack: AckMode) -> Vec<TestBroker> {
+    let cfg = BrokerConfig { ack_mode: ack, ..Default::default() };
+    let cores: Vec<ClusterHandle> = (0..3).map(|_| Cluster::new(cfg.clone())).collect();
+    let servers: Vec<BrokerServer> = cores
+        .iter()
+        .map(|c| BrokerServer::start("127.0.0.1:0", c.clone()).unwrap())
+        .collect();
+    let roster: Vec<(u32, String)> = servers
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (i as u32, s.addr().to_string()))
+        .collect();
+    cores
+        .iter()
+        .zip(servers)
+        .enumerate()
+        .map(|(i, (cluster, server))| {
+            let ctl = ClusterCtl::new(i as u32, roster.clone());
+            cluster.attach_clusterctl(
+                ctl.clone(),
+                PeerConnector::new(|addr| {
+                    Ok(RemoteBroker::connect_peer(addr, None)? as BrokerHandle)
+                }),
+            );
+            let puller =
+                ReplicaPuller::start(cluster.clone(), ctl.clone(), Duration::from_millis(5));
+            let supervisor = ClusterSupervisor::start(
+                cluster.clone(),
+                ctl.clone(),
+                Duration::from_millis(50),
+                3,
+            );
+            TestBroker {
+                cluster: cluster.clone(),
+                ctl,
+                server: Some(server),
+                puller: Some(puller),
+                supervisor: Some(supervisor),
+            }
+        })
+        .collect()
+}
+
+/// Rendezvous placement is deterministic per name: scan candidates for
+/// a topic whose partition 0 is NOT led by broker 0 — broker 0 stays
+/// alive as the client's bootstrap while we kill the leader.
+fn topic_not_led_by_zero(ctl: &ClusterCtl) -> (String, u32) {
+    let view = ctl.view();
+    for i in 0..32 {
+        let name = format!("fo-t{i}");
+        let leader = view.leader_of(&name, 0).unwrap();
+        if leader != 0 {
+            return (name, leader);
+        }
+    }
+    panic!("no candidate topic avoids broker 0 as leader");
+}
+
+fn wait_until(what: &str, timeout: Duration, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + timeout;
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting: {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn killing_the_leader_loses_no_acked_records() {
+    let mut brokers = start_trio(AckMode::Replicated);
+    let (topic, leader) = topic_not_led_by_zero(&brokers[0].ctl);
+
+    // The client bootstraps off broker 0 (a survivor) and routes every
+    // produce to the partition leader.
+    let client: BrokerHandle = RemoteBroker::connect(&brokers[0].addr()).unwrap();
+    client.create_topic(&topic, 1).unwrap();
+    let mut producer = Producer::new(
+        client.clone(),
+        ProducerConfig {
+            batch_size: 8,
+            acks: Acks::AtLeastOnce,
+            locality: ClientLocality::Remote,
+            ..Default::default()
+        },
+    );
+
+    // Phase 1: 20 records acked at acks=replicated (each is on the
+    // follower before its ack, by construction).
+    for i in 0..20u32 {
+        producer
+            .send_to(&topic, 0, Record::new(format!("v-{i}").into_bytes()))
+            .unwrap();
+    }
+    producer.flush().unwrap();
+
+    // SIGKILL the leader mid-pipeline.
+    brokers[leader as usize].kill();
+
+    // Phase 2: 40 more records through the failover window. The routed
+    // client re-resolves on reset connections / not-leader answers; at
+    // least-once, every record that gets an ack must survive.
+    for i in 20..60u32 {
+        producer
+            .send_to(&topic, 0, Record::new(format!("v-{i}").into_bytes()))
+            .unwrap();
+    }
+    producer.flush().unwrap();
+    drop(producer);
+
+    // The survivors declared the death within the heartbeat timeout and
+    // agree on a promoted leader that is not the corpse.
+    let survivors: Vec<&TestBroker> =
+        brokers.iter().filter(|b| b.ctl.local_id() != leader).collect();
+    for s in &survivors {
+        wait_until("survivor sees the leader dead", Duration::from_secs(5), || {
+            !s.ctl.view().is_alive(leader)
+        });
+        assert!(s.ctl.epoch() > 1);
+    }
+    let new_leader = survivors[0].ctl.view().leader_of(&topic, 0).unwrap();
+    assert_ne!(new_leader, leader, "promotion did not move the partition");
+    assert_eq!(survivors[1].ctl.view().leader_of(&topic, 0), Some(new_leader));
+
+    // Zero acked-record loss: every acked value is readable through the
+    // routed client (served by the promoted leader). At-least-once may
+    // duplicate; it must never lose.
+    let batch = client
+        .fetch_batch(&topic, 0, 0, 10_000, ClientLocality::Remote)
+        .unwrap();
+    let seen: std::collections::HashSet<String> = batch
+        .records
+        .iter()
+        .map(|(_, r)| String::from_utf8(r.value.to_vec()).unwrap())
+        .collect();
+    for i in 0..60u32 {
+        assert!(seen.contains(&format!("v-{i}")), "acked record v-{i} lost in failover");
+    }
+
+    // And the promoted copy is the one the new leader serves locally.
+    let on_new_leader = brokers[new_leader as usize]
+        .cluster
+        .fetch_batch(&topic, 0, 0, 10_000, ClientLocality::InCluster)
+        .unwrap();
+    assert!(on_new_leader.len() >= 60);
+}
+
+#[test]
+fn deposed_leader_fences_stale_produces() {
+    let brokers = start_trio(AckMode::Leader);
+    let (topic, leader) = topic_not_led_by_zero(&brokers[0].ctl);
+
+    let client: BrokerHandle = RemoteBroker::connect(&brokers[0].addr()).unwrap();
+    client.create_topic(&topic, 1).unwrap();
+    client
+        .produce(&topic, 0, &[Record::new(b"before".to_vec())], ClientLocality::Remote, None)
+        .unwrap();
+
+    // The heir is the old follower; wait for the async pull to mirror
+    // "before" onto it so offsets stay deterministic post-promotion.
+    let heir = brokers[0].ctl.view().follower_of(&topic, 0).unwrap();
+    wait_until("heir mirrors the first record", Duration::from_secs(5), || {
+        brokers[heir as usize]
+            .cluster
+            .offsets(&topic, 0)
+            .map(|(_, latest)| latest >= 1)
+            .unwrap_or(false)
+    });
+
+    // Depose the leader without killing it: every broker adopts a view
+    // under which it is dead (what the supervisors would converge on;
+    // installing everywhere makes the test deterministic instead of
+    // racing the heartbeat threads).
+    let (_, post_mortem) = brokers[0].ctl.mark_dead(leader).unwrap();
+    for b in &brokers {
+        // mark_dead already moved broker 0's ctl; install is a no-op
+        // there and adopts the strictly newer epoch on the others —
+        // including the deposed leader itself.
+        b.cluster.install_cluster_view(post_mortem.clone()).unwrap();
+    }
+    let new_leader = post_mortem.leader_of(&topic, 0).unwrap();
+    assert_ne!(new_leader, leader);
+
+    // A direct, non-routing produce at the deposed broker — a client
+    // still believing the old map — is refused with the fence, not
+    // silently appended.
+    let stale: BrokerHandle =
+        RemoteBroker::connect_peer(&brokers[leader as usize].addr(), None).unwrap();
+    let err = stale
+        .produce(&topic, 0, &[Record::new(b"stale".to_vec())], ClientLocality::Remote, None)
+        .unwrap_err();
+    assert!(
+        kafka_ml::broker::clusterctl::is_not_leader(&format!("{err:#}")),
+        "expected a not-leader fence, got: {err:#}"
+    );
+
+    // The routed client holds the old epoch too — its produce hits the
+    // same fence, refreshes metadata, and transparently re-routes to
+    // the promoted leader.
+    let base = client
+        .produce(&topic, 0, &[Record::new(b"after".to_vec())], ClientLocality::Remote, None)
+        .unwrap();
+    assert_eq!(base, 1, "re-routed produce did not extend the log");
+
+    // The fenced record exists nowhere; the re-routed one is readable
+    // through the routed client (served by the promoted leader).
+    let batch = client
+        .fetch_batch(&topic, 0, 0, 10, ClientLocality::Remote)
+        .unwrap();
+    let values: Vec<&[u8]> = batch.records.iter().map(|(_, r)| r.value.as_slice()).collect();
+    assert!(values.contains(&b"after".as_slice()), "re-routed record missing");
+    assert!(!values.contains(&b"stale".as_slice()), "fenced record was appended");
+}
